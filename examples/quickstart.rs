@@ -1,0 +1,44 @@
+//! Quickstart: the paper's Fig. 9 usage, end to end.
+//!
+//! ```text
+//! engine = InferenceEngine(model, config)
+//! rref = engine(input)          # non-blocking
+//! output = rref.to_here()
+//! ```
+//!
+//! Run with: `cargo run --release --example quickstart`
+//! (requires `make artifacts` first)
+
+use energonai::coordinator::engine::{Engine, LaunchConfig};
+use energonai::coordinator::Request;
+
+fn main() -> anyhow::Result<()> {
+    // 1. launch: initializes the global communication context (worker
+    //    threads + collective endpoints) and the RPC context (command bus)
+    let engine = Engine::launch(LaunchConfig::preset("tiny").with_warmup(true))?;
+    println!("engine up: {}", engine.cfg);
+
+    // 2. non-blocking submit — returns a remote reference immediately
+    let rref = engine.infer_batch(vec![
+        Request::new(0, vec![12, 7, 42, 3, 99]),
+        Request::new(1, vec![5, 5, 5]),
+    ])?;
+    println!("submitted (rref uid {}), doing other work...", rref.uid);
+
+    // 3. fetch the result whenever it is required
+    let out = rref.to_here()?;
+    println!("next tokens: {:?}", out.next_tokens);
+    println!("logits shape: {:?}", out.logits.shape);
+
+    // the same through the dynamic batcher, one request at a time
+    let futures: Vec<_> = (0..4)
+        .map(|i| engine.submit(vec![i + 1, i + 2, i + 3]).unwrap())
+        .collect();
+    for (i, f) in futures.iter().enumerate() {
+        println!("batched request {i} -> token {}", f.to_here()?);
+    }
+
+    println!("{}", engine.metrics_snapshot().summary());
+    engine.shutdown();
+    Ok(())
+}

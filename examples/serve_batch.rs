@@ -1,0 +1,84 @@
+//! End-to-end serving driver (the DESIGN.md headline experiment): load a
+//! small real model (AOT artifacts through PJRT), serve an open-loop
+//! Poisson request stream with variable lengths through the full
+//! hierarchy-controller stack — batcher → consistency queue → workers —
+//! and report latency percentiles + throughput.
+//!
+//! Run with: `cargo run --release --example serve_batch -- [--preset tiny]
+//!            [--tp 2] [--drce] [--rate 40] [--requests 200] [--seconds 10]`
+
+use energonai::coordinator::engine::{Engine, LaunchConfig};
+use energonai::util::cli::Args;
+use energonai::workload::{Generator, LengthDist};
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let preset = args.get_or("preset", "tiny");
+    let tp = args.usize("tp", 1);
+    let pp = args.usize("pp", 1);
+    let drce = args.flag("drce");
+    let rate = args.f64("rate", 50.0);
+    let n_requests = args.usize("requests", 200);
+
+    let engine = Engine::launch(
+        LaunchConfig::preset(preset)
+            .with_parallel(tp, pp)
+            .with_drce(drce)
+            .with_warmup(true),
+    )?;
+    let max_len = engine
+        .manifest
+        .shape_points(preset)
+        .iter()
+        .map(|&(_, s)| s)
+        .max()
+        .unwrap();
+    println!(
+        "serving {} (tp={tp} pp={pp} drce={drce}) — poisson {rate} req/s, {n_requests} requests, lens 1..{max_len}",
+        engine.cfg
+    );
+
+    // open-loop client: Poisson arrivals, heavy-tailed lengths (the
+    // variable-length reality DRCE targets, §4.3)
+    let mut gen = Generator::new(1234, LengthDist::HeavyTail(max_len, 1.1), engine.cfg.vocab);
+    let t0 = Instant::now();
+    // per-request waiter threads record completion latency at fulfilment
+    // (client-observed: includes batch-formation queueing)
+    let lat = std::sync::Arc::new(std::sync::Mutex::new(Vec::with_capacity(n_requests)));
+    let mut waiters = Vec::with_capacity(n_requests);
+    for _ in 0..n_requests {
+        let req = gen.request();
+        let sent = Instant::now();
+        let fut = engine.submit(req.tokens)?;
+        let lat = lat.clone();
+        waiters.push(std::thread::spawn(move || {
+            let tok = fut.to_here();
+            lat.lock().unwrap().push(sent.elapsed().as_secs_f64() * 1e3);
+            tok
+        }));
+        std::thread::sleep(gen.next_gap(rate));
+    }
+    let submit_done = t0.elapsed();
+    for w in waiters {
+        w.join().unwrap()?;
+    }
+    let wall = t0.elapsed();
+    let mut latencies = std::sync::Arc::try_unwrap(lat).unwrap().into_inner().unwrap();
+
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pct = |p: f64| latencies[((latencies.len() - 1) as f64 * p) as usize];
+    println!("\n== results ==");
+    println!("submitted {n_requests} in {:.2}s; completed in {:.2}s", submit_done.as_secs_f64(), wall.as_secs_f64());
+    println!(
+        "request latency: p50 {:.1}ms  p90 {:.1}ms  p99 {:.1}ms  max {:.1}ms",
+        pct(0.5),
+        pct(0.9),
+        pct(0.99),
+        latencies.last().unwrap()
+    );
+    println!("throughput: {:.1} req/s", n_requests as f64 / wall.as_secs_f64());
+    println!("engine: {}", engine.metrics_snapshot().summary());
+    engine.shutdown();
+    Ok(())
+}

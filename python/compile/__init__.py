@@ -1,0 +1,1 @@
+"""EnergonAI build-time compile package (L1 kernels + L2 model + AOT)."""

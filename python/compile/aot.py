@@ -1,0 +1,194 @@
+"""AOT lowering: JAX (L2 + L1) -> HLO text artifacts + manifest.json.
+
+Python runs ONCE at build time (`make artifacts`); the Rust coordinator
+loads the HLO text with ``HloModuleProto::from_text_file`` and never
+touches Python on the request path.
+
+HLO *text* is the interchange format, NOT ``lowered.compile().serialize()``:
+jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which the
+image's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids and round-trips cleanly. See /opt/xla-example/README.
+
+Usage:
+    python -m compile.aot --out ../artifacts [--plan full|quick]
+    python -m compile.aot --out ../artifacts --preset base --kind layer_full \
+        --batch 4 --seq 64            # emit one extra variant
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+
+from . import model as M
+from .model import PRESETS, variant
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    from jax._src.lib import xla_client as xc
+
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_variant(cfg, kind, **kw):
+    name, fn, args = variant(cfg, kind, **kw)
+    specs = [s for _, s in args]
+    lowered = jax.jit(fn).lower(*specs)
+    out_shapes = jax.eval_shape(fn, *specs)
+    entry = {
+        "name": name,
+        "kind": kind,
+        "preset": cfg.name,
+        "file": f"{name}.hlo.txt",
+        "batch": kw.get("batch", 0),
+        "seq": kw.get("seq", 0),
+        "tp": kw.get("tp", 1),
+        "t_bucket": kw.get("t_bucket", 0),
+        "inputs": [
+            {"name": n, "shape": list(s.shape), "dtype": s.dtype.name} for n, s in args
+        ],
+        "outputs": [
+            {"shape": list(o.shape), "dtype": o.dtype.name} for o in out_shapes
+        ],
+    }
+    return entry, to_hlo_text(lowered)
+
+
+# ---------------------------------------------------------------------------
+# Build plans: which variants the default `make artifacts` emits.
+# Shape points are the AOT buckets the dynamic batcher pads into.
+# ---------------------------------------------------------------------------
+
+PLANS = {
+    "quick": {
+        "tiny": {"points": [(2, 16)], "tps": [1, 2], "drce": [(2, 16, 16)]},
+    },
+    "full": {
+        "tiny": {
+            "points": [(1, 16), (2, 16), (4, 32)],
+            "tps": [1, 2],
+            "drce": [(2, 16, 16), (4, 32, 64)],
+        },
+        "small": {
+            "points": [(2, 32), (4, 64)],
+            "tps": [1, 2, 4],
+            "drce": [(4, 64, 128)],
+        },
+    },
+}
+
+
+def plan_jobs(plan: dict):
+    """Expand a plan into (cfg, kind, kwargs) lowering jobs."""
+    jobs = []
+    for preset, spec in plan.items():
+        cfg = PRESETS[preset]
+        rows_done = set()
+        for batch, seq in spec["points"]:
+            jobs.append((cfg, "embed", dict(batch=batch, seq=seq)))
+            jobs.append((cfg, "layer_full", dict(batch=batch, seq=seq)))
+            jobs.append((cfg, "logits", dict(batch=batch, seq=seq)))
+            for tp in spec["tps"]:
+                jobs.append((cfg, "attn_shard", dict(batch=batch, seq=seq, tp=tp)))
+                rows = batch * seq
+                if (tp, rows) not in rows_done:
+                    rows_done.add((tp, rows))
+                    jobs.append((cfg, "mlp_shard", dict(batch=batch, seq=seq, tp=tp)))
+        for batch, seq, t in spec.get("drce", []):
+            for tp in spec["tps"]:
+                jobs.append(
+                    (cfg, "drce_attn_shard", dict(batch=batch, seq=seq, tp=tp, t_bucket=t))
+                )
+                if (tp, t) not in rows_done:
+                    rows_done.add((tp, t))
+                    jobs.append(
+                        (cfg, "mlp_shard", dict(batch=batch, seq=seq, tp=tp, t_bucket=t))
+                    )
+    return jobs
+
+
+def write_manifest(out_dir: str, entries: list):
+    presets_used = sorted({e["preset"] for e in entries})
+    manifest = {
+        "format_version": 1,
+        "configs": [
+            {
+                "name": PRESETS[p].name,
+                "hidden": PRESETS[p].hidden,
+                "n_heads": PRESETS[p].n_heads,
+                "head_dim": PRESETS[p].head_dim,
+                "ffn": PRESETS[p].ffn,
+                "vocab": PRESETS[p].vocab,
+                "max_seq": PRESETS[p].max_seq,
+                "n_layers": PRESETS[p].n_layers,
+            }
+            for p in presets_used
+        ],
+        "variants": entries,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--plan", default="full", choices=list(PLANS) + ["none"])
+    ap.add_argument("--preset", help="emit one extra variant for this preset")
+    ap.add_argument("--kind", default="layer_full")
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--seq", type=int, default=16)
+    ap.add_argument("--tp", type=int, default=1)
+    ap.add_argument("--t-bucket", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    os.makedirs(args.out, exist_ok=True)
+    jobs = [] if args.plan == "none" else plan_jobs(PLANS[args.plan])
+    if args.preset:
+        jobs.append(
+            (
+                PRESETS[args.preset],
+                args.kind,
+                dict(batch=args.batch, seq=args.seq, tp=args.tp, t_bucket=args.t_bucket),
+            )
+        )
+
+    entries = []
+    t_start = time.time()
+    for i, (cfg, kind, kw) in enumerate(jobs):
+        t0 = time.time()
+        entry, text = lower_variant(cfg, kind, **{k: v for k, v in kw.items() if v})
+        with open(os.path.join(args.out, entry["file"]), "w") as f:
+            f.write(text)
+        entries.append(entry)
+        print(
+            f"[{i + 1}/{len(jobs)}] {entry['name']}  "
+            f"({len(text) / 1024:.0f} KiB, {time.time() - t0:.1f}s)",
+            flush=True,
+        )
+
+    # merge with any pre-existing manifest entries not re-emitted
+    man_path = os.path.join(args.out, "manifest.json")
+    if os.path.exists(man_path):
+        with open(man_path) as f:
+            old = {e["name"]: e for e in json.load(f).get("variants", [])}
+        for e in entries:
+            old[e["name"]] = e
+        entries = [old[k] for k in sorted(old)]
+    write_manifest(args.out, entries)
+    print(f"wrote {len(entries)} variants + manifest in {time.time() - t_start:.1f}s")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

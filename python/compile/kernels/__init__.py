@@ -1,0 +1,18 @@
+"""L1 Pallas kernels (build-time only; lowered into the L2 HLO)."""
+
+from .attention import attention, NEG_INF
+from .fused_mlp import linear, matmul_bias_act
+from .layernorm import layernorm
+from .pack import gather_rows, make_maps, rebuild_padding, remove_padding
+
+__all__ = [
+    "attention",
+    "NEG_INF",
+    "linear",
+    "matmul_bias_act",
+    "layernorm",
+    "gather_rows",
+    "make_maps",
+    "rebuild_padding",
+    "remove_padding",
+]

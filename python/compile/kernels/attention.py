@@ -1,0 +1,115 @@
+"""Fused multi-head attention Pallas kernel (flash-style, single pass).
+
+The paper keeps a fused multi-head-attention block per layer and DRCE
+(§4.3) rebuilds padding *only* around this module because attention mixes
+tokens within a sequence — linears do not. FasterTransformer's fused MHA
+(layernorm + QKV GEMMs + bias folded together, §5.5) is the CUDA analogue.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the paper's threadblock-
+per-(batch, head) CUDA decomposition becomes a Pallas grid over
+(batch*heads, query blocks); each grid step holds a (block_q, head_dim)
+query panel in VMEM and streams K/V in ``block_k`` chunks with the
+online-softmax recurrence, so the S×S score matrix never materializes in
+HBM. Q·Kᵀ and P·V hit the MXU; the rescaling runs on the VPU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e9  # finite: fully-masked pad rows must not produce NaNs
+
+
+def _attention_kernel(q_ref, k_ref, v_ref, bias_ref, o_ref, *, block_k: int, scale: float):
+    """One (block_q, head_dim) output tile for one (batch, head)."""
+    q = q_ref[0].astype(jnp.float32) * scale  # (block_q, hd)
+    seq = k_ref.shape[1]
+    block_q, head_dim = q.shape
+
+    m0 = jnp.full((block_q, 1), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((block_q, 1), jnp.float32)
+    acc0 = jnp.zeros((block_q, head_dim), jnp.float32)
+
+    def body(i, carry):
+        m, l, acc = carry
+        kk = pl.load(k_ref, (0, pl.ds(i * block_k, block_k), slice(None)))
+        vv = pl.load(v_ref, (0, pl.ds(i * block_k, block_k), slice(None)))
+        bb = pl.load(bias_ref, (0, slice(None), pl.ds(i * block_k, block_k)))
+        s = (
+            jnp.dot(q, kk.astype(jnp.float32).T, preferred_element_type=jnp.float32)
+            + bb.astype(jnp.float32)
+        )  # (block_q, block_k)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc_new = acc * alpha + jnp.dot(
+            p, vv.astype(jnp.float32), preferred_element_type=jnp.float32
+        )
+        return m_new, l_new, acc_new
+
+    m, l, acc = jax.lax.fori_loop(0, seq // block_k, body, (m0, l0, acc0))
+    # Fully-masked rows (pure padding) have tiny l; guard the divide.
+    l = jnp.maximum(l, 1e-30)
+    o_ref[0, ...] = (acc / l).astype(o_ref.dtype)
+
+
+def _pick_block(n: int, candidates=(128, 64, 32, 16, 8, 4, 2, 1)) -> int:
+    # 128 first: full MXU tile when the sequence allows it (§Perf L1)
+    for c in candidates:
+        if n % c == 0:
+            return c
+    return 1
+
+
+def attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    bias: jax.Array,
+    *,
+    block_q: int | None = None,
+    block_k: int | None = None,
+    interpret: bool = True,
+) -> jax.Array:
+    """softmax(q·kᵀ/√d + bias)·v per (batch, head).
+
+    q/k/v: (batch, heads, seq, head_dim); bias: (batch, seq, seq) additive
+    mask (0 where attending is allowed, ``NEG_INF`` where not) shared
+    across heads — causal + padding masks are built by the L2 model.
+    """
+    batch, heads, seq, head_dim = q.shape
+    assert k.shape == v.shape == q.shape, (q.shape, k.shape, v.shape)
+    assert bias.shape == (batch, seq, seq), bias.shape
+    if block_q is None:
+        block_q = _pick_block(seq)
+    if block_k is None:
+        block_k = _pick_block(seq)
+    assert seq % block_q == 0 and seq % block_k == 0
+
+    bh = batch * heads
+    q3 = q.reshape(bh, seq, head_dim)
+    k3 = k.reshape(bh, seq, head_dim)
+    v3 = v.reshape(bh, seq, head_dim)
+    scale = 1.0 / (head_dim**0.5)
+    grid = (bh, seq // block_q)
+
+    out = pl.pallas_call(
+        functools.partial(_attention_kernel, block_k=block_k, scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, head_dim), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, seq, head_dim), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, seq, head_dim), lambda b, i: (b, 0, 0)),
+            # bias indexed by batch = b // heads; shared across heads
+            pl.BlockSpec((1, block_q, seq), lambda b, i, heads=heads: (b // heads, i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, head_dim), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, seq, head_dim), q.dtype),
+        interpret=interpret,
+    )(q3, k3, v3, bias)
+    return out.reshape(batch, heads, seq, head_dim)

@@ -1,0 +1,124 @@
+"""Tiled matmul + bias + activation Pallas kernel.
+
+This is the GEMM hot-spot of the paper: Fig. 2 shows GEMM kernels take
+62%→96% of layer time as GPT scales from 125M to 175B. EnergonAI's MLP
+module is two of these back to back (fc1 + GELU, fc2), and DRCE (§4.3)
+runs them over the *packed* token matrix with padding removed.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the grid tiles the output
+into (block_m, block_n) MXU-sized panels held in VMEM; the kernel streams
+K in ``block_k`` chunks from the operand stripes — the structure a Mosaic
+compiler double-buffers HBM→VMEM. The epilogue (bias add + GELU) is fused
+into the same kernel so the activation never round-trips to HBM, which is
+exactly the fusion FasterTransformer does in CUDA (§5.5).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_ACTS = ("none", "gelu", "relu")
+
+
+def _matmul_kernel(x_ref, w_ref, b_ref, o_ref, *, block_k: int, act: str):
+    """One (block_m, block_n) output tile; stream K in block_k chunks."""
+    block_m = x_ref.shape[0]
+    block_n = w_ref.shape[1]
+    k_total = x_ref.shape[1]
+    acc = jnp.zeros((block_m, block_n), jnp.float32)
+
+    def body(i, acc):
+        xk = pl.load(x_ref, (slice(None), pl.ds(i * block_k, block_k)))
+        wk = pl.load(w_ref, (pl.ds(i * block_k, block_k), slice(None)))
+        return acc + jnp.dot(
+            xk.astype(jnp.float32),
+            wk.astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        )
+
+    acc = jax.lax.fori_loop(0, k_total // block_k, body, acc)
+    z = acc + b_ref[...].astype(jnp.float32)
+    if act == "gelu":
+        z = jax.nn.gelu(z)
+    elif act == "relu":
+        z = jnp.maximum(z, 0.0)
+    o_ref[...] = z.astype(o_ref.dtype)
+
+
+def _pick_block(n: int, candidates) -> int:
+    for c in candidates:
+        if n % c == 0:
+            return c
+    return 1
+
+
+def matmul_bias_act(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array,
+    *,
+    act: str = "none",
+    block_m: int | None = None,
+    block_n: int | None = None,
+    block_k: int | None = None,
+    interpret: bool = True,
+) -> jax.Array:
+    """``act(x @ w + b)`` with a tiled Pallas kernel.
+
+    x: (M, K), w: (K, N), b: (N,). M is padded up to the block size and
+    sliced back, so any M works; K and N must divide by their blocks
+    (true for all transformer geometries used here).
+    """
+    assert act in _ACTS, act
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    assert b.shape == (n,), b.shape
+
+    if block_m is None:
+        # prefer a full 128-row MXU tile (§Perf L1: raises systolic-array
+        # utilization from 0.5 to 1.0 at GPT-3 scale); smaller M falls back
+        block_m = _pick_block(m, (128, 64, 32, 16, 8, 4, 2, 1))
+    if block_n is None:
+        block_n = _pick_block(n, (128, 64, 32, 16, 8, 4, 2, 1))
+    if block_k is None:
+        block_k = _pick_block(k, (256, 128, 64, 32, 16, 8, 4, 2, 1))
+
+    pad_m = (-m) % block_m
+    if pad_m:
+        x = jnp.concatenate([x, jnp.zeros((pad_m, k), x.dtype)], axis=0)
+    mp = m + pad_m
+    grid = (mp // block_m, n // block_n)
+
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, block_k=block_k, act=act),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, block_n), lambda i, j: (0, j)),
+            pl.BlockSpec((1, block_n), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, n), x.dtype),
+        interpret=interpret,
+    )(x, w, b.reshape(1, n))
+    return out[:m] if pad_m else out
+
+
+def linear(x: jax.Array, w: jax.Array, b: jax.Array, act: str = "none") -> jax.Array:
+    """Linear layer over the last axis; leading axes are flattened to rows.
+
+    This is the entry point the L2 model uses: DRCE feeds it a packed
+    (tokens, hidden) matrix, the padded path feeds (batch*seq, hidden).
+    """
+    orig = x.shape
+    k = orig[-1]
+    rows = 1
+    for d in orig[:-1]:
+        rows *= d
+    y = matmul_bias_act(x.reshape(rows, k), w, b, act=act)
+    return y.reshape(orig[:-1] + (w.shape[1],))

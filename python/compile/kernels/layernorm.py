@@ -1,0 +1,83 @@
+"""Fused layer-normalization Pallas kernel.
+
+The paper (§3.1, Fig. 2) observes that as models grow, GEMM dominates and
+memory-bound kernels (layernorm, bias-add, softmax) matter less — but they
+still sit on the critical path of every transformer layer, and EnergonAI
+keeps them fused per layer. This kernel fuses mean/variance/normalize/
+scale/shift into a single pass over each row block.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): rows are tiled into VMEM via
+BlockSpec; each grid step reduces one (block_rows, hidden) tile on the VPU.
+``interpret=True`` is mandatory on CPU-PJRT — real TPU lowering emits a
+Mosaic custom-call the CPU plugin cannot execute.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_EPS = 1e-5
+
+
+def _layernorm_kernel(x_ref, g_ref, b_ref, o_ref, *, eps: float):
+    """One grid step: normalize a (block_rows, hidden) tile."""
+    x = x_ref[...].astype(jnp.float32)
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    centered = x - mean
+    var = jnp.mean(centered * centered, axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps)
+    y = centered * inv * g_ref[...].astype(jnp.float32) + b_ref[...].astype(
+        jnp.float32
+    )
+    o_ref[...] = y.astype(o_ref.dtype)
+
+
+def _pick_block(n: int, candidates=(128, 64, 32, 16, 8, 4, 2, 1)) -> int:
+    for c in candidates:
+        if n % c == 0:
+            return c
+    return 1
+
+
+def layernorm(
+    x: jax.Array,
+    gain: jax.Array,
+    bias: jax.Array,
+    *,
+    eps: float = DEFAULT_EPS,
+    block_rows: int | None = None,
+    interpret: bool = True,
+) -> jax.Array:
+    """Row-wise layernorm over the last axis of ``x``.
+
+    ``x`` may have any leading shape; it is viewed as (rows, hidden).
+    ``gain``/``bias`` have shape (hidden,).
+    """
+    orig_shape = x.shape
+    hidden = orig_shape[-1]
+    rows = 1
+    for d in orig_shape[:-1]:
+        rows *= d
+    x2 = x.reshape(rows, hidden)
+    if block_rows is None:
+        block_rows = _pick_block(rows)
+    assert rows % block_rows == 0, (rows, block_rows)
+    grid = (rows // block_rows,)
+
+    out = pl.pallas_call(
+        functools.partial(_layernorm_kernel, eps=eps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, hidden), lambda i: (i, 0)),
+            pl.BlockSpec((1, hidden), lambda i: (0, 0)),
+            pl.BlockSpec((1, hidden), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, hidden), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, hidden), x.dtype),
+        interpret=interpret,
+    )(x2, gain.reshape(1, hidden), bias.reshape(1, hidden))
+    return out.reshape(orig_shape)

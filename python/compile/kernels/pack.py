@@ -1,0 +1,105 @@
+"""DRCE pad-removal / pad-rebuild Pallas kernels (§4.3).
+
+The paper binds two CUDA kernels that fuse transpose+pad to switch between
+the padded layout (batch, seq, hidden) the attention module needs and the
+packed layout (valid_tokens, hidden) the linear layers run on. Our row-
+major layout needs no transpose, so the pair reduces to an index-driven
+row gather — pad removal gathers valid rows into a packed matrix, and pad
+rebuild is the *same* gather through an inverse map into a table with one
+extra all-zero sentinel row (scatter expressed as gather, which is how a
+TPU would express it too: dynamic row loads from HBM into VMEM tiles).
+
+The engine broadcasts per-batch sequence lengths with the command (§4.3),
+and the Rust coordinator materializes both index maps host-side; see
+``rust/src/tensor/drce.rs`` for the mirror implementation.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gather_rows_kernel(src_ref, idx_ref, o_ref):
+    """o[j] = src[idx[j]] for one block of output rows."""
+    src = src_ref[...]
+    idx = idx_ref[...]
+    o_ref[...] = src[idx]
+
+
+def _pick_block(n: int, candidates=(64, 32, 16, 8, 4, 2, 1)) -> int:
+    for c in candidates:
+        if n % c == 0:
+            return c
+    return 1
+
+
+def gather_rows(
+    src: jax.Array,
+    idx: jax.Array,
+    *,
+    block_rows: int | None = None,
+    interpret: bool = True,
+) -> jax.Array:
+    """Row gather: ``out[j] = src[idx[j]]``. src: (N, H), idx: (M,) int32."""
+    n, h = src.shape
+    (m,) = idx.shape
+    if block_rows is None:
+        block_rows = _pick_block(m)
+    assert m % block_rows == 0
+    grid = (m // block_rows,)
+
+    return pl.pallas_call(
+        _gather_rows_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n, h), lambda i: (0, 0)),
+            pl.BlockSpec((block_rows,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, h), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, h), src.dtype),
+        interpret=interpret,
+    )(src, idx)
+
+
+def remove_padding(x_flat: jax.Array, unpad_map: jax.Array) -> jax.Array:
+    """Padded (batch*seq, H) -> packed (T, H). ``unpad_map``: (T,) flat
+    positions of the valid tokens, in batch-major order of arrival."""
+    return gather_rows(x_flat, unpad_map)
+
+
+def rebuild_padding(packed: jax.Array, pad_map: jax.Array) -> jax.Array:
+    """Packed (T, H) -> padded (batch*seq, H). ``pad_map``: (batch*seq,)
+    with pad_map[i] = packed row for position i, or T (sentinel) for pad
+    positions, which selects the appended zero row."""
+    t, h = packed.shape
+    table = jnp.concatenate([packed, jnp.zeros((1, h), packed.dtype)], axis=0)
+    return gather_rows(table, pad_map)
+
+
+def make_maps(valid_lens, seq: int, t_bucket: int):
+    """Host-side (numpy) helper mirrored in Rust: build (unpad_map, pad_map,
+    n_valid) for a batch with per-sequence valid lengths, packing into a
+    ``t_bucket``-row packed matrix (bucketed static shape for AOT).
+
+    Overflow tokens beyond t_bucket are an error; slack rows replicate row
+    0 in unpad_map (harmless compute, standard shape-bucketing trick) and
+    are never referenced by pad_map.
+    """
+    import numpy as np
+
+    batch = len(valid_lens)
+    total = int(sum(valid_lens))
+    if total > t_bucket:
+        raise ValueError(f"{total} valid tokens exceed bucket {t_bucket}")
+    unpad = np.zeros(t_bucket, dtype=np.int32)
+    pad = np.full(batch * seq, t_bucket, dtype=np.int32)  # sentinel
+    j = 0
+    for b, vl in enumerate(valid_lens):
+        for s in range(int(vl)):
+            flat = b * seq + s
+            unpad[j] = flat
+            pad[flat] = j
+            j += 1
+    return unpad, pad, total

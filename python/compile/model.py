@@ -1,0 +1,316 @@
+"""L2: the transformer compute graph, built from the L1 Pallas kernels.
+
+This file defines every AOT *variant* the Rust coordinator executes:
+
+  embed            token + position embedding             (stage 0 of PP)
+  layer_full       one pre-LN transformer layer, fused     (PP stages, TP=1)
+  attn_shard       Megatron 1-D attention half of a layer  (TP workers)
+  mlp_shard        Megatron 1-D MLP half                   (TP workers, DRCE)
+  drce_attn_shard  attention half over the *packed* token  (DRCE, §4.3)
+                   matrix, padding rebuilt only around MHA
+  logits           final layernorm + tied-embedding head   (last PP stage)
+
+Tensor-parallel partitioning follows Megatron-LM's 1-D strategy exactly as
+the paper describes (§4.1.3): the first linear of each pair is column-
+split, the second row-split, so each layer needs a single all-reduce per
+pair — two per layer — which the Rust coordinator performs between the
+``attn_shard`` and ``mlp_shard`` executions. Shard biases of row-split
+linears must be pre-divided by tp so the all-reduce sums to the full bias;
+``shard_layer_params`` implements that rule and is mirrored in
+``rust/src/model/shard.rs``.
+
+Residual adds across the all-reduce boundary are performed by the
+coordinator (y = r + mlp_sum, r = x + attn_sum); everything else is fused
+into the executables.
+
+All shapes are static (AOT) — the dynamic batcher on the Rust side pads
+into the compiled (batch, seq) buckets, and DRCE packs into ``t_bucket``
+rows (slack rows replicate row 0; see kernels/pack.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import attention, layernorm, linear
+from .kernels.pack import rebuild_padding, remove_padding
+from .kernels.ref import causal_padding_bias
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """GPT-style geometry. ``gpt3`` matches the paper's head config."""
+
+    name: str
+    hidden: int
+    n_heads: int
+    vocab: int
+    max_seq: int
+    n_layers: int
+    ffn_mult: int = 4
+
+    @property
+    def head_dim(self) -> int:
+        return self.hidden // self.n_heads
+
+    @property
+    def ffn(self) -> int:
+        return self.hidden * self.ffn_mult
+
+    def params_per_layer(self) -> int:
+        h, f = self.hidden, self.ffn
+        return 4 * h + (h * 3 * h + 3 * h) + (h * h + h) + (h * f + f) + (f * h + h)
+
+
+PRESETS = {
+    # Real-execution presets (CPU PJRT):
+    "tiny": ModelConfig("tiny", hidden=64, n_heads=2, vocab=128, max_seq=32, n_layers=4),
+    "small": ModelConfig("small", hidden=256, n_heads=4, vocab=512, max_seq=64, n_layers=8),
+    "base": ModelConfig("base", hidden=512, n_heads=8, vocab=2048, max_seq=128, n_layers=12),
+    # Paper-scale configs (analytic perf model only; never AOT-compiled):
+    "gpt3": ModelConfig("gpt3", hidden=12288, n_heads=96, vocab=51200, max_seq=2048, n_layers=96),
+}
+
+
+# ---------------------------------------------------------------------------
+# Parameter specifications (the order is the executable argument order and
+# is mirrored by rust/src/model/spec.rs via the manifest).
+# ---------------------------------------------------------------------------
+
+def layer_param_spec(cfg: ModelConfig, tp: int = 1):
+    """[(name, shape)] for one layer's parameters under tp-way sharding."""
+    h, f, nh = cfg.hidden, cfg.ffn, cfg.n_heads
+    assert nh % tp == 0, f"heads {nh} not divisible by tp {tp}"
+    assert f % tp == 0
+    return [
+        ("ln1_g", (h,)),
+        ("ln1_b", (h,)),
+        ("wqkv", (h, 3 * h // tp)),
+        ("bqkv", (3 * h // tp,)),
+        ("wo", (h // tp, h)),
+        ("bo", (h,)),  # pre-divided by tp on the rust side
+        ("ln2_g", (h,)),
+        ("ln2_b", (h,)),
+        ("w1", (h, f // tp)),
+        ("b1", (f // tp,)),
+        ("w2", (f // tp, h)),
+        ("b2", (h,)),  # pre-divided by tp
+    ]
+
+
+ATTN_PARAMS = ["ln1_g", "ln1_b", "wqkv", "bqkv", "wo", "bo"]
+MLP_PARAMS = ["ln2_g", "ln2_b", "w1", "b1", "w2", "b2"]
+
+
+def shard_layer_params(params: dict, tp: int, rank: int, n_heads: int) -> dict:
+    """Megatron 1-D shard of a full layer's params (oracle for tests; the
+    production implementation lives in rust/src/model/shard.rs).
+
+    wqkv is column-split *by head groups* so each shard computes whole
+    heads; wo/w2 are row-split; biases of row-split linears are divided by
+    tp so the all-reduce reconstructs them exactly once.
+    """
+    h = params["wqkv"].shape[0]
+    hd = h // n_heads
+    heads_local = n_heads // tp
+    out = dict(params)
+
+    # wqkv: (H, 3H) = concat of q|k|v each (H, H). Split each by head block.
+    wq, wk, wv = jnp.split(params["wqkv"], 3, axis=1)
+    bq, bk, bv = jnp.split(params["bqkv"], 3)
+    sl = slice(rank * heads_local * hd, (rank + 1) * heads_local * hd)
+    out["wqkv"] = jnp.concatenate([wq[:, sl], wk[:, sl], wv[:, sl]], axis=1)
+    out["bqkv"] = jnp.concatenate([bq[sl], bk[sl], bv[sl]])
+    out["wo"] = params["wo"][sl, :]
+    out["bo"] = params["bo"] / tp
+    fsl = slice(rank * (params["w1"].shape[1] // tp), (rank + 1) * (params["w1"].shape[1] // tp))
+    out["w1"] = params["w1"][:, fsl]
+    out["b1"] = params["b1"][fsl]
+    out["w2"] = params["w2"][fsl, :]
+    out["b2"] = params["b2"] / tp
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Module builders
+# ---------------------------------------------------------------------------
+
+def _mha(x, bias, wqkv, bqkv, wo, bo, heads_local: int):
+    """Attention core on padded (B, S, H_in) input with local heads."""
+    b, s, _ = x.shape
+    qkv = linear(x, wqkv, bqkv)
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    hd = q.shape[-1] // heads_local
+
+    def to_heads(t):
+        return t.reshape(b, s, heads_local, hd).transpose(0, 2, 1, 3)
+
+    o = attention(to_heads(q), to_heads(k), to_heads(v), bias)
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, heads_local * hd)
+    return linear(o, wo, bo)
+
+
+def build_layer_full(cfg: ModelConfig) -> Callable:
+    """Whole layer, single device: y = r + mlp(ln2(r)), r = x + attn(ln1(x))."""
+
+    def fn(x, valid_len, ln1_g, ln1_b, wqkv, bqkv, wo, bo, ln2_g, ln2_b, w1, b1, w2, b2):
+        bias = causal_padding_bias(valid_len, x.shape[1])
+        a = layernorm(x, ln1_g, ln1_b)
+        attn = _mha(a, bias, wqkv, bqkv, wo, bo, cfg.n_heads)
+        r = x + attn
+        m = layernorm(r, ln2_g, ln2_b)
+        m = linear(m, w1, b1, act="gelu")
+        m = linear(m, w2, b2)
+        return (r + m,)
+
+    return fn
+
+
+def build_attn_shard(cfg: ModelConfig, tp: int) -> Callable:
+    """Attention half of a layer on one TP worker.
+
+    Returns the *partial* attention output (no residual): the coordinator
+    all-reduces partials across the tp group and adds the residual.
+    """
+    heads_local = cfg.n_heads // tp
+
+    def fn(x, valid_len, ln1_g, ln1_b, wqkv, bqkv, wo, bo):
+        bias = causal_padding_bias(valid_len, x.shape[1])
+        a = layernorm(x, ln1_g, ln1_b)
+        return (_mha(a, bias, wqkv, bqkv, wo, bo, heads_local),)
+
+    return fn
+
+
+def build_mlp_shard(cfg: ModelConfig, tp: int) -> Callable:
+    """MLP half on one TP worker over a (rows, H) matrix (padded or packed).
+
+    Input is r = x + attn_sum (computed by the coordinator after the
+    attention all-reduce); output is the partial MLP result.
+    """
+
+    def fn(r, ln2_g, ln2_b, w1, b1, w2, b2):
+        m = layernorm(r, ln2_g, ln2_b)
+        m = linear(m, w1, b1, act="gelu")
+        return (linear(m, w2, b2),)
+
+    return fn
+
+
+def build_drce_attn_shard(cfg: ModelConfig, tp: int, batch: int, seq: int, t_bucket: int) -> Callable:
+    """DRCE attention half (§4.3): all linears run on the packed (T, H)
+    token matrix; padding is rebuilt only around the multi-head attention
+    structure via the index maps the engine broadcasts with the command.
+    """
+    heads_local = cfg.n_heads // tp
+    h = cfg.hidden
+    hd = cfg.head_dim
+
+    def fn(x_packed, valid_len, unpad_map, pad_map, ln1_g, ln1_b, wqkv, bqkv, wo, bo):
+        bias = causal_padding_bias(valid_len, seq)
+        a = layernorm(x_packed, ln1_g, ln1_b)  # packed rows
+        qkv_packed = linear(a, wqkv, bqkv)  # (T, 3H/tp)
+        qkv = rebuild_padding(qkv_packed, pad_map)  # (B*S, 3H/tp)
+        q, k, v = jnp.split(qkv.reshape(batch, seq, 3 * h // tp), 3, axis=-1)
+
+        def to_heads(t):
+            return t.reshape(batch, seq, heads_local, hd).transpose(0, 2, 1, 3)
+
+        o = attention(to_heads(q), to_heads(k), to_heads(v), bias)
+        o = o.transpose(0, 2, 1, 3).reshape(batch * seq, heads_local * hd)
+        o_packed = remove_padding(o, unpad_map)  # (T, H/tp)
+        return (linear(o_packed, wo, bo),)
+
+    return fn
+
+
+def build_embed(cfg: ModelConfig) -> Callable:
+    def fn(ids, wte, wpe):
+        s = ids.shape[1]
+        return (jnp.take(wte, ids, axis=0) + wpe[jnp.arange(s)][None, :, :],)
+
+    return fn
+
+
+def build_logits(cfg: ModelConfig) -> Callable:
+    """Final layernorm + tied-embedding LM head."""
+
+    def fn(x, lnf_g, lnf_b, wte):
+        y = layernorm(x, lnf_g, lnf_b)
+        z = jnp.einsum("bsh,vh->bsv", y.astype(jnp.float32), wte.astype(jnp.float32))
+        return (z,)
+
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# Variant registry: everything aot.py can lower, with example shapes.
+# ---------------------------------------------------------------------------
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def _spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def variant(cfg: ModelConfig, kind: str, *, batch: int = 1, seq: int = 16, tp: int = 1, t_bucket: int = 0):
+    """Return (name, fn, [(arg_name, ShapeDtypeStruct)]) for one variant."""
+    h, f = cfg.hidden, cfg.ffn
+    lp = dict(layer_param_spec(cfg, tp))
+
+    def params(names):
+        return [(n, _spec(lp[n])) for n in names]
+
+    if kind == "embed":
+        name = f"{cfg.name}_embed_b{batch}_s{seq}"
+        args = [
+            ("ids", _spec((batch, seq), I32)),
+            ("wte", _spec((cfg.vocab, h))),
+            ("wpe", _spec((cfg.max_seq, h))),
+        ]
+        return name, build_embed(cfg), args
+    if kind == "layer_full":
+        name = f"{cfg.name}_layer_full_b{batch}_s{seq}"
+        args = [
+            ("x", _spec((batch, seq, h))),
+            ("valid_len", _spec((batch,), I32)),
+        ] + params(ATTN_PARAMS + MLP_PARAMS)
+        return name, build_layer_full(cfg), args
+    if kind == "attn_shard":
+        name = f"{cfg.name}_attn_shard_tp{tp}_b{batch}_s{seq}"
+        args = [
+            ("x", _spec((batch, seq, h))),
+            ("valid_len", _spec((batch,), I32)),
+        ] + params(ATTN_PARAMS)
+        return name, build_attn_shard(cfg, tp), args
+    if kind == "mlp_shard":
+        rows = t_bucket if t_bucket else batch * seq
+        name = f"{cfg.name}_mlp_shard_tp{tp}_r{rows}"
+        args = [("r", _spec((rows, h)))] + params(MLP_PARAMS)
+        return name, build_mlp_shard(cfg, tp), args
+    if kind == "drce_attn_shard":
+        assert t_bucket > 0
+        name = f"{cfg.name}_drce_attn_shard_tp{tp}_b{batch}_s{seq}_t{t_bucket}"
+        args = [
+            ("x_packed", _spec((t_bucket, h))),
+            ("valid_len", _spec((batch,), I32)),
+            ("unpad_map", _spec((t_bucket,), I32)),
+            ("pad_map", _spec((batch * seq,), I32)),
+        ] + params(ATTN_PARAMS)
+        return name, build_drce_attn_shard(cfg, tp, batch, seq, t_bucket), args
+    if kind == "logits":
+        name = f"{cfg.name}_logits_b{batch}_s{seq}"
+        args = [
+            ("x", _spec((batch, seq, h))),
+            ("lnf_g", _spec((h,))),
+            ("lnf_b", _spec((h,))),
+            ("wte", _spec((cfg.vocab, h))),
+        ]
+        return name, build_logits(cfg), args
+    raise ValueError(f"unknown variant kind {kind!r}")

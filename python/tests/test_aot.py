@@ -1,0 +1,75 @@
+"""AOT pipeline tests: lowering produces loadable HLO text + a manifest
+consistent with the variant registry (the Rust loader's contract)."""
+
+import json
+import os
+import tempfile
+
+import pytest
+
+from compile import aot
+from compile import model as M
+
+
+class TestLowerVariant:
+    def test_layer_full_hlo_text(self):
+        entry, text = aot.lower_variant(M.PRESETS["tiny"], "layer_full", batch=1, seq=16)
+        assert text.startswith("HloModule")
+        assert "ENTRY" in text
+        # no TPU custom-calls may leak into CPU artifacts (interpret=True)
+        assert "custom-call" not in text.lower() or "mosaic" not in text.lower()
+        assert entry["inputs"][0]["shape"] == [1, 16, 64]
+        assert entry["outputs"][0]["shape"] == [1, 16, 64]
+
+    def test_input_count_matches_signature(self):
+        entry, _ = aot.lower_variant(M.PRESETS["tiny"], "drce_attn_shard", batch=2, seq=16, tp=2, t_bucket=16)
+        # x_packed, valid_len, unpad_map, pad_map + 6 attention params
+        assert len(entry["inputs"]) == 10
+        assert entry["inputs"][1]["dtype"] == "int32"
+
+    def test_dtypes_recorded(self):
+        entry, _ = aot.lower_variant(M.PRESETS["tiny"], "embed", batch=2, seq=16)
+        assert entry["inputs"][0]["dtype"] == "int32"
+        assert entry["inputs"][1]["dtype"] == "float32"
+
+
+class TestPlans:
+    def test_plan_jobs_expand(self):
+        jobs = aot.plan_jobs(aot.PLANS["quick"])
+        kinds = [k for _, k, _ in jobs]
+        for required in ("embed", "layer_full", "logits", "attn_shard", "mlp_shard", "drce_attn_shard"):
+            assert required in kinds
+
+    def test_full_plan_covers_tp4(self):
+        jobs = aot.plan_jobs(aot.PLANS["full"])
+        assert any(kw.get("tp") == 4 for _, _, kw in jobs)
+
+    def test_mlp_rows_not_duplicated(self):
+        jobs = aot.plan_jobs(aot.PLANS["full"])
+        names = []
+        for cfg, kind, kw in jobs:
+            if kind == "mlp_shard":
+                rows = kw.get("t_bucket") or kw["batch"] * kw["seq"]
+                names.append((cfg.name, kw.get("tp", 1), rows))
+        assert len(names) == len(set(names))
+
+
+class TestEndToEnd:
+    def test_quick_plan_writes_manifest(self, tmp_path):
+        rc = aot.main(["--out", str(tmp_path), "--plan", "quick"])
+        assert rc == 0
+        man = json.loads((tmp_path / "manifest.json").read_text())
+        assert man["format_version"] == 1
+        assert man["configs"][0]["name"] == "tiny"
+        for v in man["variants"]:
+            assert (tmp_path / v["file"]).exists()
+
+    def test_manifest_merge_keeps_old_entries(self, tmp_path):
+        aot.main(["--out", str(tmp_path), "--plan", "quick"])
+        n0 = len(json.loads((tmp_path / "manifest.json").read_text())["variants"])
+        aot.main(
+            ["--out", str(tmp_path), "--plan", "none", "--preset", "tiny",
+             "--kind", "layer_full", "--batch", "1", "--seq", "16"]
+        )
+        man = json.loads((tmp_path / "manifest.json").read_text())
+        assert len(man["variants"]) == n0 + 1

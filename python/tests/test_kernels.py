@@ -1,0 +1,264 @@
+"""L1 kernel correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Fixed-shape unit tests cover the geometries the AOT plan actually emits;
+hypothesis sweeps shapes/dtypes beyond them (deadline disabled — interpret
+mode is slow on 1 CPU core).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import (
+    attention,
+    gather_rows,
+    layernorm,
+    linear,
+    make_maps,
+    matmul_bias_act,
+    rebuild_padding,
+    remove_padding,
+)
+from compile.kernels import ref
+
+SETTINGS = dict(deadline=None, max_examples=15, print_blob=True)
+
+
+def rng(*keys):
+    return jax.random.split(jax.random.PRNGKey(0), len(keys))
+
+
+# ---------------------------------------------------------------------------
+# layernorm
+# ---------------------------------------------------------------------------
+
+class TestLayerNorm:
+    @pytest.mark.parametrize("rows,hidden", [(4, 64), (32, 256), (7, 64), (1, 8)])
+    def test_matches_ref(self, rows, hidden):
+        k1, k2, k3 = jax.random.split(jax.random.PRNGKey(1), 3)
+        x = jax.random.normal(k1, (rows, hidden), jnp.float32)
+        g = jax.random.normal(k2, (hidden,)) * 0.1 + 1.0
+        b = jax.random.normal(k3, (hidden,)) * 0.1
+        assert_allclose(layernorm(x, g, b), ref.layernorm_ref(x, g, b), rtol=2e-5, atol=2e-5)
+
+    def test_3d_input(self):
+        k = jax.random.PRNGKey(2)
+        x = jax.random.normal(k, (2, 8, 32))
+        g = jnp.ones(32)
+        b = jnp.zeros(32)
+        out = layernorm(x, g, b)
+        assert out.shape == (2, 8, 32)
+        assert_allclose(out, ref.layernorm_ref(x, g, b), rtol=2e-5, atol=2e-5)
+
+    def test_rows_not_multiple_of_large_block(self):
+        # 6 rows forces block selection down to 2
+        x = jax.random.normal(jax.random.PRNGKey(3), (6, 16))
+        out = layernorm(x, jnp.ones(16), jnp.zeros(16))
+        assert_allclose(out, ref.layernorm_ref(x, jnp.ones(16), jnp.zeros(16)), rtol=2e-5, atol=2e-5)
+
+    def test_constant_rows_are_finite(self):
+        x = jnp.ones((4, 16))
+        out = layernorm(x, jnp.ones(16), jnp.zeros(16))
+        assert np.all(np.isfinite(np.asarray(out)))
+
+    @given(
+        rows=st.integers(1, 48),
+        hidden=st.sampled_from([8, 16, 32, 64, 128]),
+        dtype=st.sampled_from(["float32", "bfloat16"]),
+    )
+    @settings(**SETTINGS)
+    def test_hypothesis_shapes(self, rows, hidden, dtype):
+        dt = jnp.dtype(dtype)
+        x = jax.random.normal(jax.random.PRNGKey(rows * hidden), (rows, hidden)).astype(dt)
+        g = jnp.ones(hidden, dt)
+        b = jnp.zeros(hidden, dt)
+        tol = 2e-5 if dtype == "float32" else 5e-2
+        assert_allclose(
+            np.asarray(layernorm(x, g, b), np.float32),
+            np.asarray(ref.layernorm_ref(x, g, b), np.float32),
+            rtol=tol,
+            atol=tol,
+        )
+
+
+# ---------------------------------------------------------------------------
+# fused matmul + bias + act
+# ---------------------------------------------------------------------------
+
+class TestMatmul:
+    @pytest.mark.parametrize("act", ["none", "gelu", "relu"])
+    def test_acts(self, act):
+        k1, k2 = jax.random.split(jax.random.PRNGKey(4))
+        x = jax.random.normal(k1, (16, 64))
+        w = jax.random.normal(k2, (64, 32)) / 8.0
+        b = jnp.linspace(-1, 1, 32)
+        assert_allclose(
+            matmul_bias_act(x, w, b, act=act),
+            ref.matmul_bias_act_ref(x, w, b, act=act),
+            rtol=1e-4,
+            atol=1e-4,
+        )
+
+    def test_m_not_block_aligned(self):
+        x = jax.random.normal(jax.random.PRNGKey(5), (13, 32))
+        w = jax.random.normal(jax.random.PRNGKey(6), (32, 16))
+        b = jnp.zeros(16)
+        out = matmul_bias_act(x, w, b)
+        assert out.shape == (13, 16)
+        assert_allclose(out, ref.matmul_bias_act_ref(x, w, b), rtol=1e-4, atol=1e-4)
+
+    def test_linear_3d(self):
+        x = jax.random.normal(jax.random.PRNGKey(7), (2, 8, 32))
+        w = jax.random.normal(jax.random.PRNGKey(8), (32, 64)) / 4
+        b = jnp.ones(64)
+        out = linear(x, w, b, act="gelu")
+        assert out.shape == (2, 8, 64)
+        assert_allclose(out, ref.linear_ref(x, w, b, "gelu"), rtol=1e-4, atol=1e-4)
+
+    def test_explicit_blocks(self):
+        x = jax.random.normal(jax.random.PRNGKey(9), (32, 128))
+        w = jax.random.normal(jax.random.PRNGKey(10), (128, 64)) / 8
+        b = jnp.zeros(64)
+        out = matmul_bias_act(x, w, b, block_m=8, block_n=16, block_k=32)
+        assert_allclose(out, ref.matmul_bias_act_ref(x, w, b), rtol=1e-4, atol=1e-4)
+
+    @given(
+        m=st.integers(1, 40),
+        k=st.sampled_from([16, 32, 64, 128]),
+        n=st.sampled_from([16, 32, 64]),
+        act=st.sampled_from(["none", "gelu"]),
+        dtype=st.sampled_from(["float32", "bfloat16"]),
+    )
+    @settings(**SETTINGS)
+    def test_hypothesis_shapes(self, m, k, n, act, dtype):
+        dt = jnp.dtype(dtype)
+        kx, kw = jax.random.split(jax.random.PRNGKey(m * k + n))
+        x = (jax.random.normal(kx, (m, k)) / 4).astype(dt)
+        w = (jax.random.normal(kw, (k, n)) / 4).astype(dt)
+        b = jnp.zeros(n, dt)
+        tol = 1e-4 if dtype == "float32" else 8e-2
+        assert_allclose(
+            np.asarray(matmul_bias_act(x, w, b, act=act), np.float32),
+            np.asarray(ref.matmul_bias_act_ref(x, w, b, act=act), np.float32),
+            rtol=tol,
+            atol=tol,
+        )
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+def _qkvb(key, batch, heads, seq, hd, valid=None):
+    k1, k2, k3 = jax.random.split(key, 3)
+    q = jax.random.normal(k1, (batch, heads, seq, hd))
+    k = jax.random.normal(k2, (batch, heads, seq, hd))
+    v = jax.random.normal(k3, (batch, heads, seq, hd))
+    if valid is None:
+        valid = jnp.full((batch,), seq, jnp.int32)
+    bias = ref.causal_padding_bias(valid, seq)
+    return q, k, v, bias
+
+
+class TestAttention:
+    @pytest.mark.parametrize("batch,heads,seq,hd", [(1, 1, 16, 8), (2, 4, 32, 16), (2, 2, 64, 32)])
+    def test_causal_matches_ref(self, batch, heads, seq, hd):
+        q, k, v, bias = _qkvb(jax.random.PRNGKey(11), batch, heads, seq, hd)
+        assert_allclose(
+            attention(q, k, v, bias), ref.attention_ref(q, k, v, bias), rtol=2e-4, atol=2e-4
+        )
+
+    def test_padding_mask(self):
+        valid = jnp.array([3, 16], jnp.int32)
+        q, k, v, bias = _qkvb(jax.random.PRNGKey(12), 2, 2, 16, 8, valid)
+        out = attention(q, k, v, bias)
+        expect = ref.attention_ref(q, k, v, bias)
+        # valid region matches
+        assert_allclose(out[0, :, :3], expect[0, :, :3], rtol=2e-4, atol=2e-4)
+        assert_allclose(out[1], expect[1], rtol=2e-4, atol=2e-4)
+        # fully padded query rows are finite (NEG_INF, not -inf)
+        assert np.all(np.isfinite(np.asarray(out)))
+
+    def test_block_sizes(self):
+        q, k, v, bias = _qkvb(jax.random.PRNGKey(13), 1, 2, 32, 16)
+        for bq, bk in [(8, 8), (16, 32), (32, 4)]:
+            out = attention(q, k, v, bias, block_q=bq, block_k=bk)
+            assert_allclose(out, ref.attention_ref(q, k, v, bias), rtol=2e-4, atol=2e-4)
+
+    def test_first_token_attends_only_self(self):
+        q, k, v, bias = _qkvb(jax.random.PRNGKey(14), 1, 1, 16, 8)
+        out = attention(q, k, v, bias)
+        assert_allclose(out[0, 0, 0], v[0, 0, 0], rtol=2e-4, atol=2e-4)
+
+    @given(
+        batch=st.integers(1, 3),
+        heads=st.sampled_from([1, 2, 4]),
+        seq=st.sampled_from([8, 16, 32]),
+        hd=st.sampled_from([8, 16, 32]),
+    )
+    @settings(**SETTINGS)
+    def test_hypothesis_shapes(self, batch, heads, seq, hd):
+        valid = jnp.arange(1, batch + 1, dtype=jnp.int32) * (seq // (batch + 1)) + 1
+        q, k, v, bias = _qkvb(jax.random.PRNGKey(seq * hd + batch), batch, heads, seq, hd, valid)
+        assert_allclose(
+            attention(q, k, v, bias), ref.attention_ref(q, k, v, bias), rtol=3e-4, atol=3e-4
+        )
+
+
+# ---------------------------------------------------------------------------
+# DRCE pack/unpack
+# ---------------------------------------------------------------------------
+
+class TestPack:
+    def test_gather_rows(self):
+        src = jax.random.normal(jax.random.PRNGKey(15), (10, 8))
+        idx = jnp.array([0, 3, 3, 9, 1, 2, 5, 7], jnp.int32)
+        assert_allclose(gather_rows(src, idx), ref.gather_rows_ref(src, idx))
+
+    def test_roundtrip(self):
+        batch, seq, h = 3, 8, 16
+        valid = [5, 8, 2]
+        unpad, pad, total = make_maps(valid, seq, t_bucket=16)
+        assert total == 15
+        x = jax.random.normal(jax.random.PRNGKey(16), (batch * seq, h))
+        packed = remove_padding(x, jnp.asarray(unpad))
+        rebuilt = rebuild_padding(packed[:total].reshape(total, h), jnp.asarray(pad))
+        rebuilt = np.asarray(rebuilt).reshape(batch, seq, h)
+        xr = np.asarray(x).reshape(batch, seq, h)
+        for b, vl in enumerate(valid):
+            assert_allclose(rebuilt[b, :vl], xr[b, :vl])
+            assert_allclose(rebuilt[b, vl:], 0.0)
+
+    def test_bucket_overflow_raises(self):
+        with pytest.raises(ValueError):
+            make_maps([8, 8], 8, t_bucket=15)
+
+    def test_slack_rows_replicate_row0(self):
+        unpad, pad, total = make_maps([2], 8, t_bucket=8)
+        assert total == 2
+        assert list(unpad[total:]) == [0] * 6
+        # pad map never references slack rows
+        assert all(p == 8 or p < total for p in pad)
+
+    @given(
+        seq=st.sampled_from([8, 16]),
+        lens=st.lists(st.integers(1, 8), min_size=1, max_size=4),
+    )
+    @settings(**SETTINGS)
+    def test_hypothesis_roundtrip(self, seq, lens):
+        lens = [min(l, seq) for l in lens]
+        total = sum(lens)
+        bucket = ((total + 7) // 8) * 8
+        unpad, pad, t = make_maps(lens, seq, bucket)
+        h = 4
+        x = jnp.arange(len(lens) * seq * h, dtype=jnp.float32).reshape(len(lens) * seq, h)
+        packed = remove_padding(x, jnp.asarray(unpad))
+        rebuilt = np.asarray(rebuild_padding(packed, jnp.asarray(pad)))
+        xr = np.asarray(x).reshape(len(lens), seq, h)
+        rb = rebuilt.reshape(len(lens), seq, h)
+        for b, vl in enumerate(lens):
+            assert_allclose(rb[b, :vl], xr[b, :vl])
+            assert_allclose(rb[b, vl:], 0.0)

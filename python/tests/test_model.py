@@ -1,0 +1,214 @@
+"""L2 model correctness: variant builders vs the pure-jnp layer oracle.
+
+The critical invariants:
+  * layer_full == layer_ref (kernels compose correctly),
+  * TP shards + all-reduce + host residual adds == layer_full for every tp
+    (the coordinator's reassembly contract),
+  * DRCE packed path == padded path on the valid region (§4.3),
+  * embed/logits match their oracles.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile import model as M
+from compile.kernels import make_maps, remove_padding
+from compile.kernels import ref
+
+TINY = M.PRESETS["tiny"]
+
+
+def make_layer_params(key, cfg):
+    ks = jax.random.split(key, 12)
+    spec = M.layer_param_spec(cfg, tp=1)
+    params = {}
+    for (name, shape), k in zip(spec, ks):
+        if name.endswith("_g"):
+            params[name] = jnp.ones(shape) + jax.random.normal(k, shape) * 0.02
+        elif name.startswith("w"):
+            fan_in = shape[0]
+            params[name] = jax.random.normal(k, shape) / np.sqrt(fan_in)
+        else:
+            params[name] = jax.random.normal(k, shape) * 0.02
+    return params
+
+
+def param_list(params, names):
+    return [params[n] for n in names]
+
+
+ALL = M.ATTN_PARAMS + M.MLP_PARAMS
+
+
+class TestLayerFull:
+    @pytest.mark.parametrize("batch,seq", [(1, 16), (2, 16)])
+    def test_matches_oracle(self, batch, seq):
+        params = make_layer_params(jax.random.PRNGKey(0), TINY)
+        x = jax.random.normal(jax.random.PRNGKey(1), (batch, seq, TINY.hidden))
+        valid = jnp.full((batch,), seq, jnp.int32)
+        fn = M.build_layer_full(TINY)
+        (y,) = fn(x, valid, *param_list(params, ALL))
+        expect = ref.layer_ref(x, valid, params, TINY.n_heads)
+        assert_allclose(np.asarray(y), np.asarray(expect), rtol=5e-4, atol=5e-4)
+
+    def test_variable_lengths_valid_region(self):
+        params = make_layer_params(jax.random.PRNGKey(2), TINY)
+        batch, seq = 2, 16
+        x = jax.random.normal(jax.random.PRNGKey(3), (batch, seq, TINY.hidden))
+        valid = jnp.array([5, 12], jnp.int32)
+        fn = M.build_layer_full(TINY)
+        (y,) = fn(x, valid, *param_list(params, ALL))
+        expect = ref.layer_ref(x, valid, params, TINY.n_heads)
+        for b, vl in enumerate([5, 12]):
+            assert_allclose(
+                np.asarray(y)[b, :vl], np.asarray(expect)[b, :vl], rtol=5e-4, atol=5e-4
+            )
+
+    def test_jit_lowers(self):
+        # the exact path aot.py takes must trace without concrete inputs
+        name, fn, args = M.variant(TINY, "layer_full", batch=1, seq=16)
+        jax.jit(fn).lower(*[s for _, s in args])
+
+
+class TestTensorParallel:
+    @pytest.mark.parametrize("tp", [1, 2])
+    def test_shards_reassemble_to_full_layer(self, tp):
+        cfg = TINY
+        params = make_layer_params(jax.random.PRNGKey(4), cfg)
+        batch, seq = 2, 16
+        x = jax.random.normal(jax.random.PRNGKey(5), (batch, seq, cfg.hidden))
+        valid = jnp.array([16, 9], jnp.int32)
+
+        full = M.build_layer_full(cfg)
+        (expect,) = full(x, valid, *param_list(params, ALL))
+
+        attn_fn = M.build_attn_shard(cfg, tp)
+        mlp_fn = M.build_mlp_shard(cfg, tp)
+        shards = [M.shard_layer_params(params, tp, r, cfg.n_heads) for r in range(tp)]
+
+        # coordinator contract: all-reduce partials, residual adds on host
+        attn_sum = sum(
+            attn_fn(x, valid, *param_list(s, M.ATTN_PARAMS))[0] for s in shards
+        )
+        r = x + attn_sum
+        r2 = r.reshape(batch * seq, cfg.hidden)
+        mlp_sum = sum(mlp_fn(r2, *param_list(s, M.MLP_PARAMS))[0] for s in shards)
+        y = r + mlp_sum.reshape(batch, seq, cfg.hidden)
+        assert_allclose(np.asarray(y), np.asarray(expect), rtol=1e-3, atol=1e-3)
+
+    def test_shard_param_shapes_match_spec(self):
+        cfg = TINY
+        params = make_layer_params(jax.random.PRNGKey(6), cfg)
+        for tp in (1, 2):
+            spec = dict(M.layer_param_spec(cfg, tp))
+            for r in range(tp):
+                s = M.shard_layer_params(params, tp, r, cfg.n_heads)
+                for name, shape in spec.items():
+                    assert s[name].shape == shape, (tp, r, name)
+
+    def test_row_bias_divided(self):
+        cfg = TINY
+        params = make_layer_params(jax.random.PRNGKey(7), cfg)
+        s0 = M.shard_layer_params(params, 2, 0, cfg.n_heads)
+        s1 = M.shard_layer_params(params, 2, 1, cfg.n_heads)
+        assert_allclose(np.asarray(s0["bo"] + s1["bo"]), np.asarray(params["bo"]), rtol=1e-6)
+        assert_allclose(np.asarray(s0["b2"] + s1["b2"]), np.asarray(params["b2"]), rtol=1e-6)
+
+
+class TestDRCE:
+    @pytest.mark.parametrize("tp", [1, 2])
+    def test_packed_equals_padded(self, tp):
+        cfg = TINY
+        params = make_layer_params(jax.random.PRNGKey(8), cfg)
+        batch, seq = 2, 16
+        lens = [9, 7]
+        t_bucket = 16
+        unpad, pad, total = make_maps(lens, seq, t_bucket)
+        x = jax.random.normal(jax.random.PRNGKey(9), (batch, seq, cfg.hidden))
+        # zero the pad region like the batcher does (pad rows never affect
+        # valid outputs either way, but packed slack rows replicate row 0)
+        mask = (jnp.arange(seq)[None, :] < jnp.asarray(lens)[:, None])[..., None]
+        x = x * mask
+        valid = jnp.asarray(lens, jnp.int32)
+
+        full = M.build_layer_full(cfg)
+        (expect,) = full(x, valid, *param_list(params, ALL))
+
+        x_packed = remove_padding(x.reshape(batch * seq, cfg.hidden), jnp.asarray(unpad))
+        drce_fn = M.build_drce_attn_shard(cfg, tp, batch, seq, t_bucket)
+        mlp_fn = M.build_mlp_shard(cfg, tp)
+        shards = [M.shard_layer_params(params, tp, r, cfg.n_heads) for r in range(tp)]
+
+        attn_sum = sum(
+            drce_fn(
+                x_packed,
+                valid,
+                jnp.asarray(unpad),
+                jnp.asarray(pad),
+                *param_list(s, M.ATTN_PARAMS),
+            )[0]
+            for s in shards
+        )
+        r_packed = x_packed + attn_sum
+        mlp_sum = sum(mlp_fn(r_packed, *param_list(s, M.MLP_PARAMS))[0] for s in shards)
+        y_packed = np.asarray(r_packed + mlp_sum)
+
+        ex = np.asarray(expect).reshape(batch * seq, cfg.hidden)
+        for j in range(total):
+            assert_allclose(y_packed[j], ex[unpad[j]], rtol=2e-3, atol=2e-3)
+
+    def test_flop_savings_ratio(self):
+        # paper setup: valid = pad/2 -> linears see half the rows
+        seq = 16
+        lens = [seq // 2] * 4
+        unpad, pad, total = make_maps(lens, seq, t_bucket=32)
+        assert total == 2 * seq  # half of 4*16
+
+
+class TestEmbedLogits:
+    def test_embed(self):
+        cfg = TINY
+        ids = jnp.array([[1, 5, 7, 0] * 4, [2, 2, 3, 9] * 4], jnp.int32)
+        wte = jax.random.normal(jax.random.PRNGKey(10), (cfg.vocab, cfg.hidden))
+        wpe = jax.random.normal(jax.random.PRNGKey(11), (cfg.max_seq, cfg.hidden))
+        (y,) = M.build_embed(cfg)(ids, wte, wpe)
+        assert_allclose(np.asarray(y), np.asarray(ref.embed_ref(ids, wte, wpe)), rtol=1e-6)
+
+    def test_logits(self):
+        cfg = TINY
+        x = jax.random.normal(jax.random.PRNGKey(12), (2, 16, cfg.hidden))
+        g, b = jnp.ones(cfg.hidden), jnp.zeros(cfg.hidden)
+        wte = jax.random.normal(jax.random.PRNGKey(13), (cfg.vocab, cfg.hidden))
+        (z,) = M.build_logits(cfg)(x, g, b, wte)
+        assert z.shape == (2, 16, cfg.vocab)
+        assert_allclose(
+            np.asarray(z), np.asarray(ref.logits_ref(x, g, b, wte)), rtol=5e-4, atol=5e-4
+        )
+
+
+class TestVariantRegistry:
+    def test_all_kinds_have_specs(self):
+        for kind, kw in [
+            ("embed", dict(batch=2, seq=16)),
+            ("layer_full", dict(batch=2, seq=16)),
+            ("attn_shard", dict(batch=2, seq=16, tp=2)),
+            ("mlp_shard", dict(batch=2, seq=16, tp=2)),
+            ("drce_attn_shard", dict(batch=2, seq=16, tp=2, t_bucket=16)),
+            ("logits", dict(batch=2, seq=16)),
+        ]:
+            name, fn, args = M.variant(TINY, kind, **kw)
+            assert name.startswith("tiny_")
+            out = jax.eval_shape(fn, *[s for _, s in args])
+            assert len(out) == 1
+
+    def test_unknown_kind_raises(self):
+        with pytest.raises(ValueError):
+            M.variant(TINY, "nope")
+
+    def test_params_per_layer_counts(self):
+        cfg = M.PRESETS["gpt3"]
+        # ~1.81e9 params/layer as the paper states for GPT3-175B (§4.4)
+        assert 1.7e9 < cfg.params_per_layer() < 1.9e9

@@ -1,0 +1,35 @@
+//! Fig. 10 — tensor parallelism scalability of a 12-layer GPT-3 on the
+//! fully NVLink-connected 8-GPU server, plus a live grounding run: the
+//! same TP orchestration (shards + ring all-reduce + host residuals)
+//! measured on real PJRT execution with the tiny preset.
+
+use energonai::coordinator::engine::{Engine, LaunchConfig};
+use energonai::coordinator::Request;
+use energonai::sim::report;
+use energonai::util::bench::run_print;
+
+fn live_tp(tp: usize) {
+    let engine = Engine::launch(
+        LaunchConfig::preset("tiny").with_parallel(tp, 1).with_warmup(true),
+    )
+    .unwrap();
+    run_print(&format!("live tiny tp={tp} batch(2,16) end-to-end"), 3, 20, || {
+        let r = engine
+            .infer_batch(vec![
+                Request::new(0, vec![5; 12]),
+                Request::new(1, vec![9; 12]),
+            ])
+            .unwrap();
+        r.to_here().unwrap();
+    });
+    engine.shutdown();
+}
+
+fn main() {
+    println!("{}", report::fig10());
+
+    println!("live grounding (real PJRT execution, tiny preset, 1-core CPU —");
+    println!("parallel configs time-slice one core; this measures coordination cost):");
+    live_tp(1);
+    live_tp(2);
+}

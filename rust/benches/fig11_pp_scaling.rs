@@ -1,0 +1,46 @@
+//! Fig. 11 — pipeline parallelism scalability (EnergonAI NBPP vs
+//! FasterTransformer blocking send/recv), plus a live grounding run: the
+//! same pipeline code with buffered vs rendezvous channels on real PJRT
+//! execution, streaming a window of batches like the paper's throughput
+//! measurement.
+
+use energonai::coordinator::engine::{Engine, LaunchConfig};
+use energonai::coordinator::Request;
+use energonai::sim::report;
+use std::time::Instant;
+
+fn live_pp(blocking: bool) {
+    let engine = Engine::launch(
+        LaunchConfig::preset("tiny")
+            .with_parallel(1, 2)
+            .with_blocking_comms(blocking)
+            .with_warmup(true),
+    )
+    .unwrap();
+    let n = 24;
+    let t0 = Instant::now();
+    let rrefs: Vec<_> = (0..n)
+        .map(|k| {
+            engine
+                .infer_batch(vec![Request::new(k, vec![(k % 90) as i32 + 1; 10])])
+                .unwrap()
+        })
+        .collect();
+    for r in rrefs {
+        r.to_here().unwrap();
+    }
+    let per = t0.elapsed().as_secs_f64() * 1e3 / n as f64;
+    println!(
+        "live tiny pp=2 {}: {per:.2} ms/batch over {n} streamed batches",
+        if blocking { "blocking (FT-style)" } else { "NBPP" }
+    );
+    engine.shutdown();
+}
+
+fn main() {
+    println!("{}", report::fig11());
+
+    println!("live grounding (real PJRT execution, tiny preset):");
+    live_pp(false);
+    live_pp(true);
+}

@@ -1,0 +1,43 @@
+//! Fig. 13 — peer memory pooling (PMEP) vs BMInf-style CPU offload:
+//! throughput in TFLOPS for 20/24/30/40-layer GPT-3 with 20 layers
+//! resident, plus a live grounding run on the real engine where the copy
+//! link is scaled so overlap behaviour is visible on the tiny preset.
+
+use energonai::coordinator::engine::{Engine, LaunchConfig, MemoryMode};
+use energonai::coordinator::Request;
+use energonai::memory::pool::PoolConfig;
+use energonai::sim::report;
+use energonai::util::bench::run_print;
+
+fn live(mode: MemoryMode, label: &str) {
+    let engine = Engine::launch(
+        LaunchConfig::preset("tiny").with_memory(mode).with_warmup(true),
+    )
+    .unwrap();
+    run_print(label, 2, 12, || {
+        let r = engine
+            .infer_batch(vec![Request::new(0, vec![3; 10])])
+            .unwrap();
+        r.to_here().unwrap();
+    });
+    engine.shutdown();
+}
+
+fn main() {
+    println!("{}", report::fig13());
+
+    println!("live grounding (tiny preset, copy delay scaled 2000x so the link matters):");
+    live(MemoryMode::Resident, "live resident (4/4 layers local)");
+    let mut pmep = PoolConfig::pmep();
+    pmep.time_scale = 2_000.0;
+    live(
+        MemoryMode::Pmep { n_local: 2, pool: pmep },
+        "live pmep    (2/4 local, prefetch)",
+    );
+    let mut bminf = PoolConfig::bminf();
+    bminf.time_scale = 2_000.0;
+    live(
+        MemoryMode::Pmep { n_local: 2, pool: bminf },
+        "live bminf   (2/4 local, sync host)",
+    );
+}

@@ -1,0 +1,118 @@
+//! Hot-path microbenchmarks — the profile targets of the §Perf pass:
+//! engine publish→complete round trip, ring all-reduce, DRCE pack/unpack,
+//! batcher formation, manifest parsing, and bare PJRT layer execution.
+
+use energonai::comm::channel::{CommWorld, Mode};
+use energonai::comm::collective::{ring_allreduce, ChunkMsg};
+use energonai::config::ModelConfig;
+use energonai::coordinator::batcher::{Batcher, Request};
+use energonai::coordinator::engine::{Engine, LaunchConfig};
+use energonai::model::ModelWeights;
+use energonai::runtime::{find_artifacts, valid_len_arg, Device, Manifest};
+use energonai::tensor::{drce, Tensor, Value};
+use energonai::util::bench::run_print;
+use energonai::util::rng::Rng;
+use std::time::Duration;
+
+fn bench_engine_roundtrip() {
+    let engine = Engine::launch(LaunchConfig::preset("tiny").with_warmup(true)).unwrap();
+    run_print("engine publish→complete (tiny, 1 worker)", 5, 50, || {
+        let r = engine
+            .infer_batch(vec![Request::new(0, vec![7; 10])])
+            .unwrap();
+        r.to_here().unwrap();
+    });
+    engine.shutdown();
+}
+
+fn bench_bare_layer() {
+    let man = Manifest::load(find_artifacts().unwrap()).unwrap();
+    let dev = Device::new(0).unwrap();
+    let cfg = ModelConfig::preset("tiny").unwrap();
+    let w = ModelWeights::random(&cfg, 1);
+    let v = man.get("tiny_layer_full_b2_s16").unwrap();
+    let mut rng = Rng::new(2);
+    let x = Tensor::randn(&[2, 16, cfg.hidden], 0.5, &mut rng);
+    let mut args = vec![Value::F32(x), valid_len_arg(&[16, 16])];
+    args.extend(w.layers[0].all_args());
+    dev.execute(&man, v, &args).unwrap();
+    run_print("bare PJRT layer_full execute (tiny b2 s16)", 5, 50, || {
+        dev.execute(&man, v, &args).unwrap();
+    });
+}
+
+fn bench_allreduce() {
+    for n in [2usize, 4] {
+        let len = 262_144; // 1 MiB of f32
+        let stats = {
+            let eps = CommWorld::new::<ChunkMsg>(n, Mode::NonBlocking);
+            let group: Vec<usize> = (0..n).collect();
+            let barrier = std::sync::Arc::new(std::sync::Barrier::new(n));
+            let handles: Vec<_> = eps
+                .into_iter()
+                .map(|ep| {
+                    let group = group.clone();
+                    let barrier = barrier.clone();
+                    std::thread::spawn(move || {
+                        let t = Tensor::full(&[len], ep.rank as f32);
+                        let mut out = None;
+                        let iters = 30;
+                        barrier.wait();
+                        let t0 = std::time::Instant::now();
+                        for _ in 0..iters {
+                            out = Some(ring_allreduce(&ep, &group, t.clone()));
+                        }
+                        let el = t0.elapsed() / iters;
+                        (el, out.unwrap().data[0])
+                    })
+                })
+                .collect();
+            let results: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+            results[0].0
+        };
+        println!(
+            "ring all-reduce 1MiB x{n} ranks                     med {:>10}",
+            energonai::util::fmt_duration(stats)
+        );
+    }
+}
+
+fn bench_drce_pack() {
+    let maps = drce::make_maps(&[32; 4], 64, 128).unwrap();
+    let mut rng = Rng::new(3);
+    let x = Tensor::randn(&[256, 256], 0.5, &mut rng);
+    run_print("drce pack 256x256 (valid=pad/2)", 10, 200, || {
+        std::hint::black_box(drce::pack(&x, &maps));
+    });
+    let packed = drce::pack(&x, &maps);
+    run_print("drce unpack 128->256 rows", 10, 200, || {
+        std::hint::black_box(drce::unpack(&packed, &maps));
+    });
+}
+
+fn bench_batcher() {
+    run_print("batcher form 64 reqs into buckets", 5, 100, || {
+        let mut b = Batcher::new(vec![(1, 16), (2, 16), (4, 32)], 4, Duration::ZERO);
+        for i in 0..64 {
+            b.push(Request::new(i, vec![1; (i as usize % 14) + 1])).unwrap();
+        }
+        std::hint::black_box(b.flush());
+    });
+}
+
+fn bench_manifest() {
+    let dir = find_artifacts().unwrap();
+    run_print("manifest.json parse (full plan)", 2, 50, || {
+        std::hint::black_box(Manifest::load(&dir).unwrap());
+    });
+}
+
+fn main() {
+    println!("hot-path microbenchmarks (see EXPERIMENTS.md §Perf):");
+    bench_bare_layer();
+    bench_engine_roundtrip();
+    bench_allreduce();
+    bench_drce_pack();
+    bench_batcher();
+    bench_manifest();
+}

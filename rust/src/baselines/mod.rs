@@ -1,0 +1,50 @@
+//! Baseline systems the paper compares against, as launchable configs.
+//!
+//! Both baselines are *modes* of the same machinery rather than forks:
+//!
+//! * **FasterTransformer** (§5.4, §5.5): blocking `nccl_send/recv`
+//!   pipeline hand-offs — [`crate::comm::channel::Mode::Blocking`] on the
+//!   real engine, [`crate::sim::System::FasterTransformer`] in the
+//!   paper-scale simulators (which also model FT's fused-MHA kernel and
+//!   warm-up GEMM algorithm selection as a device-efficiency edge).
+//! * **BMInf** (§5.6): parameters offloaded to host memory and fetched
+//!   *synchronously* on the compute path —
+//!   [`crate::memory::pool::PoolConfig::bminf`].
+
+use crate::coordinator::engine::{LaunchConfig, MemoryMode};
+
+/// FasterTransformer-style launch: blocking stage-to-stage communication.
+/// (The kernel-level fusion edge only exists on real GPUs; on this testbed
+/// the sims carry it — see `sim::System::device`.)
+pub fn fastertransformer(preset: &str, tp: usize, pp: usize) -> LaunchConfig {
+    LaunchConfig::preset(preset)
+        .with_parallel(tp, pp)
+        .with_blocking_comms(true)
+}
+
+/// BMInf-style launch: `n_local` layers resident, the rest offloaded to
+/// host memory with synchronous fetches.
+pub fn bminf(preset: &str, n_local: usize) -> LaunchConfig {
+    LaunchConfig::preset(preset).with_memory(MemoryMode::Bminf { n_local })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ft_config_blocks() {
+        let c = fastertransformer("tiny", 1, 2);
+        assert!(c.engine.blocking_comms);
+        assert_eq!(c.parallel.pp, 2);
+    }
+
+    #[test]
+    fn bminf_config_offloads() {
+        let c = bminf("tiny", 2);
+        match c.memory {
+            MemoryMode::Bminf { n_local } => assert_eq!(n_local, 2),
+            _ => panic!("expected Bminf memory mode"),
+        }
+    }
+}

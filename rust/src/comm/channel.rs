@@ -1,0 +1,194 @@
+//! In-process point-to-point channels between workers — the substrate the
+//! paper's two communication styles are built on:
+//!
+//! * **Blocking** (rendezvous): `send` does not return until the peer has
+//!   arrived at the matching `recv`. This is FasterTransformer's
+//!   `nccl_send`/`nccl_recv` behaviour that §5.4 blames for pipeline
+//!   bubbles — the sender's compute stream stalls on a late consumer.
+//! * **Non-blocking** (buffered): `send` enqueues and returns immediately;
+//!   consecutive devices decouple, which is what NBPP needs (§4.2).
+//!
+//! One `CommWorld` is created per launch; each worker thread takes its
+//! [`Endpoint`]. Endpoints hold a dedicated channel per peer so `recv(from)`
+//! is selective (no cross-peer head-of-line blocking).
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError, SyncSender, TrySendError};
+use std::time::Duration;
+
+/// Channel semantics for the world.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Mode {
+    /// Rendezvous: capacity-0 channels (FasterTransformer baseline).
+    Blocking,
+    /// Buffered: `send` returns immediately up to the buffer cap (NBPP).
+    NonBlocking,
+}
+
+/// Buffered capacity for non-blocking channels: deep enough that a pipeline
+/// stage never stalls on send in practice, small enough to bound memory.
+const NONBLOCKING_CAP: usize = 64;
+
+/// One worker's view of the world: senders to every peer, a receiver from
+/// every peer.
+pub struct Endpoint<T> {
+    pub rank: usize,
+    pub world: usize,
+    senders: Vec<Option<SyncSender<T>>>,
+    receivers: Vec<Option<Receiver<T>>>,
+}
+
+/// Builder for a fully-connected world of `n` endpoints.
+pub struct CommWorld;
+
+impl CommWorld {
+    pub fn new<T: Send>(n: usize, mode: Mode) -> Vec<Endpoint<T>> {
+        let cap = match mode {
+            Mode::Blocking => 0,
+            Mode::NonBlocking => NONBLOCKING_CAP,
+        };
+        // channels[i][j] carries i -> j
+        let mut senders: Vec<Vec<Option<SyncSender<T>>>> = (0..n).map(|_| (0..n).map(|_| None).collect()).collect();
+        let mut receivers: Vec<Vec<Option<Receiver<T>>>> = (0..n).map(|_| (0..n).map(|_| None).collect()).collect();
+        for i in 0..n {
+            for j in 0..n {
+                if i == j {
+                    continue;
+                }
+                let (tx, rx) = std::sync::mpsc::sync_channel(cap);
+                senders[i][j] = Some(tx);
+                receivers[j][i] = Some(rx);
+            }
+        }
+        senders
+            .into_iter()
+            .zip(receivers)
+            .enumerate()
+            .map(|(rank, (s, r))| Endpoint { rank, world: n, senders: s, receivers: r })
+            .collect()
+    }
+}
+
+impl<T: Send> Endpoint<T> {
+    /// Send to `peer`. Blocks per the world's [`Mode`] (rendezvous vs
+    /// buffered). Panics if the peer endpoint was dropped — that is a
+    /// worker crash, which the engine surfaces as a failed batch.
+    pub fn send(&self, peer: usize, msg: T) {
+        self.senders[peer]
+            .as_ref()
+            .expect("no self-send")
+            .send(msg)
+            .unwrap_or_else(|_| panic!("worker {peer} hung up (send from {})", self.rank));
+    }
+
+    /// Non-blocking best-effort send. Returns the message back on a full
+    /// buffer (backpressure signal for the batcher).
+    pub fn try_send(&self, peer: usize, msg: T) -> Result<(), T> {
+        match self.senders[peer].as_ref().expect("no self-send").try_send(msg) {
+            Ok(()) => Ok(()),
+            Err(TrySendError::Full(m)) | Err(TrySendError::Disconnected(m)) => Err(m),
+        }
+    }
+
+    /// Receive from a specific peer, blocking.
+    pub fn recv(&self, peer: usize) -> T {
+        self.receivers[peer]
+            .as_ref()
+            .expect("no self-recv")
+            .recv()
+            .unwrap_or_else(|_| panic!("worker {peer} hung up (recv at {})", self.rank))
+    }
+
+    /// Receive with a timeout — deadlock detection in tests and the engine
+    /// watchdog.
+    pub fn recv_timeout(&self, peer: usize, timeout: Duration) -> Result<T, RecvTimeoutError> {
+        self.receivers[peer].as_ref().expect("no self-recv").recv_timeout(timeout)
+    }
+
+    pub fn try_recv(&self, peer: usize) -> Option<T> {
+        self.receivers[peer].as_ref().and_then(|r| r.try_recv().ok())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::Arc;
+    use std::thread;
+    use std::time::Duration;
+
+    #[test]
+    fn pingpong_nonblocking() {
+        let mut eps = CommWorld::new::<u64>(2, Mode::NonBlocking);
+        let e1 = eps.pop().unwrap();
+        let e0 = eps.pop().unwrap();
+        let h = thread::spawn(move || {
+            let v = e1.recv(0);
+            e1.send(0, v + 1);
+        });
+        e0.send(1, 41);
+        assert_eq!(e0.recv(1), 42);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn nonblocking_send_returns_before_recv() {
+        let mut eps = CommWorld::new::<u64>(2, Mode::NonBlocking);
+        let _e1 = eps.pop().unwrap();
+        let e0 = eps.pop().unwrap();
+        // no receiver running: buffered send must not block
+        e0.send(1, 7);
+        e0.send(1, 8);
+    }
+
+    #[test]
+    fn blocking_send_rendezvous() {
+        let mut eps = CommWorld::new::<u64>(2, Mode::Blocking);
+        let e1 = eps.pop().unwrap();
+        let e0 = eps.pop().unwrap();
+        let sent = Arc::new(AtomicBool::new(false));
+        let sent2 = sent.clone();
+        let h = thread::spawn(move || {
+            e0.send(1, 1); // must block until e1 recvs
+            sent2.store(true, Ordering::SeqCst);
+        });
+        thread::sleep(Duration::from_millis(50));
+        assert!(!sent.load(Ordering::SeqCst), "blocking send returned early");
+        assert_eq!(e1.recv(0), 1);
+        h.join().unwrap();
+        assert!(sent.load(Ordering::SeqCst));
+    }
+
+    #[test]
+    fn selective_recv_by_peer() {
+        let mut eps = CommWorld::new::<&'static str>(3, Mode::NonBlocking);
+        let e2 = eps.pop().unwrap();
+        let e1 = eps.pop().unwrap();
+        let e0 = eps.pop().unwrap();
+        e1.send(2, "from1");
+        e0.send(2, "from0");
+        // selective: ask for peer 1 first even though 0 arrived too
+        assert_eq!(e2.recv(1), "from1");
+        assert_eq!(e2.recv(0), "from0");
+    }
+
+    #[test]
+    fn try_recv_and_timeout() {
+        let mut eps = CommWorld::new::<u64>(2, Mode::NonBlocking);
+        let e1 = eps.pop().unwrap();
+        let e0 = eps.pop().unwrap();
+        assert!(e1.try_recv(0).is_none());
+        assert!(e1.recv_timeout(0, Duration::from_millis(10)).is_err());
+        e0.send(1, 5);
+        assert_eq!(e1.try_recv(0), Some(5));
+    }
+
+    #[test]
+    fn try_send_backpressure() {
+        let mut eps = CommWorld::new::<u64>(2, Mode::Blocking);
+        let _e1 = eps.pop().unwrap();
+        let e0 = eps.pop().unwrap();
+        // rendezvous channel with no receiver: try_send must bounce
+        assert!(e0.try_send(1, 9).is_err());
+    }
+}

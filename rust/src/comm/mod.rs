@@ -1,0 +1,21 @@
+//! Communication substrate: the "NCCL + NVLink" of this reproduction.
+//!
+//! Two halves:
+//! * [`channel`] — real in-process message passing between worker threads,
+//!   with both **blocking** (rendezvous, FasterTransformer's
+//!   `nccl_send`/`nccl_recv` style, §5.4) and **non-blocking** (buffered,
+//!   EnergonAI NBPP style) semantics. Correctness-bearing: actual tensors
+//!   move through these channels.
+//! * [`topology`] — the analytic link model (NVLink 600 GB/s, PCIe, host)
+//!   used by the perf model and the discrete-event simulator to cost
+//!   paper-scale transfers.
+//! * [`collective`] — ring all-reduce / broadcast built on [`channel`],
+//!   used by the TP orchestrator (two all-reduces per layer, §4.1.3).
+
+pub mod channel;
+pub mod collective;
+pub mod topology;
+
+pub use channel::{CommWorld, Endpoint};
+pub use collective::{broadcast, ring_allreduce};
+pub use topology::{Interconnect, Link, Topology};

@@ -1,0 +1,176 @@
+//! Interconnect topology + analytic transfer-cost model.
+//!
+//! Mirrors the paper's two testbeds (§5.1): a fully NVLink-connected
+//! 8×A100 server and a partially connected one where only GPU pairs share
+//! NVLink and everything else crosses PCIe. Host memory hangs off a
+//! PCIe×CPU link (the BMInf offload path, §5.6).
+
+/// A point-to-point link: bandwidth + fixed per-message latency.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Link {
+    pub bandwidth_gbps: f64, // GB/s (10^9 bytes)
+    pub latency_us: f64,     // fixed overhead per transfer
+}
+
+impl Link {
+    pub const NVLINK: Link = Link { bandwidth_gbps: 600.0, latency_us: 5.0 };
+    pub const PCIE4: Link = Link { bandwidth_gbps: 32.0, latency_us: 10.0 };
+    /// CPU<->GPU effective copy bandwidth (pinned-memory PCIe, §4.4).
+    pub const HOST: Link = Link { bandwidth_gbps: 25.0, latency_us: 15.0 };
+
+    /// Seconds to move `bytes` across this link.
+    pub fn transfer_time(&self, bytes: u64) -> f64 {
+        self.latency_us * 1e-6 + bytes as f64 / (self.bandwidth_gbps * 1e9)
+    }
+}
+
+/// Inter-device wiring of one node.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Interconnect {
+    /// All pairs via NVSwitch (paper's first server).
+    FullNvlink,
+    /// GPUs 2k/2k+1 share NVLink; other pairs cross PCIe (second server).
+    PairedNvlink,
+    /// Everything over PCIe (worst case, used in ablations).
+    Pcie,
+}
+
+/// A node: `n_devices` accelerators + host memory.
+#[derive(Clone, Debug)]
+pub struct Topology {
+    pub n_devices: usize,
+    pub interconnect: Interconnect,
+    pub host_link: Link,
+}
+
+impl Topology {
+    pub fn new(n_devices: usize, interconnect: Interconnect) -> Topology {
+        Topology { n_devices, interconnect, host_link: Link::HOST }
+    }
+
+    /// Paper server 1: 8×A100 fully NVLink connected.
+    pub fn full_nvlink(n: usize) -> Topology {
+        Topology::new(n, Interconnect::FullNvlink)
+    }
+
+    /// Paper server 2: 8×A100, every two GPUs share NVLink.
+    pub fn paired_nvlink(n: usize) -> Topology {
+        Topology::new(n, Interconnect::PairedNvlink)
+    }
+
+    /// The device↔device link.
+    pub fn link(&self, a: usize, b: usize) -> Link {
+        assert!(a < self.n_devices && b < self.n_devices && a != b);
+        match self.interconnect {
+            Interconnect::FullNvlink => Link::NVLINK,
+            Interconnect::PairedNvlink => {
+                if a / 2 == b / 2 {
+                    Link::NVLINK
+                } else {
+                    Link::PCIE4
+                }
+            }
+            Interconnect::Pcie => Link::PCIE4,
+        }
+    }
+
+    /// Slowest link among a group — the ring all-reduce bottleneck.
+    pub fn bottleneck(&self, ranks: &[usize]) -> Link {
+        let mut worst = Link::NVLINK;
+        for i in 0..ranks.len() {
+            let j = (i + 1) % ranks.len();
+            if ranks[i] == ranks[j] {
+                continue;
+            }
+            let l = self.link(ranks[i], ranks[j]);
+            if l.bandwidth_gbps < worst.bandwidth_gbps {
+                worst = l;
+            }
+        }
+        worst
+    }
+
+    /// Point-to-point transfer time in seconds.
+    pub fn p2p_time(&self, a: usize, b: usize, bytes: u64) -> f64 {
+        self.link(a, b).transfer_time(bytes)
+    }
+
+    /// Host↔device copy time in seconds (PMEP's CPU fallback, BMInf path).
+    pub fn host_time(&self, bytes: u64) -> f64 {
+        self.host_link.transfer_time(bytes)
+    }
+
+    /// Ring all-reduce over `ranks`: 2(n-1)/n · bytes over the bottleneck
+    /// link plus 2(n-1) latency hops (standard ring cost model).
+    pub fn allreduce_time(&self, ranks: &[usize], bytes: u64) -> f64 {
+        let n = ranks.len();
+        if n <= 1 {
+            return 0.0;
+        }
+        let link = self.bottleneck(ranks);
+        let steps = 2 * (n - 1);
+        let volume = 2.0 * (n - 1) as f64 / n as f64 * bytes as f64;
+        steps as f64 * link.latency_us * 1e-6 + volume / (link.bandwidth_gbps * 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_nvlink_is_uniform() {
+        let t = Topology::full_nvlink(8);
+        for a in 0..8 {
+            for b in 0..8 {
+                if a != b {
+                    assert_eq!(t.link(a, b), Link::NVLINK);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn paired_topology_matches_paper_server2() {
+        let t = Topology::paired_nvlink(8);
+        assert_eq!(t.link(0, 1), Link::NVLINK);
+        assert_eq!(t.link(2, 3), Link::NVLINK);
+        assert_eq!(t.link(1, 2), Link::PCIE4);
+        assert_eq!(t.link(0, 7), Link::PCIE4);
+    }
+
+    #[test]
+    fn transfer_time_scales_with_bytes() {
+        let l = Link::NVLINK;
+        let t1 = l.transfer_time(600_000_000); // 0.6 GB -> ~1 ms + lat
+        assert!((t1 - (5e-6 + 0.001)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn gpt3_layer_offload_matches_paper_estimate() {
+        // §4.4: one GPT3-175B layer = 3.375 GB fp16 over NVLink ≈ 5.63 ms
+        let bytes = (3.375 * 1024.0 * 1024.0 * 1024.0) as u64;
+        let t = Link::NVLINK.transfer_time(bytes);
+        assert!((t - 5.63e-3).abs() < 0.5e-3, "t={t}");
+    }
+
+    #[test]
+    fn allreduce_cost_monotonic_in_group() {
+        let t = Topology::full_nvlink(8);
+        let b = 64 * 1024 * 1024;
+        let t2 = t.allreduce_time(&[0, 1], b);
+        let t8 = t.allreduce_time(&[0, 1, 2, 3, 4, 5, 6, 7], b);
+        assert!(t8 > t2);
+        assert_eq!(t.allreduce_time(&[0], b), 0.0);
+    }
+
+    #[test]
+    fn paired_allreduce_bottlenecked_by_pcie() {
+        let t = Topology::paired_nvlink(4);
+        let b = 64 * 1024 * 1024;
+        let within_pair = Topology::full_nvlink(4).allreduce_time(&[0, 1], b);
+        let across = t.allreduce_time(&[0, 1, 2, 3], b);
+        // crossing PCIe must dominate: >10x slower per §5.5's observation
+        assert!(across > 5.0 * within_pair, "{across} vs {within_pair}");
+    }
+}

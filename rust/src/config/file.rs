@@ -1,0 +1,160 @@
+//! Launcher config files: `energonai serve --config cluster.toml` — the
+//! "real config system" a deployable framework needs. CLI flags override
+//! file values; the file covers every launch knob:
+//!
+//! ```toml
+//! preset = "small"
+//! seed = 42
+//! warmup = true
+//!
+//! [parallel]
+//! tp = 2
+//! pp = 2
+//!
+//! [engine]
+//! drce = true
+//! blocking_comms = false
+//! consistency_queue = true
+//! pool_threads = 4
+//! max_batch = 32
+//! batch_timeout_us = 2000
+//!
+//! [model]
+//! n_layers = 24          # customized layer count (paper §5.5)
+//!
+//! [memory]
+//! mode = "pmep"          # resident | pmep | bminf
+//! n_local = 10
+//! lookahead = 2
+//! time_scale = 1.0
+//! ```
+
+use crate::comm::topology::Link;
+use crate::coordinator::engine::{LaunchConfig, MemoryMode};
+use crate::memory::pool::PoolConfig;
+use crate::util::toml::TomlDoc;
+
+/// Build a [`LaunchConfig`] from a TOML document.
+pub fn launch_from_doc(doc: &TomlDoc) -> anyhow::Result<LaunchConfig> {
+    let preset = doc.str_or("preset", "tiny").to_string();
+    let mut launch = LaunchConfig::preset(&preset);
+    launch.seed = doc.usize_or("seed", 42) as u64;
+    launch.warmup = doc.bool_or("warmup", true);
+    launch = launch.with_parallel(doc.usize_or("parallel.tp", 1), doc.usize_or("parallel.pp", 1));
+
+    launch.engine.drce = doc.bool_or("engine.drce", false);
+    launch.engine.blocking_comms = doc.bool_or("engine.blocking_comms", false);
+    launch.engine.consistency_queue = doc.bool_or("engine.consistency_queue", true);
+    launch.engine.pool_threads = doc.usize_or("engine.pool_threads", 4);
+    launch.engine.max_batch = doc.usize_or("engine.max_batch", 32);
+    launch.engine.batch_timeout_us = doc.usize_or("engine.batch_timeout_us", 2000) as u64;
+
+    if let Some(n) = doc.get("model.n_layers").and_then(|v| v.as_usize()) {
+        launch = launch.with_layers(n);
+    }
+
+    let mode = doc.str_or("memory.mode", "resident");
+    launch.memory = match mode {
+        "resident" => MemoryMode::Resident,
+        "pmep" => {
+            let mut pool = PoolConfig::pmep();
+            pool.lookahead = doc.usize_or("memory.lookahead", pool.lookahead);
+            pool.time_scale = doc.f64_or("memory.time_scale", pool.time_scale);
+            if doc.str_or("memory.link", "nvlink") == "host" {
+                pool.link = Link::HOST;
+            }
+            MemoryMode::Pmep { n_local: doc.usize_or("memory.n_local", usize::MAX), pool }
+        }
+        "bminf" => MemoryMode::Bminf { n_local: doc.usize_or("memory.n_local", usize::MAX) },
+        other => anyhow::bail!("memory.mode must be resident|pmep|bminf, got {other:?}"),
+    };
+
+    // catch typos: warn on unknown sections/keys
+    for key in doc.keys() {
+        let known = [
+            "preset", "seed", "warmup",
+            "parallel.tp", "parallel.pp",
+            "engine.drce", "engine.blocking_comms", "engine.consistency_queue",
+            "engine.pool_threads", "engine.max_batch", "engine.batch_timeout_us",
+            "model.n_layers",
+            "memory.mode", "memory.n_local", "memory.lookahead", "memory.time_scale", "memory.link",
+        ];
+        anyhow::ensure!(known.contains(&key), "unknown config key {key:?}");
+    }
+    Ok(launch)
+}
+
+/// Load a launch config from a TOML file.
+pub fn launch_from_file(path: impl AsRef<std::path::Path>) -> anyhow::Result<LaunchConfig> {
+    launch_from_doc(&TomlDoc::load(path)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_config_round_trip() {
+        let doc = TomlDoc::parse(
+            r#"
+preset = "small"
+seed = 9
+warmup = false
+
+[parallel]
+tp = 2
+pp = 2
+
+[engine]
+drce = true
+pool_threads = 8
+
+[model]
+n_layers = 24
+
+[memory]
+mode = "pmep"
+n_local = 10
+lookahead = 2
+"#,
+        )
+        .unwrap();
+        let l = launch_from_doc(&doc).unwrap();
+        assert_eq!(l.preset, "small");
+        assert_eq!(l.seed, 9);
+        assert!(!l.warmup);
+        assert_eq!((l.parallel.tp, l.parallel.pp), (2, 2));
+        assert!(l.engine.drce);
+        assert_eq!(l.engine.pool_threads, 8);
+        assert_eq!(l.n_layers, Some(24));
+        match l.memory {
+            MemoryMode::Pmep { n_local, pool } => {
+                assert_eq!(n_local, 10);
+                assert_eq!(pool.lookahead, 2);
+            }
+            _ => panic!("expected pmep"),
+        }
+    }
+
+    #[test]
+    fn defaults_when_empty() {
+        let l = launch_from_doc(&TomlDoc::parse("").unwrap()).unwrap();
+        assert_eq!(l.preset, "tiny");
+        assert_eq!(l.parallel.world_size(), 1);
+        assert!(matches!(l.memory, MemoryMode::Resident));
+        assert!(l.engine.consistency_queue);
+    }
+
+    #[test]
+    fn unknown_key_is_error() {
+        let doc = TomlDoc::parse("[engine]\ndrc = true\n").unwrap();
+        let err = launch_from_doc(&doc).unwrap_err().to_string();
+        assert!(err.contains("engine.drc"), "{err}");
+    }
+
+    #[test]
+    fn bad_memory_mode_is_error() {
+        let doc = TomlDoc::parse("[memory]\nmode = \"cloud\"\n").unwrap();
+        assert!(launch_from_doc(&doc).is_err());
+    }
+}

@@ -1,0 +1,250 @@
+//! Configuration: model geometry, parallel layout, engine tuning.
+//!
+//! Model presets mirror `python/compile/model.py::PRESETS` exactly — the
+//! manifest is cross-checked against these at load time. The GPT size table
+//! used by Fig. 2 and the paper-scale simulations lives here too.
+
+pub mod file;
+
+use std::fmt;
+
+/// GPT-style model geometry (mirrors the python `ModelConfig`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub hidden: usize,
+    pub n_heads: usize,
+    pub vocab: usize,
+    pub max_seq: usize,
+    pub n_layers: usize,
+    pub ffn_mult: usize,
+}
+
+impl ModelConfig {
+    pub fn new(name: &str, hidden: usize, n_heads: usize, vocab: usize, max_seq: usize, n_layers: usize) -> Self {
+        ModelConfig {
+            name: name.to_string(),
+            hidden,
+            n_heads,
+            vocab,
+            max_seq,
+            n_layers,
+            ffn_mult: 4,
+        }
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.hidden / self.n_heads
+    }
+
+    pub fn ffn(&self) -> usize {
+        self.hidden * self.ffn_mult
+    }
+
+    /// Parameters in one transformer layer (ln1+ln2, qkv, out-proj, fc1, fc2).
+    pub fn params_per_layer(&self) -> u64 {
+        let h = self.hidden as u64;
+        let f = self.ffn() as u64;
+        4 * h + (h * 3 * h + 3 * h) + (h * h + h) + (h * f + f) + (f * h + h)
+    }
+
+    /// Total parameters including embeddings and final layernorm.
+    pub fn total_params(&self) -> u64 {
+        let h = self.hidden as u64;
+        self.params_per_layer() * self.n_layers as u64
+            + (self.vocab as u64) * h        // wte (tied with the head)
+            + (self.max_seq as u64) * h      // wpe
+            + 2 * h                          // final layernorm
+    }
+
+    /// Bytes per layer at the given element width (paper uses FP16 => 2).
+    pub fn layer_bytes(&self, elem: u64) -> u64 {
+        self.params_per_layer() * elem
+    }
+
+    /// With n layers overridden — the paper customizes 12/20/24/30/40/48
+    /// layer GPT-3 variants for its experiments.
+    pub fn with_layers(&self, n_layers: usize) -> ModelConfig {
+        let mut c = self.clone();
+        c.n_layers = n_layers;
+        c.name = format!("{}-{}l", self.name, n_layers);
+        c
+    }
+
+    /// Scaled-down presets (real PJRT execution) — must match python.
+    pub fn preset(name: &str) -> Option<ModelConfig> {
+        Some(match name {
+            "tiny" => ModelConfig::new("tiny", 64, 2, 128, 32, 4),
+            "small" => ModelConfig::new("small", 256, 4, 512, 64, 8),
+            "base" => ModelConfig::new("base", 512, 8, 2048, 128, 12),
+            // Paper-scale: GPT-3 head config (96 heads × 128 dim), §5.1
+            "gpt3" => ModelConfig::new("gpt3", 12288, 96, 51200, 2048, 96),
+            _ => return None,
+        })
+    }
+
+    /// The GPT family used by Fig. 2 (sizes from the GPT-3 paper, Table 2.1).
+    pub fn gpt_family() -> Vec<ModelConfig> {
+        vec![
+            ModelConfig::new("gpt-125M", 768, 12, 51200, 2048, 12),
+            ModelConfig::new("gpt-350M", 1024, 16, 51200, 2048, 24),
+            ModelConfig::new("gpt-760M", 1536, 16, 51200, 2048, 24),
+            ModelConfig::new("gpt-1.3B", 2048, 24, 51200, 2048, 24),
+            ModelConfig::new("gpt-2.7B", 2560, 32, 51200, 2048, 32),
+            ModelConfig::new("gpt-6.7B", 4096, 32, 51200, 2048, 32),
+            ModelConfig::new("gpt-13B", 5120, 40, 51200, 2048, 40),
+            ModelConfig::new("gpt-66B", 9216, 72, 51200, 2048, 64),
+            ModelConfig::new("gpt-175B", 12288, 96, 51200, 2048, 96),
+        ]
+    }
+}
+
+impl fmt::Display for ModelConfig {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{} (h={}, heads={}, layers={}, {:.2}B params)",
+            self.name,
+            self.hidden,
+            self.n_heads,
+            self.n_layers,
+            self.total_params() as f64 / 1e9
+        )
+    }
+}
+
+/// How the model is spread over devices: `tp` workers per stage × `pp`
+/// stages (§4.1.3, §4.2). `tp * pp` devices total.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ParallelConfig {
+    pub tp: usize,
+    pub pp: usize,
+}
+
+impl ParallelConfig {
+    pub fn new(tp: usize, pp: usize) -> Self {
+        assert!(tp >= 1 && pp >= 1);
+        ParallelConfig { tp, pp }
+    }
+
+    pub fn serial() -> Self {
+        ParallelConfig { tp: 1, pp: 1 }
+    }
+
+    pub fn world_size(&self) -> usize {
+        self.tp * self.pp
+    }
+
+    /// Device id for (stage, tp_rank): stage-major like the paper's Fig. 5.
+    pub fn device_of(&self, stage: usize, tp_rank: usize) -> usize {
+        assert!(stage < self.pp && tp_rank < self.tp);
+        stage * self.tp + tp_rank
+    }
+
+    /// Contiguous layer range for a pipeline stage (embedding lives with
+    /// stage 0, logits with the last stage — the paper notes the resulting
+    /// slight imbalance in §5.4).
+    pub fn stage_layers(&self, stage: usize, n_layers: usize) -> std::ops::Range<usize> {
+        let base = n_layers / self.pp;
+        let rem = n_layers % self.pp;
+        let start = stage * base + stage.min(rem);
+        let len = base + usize::from(stage < rem);
+        start..start + len
+    }
+}
+
+/// Engine tuning knobs (§4.2): thread pool width, queueing, batching.
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    /// Engine-side thread pool size (concurrent in-flight batches). For
+    /// NBPP this bounds how many microbatches occupy pipeline stages.
+    pub pool_threads: usize,
+    /// Max requests the dynamic batcher packs into one batch.
+    pub max_batch: usize,
+    /// How long the batcher waits to fill a batch before dispatching.
+    pub batch_timeout_us: u64,
+    /// Use the distributed consistency queue (§4.2). Disabling it is the
+    /// ablation showing out-of-order hazards.
+    pub consistency_queue: bool,
+    /// Use DRCE packed execution (§4.3).
+    pub drce: bool,
+    /// Blocking collectives (FasterTransformer style) instead of NBPP.
+    pub blocking_comms: bool,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            pool_threads: 4,
+            max_batch: 32,
+            batch_timeout_us: 2_000,
+            consistency_queue: true,
+            drce: false,
+            blocking_comms: false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_match_python() {
+        let t = ModelConfig::preset("tiny").unwrap();
+        assert_eq!((t.hidden, t.n_heads, t.vocab, t.max_seq, t.n_layers), (64, 2, 128, 32, 4));
+        let s = ModelConfig::preset("small").unwrap();
+        assert_eq!((s.hidden, s.n_heads), (256, 4));
+        assert!(ModelConfig::preset("nope").is_none());
+    }
+
+    #[test]
+    fn gpt3_layer_params_match_paper() {
+        // §4.4: one GPT3-175B layer has ~1.812e9 params, 3.375 GB in fp16
+        let g = ModelConfig::preset("gpt3").unwrap();
+        let p = g.params_per_layer();
+        assert!((1.7e9..1.9e9).contains(&(p as f64)), "{p}");
+        let gb = g.layer_bytes(2) as f64 / (1024.0 * 1024.0 * 1024.0);
+        assert!((3.2..3.5).contains(&gb), "{gb}");
+    }
+
+    #[test]
+    fn gpt_family_sizes() {
+        let fam = ModelConfig::gpt_family();
+        let small = fam.iter().find(|c| c.name == "gpt-125M").unwrap();
+        let total = small.total_params() as f64;
+        assert!((1.0e8..2.0e8).contains(&total), "{total}");
+        let big = fam.iter().find(|c| c.name == "gpt-175B").unwrap();
+        let total = big.total_params() as f64;
+        assert!((1.6e11..1.85e11).contains(&total), "{total}");
+    }
+
+    #[test]
+    fn stage_layers_partition() {
+        let p = ParallelConfig::new(1, 4);
+        let ranges: Vec<_> = (0..4).map(|s| p.stage_layers(s, 12)).collect();
+        assert_eq!(ranges[0], 0..3);
+        assert_eq!(ranges[3], 9..12);
+        // uneven split: 10 layers on 4 stages -> 3,3,2,2
+        let lens: Vec<_> = (0..4).map(|s| p.stage_layers(s, 10).len()).collect();
+        assert_eq!(lens, vec![3, 3, 2, 2]);
+        // covers every layer exactly once
+        let mut covered = vec![false; 10];
+        for s in 0..4 {
+            for l in p.stage_layers(s, 10) {
+                assert!(!covered[l]);
+                covered[l] = true;
+            }
+        }
+        assert!(covered.iter().all(|&c| c));
+    }
+
+    #[test]
+    fn device_mapping_stage_major() {
+        let p = ParallelConfig::new(2, 2);
+        assert_eq!(p.world_size(), 4);
+        assert_eq!(p.device_of(0, 0), 0);
+        assert_eq!(p.device_of(0, 1), 1);
+        assert_eq!(p.device_of(1, 0), 2);
+    }
+}

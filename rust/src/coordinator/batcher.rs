@@ -1,0 +1,275 @@
+//! Dynamic batcher: the engine-side queue that turns a stream of
+//! variable-length requests into padded batches at the AOT shape points.
+//!
+//! The paper's engine keeps a "batch list" a thread pool fetches from
+//! (§4.2, Fig. 5); this module produces that list. Requests are packed
+//! greedily up to `max_batch` or until `batch_timeout` expires, then padded
+//! into the smallest compiled (batch, seq) bucket that fits — AOT shapes
+//! are static, so bucketing is the standard trick (DESIGN.md).
+
+use super::rpc::BatchInput;
+use crate::tensor::IntTensor;
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+/// One inference request: a token sequence.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    pub tokens: Vec<i32>,
+}
+
+impl Request {
+    pub fn new(id: u64, tokens: Vec<i32>) -> Request {
+        Request { id, tokens }
+    }
+
+    pub fn len(&self) -> usize {
+        self.tokens.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tokens.is_empty()
+    }
+}
+
+/// A formed batch: requests + the bucket it was padded into.
+#[derive(Clone, Debug)]
+pub struct FormedBatch {
+    pub requests: Vec<Request>,
+    pub bucket: (usize, usize), // (batch, seq)
+}
+
+impl FormedBatch {
+    /// Materialize the padded id tensor + valid-length metadata.
+    pub fn to_input(&self) -> BatchInput {
+        let (b, s) = self.bucket;
+        let mut ids = vec![0i32; b * s];
+        let mut valid = Vec::with_capacity(b);
+        for (i, r) in self.requests.iter().enumerate() {
+            ids[i * s..i * s + r.len()].copy_from_slice(&r.tokens);
+            valid.push(r.len());
+        }
+        // bucket rows beyond the real requests are zero-length pads
+        valid.resize(b, 0);
+        // executables mask keys at valid_len, but a 0-length row would
+        // produce a fully-masked softmax; clamp to 1 over the zero token
+        for v in valid.iter_mut() {
+            if *v == 0 {
+                *v = 1;
+            }
+        }
+        BatchInput {
+            ids: IntTensor::new(&[b, s], ids),
+            valid_lens: valid,
+            batch: b,
+            seq: s,
+        }
+    }
+}
+
+/// Greedy dynamic batcher over a fixed set of compiled shape points.
+pub struct Batcher {
+    /// Available (batch, seq) buckets, sorted.
+    buckets: Vec<(usize, usize)>,
+    max_batch: usize,
+    timeout: Duration,
+    queue: VecDeque<(Request, Instant)>,
+}
+
+impl Batcher {
+    pub fn new(mut buckets: Vec<(usize, usize)>, max_batch: usize, timeout: Duration) -> Batcher {
+        assert!(!buckets.is_empty(), "no AOT shape points available");
+        buckets.sort();
+        Batcher { buckets, max_batch, timeout, queue: VecDeque::new() }
+    }
+
+    pub fn max_seq(&self) -> usize {
+        self.buckets.iter().map(|&(_, s)| s).max().unwrap()
+    }
+
+    pub fn push(&mut self, r: Request) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            r.len() <= self.max_seq(),
+            "request {} length {} exceeds longest compiled bucket {}",
+            r.id,
+            r.len(),
+            self.max_seq()
+        );
+        anyhow::ensure!(!r.is_empty(), "empty request {}", r.id);
+        self.queue.push_back((r, Instant::now()));
+        Ok(())
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Smallest bucket fitting (n requests, max_len).
+    fn pick_bucket(&self, n: usize, max_len: usize) -> Option<(usize, usize)> {
+        self.buckets
+            .iter()
+            .copied()
+            .filter(|&(b, s)| b >= n && s >= max_len)
+            .min_by_key(|&(b, s)| b * s)
+    }
+
+    /// Largest request count any bucket supports.
+    fn max_bucket_batch(&self) -> usize {
+        self.buckets.iter().map(|&(b, _)| b).max().unwrap()
+    }
+
+    /// Form the next batch if the policy says go: either a full batch is
+    /// available or the oldest request has waited past the timeout.
+    pub fn form(&mut self, now: Instant) -> Option<FormedBatch> {
+        if self.queue.is_empty() {
+            return None;
+        }
+        let cap = self.max_batch.min(self.max_bucket_batch());
+        let oldest_expired = now.duration_since(self.queue[0].1) >= self.timeout;
+        if self.queue.len() < cap && !oldest_expired {
+            return None;
+        }
+        // take up to cap requests, but never exceed what some bucket fits
+        let take = self.queue.len().min(cap);
+        let mut reqs: Vec<Request> = Vec::with_capacity(take);
+        let mut max_len = 0;
+        for _ in 0..take {
+            let (r, _) = self.queue.pop_front().unwrap();
+            max_len = max_len.max(r.len());
+            reqs.push(r);
+        }
+        // If no bucket covers (take, max_len), shed the longest requests
+        // back to the queue until one does. max_seq is checked on push, so
+        // shrinking the count always converges to a feasible bucket.
+        loop {
+            if let Some(bucket) = self.pick_bucket(reqs.len(), max_len) {
+                return Some(FormedBatch { requests: reqs, bucket });
+            }
+            // requeue the last request (preserving arrival order is
+            // sacrificed for simplicity; the consistency queue downstream
+            // doesn't care about request order, only command order)
+            let r = reqs.pop().expect("bucket must fit a single request");
+            self.queue.push_front((r, now));
+            max_len = reqs.iter().map(Request::len).max().unwrap_or(0);
+        }
+    }
+
+    /// Drain everything regardless of timeout (shutdown path).
+    pub fn flush(&mut self) -> Vec<FormedBatch> {
+        let mut out = Vec::new();
+        while !self.queue.is_empty() {
+            // force timeout semantics
+            let long_ago = Instant::now() + self.timeout + Duration::from_secs(1);
+            if let Some(b) = self.form(long_ago) {
+                out.push(b);
+            } else {
+                break;
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn batcher() -> Batcher {
+        Batcher::new(
+            vec![(1, 16), (2, 16), (4, 32)],
+            4,
+            Duration::from_millis(10),
+        )
+    }
+
+    fn req(id: u64, len: usize) -> Request {
+        Request::new(id, vec![1; len])
+    }
+
+    #[test]
+    fn full_batch_dispatches_immediately() {
+        let mut b = batcher();
+        for i in 0..4 {
+            b.push(req(i, 8)).unwrap();
+        }
+        let fb = b.form(Instant::now()).expect("full batch should form");
+        assert_eq!(fb.requests.len(), 4);
+        assert_eq!(fb.bucket, (4, 32));
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn partial_batch_waits_for_timeout() {
+        let mut b = batcher();
+        b.push(req(0, 8)).unwrap();
+        assert!(b.form(Instant::now()).is_none());
+        let later = Instant::now() + Duration::from_millis(20);
+        let fb = b.form(later).expect("timeout should dispatch");
+        assert_eq!(fb.requests.len(), 1);
+        assert_eq!(fb.bucket, (1, 16));
+    }
+
+    #[test]
+    fn bucket_is_smallest_fitting() {
+        let mut b = batcher();
+        b.push(req(0, 4)).unwrap();
+        b.push(req(1, 12)).unwrap();
+        let later = Instant::now() + Duration::from_millis(20);
+        let fb = b.form(later).unwrap();
+        assert_eq!(fb.bucket, (2, 16));
+    }
+
+    #[test]
+    fn long_requests_force_big_bucket() {
+        let mut b = batcher();
+        b.push(req(0, 30)).unwrap();
+        let later = Instant::now() + Duration::from_millis(20);
+        let fb = b.form(later).unwrap();
+        assert_eq!(fb.bucket, (4, 32));
+    }
+
+    #[test]
+    fn oversized_request_rejected() {
+        let mut b = batcher();
+        assert!(b.push(req(0, 100)).is_err());
+        assert!(b.push(Request::new(1, vec![])).is_err());
+    }
+
+    #[test]
+    fn infeasible_combo_sheds_to_queue() {
+        // 2 requests, one long: (2,16) doesn't fit len 30, (4,32) does
+        let mut b = batcher();
+        b.push(req(0, 30)).unwrap();
+        b.push(req(1, 30)).unwrap();
+        b.push(req(2, 30)).unwrap();
+        b.push(req(3, 30)).unwrap();
+        b.push(req(4, 30)).unwrap();
+        let fb = b.form(Instant::now()).unwrap();
+        assert_eq!(fb.bucket, (4, 32));
+        assert_eq!(fb.requests.len(), 4);
+        assert_eq!(b.pending(), 1);
+    }
+
+    #[test]
+    fn to_input_pads_and_clamps() {
+        let fb = FormedBatch { requests: vec![req(0, 3)], bucket: (2, 16) };
+        let input = fb.to_input();
+        assert_eq!(input.ids.shape, vec![2, 16]);
+        assert_eq!(input.valid_lens, vec![3, 1]); // empty row clamped to 1
+        assert_eq!(&input.ids.data[0..3], &[1, 1, 1]);
+        assert_eq!(input.ids.data[3], 0);
+    }
+
+    #[test]
+    fn flush_drains_everything() {
+        let mut b = batcher();
+        for i in 0..6 {
+            b.push(req(i, 8)).unwrap();
+        }
+        let batches = b.flush();
+        let total: usize = batches.iter().map(|fb| fb.requests.len()).sum();
+        assert_eq!(total, 6);
+        assert_eq!(b.pending(), 0);
+    }
+}

@@ -1,0 +1,584 @@
+//! The centralized engine (§4.1.2, §4.2): runtime initialization, the
+//! non-blocking task launch, the batch-list dispatcher pool, and the
+//! result collector. Public usage mirrors the paper's Fig. 9:
+//!
+//! ```no_run
+//! use energonai::coordinator::engine::{Engine, LaunchConfig};
+//! use energonai::coordinator::batcher::Request;
+//! let engine = Engine::launch(LaunchConfig::preset("tiny")).unwrap();
+//! let rref = engine.infer_batch(vec![Request::new(0, vec![1, 2, 3])]).unwrap(); // non-blocking
+//! let output = rref.to_here().unwrap();
+//! engine.shutdown();
+//! ```
+
+use super::batcher::{Batcher, FormedBatch, Request};
+use super::consistency::TicketCounter;
+use super::rpc::{CommandBus, RRef};
+use super::worker::{ActMsg, Reply, Worker, WorkerCtx};
+use crate::comm::channel::{CommWorld, Mode};
+use crate::comm::collective::ChunkMsg;
+use crate::config::{EngineConfig, ModelConfig, ParallelConfig};
+use crate::memory::pool::{PoolConfig, PooledProvider};
+use crate::memory::{LayerProvider, ResidentProvider};
+use crate::metrics::Recorder;
+use crate::model::{shard_layer, ModelWeights};
+use crate::runtime::{Device, Manifest};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Where layer weights live on each worker (Fig. 13 scenarios).
+#[derive(Clone, Debug)]
+pub enum MemoryMode {
+    /// Everything resident (the default).
+    Resident,
+    /// PMEP: keep `n_local` layers resident per worker, pool the rest in
+    /// peer memory with prefetch (§4.4).
+    Pmep { n_local: usize, pool: PoolConfig },
+    /// BMInf-style synchronous CPU offload baseline (§5.6).
+    Bminf { n_local: usize },
+}
+
+/// Everything `Engine::launch` needs.
+#[derive(Clone, Debug)]
+pub struct LaunchConfig {
+    pub preset: String,
+    pub parallel: ParallelConfig,
+    pub engine: EngineConfig,
+    pub memory: MemoryMode,
+    pub seed: u64,
+    /// Override layer count (the paper's customized 12/24/48-layer GPT-3s).
+    pub n_layers: Option<usize>,
+    /// Pre-compile all variants at launch (keeps latency measurements
+    /// clean; off by default for fast test startup).
+    pub warmup: bool,
+}
+
+impl LaunchConfig {
+    pub fn preset(name: &str) -> LaunchConfig {
+        LaunchConfig {
+            preset: name.to_string(),
+            parallel: ParallelConfig::serial(),
+            engine: EngineConfig::default(),
+            memory: MemoryMode::Resident,
+            seed: 42,
+            n_layers: None,
+            warmup: false,
+        }
+    }
+
+    pub fn with_parallel(mut self, tp: usize, pp: usize) -> Self {
+        self.parallel = ParallelConfig::new(tp, pp);
+        self
+    }
+
+    pub fn with_drce(mut self, on: bool) -> Self {
+        self.engine.drce = on;
+        self
+    }
+
+    pub fn with_blocking_comms(mut self, on: bool) -> Self {
+        self.engine.blocking_comms = on;
+        self
+    }
+
+    pub fn with_consistency(mut self, on: bool) -> Self {
+        self.engine.consistency_queue = on;
+        self
+    }
+
+    pub fn with_layers(mut self, n: usize) -> Self {
+        self.n_layers = Some(n);
+        self
+    }
+
+    pub fn with_memory(mut self, m: MemoryMode) -> Self {
+        self.memory = m;
+        self
+    }
+
+    pub fn with_warmup(mut self, on: bool) -> Self {
+        self.warmup = on;
+        self
+    }
+}
+
+/// Per-request future (single-token greedy result), fulfilled when the
+/// containing batch completes.
+#[derive(Clone)]
+pub struct TokenRef {
+    inner: Arc<(Mutex<Option<anyhow::Result<i32>>>, Condvar)>,
+}
+
+impl TokenRef {
+    fn new() -> TokenRef {
+        TokenRef { inner: Arc::new((Mutex::new(None), Condvar::new())) }
+    }
+
+    fn fulfil(&self, v: anyhow::Result<i32>) {
+        let (m, cv) = &*self.inner;
+        *m.lock().unwrap() = Some(v);
+        cv.notify_all();
+    }
+
+    pub fn to_here(&self) -> anyhow::Result<i32> {
+        let (m, cv) = &*self.inner;
+        let mut g = m.lock().unwrap();
+        loop {
+            if let Some(v) = g.take() {
+                return v;
+            }
+            g = cv.wait(g).unwrap();
+        }
+    }
+}
+
+/// Bookkeeping for one in-flight batch.
+struct Pending {
+    rref: RRef,
+    /// Real request count (bucket rows can exceed it due to padding).
+    n_requests: usize,
+    /// Per-request futures (batcher path only), in batch row order.
+    token_refs: Vec<TokenRef>,
+}
+
+struct Shared {
+    bus: CommandBus,
+    tickets: TicketCounter,
+    pending: Mutex<HashMap<u64, Pending>>,
+    /// submit()'s per-request futures awaiting batch formation.
+    req_futures: Mutex<HashMap<u64, TokenRef>>,
+    metrics: Mutex<Recorder>,
+    stopping: AtomicBool,
+}
+
+impl Shared {
+    /// The non-blocking launch (§4.2): take a ticket, register the rref,
+    /// publish to every worker, return immediately.
+    fn publish(&self, fb: &FormedBatch, token_refs: Vec<TokenRef>) -> RRef {
+        let input = std::sync::Arc::new(fb.to_input());
+        let uid = self.tickets.issue();
+        let rref = RRef::new(uid);
+        self.pending.lock().unwrap().insert(
+            uid,
+            Pending { rref: rref.clone(), n_requests: fb.requests.len(), token_refs },
+        );
+        self.bus.publish(uid, &input);
+        rref
+    }
+}
+
+/// The running system: workers + dispatcher pool + collector.
+pub struct Engine {
+    pub cfg: ModelConfig,
+    pub launch: LaunchConfig,
+    pub manifest: Arc<Manifest>,
+    shared: Arc<Shared>,
+    batcher: Arc<Mutex<Batcher>>,
+    batch_signal: Sender<()>,
+    next_req_id: std::sync::atomic::AtomicU64,
+    workers: Vec<JoinHandle<()>>,
+    service: Vec<JoinHandle<()>>,
+}
+
+impl Engine {
+    /// Runtime initialization (§4.1.2): spawn one worker thread per device
+    /// (each builds its own PJRT client, shards its layer range, compiles
+    /// its variants), then start the dispatcher pool and collector.
+    pub fn launch(launch: LaunchConfig) -> anyhow::Result<Engine> {
+        let manifest = Arc::new(Manifest::load(crate::runtime::find_artifacts()?)?);
+        let mut cfg = ModelConfig::preset(&launch.preset)
+            .ok_or_else(|| anyhow::anyhow!("unknown preset {}", launch.preset))?;
+        if let Some(n) = launch.n_layers {
+            cfg.n_layers = n;
+        }
+        let par = launch.parallel;
+        anyhow::ensure!(cfg.n_heads % par.tp == 0, "heads not divisible by tp");
+        anyhow::ensure!(cfg.n_layers >= par.pp, "fewer layers than stages");
+        anyhow::ensure!(
+            !manifest.shape_points(&launch.preset).is_empty(),
+            "no artifacts for preset {}; run `make artifacts`",
+            launch.preset
+        );
+
+        let world = par.world_size();
+        let (bus, cmd_rxs) = CommandBus::new(world);
+        let act_mode = if launch.engine.blocking_comms { Mode::Blocking } else { Mode::NonBlocking };
+        let coll_eps = CommWorld::new::<ChunkMsg>(world, Mode::NonBlocking);
+        let act_eps = CommWorld::new::<ActMsg>(world, act_mode);
+        let (reply_tx, reply_rx) = std::sync::mpsc::channel::<Reply>();
+
+        // ---- workers -------------------------------------------------------
+        let mut workers = Vec::with_capacity(world);
+        let (ready_tx, ready_rx) = std::sync::mpsc::channel::<anyhow::Result<usize>>();
+        let mut coll_it = coll_eps.into_iter();
+        let mut act_it = act_eps.into_iter();
+        let mut cmd_it = cmd_rxs.into_iter();
+        for stage in 0..par.pp {
+            for tp_rank in 0..par.tp {
+                let ctx = WorkerCtx {
+                    preset: launch.preset.clone(),
+                    cfg: cfg.clone(),
+                    par,
+                    stage,
+                    tp_rank,
+                    layers: par.stage_layers(stage, cfg.n_layers),
+                    drce: launch.engine.drce,
+                    consistency: launch.engine.consistency_queue,
+                    lookahead: match &launch.memory {
+                        MemoryMode::Pmep { pool, .. } => pool.lookahead.max(1),
+                        _ => 1,
+                    },
+                };
+                let args = (
+                    ctx,
+                    manifest.clone(),
+                    cfg.clone(),
+                    launch.memory.clone(),
+                    launch.seed,
+                    launch.warmup,
+                    coll_it.next().unwrap(),
+                    act_it.next().unwrap(),
+                    cmd_it.next().unwrap(),
+                    reply_tx.clone(),
+                );
+                let ready_tx = ready_tx.clone();
+                workers.push(std::thread::spawn(move || {
+                    let (ctx, man, cfg, mem, seed, warm, coll, act, cmd, reply) = args;
+                    let id = ctx.device_id();
+                    match build_worker(ctx, man, cfg, mem, seed, warm, coll, act, cmd, reply) {
+                        Ok(w) => {
+                            let _ = ready_tx.send(Ok(id));
+                            w.run()
+                        }
+                        Err(e) => {
+                            let _ = ready_tx.send(Err(anyhow::anyhow!("worker {id} init: {e:#}")));
+                        }
+                    }
+                }));
+            }
+        }
+        drop(reply_tx); // collector exits once all workers hang up
+        drop(ready_tx);
+        // runtime initialization barrier (§4.1.2): wait until every worker
+        // has built its device, sharded its weights and compiled its
+        // variants — so first-request latency is a serving number, not a
+        // compile number
+        for _ in 0..world {
+            match ready_rx.recv() {
+                Ok(Ok(_)) => {}
+                Ok(Err(e)) => return Err(e),
+                Err(_) => anyhow::bail!("a worker died during initialization"),
+            }
+        }
+
+        let shared = Arc::new(Shared {
+            bus,
+            tickets: TicketCounter::new(),
+            pending: Mutex::new(HashMap::new()),
+            req_futures: Mutex::new(HashMap::new()),
+            metrics: Mutex::new(Recorder::new()),
+            stopping: AtomicBool::new(false),
+        });
+
+        // ---- collector -------------------------------------------------------
+        let mut service = Vec::new();
+        {
+            let shared = shared.clone();
+            service.push(std::thread::spawn(move || collector_loop(reply_rx, shared)));
+        }
+
+        // ---- batcher + dispatcher pool (Fig. 5) ------------------------------
+        let batcher = Arc::new(Mutex::new(Batcher::new(
+            manifest.shape_points(&launch.preset),
+            launch.engine.max_batch,
+            Duration::from_micros(launch.engine.batch_timeout_us),
+        )));
+        let (batch_signal, batch_rx) = std::sync::mpsc::channel::<()>();
+        let (fb_tx, fb_rx) = std::sync::mpsc::channel::<(FormedBatch, Vec<TokenRef>)>();
+        let fb_rx = Arc::new(Mutex::new(fb_rx));
+
+        // former thread: turns the request queue into the batch list
+        {
+            let batcher = batcher.clone();
+            let shared = shared.clone();
+            service.push(std::thread::spawn(move || {
+                let tick = Duration::from_micros(500);
+                loop {
+                    if shared.stopping.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    let _ = batch_rx.recv_timeout(tick);
+                    loop {
+                        let fb = batcher.lock().unwrap().form(std::time::Instant::now());
+                        match fb {
+                            Some(fb) => {
+                                // bind each request's future (created by
+                                // submit()) to its batch row
+                                let refs: Vec<TokenRef> = {
+                                    let mut reg = shared.req_futures.lock().unwrap();
+                                    fb.requests
+                                        .iter()
+                                        .map(|r| reg.remove(&r.id).unwrap_or_else(TokenRef::new))
+                                        .collect()
+                                };
+                                if fb_tx.send((fb, refs)).is_err() {
+                                    return;
+                                }
+                            }
+                            None => break,
+                        }
+                    }
+                }
+            }));
+        }
+
+        // dispatcher pool: N threads each take a formed batch, publish it
+        // (non-blocking), then wait for completion — so the pool size is the
+        // in-flight bound, exactly Fig. 5's thread-pool semantics.
+        for _ in 0..launch.engine.pool_threads {
+            let shared = shared.clone();
+            let fb_rx = fb_rx.clone();
+            service.push(std::thread::spawn(move || loop {
+                let next = fb_rx.lock().unwrap().recv();
+                match next {
+                    Ok((fb, refs)) => {
+                        let rref = shared.publish(&fb, refs);
+                        let _ = rref.to_here(); // completion gates this slot
+                    }
+                    Err(_) => break,
+                }
+            }));
+        }
+
+        Ok(Engine {
+            cfg,
+            launch,
+            manifest,
+            shared,
+            batcher,
+            batch_signal,
+            next_req_id: std::sync::atomic::AtomicU64::new(0),
+            workers,
+            service,
+        })
+    }
+
+    /// Submit a pre-formed batch directly, bypassing the batcher (benches
+    /// and examples that need exact shapes). Non-blocking.
+    pub fn infer_batch(&self, requests: Vec<Request>) -> anyhow::Result<RRef> {
+        anyhow::ensure!(!requests.is_empty(), "empty batch");
+        let points = self.manifest.shape_points(&self.launch.preset);
+        let n = requests.len();
+        let max_len = requests.iter().map(Request::len).max().unwrap();
+        let bucket = points
+            .iter()
+            .copied()
+            .filter(|&(b, s)| b >= n && s >= max_len)
+            .min_by_key(|&(b, s)| b * s)
+            .ok_or_else(|| anyhow::anyhow!("no compiled bucket fits ({n}, {max_len})"))?;
+        let fb = FormedBatch { requests, bucket };
+        Ok(self.shared.publish(&fb, vec![]))
+    }
+
+    /// Submit one request through the dynamic batcher. Returns a future
+    /// for the request's next token.
+    pub fn submit(&self, tokens: Vec<i32>) -> anyhow::Result<TokenRef> {
+        let id = self.next_req_id.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+        let tref = TokenRef::new();
+        self.shared.req_futures.lock().unwrap().insert(id, tref.clone());
+        if let Err(e) = self.batcher.lock().unwrap().push(Request::new(id, tokens)) {
+            self.shared.req_futures.lock().unwrap().remove(&id);
+            return Err(e);
+        }
+        let _ = self.batch_signal.send(());
+        Ok(tref)
+    }
+
+    /// Greedy autoregressive generation: extend `prompt` by `n_tokens`,
+    /// re-running prefill each step (no KV cache — each step flows through
+    /// the full batch path, exercising progressively longer buckets).
+    /// Stops early if the context exceeds the longest compiled bucket.
+    pub fn generate(&self, prompt: Vec<i32>, n_tokens: usize) -> anyhow::Result<Vec<i32>> {
+        anyhow::ensure!(!prompt.is_empty(), "empty prompt");
+        let max_seq = self
+            .manifest
+            .shape_points(&self.launch.preset)
+            .iter()
+            .map(|&(_, s)| s)
+            .max()
+            .unwrap_or(0);
+        let mut tokens = prompt;
+        for _ in 0..n_tokens {
+            if tokens.len() >= max_seq {
+                break;
+            }
+            let rref = self.infer_batch(vec![Request::new(0, tokens.clone())])?;
+            let out = rref.to_here()?;
+            let next = *out
+                .next_tokens
+                .first()
+                .ok_or_else(|| anyhow::anyhow!("no token returned"))?;
+            tokens.push(next);
+        }
+        Ok(tokens)
+    }
+
+    pub fn metrics_snapshot(&self) -> Recorder {
+        self.shared.metrics.lock().unwrap().clone()
+    }
+
+    pub fn pending_count(&self) -> usize {
+        self.shared.pending.lock().unwrap().len()
+    }
+
+    /// Orderly teardown: flush the batcher, stop services, shut workers
+    /// down, join everything.
+    pub fn shutdown(self) {
+        // flush remaining queued requests
+        let leftovers = self.batcher.lock().unwrap().flush();
+        for fb in leftovers {
+            let refs: Vec<TokenRef> = {
+                let mut reg = self.shared.req_futures.lock().unwrap();
+                fb.requests
+                    .iter()
+                    .map(|r| reg.remove(&r.id).unwrap_or_else(TokenRef::new))
+                    .collect()
+            };
+            let rref = self.shared.publish(&fb, refs);
+            let _ = rref.to_here();
+        }
+        // wait for in-flight work to drain
+        while self.pending_count() > 0 {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        self.shared.stopping.store(true, Ordering::SeqCst);
+        self.shared.bus.shutdown();
+        for w in self.workers {
+            let _ = w.join();
+        }
+        // dropping Engine fields closes the batch list channel; dispatcher
+        // and former threads exit, collector exits on worker hangup
+        drop(self.batcher);
+        drop(self.batch_signal);
+        for s in self.service {
+            let _ = s.join();
+        }
+    }
+}
+
+fn collector_loop(reply_rx: Receiver<Reply>, shared: Arc<Shared>) {
+    while let Ok((uid, result)) = reply_rx.recv() {
+        let entry = shared.pending.lock().unwrap().remove(&uid);
+        if let Some(Pending { rref, n_requests, token_refs }) = entry {
+            let latency = rref.submitted_at.elapsed();
+            match &result {
+                Ok(out) => {
+                    shared.metrics.lock().unwrap().record_batch(latency, n_requests);
+                    for (i, t) in token_refs.iter().enumerate() {
+                        t.fulfil(
+                            out.next_tokens
+                                .get(i)
+                                .copied()
+                                .ok_or_else(|| anyhow::anyhow!("missing token {i}")),
+                        );
+                    }
+                }
+                Err(e) => {
+                    for t in &token_refs {
+                        t.fulfil(Err(anyhow::anyhow!("{e}")));
+                    }
+                }
+            }
+            rref.fulfil(result);
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn build_worker(
+    ctx: WorkerCtx,
+    manifest: Arc<Manifest>,
+    cfg: ModelConfig,
+    memory: MemoryMode,
+    seed: u64,
+    warmup: bool,
+    coll_ep: crate::comm::channel::Endpoint<ChunkMsg>,
+    act_ep: crate::comm::channel::Endpoint<ActMsg>,
+    cmd_rx: std::sync::mpsc::Receiver<super::rpc::Command>,
+    reply_tx: Sender<Reply>,
+) -> anyhow::Result<Worker> {
+    let device = Device::new(ctx.device_id())?;
+    // every worker regenerates the (seeded) full weights and keeps only its
+    // shard — simple, reproducible, and mirrors the paper's per-worker init
+    let full = ModelWeights::random(&cfg, seed);
+    let my_layers: Vec<_> = ctx
+        .layers
+        .clone()
+        .map(|l| shard_layer(&cfg, &full.layers[l], ctx.par.tp, ctx.tp_rank))
+        .collect();
+    let provider: Box<dyn LayerProvider> = match memory {
+        MemoryMode::Resident => Box::new(ResidentProvider::new(my_layers)),
+        MemoryMode::Pmep { n_local, pool } => {
+            let off = crate::memory::ledger::even_offload_placement(
+                my_layers.len(),
+                n_local.min(my_layers.len()),
+            );
+            Box::new(PooledProvider::new(my_layers, off, pool))
+        }
+        MemoryMode::Bminf { n_local } => {
+            let off = crate::memory::ledger::even_offload_placement(
+                my_layers.len(),
+                n_local.min(my_layers.len()),
+            );
+            Box::new(PooledProvider::new(my_layers, off, PoolConfig::bminf()))
+        }
+    };
+    let embed_weights = ctx.is_first_stage().then(|| full.embed_args());
+    let logits_weights = ctx.is_last_stage().then(|| full.logits_args());
+
+    if warmup {
+        let t_buckets: Vec<usize> = manifest
+            .by_kind(&ctx.preset, "drce_attn_shard")
+            .filter(|v| v.tp == ctx.par.tp)
+            .map(|v| v.t_bucket)
+            .collect();
+        for (b, s) in manifest.shape_points(&ctx.preset) {
+            for kind in ["embed", "layer_full", "logits", "attn_shard", "mlp_shard"] {
+                let name = Manifest::name_of(&ctx.preset, kind, b, s, if kind == "attn_shard" || kind == "mlp_shard" { ctx.par.tp } else { 1 }, 0);
+                if let Ok(v) = manifest.get(&name) {
+                    let _ = device.load(&manifest, v);
+                }
+            }
+            if ctx.drce {
+                for &t in &t_buckets {
+                    for kind in ["drce_attn_shard", "mlp_shard"] {
+                        let name = Manifest::name_of(&ctx.preset, kind, b, s, ctx.par.tp, t);
+                        if let Ok(v) = manifest.get(&name) {
+                            let _ = device.load(&manifest, v);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    Ok(Worker {
+        ctx,
+        manifest,
+        device,
+        provider,
+        embed_weights,
+        logits_weights,
+        cmd_rx,
+        coll_ep,
+        act_ep,
+        reply_tx,
+        weight_lits: Default::default(),
+        embed_lits: None,
+        logits_lits: None,
+    })
+}

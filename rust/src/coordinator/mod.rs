@@ -1,0 +1,25 @@
+//! The hierarchy-controller coordinator — the paper's system contribution.
+//!
+//! * Single-controller half: [`engine::Engine`] owns initialization and
+//!   task launch, publishing commands over the [`rpc::CommandBus`].
+//! * Multi-controller half: [`worker::Worker`]s execute SPMD, moving
+//!   tensors among themselves (TP all-reduce, pipeline hand-offs) without
+//!   engine involvement.
+//! * NBPP (§4.2) is the combination of: the dispatcher pool's non-blocking
+//!   launches, buffered (non-rendezvous) activation channels, and the
+//!   [`consistency`] queue that makes out-of-order arrival safe. The
+//!   FasterTransformer-style baseline flips the channels to blocking
+//!   rendezvous (`EngineConfig::blocking_comms`).
+//! * DRCE (§4.3) rides on the commands: the engine binds per-sequence
+//!   valid lengths; workers deterministically pick the packed bucket.
+
+pub mod batcher;
+pub mod consistency;
+pub mod engine;
+pub mod rpc;
+pub mod worker;
+
+pub use batcher::{Batcher, Request};
+pub use consistency::{ConsistencyQueue, TicketCounter};
+pub use engine::{Engine, LaunchConfig, MemoryMode, TokenRef};
+pub use rpc::{BatchInput, BatchOutput, RRef};

@@ -1,0 +1,222 @@
+//! The RPC command bus: the single-controller half of the hierarchy
+//! (§4.1.2). The engine publishes [`Command`]s to every worker; workers
+//! never talk back except through the result path (last stage → engine
+//! collector) — fine-grained SPMD communication stays worker-to-worker,
+//! which is the multi-controller half.
+//!
+//! In the paper this is PyTorch RPC across processes; here it is an
+//! in-process bus with the same semantics (per-worker FIFO delivery, but
+//! no cross-worker ordering guarantee when multiple engine threads
+//! publish concurrently — exactly the hazard the distributed consistency
+//! queue exists to fix, §4.2).
+
+use crate::tensor::{IntTensor, Tensor};
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+
+use std::time::Instant;
+
+/// A batched inference task, as published to workers.
+#[derive(Clone, Debug)]
+pub struct BatchInput {
+    /// Token ids (batch, seq) — consumed by stage 0 only.
+    pub ids: IntTensor,
+    /// Per-sequence valid lengths (the DRCE metadata the engine binds to
+    /// the command, §4.3).
+    pub valid_lens: Vec<usize>,
+    /// Padded shape point this batch was bucketed into.
+    pub batch: usize,
+    pub seq: usize,
+}
+
+impl BatchInput {
+    pub fn rows(&self) -> usize {
+        self.batch * self.seq
+    }
+}
+
+/// Result of one batch: last-token logits-argmax per sequence plus the
+/// full logits tensor (small models only — callers that don't need it can
+/// drop it).
+#[derive(Clone, Debug)]
+pub struct BatchOutput {
+    pub uid: u64,
+    pub next_tokens: Vec<i32>,
+    pub logits: Tensor,
+}
+
+/// Commands the engine publishes.
+pub enum Command {
+    /// Run one batch. `uid` is the consistency-queue ticket. The input is
+    /// shared, not cloned per worker (§Perf: publish is O(world) sends,
+    /// not O(world) tensor copies).
+    Forward { uid: u64, input: Arc<BatchInput> },
+    /// Drain and exit the worker loop.
+    Shutdown,
+}
+
+/// Engine→worker command channels (one per worker, FIFO).
+pub struct CommandBus {
+    senders: Vec<Sender<Command>>,
+}
+
+impl CommandBus {
+    pub fn new(world: usize) -> (CommandBus, Vec<Receiver<Command>>) {
+        let mut senders = Vec::with_capacity(world);
+        let mut receivers = Vec::with_capacity(world);
+        for _ in 0..world {
+            let (tx, rx) = std::sync::mpsc::channel();
+            senders.push(tx);
+            receivers.push(rx);
+        }
+        (CommandBus { senders }, receivers)
+    }
+
+    /// Publish a forward task to every worker (the engine's non-blocking
+    /// launch: this returns as soon as the commands are enqueued).
+    pub fn publish(&self, uid: u64, input: &Arc<BatchInput>) {
+        for s in &self.senders {
+            // ignore send errors during shutdown races; the engine joins
+            // workers before dropping the bus in orderly teardown
+            let _ = s.send(Command::Forward { uid, input: input.clone() });
+        }
+    }
+
+    pub fn shutdown(&self) {
+        for s in &self.senders {
+            let _ = s.send(Command::Shutdown);
+        }
+    }
+
+    pub fn world(&self) -> usize {
+        self.senders.len()
+    }
+}
+
+/// Remote reference to an in-flight result — the paper's usage model
+/// (Fig. 9): `let rref = engine.submit(..); let out = rref.to_here();`.
+#[derive(Clone)]
+pub struct RRef {
+    inner: Arc<(Mutex<Slot>, Condvar)>,
+    pub uid: u64,
+    pub submitted_at: Instant,
+}
+
+#[derive(Default)]
+struct Slot {
+    value: Option<anyhow::Result<BatchOutput>>,
+}
+
+impl RRef {
+    pub fn new(uid: u64) -> RRef {
+        RRef {
+            inner: Arc::new((Mutex::new(Slot::default()), Condvar::new())),
+            uid,
+            submitted_at: Instant::now(),
+        }
+    }
+
+    /// Fulfil the reference (engine collector thread).
+    pub fn fulfil(&self, value: anyhow::Result<BatchOutput>) {
+        let (lock, cv) = &*self.inner;
+        let mut slot = lock.lock().unwrap();
+        slot.value = Some(value);
+        cv.notify_all();
+    }
+
+    /// Block until the result arrives (the paper's `to_here()`).
+    pub fn to_here(&self) -> anyhow::Result<BatchOutput> {
+        let (lock, cv) = &*self.inner;
+        let mut slot = lock.lock().unwrap();
+        loop {
+            if let Some(v) = slot.value.take() {
+                return v;
+            }
+            slot = cv.wait(slot).unwrap();
+        }
+    }
+
+    /// Non-blocking poll.
+    pub fn try_take(&self) -> Option<anyhow::Result<BatchOutput>> {
+        let (lock, _) = &*self.inner;
+        lock.lock().unwrap().value.take()
+    }
+
+    pub fn is_ready(&self) -> bool {
+        let (lock, _) = &*self.inner;
+        lock.lock().unwrap().value.is_some()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+    use std::time::Duration;
+
+    fn input() -> BatchInput {
+        BatchInput {
+            ids: IntTensor::new(&[1, 4], vec![1, 2, 3, 0]),
+            valid_lens: vec![3],
+            batch: 1,
+            seq: 4,
+        }
+    }
+
+    #[test]
+    fn publish_reaches_all_workers() {
+        let (bus, rxs) = CommandBus::new(3);
+        bus.publish(7, &Arc::new(input()));
+        for rx in &rxs {
+            match rx.recv().unwrap() {
+                Command::Forward { uid, input } => {
+                    assert_eq!(uid, 7);
+                    assert_eq!(input.valid_lens, vec![3]);
+                }
+                _ => panic!("expected Forward"),
+            }
+        }
+    }
+
+    #[test]
+    fn shutdown_delivered() {
+        let (bus, rxs) = CommandBus::new(2);
+        bus.shutdown();
+        for rx in &rxs {
+            assert!(matches!(rx.recv().unwrap(), Command::Shutdown));
+        }
+    }
+
+    #[test]
+    fn rref_blocks_until_fulfilled() {
+        let r = RRef::new(1);
+        assert!(!r.is_ready());
+        let r2 = r.clone();
+        let h = thread::spawn(move || {
+            thread::sleep(Duration::from_millis(30));
+            r2.fulfil(Ok(BatchOutput {
+                uid: 1,
+                next_tokens: vec![5],
+                logits: Tensor::zeros(&[1]),
+            }));
+        });
+        let out = r.to_here().unwrap();
+        assert_eq!(out.next_tokens, vec![5]);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn rref_propagates_errors() {
+        let r = RRef::new(2);
+        r.fulfil(Err(anyhow::anyhow!("worker crashed")));
+        assert!(r.to_here().is_err());
+    }
+
+    #[test]
+    fn try_take_consumes_once() {
+        let r = RRef::new(3);
+        r.fulfil(Ok(BatchOutput { uid: 3, next_tokens: vec![], logits: Tensor::zeros(&[1]) }));
+        assert!(r.try_take().is_some());
+        assert!(r.try_take().is_none());
+    }
+}

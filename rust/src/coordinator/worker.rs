@@ -1,0 +1,416 @@
+//! Worker: one simulated device. Runs the SPMD (multi-controller) half of
+//! the hierarchy: executes its pipeline stage's layers as TP shards,
+//! all-reduces with its TP group, hands activations to the next stage, and
+//! — crucially — consumes engine commands through the distributed
+//! consistency queue so every worker processes batch k as its k-th
+//! execution (§4.2).
+
+use super::consistency::ConsistencyQueue;
+use super::rpc::{BatchInput, BatchOutput, Command};
+use crate::comm::channel::Endpoint;
+use crate::comm::collective::{ring_allreduce, ChunkMsg};
+use crate::config::{ModelConfig, ParallelConfig};
+use crate::memory::LayerProvider;
+use crate::runtime::{valid_len_arg, Device, Manifest};
+use crate::tensor::drce::{self, DrceMaps};
+use crate::tensor::{Tensor, Value};
+use std::collections::HashMap;
+use std::ops::Range;
+use std::rc::Rc;
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::Arc;
+
+/// Activation hand-off between consecutive pipeline stages.
+pub type ActMsg = (u64, Tensor);
+
+/// Worker reply to the engine collector.
+pub type Reply = (u64, anyhow::Result<BatchOutput>);
+
+/// Static description of one worker's role.
+#[derive(Clone, Debug)]
+pub struct WorkerCtx {
+    pub preset: String,
+    pub cfg: ModelConfig,
+    pub par: ParallelConfig,
+    pub stage: usize,
+    pub tp_rank: usize,
+    pub layers: Range<usize>,
+    /// Attempt DRCE packed execution when a bucket fits (§4.3).
+    pub drce: bool,
+    /// Distributed consistency queue on/off (ablation).
+    pub consistency: bool,
+    /// Prefetch lookahead hint passed to the layer provider.
+    pub lookahead: usize,
+}
+
+impl WorkerCtx {
+    pub fn device_id(&self) -> usize {
+        self.par.device_of(self.stage, self.tp_rank)
+    }
+
+    pub fn is_first_stage(&self) -> bool {
+        self.stage == 0
+    }
+
+    pub fn is_last_stage(&self) -> bool {
+        self.stage == self.par.pp - 1
+    }
+
+    pub fn tp_group(&self) -> Vec<usize> {
+        (0..self.par.tp).map(|r| self.par.device_of(self.stage, r)).collect()
+    }
+
+    pub fn is_replier(&self) -> bool {
+        self.is_last_stage() && self.tp_rank == 0
+    }
+}
+
+/// Everything a worker thread owns.
+pub struct Worker {
+    pub ctx: WorkerCtx,
+    pub manifest: Arc<Manifest>,
+    pub device: Device,
+    pub provider: Box<dyn LayerProvider>,
+    /// wte/wpe (first stage) and lnf/wte (last stage) argument tails.
+    pub embed_weights: Option<Vec<Value>>,
+    pub logits_weights: Option<Vec<Value>>,
+    pub cmd_rx: Receiver<Command>,
+    pub coll_ep: Endpoint<ChunkMsg>,
+    pub act_ep: Endpoint<ActMsg>,
+    pub reply_tx: Sender<Reply>,
+    /// Device-resident weight literals, keyed by (local layer, tail kind)
+    /// and invalidated via the provider's epoch (§Perf: no per-batch
+    /// weight re-upload).
+    pub weight_lits: HashMap<(usize, WeightKind), (u64, Rc<Vec<xla::Literal>>)>,
+    pub embed_lits: Option<Vec<xla::Literal>>,
+    pub logits_lits: Option<Vec<xla::Literal>>,
+}
+
+/// Which argument tail of a layer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum WeightKind {
+    Attn,
+    Mlp,
+    All,
+}
+
+/// Activation as it flows through a stage: padded (B,S,H) or DRCE-packed
+/// (T,H) with its maps.
+enum Act {
+    Padded(Tensor),
+    Packed(Tensor, DrceMaps),
+}
+
+impl Worker {
+    /// Main loop: drain commands through the consistency queue, execute in
+    /// ticket order, exit on Shutdown.
+    pub fn run(mut self) {
+        let mut queue: ConsistencyQueue<(u64, std::sync::Arc<BatchInput>)> =
+            ConsistencyQueue::new(self.ctx.consistency);
+        let mut shutting_down = false;
+        loop {
+            if let Some((uid, input)) = queue.pop_ready() {
+                // With the queue disabled (ablation), pop order is arrival
+                // order, which can differ across workers — exactly the
+                // mispairing hazard §4.2 describes.
+                self.execute_logged(uid, &input);
+                continue;
+            }
+            if shutting_down {
+                break;
+            }
+            match self.cmd_rx.recv() {
+                Ok(Command::Forward { uid, input }) => queue.push(uid, (uid, input)),
+                Ok(Command::Shutdown) | Err(_) => shutting_down = true,
+            }
+        }
+    }
+
+    fn execute_logged(&mut self, uid: u64, input: &BatchInput) {
+        match self.execute(uid, input) {
+            Ok(Some(out)) => {
+                let _ = self.reply_tx.send((out.uid, Ok(out)));
+            }
+            Ok(None) => {}
+            Err(e) => {
+                if self.ctx.is_replier() {
+                    let _ = self.reply_tx.send((uid, Err(e)));
+                } else {
+                    // poison downstream by dropping; the engine watchdog
+                    // will surface the stall. Log loudly for debugging.
+                    eprintln!("worker {} failed: {e:#}", self.ctx.device_id());
+                }
+            }
+        }
+    }
+
+    /// Execute one batch through this worker's stage. Returns the reply if
+    /// this worker is the replier.
+    fn execute(&mut self, uid: u64, input: &BatchInput) -> anyhow::Result<Option<BatchOutput>> {
+        let (b, s) = (input.batch, input.seq);
+        let h = self.ctx.cfg.hidden;
+        let valid = valid_len_arg(&input.valid_lens);
+        let drce_maps = self.plan_drce(input)?;
+
+        // ---- acquire the stage input ------------------------------------
+        let mut act = if self.ctx.is_first_stage() {
+            let x = self.run_embed(input)?;
+            match &drce_maps {
+                Some(maps) => {
+                    let flat = x.reshape(&[b * s, h]);
+                    Act::Packed(drce::pack(&flat, maps), maps.clone())
+                }
+                None => Act::Padded(x),
+            }
+        } else {
+            let prev = self.ctx.par.device_of(self.ctx.stage - 1, self.ctx.tp_rank);
+            let (got_uid, t) = self.act_ep.recv(prev);
+            if self.ctx.consistency {
+                anyhow::ensure!(
+                    got_uid == uid,
+                    "stage {} received activation for batch {got_uid}, expected {uid}",
+                    self.ctx.stage
+                );
+            }
+            match &drce_maps {
+                Some(maps) => Act::Packed(t, maps.clone()),
+                None => Act::Padded(t),
+            }
+        };
+
+        // ---- run my layers ----------------------------------------------
+        let first = self.ctx.layers.start;
+        self.provider.prefetch(0);
+        for layer in self.ctx.layers.clone() {
+            let local = layer - first;
+            // issue the lookahead prefetch before computing (Fig. 8)
+            for ahead in 1..=self.ctx.lookahead.max(1) {
+                self.provider.prefetch(local + ahead);
+            }
+            act = self.run_layer(local, act, &valid, input)?;
+            self.provider.release(local);
+        }
+
+        // ---- hand off or reply --------------------------------------------
+        if !self.ctx.is_last_stage() {
+            let next = self.ctx.par.device_of(self.ctx.stage + 1, self.ctx.tp_rank);
+            let t = match act {
+                Act::Padded(t) => t,
+                Act::Packed(t, _) => t,
+            };
+            self.act_ep.send(next, (uid, t));
+            return Ok(None);
+        }
+
+        // last stage: unpack, project to logits, reply (tp rank 0 only)
+        let x = match act {
+            Act::Padded(t) => t,
+            Act::Packed(t, maps) => drce::unpack(&t, &maps).reshape(&[b, s, h]),
+        };
+        if !self.ctx.is_replier() {
+            return Ok(None);
+        }
+        let logits = self.run_logits(&x, input)?;
+        let next_tokens = argmax_next_tokens(&logits, &input.valid_lens);
+        Ok(Some(BatchOutput { uid, next_tokens, logits }))
+    }
+
+    /// Decide whether this batch runs packed, identically on all workers:
+    /// DRCE is on, a (b, s, tp) bucket exists, and the valid tokens fit.
+    fn plan_drce(&self, input: &BatchInput) -> anyhow::Result<Option<DrceMaps>> {
+        if !self.ctx.drce {
+            return Ok(None);
+        }
+        let total: usize = input.valid_lens.iter().sum();
+        let mut buckets: Vec<usize> = self
+            .manifest
+            .by_kind(&self.ctx.preset, "drce_attn_shard")
+            .filter(|v| v.batch == input.batch && v.seq == input.seq && v.tp == self.ctx.par.tp)
+            .map(|v| v.t_bucket)
+            .collect();
+        buckets.sort();
+        match drce::pick_bucket(total, &buckets) {
+            Some(t) => Ok(Some(drce::make_maps(&input.valid_lens, input.seq, t)?)),
+            None => Ok(None), // fall back to padded execution
+        }
+    }
+
+    fn variant(&self, kind: &str, input: &BatchInput, t_bucket: usize) -> anyhow::Result<crate::runtime::VariantMeta> {
+        let tp = if kind == "layer_full" || kind == "embed" || kind == "logits" {
+            1
+        } else {
+            self.ctx.par.tp
+        };
+        let name = Manifest::name_of(&self.ctx.preset, kind, input.batch, input.seq, tp, t_bucket);
+        self.manifest.get(&name).cloned()
+    }
+
+    /// Device-resident weight tail for a layer, rebuilt when the provider
+    /// reports a new epoch (pool eviction + refetch).
+    fn layer_lits(&mut self, local: usize, kind: WeightKind) -> anyhow::Result<Rc<Vec<xla::Literal>>> {
+        let epoch = self.provider.epoch(local);
+        if let Some((e, lits)) = self.weight_lits.get(&(local, kind)) {
+            if *e == epoch {
+                return Ok(lits.clone());
+            }
+        }
+        let vals = match kind {
+            WeightKind::Attn => self.provider.attn_args(local),
+            WeightKind::Mlp => self.provider.mlp_args(local),
+            WeightKind::All => self.provider.all_args(local),
+        };
+        let lits = Rc::new(crate::runtime::pjrt::prepare(&vals)?);
+        self.weight_lits.insert((local, kind), (epoch, lits.clone()));
+        Ok(lits)
+    }
+
+    fn run_embed(&mut self, input: &BatchInput) -> anyhow::Result<Tensor> {
+        let v = self.variant("embed", input, 0)?;
+        if self.embed_lits.is_none() {
+            let w = self.embed_weights.as_ref().expect("stage 0 has embed weights");
+            self.embed_lits = Some(crate::runtime::pjrt::prepare(w)?);
+        }
+        let acts = [Value::I32(input.ids.clone())];
+        Ok(self
+            .device
+            .execute_prepared(&self.manifest, &v, &acts, self.embed_lits.as_ref().unwrap())?
+            .remove(0))
+    }
+
+    fn run_logits(&mut self, x: &Tensor, input: &BatchInput) -> anyhow::Result<Tensor> {
+        let v = self.variant("logits", input, 0)?;
+        if self.logits_lits.is_none() {
+            let w = self.logits_weights.as_ref().expect("last stage has logits weights");
+            self.logits_lits = Some(crate::runtime::pjrt::prepare(w)?);
+        }
+        let acts = [Value::F32(x.clone())];
+        Ok(self
+            .device
+            .execute_prepared(&self.manifest, &v, &acts, self.logits_lits.as_ref().unwrap())?
+            .remove(0))
+    }
+
+    /// One transformer layer: fused single-device, TP-sharded, or DRCE.
+    fn run_layer(&mut self, local: usize, act: Act, valid: &Value, input: &BatchInput) -> anyhow::Result<Act> {
+        let (b, s) = (input.batch, input.seq);
+        let h = self.ctx.cfg.hidden;
+        let tp = self.ctx.par.tp;
+        match act {
+            Act::Padded(x) if tp == 1 => {
+                let v = self.variant("layer_full", input, 0)?;
+                let lits = self.layer_lits(local, WeightKind::All)?;
+                let acts = [Value::F32(x), valid.clone()];
+                let y = self.device.execute_prepared(&self.manifest, &v, &acts, &lits)?.remove(0);
+                Ok(Act::Padded(y))
+            }
+            Act::Padded(x) => {
+                // attention half (partial) -> all-reduce -> residual
+                let v = self.variant("attn_shard", input, 0)?;
+                let lits = self.layer_lits(local, WeightKind::Attn)?;
+                let acts = [Value::F32(x.clone()), valid.clone()];
+                let partial = self.device.execute_prepared(&self.manifest, &v, &acts, &lits)?.remove(0);
+                let attn_sum = self.allreduce(partial);
+                let r = x.add(&attn_sum);
+                // mlp half over (b*s, h) rows
+                let v = self.variant("mlp_shard", input, 0)?;
+                let lits = self.layer_lits(local, WeightKind::Mlp)?;
+                let r2 = r.clone().reshape(&[b * s, h]);
+                let acts = [Value::F32(r2)];
+                let partial = self.device.execute_prepared(&self.manifest, &v, &acts, &lits)?.remove(0);
+                let mlp_sum = self.allreduce(partial).reshape(&[b, s, h]);
+                Ok(Act::Padded(r.add(&mlp_sum)))
+            }
+            Act::Packed(xp, maps) => {
+                let v = self.variant("drce_attn_shard", input, maps.t_bucket)?;
+                let lits = self.layer_lits(local, WeightKind::Attn)?;
+                let acts = [
+                    Value::F32(xp.clone()),
+                    valid.clone(),
+                    Value::I32(maps.unpad_map.clone()),
+                    Value::I32(maps.pad_map.clone()),
+                ];
+                let partial = self.device.execute_prepared(&self.manifest, &v, &acts, &lits)?.remove(0);
+                let attn_sum = self.allreduce(partial);
+                let r = xp.add(&attn_sum);
+                let v = self.variant("mlp_shard", input, maps.t_bucket)?;
+                let lits = self.layer_lits(local, WeightKind::Mlp)?;
+                let acts = [Value::F32(r.clone())];
+                let partial = self.device.execute_prepared(&self.manifest, &v, &acts, &lits)?.remove(0);
+                let mlp_sum = self.allreduce(partial);
+                Ok(Act::Packed(r.add(&mlp_sum), maps))
+            }
+        }
+    }
+
+    fn allreduce(&self, t: Tensor) -> Tensor {
+        if self.ctx.par.tp == 1 {
+            return t;
+        }
+        ring_allreduce(&self.coll_ep, &self.ctx.tp_group(), t)
+    }
+}
+
+/// Greedy next-token: argmax of the logits row at position valid-1.
+pub fn argmax_next_tokens(logits: &Tensor, valid_lens: &[usize]) -> Vec<i32> {
+    let (b, s, v) = (logits.shape[0], logits.shape[1], logits.shape[2]);
+    assert_eq!(valid_lens.len(), b);
+    let mut out = Vec::with_capacity(b);
+    for (i, &vl) in valid_lens.iter().enumerate() {
+        let pos = vl.clamp(1, s) - 1;
+        let row = &logits.data[(i * s + pos) * v..(i * s + pos + 1) * v];
+        let argmax = row
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(j, _)| j as i32)
+            .unwrap();
+        out.push(argmax);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ctx_roles() {
+        let par = ParallelConfig::new(2, 2);
+        let cfg = ModelConfig::preset("tiny").unwrap();
+        let ctx = WorkerCtx {
+            preset: "tiny".into(),
+            cfg: cfg.clone(),
+            par,
+            stage: 1,
+            tp_rank: 0,
+            layers: 2..4,
+            drce: false,
+            consistency: true,
+            lookahead: 1,
+        };
+        assert_eq!(ctx.device_id(), 2);
+        assert!(ctx.is_last_stage());
+        assert!(!ctx.is_first_stage());
+        assert!(ctx.is_replier());
+        assert_eq!(ctx.tp_group(), vec![2, 3]);
+        let ctx2 = WorkerCtx { tp_rank: 1, ..ctx };
+        assert!(!ctx2.is_replier());
+    }
+
+    #[test]
+    fn argmax_uses_last_valid_position() {
+        // b=1, s=3, v=4; valid=2 -> row at pos 1
+        let logits = Tensor::new(
+            &[1, 3, 4],
+            vec![
+                9., 0., 0., 0., // pos 0
+                0., 0., 7., 0., // pos 1  <- selected
+                0., 0., 0., 9., // pos 2
+            ],
+        );
+        assert_eq!(argmax_next_tokens(&logits, &[2]), vec![2]);
+        assert_eq!(argmax_next_tokens(&logits, &[1]), vec![0]);
+        // valid beyond seq clamps
+        assert_eq!(argmax_next_tokens(&logits, &[9]), vec![3]);
+    }
+}

@@ -1,0 +1,48 @@
+//! # EnergonAI (reproduction)
+//!
+//! A faithful reproduction of **"EnergonAI: An Inference System for 10-100
+//! Billion Parameter Transformer Models"** (Du et al., 2022) as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the paper's contribution: a *hierarchy-controller*
+//!   architecture. A centralized [`coordinator::Engine`] publishes tasks over
+//!   an RPC-style command bus to SPMD workers ([`runtime::Worker`]) that run
+//!   tensor-parallel shards and pipeline stages, plus the paper's three
+//!   techniques: non-blocking pipeline parallelism
+//!   ([`coordinator::pipeline`]), distributed redundant computation
+//!   elimination ([`tensor::drce`] + the `drce_attn_shard` artifacts), and
+//!   peer memory pooling ([`memory`]).
+//! * **L2 (python/compile/model.py)** — the transformer compute graph in
+//!   JAX, AOT-lowered to HLO text artifacts loaded by [`runtime`].
+//! * **L1 (python/compile/kernels/)** — Pallas kernels (fused attention,
+//!   tiled MLP matmul, layernorm, DRCE pack/unpack) called from L2.
+//!
+//! Python never runs on the request path: `make artifacts` emits HLO text
+//! once; the Rust binary is self-contained afterwards.
+//!
+//! Paper-scale experiments (8×A100, NVLink) are regenerated through a
+//! discrete-event simulator ([`sim`]) driven by the same scheduling policies
+//! and an analytic A100 roofline model ([`perf`]); real end-to-end execution
+//! uses scaled-down model presets on the PJRT CPU client. See DESIGN.md for
+//! the substitution table.
+
+pub mod baselines;
+pub mod comm;
+pub mod config;
+pub mod coordinator;
+pub mod memory;
+pub mod metrics;
+pub mod model;
+pub mod perf;
+pub mod runtime;
+pub mod server;
+pub mod sim;
+pub mod tensor;
+pub mod util;
+pub mod workload;
+
+pub use config::{EngineConfig, ModelConfig, ParallelConfig};
+pub use coordinator::Engine;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

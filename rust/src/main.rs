@@ -1,0 +1,215 @@
+//! EnergonAI launcher — the CLI the paper's "launch tool" corresponds to
+//! (§5.2: "we provide a launch tool for initializing the global
+//! communication context and the RPC context. User can specify the size
+//! of tensor parallelism and pipeline parallelism in the launch tool").
+//!
+//! Subcommands:
+//!   serve      run the TCP serving front-end over a live engine
+//!   demo       submit a few requests and print tokens + metrics
+//!   bench      regenerate the paper's figures (fig2|fig10|fig11|fig12|
+//!              fig13|crossover|all) from the calibrated simulators
+//!   info       list model presets and the GPT family table
+//!
+//! Common flags: --preset tiny|small|base  --tp N  --pp N  --drce
+//!               --blocking  --layers N  --seed N
+
+use energonai::baselines;
+use energonai::config::ModelConfig;
+use energonai::coordinator::engine::{Engine, LaunchConfig, MemoryMode};
+use energonai::memory::pool::PoolConfig;
+use energonai::server::Server;
+use energonai::sim::report;
+use energonai::util::cli::Args;
+use energonai::workload::{Generator, LengthDist};
+use std::sync::Arc;
+
+fn main() {
+    let args = Args::from_env();
+    let code = match args.subcommand.as_deref() {
+        Some("serve") => cmd_serve(&args),
+        Some("demo") => cmd_demo(&args),
+        Some("generate") => cmd_generate(&args),
+        Some("bench") => cmd_bench(&args),
+        Some("info") => cmd_info(),
+        _ => {
+            eprint!("{}", USAGE);
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+const USAGE: &str = "\
+energonai — hierarchy-controller inference system (EnergonAI reproduction)
+
+USAGE:
+  energonai serve  [--preset tiny] [--tp 1] [--pp 1] [--drce] [--addr 127.0.0.1:7070]
+  energonai demo   [--preset tiny] [--tp 1] [--pp 1] [--drce] [--requests 8]
+  energonai generate [--prompt 1,2,3] [--tokens 8] [--preset tiny]
+  energonai bench  <fig2|fig10|fig11|fig12|fig13|crossover|all>
+  energonai info
+
+Any engine subcommand also accepts --config <file.toml> (CLI flags override).
+";
+
+fn cmd_generate(args: &Args) -> i32 {
+    let engine = match launch_from_args(args) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("launch failed: {e:#}");
+            return 1;
+        }
+    };
+    let prompt: Vec<i32> = args
+        .get_or("prompt", "1,2,3")
+        .split(',')
+        .filter_map(|t| t.trim().parse().ok())
+        .collect();
+    let n = args.usize("tokens", 8);
+    match engine.generate(prompt.clone(), n) {
+        Ok(tokens) => {
+            println!("prompt {:?}", prompt);
+            println!("output {:?}", tokens);
+        }
+        Err(e) => {
+            eprintln!("generate failed: {e:#}");
+            return 1;
+        }
+    }
+    engine.shutdown();
+    0
+}
+
+fn launch_from_args(args: &Args) -> anyhow::Result<Engine> {
+    // config file first; CLI flags override
+    if let Some(path) = args.get("config") {
+        let mut launch = energonai::config::file::launch_from_file(path)?;
+        if let Some(tp) = args.get("tp") {
+            let pp = launch.parallel.pp;
+            launch = launch.with_parallel(tp.parse()?, pp);
+        }
+        if let Some(pp) = args.get("pp") {
+            let tp = launch.parallel.tp;
+            launch = launch.with_parallel(tp, pp.parse()?);
+        }
+        if args.flag("drce") {
+            launch = launch.with_drce(true);
+        }
+        println!(
+            "launching from {path}: {} (tp={}, pp={}, drce={})...",
+            launch.preset, launch.parallel.tp, launch.parallel.pp, launch.engine.drce
+        );
+        return Engine::launch(launch);
+    }
+    let preset = args.get_or("preset", "tiny");
+    let tp = args.usize("tp", 1);
+    let pp = args.usize("pp", 1);
+    let mut launch = if args.flag("blocking") || args.get("baseline") == Some("ft") {
+        baselines::fastertransformer(preset, tp, pp)
+    } else {
+        LaunchConfig::preset(preset).with_parallel(tp, pp)
+    };
+    launch = launch
+        .with_drce(args.flag("drce"))
+        .with_warmup(!args.flag("no-warmup"));
+    if let Some(n) = args.get("layers") {
+        launch = launch.with_layers(n.parse()?);
+    }
+    launch.seed = args.usize("seed", 42) as u64;
+    if let Some(n_local) = args.get("pmep-local") {
+        launch = launch.with_memory(MemoryMode::Pmep {
+            n_local: n_local.parse()?,
+            pool: PoolConfig::pmep(),
+        });
+    } else if let Some(n_local) = args.get("bminf-local") {
+        launch = launch.with_memory(MemoryMode::Bminf { n_local: n_local.parse()? });
+    }
+    println!(
+        "launching {} (tp={tp}, pp={pp}, drce={}, blocking={})...",
+        preset, launch.engine.drce, launch.engine.blocking_comms
+    );
+    Engine::launch(launch)
+}
+
+fn cmd_serve(args: &Args) -> i32 {
+    let engine = match launch_from_args(args) {
+        Ok(e) => Arc::new(e),
+        Err(e) => {
+            eprintln!("launch failed: {e:#}");
+            return 1;
+        }
+    };
+    let addr = args.get_or("addr", "127.0.0.1:7070");
+    match Server::start(engine, addr) {
+        Ok(server) => {
+            println!("serving on {} — protocol: `infer 1,2,3` | `stats` | `quit`", server.addr);
+            // serve until killed
+            loop {
+                std::thread::sleep(std::time::Duration::from_secs(3600));
+            }
+        }
+        Err(e) => {
+            eprintln!("bind failed: {e:#}");
+            1
+        }
+    }
+}
+
+fn cmd_demo(args: &Args) -> i32 {
+    let engine = match launch_from_args(args) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("launch failed: {e:#}");
+            return 1;
+        }
+    };
+    let n = args.usize("requests", 8);
+    let mut gen = Generator::new(7, LengthDist::Uniform(3, 12), engine.cfg.vocab);
+    println!("submitting {n} requests through the dynamic batcher...");
+    let futs: Vec<_> = (0..n).map(|_| engine.submit(gen.request().tokens).unwrap()).collect();
+    for (i, f) in futs.iter().enumerate() {
+        match f.to_here() {
+            Ok(tok) => println!("  request {i}: next token {tok}"),
+            Err(e) => println!("  request {i}: error {e}"),
+        }
+    }
+    println!("{}", engine.metrics_snapshot().summary());
+    engine.shutdown();
+    0
+}
+
+fn cmd_bench(args: &Args) -> i32 {
+    let which = args.positional.first().map(String::as_str).unwrap_or("all");
+    let tables: Vec<(&str, fn() -> String)> = vec![
+        ("fig2", report::fig2),
+        ("fig10", report::fig10),
+        ("fig11", report::fig11),
+        ("fig12", report::fig12),
+        ("fig13", report::fig13),
+        ("crossover", report::crossover),
+    ];
+    let mut found = false;
+    for (name, f) in tables {
+        if which == "all" || which == name {
+            println!("{}", f());
+            found = true;
+        }
+    }
+    if !found {
+        eprintln!("unknown figure {which:?}; expected fig2|fig10|fig11|fig12|fig13|crossover|all");
+        return 2;
+    }
+    0
+}
+
+fn cmd_info() -> i32 {
+    println!("presets (real PJRT execution):");
+    for p in ["tiny", "small", "base", "gpt3"] {
+        println!("  {}", ModelConfig::preset(p).unwrap());
+    }
+    println!("\nGPT family (Fig. 2 / paper-scale simulation):");
+    for c in ModelConfig::gpt_family() {
+        println!("  {c}");
+    }
+    0
+}

@@ -1,0 +1,153 @@
+//! Per-device memory accounting. The pool's placement policy (§4.4:
+//! "through monitoring memory space on all GPUs, the memory pool decides
+//! which device is available for offloading") reads these ledgers; Fig. 13
+//! scenarios are expressed as capacity budgets.
+
+use std::fmt;
+
+/// Byte-accurate alloc/free ledger for one device.
+#[derive(Clone, Debug)]
+pub struct MemoryLedger {
+    pub device: usize,
+    pub capacity: u64,
+    used: u64,
+    peak: u64,
+}
+
+impl MemoryLedger {
+    pub fn new(device: usize, capacity: u64) -> MemoryLedger {
+        MemoryLedger { device, capacity, used: 0, peak: 0 }
+    }
+
+    pub fn used(&self) -> u64 {
+        self.used
+    }
+
+    pub fn free(&self) -> u64 {
+        self.capacity - self.used
+    }
+
+    pub fn peak(&self) -> u64 {
+        self.peak
+    }
+
+    pub fn can_fit(&self, bytes: u64) -> bool {
+        self.used + bytes <= self.capacity
+    }
+
+    /// Reserve bytes; errors if over capacity (the memory wall, literally).
+    pub fn alloc(&mut self, bytes: u64) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.can_fit(bytes),
+            "device {} OOM: {} used + {} requested > {} capacity",
+            self.device,
+            self.used,
+            bytes,
+            self.capacity
+        );
+        self.used += bytes;
+        self.peak = self.peak.max(self.used);
+        Ok(())
+    }
+
+    pub fn dealloc(&mut self, bytes: u64) {
+        assert!(bytes <= self.used, "double free on device {}", self.device);
+        self.used -= bytes;
+    }
+}
+
+impl fmt::Display for MemoryLedger {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "dev{}: {}/{} used (peak {})",
+            self.device,
+            crate::util::fmt_bytes(self.used),
+            crate::util::fmt_bytes(self.capacity),
+            crate::util::fmt_bytes(self.peak)
+        )
+    }
+}
+
+/// Even-spread placement (§4.4: "layers to be offloaded are distributed
+/// evenly among those to be held on device"): given `n_layers` and how many
+/// fit locally, choose which layer indices live off-device.
+///
+/// Example from the paper: 24 layers, 20 local → offload {5, 11, 17, 23}.
+pub fn even_offload_placement(n_layers: usize, n_local: usize) -> Vec<usize> {
+    assert!(n_local <= n_layers);
+    let n_off = n_layers - n_local;
+    if n_off == 0 {
+        return vec![];
+    }
+    // spread the offloaded layers evenly: layer i is offloaded when it is
+    // the last of each of n_off equal groups
+    let mut out = Vec::with_capacity(n_off);
+    for k in 1..=n_off {
+        let idx = (k * n_layers) / n_off - 1;
+        out.push(idx);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_free_roundtrip() {
+        let mut l = MemoryLedger::new(0, 100);
+        l.alloc(60).unwrap();
+        assert_eq!(l.used(), 60);
+        assert_eq!(l.free(), 40);
+        l.dealloc(20);
+        assert_eq!(l.used(), 40);
+        assert_eq!(l.peak(), 60);
+    }
+
+    #[test]
+    fn oom_is_error_not_panic() {
+        let mut l = MemoryLedger::new(1, 100);
+        l.alloc(90).unwrap();
+        assert!(l.alloc(20).is_err());
+        assert_eq!(l.used(), 90); // failed alloc doesn't leak
+    }
+
+    #[test]
+    #[should_panic]
+    fn double_free_panics() {
+        let mut l = MemoryLedger::new(0, 100);
+        l.dealloc(1);
+    }
+
+    #[test]
+    fn paper_placement_24_layers_20_local() {
+        // §5.6: "Taking the 24-layer GPT-3 for example, layers No.5, 11,
+        // 17, and 23 are offloaded."
+        assert_eq!(even_offload_placement(24, 20), vec![5, 11, 17, 23]);
+    }
+
+    #[test]
+    fn placement_edge_cases() {
+        assert_eq!(even_offload_placement(10, 10), Vec::<usize>::new());
+        assert_eq!(even_offload_placement(4, 0), vec![0, 1, 2, 3]);
+        // 40 layers, 20 local -> every other layer offloaded
+        let p = even_offload_placement(40, 20);
+        assert_eq!(p.len(), 20);
+        assert_eq!(p[0], 1);
+        assert_eq!(p[19], 39);
+    }
+
+    #[test]
+    fn placement_is_sorted_unique() {
+        for (n, local) in [(24, 20), (30, 20), (40, 20), (13, 7)] {
+            let p = even_offload_placement(n, local);
+            assert_eq!(p.len(), n - local);
+            let mut q = p.clone();
+            q.sort();
+            q.dedup();
+            assert_eq!(p, q);
+            assert!(p.iter().all(|&i| i < n));
+        }
+    }
+}

@@ -1,0 +1,107 @@
+//! Memory management: the paper's third technique, **peer memory pooling**
+//! (PMEP, §4.4), plus the BMInf-style CPU-offload baseline it is compared
+//! against in Fig. 13.
+//!
+//! The abstraction the worker executor sees is [`LayerProvider`]: "give me
+//! layer k's weights, and here's a hint that layer k+lookahead is coming."
+//! * [`ResidentProvider`] — everything in device memory (the common case).
+//! * [`pool::PooledProvider`] — layers parked in peer-GPU (or host) memory,
+//!   prefetched by a background copier thread over a modelled link, with
+//!   eviction after use. Blocking on an unfinished copy is recorded as
+//!   stall time — the number PMEP is designed to drive to zero.
+
+pub mod ledger;
+pub mod pool;
+
+pub use ledger::MemoryLedger;
+pub use pool::{PoolConfig, PooledProvider};
+
+use crate::model::weights::LayerWeights;
+use crate::tensor::Value;
+
+/// Statistics a provider accumulates (EXPERIMENTS.md §PMEP reads these).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ProviderStats {
+    pub prefetches: u64,
+    pub sync_fetches: u64,
+    pub stall_us: u64,
+    pub bytes_copied: u64,
+    pub evictions: u64,
+}
+
+/// Source of per-layer weights for a worker executor.
+pub trait LayerProvider: Send {
+    fn n_layers(&self) -> usize;
+
+    /// Hint: layer `layer` will be needed soon (async prefetch).
+    fn prefetch(&mut self, _layer: usize) {}
+
+    /// Blocking access to the layer's argument vectors.
+    fn attn_args(&mut self, layer: usize) -> Vec<Value>;
+    fn mlp_args(&mut self, layer: usize) -> Vec<Value>;
+    fn all_args(&mut self, layer: usize) -> Vec<Value>;
+
+    /// Hint: layer `layer` is done for this batch (eviction point).
+    fn release(&mut self, _layer: usize) {}
+
+    /// Monotonic counter bumped whenever the layer's weights may have
+    /// changed identity (eviction + refetch). Lets the worker cache
+    /// device-resident weight literals safely (§Perf).
+    fn epoch(&self, _layer: usize) -> u64 {
+        0
+    }
+
+    fn stats(&self) -> ProviderStats {
+        ProviderStats::default()
+    }
+}
+
+/// All layers resident in device memory.
+pub struct ResidentProvider {
+    layers: Vec<LayerWeights>,
+}
+
+impl ResidentProvider {
+    pub fn new(layers: Vec<LayerWeights>) -> ResidentProvider {
+        ResidentProvider { layers }
+    }
+}
+
+impl LayerProvider for ResidentProvider {
+    fn n_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    fn attn_args(&mut self, layer: usize) -> Vec<Value> {
+        self.layers[layer].attn_args()
+    }
+
+    fn mlp_args(&mut self, layer: usize) -> Vec<Value> {
+        self.layers[layer].mlp_args()
+    }
+
+    fn all_args(&mut self, layer: usize) -> Vec<Value> {
+        self.layers[layer].all_args()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::model::weights::ModelWeights;
+
+    #[test]
+    fn resident_provider_serves_all_layers() {
+        let cfg = ModelConfig::preset("tiny").unwrap();
+        let m = ModelWeights::random(&cfg, 1);
+        let mut p = ResidentProvider::new(m.layers.clone());
+        assert_eq!(p.n_layers(), 4);
+        assert_eq!(p.attn_args(0).len(), 6);
+        assert_eq!(p.mlp_args(3).len(), 6);
+        assert_eq!(p.all_args(1).len(), 12);
+        p.prefetch(2); // no-ops
+        p.release(0);
+        assert_eq!(p.stats().bytes_copied, 0);
+    }
+}

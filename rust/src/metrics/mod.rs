@@ -1,0 +1,150 @@
+//! Serving metrics: latency distribution + throughput, the two axes every
+//! figure in the paper's evaluation reports.
+
+use std::time::{Duration, Instant};
+
+/// Accumulates batch completions.
+#[derive(Clone, Debug)]
+pub struct Recorder {
+    started: Instant,
+    first_completion: Option<Instant>,
+    last_completion: Option<Instant>,
+    latencies_us: Vec<u64>,
+    requests_done: u64,
+    batches_done: u64,
+}
+
+impl Default for Recorder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Recorder {
+    pub fn new() -> Recorder {
+        Recorder {
+            started: Instant::now(),
+            first_completion: None,
+            last_completion: None,
+            latencies_us: Vec::new(),
+            requests_done: 0,
+            batches_done: 0,
+        }
+    }
+
+    /// Record a completed batch of unknown size (counts as 1 request).
+    pub fn record(&mut self, latency: Duration) {
+        self.record_batch(latency, 1);
+    }
+
+    pub fn record_batch(&mut self, latency: Duration, n_requests: usize) {
+        let now = Instant::now();
+        self.first_completion.get_or_insert(now);
+        self.last_completion = Some(now);
+        self.latencies_us.push(latency.as_micros() as u64);
+        self.requests_done += n_requests.max(1) as u64;
+        self.batches_done += 1;
+    }
+
+    pub fn batches(&self) -> u64 {
+        self.batches_done
+    }
+
+    pub fn requests(&self) -> u64 {
+        self.requests_done
+    }
+
+    fn percentile(&self, p: f64) -> Option<Duration> {
+        if self.latencies_us.is_empty() {
+            return None;
+        }
+        let mut xs = self.latencies_us.clone();
+        xs.sort_unstable();
+        let idx = ((xs.len() as f64 - 1.0) * p).round() as usize;
+        Some(Duration::from_micros(xs[idx]))
+    }
+
+    pub fn p50(&self) -> Option<Duration> {
+        self.percentile(0.50)
+    }
+
+    pub fn p95(&self) -> Option<Duration> {
+        self.percentile(0.95)
+    }
+
+    pub fn p99(&self) -> Option<Duration> {
+        self.percentile(0.99)
+    }
+
+    pub fn mean(&self) -> Option<Duration> {
+        if self.latencies_us.is_empty() {
+            return None;
+        }
+        let sum: u64 = self.latencies_us.iter().sum();
+        Some(Duration::from_micros(sum / self.latencies_us.len() as u64))
+    }
+
+    /// Requests per second over the completion window.
+    pub fn throughput_rps(&self) -> f64 {
+        match (self.first_completion, self.last_completion) {
+            (Some(a), Some(b)) if b > a => {
+                (self.requests_done as f64 - 1.0).max(1.0) / (b - a).as_secs_f64()
+            }
+            _ => 0.0,
+        }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.started.elapsed()
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "{} batches / {} requests; mean {} p50 {} p99 {}; {:.1} req/s",
+            self.batches_done,
+            self.requests_done,
+            fmt_opt(self.mean()),
+            fmt_opt(self.p50()),
+            fmt_opt(self.p99()),
+            self.throughput_rps(),
+        )
+    }
+}
+
+fn fmt_opt(d: Option<Duration>) -> String {
+    d.map(crate::util::fmt_duration).unwrap_or_else(|| "-".into())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_ordered() {
+        let mut r = Recorder::new();
+        for ms in [1u64, 2, 3, 4, 5, 6, 7, 8, 9, 100] {
+            r.record(Duration::from_millis(ms));
+        }
+        assert!(r.p50().unwrap() <= r.p95().unwrap());
+        assert!(r.p95().unwrap() <= r.p99().unwrap());
+        assert_eq!(r.p99().unwrap(), Duration::from_millis(100));
+        assert_eq!(r.batches(), 10);
+    }
+
+    #[test]
+    fn empty_recorder_is_safe() {
+        let r = Recorder::new();
+        assert!(r.p50().is_none());
+        assert_eq!(r.throughput_rps(), 0.0);
+        assert!(r.summary().contains("0 batches"));
+    }
+
+    #[test]
+    fn batch_sizes_counted() {
+        let mut r = Recorder::new();
+        r.record_batch(Duration::from_millis(5), 8);
+        r.record_batch(Duration::from_millis(5), 8);
+        assert_eq!(r.requests(), 16);
+        assert_eq!(r.batches(), 2);
+    }
+}

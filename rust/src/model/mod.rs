@@ -1,0 +1,36 @@
+//! Model state on the Rust side: synthetic weights, Megatron 1-D sharding,
+//! and argument assembly for the AOT executables.
+//!
+//! The paper's engine "delegates sub-models to workers [and] loads
+//! parameters into memory" during runtime initialization (§4.1.2); this
+//! module is that parameter store. Weights are synthetic (seeded,
+//! reproducible) since no public checkpoint matches the customized
+//! 12/24/48-layer GPT-3 variants the paper benchmarks.
+
+pub mod shard;
+pub mod weights;
+
+pub use shard::shard_layer;
+pub use weights::{LayerWeights, ModelWeights};
+
+use crate::runtime::VariantMeta;
+use crate::tensor::Value;
+
+/// Assemble the argument vector for a variant from (activations, weights).
+/// Order must match `python/compile/model.py::variant` exactly — the
+/// manifest's input names are cross-checked in debug builds.
+pub fn assemble_args(
+    variant: &VariantMeta,
+    activations: Vec<Value>,
+    weights: &[Value],
+) -> Vec<Value> {
+    let mut args = activations;
+    args.extend(weights.iter().cloned());
+    debug_assert_eq!(
+        args.len(),
+        variant.inputs.len(),
+        "arg count mismatch for {}",
+        variant.name
+    );
+    args
+}

@@ -1,0 +1,187 @@
+//! Synthetic model weights: seeded, reproducible, shaped per the config.
+//!
+//! Weight naming and ordering mirrors `python/compile/model.py`:
+//! ATTN_PARAMS = [ln1_g, ln1_b, wqkv, bqkv, wo, bo]
+//! MLP_PARAMS  = [ln2_g, ln2_b, w1, b1, w2, b2]
+
+use crate::config::ModelConfig;
+use crate::tensor::{Tensor, Value};
+use crate::util::rng::Rng;
+
+/// Canonical per-layer parameter names, in executable argument order.
+pub const ATTN_PARAMS: [&str; 6] = ["ln1_g", "ln1_b", "wqkv", "bqkv", "wo", "bo"];
+pub const MLP_PARAMS: [&str; 6] = ["ln2_g", "ln2_b", "w1", "b1", "w2", "b2"];
+
+/// One transformer layer's full (unsharded) parameters.
+#[derive(Clone, Debug)]
+pub struct LayerWeights {
+    pub ln1_g: Tensor,
+    pub ln1_b: Tensor,
+    pub wqkv: Tensor, // (H, 3H)
+    pub bqkv: Tensor, // (3H,)
+    pub wo: Tensor,   // (H, H)
+    pub bo: Tensor,   // (H,)
+    pub ln2_g: Tensor,
+    pub ln2_b: Tensor,
+    pub w1: Tensor, // (H, F)
+    pub b1: Tensor, // (F,)
+    pub w2: Tensor, // (F, H)
+    pub b2: Tensor, // (H,)
+}
+
+impl LayerWeights {
+    /// GPT-2-style init scaled for inference stability on synthetic data.
+    pub fn random(cfg: &ModelConfig, rng: &mut Rng) -> LayerWeights {
+        let h = cfg.hidden;
+        let f = cfg.ffn();
+        let std_h = 1.0 / (h as f32).sqrt();
+        let std_f = 1.0 / (f as f32).sqrt();
+        let near_one = |rng: &mut Rng, n: usize| {
+            let mut t = Tensor::randn(&[n], 0.02, rng);
+            for v in &mut t.data {
+                *v += 1.0;
+            }
+            t
+        };
+        LayerWeights {
+            ln1_g: near_one(rng, h),
+            ln1_b: Tensor::randn(&[h], 0.02, rng),
+            wqkv: Tensor::randn(&[h, 3 * h], std_h, rng),
+            bqkv: Tensor::randn(&[3 * h], 0.02, rng),
+            wo: Tensor::randn(&[h, h], std_h, rng),
+            bo: Tensor::randn(&[h], 0.02, rng),
+            ln2_g: near_one(rng, h),
+            ln2_b: Tensor::randn(&[h], 0.02, rng),
+            w1: Tensor::randn(&[h, f], std_h, rng),
+            b1: Tensor::randn(&[f], 0.02, rng),
+            w2: Tensor::randn(&[f, h], std_f, rng),
+            b2: Tensor::randn(&[h], 0.02, rng),
+        }
+    }
+
+    pub fn by_name(&self, name: &str) -> &Tensor {
+        match name {
+            "ln1_g" => &self.ln1_g,
+            "ln1_b" => &self.ln1_b,
+            "wqkv" => &self.wqkv,
+            "bqkv" => &self.bqkv,
+            "wo" => &self.wo,
+            "bo" => &self.bo,
+            "ln2_g" => &self.ln2_g,
+            "ln2_b" => &self.ln2_b,
+            "w1" => &self.w1,
+            "b1" => &self.b1,
+            "w2" => &self.w2,
+            "b2" => &self.b2,
+            other => panic!("unknown layer param {other:?}"),
+        }
+    }
+
+    /// Args in ATTN order (layer_full prepends these before MLP ones).
+    pub fn attn_args(&self) -> Vec<Value> {
+        ATTN_PARAMS.iter().map(|n| Value::F32(self.by_name(n).clone())).collect()
+    }
+
+    pub fn mlp_args(&self) -> Vec<Value> {
+        MLP_PARAMS.iter().map(|n| Value::F32(self.by_name(n).clone())).collect()
+    }
+
+    pub fn all_args(&self) -> Vec<Value> {
+        let mut v = self.attn_args();
+        v.extend(self.mlp_args());
+        v
+    }
+
+    /// Total bytes (f32 host storage).
+    pub fn bytes(&self) -> u64 {
+        ATTN_PARAMS
+            .iter()
+            .chain(MLP_PARAMS.iter())
+            .map(|n| self.by_name(n).bytes())
+            .sum()
+    }
+}
+
+/// Full model: embeddings + layers + final layernorm (tied LM head).
+#[derive(Clone, Debug)]
+pub struct ModelWeights {
+    pub cfg: ModelConfig,
+    pub wte: Tensor, // (V, H)
+    pub wpe: Tensor, // (max_seq, H)
+    pub lnf_g: Tensor,
+    pub lnf_b: Tensor,
+    pub layers: Vec<LayerWeights>,
+}
+
+impl ModelWeights {
+    pub fn random(cfg: &ModelConfig, seed: u64) -> ModelWeights {
+        let mut rng = Rng::new(seed);
+        let h = cfg.hidden;
+        let layers = (0..cfg.n_layers)
+            .map(|i| LayerWeights::random(cfg, &mut rng.fork(i as u64)))
+            .collect();
+        ModelWeights {
+            cfg: cfg.clone(),
+            wte: Tensor::randn(&[cfg.vocab, h], 0.02, &mut rng),
+            wpe: Tensor::randn(&[cfg.max_seq, h], 0.01, &mut rng),
+            lnf_g: Tensor::full(&[h], 1.0),
+            lnf_b: Tensor::zeros(&[h]),
+            layers,
+        }
+    }
+
+    pub fn embed_args(&self) -> Vec<Value> {
+        vec![Value::F32(self.wte.clone()), Value::F32(self.wpe.clone())]
+    }
+
+    pub fn logits_args(&self) -> Vec<Value> {
+        vec![
+            Value::F32(self.lnf_g.clone()),
+            Value::F32(self.lnf_b.clone()),
+            Value::F32(self.wte.clone()),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> ModelConfig {
+        ModelConfig::preset("tiny").unwrap()
+    }
+
+    #[test]
+    fn shapes_match_config() {
+        let mut rng = Rng::new(1);
+        let lw = LayerWeights::random(&tiny(), &mut rng);
+        assert_eq!(lw.wqkv.shape, vec![64, 192]);
+        assert_eq!(lw.w1.shape, vec![64, 256]);
+        assert_eq!(lw.w2.shape, vec![256, 64]);
+        assert_eq!(lw.all_args().len(), 12);
+    }
+
+    #[test]
+    fn reproducible_by_seed() {
+        let a = ModelWeights::random(&tiny(), 7);
+        let b = ModelWeights::random(&tiny(), 7);
+        assert_eq!(a.layers[0].wqkv, b.layers[0].wqkv);
+        assert_eq!(a.wte, b.wte);
+        let c = ModelWeights::random(&tiny(), 8);
+        assert_ne!(a.layers[0].wqkv, c.layers[0].wqkv);
+    }
+
+    #[test]
+    fn layers_differ_from_each_other() {
+        let m = ModelWeights::random(&tiny(), 7);
+        assert_ne!(m.layers[0].wqkv, m.layers[1].wqkv);
+    }
+
+    #[test]
+    fn bytes_accounting() {
+        let m = ModelWeights::random(&tiny(), 1);
+        let per_layer = m.layers[0].bytes();
+        // tiny: params_per_layer * 4 bytes
+        assert_eq!(per_layer, tiny().params_per_layer() * 4);
+    }
+}

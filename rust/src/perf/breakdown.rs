@@ -1,0 +1,131 @@
+//! Fig. 2 reproduction: normalized kernel-execution-time distribution of
+//! GPT models (125M → 175B) in a single transformer layer at batch 32,
+//! seq 64, FP16 — the measurement that motivates EnergonAI's "kernel
+//! fusion stops mattering at scale" design argument (§3.1).
+
+use super::{layer_kernels, DeviceModel, KernelClass, LayerShape};
+use crate::config::ModelConfig;
+use std::collections::BTreeMap;
+
+/// Normalized time share per kernel bucket for one model.
+#[derive(Clone, Debug)]
+pub struct Distribution {
+    pub model: String,
+    pub total_seconds: f64,
+    /// (bucket name, fraction of layer time), fractions sum to 1.
+    pub shares: Vec<(String, f64)>,
+}
+
+impl Distribution {
+    pub fn share(&self, bucket: &str) -> f64 {
+        self.shares.iter().find(|(n, _)| n == bucket).map(|(_, s)| *s).unwrap_or(0.0)
+    }
+}
+
+/// Bucket a kernel name the way the paper's figure legend does.
+fn bucket(name: &str, class: KernelClass) -> &'static str {
+    if class == KernelClass::Gemm {
+        return "gemm";
+    }
+    match name {
+        "softmax" => "softmax",
+        "layernorm1" | "layernorm2" => "layernorm",
+        n if n.starts_with("transpose") => "transpose",
+        n if n.starts_with("bias") => "bias_act",
+        n if n.starts_with("residual") => "residual",
+        _ => "other",
+    }
+}
+
+/// Kernel-time distribution for one model config at (batch, seq).
+pub fn distribution(dev: &DeviceModel, cfg: &ModelConfig, batch: usize, seq: usize) -> Distribution {
+    let ks = layer_kernels(dev, cfg, LayerShape::padded(batch, seq, 1), false);
+    let total: f64 = ks.iter().map(|k| k.seconds).sum();
+    let mut by_bucket: BTreeMap<&'static str, f64> = BTreeMap::new();
+    for k in &ks {
+        *by_bucket.entry(bucket(k.name, k.class)).or_default() += k.seconds;
+    }
+    let mut shares: Vec<(String, f64)> = by_bucket
+        .into_iter()
+        .map(|(n, s)| (n.to_string(), s / total))
+        .collect();
+    shares.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    Distribution { model: cfg.name.clone(), total_seconds: total, shares }
+}
+
+/// The full Fig. 2 sweep over the GPT family (paper settings: bs=32 s=64).
+pub fn fig2(dev: &DeviceModel) -> Vec<Distribution> {
+    ModelConfig::gpt_family()
+        .iter()
+        .map(|cfg| distribution(dev, cfg, 32, 64))
+        .collect()
+}
+
+/// Render the figure as an ASCII table (one row per model).
+pub fn render(dists: &[Distribution]) -> String {
+    let mut buckets: Vec<String> = Vec::new();
+    for d in dists {
+        for (n, _) in &d.shares {
+            if !buckets.contains(n) {
+                buckets.push(n.clone());
+            }
+        }
+    }
+    let mut out = format!("{:<12}", "model");
+    for b in &buckets {
+        out += &format!("{b:>11}");
+    }
+    out += &format!("{:>12}\n", "layer_ms");
+    for d in dists {
+        out += &format!("{:<12}", d.model);
+        for b in &buckets {
+            out += &format!("{:>10.1}%", d.share(b) * 100.0);
+        }
+        out += &format!("{:>12.3}\n", d.total_seconds * 1e3);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig2_gemm_share_grows_62_to_96() {
+        // the paper's headline numbers: ~62% at 125M, ~96% at 175B
+        let dists = fig2(&DeviceModel::default());
+        let small = dists.iter().find(|d| d.model == "gpt-125M").unwrap();
+        let big = dists.iter().find(|d| d.model == "gpt-175B").unwrap();
+        let s = small.share("gemm");
+        let b = big.share("gemm");
+        assert!((0.52..0.72).contains(&s), "125M gemm share {s}");
+        assert!((0.90..0.99).contains(&b), "175B gemm share {b}");
+        assert!(b > s);
+    }
+
+    #[test]
+    fn gemm_share_is_monotonic_in_model_size() {
+        let dists = fig2(&DeviceModel::default());
+        let shares: Vec<f64> = dists.iter().map(|d| d.share("gemm")).collect();
+        for w in shares.windows(2) {
+            assert!(w[1] >= w[0] - 0.02, "share dropped: {shares:?}");
+        }
+    }
+
+    #[test]
+    fn shares_sum_to_one() {
+        for d in fig2(&DeviceModel::default()) {
+            let sum: f64 = d.shares.iter().map(|(_, s)| s).sum();
+            assert!((sum - 1.0).abs() < 1e-9, "{}: {sum}", d.model);
+        }
+    }
+
+    #[test]
+    fn render_contains_all_models() {
+        let dists = fig2(&DeviceModel::default());
+        let table = render(&dists);
+        assert!(table.contains("gpt-125M"));
+        assert!(table.contains("gpt-175B"));
+        assert!(table.contains("gemm"));
+    }
+}

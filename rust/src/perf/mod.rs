@@ -1,0 +1,295 @@
+//! Analytic device performance model (A100 roofline).
+//!
+//! Real multi-GPU hardware is the one thing this testbed cannot provide
+//! (DESIGN.md substitution table), so paper-scale figures are regenerated
+//! by costing each kernel with a roofline model: compute-bound kernels run
+//! at `peak_tflops × efficiency`, memory-bound kernels at HBM bandwidth,
+//! and every kernel pays a fixed launch overhead. §3.1/Fig. 2's
+//! observation — GEMM share grows 62%→96% from GPT-125M to GPT-175B —
+//! falls out of this model without per-figure tuning, which is the
+//! calibration check in `breakdown::tests`.
+
+pub mod breakdown;
+
+use crate::config::ModelConfig;
+
+/// Accelerator envelope. Defaults model an NVIDIA A100-80GB (§5.1).
+#[derive(Clone, Copy, Debug)]
+pub struct DeviceModel {
+    /// Peak dense FP16 tensor-core throughput.
+    pub peak_tflops: f64,
+    /// HBM bandwidth (paper quotes 1555 GB/s, §4.4).
+    pub hbm_gbps: f64,
+    /// Fixed kernel-launch + scheduling overhead per kernel.
+    pub launch_us: f64,
+    /// Best-case fraction of peak a large well-shaped GEMM achieves.
+    pub gemm_peak_eff: f64,
+    /// Device memory capacity in bytes (A100-80GB).
+    pub mem_bytes: u64,
+}
+
+impl Default for DeviceModel {
+    fn default() -> Self {
+        DeviceModel {
+            peak_tflops: 312.0,
+            hbm_gbps: 1555.0,
+            launch_us: 4.5,
+            gemm_peak_eff: 0.72,
+            mem_bytes: 80 * 1024 * 1024 * 1024,
+        }
+    }
+}
+
+/// Kernel classes for Fig. 2's distribution.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum KernelClass {
+    Gemm,
+    /// Softmax, layernorm, bias/residual adds, transposes — memory-bound.
+    MemoryBound,
+}
+
+/// One costed kernel invocation.
+#[derive(Clone, Debug)]
+pub struct KernelCost {
+    pub name: &'static str,
+    pub class: KernelClass,
+    pub seconds: f64,
+}
+
+impl DeviceModel {
+    /// GEMM efficiency: large well-shaped GEMMs approach `gemm_peak_eff`;
+    /// small outputs starve the SMs. Utilization is modelled as tile
+    /// occupancy — the number of 128×128 output tiles relative to the
+    /// A100's 108 SMs — which captures §5.3's observation that "splitting
+    /// the workload into pieces can further exacerbate" under-utilization:
+    /// tensor-parallel shards shrink N, cutting the tile count.
+    pub fn gemm_eff(&self, m: usize, n: usize, _k: usize) -> f64 {
+        const TILE: f64 = 128.0;
+        const SMS: f64 = 108.0;
+        let tiles = (m as f64 / TILE).ceil() * (n as f64 / TILE).ceil();
+        // below one full wave, idle SMs are pure waste: occupancy is
+        // simply tiles/SMs, saturating at 1 (A100: 108 SMs)
+        let occ = (tiles / SMS).min(1.0);
+        self.gemm_peak_eff * occ
+    }
+
+    /// Time for one m×n×k GEMM (fp16 in, fp32 accumulate).
+    pub fn gemm_time(&self, m: usize, n: usize, k: usize) -> f64 {
+        let flops = 2.0 * m as f64 * n as f64 * k as f64;
+        let compute = flops / (self.peak_tflops * 1e12 * self.gemm_eff(m, n, k));
+        let bytes = 2.0 * (m * k + k * n + m * n) as f64; // fp16
+        let memory = bytes / (self.hbm_gbps * 1e9);
+        compute.max(memory) + self.launch_us * 1e-6
+    }
+
+    /// A batched GEMM launched as one kernel (attention score/context).
+    pub fn batched_gemm_time(&self, batches: usize, m: usize, n: usize, k: usize) -> f64 {
+        let flops = 2.0 * batches as f64 * (m * n * k) as f64;
+        // batching restores utilization: effective rows = batches * m
+        let eff = self.gemm_eff(batches * m, n, k);
+        let compute = flops / (self.peak_tflops * 1e12 * eff);
+        let bytes = 2.0 * batches as f64 * (m * k + k * n + m * n) as f64;
+        let memory = bytes / (self.hbm_gbps * 1e9);
+        compute.max(memory) + self.launch_us * 1e-6
+    }
+
+    /// Memory-bound elementwise/reduction kernel moving `bytes`.
+    pub fn mem_time(&self, bytes: u64) -> f64 {
+        bytes as f64 / (self.hbm_gbps * 1e9) + self.launch_us * 1e-6
+    }
+}
+
+/// Workload point for one layer execution.
+#[derive(Clone, Copy, Debug)]
+pub struct LayerShape {
+    pub batch: usize,
+    pub seq: usize,
+    /// Rows the *linear* kernels see: `batch*seq` padded, fewer with DRCE.
+    pub linear_rows: usize,
+    /// Tensor-parallel degree (shards heads and ffn).
+    pub tp: usize,
+}
+
+impl LayerShape {
+    pub fn padded(batch: usize, seq: usize, tp: usize) -> LayerShape {
+        LayerShape { batch, seq, linear_rows: batch * seq, tp }
+    }
+
+    pub fn drce(batch: usize, seq: usize, valid_rows: usize, tp: usize) -> LayerShape {
+        LayerShape { batch, seq, linear_rows: valid_rows, tp }
+    }
+}
+
+/// Cost every kernel in one transformer layer (per TP worker).
+///
+/// Kernel list mirrors the L1/L2 decomposition: 4 projection GEMMs + 2 MLP
+/// GEMMs + 2 attention batched GEMMs, with layernorms, softmax, bias adds,
+/// residuals and (without fused attention) transposes as memory-bound
+/// kernels. `fused_attention` folds softmax+transposes into the GEMMs the
+/// way FasterTransformer's fused MHA does (§5.5).
+pub fn layer_kernels(
+    dev: &DeviceModel,
+    cfg: &ModelConfig,
+    shape: LayerShape,
+    fused_attention: bool,
+) -> Vec<KernelCost> {
+    let h = cfg.hidden;
+    let f = cfg.ffn();
+    let hd = cfg.head_dim();
+    let nh = cfg.n_heads / shape.tp;
+    let rows = shape.linear_rows; // rows into linear kernels
+    let act_bytes = |r: usize, c: usize| (r * c * 2) as u64; // fp16
+
+    let mut ks = Vec::new();
+    let gemm = |name, m: usize, n: usize, k: usize| KernelCost {
+        name,
+        class: KernelClass::Gemm,
+        seconds: dev.gemm_time(m, n, k),
+    };
+    let mem = |name, bytes: u64| KernelCost {
+        name,
+        class: KernelClass::MemoryBound,
+        seconds: dev.mem_time(bytes),
+    };
+
+    // attention half
+    ks.push(mem("layernorm1", 2 * act_bytes(rows, h)));
+    ks.push(gemm("qkv_proj", rows, 3 * h / shape.tp, h));
+    if !fused_attention {
+        ks.push(mem("bias_qkv", 2 * act_bytes(rows, 3 * h / shape.tp)));
+        ks.push(mem("transpose_qkv", 2 * act_bytes(shape.batch * shape.seq, 3 * h / shape.tp)));
+    }
+    ks.push(KernelCost {
+        name: "attn_scores",
+        class: KernelClass::Gemm,
+        seconds: dev.batched_gemm_time(shape.batch * nh, shape.seq, shape.seq, hd),
+    });
+    if !fused_attention {
+        ks.push(mem(
+            "softmax",
+            3 * (shape.batch * nh * shape.seq * shape.seq * 2) as u64,
+        ));
+    }
+    ks.push(KernelCost {
+        name: "attn_context",
+        class: KernelClass::Gemm,
+        seconds: dev.batched_gemm_time(shape.batch * nh, shape.seq, hd, shape.seq),
+    });
+    if !fused_attention {
+        ks.push(mem("transpose_ctx", 2 * act_bytes(shape.batch * shape.seq, h / shape.tp)));
+    }
+    ks.push(gemm("out_proj", rows, h, h / shape.tp));
+    ks.push(mem("residual1", 3 * act_bytes(rows, h)));
+
+    // mlp half
+    ks.push(mem("layernorm2", 2 * act_bytes(rows, h)));
+    ks.push(gemm("fc1", rows, f / shape.tp, h));
+    ks.push(mem("bias_gelu", 2 * act_bytes(rows, f / shape.tp)));
+    ks.push(gemm("fc2", rows, h, f / shape.tp));
+    ks.push(mem("residual2", 3 * act_bytes(rows, h)));
+    ks
+}
+
+/// Total single-device time for one layer.
+pub fn layer_time(dev: &DeviceModel, cfg: &ModelConfig, shape: LayerShape, fused: bool) -> f64 {
+    layer_kernels(dev, cfg, shape, fused).iter().map(|k| k.seconds).sum()
+}
+
+/// Embedding lookup (memory-bound gather) — the stage-0 extra the paper
+/// blames for slight pipeline imbalance (§5.4).
+pub fn embed_time(dev: &DeviceModel, cfg: &ModelConfig, batch: usize, seq: usize) -> f64 {
+    dev.mem_time((batch * seq * cfg.hidden * 2 * 2) as u64)
+}
+
+/// LM head: final layernorm + (rows × vocab × hidden) GEMM.
+pub fn logits_time(dev: &DeviceModel, cfg: &ModelConfig, batch: usize, seq: usize) -> f64 {
+    dev.mem_time((batch * seq * cfg.hidden * 2 * 2) as u64)
+        + dev.gemm_time(batch * seq, cfg.vocab, cfg.hidden)
+}
+
+/// FLOPs of one layer forward at the given shape (for TFLOPS reporting in
+/// Fig. 13; matches the model the paper computes "with the parameters").
+pub fn layer_flops(cfg: &ModelConfig, batch: usize, seq: usize) -> f64 {
+    let h = cfg.hidden as f64;
+    let f = cfg.ffn() as f64;
+    let rows = (batch * seq) as f64;
+    let attn_gemms = 4.0 * (batch * cfg.n_heads) as f64 * (seq * seq) as f64 * cfg.head_dim() as f64;
+    2.0 * rows * (3.0 * h * h + h * h + h * f + f * h) + attn_gemms
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gpt(name: &str) -> ModelConfig {
+        ModelConfig::gpt_family().into_iter().find(|c| c.name == name).unwrap()
+    }
+
+    #[test]
+    fn gemm_eff_grows_with_rows() {
+        let d = DeviceModel::default();
+        assert!(d.gemm_eff(2048, 768, 768) > d.gemm_eff(128, 768, 768));
+        assert!(d.gemm_eff(4096, 4096, 4096) <= d.gemm_peak_eff);
+    }
+
+    #[test]
+    fn gemm_time_monotonic() {
+        let d = DeviceModel::default();
+        assert!(d.gemm_time(2048, 3072, 768) < d.gemm_time(2048, 3072, 12288));
+    }
+
+    #[test]
+    fn layer_time_scales_superlinearly_with_hidden() {
+        let d = DeviceModel::default();
+        let small = gpt("gpt-125M");
+        let big = gpt("gpt-175B");
+        let s = layer_time(&d, &small, LayerShape::padded(32, 64, 1), false);
+        let b = layer_time(&d, &big, LayerShape::padded(32, 64, 1), false);
+        // hidden grows 16x, gemm work 256x; total should grow >100x
+        assert!(b / s > 100.0, "ratio {}", b / s);
+    }
+
+    #[test]
+    fn tp_divides_gemm_work() {
+        let d = DeviceModel::default();
+        let cfg = gpt("gpt-175B");
+        let t1 = layer_time(&d, &cfg, LayerShape::padded(32, 128, 1), false);
+        let t8 = layer_time(&d, &cfg, LayerShape::padded(32, 128, 8), false);
+        let speedup = t1 / t8;
+        assert!(speedup > 4.0 && speedup < 8.0, "speedup {speedup}");
+    }
+
+    #[test]
+    fn drce_halves_linear_time() {
+        let d = DeviceModel::default();
+        let cfg = gpt("gpt-175B");
+        let full = layer_time(&d, &cfg, LayerShape::padded(32, 64, 1), false);
+        let drce = layer_time(&d, &cfg, LayerShape::drce(32, 64, 32 * 32, 1), false);
+        let ratio = drce / full;
+        // linears dominate at 175B and see half the rows -> ~0.5-0.65
+        assert!(ratio > 0.45 && ratio < 0.7, "ratio {ratio}");
+    }
+
+    #[test]
+    fn fused_attention_reduces_time() {
+        let d = DeviceModel::default();
+        let cfg = gpt("gpt-125M");
+        let shape = LayerShape::padded(1, 64, 1);
+        let unfused = layer_time(&d, &cfg, shape, false);
+        let fused = layer_time(&d, &cfg, shape, true);
+        assert!(fused < unfused);
+        // at tiny batch the gap is material (>5%) — §5.5's bs=1 observation
+        assert!((unfused - fused) / unfused > 0.05);
+    }
+
+    #[test]
+    fn layer_flops_match_formula() {
+        let cfg = gpt("gpt-175B");
+        let fl = layer_flops(&cfg, 32, 64);
+        // 12*rows*h^2-ish: sanity window
+        let rows = 2048.0;
+        let h = 12288.0f64;
+        let approx = 2.0 * rows * 12.0 * h * h;
+        assert!((fl / approx - 1.0).abs() < 0.1, "{fl} vs {approx}");
+    }
+}

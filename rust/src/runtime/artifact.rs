@@ -1,0 +1,256 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! Rust runtime. The manifest records, for every AOT-lowered variant, its
+//! HLO file, shape point (batch, seq, tp, t_bucket) and the exact argument
+//! order/shapes/dtypes — the loader refuses to execute on any mismatch.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Supported artifact dtypes (all our variants use these two).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn parse(s: &str) -> anyhow::Result<DType> {
+        match s {
+            "float32" => Ok(DType::F32),
+            "int32" => Ok(DType::I32),
+            other => anyhow::bail!("unsupported dtype {other:?} in manifest"),
+        }
+    }
+}
+
+/// One executable argument or output.
+#[derive(Clone, Debug)]
+pub struct ArgMeta {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+/// One AOT-lowered executable.
+#[derive(Clone, Debug)]
+pub struct VariantMeta {
+    pub name: String,
+    pub kind: String,
+    pub preset: String,
+    pub file: String,
+    pub batch: usize,
+    pub seq: usize,
+    pub tp: usize,
+    pub t_bucket: usize,
+    pub inputs: Vec<ArgMeta>,
+    pub outputs: Vec<ArgMeta>,
+}
+
+impl VariantMeta {
+    /// Rows the variant's row-shaped input expects (mlp_shard / DRCE).
+    pub fn rows(&self) -> usize {
+        if self.t_bucket > 0 {
+            self.t_bucket
+        } else {
+            self.batch * self.seq
+        }
+    }
+}
+
+/// Model geometry recorded in the manifest (mirrors config::ModelConfig).
+#[derive(Clone, Debug)]
+pub struct ManifestConfig {
+    pub name: String,
+    pub hidden: usize,
+    pub n_heads: usize,
+    pub ffn: usize,
+    pub vocab: usize,
+    pub max_seq: usize,
+    pub n_layers: usize,
+}
+
+/// Parsed `artifacts/manifest.json` + the directory it lives in.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub configs: BTreeMap<String, ManifestConfig>,
+    pub variants: BTreeMap<String, VariantMeta>,
+}
+
+fn parse_arg(j: &Json, with_name: bool) -> anyhow::Result<ArgMeta> {
+    let shape = j
+        .arr_field("shape")?
+        .iter()
+        .map(|s| s.as_usize().ok_or_else(|| anyhow::anyhow!("bad shape entry")))
+        .collect::<anyhow::Result<Vec<_>>>()?;
+    Ok(ArgMeta {
+        name: if with_name { j.str_field("name")?.to_string() } else { String::new() },
+        shape,
+        dtype: DType::parse(j.str_field("dtype")?)?,
+    })
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> anyhow::Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("read {path:?}: {e}. Run `make artifacts` first."))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("parse {path:?}: {e}"))?;
+        anyhow::ensure!(
+            j.usize_field("format_version")? == 1,
+            "unsupported manifest format"
+        );
+
+        let mut configs = BTreeMap::new();
+        for c in j.arr_field("configs")? {
+            let mc = ManifestConfig {
+                name: c.str_field("name")?.to_string(),
+                hidden: c.usize_field("hidden")?,
+                n_heads: c.usize_field("n_heads")?,
+                ffn: c.usize_field("ffn")?,
+                vocab: c.usize_field("vocab")?,
+                max_seq: c.usize_field("max_seq")?,
+                n_layers: c.usize_field("n_layers")?,
+            };
+            configs.insert(mc.name.clone(), mc);
+        }
+
+        let mut variants = BTreeMap::new();
+        for v in j.arr_field("variants")? {
+            let vm = VariantMeta {
+                name: v.str_field("name")?.to_string(),
+                kind: v.str_field("kind")?.to_string(),
+                preset: v.str_field("preset")?.to_string(),
+                file: v.str_field("file")?.to_string(),
+                batch: v.usize_field("batch").unwrap_or(0),
+                seq: v.usize_field("seq").unwrap_or(0),
+                tp: v.usize_field("tp").unwrap_or(1),
+                t_bucket: v.usize_field("t_bucket").unwrap_or(0),
+                inputs: v
+                    .arr_field("inputs")?
+                    .iter()
+                    .map(|a| parse_arg(a, true))
+                    .collect::<anyhow::Result<_>>()?,
+                outputs: v
+                    .arr_field("outputs")?
+                    .iter()
+                    .map(|a| parse_arg(a, false))
+                    .collect::<anyhow::Result<_>>()?,
+            };
+            variants.insert(vm.name.clone(), vm);
+        }
+        Ok(Manifest { dir, configs, variants })
+    }
+
+    pub fn get(&self, name: &str) -> anyhow::Result<&VariantMeta> {
+        self.variants
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("variant {name:?} not in manifest (re-run `make artifacts`)"))
+    }
+
+    pub fn hlo_path(&self, v: &VariantMeta) -> PathBuf {
+        self.dir.join(&v.file)
+    }
+
+    /// All variants of a kind for a preset.
+    pub fn by_kind<'a>(&'a self, preset: &'a str, kind: &'a str) -> impl Iterator<Item = &'a VariantMeta> {
+        self.variants
+            .values()
+            .filter(move |v| v.preset == preset && v.kind == kind)
+    }
+
+    /// Canonical variant names (must mirror python/compile/model.py).
+    pub fn name_of(preset: &str, kind: &str, batch: usize, seq: usize, tp: usize, t_bucket: usize) -> String {
+        match kind {
+            "embed" => format!("{preset}_embed_b{batch}_s{seq}"),
+            "layer_full" => format!("{preset}_layer_full_b{batch}_s{seq}"),
+            "logits" => format!("{preset}_logits_b{batch}_s{seq}"),
+            "attn_shard" => format!("{preset}_attn_shard_tp{tp}_b{batch}_s{seq}"),
+            "mlp_shard" => {
+                let rows = if t_bucket > 0 { t_bucket } else { batch * seq };
+                format!("{preset}_mlp_shard_tp{tp}_r{rows}")
+            }
+            "drce_attn_shard" => {
+                format!("{preset}_drce_attn_shard_tp{tp}_b{batch}_s{seq}_t{t_bucket}")
+            }
+            other => panic!("unknown variant kind {other:?}"),
+        }
+    }
+
+    /// Shape points (batch, seq) available for a preset's `layer_full`.
+    pub fn shape_points(&self, preset: &str) -> Vec<(usize, usize)> {
+        let mut pts: Vec<(usize, usize)> = self
+            .by_kind(preset, "layer_full")
+            .map(|v| (v.batch, v.seq))
+            .collect();
+        pts.sort();
+        pts.dedup();
+        pts
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "format_version": 1,
+      "configs": [{"name": "tiny", "hidden": 64, "n_heads": 2, "head_dim": 32,
+                   "ffn": 256, "vocab": 128, "max_seq": 32, "n_layers": 4}],
+      "variants": [
+        {"name": "tiny_layer_full_b2_s16", "kind": "layer_full", "preset": "tiny",
+         "file": "tiny_layer_full_b2_s16.hlo.txt", "batch": 2, "seq": 16, "tp": 1,
+         "t_bucket": 0,
+         "inputs": [{"name": "x", "shape": [2, 16, 64], "dtype": "float32"},
+                    {"name": "valid_len", "shape": [2], "dtype": "int32"}],
+         "outputs": [{"shape": [2, 16, 64], "dtype": "float32"}]}
+      ]
+    }"#;
+
+    fn write_sample(dir: &std::path::Path) {
+        std::fs::write(dir.join("manifest.json"), SAMPLE).unwrap();
+    }
+
+    #[test]
+    fn parse_sample() {
+        let dir = std::env::temp_dir().join(format!("eai-man-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        write_sample(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.configs["tiny"].hidden, 64);
+        let v = m.get("tiny_layer_full_b2_s16").unwrap();
+        assert_eq!(v.inputs.len(), 2);
+        assert_eq!(v.inputs[1].dtype, DType::I32);
+        assert_eq!(v.outputs[0].shape, vec![2, 16, 64]);
+        assert_eq!(m.shape_points("tiny"), vec![(2, 16)]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn names_mirror_python() {
+        assert_eq!(
+            Manifest::name_of("tiny", "layer_full", 2, 16, 1, 0),
+            "tiny_layer_full_b2_s16"
+        );
+        assert_eq!(
+            Manifest::name_of("small", "drce_attn_shard", 4, 64, 2, 128),
+            "small_drce_attn_shard_tp2_b4_s64_t128"
+        );
+        assert_eq!(Manifest::name_of("tiny", "mlp_shard", 2, 16, 2, 0), "tiny_mlp_shard_tp2_r32");
+        assert_eq!(Manifest::name_of("tiny", "mlp_shard", 0, 0, 1, 16), "tiny_mlp_shard_tp1_r16");
+    }
+
+    #[test]
+    fn missing_variant_is_friendly_error() {
+        let dir = std::env::temp_dir().join(format!("eai-man2-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        write_sample(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        let err = m.get("nope").unwrap_err().to_string();
+        assert!(err.contains("make artifacts"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

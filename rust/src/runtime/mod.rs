@@ -1,0 +1,35 @@
+//! Runtime: artifact manifest + PJRT execution.
+//!
+//! This is the boundary between L3 (Rust coordination) and L2/L1 (the AOT
+//! compiled JAX/Pallas compute). Everything below this module is
+//! numerics-free; everything above never touches Python.
+
+pub mod artifact;
+pub mod pjrt;
+
+pub use artifact::{ArgMeta, DType, Manifest, VariantMeta};
+pub use pjrt::{valid_len_arg, Device, DeviceStats};
+
+/// Default artifacts directory (relative to the repo root / CWD).
+pub const ARTIFACTS_DIR: &str = "artifacts";
+
+/// Locate the artifacts directory: `$ENERGONAI_ARTIFACTS`, else walk up
+/// from CWD looking for `artifacts/manifest.json` (so examples and tests
+/// work from any subdirectory of the repo).
+pub fn find_artifacts() -> anyhow::Result<std::path::PathBuf> {
+    if let Ok(dir) = std::env::var("ENERGONAI_ARTIFACTS") {
+        return Ok(dir.into());
+    }
+    let mut cur = std::env::current_dir()?;
+    loop {
+        let cand = cur.join(ARTIFACTS_DIR);
+        if cand.join("manifest.json").exists() {
+            return Ok(cand);
+        }
+        if !cur.pop() {
+            anyhow::bail!(
+                "artifacts/manifest.json not found above the current directory; run `make artifacts`"
+            );
+        }
+    }
+}

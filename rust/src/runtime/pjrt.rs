@@ -1,0 +1,287 @@
+//! PJRT execution: load HLO-text artifacts, compile once, execute many.
+//!
+//! One [`Device`] per worker thread — PJRT wrapper types hold raw pointers
+//! and are not `Send`, which conveniently enforces the paper's one-device-
+//! one-worker discipline. Compilation is cached per variant name; the
+//! request path is `Literal`-in/`Literal`-out with shape/dtype validation
+//! against the manifest.
+
+use super::artifact::{ArgMeta, DType, Manifest, VariantMeta};
+use crate::tensor::{IntTensor, Tensor, Value};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+/// A simulated accelerator: its own PJRT client + executable cache.
+pub struct Device {
+    pub id: usize,
+    client: xla::PjRtClient,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    /// compile + execute counters (perf accounting / tests)
+    pub stats: RefCell<DeviceStats>,
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct DeviceStats {
+    pub compiles: u64,
+    pub executions: u64,
+}
+
+impl Device {
+    pub fn new(id: usize) -> anyhow::Result<Device> {
+        Ok(Device {
+            id,
+            client: xla::PjRtClient::cpu()?,
+            cache: RefCell::new(HashMap::new()),
+            stats: RefCell::new(DeviceStats::default()),
+        })
+    }
+
+    /// Compile (or fetch from cache) a variant's executable.
+    pub fn load(&self, manifest: &Manifest, variant: &VariantMeta) -> anyhow::Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(&variant.name) {
+            return Ok(exe.clone());
+        }
+        let path = manifest.hlo_path(variant);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow::anyhow!("load {path:?}: {e}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(
+            self.client
+                .compile(&comp)
+                .map_err(|e| anyhow::anyhow!("compile {}: {e}", variant.name))?,
+        );
+        self.stats.borrow_mut().compiles += 1;
+        self.cache.borrow_mut().insert(variant.name.clone(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Pre-compile a set of variants (worker init, §4.1.2's runtime
+    /// initialization stage).
+    pub fn warmup<'a>(
+        &self,
+        manifest: &Manifest,
+        variants: impl IntoIterator<Item = &'a VariantMeta>,
+    ) -> anyhow::Result<()> {
+        for v in variants {
+            self.load(manifest, v)?;
+        }
+        Ok(())
+    }
+
+    /// Execute a variant. Validates every argument against the manifest.
+    pub fn execute(
+        &self,
+        manifest: &Manifest,
+        variant: &VariantMeta,
+        args: &[Value],
+    ) -> anyhow::Result<Vec<Tensor>> {
+        validate_args(variant, args)?;
+        let exe = self.load(manifest, variant)?;
+        let literals: Vec<xla::Literal> = args.iter().map(to_literal).collect::<anyhow::Result<_>>()?;
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow::anyhow!("execute {}: {e}", variant.name))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch result of {}: {e}", variant.name))?;
+        self.stats.borrow_mut().executions += 1;
+        // aot.py lowers with return_tuple=True: unpack the tuple
+        let parts = result
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("untuple result of {}: {e}", variant.name))?;
+        anyhow::ensure!(
+            parts.len() == variant.outputs.len(),
+            "{}: expected {} outputs, got {}",
+            variant.name,
+            variant.outputs.len(),
+            parts.len()
+        );
+        parts
+            .into_iter()
+            .zip(&variant.outputs)
+            .map(|(lit, meta)| from_literal(lit, meta))
+            .collect()
+    }
+
+    /// Execute with a pre-converted weight tail ([`prepare`]): only the
+    /// activations are converted per call. This is the hot-path variant —
+    /// weights stay "resident on device" across batches (§Perf).
+    pub fn execute_prepared(
+        &self,
+        manifest: &Manifest,
+        variant: &VariantMeta,
+        activations: &[Value],
+        weights: &[xla::Literal],
+    ) -> anyhow::Result<Vec<Tensor>> {
+        anyhow::ensure!(
+            activations.len() + weights.len() == variant.inputs.len(),
+            "{}: {} activations + {} prepared weights != {} inputs",
+            variant.name,
+            activations.len(),
+            weights.len(),
+            variant.inputs.len()
+        );
+        for (i, (arg, meta)) in activations.iter().zip(&variant.inputs).enumerate() {
+            anyhow::ensure!(
+                shape_matches(meta, arg.shape()),
+                "{}: activation {i} ({}) shape {:?}, expected {:?}",
+                variant.name,
+                meta.name,
+                arg.shape(),
+                meta.shape
+            );
+        }
+        let exe = self.load(manifest, variant)?;
+        let act_lits: Vec<xla::Literal> =
+            activations.iter().map(to_literal).collect::<anyhow::Result<_>>()?;
+        let all: Vec<&xla::Literal> = act_lits.iter().chain(weights.iter()).collect();
+        let result = exe
+            .execute::<&xla::Literal>(&all)
+            .map_err(|e| anyhow::anyhow!("execute {}: {e}", variant.name))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch result of {}: {e}", variant.name))?;
+        self.stats.borrow_mut().executions += 1;
+        let parts = result
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("untuple result of {}: {e}", variant.name))?;
+        parts
+            .into_iter()
+            .zip(&variant.outputs)
+            .map(|(lit, meta)| from_literal(lit, meta))
+            .collect()
+    }
+}
+
+fn shape_matches(meta: &ArgMeta, got: &[usize]) -> bool {
+    meta.shape == got
+}
+
+fn validate_args(variant: &VariantMeta, args: &[Value]) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        args.len() == variant.inputs.len(),
+        "{}: expected {} args, got {}",
+        variant.name,
+        variant.inputs.len(),
+        args.len()
+    );
+    for (i, (arg, meta)) in args.iter().zip(&variant.inputs).enumerate() {
+        let ok = match (arg, meta.dtype) {
+            (Value::F32(_), DType::F32) | (Value::I32(_), DType::I32) => true,
+            _ => false,
+        };
+        anyhow::ensure!(ok, "{}: arg {i} ({}) dtype mismatch", variant.name, meta.name);
+        anyhow::ensure!(
+            shape_matches(meta, arg.shape()),
+            "{}: arg {i} ({}) shape {:?}, expected {:?}",
+            variant.name,
+            meta.name,
+            arg.shape(),
+            meta.shape
+        );
+    }
+    Ok(())
+}
+
+/// Host tensor -> device literal, one copy (no vec1+reshape round trip).
+pub fn to_literal(v: &Value) -> anyhow::Result<xla::Literal> {
+    let (ty, dims, bytes): (xla::ElementType, &[usize], &[u8]) = match v {
+        Value::F32(t) => (
+            xla::ElementType::F32,
+            &t.shape,
+            unsafe { std::slice::from_raw_parts(t.data.as_ptr() as *const u8, t.data.len() * 4) },
+        ),
+        Value::I32(t) => (
+            xla::ElementType::S32,
+            &t.shape,
+            unsafe { std::slice::from_raw_parts(t.data.as_ptr() as *const u8, t.data.len() * 4) },
+        ),
+    };
+    xla::Literal::create_from_shape_and_untyped_data(ty, dims, bytes)
+        .map_err(|e| anyhow::anyhow!("create literal: {e}"))
+}
+
+/// Pre-convert a weight tail to device literals once ("weights resident on
+/// device") — the §Perf optimization that removes per-batch re-upload.
+pub fn prepare(values: &[Value]) -> anyhow::Result<Vec<xla::Literal>> {
+    values.iter().map(to_literal).collect()
+}
+
+fn from_literal(lit: xla::Literal, meta: &ArgMeta) -> anyhow::Result<Tensor> {
+    anyhow::ensure!(meta.dtype == DType::F32, "only f32 outputs supported");
+    let data = lit
+        .to_vec::<f32>()
+        .map_err(|e| anyhow::anyhow!("output to_vec: {e}"))?;
+    Ok(Tensor::new(&meta.shape, data))
+}
+
+/// Convenience: wrap valid lengths as the i32 arg every layer takes.
+pub fn valid_len_arg(valid_lens: &[usize]) -> Value {
+    Value::I32(IntTensor::from_vec(valid_lens.iter().map(|&v| v as i32).collect()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Execution against real artifacts lives in rust/tests/ (integration);
+    // here we unit-test validation logic only.
+
+    fn variant() -> VariantMeta {
+        VariantMeta {
+            name: "v".into(),
+            kind: "layer_full".into(),
+            preset: "tiny".into(),
+            file: "v.hlo.txt".into(),
+            batch: 2,
+            seq: 16,
+            tp: 1,
+            t_bucket: 0,
+            inputs: vec![
+                ArgMeta { name: "x".into(), shape: vec![2, 16, 64], dtype: DType::F32 },
+                ArgMeta { name: "valid_len".into(), shape: vec![2], dtype: DType::I32 },
+            ],
+            outputs: vec![ArgMeta { name: String::new(), shape: vec![2, 16, 64], dtype: DType::F32 }],
+        }
+    }
+
+    #[test]
+    fn validate_catches_wrong_count() {
+        let v = variant();
+        let args = vec![Value::F32(Tensor::zeros(&[2, 16, 64]))];
+        assert!(validate_args(&v, &args).is_err());
+    }
+
+    #[test]
+    fn validate_catches_wrong_shape() {
+        let v = variant();
+        let args = vec![
+            Value::F32(Tensor::zeros(&[2, 16, 32])),
+            valid_len_arg(&[16, 16]),
+        ];
+        let err = validate_args(&v, &args).unwrap_err().to_string();
+        assert!(err.contains("shape"), "{err}");
+    }
+
+    #[test]
+    fn validate_catches_wrong_dtype() {
+        let v = variant();
+        let args = vec![
+            valid_len_arg(&[0; 2 * 16 * 64]).to_owned(),
+            valid_len_arg(&[16, 16]),
+        ];
+        // first arg is i32 but must be f32 — shape check would also fail,
+        // dtype fires first
+        let err = validate_args(&v, &args).unwrap_err().to_string();
+        assert!(err.contains("dtype"), "{err}");
+    }
+
+    #[test]
+    fn validate_accepts_good_args() {
+        let v = variant();
+        let args = vec![
+            Value::F32(Tensor::zeros(&[2, 16, 64])),
+            valid_len_arg(&[16, 9]),
+        ];
+        assert!(validate_args(&v, &args).is_ok());
+    }
+}

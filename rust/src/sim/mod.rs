@@ -1,0 +1,87 @@
+//! Paper-scale simulation (the DESIGN.md hardware substitution).
+//!
+//! The coordinator's *policies* run for real in this repo (tests exercise
+//! them through PJRT on scaled-down models); what a 1-core CPU testbed
+//! cannot do is time GPT-3-sized kernels on 8×A100. These simulators
+//! re-cost the same schedules with the [`perf`](crate::perf) roofline and
+//! the [`comm::topology`](crate::comm::topology) link model, sharing the
+//! policy code (layer partitioning, offload placement, bucket picking)
+//! with the real engine so the *shape* of every figure comes from the
+//! same decisions the live system makes.
+//!
+//! * [`tp`] — tensor-parallel latency (Fig. 10, Fig. 12 incl. DRCE)
+//! * [`pipeline`] — microbatch pipeline timeline, non-blocking vs
+//!   blocking rendezvous (Fig. 11)
+//! * [`pmep`] — compute/copy overlap timeline for peer-memory pooling vs
+//!   CPU offload (Fig. 13)
+
+pub mod pipeline;
+pub mod report;
+pub mod pmep;
+pub mod tp;
+
+use crate::perf::DeviceModel;
+
+/// Engine-side fixed cost per batch command (RPC publish + thread hop).
+/// Measured on the real engine (EXPERIMENTS.md §Perf) and scaled to the
+/// paper's PyTorch-RPC setup.
+pub const ENGINE_OVERHEAD_US: f64 = 80.0;
+
+/// System under simulation: EnergonAI or the FasterTransformer baseline.
+///
+/// FT's two advantages the paper concedes (§5.5): warm-up GEMM algorithm
+/// selection (a slightly higher effective GEMM efficiency) and the fused
+/// MHA kernel (no separate softmax/transpose/bias launches). Its
+/// disadvantage: blocking `nccl_send/recv` pipeline hand-offs (§5.4).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum System {
+    EnergonAi,
+    EnergonAiDrce,
+    FasterTransformer,
+}
+
+impl System {
+    /// Device model as seen by this system's kernels.
+    pub fn device(&self) -> DeviceModel {
+        let mut d = DeviceModel::default();
+        if *self == System::FasterTransformer {
+            // cublas algo selection in the warm-up phase (§5.5)
+            d.gemm_peak_eff *= 1.08;
+        }
+        d
+    }
+
+    /// Whether attention-side memory kernels are fused away.
+    pub fn fused_attention(&self) -> bool {
+        matches!(self, System::FasterTransformer)
+    }
+
+    pub fn blocking_pipeline(&self) -> bool {
+        matches!(self, System::FasterTransformer)
+    }
+
+    pub fn drce(&self) -> bool {
+        matches!(self, System::EnergonAiDrce)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ft_has_fused_and_blocking() {
+        assert!(System::FasterTransformer.fused_attention());
+        assert!(System::FasterTransformer.blocking_pipeline());
+        assert!(!System::EnergonAi.fused_attention());
+        assert!(!System::EnergonAi.blocking_pipeline());
+        assert!(System::EnergonAiDrce.drce());
+    }
+
+    #[test]
+    fn ft_device_is_faster_on_gemm() {
+        let e = System::EnergonAi.device();
+        let f = System::FasterTransformer.device();
+        assert!(f.gemm_peak_eff > e.gemm_peak_eff);
+    }
+}

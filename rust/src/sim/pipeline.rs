@@ -1,0 +1,220 @@
+//! Pipeline-parallel timeline simulation — regenerates Fig. 11 (pipeline
+//! scalability, EnergonAI NBPP vs FasterTransformer blocking comms).
+//!
+//! The schedule mirrors the real worker loop: stage s processes batches in
+//! ticket order; batch k enters stage s when (a) the stage is free and (b)
+//! the activation has arrived from stage s-1. The two systems differ in
+//! hand-off semantics, exactly like `comm::channel::Mode`:
+//!
+//! * **Non-blocking (NBPP)**: the sender enqueues and immediately starts
+//!   its next batch (buffered channel; asynchronous comm overlaps).
+//! * **Blocking (FT)**: `nccl_send` is a rendezvous — the sender stays
+//!   busy until the receiver reaches the matching `recv`, so a slow
+//!   downstream stage bubbles the upstream one (§5.4).
+
+use super::System;
+use crate::comm::topology::Topology;
+use crate::config::{ModelConfig, ParallelConfig};
+use crate::perf::{self, LayerShape};
+
+/// One pipeline throughput query.
+#[derive(Clone, Debug)]
+pub struct PipelineQuery {
+    pub cfg: ModelConfig,
+    pub topo: Topology,
+    pub pp: usize,
+    pub batch: usize,
+    pub seq: usize,
+    pub n_batches: usize,
+    pub system: System,
+    /// Override the hand-off semantics independently of `system` — used by
+    /// the ablation that isolates NBPP from FT's kernel-speed edge.
+    pub blocking_override: Option<bool>,
+}
+
+impl PipelineQuery {
+    fn blocking(&self) -> bool {
+        self.blocking_override.unwrap_or_else(|| self.system.blocking_pipeline())
+    }
+}
+
+/// Per-stage compute time (embed on stage 0, logits on the last — the
+/// imbalance the paper mentions in §5.4).
+/// Exposed for debugging/benches: per-stage compute time.
+pub fn dbg_stage_time(q: &PipelineQuery, stage: usize) -> f64 {
+    stage_time(q, stage)
+}
+
+fn stage_time(q: &PipelineQuery, stage: usize) -> f64 {
+    let dev = q.system.device();
+    let par = ParallelConfig::new(1, q.pp);
+    let layers = par.stage_layers(stage, q.cfg.n_layers).len() as f64;
+    let shape = LayerShape::padded(q.batch, q.seq, 1);
+    let mut t = layers * perf::layer_time(&dev, &q.cfg, shape, q.system.fused_attention());
+    if stage == 0 {
+        // the paper's §5.4 workload measures the transformer stack: the
+        // only per-stage extra it mentions is "one embedding module in the
+        // top", whose slight imbalance grows with device count — no
+        // vocab-projection head is benchmarked
+        t += perf::embed_time(&dev, &q.cfg, q.batch, q.seq);
+    }
+    t
+}
+
+/// Activation transfer time between consecutive stages.
+fn xfer_time(q: &PipelineQuery, stage: usize) -> f64 {
+    if q.pp <= 1 {
+        return 0.0;
+    }
+    let bytes = (q.batch * q.seq * q.cfg.hidden * 2) as u64;
+    q.topo.p2p_time(stage, stage + 1, bytes)
+}
+
+/// Per-boundary stream-synchronize cost of blocking comms, as a fraction
+/// of the stage's compute time (kernel-drain + relaunch lost overlap).
+/// Calibrated once against Fig. 11's reported EnergonAI-vs-FT gap.
+pub const BLOCKING_SYNC_FRACTION: f64 = 0.06;
+
+/// Simulate the pipeline timeline; returns the makespan in seconds.
+pub fn makespan(q: &PipelineQuery) -> f64 {
+    let stages = q.pp;
+    let compute: Vec<f64> = (0..stages).map(|s| stage_time(q, s)).collect();
+    // stage_free[s]: when stage s can start its next batch
+    let mut stage_free = vec![0.0f64; stages];
+    // arrival of batch k at stage s
+    let mut finish_last = 0.0;
+    for k in 0..q.n_batches {
+        // engine publishes command k (non-blocking in both systems; the
+        // paper's engine is EnergonAI's — FT uses a driver loop, costed
+        // the same)
+        let launch = super::ENGINE_OVERHEAD_US * 1e-6 * (k as f64 + 1.0);
+        let mut arrive = launch;
+        for s in 0..stages {
+            let start = arrive.max(stage_free[s]);
+            let done = start + compute[s];
+            if s + 1 < stages {
+                let xfer = xfer_time(q, s);
+                if q.blocking() {
+                    // rendezvous nccl_send/recv: the transfer can only run
+                    // once BOTH sides arrive and it occupies both; after
+                    // the blocking call returns, the host must re-launch
+                    // the next batch's kernel stream — a serial cost that
+                    // cannot overlap anything (§5.4's bubbles; the
+                    // fraction is calibrated once to Fig. 11's reported
+                    // ~10% EnergonAI-vs-FT scalability gap)
+                    let rendezvous = done.max(stage_free[s + 1]);
+                    let xfer_end = rendezvous + xfer;
+                    stage_free[s] = xfer_end + BLOCKING_SYNC_FRACTION * compute[s];
+                    arrive = xfer_end;
+                } else {
+                    // NBPP: async send — the copy streams out while the
+                    // sender starts its next batch and the receiver
+                    // finishes its previous one
+                    stage_free[s] = done;
+                    arrive = done + xfer;
+                }
+            } else {
+                // last stage: the reply send back to the engine is also a
+                // blocking boundary in FT mode (stream sync before the
+                // synchronous send); NBPP replies through a buffered
+                // channel while the next batch's kernels launch. A 1-GPU
+                // run has no comm boundaries at all — it is the unpenalized
+                // baseline both systems normalize against.
+                stage_free[s] = if q.blocking() && stages > 1 {
+                    done + BLOCKING_SYNC_FRACTION * compute[s]
+                } else {
+                    done
+                };
+                finish_last = done;
+            }
+        }
+    }
+    finish_last
+}
+
+/// Throughput speedup vs the 1-GPU run of the same system (Fig. 11's y-axis).
+pub fn speedup(q: &PipelineQuery) -> f64 {
+    let base = PipelineQuery { pp: 1, ..q.clone() };
+    makespan(&base) / makespan(q)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn query(pp: usize, batch: usize, system: System) -> PipelineQuery {
+        PipelineQuery {
+            cfg: ModelConfig::preset("gpt3").unwrap().with_layers(12),
+            topo: Topology::paired_nvlink(4),
+            pp,
+            batch,
+            seq: 64,
+            n_batches: 32,
+            system,
+            blocking_override: None,
+        }
+    }
+
+    #[test]
+    fn fig11_scaling_improves_with_batch_size() {
+        // paper: bs=1 → 3.49×@4GPU (EnergonAI); bs=32 → 3.82×
+        let s1 = speedup(&query(4, 1, System::EnergonAi));
+        let s32 = speedup(&query(4, 32, System::EnergonAi));
+        assert!(s32 > s1, "bs32 {s32} should beat bs1 {s1}");
+        assert!((3.0..4.0).contains(&s1), "bs1 speedup {s1}");
+        assert!((3.4..4.0).contains(&s32), "bs32 speedup {s32}");
+    }
+
+    #[test]
+    fn fig11_energonai_beats_ft() {
+        // paper: EnergonAI ~10% better scalability than FT
+        for bs in [1usize, 4, 16, 32] {
+            let ours = speedup(&query(4, bs, System::EnergonAi));
+            let ft = speedup(&query(4, bs, System::FasterTransformer));
+            assert!(ours > ft, "bs={bs}: ours {ours} vs ft {ft}");
+        }
+        let ours = speedup(&query(4, 32, System::EnergonAi));
+        let ft = speedup(&query(4, 32, System::FasterTransformer));
+        let adv = (ours / ft - 1.0) * 100.0;
+        assert!((3.0..25.0).contains(&adv), "advantage {adv}%");
+    }
+
+    #[test]
+    fn fig11_efficiency_drops_with_more_stages() {
+        // paper: ratios 0.99@2, 0.96@3, 0.93@4 for bs=32
+        let e2 = speedup(&query(2, 32, System::EnergonAi)) / 2.0;
+        let e3 = speedup(&query(3, 32, System::EnergonAi)) / 3.0;
+        let e4 = speedup(&query(4, 32, System::EnergonAi)) / 4.0;
+        assert!(e2 > e3 && e3 > e4, "{e2} {e3} {e4}");
+        assert!(e2 > 0.93 && e4 > 0.80, "{e2} {e4}");
+    }
+
+    #[test]
+    fn single_stage_speedup_is_one() {
+        let s = speedup(&query(1, 8, System::EnergonAi));
+        assert!((s - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn blocking_creates_bubbles_on_imbalanced_stages() {
+        // 13 layers on 4 stages: 4,3,3,3 — imbalance makes rendezvous
+        // stall the fat stage's successor chain
+        let mut q = query(4, 16, System::EnergonAi);
+        q.cfg = ModelConfig::preset("gpt3").unwrap().with_layers(13);
+        let nb = makespan(&q);
+        q.system = System::FasterTransformer;
+        let ft_cfg_span = makespan(&q);
+        // FT's fused kernels make each stage faster, yet blocking still
+        // keeps it from beating NBPP proportionally; compare bubbles via
+        // normalized efficiency instead of absolute time
+        let nb_eff = {
+            let base = PipelineQuery { pp: 1, system: System::EnergonAi, ..q.clone() };
+            makespan(&base) / nb / 4.0
+        };
+        let ft_eff = {
+            let base = PipelineQuery { pp: 1, system: System::FasterTransformer, ..q.clone() };
+            makespan(&base) / ft_cfg_span / 4.0
+        };
+        assert!(nb_eff > ft_eff, "nb {nb_eff} vs ft {ft_eff}");
+    }
+}

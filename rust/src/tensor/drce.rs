@@ -1,0 +1,164 @@
+//! DRCE host support (§4.3): sequence-length metadata → index maps, packed
+//! layout bookkeeping, and the host pack/unpack used at pipeline/domain
+//! boundaries. Mirrors `python/compile/kernels/pack.py::make_maps` — the
+//! pytest suite and `rust/tests/drce_parity.rs` keep the two in lockstep.
+
+use super::{IntTensor, Tensor};
+
+/// Index maps for one batch: the engine binds these to the command it
+/// broadcasts to all workers, so every worker packs identically.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DrceMaps {
+    /// (t_bucket,) — for each packed row, the flat padded position it came
+    /// from; slack rows replicate row 0 (harmless compute, never read back).
+    pub unpad_map: IntTensor,
+    /// (batch*seq,) — for each padded position, its packed row, or
+    /// `t_bucket` (sentinel selecting the appended zero row) for padding.
+    pub pad_map: IntTensor,
+    /// Valid token count (≤ t_bucket).
+    pub n_valid: usize,
+    pub t_bucket: usize,
+    pub batch: usize,
+    pub seq: usize,
+}
+
+/// Build DRCE maps for per-sequence valid lengths, packing into a
+/// `t_bucket`-row matrix. Errors if the valid tokens overflow the bucket.
+pub fn make_maps(valid_lens: &[usize], seq: usize, t_bucket: usize) -> anyhow::Result<DrceMaps> {
+    let batch = valid_lens.len();
+    let total: usize = valid_lens.iter().sum();
+    anyhow::ensure!(
+        total <= t_bucket,
+        "{total} valid tokens exceed DRCE bucket {t_bucket}"
+    );
+    anyhow::ensure!(
+        valid_lens.iter().all(|&v| v <= seq),
+        "valid length exceeds padded seq {seq}"
+    );
+    let mut unpad = vec![0i32; t_bucket];
+    let mut pad = vec![t_bucket as i32; batch * seq];
+    let mut j = 0usize;
+    for (b, &vl) in valid_lens.iter().enumerate() {
+        for s in 0..vl {
+            let flat = b * seq + s;
+            unpad[j] = flat as i32;
+            pad[flat] = j as i32;
+            j += 1;
+        }
+    }
+    Ok(DrceMaps {
+        unpad_map: IntTensor::from_vec(unpad),
+        pad_map: IntTensor::from_vec(pad),
+        n_valid: total,
+        t_bucket,
+        batch,
+        seq,
+    })
+}
+
+/// Smallest bucket from `buckets` that fits `total` valid tokens.
+pub fn pick_bucket(total: usize, buckets: &[usize]) -> Option<usize> {
+    buckets.iter().copied().filter(|&b| b >= total).min()
+}
+
+/// Host pack: padded (batch*seq, h) → packed (t_bucket, h).
+pub fn pack(x: &Tensor, maps: &DrceMaps) -> Tensor {
+    let h = x.cols();
+    assert_eq!(x.rows(), maps.batch * maps.seq, "padded rows mismatch");
+    let mut out = Tensor::zeros(&[maps.t_bucket, h]);
+    for (j, &src) in maps.unpad_map.data.iter().enumerate() {
+        out.row_mut(j).copy_from_slice(x.row(src as usize));
+    }
+    out
+}
+
+/// Host unpack: packed (t_bucket, h) → padded (batch*seq, h), zeros in pads.
+pub fn unpack(packed: &Tensor, maps: &DrceMaps) -> Tensor {
+    let h = packed.cols();
+    assert_eq!(packed.rows(), maps.t_bucket, "packed rows mismatch");
+    let mut out = Tensor::zeros(&[maps.batch * maps.seq, h]);
+    for (i, &src) in maps.pad_map.data.iter().enumerate() {
+        if (src as usize) < maps.t_bucket.min(maps.n_valid) {
+            out.row_mut(i).copy_from_slice(packed.row(src as usize));
+        }
+    }
+    out
+}
+
+/// FLOP-savings ratio DRCE buys on the linear layers: valid / padded rows.
+/// The paper's experiments set valid = pad/2 → ratio 0.5 (§5.5).
+pub fn linear_row_ratio(valid_lens: &[usize], seq: usize) -> f64 {
+    let total: usize = valid_lens.iter().sum();
+    total as f64 / (valid_lens.len() * seq) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn maps_match_python_semantics() {
+        let m = make_maps(&[5, 8, 2], 8, 16).unwrap();
+        assert_eq!(m.n_valid, 15);
+        // first sequence occupies packed rows 0..5 from flat 0..5
+        assert_eq!(&m.unpad_map.data[0..5], &[0, 1, 2, 3, 4]);
+        // second sequence starts at flat 8
+        assert_eq!(m.unpad_map.data[5], 8);
+        // pad positions map to the sentinel
+        assert_eq!(m.pad_map.data[5], 16);
+        assert_eq!(m.pad_map.data[7], 16);
+        // slack rows replicate row 0
+        assert_eq!(m.unpad_map.data[15], 0);
+    }
+
+    #[test]
+    fn overflow_is_error() {
+        assert!(make_maps(&[8, 8], 8, 15).is_err());
+        assert!(make_maps(&[9], 8, 16).is_err());
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let mut rng = Rng::new(1);
+        let seq = 8;
+        let lens = [5usize, 8, 2];
+        let m = make_maps(&lens, seq, 16).unwrap();
+        let x = Tensor::randn(&[3 * seq, 4], 1.0, &mut rng);
+        // zero pad rows like the batcher does
+        let mut xz = x.clone();
+        for (b, &vl) in lens.iter().enumerate() {
+            for s in vl..seq {
+                xz.row_mut(b * seq + s).fill(0.0);
+            }
+        }
+        let packed = pack(&xz, &m);
+        let back = unpack(&packed, &m);
+        assert_eq!(back, xz);
+    }
+
+    #[test]
+    fn pack_slack_rows_replicate_row0() {
+        let m = make_maps(&[2], 4, 8).unwrap();
+        let x = Tensor::new(&[4, 2], vec![1., 2., 3., 4., 0., 0., 0., 0.]);
+        let packed = pack(&x, &m);
+        assert_eq!(packed.row(0), &[1., 2.]);
+        assert_eq!(packed.row(1), &[3., 4.]);
+        // slack rows replicate row 0
+        for j in 2..8 {
+            assert_eq!(packed.row(j), &[1., 2.]);
+        }
+    }
+
+    #[test]
+    fn bucket_picking() {
+        assert_eq!(pick_bucket(10, &[8, 16, 32]), Some(16));
+        assert_eq!(pick_bucket(33, &[8, 16, 32]), None);
+        assert_eq!(pick_bucket(8, &[8, 16]), Some(8));
+    }
+
+    #[test]
+    fn paper_half_padding_ratio() {
+        assert!((linear_row_ratio(&[32; 4], 64) - 0.5).abs() < 1e-9);
+    }
+}

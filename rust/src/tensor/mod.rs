@@ -1,0 +1,283 @@
+//! Host-side tensors: the activations and weights the coordinator moves
+//! between executables, all-reduces across TP workers, and streams through
+//! the pipeline. Deliberately minimal — heavy math happens inside the AOT
+//! executables (L2/L1); the host only does residual adds, all-reduce sums
+//! and DRCE pack/unpack.
+
+pub mod drce;
+
+use crate::util::rng::Rng;
+use std::fmt;
+
+/// Dense row-major f32 tensor.
+#[derive(Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: &[usize], data: Vec<f32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    pub fn full(shape: &[usize], v: f32) -> Tensor {
+        Tensor { shape: shape.to_vec(), data: vec![v; shape.iter().product()] }
+    }
+
+    /// N(0, std²) init — synthetic weights (seeded, reproducible).
+    pub fn randn(shape: &[usize], std: f32, rng: &mut Rng) -> Tensor {
+        let n = shape.iter().product();
+        let mut data = Vec::with_capacity(n);
+        for _ in 0..n {
+            data.push(rng.normal_f32(std));
+        }
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Bytes this tensor occupies (f32 host representation).
+    pub fn bytes(&self) -> u64 {
+        (self.len() * 4) as u64
+    }
+
+    /// Reinterpret the shape (same element count).
+    pub fn reshape(mut self, shape: &[usize]) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), self.data.len());
+        self.shape = shape.to_vec();
+        self
+    }
+
+    /// Last-axis length; tensors are treated as (rows, cols) row-major.
+    pub fn cols(&self) -> usize {
+        *self.shape.last().expect("scalar tensor has no cols")
+    }
+
+    pub fn rows(&self) -> usize {
+        self.len() / self.cols()
+    }
+
+    pub fn row(&self, r: usize) -> &[f32] {
+        let c = self.cols();
+        &self.data[r * c..(r + 1) * c]
+    }
+
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        let c = self.cols();
+        &mut self.data[r * c..(r + 1) * c]
+    }
+
+    /// Elementwise `self += other` (residual adds, all-reduce accumulation).
+    pub fn add_assign(&mut self, other: &Tensor) {
+        assert_eq!(self.shape, other.shape, "add_assign shape mismatch");
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    /// `self + other` (allocating).
+    pub fn add(&self, other: &Tensor) -> Tensor {
+        let mut out = self.clone();
+        out.add_assign(other);
+        out
+    }
+
+    /// Sum a set of same-shape tensors (host all-reduce epilogue).
+    pub fn sum_of(parts: &[Tensor]) -> Tensor {
+        assert!(!parts.is_empty());
+        let mut out = parts[0].clone();
+        for p in &parts[1..] {
+            out.add_assign(p);
+        }
+        out
+    }
+
+    /// Column slice [c0, c1) of a 2-D tensor — weight sharding.
+    pub fn slice_cols(&self, c0: usize, c1: usize) -> Tensor {
+        assert_eq!(self.rank(), 2);
+        let (rows, cols) = (self.shape[0], self.shape[1]);
+        assert!(c0 <= c1 && c1 <= cols);
+        let w = c1 - c0;
+        let mut data = Vec::with_capacity(rows * w);
+        for r in 0..rows {
+            data.extend_from_slice(&self.data[r * cols + c0..r * cols + c1]);
+        }
+        Tensor { shape: vec![rows, w], data }
+    }
+
+    /// Row slice [r0, r1) of a 2-D tensor.
+    pub fn slice_rows(&self, r0: usize, r1: usize) -> Tensor {
+        let cols = self.cols();
+        assert!(r0 <= r1 && r1 <= self.rows());
+        Tensor {
+            shape: vec![r1 - r0, cols],
+            data: self.data[r0 * cols..r1 * cols].to_vec(),
+        }
+    }
+
+    /// Scale every element (bias pre-division for row-sharded linears).
+    pub fn scale(&self, s: f32) -> Tensor {
+        Tensor {
+            shape: self.shape.clone(),
+            data: self.data.iter().map(|v| v * s).collect(),
+        }
+    }
+
+    /// Max |a - b| — test helper.
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+impl fmt::Debug for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor{:?}", self.shape)?;
+        if self.len() <= 8 {
+            write!(f, " {:?}", self.data)?;
+        }
+        Ok(())
+    }
+}
+
+/// Dense row-major i32 tensor (token ids, valid lengths, DRCE index maps).
+#[derive(Clone, Debug, PartialEq)]
+pub struct IntTensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<i32>,
+}
+
+impl IntTensor {
+    pub fn new(shape: &[usize], data: Vec<i32>) -> IntTensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        IntTensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn from_vec(data: Vec<i32>) -> IntTensor {
+        IntTensor { shape: vec![data.len()], data }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+}
+
+/// An argument to an executable: the two dtypes our artifacts use.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    F32(Tensor),
+    I32(IntTensor),
+}
+
+impl Value {
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Value::F32(t) => &t.shape,
+            Value::I32(t) => &t.shape,
+        }
+    }
+
+    pub fn as_f32(&self) -> Option<&Tensor> {
+        match self {
+            Value::F32(t) => Some(t),
+            _ => None,
+        }
+    }
+
+    pub fn into_f32(self) -> Tensor {
+        match self {
+            Value::F32(t) => t,
+            Value::I32(t) => panic!("expected f32 tensor, got i32 {:?}", t.shape),
+        }
+    }
+}
+
+impl From<Tensor> for Value {
+    fn from(t: Tensor) -> Value {
+        Value::F32(t)
+    }
+}
+
+impl From<IntTensor> for Value {
+    fn from(t: IntTensor) -> Value {
+        Value::I32(t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_checks() {
+        let t = Tensor::new(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.rows(), 2);
+        assert_eq!(t.cols(), 3);
+        assert_eq!(t.row(1), &[4., 5., 6.]);
+        assert_eq!(t.bytes(), 24);
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_shape_panics() {
+        Tensor::new(&[2, 2], vec![1.0]);
+    }
+
+    #[test]
+    fn add_and_sum() {
+        let a = Tensor::new(&[2, 2], vec![1., 2., 3., 4.]);
+        let b = Tensor::full(&[2, 2], 1.0);
+        assert_eq!(a.add(&b).data, vec![2., 3., 4., 5.]);
+        let s = Tensor::sum_of(&[a.clone(), a.clone(), a]);
+        assert_eq!(s.data, vec![3., 6., 9., 12.]);
+    }
+
+    #[test]
+    fn slicing() {
+        let t = Tensor::new(&[2, 4], (0..8).map(|v| v as f32).collect());
+        assert_eq!(t.slice_cols(1, 3).data, vec![1., 2., 5., 6.]);
+        assert_eq!(t.slice_rows(1, 2).data, vec![4., 5., 6., 7.]);
+        assert_eq!(t.slice_cols(1, 3).shape, vec![2, 2]);
+    }
+
+    #[test]
+    fn randn_reproducible() {
+        let mut r1 = Rng::new(1);
+        let mut r2 = Rng::new(1);
+        let a = Tensor::randn(&[4, 4], 0.5, &mut r1);
+        let b = Tensor::randn(&[4, 4], 0.5, &mut r2);
+        assert_eq!(a, b);
+        assert!(a.data.iter().any(|v| *v != 0.0));
+    }
+
+    #[test]
+    fn scale_for_bias_division() {
+        let b = Tensor::full(&[4], 2.0);
+        let half = b.scale(0.5);
+        assert_eq!(half.data, vec![1.0; 4]);
+    }
+}

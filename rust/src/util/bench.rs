@@ -1,0 +1,75 @@
+//! Micro-benchmark harness (criterion is unavailable in this offline
+//! build): warmup + N timed iterations, reporting min/median/mean.
+
+use std::time::{Duration, Instant};
+
+/// Timing summary of one benchmark.
+#[derive(Clone, Copy, Debug)]
+pub struct Stats {
+    pub iters: usize,
+    pub min: Duration,
+    pub median: Duration,
+    pub mean: Duration,
+    pub max: Duration,
+}
+
+impl Stats {
+    pub fn line(&self, name: &str) -> String {
+        format!(
+            "{name:<44} min {:>10}  med {:>10}  mean {:>10}  (n={})",
+            crate::util::fmt_duration(self.min),
+            crate::util::fmt_duration(self.median),
+            crate::util::fmt_duration(self.mean),
+            self.iters
+        )
+    }
+}
+
+/// Run `f` `iters` times (after `warmup` unmeasured runs).
+pub fn bench<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Stats {
+    assert!(iters > 0);
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed());
+    }
+    samples.sort();
+    let sum: Duration = samples.iter().sum();
+    Stats {
+        iters,
+        min: samples[0],
+        median: samples[samples.len() / 2],
+        mean: sum / iters as u32,
+        max: *samples.last().unwrap(),
+    }
+}
+
+/// Convenience: run, print, return.
+pub fn run_print<F: FnMut()>(name: &str, warmup: usize, iters: usize, f: F) -> Stats {
+    let s = bench(warmup, iters, f);
+    println!("{}", s.line(name));
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_ordering() {
+        let s = bench(1, 20, || std::thread::sleep(Duration::from_micros(100)));
+        assert!(s.min <= s.median && s.median <= s.max);
+        assert!(s.min >= Duration::from_micros(100));
+        assert_eq!(s.iters, 20);
+    }
+
+    #[test]
+    fn line_formats() {
+        let s = bench(0, 3, || {});
+        assert!(s.line("noop").contains("noop"));
+    }
+}

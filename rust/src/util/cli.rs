@@ -1,0 +1,113 @@
+//! Tiny argv parser for the launcher (`--key value` / `--flag` / positional
+//! subcommands), standing in for `clap` in this offline build.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: a subcommand, positional args and `--key value` opts.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                if let Some((k, v)) = key.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    out.opts.insert(key.to_string(), it.next().unwrap());
+                } else {
+                    out.flags.push(key.to_string());
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(a);
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(String::as_str)
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn usize(&self, name: &str, default: usize) -> usize {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} must be an integer, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn f64(&self, name: &str, default: f64) -> f64 {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} must be a number, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    /// Comma-separated list of integers, e.g. `--batches 1,4,16,32`.
+    pub fn usize_list(&self, name: &str, default: &[usize]) -> Vec<usize> {
+        match self.get(name) {
+            None => default.to_vec(),
+            Some(v) => v
+                .split(',')
+                .map(|s| s.trim().parse().unwrap_or_else(|_| panic!("--{name}: bad int {s:?}")))
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_opts() {
+        let a = args("bench fig10 --tp 4 --verbose --seq=64");
+        assert_eq!(a.subcommand.as_deref(), Some("bench"));
+        assert_eq!(a.positional, vec!["fig10"]);
+        assert_eq!(a.usize("tp", 1), 4);
+        assert_eq!(a.usize("seq", 0), 64);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn lists_and_defaults() {
+        let a = args("serve --batches 1,4,16");
+        assert_eq!(a.usize_list("batches", &[2]), vec![1, 4, 16]);
+        assert_eq!(a.usize_list("seqs", &[64, 128]), vec![64, 128]);
+        assert_eq!(a.get_or("preset", "tiny"), "tiny");
+        assert_eq!(a.f64("rate", 1.5), 1.5);
+    }
+
+    #[test]
+    fn flag_before_subcommand_value_ambiguity() {
+        // `--flag sub` consumes `sub` as a value; callers put flags last.
+        let a = args("run --dry");
+        assert_eq!(a.subcommand.as_deref(), Some("run"));
+        assert!(a.flag("dry"));
+    }
+}

@@ -1,0 +1,75 @@
+//! Small self-contained utilities (the build is fully offline, so the crate
+//! hand-rolls what would normally come from `rand`, `serde_json` and `clap`).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod toml;
+
+use std::time::{Duration, Instant};
+
+/// Measure the wall-clock duration of a closure.
+pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, Duration) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed())
+}
+
+/// Median of a slice of durations (destructive sort on a copy).
+pub fn median(mut xs: Vec<Duration>) -> Duration {
+    assert!(!xs.is_empty());
+    xs.sort();
+    xs[xs.len() / 2]
+}
+
+/// Format a duration as adaptive human units.
+pub fn fmt_duration(d: Duration) -> String {
+    let us = d.as_secs_f64() * 1e6;
+    if us < 1e3 {
+        format!("{us:.1}µs")
+    } else if us < 1e6 {
+        format!("{:.2}ms", us / 1e3)
+    } else {
+        format!("{:.3}s", us / 1e6)
+    }
+}
+
+/// Format a byte count as adaptive human units.
+pub fn fmt_bytes(b: u64) -> String {
+    const K: f64 = 1024.0;
+    let b = b as f64;
+    if b < K {
+        format!("{b:.0}B")
+    } else if b < K * K {
+        format!("{:.1}KiB", b / K)
+    } else if b < K * K * K {
+        format!("{:.1}MiB", b / K / K)
+    } else {
+        format!("{:.2}GiB", b / K / K / K)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn median_odd() {
+        let xs = vec![
+            Duration::from_millis(3),
+            Duration::from_millis(1),
+            Duration::from_millis(2),
+        ];
+        assert_eq!(median(xs), Duration::from_millis(2));
+    }
+
+    #[test]
+    fn fmt_units() {
+        assert_eq!(fmt_duration(Duration::from_micros(500)), "500.0µs");
+        assert_eq!(fmt_duration(Duration::from_millis(12)), "12.00ms");
+        assert_eq!(fmt_bytes(512), "512B");
+        assert_eq!(fmt_bytes(2048), "2.0KiB");
+        assert_eq!(fmt_bytes(3 * 1024 * 1024), "3.0MiB");
+    }
+}

@@ -1,0 +1,246 @@
+//! Minimal TOML-subset parser for launcher config files (the offline
+//! build has no `toml` crate). Supports what `energonai --config` needs:
+//! `[section]` / `[section.sub]` headers, `key = value` with strings,
+//! integers, floats, booleans and flat arrays, `#` comments.
+
+use std::collections::BTreeMap;
+
+/// A parsed TOML value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_int().and_then(|i| usize::try_from(i).ok())
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// Flat document: dotted section path + key → value.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TomlDoc {
+    entries: BTreeMap<String, TomlValue>,
+}
+
+impl TomlDoc {
+    /// Fetch `section.key` (or just `key` for the root table).
+    pub fn get(&self, path: &str) -> Option<&TomlValue> {
+        self.entries.get(path)
+    }
+
+    pub fn str_or<'a>(&'a self, path: &str, default: &'a str) -> &'a str {
+        self.get(path).and_then(TomlValue::as_str).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, path: &str, default: usize) -> usize {
+        self.get(path).and_then(TomlValue::as_usize).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, path: &str, default: f64) -> f64 {
+        self.get(path).and_then(TomlValue::as_f64).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, path: &str, default: bool) -> bool {
+        self.get(path).and_then(TomlValue::as_bool).unwrap_or(default)
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.entries.keys().map(String::as_str)
+    }
+
+    pub fn parse(text: &str) -> anyhow::Result<TomlDoc> {
+        let mut doc = TomlDoc::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| anyhow::anyhow!("line {}: unterminated section", lineno + 1))?
+                    .trim();
+                anyhow::ensure!(
+                    !name.is_empty() && name.chars().all(|c| c.is_alphanumeric() || c == '_' || c == '.' || c == '-'),
+                    "line {}: bad section name {name:?}",
+                    lineno + 1
+                );
+                section = name.to_string();
+                continue;
+            }
+            let (key, value) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("line {}: expected key = value", lineno + 1))?;
+            let key = key.trim();
+            anyhow::ensure!(!key.is_empty(), "line {}: empty key", lineno + 1);
+            let path = if section.is_empty() { key.to_string() } else { format!("{section}.{key}") };
+            let parsed = parse_value(value.trim())
+                .map_err(|e| anyhow::anyhow!("line {}: {e}", lineno + 1))?;
+            doc.entries.insert(path, parsed);
+        }
+        Ok(doc)
+    }
+
+    pub fn load(path: impl AsRef<std::path::Path>) -> anyhow::Result<TomlDoc> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .map_err(|e| anyhow::anyhow!("read {:?}: {e}", path.as_ref()))?;
+        TomlDoc::parse(&text)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // naive but sufficient: ignore '#' inside quoted strings
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> anyhow::Result<TomlValue> {
+    anyhow::ensure!(!s.is_empty(), "empty value");
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest.strip_suffix('"').ok_or_else(|| anyhow::anyhow!("unterminated string"))?;
+        return Ok(TomlValue::Str(inner.replace("\\\"", "\"").replace("\\\\", "\\")));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(rest) = s.strip_prefix('[') {
+        let inner = rest.strip_suffix(']').ok_or_else(|| anyhow::anyhow!("unterminated array"))?;
+        let inner = inner.trim();
+        if inner.is_empty() {
+            return Ok(TomlValue::Array(vec![]));
+        }
+        let items = inner
+            .split(',')
+            .map(|p| parse_value(p.trim()))
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        return Ok(TomlValue::Array(items));
+    }
+    if let Ok(i) = s.replace('_', "").parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    anyhow::bail!("cannot parse value {s:?}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# launcher config
+preset = "small"
+seed = 7
+
+[parallel]
+tp = 2
+pp = 2
+
+[engine]
+drce = true
+batch_timeout_us = 1_500
+pool_threads = 8
+
+[memory]
+mode = "pmep"
+n_local = 10
+lookahead = 2
+time_scale = 1.5
+
+[workload]
+batches = [1, 4, 16, 32]
+"#;
+
+    #[test]
+    fn parse_sample() {
+        let d = TomlDoc::parse(SAMPLE).unwrap();
+        assert_eq!(d.str_or("preset", "tiny"), "small");
+        assert_eq!(d.usize_or("seed", 0), 7);
+        assert_eq!(d.usize_or("parallel.tp", 1), 2);
+        assert!(d.bool_or("engine.drce", false));
+        assert_eq!(d.usize_or("engine.batch_timeout_us", 0), 1500);
+        assert_eq!(d.f64_or("memory.time_scale", 0.0), 1.5);
+        let arr = d.get("workload.batches").unwrap();
+        match arr {
+            TomlValue::Array(a) => assert_eq!(a.len(), 4),
+            _ => panic!("expected array"),
+        }
+    }
+
+    #[test]
+    fn defaults_for_missing_keys() {
+        let d = TomlDoc::parse("").unwrap();
+        assert_eq!(d.usize_or("parallel.tp", 1), 1);
+        assert_eq!(d.str_or("preset", "tiny"), "tiny");
+    }
+
+    #[test]
+    fn comments_and_strings() {
+        let d = TomlDoc::parse("a = \"x # not a comment\" # real comment\n").unwrap();
+        assert_eq!(d.str_or("a", ""), "x # not a comment");
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(TomlDoc::parse("[unterminated\n").is_err());
+        assert!(TomlDoc::parse("novalue\n").is_err());
+        assert!(TomlDoc::parse("k = \n").is_err());
+        assert!(TomlDoc::parse("k = [1, 2\n").is_err());
+        assert!(TomlDoc::parse("k = \"open\n").is_err());
+    }
+
+    #[test]
+    fn floats_and_negatives() {
+        let d = TomlDoc::parse("x = -3\ny = 2.5\n").unwrap();
+        assert_eq!(d.get("x").unwrap().as_int(), Some(-3));
+        assert_eq!(d.f64_or("y", 0.0), 2.5);
+        // ints coerce to f64 when asked
+        assert_eq!(d.f64_or("x", 0.0), -3.0);
+    }
+}

@@ -1,0 +1,144 @@
+//! Workload generation: the request streams the evaluation section runs.
+//!
+//! Three length distributions matter to the paper:
+//! * **fixed**: every request exactly `len` tokens (Fig. 10/11 padding
+//!   experiments),
+//! * **half-padding**: valid length = padding/2 (the DRCE setup, §5.5),
+//! * **heavy-tailed**: Zipf-like lengths — the variable-length reality
+//!   DRCE exists for (the paper cites Du et al. [21] on GLUE corpora
+//!   being *more* padded than half).
+//!
+//! Arrivals are either closed-loop (back-to-back batches) or open-loop
+//! Poisson at a target rate.
+
+use crate::coordinator::batcher::Request;
+use crate::util::rng::Rng;
+use std::time::Duration;
+
+/// Sequence-length distribution.
+#[derive(Clone, Copy, Debug)]
+pub enum LengthDist {
+    /// All requests exactly this long.
+    Fixed(usize),
+    /// Uniform in [lo, hi].
+    Uniform(usize, usize),
+    /// Valid = padding/2 (paper's DRCE experiments).
+    HalfOf(usize),
+    /// Zipf-ish heavy tail over [1, max] with skew s (~1.1 for GLUE-like).
+    HeavyTail(usize, f64),
+}
+
+impl LengthDist {
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        match *self {
+            LengthDist::Fixed(n) => n,
+            LengthDist::Uniform(lo, hi) => rng.range(lo as u64, hi as u64) as usize,
+            LengthDist::HalfOf(pad) => (pad / 2).max(1),
+            LengthDist::HeavyTail(max, s) => {
+                // zipf rank 1 is the most frequent; rank = length, so
+                // short sequences dominate (heavy-tailed corpora, [21])
+                (rng.zipf(max as u64, s) as usize).clamp(1, max)
+            }
+        }
+    }
+}
+
+/// A reproducible request stream.
+pub struct Generator {
+    rng: Rng,
+    dist: LengthDist,
+    vocab: usize,
+    next_id: u64,
+}
+
+impl Generator {
+    pub fn new(seed: u64, dist: LengthDist, vocab: usize) -> Generator {
+        Generator { rng: Rng::new(seed), dist, vocab, next_id: 0 }
+    }
+
+    pub fn request(&mut self) -> Request {
+        let len = self.dist.sample(&mut self.rng);
+        let tokens = (0..len)
+            .map(|_| (self.rng.next_below(self.vocab as u64 - 1) + 1) as i32)
+            .collect();
+        let id = self.next_id;
+        self.next_id += 1;
+        Request::new(id, tokens)
+    }
+
+    pub fn batch(&mut self, n: usize) -> Vec<Request> {
+        (0..n).map(|_| self.request()).collect()
+    }
+
+    /// Poisson inter-arrival gap for an open-loop client at `rate` req/s.
+    pub fn next_gap(&mut self, rate: f64) -> Duration {
+        Duration::from_secs_f64(self.rng.exponential(rate))
+    }
+}
+
+/// Padding waste of a request set at a given padded length — the quantity
+/// DRCE eliminates (1 - valid/padded).
+pub fn padding_waste(requests: &[Request], pad: usize) -> f64 {
+    let valid: usize = requests.iter().map(|r| r.len().min(pad)).sum();
+    1.0 - valid as f64 / (requests.len() * pad) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixed_dist_is_fixed() {
+        let mut g = Generator::new(1, LengthDist::Fixed(12), 100);
+        for _ in 0..10 {
+            assert_eq!(g.request().len(), 12);
+        }
+    }
+
+    #[test]
+    fn half_padding_matches_paper_setup() {
+        let mut g = Generator::new(1, LengthDist::HalfOf(64), 100);
+        let reqs = g.batch(8);
+        assert!(reqs.iter().all(|r| r.len() == 32));
+        assert!((padding_waste(&reqs, 64) - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn heavy_tail_mostly_short() {
+        let mut g = Generator::new(7, LengthDist::HeavyTail(64, 1.2), 100);
+        let lens: Vec<usize> = (0..500).map(|_| g.request().len()).collect();
+        let short = lens.iter().filter(|&&l| l <= 16).count();
+        let long = lens.iter().filter(|&&l| l > 48).count();
+        assert!(short > long, "short {short} vs long {long}");
+        assert!(lens.iter().all(|&l| (1..=64).contains(&l)));
+    }
+
+    #[test]
+    fn ids_unique_and_tokens_in_vocab() {
+        let mut g = Generator::new(3, LengthDist::Uniform(1, 8), 50);
+        let reqs = g.batch(20);
+        let mut ids: Vec<u64> = reqs.iter().map(|r| r.id).collect();
+        ids.dedup();
+        assert_eq!(ids.len(), 20);
+        assert!(reqs.iter().all(|r| r.tokens.iter().all(|&t| (1..50).contains(&t))));
+    }
+
+    #[test]
+    fn reproducible_by_seed() {
+        let mut a = Generator::new(9, LengthDist::Uniform(1, 30), 100);
+        let mut b = Generator::new(9, LengthDist::Uniform(1, 30), 100);
+        for _ in 0..10 {
+            let (ra, rb) = (a.request(), b.request());
+            assert_eq!(ra.tokens, rb.tokens);
+        }
+    }
+
+    #[test]
+    fn poisson_gaps_average_to_rate() {
+        let mut g = Generator::new(5, LengthDist::Fixed(4), 100);
+        let n = 2000;
+        let total: f64 = (0..n).map(|_| g.next_gap(50.0).as_secs_f64()).sum();
+        let mean = total / n as f64;
+        assert!((mean - 0.02).abs() < 0.004, "mean gap {mean}");
+    }
+}

@@ -1,0 +1,172 @@
+//! Integration: the AOT → PJRT path end to end against real artifacts.
+//!
+//! Requires `make artifacts` (the tiny preset). These tests prove the HLO
+//! text emitted by python lowers, compiles on the Rust PJRT CPU client,
+//! and computes the same numbers as the JAX reference — the core
+//! correctness contract of the three-layer architecture.
+
+use energonai::config::ModelConfig;
+use energonai::model::{shard_layer, ModelWeights};
+use energonai::runtime::{find_artifacts, valid_len_arg, Device, Manifest};
+use energonai::tensor::{drce, IntTensor, Tensor, Value};
+use energonai::util::rng::Rng;
+
+fn setup() -> (Manifest, Device, ModelConfig, ModelWeights) {
+    let manifest = Manifest::load(find_artifacts().unwrap()).unwrap();
+    let device = Device::new(0).unwrap();
+    let cfg = ModelConfig::preset("tiny").unwrap();
+    let weights = ModelWeights::random(&cfg, 42);
+    (manifest, device, cfg, weights)
+}
+
+fn randx(shape: &[usize], seed: u64) -> Tensor {
+    let mut rng = Rng::new(seed);
+    Tensor::randn(shape, 0.5, &mut rng)
+}
+
+#[test]
+fn layer_full_executes_and_is_deterministic() {
+    let (man, dev, cfg, w) = setup();
+    let v = man.get("tiny_layer_full_b2_s16").unwrap();
+    let x = randx(&[2, 16, cfg.hidden], 1);
+    let mut args = vec![Value::F32(x.clone()), valid_len_arg(&[16, 16])];
+    args.extend(w.layers[0].all_args());
+    let out1 = dev.execute(&man, v, &args).unwrap();
+    let out2 = dev.execute(&man, v, &args).unwrap();
+    assert_eq!(out1[0].shape, vec![2, 16, cfg.hidden]);
+    assert_eq!(out1[0], out2[0]);
+    // output must differ from input (the layer does something)
+    assert!(out1[0].max_abs_diff(&x) > 1e-3);
+    // compile happened once, execute twice
+    let stats = *dev.stats.borrow();
+    assert_eq!(stats.compiles, 1);
+    assert_eq!(stats.executions, 2);
+}
+
+#[test]
+fn tp_shards_reassemble_to_full_layer() {
+    let (man, dev, cfg, w) = setup();
+    let full = man.get("tiny_layer_full_b2_s16").unwrap();
+    let attn = man.get("tiny_attn_shard_tp2_b2_s16").unwrap();
+    let mlp = man.get("tiny_mlp_shard_tp2_r32").unwrap();
+
+    let x = randx(&[2, 16, cfg.hidden], 2);
+    let valid = valid_len_arg(&[16, 9]);
+    let lw = &w.layers[0];
+
+    // reference: full layer in one executable
+    let mut args = vec![Value::F32(x.clone()), valid.clone()];
+    args.extend(lw.all_args());
+    let expect = dev.execute(&man, full, &args).unwrap().remove(0);
+
+    // sharded: attn partials -> sum -> r = x + sum -> mlp partials -> sum
+    let shards: Vec<_> = (0..2).map(|r| shard_layer(&cfg, lw, 2, r)).collect();
+    let partials: Vec<Tensor> = shards
+        .iter()
+        .map(|s| {
+            let mut a = vec![Value::F32(x.clone()), valid.clone()];
+            a.extend(s.attn_args());
+            dev.execute(&man, attn, &a).unwrap().remove(0)
+        })
+        .collect();
+    let attn_sum = Tensor::sum_of(&partials);
+    let r = x.add(&attn_sum);
+    let r2 = r.clone().reshape(&[32, cfg.hidden]);
+    let mlp_partials: Vec<Tensor> = shards
+        .iter()
+        .map(|s| {
+            let mut a = vec![Value::F32(r2.clone())];
+            a.extend(s.mlp_args());
+            dev.execute(&man, mlp, &a).unwrap().remove(0)
+        })
+        .collect();
+    let y = r.add(&Tensor::sum_of(&mlp_partials).reshape(&[2, 16, cfg.hidden]));
+
+    let diff = y.max_abs_diff(&expect);
+    assert!(diff < 2e-3, "tp reassembly diff {diff}");
+}
+
+#[test]
+fn drce_packed_path_matches_padded_on_valid_rows() {
+    let (man, dev, cfg, w) = setup();
+    let full = man.get("tiny_layer_full_b2_s16").unwrap();
+    let drce_v = man.get("tiny_drce_attn_shard_tp1_b2_s16_t16").unwrap();
+    let mlp = man.get("tiny_mlp_shard_tp1_r16").unwrap();
+
+    let lens = [9usize, 7];
+    let maps = drce::make_maps(&lens, 16, 16).unwrap();
+    let mut x = randx(&[2, 16, cfg.hidden], 3);
+    // zero pad rows like the batcher does
+    {
+        let flat = x.clone().reshape(&[32, cfg.hidden]);
+        let mut z = flat;
+        for (b, &vl) in lens.iter().enumerate() {
+            for s in vl..16 {
+                z.row_mut(b * 16 + s).fill(0.0);
+            }
+        }
+        x = z.reshape(&[2, 16, cfg.hidden]);
+    }
+    let valid = valid_len_arg(&lens);
+    let lw = &w.layers[0];
+
+    // padded reference
+    let mut args = vec![Value::F32(x.clone()), valid.clone()];
+    args.extend(lw.all_args());
+    let expect = dev.execute(&man, full, &args).unwrap().remove(0).reshape(&[32, cfg.hidden]);
+
+    // packed path
+    let x_flat = x.clone().reshape(&[32, cfg.hidden]);
+    let x_packed = drce::pack(&x_flat, &maps);
+    let mut a = vec![
+        Value::F32(x_packed.clone()),
+        valid.clone(),
+        Value::I32(maps.unpad_map.clone()),
+        Value::I32(maps.pad_map.clone()),
+    ];
+    a.extend(lw.attn_args());
+    let attn_partial = dev.execute(&man, drce_v, &a).unwrap().remove(0);
+    let r_packed = x_packed.add(&attn_partial);
+    let mut a = vec![Value::F32(r_packed.clone())];
+    a.extend(lw.mlp_args());
+    let mlp_partial = dev.execute(&man, mlp, &a).unwrap().remove(0);
+    let y_packed = r_packed.add(&mlp_partial);
+
+    for j in 0..maps.n_valid {
+        let src = maps.unpad_map.data[j] as usize;
+        let diff: f32 = y_packed
+            .row(j)
+            .iter()
+            .zip(expect.row(src))
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max);
+        assert!(diff < 2e-3, "row {j} diff {diff}");
+    }
+}
+
+#[test]
+fn embed_then_logits_pipeline() {
+    let (man, dev, cfg, w) = setup();
+    let embed = man.get("tiny_embed_b2_s16").unwrap();
+    let logits = man.get("tiny_logits_b2_s16").unwrap();
+
+    let ids = IntTensor::new(&[2, 16], (0..32).map(|i| (i % cfg.vocab as i32)).collect());
+    let mut args = vec![Value::I32(ids)];
+    args.extend(w.embed_args());
+    let x = dev.execute(&man, embed, &args).unwrap().remove(0);
+    assert_eq!(x.shape, vec![2, 16, cfg.hidden]);
+
+    let mut args = vec![Value::F32(x)];
+    args.extend(w.logits_args());
+    let z = dev.execute(&man, logits, &args).unwrap().remove(0);
+    assert_eq!(z.shape, vec![2, 16, cfg.vocab]);
+    assert!(z.data.iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn wrong_args_are_rejected_not_executed() {
+    let (man, dev, cfg, _w) = setup();
+    let v = man.get("tiny_layer_full_b2_s16").unwrap();
+    let args = vec![Value::F32(Tensor::zeros(&[2, 16, cfg.hidden]))];
+    assert!(dev.execute(&man, v, &args).is_err());
+}

@@ -1,0 +1,95 @@
+//! Serving front-end integration: the TCP line protocol over a live
+//! engine, plus protocol-grammar checks through `handle_line`.
+
+use energonai::coordinator::engine::{Engine, LaunchConfig};
+use energonai::server::{handle_line, Server};
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+
+fn engine() -> Arc<Engine> {
+    Arc::new(Engine::launch(LaunchConfig::preset("tiny")).unwrap())
+}
+
+#[test]
+fn tcp_round_trip_with_concurrent_clients() {
+    let engine = engine();
+    let server = Server::start(engine.clone(), "127.0.0.1:0").unwrap();
+    let addr = server.addr;
+
+    let clients: Vec<_> = (0..3)
+        .map(|c| {
+            std::thread::spawn(move || {
+                let stream = TcpStream::connect(addr).unwrap();
+                let mut writer = stream.try_clone().unwrap();
+                let mut reader = BufReader::new(stream);
+                let mut replies = Vec::new();
+                for i in 0..3 {
+                    writeln!(writer, "infer {},{},{}", c + 1, i + 1, 7).unwrap();
+                    let mut line = String::new();
+                    reader.read_line(&mut line).unwrap();
+                    replies.push(line.trim().to_string());
+                }
+                writeln!(writer, "stats").unwrap();
+                let mut line = String::new();
+                reader.read_line(&mut line).unwrap();
+                replies.push(line.trim().to_string());
+                writeln!(writer, "quit").unwrap();
+                replies
+            })
+        })
+        .collect();
+
+    for c in clients {
+        let replies = c.join().unwrap();
+        assert_eq!(replies.len(), 4);
+        for r in &replies[0..3] {
+            assert!(r.starts_with("ok "), "bad reply {r:?}");
+            let tok: i32 = r[3..].parse().unwrap();
+            assert!((0..128).contains(&tok));
+        }
+        assert!(replies[3].starts_with("ok "), "stats reply {:?}", replies[3]);
+    }
+    server.stop();
+    match Arc::try_unwrap(engine) {
+        Ok(e) => e.shutdown(),
+        Err(_) => panic!("engine still referenced"),
+    }
+}
+
+#[test]
+fn protocol_grammar() {
+    let engine = engine();
+    // quit closes
+    assert!(handle_line("quit", &engine).is_none());
+    // unknown command
+    let r = handle_line("frobnicate", &engine).unwrap();
+    assert!(r.starts_with("err "));
+    // malformed token lists
+    for bad in ["infer ", "infer a,b", "infer 1,,2"] {
+        let r = handle_line(bad, &engine).unwrap();
+        assert!(r.starts_with("err "), "{bad:?} -> {r:?}");
+    }
+    // valid inference
+    let r = handle_line("infer 4, 8, 15", &engine).unwrap();
+    assert!(r.starts_with("ok "), "{r:?}");
+    // stats
+    let r = handle_line("stats", &engine).unwrap();
+    assert!(r.contains("req/s"), "{r:?}");
+    match Arc::try_unwrap(engine) {
+        Ok(e) => e.shutdown(),
+        Err(_) => panic!("engine still referenced"),
+    }
+}
+
+#[test]
+fn request_longer_than_buckets_is_err_not_crash() {
+    let engine = engine();
+    let long: Vec<String> = (0..200).map(|i| i.to_string()).collect();
+    let r = handle_line(&format!("infer {}", long.join(",")), &engine).unwrap();
+    assert!(r.starts_with("err "), "{r:?}");
+    match Arc::try_unwrap(engine) {
+        Ok(e) => e.shutdown(),
+        Err(_) => panic!("engine still referenced"),
+    }
+}

@@ -1,0 +1,142 @@
+//! Serving stress + property-style invariants over the live stack:
+//! variable-length heavy-tailed workloads through every engine
+//! configuration must (a) complete, (b) return in-vocab tokens, and
+//! (c) be deterministic for identical inputs across configurations.
+
+use energonai::coordinator::engine::{Engine, LaunchConfig};
+use energonai::coordinator::Request;
+use energonai::workload::{Generator, LengthDist};
+
+/// Same request set through different configs → same tokens (the
+/// coordinator must be numerically transparent).
+#[test]
+fn tokens_invariant_across_parallel_configs() {
+    let mut gen = Generator::new(99, LengthDist::HeavyTail(16, 1.1), 100);
+    let batches: Vec<Vec<Request>> = (0..5).map(|_| gen.batch(2)).collect();
+
+    let run = |launch: LaunchConfig| -> Vec<Vec<i32>> {
+        let engine = Engine::launch(launch).unwrap();
+        let out = batches
+            .iter()
+            .map(|reqs| engine.infer_batch(reqs.clone()).unwrap().to_here().unwrap().next_tokens)
+            .collect();
+        engine.shutdown();
+        out
+    };
+
+    let expect = run(LaunchConfig::preset("tiny"));
+    for (label, launch) in [
+        ("tp2", LaunchConfig::preset("tiny").with_parallel(2, 1)),
+        ("pp2", LaunchConfig::preset("tiny").with_parallel(1, 2)),
+        ("drce", LaunchConfig::preset("tiny").with_drce(true)),
+        ("tp2+drce", LaunchConfig::preset("tiny").with_parallel(2, 1).with_drce(true)),
+        ("blocking pp2", LaunchConfig::preset("tiny").with_parallel(1, 2).with_blocking_comms(true)),
+    ] {
+        let got = run(launch);
+        assert_eq!(got, expect, "{label} changed greedy tokens");
+    }
+}
+
+/// Sustained stream through the batcher: everything completes, in vocab.
+#[test]
+fn sustained_batcher_stream_completes() {
+    let engine = Engine::launch(LaunchConfig::preset("tiny").with_parallel(1, 2)).unwrap();
+    let mut gen = Generator::new(5, LengthDist::HeavyTail(16, 1.2), engine.cfg.vocab);
+    let futures: Vec<_> = (0..60)
+        .map(|_| engine.submit(gen.request().tokens).unwrap())
+        .collect();
+    for (i, f) in futures.iter().enumerate() {
+        let tok = f.to_here().unwrap_or_else(|e| panic!("request {i}: {e:#}"));
+        assert!((0..128).contains(&tok), "request {i} token {tok}");
+    }
+    let m = engine.metrics_snapshot();
+    assert_eq!(m.requests(), 60);
+    // the dynamic batcher must have coalesced (fewer batches than requests)
+    assert!(m.batches() < 60, "batching never happened: {}", m.summary());
+    engine.shutdown();
+}
+
+/// Interleaved direct batches on a TP engine under dispatcher racing:
+/// the consistency queue keeps all results correct.
+#[test]
+fn racing_submitters_with_consistency_queue() {
+    let engine = std::sync::Arc::new(
+        Engine::launch(LaunchConfig::preset("tiny").with_parallel(2, 1)).unwrap(),
+    );
+    // oracle per signature
+    let sig = |k: u64| vec![Request::new(k, vec![(k % 100) as i32 + 1; 8])];
+    let oracle: Vec<Vec<i32>> = (0..4u64)
+        .map(|k| engine.infer_batch(sig(k)).unwrap().to_here().unwrap().next_tokens)
+        .collect();
+
+    let handles: Vec<_> = (0..4u64)
+        .map(|t| {
+            let engine = engine.clone();
+            std::thread::spawn(move || {
+                (0..6)
+                    .map(|i| {
+                        let k = (t + i) % 4;
+                        (k, engine.infer_batch(sig(k)).unwrap())
+                    })
+                    .collect::<Vec<_>>()
+            })
+        })
+        .collect();
+    for h in handles {
+        for (k, rref) in h.join().unwrap() {
+            let out = rref.to_here().unwrap();
+            assert_eq!(out.next_tokens, oracle[k as usize], "batch sig {k} corrupted");
+        }
+    }
+    match std::sync::Arc::try_unwrap(engine) {
+        Ok(e) => e.shutdown(),
+        Err(_) => panic!("engine still referenced"),
+    }
+}
+
+/// Error paths: a worker-refused batch reports, engine survives.
+#[test]
+fn engine_survives_rejected_batches() {
+    let engine = Engine::launch(LaunchConfig::preset("tiny")).unwrap();
+    for _ in 0..3 {
+        assert!(engine.infer_batch(vec![]).is_err());
+        assert!(engine
+            .infer_batch(vec![Request::new(0, vec![1; 500])])
+            .is_err());
+    }
+    // engine still serves
+    let out = engine
+        .infer_batch(vec![Request::new(1, vec![1, 2, 3])])
+        .unwrap()
+        .to_here()
+        .unwrap();
+    assert_eq!(out.next_tokens.len(), 1);
+    engine.shutdown();
+}
+
+/// Autoregressive generation: deterministic, grows by n tokens, and the
+/// parallel engine generates the identical continuation.
+#[test]
+fn generation_is_deterministic_and_config_invariant() {
+    let serial = Engine::launch(LaunchConfig::preset("tiny")).unwrap();
+    let a = serial.generate(vec![5, 9, 2], 5).unwrap();
+    let b = serial.generate(vec![5, 9, 2], 5).unwrap();
+    assert_eq!(a, b);
+    assert_eq!(a.len(), 8);
+    assert_eq!(&a[..3], &[5, 9, 2]);
+    serial.shutdown();
+
+    let tp2 = Engine::launch(LaunchConfig::preset("tiny").with_parallel(2, 1)).unwrap();
+    let c = tp2.generate(vec![5, 9, 2], 5).unwrap();
+    assert_eq!(c, a, "tp2 generated a different continuation");
+    tp2.shutdown();
+}
+
+/// Generation stops at the longest compiled bucket instead of erroring.
+#[test]
+fn generation_clamps_to_max_bucket() {
+    let engine = Engine::launch(LaunchConfig::preset("tiny")).unwrap();
+    let out = engine.generate(vec![1; 30], 10).unwrap();
+    assert!(out.len() <= 32, "{}", out.len());
+    engine.shutdown();
+}
