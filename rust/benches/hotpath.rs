@@ -1,9 +1,16 @@
 //! Hot-path microbenchmarks — the profile targets of the §Perf pass:
 //! engine publish→complete round trip, ring all-reduce, DRCE pack/unpack,
 //! batcher formation, manifest parsing, and bare PJRT layer execution.
+//!
+//! For every hot path touched by the zero-copy refactor the bench runs the
+//! allocating *reference* implementation next to the arena implementation
+//! and prints both, so regressions show up as a before/after pair. Medians
+//! are also written machine-readably to `BENCH_hotpath.json` at the repo
+//! root (regenerate with `scripts/bench_hotpath.sh`) so later PRs can
+//! track the perf trajectory.
 
 use energonai::comm::channel::{CommWorld, Mode};
-use energonai::comm::collective::{ring_allreduce, ChunkMsg};
+use energonai::comm::collective::{self, ring_allreduce, ChunkMsg};
 use energonai::config::ModelConfig;
 use energonai::coordinator::batcher::{Batcher, Request};
 use energonai::coordinator::engine::{Engine, LaunchConfig};
@@ -14,18 +21,27 @@ use energonai::util::bench::run_print;
 use energonai::util::rng::Rng;
 use std::time::Duration;
 
-fn bench_engine_roundtrip() {
+/// (metric name, median µs) pairs destined for BENCH_hotpath.json.
+type Results = Vec<(String, f64)>;
+
+fn record(results: &mut Results, key: &str, stats: energonai::util::bench::Stats) {
+    results.push((key.to_string(), stats.median.as_secs_f64() * 1e6));
+}
+
+fn bench_engine_roundtrip(results: &mut Results) {
     let engine = Engine::launch(LaunchConfig::preset("tiny").with_warmup(true)).unwrap();
-    run_print("engine publish→complete (tiny, 1 worker)", 5, 50, || {
+    let s = run_print("engine publish→complete (tiny, 1 worker)", 5, 50, || {
         let r = engine
             .infer_batch(vec![Request::new(0, vec![7; 10])])
             .unwrap();
         r.to_here().unwrap();
     });
+    record(results, "engine_publish_complete_us", s);
+    println!("  {}", engine.metrics_snapshot().summary());
     engine.shutdown();
 }
 
-fn bench_bare_layer() {
+fn bench_bare_layer(results: &mut Results) {
     let man = Manifest::load(find_artifacts().unwrap()).unwrap();
     let dev = Device::new(0).unwrap();
     let cfg = ModelConfig::preset("tiny").unwrap();
@@ -36,83 +52,151 @@ fn bench_bare_layer() {
     let mut args = vec![Value::F32(x), valid_len_arg(&[16, 16])];
     args.extend(w.layers[0].all_args());
     dev.execute(&man, v, &args).unwrap();
-    run_print("bare PJRT layer_full execute (tiny b2 s16)", 5, 50, || {
+    let s = run_print("bare PJRT layer_full execute (tiny b2 s16)", 5, 50, || {
         dev.execute(&man, v, &args).unwrap();
     });
+    record(results, "bare_layer_execute_us", s);
 }
 
-fn bench_allreduce() {
+/// One timed all-reduce configuration: every rank loops `iters` calls,
+/// feeding the output back in (arena steady state). Each call is timed
+/// individually on rank 0 (the ring lock-steps all ranks anyway) and the
+/// **median** per-call duration is reported, matching the `median_us` unit
+/// of every other entry in BENCH_hotpath.json.
+fn time_allreduce(n: usize, len: usize, iters: usize, use_reference: bool) -> Duration {
+    let eps = CommWorld::new::<ChunkMsg>(n, Mode::NonBlocking);
+    let group: Vec<usize> = (0..n).collect();
+    let barrier = std::sync::Arc::new(std::sync::Barrier::new(n));
+    let handles: Vec<_> = eps
+        .into_iter()
+        .map(|ep| {
+            let group = group.clone();
+            let barrier = barrier.clone();
+            std::thread::spawn(move || {
+                let mut t = Tensor::full(&[len], 1.0);
+                // warmup (also populates arena shelves)
+                for _ in 0..3 {
+                    t = if use_reference {
+                        collective::reference::ring_allreduce(&ep, &group, t)
+                    } else {
+                        ring_allreduce(&ep, &group, t)
+                    };
+                }
+                barrier.wait();
+                let mut samples = Vec::with_capacity(iters);
+                for _ in 0..iters {
+                    let t0 = std::time::Instant::now();
+                    t = if use_reference {
+                        collective::reference::ring_allreduce(&ep, &group, t)
+                    } else {
+                        ring_allreduce(&ep, &group, t)
+                    };
+                    samples.push(t0.elapsed());
+                }
+                std::hint::black_box(t.data[0]);
+                energonai::util::median(samples)
+            })
+        })
+        .collect();
+    let medians: Vec<Duration> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    medians[0]
+}
+
+fn bench_allreduce(results: &mut Results) {
     for n in [2usize, 4] {
         let len = 262_144; // 1 MiB of f32
-        let stats = {
-            let eps = CommWorld::new::<ChunkMsg>(n, Mode::NonBlocking);
-            let group: Vec<usize> = (0..n).collect();
-            let barrier = std::sync::Arc::new(std::sync::Barrier::new(n));
-            let handles: Vec<_> = eps
-                .into_iter()
-                .map(|ep| {
-                    let group = group.clone();
-                    let barrier = barrier.clone();
-                    std::thread::spawn(move || {
-                        let t = Tensor::full(&[len], ep.rank as f32);
-                        let mut out = None;
-                        let iters = 30;
-                        barrier.wait();
-                        let t0 = std::time::Instant::now();
-                        for _ in 0..iters {
-                            out = Some(ring_allreduce(&ep, &group, t.clone()));
-                        }
-                        let el = t0.elapsed() / iters;
-                        (el, out.unwrap().data[0])
-                    })
-                })
-                .collect();
-            let results: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
-            results[0].0
-        };
+        let iters = 30;
+        let before = time_allreduce(n, len, iters, true);
+        let after = time_allreduce(n, len, iters, false);
         println!(
-            "ring all-reduce 1MiB x{n} ranks                     med {:>10}",
-            energonai::util::fmt_duration(stats)
+            "ring all-reduce 1MiB x{n} ranks       reference {:>10}   arena {:>10}",
+            energonai::util::fmt_duration(before),
+            energonai::util::fmt_duration(after),
         );
+        results.push((format!("ring_allreduce_1mib_x{n}_reference_us"), before.as_secs_f64() * 1e6));
+        results.push((format!("ring_allreduce_1mib_x{n}_us"), after.as_secs_f64() * 1e6));
     }
 }
 
-fn bench_drce_pack() {
+fn bench_drce_pack(results: &mut Results) {
     let maps = drce::make_maps(&[32; 4], 64, 128).unwrap();
     let mut rng = Rng::new(3);
     let x = Tensor::randn(&[256, 256], 0.5, &mut rng);
-    run_print("drce pack 256x256 (valid=pad/2)", 10, 200, || {
+    let s = run_print("drce pack 256x256 reference (alloc)", 10, 200, || {
+        std::hint::black_box(drce::reference::pack(&x, &maps));
+    });
+    record(results, "drce_pack_reference_us", s);
+    let s = run_print("drce pack 256x256 arena (valid=pad/2)", 10, 200, || {
         std::hint::black_box(drce::pack(&x, &maps));
     });
+    record(results, "drce_pack_us", s);
     let packed = drce::pack(&x, &maps);
-    run_print("drce unpack 128->256 rows", 10, 200, || {
+    let s = run_print("drce unpack 128->256 rows reference", 10, 200, || {
+        std::hint::black_box(drce::reference::unpack(&packed, &maps));
+    });
+    record(results, "drce_unpack_reference_us", s);
+    let s = run_print("drce unpack 128->256 rows arena", 10, 200, || {
         std::hint::black_box(drce::unpack(&packed, &maps));
     });
+    record(results, "drce_unpack_us", s);
 }
 
-fn bench_batcher() {
-    run_print("batcher form 64 reqs into buckets", 5, 100, || {
+fn bench_batcher(results: &mut Results) {
+    let s = run_print("batcher form 64 reqs into buckets", 5, 100, || {
         let mut b = Batcher::new(vec![(1, 16), (2, 16), (4, 32)], 4, Duration::ZERO);
         for i in 0..64 {
             b.push(Request::new(i, vec![1; (i as usize % 14) + 1])).unwrap();
         }
         std::hint::black_box(b.flush());
     });
+    record(results, "batcher_form_64_us", s);
 }
 
-fn bench_manifest() {
+fn bench_manifest(results: &mut Results) {
     let dir = find_artifacts().unwrap();
-    run_print("manifest.json parse (full plan)", 2, 50, || {
+    let s = run_print("manifest.json parse (full plan)", 2, 50, || {
         std::hint::black_box(Manifest::load(&dir).unwrap());
     });
+    record(results, "manifest_parse_us", s);
+}
+
+fn write_json(results: &Results) {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_hotpath.json");
+    let arena = energonai::memory::arena::ArenaPool::global_stats();
+    let mut body = String::from("{\n  \"schema\": \"bench_hotpath/v1\",\n");
+    body.push_str("  \"generated_by\": \"scripts/bench_hotpath.sh\",\n");
+    body.push_str("  \"unit\": \"median_us\",\n");
+    body.push_str(&format!(
+        "  \"arena\": {{\"fresh_allocs\": {}, \"reuses\": {}, \"bytes_recycled\": {}}},\n",
+        arena.fresh_allocs, arena.reuses, arena.bytes_recycled
+    ));
+    body.push_str("  \"results\": {\n");
+    for (i, (k, v)) in results.iter().enumerate() {
+        let comma = if i + 1 == results.len() { "" } else { "," };
+        body.push_str(&format!("    \"{k}\": {v:.2}{comma}\n"));
+    }
+    body.push_str("  }\n}\n");
+    match std::fs::write(path, body) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
 }
 
 fn main() {
     println!("hot-path microbenchmarks (see EXPERIMENTS.md §Perf):");
-    bench_bare_layer();
-    bench_engine_roundtrip();
-    bench_allreduce();
-    bench_drce_pack();
-    bench_batcher();
-    bench_manifest();
+    let mut results: Results = Vec::new();
+    let have_artifacts = find_artifacts().is_ok();
+    if have_artifacts {
+        bench_bare_layer(&mut results);
+        bench_engine_roundtrip(&mut results);
+    } else {
+        println!("(no artifacts found — skipping engine/PJRT benches; run `make artifacts`)");
+    }
+    bench_allreduce(&mut results);
+    bench_drce_pack(&mut results);
+    bench_batcher(&mut results);
+    if have_artifacts {
+        bench_manifest(&mut results);
+    }
+    write_json(&results);
 }

@@ -5,32 +5,74 @@
 //! The ring all-reduce is the textbook 2(n-1)-step algorithm: n-1
 //! reduce-scatter steps followed by n-1 all-gather steps over equal chunks,
 //! which is also the cost model `topology::allreduce_time` assumes.
+//!
+//! # §Perf: the zero-copy wire
+//!
+//! Chunk payloads are recyclable [`ArenaBuf`]s: the sender checks a chunk
+//! buffer out of its thread-local arena shelf, the receiver reduces from it
+//! and drops it, which returns it to the *receiver's* shelf. Because every
+//! ring step sends and receives exactly one chunk, each endpoint's shelf
+//! stays balanced and steady-state calls perform **zero heap allocations**
+//! (asserted in `tests/zero_copy.rs`). Empty chunks (`len < n`) are not
+//! sent at all — both sides compute identical chunk bounds and skip the
+//! matching send/recv. Broadcast ships one `Arc`-shared buffer to every
+//! receiver: no per-receiver clone, and receivers get a zero-copy shared
+//! tensor.
+//!
+//! The pre-arena allocating implementations are kept in [`reference`] for
+//! differential tests and the before/after hot-path bench.
 
 use super::channel::Endpoint;
-use crate::tensor::Tensor;
+use crate::memory::arena::{ArenaBuf, ArenaPool};
+use crate::tensor::{Storage, Tensor};
+use std::sync::Arc;
 
-/// Message payload for collectives.
-pub type ChunkMsg = (usize, Vec<f32>); // (chunk index, data)
+/// A chunk payload on the wire.
+pub enum WireBuf {
+    /// Exclusively-owned chunk — usually arena-checked-out; dropping it on
+    /// the receive side shelves the buffer in the receiver's arena.
+    Excl(ArenaBuf),
+    /// One buffer shared by every receiver (broadcast): cloning the message
+    /// clones an `Arc`, never the data.
+    Shared(Arc<ArenaBuf>),
+}
 
-/// Chunk boundaries: n near-equal pieces of `len`.
-fn chunk_bounds(len: usize, n: usize) -> Vec<(usize, usize)> {
-    let base = len / n;
-    let rem = len % n;
-    let mut out = Vec::with_capacity(n);
-    let mut start = 0;
-    for i in 0..n {
-        let sz = base + usize::from(i < rem);
-        out.push((start, start + sz));
-        start += sz;
+impl WireBuf {
+    pub fn as_slice(&self) -> &[f32] {
+        match self {
+            WireBuf::Excl(b) => b.as_slice(),
+            WireBuf::Shared(a) => a.as_slice(),
+        }
     }
-    out
+}
+
+/// Message payload for collectives: chunk index + recyclable buffer.
+pub struct ChunkMsg {
+    pub idx: usize,
+    pub buf: WireBuf,
+}
+
+/// Start of chunk `i` when `len` splits into `n` near-equal pieces.
+#[inline]
+fn chunk_start(len: usize, n: usize, i: usize) -> usize {
+    let (base, rem) = (len / n, len % n);
+    i * base + i.min(rem)
+}
+
+/// Bounds [a, b) of chunk `i`.
+#[inline]
+fn chunk_bound(len: usize, n: usize, i: usize) -> (usize, usize) {
+    let (base, rem) = (len / n, len % n);
+    let a = chunk_start(len, n, i);
+    (a, a + base + usize::from(i < rem))
 }
 
 /// Ring all-reduce (sum) across `group` (world ranks, including our own).
 /// Every member calls this with its local partial; all return the sum.
 ///
 /// `ep` is this worker's endpoint; `group` must list ranks in the same
-/// order on every participant.
+/// order on every participant. Allocation-free at steady state: chunk
+/// buffers cycle between the participants' arena shelves.
 pub fn ring_allreduce(ep: &Endpoint<ChunkMsg>, group: &[usize], mut t: Tensor) -> Tensor {
     let n = group.len();
     if n <= 1 {
@@ -43,47 +85,160 @@ pub fn ring_allreduce(ep: &Endpoint<ChunkMsg>, group: &[usize], mut t: Tensor) -
     let me = group.iter().position(|&r| r == ep.rank).expect("rank not in group");
     let next = group[(me + 1) % n];
     let prev = group[(me + n - 1) % n];
-    let bounds = chunk_bounds(t.len(), n);
+    let len = t.len();
+    let data: &mut [f32] = &mut t.data;
 
     // Phase 1: reduce-scatter. After step s, rank me owns the full sum of
     // chunk (me + 1) mod n ... converging so chunk (me+1)%n is complete.
     for s in 0..n - 1 {
         let send_idx = (me + n - s) % n;
-        let (a, b) = bounds[send_idx];
-        ep.send(next, (send_idx, t.data[a..b].to_vec()));
-        let (idx, data) = ep.recv(prev);
-        let (a, b) = bounds[idx];
-        for (dst, src) in t.data[a..b].iter_mut().zip(&data) {
-            *dst += src;
+        let (a, b) = chunk_bound(len, n, send_idx);
+        if b > a {
+            let mut buf = ArenaPool::checkout(b - a);
+            buf.as_mut_slice().copy_from_slice(&data[a..b]);
+            ep.send(next, ChunkMsg { idx: send_idx, buf: WireBuf::Excl(buf) });
+        }
+        let recv_idx = (me + 2 * n - 1 - s) % n;
+        let (a, b) = chunk_bound(len, n, recv_idx);
+        if b > a {
+            let msg = ep.recv(prev);
+            debug_assert_eq!(msg.idx, recv_idx, "ring step out of order");
+            for (dst, src) in data[a..b].iter_mut().zip(msg.buf.as_slice()) {
+                *dst += src;
+            }
+            // msg drops here — its buffer shelves on THIS thread's arena
         }
     }
     // Phase 2: all-gather the completed chunks around the ring.
     for s in 0..n - 1 {
         let send_idx = (me + 1 + n - s) % n;
-        let (a, b) = bounds[send_idx];
-        ep.send(next, (send_idx, t.data[a..b].to_vec()));
-        let (idx, data) = ep.recv(prev);
-        let (a, b) = bounds[idx];
-        t.data[a..b].copy_from_slice(&data);
+        let (a, b) = chunk_bound(len, n, send_idx);
+        if b > a {
+            let mut buf = ArenaPool::checkout(b - a);
+            buf.as_mut_slice().copy_from_slice(&data[a..b]);
+            ep.send(next, ChunkMsg { idx: send_idx, buf: WireBuf::Excl(buf) });
+        }
+        let recv_idx = (me + 2 * n - s) % n;
+        let (a, b) = chunk_bound(len, n, recv_idx);
+        if b > a {
+            let msg = ep.recv(prev);
+            debug_assert_eq!(msg.idx, recv_idx, "ring step out of order");
+            data[a..b].copy_from_slice(msg.buf.as_slice());
+        }
     }
     t
 }
 
 /// Broadcast `t` from `root` to all of `group`. Non-roots pass `None`.
-pub fn broadcast(ep: &Endpoint<ChunkMsg>, group: &[usize], root: usize, t: Option<Tensor>) -> Vec<f32> {
+/// The payload crosses every edge as one `Arc`-shared buffer — no
+/// per-receiver clone — and receivers get a zero-copy shared tensor.
+///
+/// The wire carries no shape metadata, so the result is a flat `[len]`
+/// tensor on **every** rank (root included) — callers reattach shape
+/// context, exactly as with the previous `Vec<f32>` return.
+pub fn broadcast(ep: &Endpoint<ChunkMsg>, group: &[usize], root: usize, t: Option<Tensor>) -> Tensor {
     if group.len() <= 1 {
-        return t.expect("root must provide tensor").data;
+        let t = t.expect("root must provide tensor");
+        let len = t.len();
+        return t.reshape(&[len]);
     }
     if ep.rank == root {
         let t = t.expect("root must provide tensor");
+        let len = t.len();
+        let t = t.reshape(&[len]).into_shared();
+        let arc = t.shared_full_arc().expect("into_shared yields a full-range shared buffer");
         for &r in group {
             if r != root {
-                ep.send(r, (0, t.data.clone()));
+                ep.send(r, ChunkMsg { idx: 0, buf: WireBuf::Shared(arc.clone()) });
             }
         }
-        t.data
+        t
     } else {
-        ep.recv(root).1
+        let msg = ep.recv(root);
+        match msg.buf {
+            WireBuf::Shared(a) => {
+                let len = a.len();
+                Tensor::from_storage(&[len], Storage::Shared { buf: a, off: 0, len })
+            }
+            WireBuf::Excl(b) => {
+                let len = b.len();
+                Tensor::from_storage(&[len], Storage::Exclusive(b))
+            }
+        }
+    }
+}
+
+/// Allocating reference implementations — the pre-arena code paths, kept
+/// verbatim (fresh `Vec` per chunk per step, one payload clone per
+/// broadcast receiver, empty chunks still round-trip). Used by the
+/// differential tests in `tests/zero_copy.rs` and the before/after
+/// comparison in `benches/hotpath.rs`.
+pub mod reference {
+    use super::*;
+
+    pub fn ring_allreduce(ep: &Endpoint<ChunkMsg>, group: &[usize], mut t: Tensor) -> Tensor {
+        let n = group.len();
+        if n <= 1 {
+            return t;
+        }
+        let me = group.iter().position(|&r| r == ep.rank).expect("rank not in group");
+        let next = group[(me + 1) % n];
+        let prev = group[(me + n - 1) % n];
+        let len = t.len();
+        let data: &mut [f32] = &mut t.data;
+        for s in 0..n - 1 {
+            let send_idx = (me + n - s) % n;
+            let (a, b) = chunk_bound(len, n, send_idx);
+            let buf = ArenaBuf::owned(data[a..b].to_vec()); // fresh alloc per chunk
+            ep.send(next, ChunkMsg { idx: send_idx, buf: WireBuf::Excl(buf) });
+            let msg = ep.recv(prev);
+            let (a, b) = chunk_bound(len, n, msg.idx);
+            for (dst, src) in data[a..b].iter_mut().zip(msg.buf.as_slice()) {
+                *dst += src;
+            }
+        }
+        for s in 0..n - 1 {
+            let send_idx = (me + 1 + n - s) % n;
+            let (a, b) = chunk_bound(len, n, send_idx);
+            let buf = ArenaBuf::owned(data[a..b].to_vec());
+            ep.send(next, ChunkMsg { idx: send_idx, buf: WireBuf::Excl(buf) });
+            let msg = ep.recv(prev);
+            let (a, b) = chunk_bound(len, n, msg.idx);
+            data[a..b].copy_from_slice(msg.buf.as_slice());
+        }
+        t
+    }
+
+    pub fn broadcast(
+        ep: &Endpoint<ChunkMsg>,
+        group: &[usize],
+        root: usize,
+        t: Option<Tensor>,
+    ) -> Tensor {
+        if group.len() <= 1 {
+            let t = t.expect("root must provide tensor");
+            let len = t.len();
+            return t.reshape(&[len]);
+        }
+        if ep.rank == root {
+            let t = t.expect("root must provide tensor");
+            let len = t.len();
+            for &r in group {
+                if r != root {
+                    // one full payload clone per receiver
+                    let buf = ArenaBuf::owned(t.data.to_vec());
+                    ep.send(r, ChunkMsg { idx: 0, buf: WireBuf::Excl(buf) });
+                }
+            }
+            t.reshape(&[len])
+        } else {
+            let msg = ep.recv(root);
+            let len = msg.buf.as_slice().len();
+            match msg.buf {
+                WireBuf::Excl(b) => Tensor::from_storage(&[len], Storage::Exclusive(b)),
+                WireBuf::Shared(a) => Tensor::new(&[len], a.as_slice().to_vec()),
+            }
+        }
     }
 }
 
@@ -140,7 +295,44 @@ mod tests {
 
     #[test]
     fn allreduce_len_smaller_than_group() {
-        run_allreduce(4, 2); // some chunks are empty
+        run_allreduce(4, 2); // some chunks are empty — skipped, not sent
+    }
+
+    #[test]
+    fn allreduce_len_one() {
+        run_allreduce(3, 1); // only one non-empty chunk in the whole ring
+    }
+
+    #[test]
+    fn empty_chunks_never_hit_the_wire() {
+        // len 2, n 4: chunks 2 and 3 are empty. Run the ring, then verify
+        // no stray message is left anywhere and nothing was sent for the
+        // empty chunks (a leftover empty send would desync the next call).
+        let n = 4;
+        let eps = CommWorld::new::<ChunkMsg>(n, Mode::NonBlocking);
+        let group: Vec<usize> = (0..n).collect();
+        let handles: Vec<_> = eps
+            .into_iter()
+            .map(|ep| {
+                let group = group.clone();
+                thread::spawn(move || {
+                    let t = Tensor::new(&[2], vec![ep.rank as f32; 2]);
+                    // two back-to-back calls must not desync
+                    let t = ring_allreduce(&ep, &group, t);
+                    let t = ring_allreduce(&ep, &group, t);
+                    for peer in 0..group.len() {
+                        if peer != ep.rank {
+                            assert!(ep.try_recv(peer).is_none(), "stray message on the wire");
+                        }
+                    }
+                    t
+                })
+            })
+            .collect();
+        let expect = vec![(0 + 1 + 2 + 3) as f32 * n as f32; 2];
+        for h in handles {
+            assert_eq!(h.join().unwrap().data, expect);
+        }
     }
 
     #[test]
@@ -163,7 +355,35 @@ mod tests {
             })
             .collect();
         for h in handles {
-            assert_eq!(h.join().unwrap(), vec![7., 8., 9.]);
+            assert_eq!(h.join().unwrap().data, vec![7., 8., 9.]);
+        }
+    }
+
+    #[test]
+    fn broadcast_shares_one_buffer_across_three_receivers() {
+        // ≥3 receivers: every receiver must see the payload, and all of
+        // them alias the SAME shared buffer (no per-receiver copy).
+        let n = 4;
+        let eps = CommWorld::new::<ChunkMsg>(n, Mode::NonBlocking);
+        let group: Vec<usize> = (0..n).collect();
+        let payload: Vec<f32> = (0..1000).map(|i| i as f32).collect();
+        let handles: Vec<_> = eps
+            .into_iter()
+            .map(|ep| {
+                let group = group.clone();
+                let payload = payload.clone();
+                thread::spawn(move || {
+                    let t = (ep.rank == 1).then(|| Tensor::new(&[1000], payload));
+                    let out = broadcast(&ep, &group, 1, t);
+                    (ep.rank, out.data.as_ptr() as usize, out)
+                })
+            })
+            .collect();
+        let results: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        let root_ptr = results.iter().find(|(r, _, _)| *r == 1).unwrap().1;
+        for (rank, ptr, out) in &results {
+            assert_eq!(out.data, payload, "rank {rank} got wrong payload");
+            assert_eq!(*ptr, root_ptr, "rank {rank} received a copy, not the shared buffer");
         }
     }
 

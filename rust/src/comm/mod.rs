@@ -11,11 +11,13 @@
 //!   paper-scale transfers.
 //! * [`collective`] — ring all-reduce / broadcast built on [`channel`],
 //!   used by the TP orchestrator (two all-reduces per layer, §4.1.3).
+//!   Chunk payloads are recyclable arena buffers ([`collective::ChunkMsg`])
+//!   so steady-state collectives are allocation-free (§Perf).
 
 pub mod channel;
 pub mod collective;
 pub mod topology;
 
 pub use channel::{CommWorld, Endpoint};
-pub use collective::{broadcast, ring_allreduce};
+pub use collective::{broadcast, ring_allreduce, ChunkMsg, WireBuf};
 pub use topology::{Interconnect, Link, Topology};

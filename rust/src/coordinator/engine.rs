@@ -427,8 +427,13 @@ impl Engine {
         Ok(tokens)
     }
 
+    /// Snapshot of serving metrics, with the process-wide activation-arena
+    /// allocation counters folded in (fresh allocs vs bytes recycled on the
+    /// host hot path — §Perf).
     pub fn metrics_snapshot(&self) -> Recorder {
-        self.shared.metrics.lock().unwrap().clone()
+        let mut r = self.shared.metrics.lock().unwrap().clone();
+        r.record_arena(crate::memory::arena::ArenaPool::global_stats());
+        r
     }
 
     pub fn pending_count(&self) -> usize {

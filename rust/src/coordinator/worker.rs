@@ -20,7 +20,9 @@ use std::rc::Rc;
 use std::sync::mpsc::{Receiver, Sender};
 use std::sync::Arc;
 
-/// Activation hand-off between consecutive pipeline stages.
+/// Activation hand-off between consecutive pipeline stages. The tensor is
+/// *moved* into the channel (and its storage is usually arena scratch or an
+/// `Arc`-shared buffer), so a stage handoff never copies activation data.
 pub type ActMsg = (u64, Tensor);
 
 /// Worker reply to the engine collector.
@@ -210,7 +212,7 @@ impl Worker {
         if !self.ctx.is_replier() {
             return Ok(None);
         }
-        let logits = self.run_logits(&x, input)?;
+        let logits = self.run_logits(x, input)?;
         let next_tokens = argmax_next_tokens(&logits, &input.valid_lens);
         Ok(Some(BatchOutput { uid, next_tokens, logits }))
     }
@@ -277,13 +279,14 @@ impl Worker {
             .remove(0))
     }
 
-    fn run_logits(&mut self, x: &Tensor, input: &BatchInput) -> anyhow::Result<Tensor> {
+    fn run_logits(&mut self, x: Tensor, input: &BatchInput) -> anyhow::Result<Tensor> {
         let v = self.variant("logits", input, 0)?;
         if self.logits_lits.is_none() {
             let w = self.logits_weights.as_ref().expect("last stage has logits weights");
             self.logits_lits = Some(crate::runtime::pjrt::prepare(w)?);
         }
-        let acts = [Value::F32(x.clone())];
+        // x is moved, not cloned — the last activation copy on this path
+        let acts = [Value::F32(x)];
         Ok(self
             .device
             .execute_prepared(&self.manifest, &v, &acts, self.logits_lits.as_ref().unwrap())?
@@ -303,15 +306,20 @@ impl Worker {
                 let y = self.device.execute_prepared(&self.manifest, &v, &acts, &lits)?.remove(0);
                 Ok(Act::Padded(y))
             }
-            Act::Padded(x) => {
-                // attention half (partial) -> all-reduce -> residual
+            Act::Padded(mut x) => {
+                // attention half (partial) -> all-reduce -> residual.
+                // The activation fans out (executable arg + residual), so
+                // share its storage once: the clone below is an Arc bump,
+                // not a data copy (§Perf).
+                x.make_shared();
                 let v = self.variant("attn_shard", input, 0)?;
                 let lits = self.layer_lits(local, WeightKind::Attn)?;
                 let acts = [Value::F32(x.clone()), valid.clone()];
                 let partial = self.device.execute_prepared(&self.manifest, &v, &acts, &lits)?.remove(0);
                 let attn_sum = self.allreduce(partial);
-                let r = x.add(&attn_sum);
-                // mlp half over (b*s, h) rows
+                let mut r = x.add(&attn_sum); // arena scratch
+                r.make_shared();
+                // mlp half over (b*s, h) rows — zero-copy reshape of a view
                 let v = self.variant("mlp_shard", input, 0)?;
                 let lits = self.layer_lits(local, WeightKind::Mlp)?;
                 let r2 = r.clone().reshape(&[b * s, h]);
@@ -320,7 +328,8 @@ impl Worker {
                 let mlp_sum = self.allreduce(partial).reshape(&[b, s, h]);
                 Ok(Act::Padded(r.add(&mlp_sum)))
             }
-            Act::Packed(xp, maps) => {
+            Act::Packed(mut xp, maps) => {
+                xp.make_shared(); // Arc-cheap clone into the arg list below
                 let v = self.variant("drce_attn_shard", input, maps.t_bucket)?;
                 let lits = self.layer_lits(local, WeightKind::Attn)?;
                 let acts = [
@@ -331,7 +340,8 @@ impl Worker {
                 ];
                 let partial = self.device.execute_prepared(&self.manifest, &v, &acts, &lits)?.remove(0);
                 let attn_sum = self.allreduce(partial);
-                let r = xp.add(&attn_sum);
+                let mut r = xp.add(&attn_sum); // arena scratch
+                r.make_shared();
                 let v = self.variant("mlp_shard", input, maps.t_bucket)?;
                 let lits = self.layer_lits(local, WeightKind::Mlp)?;
                 let acts = [Value::F32(r.clone())];

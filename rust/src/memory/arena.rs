@@ -1,0 +1,458 @@
+//! The activation arena: size-bucketed recycling of `Vec<f32>` buffers so
+//! the host hot path (collective chunks, DRCE pack/unpack scratch, residual
+//! adds, activation handoff) is allocation-free at steady state.
+//!
+//! # Ownership model — who checks out, who returns
+//!
+//! * **Checkout** — [`ArenaPool::checkout`] hands out an [`ArenaBuf`] of the
+//!   requested length, recycling a shelved buffer when one of the right size
+//!   class exists, allocating a fresh one otherwise. Contents of a recycled
+//!   buffer are *unspecified* (initialized but stale); callers that don't
+//!   overwrite every element must use [`ArenaPool::checkout_zeroed`].
+//! * **Return** — nobody calls a free function. Dropping an `ArenaBuf`
+//!   returns its backing `Vec` to the shelf of the *dropping* thread. A
+//!   buffer sent across a channel (e.g. a collective chunk inside
+//!   `comm::collective::ChunkMsg`) therefore lands on the receiver's shelf;
+//!   since ring collectives send and receive symmetrically, every endpoint's
+//!   shelf stays balanced and steady-state checkouts always hit.
+//! * **Escape** — [`ArenaBuf::take`] extracts the raw `Vec` and detaches it
+//!   from the pool (used when a buffer must outlive the arena discipline).
+//!
+//! Shelves are **thread-local** (no mutex on the hot path, and per-thread
+//! [`ArenaPool::thread_stats`] make allocation-freedom assertable in tests
+//! without cross-test interference). Process-wide aggregates for the
+//! `metrics::Recorder` are kept in relaxed atomics
+//! ([`ArenaPool::global_stats`]).
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Smallest checkout worth recycling, in f32 elements. Tiny vectors are
+/// cheaper to allocate than to shelve.
+const MIN_BUCKET: usize = 64;
+/// Buffers kept per size class per thread before overflow is really freed.
+const SHELF_DEPTH: usize = 32;
+/// Size classes are powers of two: 2^6 .. 2^35 elements (256 B – 128 GiB).
+const N_CLASSES: usize = 36;
+/// Cap on the bytes a single thread's shelves may pin. Returns beyond the
+/// cap are freed instead of shelved, so the per-thread footprint cannot
+/// ratchet up to the all-time high-water mark of every size class.
+const MAX_SHELF_BYTES: u64 = 256 * 1024 * 1024;
+
+/// Counters the arena accumulates; snapshot via [`ArenaPool::thread_stats`]
+/// (this thread) or [`ArenaPool::global_stats`] (process-wide).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ArenaStats {
+    /// Checkouts that had to allocate a fresh `Vec`.
+    pub fresh_allocs: u64,
+    /// Checkouts served from a shelf (no heap allocation).
+    pub reuses: u64,
+    /// Buffers returned to a shelf on drop.
+    pub returns: u64,
+    /// Returns dropped on the floor (shelf full or class out of range).
+    pub shed: u64,
+    /// Bytes newly allocated by fresh checkouts.
+    pub bytes_allocated: u64,
+    /// Bytes served from shelves instead of the allocator.
+    pub bytes_recycled: u64,
+}
+
+struct Shelves {
+    classes: Vec<Vec<Vec<f32>>>,
+    /// Bytes currently pinned by this thread's shelves (capacity, not len).
+    shelved_bytes: u64,
+    stats: ArenaStats,
+}
+
+thread_local! {
+    static SHELVES: RefCell<Shelves> = RefCell::new(Shelves {
+        classes: (0..N_CLASSES).map(|_| Vec::new()).collect(),
+        shelved_bytes: 0,
+        stats: ArenaStats::default(),
+    });
+}
+
+static G_FRESH: AtomicU64 = AtomicU64::new(0);
+static G_REUSES: AtomicU64 = AtomicU64::new(0);
+static G_RETURNS: AtomicU64 = AtomicU64::new(0);
+static G_SHED: AtomicU64 = AtomicU64::new(0);
+static G_BYTES_ALLOCATED: AtomicU64 = AtomicU64::new(0);
+static G_BYTES_RECYCLED: AtomicU64 = AtomicU64::new(0);
+
+/// Size class a checkout of `len` elements draws from (ceil log2).
+fn class_of_len(len: usize) -> usize {
+    (len.max(MIN_BUCKET)).next_power_of_two().trailing_zeros() as usize
+}
+
+/// Size class a returned buffer of `cap` capacity shelves under (floor
+/// log2, so every buffer under class k has capacity >= 2^k).
+fn class_of_cap(cap: usize) -> usize {
+    (usize::BITS - 1 - cap.leading_zeros()) as usize
+}
+
+/// The size-bucketed buffer pool. All state is thread-local or atomic, so
+/// the type itself is a namespace: `ArenaPool::checkout(n)`.
+pub struct ArenaPool;
+
+impl ArenaPool {
+    /// Checkout a buffer of exactly `len` elements. Contents are
+    /// unspecified (stale on reuse, zero on a fresh allocation) — the
+    /// caller must overwrite every element it reads.
+    pub fn checkout(len: usize) -> ArenaBuf {
+        Self::checkout_inner(len, false)
+    }
+
+    /// Checkout a buffer of `len` elements, all zero.
+    pub fn checkout_zeroed(len: usize) -> ArenaBuf {
+        Self::checkout_inner(len, true)
+    }
+
+    /// Checkout an *empty* buffer (`len == 0`) with capacity for at least
+    /// `cap` elements — for single-pass `extend_from_slice` fills. Unlike
+    /// [`ArenaPool::checkout`] this never initializes elements, so a fresh
+    /// allocation costs only the allocation.
+    pub fn checkout_empty(cap: usize) -> ArenaBuf {
+        let k = class_of_len(cap);
+        if k >= N_CLASSES {
+            Self::note_fresh((cap * 4) as u64);
+            return ArenaBuf::owned(Vec::with_capacity(cap));
+        }
+        match Self::pop_shelf(k) {
+            Some(mut v) => {
+                Self::note_reuse((v.capacity() * 4) as u64);
+                v.clear();
+                ArenaBuf { vec: v, pooled: true }
+            }
+            None => {
+                let c = 1usize << k;
+                Self::note_fresh((c * 4) as u64);
+                ArenaBuf { vec: Vec::with_capacity(c), pooled: true }
+            }
+        }
+    }
+
+    fn checkout_inner(len: usize, zero: bool) -> ArenaBuf {
+        let k = class_of_len(len);
+        if k >= N_CLASSES {
+            // beyond the largest tracked class: plain unpooled allocation
+            // (graceful fallback, mirrors give_back's bound check)
+            Self::note_fresh((len * 4) as u64);
+            return ArenaBuf::owned(vec![0.0; len]);
+        }
+        match Self::pop_shelf(k) {
+            Some(mut v) => {
+                // count the full capacity, symmetric with the fresh path,
+                // so the recycle ratio compares like with like
+                Self::note_reuse((v.capacity() * 4) as u64);
+                if zero {
+                    v.clear();
+                    v.resize(len, 0.0);
+                } else if v.len() > len {
+                    v.truncate(len);
+                } else {
+                    v.resize(len, 0.0); // only the tail is (re)initialized
+                }
+                ArenaBuf { vec: v, pooled: true }
+            }
+            None => {
+                let cap = 1usize << k;
+                Self::note_fresh((cap * 4) as u64);
+                let mut v = Vec::with_capacity(cap);
+                v.resize(len, 0.0);
+                ArenaBuf { vec: v, pooled: true }
+            }
+        }
+    }
+
+    fn pop_shelf(k: usize) -> Option<Vec<f32>> {
+        SHELVES
+            .try_with(|s| {
+                let mut s = s.borrow_mut();
+                let v = s.classes[k].pop();
+                if let Some(v) = &v {
+                    s.shelved_bytes -= (v.capacity() * 4) as u64;
+                }
+                v
+            })
+            .ok()
+            .flatten()
+    }
+
+    fn note_reuse(bytes: u64) {
+        let _ = SHELVES.try_with(|s| {
+            let mut s = s.borrow_mut();
+            s.stats.reuses += 1;
+            s.stats.bytes_recycled += bytes;
+        });
+        G_REUSES.fetch_add(1, Ordering::Relaxed);
+        G_BYTES_RECYCLED.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    fn note_fresh(bytes: u64) {
+        let _ = SHELVES.try_with(|s| {
+            let mut s = s.borrow_mut();
+            s.stats.fresh_allocs += 1;
+            s.stats.bytes_allocated += bytes;
+        });
+        G_FRESH.fetch_add(1, Ordering::Relaxed);
+        G_BYTES_ALLOCATED.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    /// Return path (called from `ArenaBuf::drop`). Shelves on the current
+    /// thread; silently frees when the shelf or the thread's byte budget is
+    /// full, or the thread's TLS is already torn down.
+    fn give_back(v: Vec<f32>) {
+        let cap = v.capacity();
+        if cap < MIN_BUCKET {
+            return;
+        }
+        let k = class_of_cap(cap);
+        if k >= N_CLASSES {
+            G_SHED.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        let cap_bytes = (cap * 4) as u64;
+        let kept = SHELVES
+            .try_with(|s| {
+                let mut s = s.borrow_mut();
+                if s.classes[k].len() < SHELF_DEPTH && s.shelved_bytes + cap_bytes <= MAX_SHELF_BYTES {
+                    s.classes[k].push(v);
+                    s.shelved_bytes += cap_bytes;
+                    s.stats.returns += 1;
+                    true
+                } else {
+                    s.stats.shed += 1;
+                    false
+                }
+            })
+            .unwrap_or(false);
+        if kept {
+            G_RETURNS.fetch_add(1, Ordering::Relaxed);
+        } else {
+            G_SHED.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// This thread's counters (deterministic in tests — unaffected by other
+    /// test threads).
+    pub fn thread_stats() -> ArenaStats {
+        SHELVES.try_with(|s| s.borrow().stats).unwrap_or_default()
+    }
+
+    /// Process-wide counters (what `Engine::metrics_snapshot` folds into
+    /// the `Recorder`).
+    pub fn global_stats() -> ArenaStats {
+        ArenaStats {
+            fresh_allocs: G_FRESH.load(Ordering::Relaxed),
+            reuses: G_REUSES.load(Ordering::Relaxed),
+            returns: G_RETURNS.load(Ordering::Relaxed),
+            shed: G_SHED.load(Ordering::Relaxed),
+            bytes_allocated: G_BYTES_ALLOCATED.load(Ordering::Relaxed),
+            bytes_recycled: G_BYTES_RECYCLED.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Drop every buffer shelved by this thread (tests that want a cold
+    /// pool).
+    pub fn drain_thread() {
+        let _ = SHELVES.try_with(|s| {
+            let mut s = s.borrow_mut();
+            for c in s.classes.iter_mut() {
+                c.clear();
+            }
+            s.shelved_bytes = 0;
+        });
+    }
+}
+
+/// A checked-out buffer. Dereferences to `Vec<f32>` content; returns its
+/// storage to the dropping thread's shelf when it goes out of scope. Also
+/// doubles as the crate's universal f32 buffer: [`ArenaBuf::owned`] wraps a
+/// plain `Vec` that will be freed normally instead of shelved.
+#[derive(Debug)]
+pub struct ArenaBuf {
+    vec: Vec<f32>,
+    pooled: bool,
+}
+
+impl ArenaBuf {
+    /// Wrap an ordinary `Vec` — freed on drop, never shelved.
+    pub fn owned(vec: Vec<f32>) -> ArenaBuf {
+        ArenaBuf { vec, pooled: false }
+    }
+
+    /// Zero-length detached buffer (placeholder for `mem::replace`).
+    pub fn empty() -> ArenaBuf {
+        ArenaBuf { vec: Vec::new(), pooled: false }
+    }
+
+    /// Pool-checked-out copy of `src`.
+    pub fn copy_of(src: &[f32]) -> ArenaBuf {
+        let mut b = ArenaPool::checkout(src.len());
+        b.vec.copy_from_slice(src);
+        b
+    }
+
+    pub fn len(&self) -> usize {
+        self.vec.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.vec.is_empty()
+    }
+
+    pub fn is_pooled(&self) -> bool {
+        self.pooled
+    }
+
+    pub fn as_slice(&self) -> &[f32] {
+        &self.vec
+    }
+
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        &mut self.vec
+    }
+
+    /// Mutable access to the backing `Vec` (for `extend_from_slice` fills
+    /// into a [`ArenaPool::checkout_empty`] buffer). Growing beyond the
+    /// checked-out capacity works but defeats the recycling discipline.
+    pub fn vec_mut(&mut self) -> &mut Vec<f32> {
+        &mut self.vec
+    }
+
+    /// Detach the raw `Vec` from the pool (it will be freed, not shelved).
+    pub fn take(mut self) -> Vec<f32> {
+        std::mem::take(&mut self.vec)
+    }
+}
+
+impl Drop for ArenaBuf {
+    fn drop(&mut self) {
+        if self.pooled {
+            ArenaPool::give_back(std::mem::take(&mut self.vec));
+        }
+    }
+}
+
+impl std::ops::Deref for ArenaBuf {
+    type Target = [f32];
+    fn deref(&self) -> &[f32] {
+        &self.vec
+    }
+}
+
+impl std::ops::DerefMut for ArenaBuf {
+    fn deref_mut(&mut self) -> &mut [f32] {
+        &mut self.vec
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn checkout_reuses_returned_buffer() {
+        // run in a dedicated thread so other tests' shelves don't interfere
+        std::thread::spawn(|| {
+            ArenaPool::drain_thread();
+            let before = ArenaPool::thread_stats();
+            let b = ArenaPool::checkout(1000);
+            assert_eq!(b.len(), 1000);
+            drop(b);
+            let b2 = ArenaPool::checkout(900); // same 1024-class
+            let mid = ArenaPool::thread_stats();
+            assert_eq!(mid.fresh_allocs - before.fresh_allocs, 1);
+            assert_eq!(mid.reuses - before.reuses, 1);
+            assert_eq!(b2.len(), 900);
+        })
+        .join()
+        .unwrap();
+    }
+
+    #[test]
+    fn zeroed_checkout_really_zeroes() {
+        std::thread::spawn(|| {
+            let mut b = ArenaPool::checkout(128);
+            b.as_mut_slice().fill(7.0);
+            drop(b);
+            let z = ArenaPool::checkout_zeroed(128);
+            assert!(z.iter().all(|&v| v == 0.0));
+        })
+        .join()
+        .unwrap();
+    }
+
+    #[test]
+    fn owned_buffers_bypass_the_pool() {
+        std::thread::spawn(|| {
+            ArenaPool::drain_thread();
+            let before = ArenaPool::thread_stats();
+            let b = ArenaBuf::owned(vec![1.0; 4096]);
+            drop(b);
+            let after = ArenaPool::thread_stats();
+            assert_eq!(before, after, "owned buffer touched the pool");
+        })
+        .join()
+        .unwrap();
+    }
+
+    #[test]
+    fn cross_thread_return_lands_on_dropping_thread() {
+        let (tx, rx) = std::sync::mpsc::channel::<ArenaBuf>();
+        let sender = std::thread::spawn(move || {
+            tx.send(ArenaPool::checkout(512)).unwrap();
+        });
+        let receiver = std::thread::spawn(move || {
+            ArenaPool::drain_thread();
+            let base = ArenaPool::thread_stats();
+            let b = rx.recv().unwrap();
+            drop(b); // returns to THIS thread's shelf
+            let got = ArenaPool::thread_stats();
+            assert_eq!(got.returns - base.returns, 1);
+            // and is now reusable here without a fresh allocation
+            let _b2 = ArenaPool::checkout(512);
+            let got2 = ArenaPool::thread_stats();
+            assert_eq!(got2.fresh_allocs, got.fresh_allocs);
+            assert_eq!(got2.reuses - got.reuses, 1);
+        });
+        sender.join().unwrap();
+        receiver.join().unwrap();
+    }
+
+    #[test]
+    fn extend_fill_stays_within_capacity() {
+        let mut b = ArenaPool::checkout_empty(300);
+        assert_eq!(b.len(), 0);
+        let cap = b.vec_mut().capacity();
+        assert!(cap >= 300);
+        for _ in 0..3 {
+            b.vec_mut().extend_from_slice(&[1.0; 100]);
+        }
+        assert_eq!(b.len(), 300);
+        assert_eq!(b.vec_mut().capacity(), cap, "extend reallocated");
+    }
+
+    #[test]
+    fn take_detaches_from_pool() {
+        std::thread::spawn(|| {
+            ArenaPool::drain_thread();
+            let b = ArenaPool::checkout(256);
+            let base = ArenaPool::thread_stats();
+            let v = b.take();
+            assert_eq!(v.len(), 256);
+            drop(v);
+            let after = ArenaPool::thread_stats();
+            assert_eq!(after.returns, base.returns, "taken Vec was shelved");
+        })
+        .join()
+        .unwrap();
+    }
+
+    #[test]
+    fn size_classes_round_up() {
+        assert_eq!(class_of_len(1), class_of_len(64));
+        assert_eq!(class_of_len(65), class_of_len(128));
+        assert!(class_of_cap(1 << class_of_len(100)) >= class_of_len(100));
+    }
+}

@@ -9,10 +9,21 @@
 //!   prefetched by a background copier thread over a modelled link, with
 //!   eviction after use. Blocking on an unfinished copy is recorded as
 //!   stall time — the number PMEP is designed to drive to zero.
+//!
+//! A third concern lives here too: the **activation arena** ([`arena`]),
+//! the size-bucketed `Vec<f32>` recycler behind the zero-copy host hot
+//! path (§Perf). Ownership rules in one line: *whoever checks a buffer out
+//! returns it by dropping it* — drops shelve the buffer on the dropping
+//! thread, so buffers that cross channels (collective chunks, activation
+//! handoffs) migrate to the consumer's shelf, which is exactly where the
+//! next symmetric send will check them out again. See the module docs of
+//! [`arena`] for the full model.
 
+pub mod arena;
 pub mod ledger;
 pub mod pool;
 
+pub use arena::{ArenaBuf, ArenaPool, ArenaStats};
 pub use ledger::MemoryLedger;
 pub use pool::{PoolConfig, PooledProvider};
 

@@ -1,6 +1,9 @@
 //! Serving metrics: latency distribution + throughput, the two axes every
-//! figure in the paper's evaluation reports.
+//! figure in the paper's evaluation reports — plus the activation-arena
+//! allocation counters the §Perf pass watches (fresh allocations vs bytes
+//! recycled on the host hot path).
 
+use crate::memory::arena::ArenaStats;
 use std::time::{Duration, Instant};
 
 /// Accumulates batch completions.
@@ -12,6 +15,7 @@ pub struct Recorder {
     latencies_us: Vec<u64>,
     requests_done: u64,
     batches_done: u64,
+    arena: ArenaStats,
 }
 
 impl Default for Recorder {
@@ -29,7 +33,21 @@ impl Recorder {
             latencies_us: Vec::new(),
             requests_done: 0,
             batches_done: 0,
+            arena: ArenaStats::default(),
         }
+    }
+
+    /// Fold an arena snapshot into the recorder (the engine does this with
+    /// [`crate::memory::arena::ArenaPool::global_stats`] on every
+    /// `metrics_snapshot`; tests use per-thread snapshots to assert
+    /// allocation-freedom deterministically).
+    pub fn record_arena(&mut self, stats: ArenaStats) {
+        self.arena = stats;
+    }
+
+    /// The last recorded arena allocation counters.
+    pub fn arena_stats(&self) -> ArenaStats {
+        self.arena
     }
 
     /// Record a completed batch of unknown size (counts as 1 request).
@@ -99,7 +117,7 @@ impl Recorder {
     }
 
     pub fn summary(&self) -> String {
-        format!(
+        let mut s = format!(
             "{} batches / {} requests; mean {} p50 {} p99 {}; {:.1} req/s",
             self.batches_done,
             self.requests_done,
@@ -107,7 +125,16 @@ impl Recorder {
             fmt_opt(self.p50()),
             fmt_opt(self.p99()),
             self.throughput_rps(),
-        )
+        );
+        if self.arena != ArenaStats::default() {
+            s.push_str(&format!(
+                "; arena {} fresh / {} reused ({} recycled)",
+                self.arena.fresh_allocs,
+                self.arena.reuses,
+                crate::util::fmt_bytes(self.arena.bytes_recycled),
+            ));
+        }
+        s
     }
 }
 
@@ -146,5 +173,22 @@ mod tests {
         r.record_batch(Duration::from_millis(5), 8);
         assert_eq!(r.requests(), 16);
         assert_eq!(r.batches(), 2);
+    }
+
+    #[test]
+    fn arena_counters_surface_in_summary() {
+        let mut r = Recorder::new();
+        assert!(!r.summary().contains("arena"));
+        r.record_arena(ArenaStats {
+            fresh_allocs: 2,
+            reuses: 98,
+            returns: 100,
+            shed: 0,
+            bytes_allocated: 8192,
+            bytes_recycled: 401_408,
+        });
+        assert_eq!(r.arena_stats().reuses, 98);
+        let s = r.summary();
+        assert!(s.contains("arena 2 fresh / 98 reused"), "{s}");
     }
 }

@@ -61,28 +61,81 @@ pub fn pick_bucket(total: usize, buckets: &[usize]) -> Option<usize> {
     buckets.iter().copied().filter(|&b| b >= total).min()
 }
 
-/// Host pack: padded (batch*seq, h) → packed (t_bucket, h).
+/// Host pack: padded (batch*seq, h) → packed (t_bucket, h). The result is
+/// arena scratch (recycled on drop) — every output row is written (slack
+/// rows replicate row 0), so no zero-fill pass is needed.
 pub fn pack(x: &Tensor, maps: &DrceMaps) -> Tensor {
     let h = x.cols();
-    assert_eq!(x.rows(), maps.batch * maps.seq, "padded rows mismatch");
-    let mut out = Tensor::zeros(&[maps.t_bucket, h]);
-    for (j, &src) in maps.unpad_map.data.iter().enumerate() {
-        out.row_mut(j).copy_from_slice(x.row(src as usize));
-    }
+    let mut out = Tensor::pooled_uninit(&[maps.t_bucket, h]);
+    pack_into(x, maps, &mut out);
     out
 }
 
-/// Host unpack: packed (t_bucket, h) → padded (batch*seq, h), zeros in pads.
+/// Pack into caller-provided scratch of shape (t_bucket, h). Overwrites
+/// every row — safe to reuse the same scratch across batches.
+pub fn pack_into(x: &Tensor, maps: &DrceMaps, out: &mut Tensor) {
+    let h = x.cols();
+    assert_eq!(x.rows(), maps.batch * maps.seq, "padded rows mismatch");
+    assert_eq!(out.shape, vec![maps.t_bucket, h], "pack scratch shape mismatch");
+    for (j, &src) in maps.unpad_map.data.iter().enumerate() {
+        out.row_mut(j).copy_from_slice(x.row(src as usize));
+    }
+}
+
+/// Host unpack: packed (t_bucket, h) → padded (batch*seq, h), zeros in
+/// pads. The result is arena scratch (recycled on drop).
 pub fn unpack(packed: &Tensor, maps: &DrceMaps) -> Tensor {
     let h = packed.cols();
+    let mut out = Tensor::pooled_uninit(&[maps.batch * maps.seq, h]);
+    unpack_into(packed, maps, &mut out);
+    out
+}
+
+/// Unpack into caller-provided scratch of shape (batch*seq, h). Every row
+/// is either copied from `packed` or zero-filled in the same single pass —
+/// no upfront zero-fill of the whole tensor, and safe to reuse scratch.
+pub fn unpack_into(packed: &Tensor, maps: &DrceMaps, out: &mut Tensor) {
+    let h = packed.cols();
     assert_eq!(packed.rows(), maps.t_bucket, "packed rows mismatch");
-    let mut out = Tensor::zeros(&[maps.batch * maps.seq, h]);
+    assert_eq!(out.shape, vec![maps.batch * maps.seq, h], "unpack scratch shape mismatch");
+    let cut = maps.t_bucket.min(maps.n_valid);
     for (i, &src) in maps.pad_map.data.iter().enumerate() {
-        if (src as usize) < maps.t_bucket.min(maps.n_valid) {
-            out.row_mut(i).copy_from_slice(packed.row(src as usize));
+        let row = out.row_mut(i);
+        if (src as usize) < cut {
+            row.copy_from_slice(packed.row(src as usize));
+        } else {
+            row.fill(0.0);
         }
     }
-    out
+}
+
+/// Allocating reference implementations of [`pack`]/[`unpack`] — the
+/// pre-arena code path, kept verbatim for differential tests and the
+/// before/after hot-path bench (`benches/hotpath.rs`).
+pub mod reference {
+    use super::{DrceMaps, Tensor};
+
+    pub fn pack(x: &Tensor, maps: &DrceMaps) -> Tensor {
+        let h = x.cols();
+        assert_eq!(x.rows(), maps.batch * maps.seq, "padded rows mismatch");
+        let mut out = Tensor::zeros(&[maps.t_bucket, h]);
+        for (j, &src) in maps.unpad_map.data.iter().enumerate() {
+            out.row_mut(j).copy_from_slice(x.row(src as usize));
+        }
+        out
+    }
+
+    pub fn unpack(packed: &Tensor, maps: &DrceMaps) -> Tensor {
+        let h = packed.cols();
+        assert_eq!(packed.rows(), maps.t_bucket, "packed rows mismatch");
+        let mut out = Tensor::zeros(&[maps.batch * maps.seq, h]);
+        for (i, &src) in maps.pad_map.data.iter().enumerate() {
+            if (src as usize) < maps.t_bucket.min(maps.n_valid) {
+                out.row_mut(i).copy_from_slice(packed.row(src as usize));
+            }
+        }
+        out
+    }
 }
 
 /// FLOP-savings ratio DRCE buys on the linear layers: valid / padded rows.
@@ -149,6 +202,10 @@ mod tests {
             assert_eq!(packed.row(j), &[1., 2.]);
         }
     }
+
+    // Differential coverage of pack/pack_into/unpack/unpack_into against
+    // the reference implementations (incl. scratch reuse) lives in
+    // rust/tests/zero_copy.rs.
 
     #[test]
     fn bucket_picking() {

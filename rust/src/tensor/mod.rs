@@ -3,31 +3,218 @@
 //! the pipeline. Deliberately minimal — heavy math happens inside the AOT
 //! executables (L2/L1); the host only does residual adds, all-reduce sums
 //! and DRCE pack/unpack.
+//!
+//! # Storage model (§Perf: the zero-copy hot path)
+//!
+//! A [`Tensor`] is a shape plus a [`Storage`]:
+//!
+//! * `Storage::Exclusive` — a uniquely-owned buffer, either a plain `Vec`
+//!   (weights, test fixtures) or an arena-checked-out [`ArenaBuf`] that
+//!   recycles itself on drop. All hot-path producers (`add`, `sum_of`,
+//!   `scale`, `slice_cols`, DRCE pack/unpack) write into arena scratch, so
+//!   at steady state they perform no heap allocation.
+//! * `Storage::Shared` — an `Arc`-shared view (offset + length) of a
+//!   buffer. [`Tensor::make_shared`] converts in place; afterwards `clone`
+//!   and `slice_rows` are O(1) pointer bumps instead of copies. Mutating a
+//!   shared tensor copies-on-write into arena scratch.
+//!
+//! `Storage` dereferences to `[f32]`, so `t.data[i]`, `t.data.iter()` and
+//! friends read exactly as before.
 
 pub mod drce;
 
+use crate::memory::arena::{ArenaBuf, ArenaPool};
 use crate::util::rng::Rng;
 use std::fmt;
+use std::sync::Arc;
+
+/// Backing buffer of a [`Tensor`]: uniquely owned, or an `Arc`-shared view.
+pub enum Storage {
+    /// Uniquely-owned buffer (plain `Vec` or pooled arena scratch).
+    Exclusive(ArenaBuf),
+    /// Zero-copy view of `buf[off .. off + len]`. When the last view drops,
+    /// a pooled underlying buffer returns to the arena.
+    Shared { buf: Arc<ArenaBuf>, off: usize, len: usize },
+}
+
+impl Storage {
+    pub fn as_slice(&self) -> &[f32] {
+        match self {
+            Storage::Exclusive(b) => b.as_slice(),
+            Storage::Shared { buf, off, len } => &buf.as_slice()[*off..*off + *len],
+        }
+    }
+
+    /// Is this an `Arc`-shared view (clones are O(1))?
+    pub fn is_shared(&self) -> bool {
+        matches!(self, Storage::Shared { .. })
+    }
+
+    /// Ensure exclusive ownership: unwrap a uniquely-held full-range `Arc`
+    /// for free, otherwise copy-on-write into arena scratch.
+    pub fn make_exclusive(&mut self) {
+        let (off, len) = match self {
+            Storage::Exclusive(_) => return,
+            Storage::Shared { off, len, .. } => (*off, *len),
+        };
+        let prev = std::mem::replace(self, Storage::Exclusive(ArenaBuf::empty()));
+        let arc = match prev {
+            Storage::Shared { buf, .. } => buf,
+            Storage::Exclusive(_) => unreachable!(),
+        };
+        *self = if off == 0 && len == arc.len() {
+            match Arc::try_unwrap(arc) {
+                Ok(b) => Storage::Exclusive(b),
+                Err(arc) => Storage::Exclusive(ArenaBuf::copy_of(arc.as_slice())),
+            }
+        } else {
+            Storage::Exclusive(ArenaBuf::copy_of(&arc.as_slice()[off..off + len]))
+        };
+    }
+
+    /// Convert to a full-range shared buffer (no copy for exclusive
+    /// storage; a view first materializes via [`Storage::make_exclusive`]).
+    pub fn make_shared(&mut self) {
+        match self {
+            Storage::Shared { buf, off, len } if *off == 0 && *len == buf.len() => {}
+            Storage::Shared { .. } => {
+                self.make_exclusive();
+                self.make_shared();
+            }
+            Storage::Exclusive(_) => {
+                let prev = std::mem::replace(self, Storage::Exclusive(ArenaBuf::empty()));
+                let b = match prev {
+                    Storage::Exclusive(b) => b,
+                    Storage::Shared { .. } => unreachable!(),
+                };
+                let len = b.len();
+                *self = Storage::Shared { buf: Arc::new(b), off: 0, len };
+            }
+        }
+    }
+}
+
+impl std::ops::Deref for Storage {
+    type Target = [f32];
+    fn deref(&self) -> &[f32] {
+        self.as_slice()
+    }
+}
+
+impl std::ops::DerefMut for Storage {
+    fn deref_mut(&mut self) -> &mut [f32] {
+        self.make_exclusive();
+        match self {
+            Storage::Exclusive(b) => b.as_mut_slice(),
+            Storage::Shared { .. } => unreachable!("make_exclusive left a shared storage"),
+        }
+    }
+}
+
+impl Clone for Storage {
+    fn clone(&self) -> Storage {
+        match self {
+            // shared views clone by reference — the zero-copy fast path
+            Storage::Shared { buf, off, len } => {
+                Storage::Shared { buf: buf.clone(), off: *off, len: *len }
+            }
+            Storage::Exclusive(b) if b.is_pooled() => {
+                Storage::Exclusive(ArenaBuf::copy_of(b.as_slice()))
+            }
+            Storage::Exclusive(b) => Storage::Exclusive(ArenaBuf::owned(b.as_slice().to_vec())),
+        }
+    }
+}
+
+impl fmt::Debug for Storage {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Debug::fmt(self.as_slice(), f)
+    }
+}
+
+impl PartialEq for Storage {
+    fn eq(&self, other: &Storage) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl PartialEq<Vec<f32>> for Storage {
+    fn eq(&self, other: &Vec<f32>) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl PartialEq<[f32]> for Storage {
+    fn eq(&self, other: &[f32]) -> bool {
+        self.as_slice() == other
+    }
+}
+
+impl From<Vec<f32>> for Storage {
+    fn from(v: Vec<f32>) -> Storage {
+        Storage::Exclusive(ArenaBuf::owned(v))
+    }
+}
+
+impl From<ArenaBuf> for Storage {
+    fn from(b: ArenaBuf) -> Storage {
+        Storage::Exclusive(b)
+    }
+}
+
+impl<'a> IntoIterator for &'a Storage {
+    type Item = &'a f32;
+    type IntoIter = std::slice::Iter<'a, f32>;
+    fn into_iter(self) -> Self::IntoIter {
+        self.as_slice().iter()
+    }
+}
+
+impl<'a> IntoIterator for &'a mut Storage {
+    type Item = &'a mut f32;
+    type IntoIter = std::slice::IterMut<'a, f32>;
+    fn into_iter(self) -> Self::IntoIter {
+        self.iter_mut()
+    }
+}
 
 /// Dense row-major f32 tensor.
 #[derive(Clone, PartialEq)]
 pub struct Tensor {
     pub shape: Vec<usize>,
-    pub data: Vec<f32>,
+    pub data: Storage,
 }
 
 impl Tensor {
     pub fn new(shape: &[usize], data: Vec<f32>) -> Tensor {
         assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Tensor { shape: shape.to_vec(), data: Storage::from(data) }
+    }
+
+    pub fn from_storage(shape: &[usize], data: Storage) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
         Tensor { shape: shape.to_vec(), data }
     }
 
     pub fn zeros(shape: &[usize]) -> Tensor {
-        Tensor { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+        Tensor::new(shape, vec![0.0; shape.iter().product()])
     }
 
     pub fn full(shape: &[usize], v: f32) -> Tensor {
-        Tensor { shape: shape.to_vec(), data: vec![v; shape.iter().product()] }
+        Tensor::new(shape, vec![v; shape.iter().product()])
+    }
+
+    /// Arena-backed scratch tensor with **unspecified contents** — the
+    /// caller must overwrite every element it exposes (DRCE pack, etc.).
+    pub fn pooled_uninit(shape: &[usize]) -> Tensor {
+        let n = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: Storage::Exclusive(ArenaPool::checkout(n)) }
+    }
+
+    /// Arena-backed zeroed tensor.
+    pub fn pooled_zeros(shape: &[usize]) -> Tensor {
+        let n = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: Storage::Exclusive(ArenaPool::checkout_zeroed(n)) }
     }
 
     /// N(0, std²) init — synthetic weights (seeded, reproducible).
@@ -37,7 +224,7 @@ impl Tensor {
         for _ in 0..n {
             data.push(rng.normal_f32(std));
         }
-        Tensor { shape: shape.to_vec(), data }
+        Tensor::new(shape, data)
     }
 
     pub fn len(&self) -> usize {
@@ -57,11 +244,34 @@ impl Tensor {
         (self.len() * 4) as u64
     }
 
-    /// Reinterpret the shape (same element count).
+    /// Reinterpret the shape (same element count). Zero-copy — the storage
+    /// moves unchanged.
     pub fn reshape(mut self, shape: &[usize]) -> Tensor {
         assert_eq!(shape.iter().product::<usize>(), self.data.len());
         self.shape = shape.to_vec();
         self
+    }
+
+    /// Convert the storage to an `Arc`-shared buffer in place: afterwards
+    /// `clone()` and `slice_rows` are O(1). Call once where an activation
+    /// fans out (executable arg + residual, pipeline handoff).
+    pub fn make_shared(&mut self) {
+        self.data.make_shared();
+    }
+
+    /// By-value variant of [`Tensor::make_shared`].
+    pub fn into_shared(mut self) -> Tensor {
+        self.data.make_shared();
+        self
+    }
+
+    /// The full-range shared buffer behind this tensor, if it is one
+    /// (what `comm::collective::broadcast` puts on the wire).
+    pub fn shared_full_arc(&self) -> Option<Arc<ArenaBuf>> {
+        match &self.data {
+            Storage::Shared { buf, off: 0, len } if *len == buf.len() => Some(buf.clone()),
+            _ => None,
+        }
     }
 
     /// Last-axis length; tensors are treated as (rows, cols) row-major.
@@ -86,57 +296,99 @@ impl Tensor {
     /// Elementwise `self += other` (residual adds, all-reduce accumulation).
     pub fn add_assign(&mut self, other: &Tensor) {
         assert_eq!(self.shape, other.shape, "add_assign shape mismatch");
-        for (a, b) in self.data.iter_mut().zip(&other.data) {
+        for (a, b) in self.data.iter_mut().zip(other.data.iter()) {
             *a += b;
         }
     }
 
-    /// `self + other` (allocating).
+    /// `self + other`, written into arena scratch (no fresh allocation at
+    /// steady state).
     pub fn add(&self, other: &Tensor) -> Tensor {
-        let mut out = self.clone();
-        out.add_assign(other);
-        out
+        assert_eq!(self.shape, other.shape, "add shape mismatch");
+        let mut buf = ArenaBuf::copy_of(&self.data);
+        for (a, b) in buf.as_mut_slice().iter_mut().zip(other.data.iter()) {
+            *a += b;
+        }
+        Tensor::from_storage(&self.shape, Storage::Exclusive(buf))
     }
 
-    /// Sum a set of same-shape tensors (host all-reduce epilogue).
+    /// Sum a set of same-shape tensors into arena scratch (host all-reduce
+    /// epilogue).
     pub fn sum_of(parts: &[Tensor]) -> Tensor {
         assert!(!parts.is_empty());
-        let mut out = parts[0].clone();
+        let mut buf = ArenaBuf::copy_of(&parts[0].data);
         for p in &parts[1..] {
-            out.add_assign(p);
+            assert_eq!(parts[0].shape, p.shape, "sum_of shape mismatch");
+            for (a, b) in buf.as_mut_slice().iter_mut().zip(p.data.iter()) {
+                *a += b;
+            }
         }
-        out
+        Tensor::from_storage(&parts[0].shape, Storage::Exclusive(buf))
     }
 
-    /// Column slice [c0, c1) of a 2-D tensor — weight sharding.
+    /// Column slice [c0, c1) of a 2-D tensor — weight sharding. Single pass
+    /// of `extend_from_slice` over precomputed row ranges into arena
+    /// scratch; the contiguous full-width case is one memcpy (or a shared
+    /// O(1) view when the storage already is one).
+    #[inline]
     pub fn slice_cols(&self, c0: usize, c1: usize) -> Tensor {
         assert_eq!(self.rank(), 2);
         let (rows, cols) = (self.shape[0], self.shape[1]);
         assert!(c0 <= c1 && c1 <= cols);
         let w = c1 - c0;
-        let mut data = Vec::with_capacity(rows * w);
-        for r in 0..rows {
-            data.extend_from_slice(&self.data[r * cols + c0..r * cols + c1]);
+        if w == cols {
+            // contiguous full-width fast path: the slice IS the buffer
+            if self.data.is_shared() {
+                return Tensor { shape: vec![rows, w], data: self.data.clone() };
+            }
+            return Tensor::from_storage(
+                &[rows, w],
+                Storage::Exclusive(ArenaBuf::copy_of(&self.data)),
+            );
         }
-        Tensor { shape: vec![rows, w], data }
+        let src: &[f32] = &self.data;
+        let mut buf = ArenaPool::checkout_empty(rows * w);
+        {
+            let v = buf.vec_mut();
+            let mut start = c0;
+            for _ in 0..rows {
+                v.extend_from_slice(&src[start..start + w]);
+                start += cols;
+            }
+        }
+        Tensor::from_storage(&[rows, w], Storage::Exclusive(buf))
     }
 
-    /// Row slice [r0, r1) of a 2-D tensor.
+    /// Row slice [r0, r1) of a 2-D tensor. On shared storage this is a
+    /// zero-copy view; otherwise it copies into arena scratch.
     pub fn slice_rows(&self, r0: usize, r1: usize) -> Tensor {
         let cols = self.cols();
         assert!(r0 <= r1 && r1 <= self.rows());
-        Tensor {
-            shape: vec![r1 - r0, cols],
-            data: self.data[r0 * cols..r1 * cols].to_vec(),
+        let shape = vec![r1 - r0, cols];
+        match &self.data {
+            Storage::Shared { buf, off, .. } => Tensor {
+                shape,
+                data: Storage::Shared {
+                    buf: buf.clone(),
+                    off: off + r0 * cols,
+                    len: (r1 - r0) * cols,
+                },
+            },
+            _ => Tensor {
+                shape,
+                data: Storage::Exclusive(ArenaBuf::copy_of(&self.data[r0 * cols..r1 * cols])),
+            },
         }
     }
 
-    /// Scale every element (bias pre-division for row-sharded linears).
+    /// Scale every element (bias pre-division for row-sharded linears),
+    /// into arena scratch.
     pub fn scale(&self, s: f32) -> Tensor {
-        Tensor {
-            shape: self.shape.clone(),
-            data: self.data.iter().map(|v| v * s).collect(),
+        let mut buf = ArenaPool::checkout(self.len());
+        for (d, v) in buf.as_mut_slice().iter_mut().zip(self.data.iter()) {
+            *d = v * s;
         }
+        Tensor::from_storage(&self.shape, Storage::Exclusive(buf))
     }
 
     /// Max |a - b| — test helper.
@@ -144,7 +396,7 @@ impl Tensor {
         assert_eq!(self.shape, other.shape);
         self.data
             .iter()
-            .zip(&other.data)
+            .zip(other.data.iter())
             .map(|(a, b)| (a - b).abs())
             .fold(0.0, f32::max)
     }
@@ -262,6 +514,42 @@ mod tests {
         assert_eq!(t.slice_cols(1, 3).data, vec![1., 2., 5., 6.]);
         assert_eq!(t.slice_rows(1, 2).data, vec![4., 5., 6., 7.]);
         assert_eq!(t.slice_cols(1, 3).shape, vec![2, 2]);
+    }
+
+    #[test]
+    fn slice_cols_full_width_fast_path() {
+        let t = Tensor::new(&[2, 4], (0..8).map(|v| v as f32).collect());
+        let full = t.slice_cols(0, 4);
+        assert_eq!(full, t);
+        // on shared storage, the fast path is a zero-copy view
+        let shared = t.into_shared();
+        let view = shared.slice_cols(0, 4);
+        assert!(view.data.is_shared());
+        assert_eq!(view.data.as_ptr(), shared.data.as_ptr());
+    }
+
+    #[test]
+    fn shared_views_are_zero_copy() {
+        let t = Tensor::new(&[4, 3], (0..12).map(|v| v as f32).collect());
+        let base = t.into_shared();
+        let v = base.slice_rows(1, 3);
+        assert_eq!(v.shape, vec![2, 3]);
+        assert_eq!(v.data, vec![3., 4., 5., 6., 7., 8.]);
+        // the view aliases the parent buffer: same address, offset by a row
+        assert_eq!(v.data.as_ptr(), unsafe { base.data.as_ptr().add(3) });
+        // clones of shared tensors are O(1) and alias too
+        let c = base.clone();
+        assert_eq!(c.data.as_ptr(), base.data.as_ptr());
+    }
+
+    #[test]
+    fn copy_on_write_detaches_shared_views() {
+        let t = Tensor::new(&[2, 2], vec![1., 2., 3., 4.]);
+        let base = t.into_shared();
+        let mut c = base.clone();
+        c.row_mut(0)[0] = 9.0; // triggers CoW — base must be untouched
+        assert_eq!(c.data, vec![9., 2., 3., 4.]);
+        assert_eq!(base.data, vec![1., 2., 3., 4.]);
     }
 
     #[test]

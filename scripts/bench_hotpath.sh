@@ -1,0 +1,23 @@
+#!/usr/bin/env bash
+# Run the hot-path microbenchmarks with fixed iteration counts and refresh
+# BENCH_hotpath.json at the repo root (the perf-trajectory file later PRs
+# compare against — see EXPERIMENTS.md §Perf).
+#
+# Usage: scripts/bench_hotpath.sh [extra cargo args...]
+#
+# The bench itself uses fixed warmup/iteration counts (no adaptive
+# sampling), so runs are comparable across commits on the same machine.
+set -euo pipefail
+
+cd "$(dirname "$0")/../rust"
+
+# benches tolerate a missing artifacts/ dir (engine + PJRT sections are
+# skipped), but warn loudly since the engine round-trip number is the
+# headline metric
+if ! ls ../artifacts/manifest.json >/dev/null 2>&1 && ! ls artifacts/manifest.json >/dev/null 2>&1; then
+    echo "warning: no AOT artifacts found — engine/PJRT benches will be skipped (run 'make artifacts')" >&2
+fi
+
+cargo bench --bench hotpath "$@"
+
+echo "refreshed $(cd .. && pwd)/BENCH_hotpath.json"
