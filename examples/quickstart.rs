@@ -9,7 +9,7 @@
 //! Run with: `cargo run --release --example quickstart`
 //! (requires `make artifacts` first)
 
-use energonai::coordinator::engine::{Engine, LaunchConfig};
+use energonai::coordinator::engine::{Engine, GenRequest, LaunchConfig};
 use energonai::coordinator::Request;
 
 fn main() -> anyhow::Result<()> {
@@ -37,6 +37,15 @@ fn main() -> anyhow::Result<()> {
     for (i, f) in futures.iter().enumerate() {
         println!("batched request {i} -> token {}", f.to_here()?);
     }
+
+    // 4. streaming generation: a session re-enters the batcher after every
+    //    step, so concurrent generations coalesce into shared buckets
+    let gref = engine.generate_stream(GenRequest::new(vec![12, 7, 42], 6))?;
+    print!("generated:");
+    while let Some(tok) = gref.next()? {
+        print!(" {tok}");
+    }
+    println!("\nfull sequence: {:?}", gref.to_here()?);
 
     println!("{}", engine.metrics_snapshot().summary());
     engine.shutdown();

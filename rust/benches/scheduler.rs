@@ -1,0 +1,110 @@
+//! Iteration-level scheduler benchmark: single-client vs N-client
+//! coalesced decode through the continuation batcher (the ISSUE 2
+//! acceptance experiment). Reports wall time, mean batch occupancy,
+//! TTFT and per-token latency percentiles, and tokens/sec; medians land
+//! machine-readably in `BENCH_scheduler.json` at the repo root
+//! (regenerate with `scripts/bench_scheduler.sh`).
+
+use energonai::coordinator::engine::{Engine, GenRequest, LaunchConfig};
+use energonai::workload::GenScenario;
+use std::time::Instant;
+
+/// (metric name, value) pairs destined for BENCH_scheduler.json.
+type Results = Vec<(String, f64)>;
+
+fn fmt_us(v: Option<std::time::Duration>) -> String {
+    v.map(|d| format!("{:.1}µs", d.as_secs_f64() * 1e6)).unwrap_or_else(|| "-".into())
+}
+
+/// Run one scenario on a fresh engine (fresh metrics) and report.
+fn run_scenario(label: &str, clients: usize, new_tokens: usize, results: &mut Results) {
+    let engine = Engine::launch(LaunchConfig::preset("tiny").with_warmup(true)).unwrap();
+    let sc = GenScenario::concurrent(clients, new_tokens, 8, engine.cfg.vocab);
+    let t0 = Instant::now();
+    let grefs: Vec<_> = sc
+        .prompts()
+        .into_iter()
+        .map(|p| engine.generate_stream(GenRequest::new(p, sc.new_tokens)).unwrap())
+        .collect();
+    let mut generated = 0usize;
+    for g in &grefs {
+        generated += g.to_here().unwrap().len() - g.prompt().len();
+    }
+    let wall = t0.elapsed();
+    let m = engine.metrics_snapshot();
+
+    println!("{label}: {clients} clients × {new_tokens} tokens");
+    println!(
+        "  wall {:.1}ms, {generated} tokens, {:.1} tok/s",
+        wall.as_secs_f64() * 1e3,
+        m.tokens_per_sec()
+    );
+    println!(
+        "  occupancy {:.2} ({} rows / {} batches)",
+        m.mean_occupancy(),
+        m.requests(),
+        m.batches()
+    );
+    println!(
+        "  ttft p50 {} p95 {} p99 {}",
+        fmt_us(m.ttft_percentile(0.50)),
+        fmt_us(m.ttft_percentile(0.95)),
+        fmt_us(m.ttft_percentile(0.99)),
+    );
+    println!(
+        "  tok  p50 {} p95 {} p99 {}",
+        fmt_us(m.token_percentile(0.50)),
+        fmt_us(m.token_percentile(0.95)),
+        fmt_us(m.token_percentile(0.99)),
+    );
+    if clients > 1 && m.mean_occupancy() <= 1.0 {
+        println!("  WARN: decode steps did not coalesce (occupancy ≤ 1)");
+    }
+
+    let key = |k: &str| format!("{label}_{k}");
+    results.push((key("wall_us"), wall.as_secs_f64() * 1e6));
+    results.push((key("tokens"), generated as f64));
+    results.push((key("tokens_per_sec"), m.tokens_per_sec()));
+    results.push((key("occupancy"), m.mean_occupancy()));
+    for (name, v) in [
+        ("ttft_p50_us", m.ttft_percentile(0.50)),
+        ("ttft_p99_us", m.ttft_percentile(0.99)),
+        ("tok_p50_us", m.token_percentile(0.50)),
+        ("tok_p99_us", m.token_percentile(0.99)),
+    ] {
+        if let Some(d) = v {
+            results.push((key(name), d.as_secs_f64() * 1e6));
+        }
+    }
+    engine.shutdown();
+    println!();
+}
+
+fn write_json(results: &Results) {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_scheduler.json");
+    let mut body = String::from("{\n  \"schema\": \"bench_scheduler/v1\",\n");
+    body.push_str("  \"generated_by\": \"scripts/bench_scheduler.sh\",\n");
+    body.push_str("  \"results\": {\n");
+    for (i, (k, v)) in results.iter().enumerate() {
+        let comma = if i + 1 == results.len() { "" } else { "," };
+        body.push_str(&format!("    \"{k}\": {v:.2}{comma}\n"));
+    }
+    body.push_str("  }\n}\n");
+    match std::fs::write(path, body) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}
+
+fn main() {
+    if energonai::runtime::find_artifacts().is_err() {
+        eprintln!("no AOT artifacts found — run `make artifacts` first; skipping");
+        return;
+    }
+    println!("== iteration-level scheduler: coalesced decode ==\n");
+    let mut results = Results::new();
+    run_scenario("single", 1, 16, &mut results);
+    run_scenario("multi4", 4, 16, &mut results);
+    run_scenario("multi8", 8, 16, &mut results);
+    write_json(&results);
+}

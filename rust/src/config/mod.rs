@@ -163,6 +163,10 @@ pub struct EngineConfig {
     pub max_batch: usize,
     /// How long the batcher waits to fill a batch before dispatching.
     pub batch_timeout_us: u64,
+    /// Collector watchdog deadline: an in-flight batch older than this is
+    /// declared poisoned (a non-replier worker dropped the activation) and
+    /// its pending `RRef`/sessions are failed instead of hanging forever.
+    pub batch_deadline_ms: u64,
     /// Use the distributed consistency queue (§4.2). Disabling it is the
     /// ablation showing out-of-order hazards.
     pub consistency_queue: bool,
@@ -178,6 +182,7 @@ impl Default for EngineConfig {
             pool_threads: 4,
             max_batch: 32,
             batch_timeout_us: 2_000,
+            batch_deadline_ms: 30_000,
             consistency_queue: true,
             drce: false,
             blocking_comms: false,

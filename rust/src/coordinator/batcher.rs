@@ -6,6 +6,13 @@
 //! greedily up to `max_batch` or until `batch_timeout` expires, then padded
 //! into the smallest compiled (batch, seq) bucket that fits — AOT shapes
 //! are static, so bucketing is the standard trick (DESIGN.md).
+//!
+//! With iteration-level scheduling the queue has two producers: new
+//! arrivals enter at the back (`push`), while unfinished generation
+//! sessions re-enter at the *front* (`requeue_front`) after every engine
+//! step, carrying their original arrival timestamp. Decode steps therefore
+//! take priority over fresh prefills and coalesce with each other into
+//! shared buckets, Orca-style.
 
 use super::rpc::BatchInput;
 use crate::tensor::IntTensor;
@@ -31,6 +38,21 @@ impl Request {
     pub fn is_empty(&self) -> bool {
         self.tokens.is_empty()
     }
+}
+
+/// Smallest compiled (batch, seq) bucket fitting `n` rows of up to
+/// `max_len` tokens — the one selection rule shared by the dynamic batcher
+/// and the engine's direct `infer_batch` path.
+pub fn smallest_fitting_bucket(
+    points: &[(usize, usize)],
+    n: usize,
+    max_len: usize,
+) -> Option<(usize, usize)> {
+    points
+        .iter()
+        .copied()
+        .filter(|&(b, s)| b >= n && s >= max_len)
+        .min_by_key(|&(b, s)| b * s)
 }
 
 /// A formed batch: requests + the bucket it was padded into.
@@ -59,9 +81,14 @@ impl FormedBatch {
                 *v = 1;
             }
         }
+        // per-row session ids: pad rows carry the sentinel so the
+        // collector never mistakes them for a live session
+        let mut req_ids: Vec<u64> = self.requests.iter().map(|r| r.id).collect();
+        req_ids.resize(b, u64::MAX);
         BatchInput {
             ids: IntTensor::new(&[b, s], ids),
             valid_lens: valid,
+            req_ids,
             batch: b,
             seq: s,
         }
@@ -89,6 +116,12 @@ impl Batcher {
     }
 
     pub fn push(&mut self, r: Request) -> anyhow::Result<()> {
+        self.push_at(r, Instant::now())
+    }
+
+    /// Enqueue with an explicit arrival time (continuations keep the time
+    /// the client originally submitted, so timeouts measure client wait).
+    pub fn push_at(&mut self, r: Request, arrived: Instant) -> anyhow::Result<()> {
         anyhow::ensure!(
             r.len() <= self.max_seq(),
             "request {} length {} exceeds longest compiled bucket {}",
@@ -97,8 +130,17 @@ impl Batcher {
             self.max_seq()
         );
         anyhow::ensure!(!r.is_empty(), "empty request {}", r.id);
-        self.queue.push_back((r, Instant::now()));
+        self.queue.push_back((r, arrived));
         Ok(())
+    }
+
+    /// Re-enqueue an unfinished generation session at the *front* of the
+    /// queue (decode priority): its next step dispatches before any fresh
+    /// prefill, so concurrent decodes coalesce into shared buckets. The
+    /// original arrival time is preserved.
+    pub fn requeue_front(&mut self, r: Request, arrived: Instant) {
+        debug_assert!(r.len() <= self.max_seq() && !r.is_empty());
+        self.queue.push_front((r, arrived));
     }
 
     pub fn pending(&self) -> usize {
@@ -107,11 +149,7 @@ impl Batcher {
 
     /// Smallest bucket fitting (n requests, max_len).
     fn pick_bucket(&self, n: usize, max_len: usize) -> Option<(usize, usize)> {
-        self.buckets
-            .iter()
-            .copied()
-            .filter(|&(b, s)| b >= n && s >= max_len)
-            .min_by_key(|&(b, s)| b * s)
+        smallest_fitting_bucket(&self.buckets, n, max_len)
     }
 
     /// Largest request count any bucket supports.
@@ -132,26 +170,29 @@ impl Batcher {
         }
         // take up to cap requests, but never exceed what some bucket fits
         let take = self.queue.len().min(cap);
-        let mut reqs: Vec<Request> = Vec::with_capacity(take);
+        let mut reqs: Vec<(Request, Instant)> = Vec::with_capacity(take);
         let mut max_len = 0;
         for _ in 0..take {
-            let (r, _) = self.queue.pop_front().unwrap();
-            max_len = max_len.max(r.len());
-            reqs.push(r);
+            let pair = self.queue.pop_front().unwrap();
+            max_len = max_len.max(pair.0.len());
+            reqs.push(pair);
         }
         // If no bucket covers (take, max_len), shed the longest requests
         // back to the queue until one does. max_seq is checked on push, so
         // shrinking the count always converges to a feasible bucket.
         loop {
             if let Some(bucket) = self.pick_bucket(reqs.len(), max_len) {
-                return Some(FormedBatch { requests: reqs, bucket });
+                return Some(FormedBatch {
+                    requests: reqs.into_iter().map(|(r, _)| r).collect(),
+                    bucket,
+                });
             }
-            // requeue the last request (preserving arrival order is
-            // sacrificed for simplicity; the consistency queue downstream
-            // doesn't care about request order, only command order)
-            let r = reqs.pop().expect("bucket must fit a single request");
-            self.queue.push_front((r, now));
-            max_len = reqs.iter().map(Request::len).max().unwrap_or(0);
+            // shed the last request back, keeping its *original* arrival
+            // time — resetting it would silently extend the timeout of a
+            // request that already waited a full batching window
+            let pair = reqs.pop().expect("bucket must fit a single request");
+            self.queue.push_front(pair);
+            max_len = reqs.iter().map(|(r, _)| r.len()).max().unwrap_or(0);
         }
     }
 
@@ -253,12 +294,60 @@ mod tests {
 
     #[test]
     fn to_input_pads_and_clamps() {
-        let fb = FormedBatch { requests: vec![req(0, 3)], bucket: (2, 16) };
+        let fb = FormedBatch { requests: vec![req(7, 3)], bucket: (2, 16) };
         let input = fb.to_input();
         assert_eq!(input.ids.shape, vec![2, 16]);
         assert_eq!(input.valid_lens, vec![3, 1]); // empty row clamped to 1
         assert_eq!(&input.ids.data[0..3], &[1, 1, 1]);
         assert_eq!(input.ids.data[3], 0);
+        // per-row session ids: real rows carry the request id, pad rows
+        // the sentinel
+        assert_eq!(input.req_ids, vec![7, u64::MAX]);
+    }
+
+    #[test]
+    fn shed_preserves_arrival_time() {
+        // long sequences only fit the narrow bucket: 4 requests of len 20
+        // can't use (4,16), so two are shed back to the queue
+        let mut b = Batcher::new(vec![(2, 32), (4, 16)], 4, Duration::from_millis(10));
+        let old = Instant::now() - Duration::from_millis(20); // past timeout
+        for i in 0..4 {
+            b.push_at(req(i, 20), old).unwrap();
+        }
+        let fb = b.form(Instant::now()).unwrap();
+        assert_eq!(fb.bucket, (2, 32));
+        assert_eq!(fb.requests.len(), 2);
+        assert_eq!(b.pending(), 2);
+        // the shed requests kept their original (already expired) arrival,
+        // so a lone form() dispatches them immediately instead of
+        // silently re-waiting a full timeout window
+        let fb2 = b.form(Instant::now()).expect("shed requests must stay timed out");
+        assert_eq!(fb2.requests.len(), 2);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn requeue_front_takes_decode_priority() {
+        let mut b = batcher();
+        b.push(req(10, 8)).unwrap(); // fresh prefill
+        // a continuation re-enters at the front with its old arrival
+        let old = Instant::now() - Duration::from_millis(20);
+        b.requeue_front(req(3, 9), old);
+        // old arrival => timeout already expired => forms immediately, and
+        // the decode row leads the batch
+        let fb = b.form(Instant::now()).expect("expired continuation must dispatch");
+        assert_eq!(fb.requests[0].id, 3);
+        assert_eq!(fb.requests.len(), 2);
+    }
+
+    #[test]
+    fn shared_bucket_helper_matches_batcher() {
+        let points = vec![(1, 16), (2, 16), (4, 32)];
+        assert_eq!(smallest_fitting_bucket(&points, 1, 8), Some((1, 16)));
+        assert_eq!(smallest_fitting_bucket(&points, 2, 8), Some((2, 16)));
+        assert_eq!(smallest_fitting_bucket(&points, 2, 20), Some((4, 32)));
+        assert_eq!(smallest_fitting_bucket(&points, 5, 8), None);
+        assert_eq!(smallest_fitting_bucket(&points, 1, 64), None);
     }
 
     #[test]

@@ -1,17 +1,30 @@
 //! The centralized engine (§4.1.2, §4.2): runtime initialization, the
 //! non-blocking task launch, the batch-list dispatcher pool, and the
-//! result collector. Public usage mirrors the paper's Fig. 9:
+//! result collector — extended with an **iteration-level generation
+//! scheduler**: every submission is a session that re-enters the dynamic
+//! batcher after each engine step until it finishes, so multi-token
+//! generations from many clients coalesce into shared decode buckets
+//! (Orca-style continuation batching).
+//!
+//! Public usage mirrors the paper's Fig. 9, plus streaming generation:
 //!
 //! ```no_run
-//! use energonai::coordinator::engine::{Engine, LaunchConfig};
+//! use energonai::coordinator::engine::{Engine, GenRequest, LaunchConfig};
 //! use energonai::coordinator::batcher::Request;
 //! let engine = Engine::launch(LaunchConfig::preset("tiny")).unwrap();
-//! let rref = engine.infer_batch(vec![Request::new(0, vec![1, 2, 3])]).unwrap(); // non-blocking
+//! // direct pre-formed batch (benches): non-blocking RRef
+//! let rref = engine.infer_batch(vec![Request::new(0, vec![1, 2, 3])]).unwrap();
 //! let output = rref.to_here().unwrap();
+//! // session lifecycle: stream tokens as engine steps complete
+//! let gref = engine.generate_stream(GenRequest::new(vec![1, 2, 3], 8)).unwrap();
+//! while let Some(tok) = gref.next().unwrap() {
+//!     println!("token {tok}");
+//! }
+//! let full = gref.to_here().unwrap(); // prompt + generated
 //! engine.shutdown();
 //! ```
 
-use super::batcher::{Batcher, FormedBatch, Request};
+use super::batcher::{smallest_fitting_bucket, Batcher, FormedBatch, Request};
 use super::consistency::TicketCounter;
 use super::rpc::{CommandBus, RRef};
 use super::worker::{ActMsg, Reply, Worker, WorkerCtx};
@@ -28,7 +41,7 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Where layer weights live on each worker (Fig. 13 scenarios).
 #[derive(Clone, Debug)]
@@ -106,65 +119,191 @@ impl LaunchConfig {
     }
 }
 
-/// Per-request future (single-token greedy result), fulfilled when the
-/// containing batch completes.
-#[derive(Clone)]
-pub struct TokenRef {
-    inner: Arc<(Mutex<Option<anyhow::Result<i32>>>, Condvar)>,
+/// A generation request entering the session lifecycle: the prompt, how
+/// many continuation tokens to sample, and an optional stop token that
+/// ends the session early (the stop token itself is emitted).
+#[derive(Clone, Debug)]
+pub struct GenRequest {
+    pub tokens: Vec<i32>,
+    pub max_new_tokens: usize,
+    pub stop_token: Option<i32>,
 }
 
-impl TokenRef {
-    fn new() -> TokenRef {
-        TokenRef { inner: Arc::new((Mutex::new(None), Condvar::new())) }
+impl GenRequest {
+    pub fn new(tokens: Vec<i32>, max_new_tokens: usize) -> GenRequest {
+        GenRequest { tokens, max_new_tokens, stop_token: None }
     }
 
-    fn fulfil(&self, v: anyhow::Result<i32>) {
+    pub fn with_stop(mut self, stop_token: i32) -> Self {
+        self.stop_token = Some(stop_token);
+        self
+    }
+}
+
+#[derive(Default)]
+struct GenState {
+    /// Generated tokens so far (prompt excluded), in emission order.
+    toks: Vec<i32>,
+    /// `next()` read cursor into `toks`.
+    read: usize,
+    done: bool,
+    /// Failure message, surfaced by `next()`/`to_here()` after any
+    /// already-streamed tokens are drained.
+    err: Option<String>,
+}
+
+/// Streaming future for one generation session. The collector appends
+/// each sampled token as the session's batch completes an engine step;
+/// clients consume incrementally with [`GenRef::next`] or wait for the
+/// whole sequence with [`GenRef::to_here`].
+#[derive(Clone)]
+pub struct GenRef {
+    prompt: Arc<Vec<i32>>,
+    inner: Arc<(Mutex<GenState>, Condvar)>,
+}
+
+impl GenRef {
+    fn new(prompt: Vec<i32>) -> GenRef {
+        GenRef {
+            prompt: Arc::new(prompt),
+            inner: Arc::new((Mutex::new(GenState::default()), Condvar::new())),
+        }
+    }
+
+    /// Collector side: one more sampled token is available.
+    fn push_token(&self, t: i32) {
         let (m, cv) = &*self.inner;
-        *m.lock().unwrap() = Some(v);
+        m.lock().unwrap().toks.push(t);
         cv.notify_all();
     }
 
-    pub fn to_here(&self) -> anyhow::Result<i32> {
+    /// Collector side: the session ended (stop token, budget, context
+    /// limit, or an error).
+    fn finish(&self, res: anyhow::Result<()>) {
+        let (m, cv) = &*self.inner;
+        let mut g = m.lock().unwrap();
+        g.done = true;
+        g.err = res.err().map(|e| format!("{e:#}"));
+        cv.notify_all();
+    }
+
+    /// Block for the next streamed token. `Ok(None)` means the session
+    /// finished; buffered tokens are always drained before an error is
+    /// reported.
+    pub fn next(&self) -> anyhow::Result<Option<i32>> {
         let (m, cv) = &*self.inner;
         let mut g = m.lock().unwrap();
         loop {
-            if let Some(v) = g.take() {
-                return v;
+            if g.read < g.toks.len() {
+                let t = g.toks[g.read];
+                g.read += 1;
+                return Ok(Some(t));
+            }
+            if g.done {
+                return match &g.err {
+                    Some(e) => Err(anyhow::anyhow!("{e}")),
+                    None => Ok(None),
+                };
             }
             g = cv.wait(g).unwrap();
         }
     }
+
+    /// Block until the session finishes and return the full sequence
+    /// (prompt + generated tokens). Does not consume the `next()` cursor.
+    pub fn to_here(&self) -> anyhow::Result<Vec<i32>> {
+        let (m, cv) = &*self.inner;
+        let mut g = m.lock().unwrap();
+        while !g.done {
+            g = cv.wait(g).unwrap();
+        }
+        if let Some(e) = &g.err {
+            return Err(anyhow::anyhow!("{e}"));
+        }
+        let mut out = (*self.prompt).clone();
+        out.extend_from_slice(&g.toks);
+        Ok(out)
+    }
+
+    /// Tokens generated so far (non-blocking snapshot).
+    pub fn n_generated(&self) -> usize {
+        self.inner.0.lock().unwrap().toks.len()
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.inner.0.lock().unwrap().done
+    }
+
+    pub fn prompt(&self) -> &[i32] {
+        &self.prompt
+    }
+}
+
+/// Single-token future — `submit()`'s return type, kept as a thin wrapper
+/// over a one-token session for API continuity.
+#[derive(Clone)]
+pub struct TokenRef {
+    gref: GenRef,
+}
+
+impl TokenRef {
+    pub fn to_here(&self) -> anyhow::Result<i32> {
+        match self.gref.next()? {
+            Some(t) => Ok(t),
+            None => Err(anyhow::anyhow!("generation finished without a token")),
+        }
+    }
+}
+
+/// Engine-side state of one live generation session, keyed by request id.
+/// The evolving token sequence itself travels through the batcher queue as
+/// a plain [`Request`]; this holds everything the collector needs to
+/// decide continue-vs-finish and to stream results back.
+struct Session {
+    prompt_len: usize,
+    max_new: usize,
+    stop: Option<i32>,
+    /// Original submission time — preserved across every re-enqueue so
+    /// batcher timeouts and TTFT measure client-observed waiting.
+    arrived: Instant,
+    /// Completion time of the session's previous engine step (for
+    /// per-token decode latency).
+    last_at: Instant,
+    gref: GenRef,
 }
 
 /// Bookkeeping for one in-flight batch.
 struct Pending {
     rref: RRef,
-    /// Real request count (bucket rows can exceed it due to padding).
-    n_requests: usize,
-    /// Per-request futures (batcher path only), in batch row order.
-    token_refs: Vec<TokenRef>,
+    /// The batch rows (real requests only; bucket pad rows excluded).
+    rows: Vec<Request>,
+    /// Batcher-path batches carry session rows the collector must route;
+    /// direct `infer_batch` rows never touch the session table.
+    from_batcher: bool,
 }
 
 struct Shared {
     bus: CommandBus,
     tickets: TicketCounter,
     pending: Mutex<HashMap<u64, Pending>>,
-    /// submit()'s per-request futures awaiting batch formation.
-    req_futures: Mutex<HashMap<u64, TokenRef>>,
+    /// Live generation sessions, keyed by request id.
+    sessions: Mutex<HashMap<u64, Session>>,
     metrics: Mutex<Recorder>,
     stopping: AtomicBool,
 }
 
 impl Shared {
     /// The non-blocking launch (§4.2): take a ticket, register the rref,
-    /// publish to every worker, return immediately.
-    fn publish(&self, fb: &FormedBatch, token_refs: Vec<TokenRef>) -> RRef {
+    /// publish to every worker, return immediately. Takes the batch by
+    /// value so the row token vectors move into `Pending` instead of being
+    /// cloned per step (§Perf).
+    fn publish(&self, fb: FormedBatch, from_batcher: bool) -> RRef {
         let input = std::sync::Arc::new(fb.to_input());
         let uid = self.tickets.issue();
         let rref = RRef::new(uid);
         self.pending.lock().unwrap().insert(
             uid,
-            Pending { rref: rref.clone(), n_requests: fb.requests.len(), token_refs },
+            Pending { rref: rref.clone(), rows: fb.requests, from_batcher },
         );
         self.bus.publish(uid, &input);
         rref
@@ -279,26 +418,48 @@ impl Engine {
             bus,
             tickets: TicketCounter::new(),
             pending: Mutex::new(HashMap::new()),
-            req_futures: Mutex::new(HashMap::new()),
+            sessions: Mutex::new(HashMap::new()),
             metrics: Mutex::new(Recorder::new()),
             stopping: AtomicBool::new(false),
         });
 
-        // ---- collector -------------------------------------------------------
-        let mut service = Vec::new();
-        {
-            let shared = shared.clone();
-            service.push(std::thread::spawn(move || collector_loop(reply_rx, shared)));
-        }
-
-        // ---- batcher + dispatcher pool (Fig. 5) ------------------------------
+        // ---- batcher ---------------------------------------------------------
         let batcher = Arc::new(Mutex::new(Batcher::new(
             manifest.shape_points(&launch.preset),
             launch.engine.max_batch,
             Duration::from_micros(launch.engine.batch_timeout_us),
         )));
+        let max_seq = batcher.lock().unwrap().max_seq();
         let (batch_signal, batch_rx) = std::sync::mpsc::channel::<()>();
-        let (fb_tx, fb_rx) = std::sync::mpsc::channel::<(FormedBatch, Vec<TokenRef>)>();
+
+        // ---- collector -------------------------------------------------------
+        // The collector is itself a producer now: after every completed
+        // engine step it re-enqueues unfinished sessions at the front of
+        // the batcher queue (continuation batching), so decode steps from
+        // different clients coalesce into shared buckets.
+        let mut service = Vec::new();
+        {
+            let shared = shared.clone();
+            let batcher = batcher.clone();
+            let signal = batch_signal.clone();
+            service.push(std::thread::spawn(move || {
+                collector_loop(reply_rx, shared, batcher, signal, max_seq)
+            }));
+        }
+
+        // ---- watchdog --------------------------------------------------------
+        // A non-replier worker error drops the activation, so the replier
+        // never sends and the batch's RRef would hang forever. The watchdog
+        // fails such poisoned batches (and their sessions) after the
+        // configured deadline instead of letting shutdown spin.
+        {
+            let shared = shared.clone();
+            let deadline = Duration::from_millis(launch.engine.batch_deadline_ms.max(1));
+            service.push(std::thread::spawn(move || watchdog_loop(shared, deadline)));
+        }
+
+        // ---- former + dispatcher pool (Fig. 5) -------------------------------
+        let (fb_tx, fb_rx) = std::sync::mpsc::channel::<FormedBatch>();
         let fb_rx = Arc::new(Mutex::new(fb_rx));
 
         // former thread: turns the request queue into the batch list
@@ -313,19 +474,10 @@ impl Engine {
                     }
                     let _ = batch_rx.recv_timeout(tick);
                     loop {
-                        let fb = batcher.lock().unwrap().form(std::time::Instant::now());
+                        let fb = batcher.lock().unwrap().form(Instant::now());
                         match fb {
                             Some(fb) => {
-                                // bind each request's future (created by
-                                // submit()) to its batch row
-                                let refs: Vec<TokenRef> = {
-                                    let mut reg = shared.req_futures.lock().unwrap();
-                                    fb.requests
-                                        .iter()
-                                        .map(|r| reg.remove(&r.id).unwrap_or_else(TokenRef::new))
-                                        .collect()
-                                };
-                                if fb_tx.send((fb, refs)).is_err() {
+                                if fb_tx.send(fb).is_err() {
                                     return;
                                 }
                             }
@@ -345,8 +497,8 @@ impl Engine {
             service.push(std::thread::spawn(move || loop {
                 let next = fb_rx.lock().unwrap().recv();
                 match next {
-                    Ok((fb, refs)) => {
-                        let rref = shared.publish(&fb, refs);
+                    Ok(fb) => {
+                        let rref = shared.publish(fb, true);
                         let _ = rref.to_here(); // completion gates this slot
                     }
                     Err(_) => break,
@@ -374,57 +526,61 @@ impl Engine {
         let points = self.manifest.shape_points(&self.launch.preset);
         let n = requests.len();
         let max_len = requests.iter().map(Request::len).max().unwrap();
-        let bucket = points
-            .iter()
-            .copied()
-            .filter(|&(b, s)| b >= n && s >= max_len)
-            .min_by_key(|&(b, s)| b * s)
+        let bucket = smallest_fitting_bucket(&points, n, max_len)
             .ok_or_else(|| anyhow::anyhow!("no compiled bucket fits ({n}, {max_len})"))?;
         let fb = FormedBatch { requests, bucket };
-        Ok(self.shared.publish(&fb, vec![]))
+        Ok(self.shared.publish(fb, false))
     }
 
-    /// Submit one request through the dynamic batcher. Returns a future
-    /// for the request's next token.
-    pub fn submit(&self, tokens: Vec<i32>) -> anyhow::Result<TokenRef> {
+    /// Start a generation session through the dynamic batcher: the request
+    /// enters the continuation queue, and after every completed engine step
+    /// the collector streams the sampled token to the returned [`GenRef`]
+    /// and re-enqueues the session until `max_new_tokens` are produced, the
+    /// stop token appears, or the context reaches the longest compiled
+    /// bucket. Non-blocking.
+    pub fn generate_stream(&self, req: GenRequest) -> anyhow::Result<GenRef> {
+        anyhow::ensure!(!req.tokens.is_empty(), "empty prompt");
+        anyhow::ensure!(req.max_new_tokens >= 1, "max_new_tokens must be >= 1");
         let id = self.next_req_id.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
-        let tref = TokenRef::new();
-        self.shared.req_futures.lock().unwrap().insert(id, tref.clone());
-        if let Err(e) = self.batcher.lock().unwrap().push(Request::new(id, tokens)) {
-            self.shared.req_futures.lock().unwrap().remove(&id);
+        let gref = GenRef::new(req.tokens.clone());
+        let now = Instant::now();
+        self.shared.sessions.lock().unwrap().insert(
+            id,
+            Session {
+                prompt_len: req.tokens.len(),
+                max_new: req.max_new_tokens,
+                stop: req.stop_token,
+                arrived: now,
+                last_at: now,
+                gref: gref.clone(),
+            },
+        );
+        if let Err(e) = self.batcher.lock().unwrap().push_at(Request::new(id, req.tokens), now) {
+            self.shared.sessions.lock().unwrap().remove(&id);
             return Err(e);
         }
         let _ = self.batch_signal.send(());
-        Ok(tref)
+        Ok(gref)
     }
 
-    /// Greedy autoregressive generation: extend `prompt` by `n_tokens`,
-    /// re-running prefill each step (no KV cache — each step flows through
-    /// the full batch path, exercising progressively longer buckets).
-    /// Stops early if the context exceeds the longest compiled bucket.
+    /// Submit one request through the dynamic batcher. Returns a future
+    /// for the request's next token (a one-token session).
+    pub fn submit(&self, tokens: Vec<i32>) -> anyhow::Result<TokenRef> {
+        Ok(TokenRef { gref: self.generate_stream(GenRequest::new(tokens, 1))? })
+    }
+
+    /// Greedy autoregressive generation: extend `prompt` by up to
+    /// `n_tokens`, each step flowing through the shared continuation
+    /// batcher (no KV cache — decode steps re-run prefill and coalesce
+    /// with other live sessions). Blocking wrapper over
+    /// [`Engine::generate_stream`]; generation ends early once the context
+    /// reaches the longest compiled bucket.
     pub fn generate(&self, prompt: Vec<i32>, n_tokens: usize) -> anyhow::Result<Vec<i32>> {
-        anyhow::ensure!(!prompt.is_empty(), "empty prompt");
-        let max_seq = self
-            .manifest
-            .shape_points(&self.launch.preset)
-            .iter()
-            .map(|&(_, s)| s)
-            .max()
-            .unwrap_or(0);
-        let mut tokens = prompt;
-        for _ in 0..n_tokens {
-            if tokens.len() >= max_seq {
-                break;
-            }
-            let rref = self.infer_batch(vec![Request::new(0, tokens.clone())])?;
-            let out = rref.to_here()?;
-            let next = *out
-                .next_tokens
-                .first()
-                .ok_or_else(|| anyhow::anyhow!("no token returned"))?;
-            tokens.push(next);
+        if n_tokens == 0 {
+            anyhow::ensure!(!prompt.is_empty(), "empty prompt");
+            return Ok(prompt);
         }
-        Ok(tokens)
+        self.generate_stream(GenRequest::new(prompt, n_tokens))?.to_here()
     }
 
     /// Snapshot of serving metrics, with the process-wide activation-arena
@@ -440,24 +596,26 @@ impl Engine {
         self.shared.pending.lock().unwrap().len()
     }
 
-    /// Orderly teardown: flush the batcher, stop services, shut workers
-    /// down, join everything.
+    /// Live generation sessions (queued or in flight).
+    pub fn session_count(&self) -> usize {
+        self.shared.sessions.lock().unwrap().len()
+    }
+
+    /// Orderly teardown: drain every live session and in-flight batch,
+    /// stop services, shut workers down, join everything.
     pub fn shutdown(self) {
-        // flush remaining queued requests
-        let leftovers = self.batcher.lock().unwrap().flush();
-        for fb in leftovers {
-            let refs: Vec<TokenRef> = {
-                let mut reg = self.shared.req_futures.lock().unwrap();
-                fb.requests
-                    .iter()
-                    .map(|r| reg.remove(&r.id).unwrap_or_else(TokenRef::new))
-                    .collect()
-            };
-            let rref = self.shared.publish(&fb, refs);
-            let _ = rref.to_here();
-        }
-        // wait for in-flight work to drain
-        while self.pending_count() > 0 {
+        // Drain: unfinished sessions re-enter the batcher after every
+        // step, so keep the former ticking until the session table, the
+        // queue, and the in-flight set are all empty. A poisoned batch
+        // can't spin this forever — the watchdog fails it at the deadline.
+        loop {
+            let busy = self.session_count() > 0
+                || self.pending_count() > 0
+                || self.batcher.lock().unwrap().pending() > 0;
+            if !busy {
+                break;
+            }
+            let _ = self.batch_signal.send(());
             std::thread::sleep(Duration::from_millis(1));
         }
         self.shared.stopping.store(true, Ordering::SeqCst);
@@ -475,32 +633,162 @@ impl Engine {
     }
 }
 
-fn collector_loop(reply_rx: Receiver<Reply>, shared: Arc<Shared>) {
+/// The collector: the completion half of the iteration-level scheduler.
+/// For every finished batch it fulfils the batch `RRef`, streams each
+/// row's sampled token to its session's `GenRef`, and re-enqueues
+/// unfinished sessions at the front of the batcher queue — making the
+/// collector a producer and closing the continuation loop.
+fn collector_loop(
+    reply_rx: Receiver<Reply>,
+    shared: Arc<Shared>,
+    batcher: Arc<Mutex<Batcher>>,
+    signal: Sender<()>,
+    max_seq: usize,
+) {
     while let Ok((uid, result)) = reply_rx.recv() {
         let entry = shared.pending.lock().unwrap().remove(&uid);
-        if let Some(Pending { rref, n_requests, token_refs }) = entry {
-            let latency = rref.submitted_at.elapsed();
-            match &result {
-                Ok(out) => {
-                    shared.metrics.lock().unwrap().record_batch(latency, n_requests);
-                    for (i, t) in token_refs.iter().enumerate() {
-                        t.fulfil(
-                            out.next_tokens
-                                .get(i)
-                                .copied()
-                                .ok_or_else(|| anyhow::anyhow!("missing token {i}")),
-                        );
+        let Pending { rref, rows, from_batcher } = match entry {
+            Some(p) => p,
+            None => continue, // expired by the watchdog; drop the late reply
+        };
+        let latency = rref.submitted_at.elapsed();
+        match &result {
+            Ok(out) => {
+                shared.metrics.lock().unwrap().record_batch(latency, rows.len());
+                if from_batcher {
+                    let now = Instant::now();
+                    // (request, original arrival) pairs to re-enqueue
+                    let mut continuations: Vec<(Request, Instant)> = Vec::new();
+                    // (is_first, latency) per emitted token, recorded after
+                    // the sessions lock drops (one metrics lock per batch)
+                    let mut token_lats: Vec<(bool, Duration)> = Vec::new();
+                    {
+                        let mut sessions = shared.sessions.lock().unwrap();
+                        for (i, row) in rows.into_iter().enumerate() {
+                            let sess = match sessions.get_mut(&row.id) {
+                                Some(s) => s,
+                                None => continue, // session already failed/expired
+                            };
+                            let tok = match out.next_tokens.get(i) {
+                                Some(&t) => t,
+                                None => {
+                                    let sess = sessions.remove(&row.id).unwrap();
+                                    sess.gref.finish(Err(anyhow::anyhow!(
+                                        "batch {uid} returned no token for row {i}"
+                                    )));
+                                    continue;
+                                }
+                            };
+                            let n_gen = row.tokens.len() - sess.prompt_len;
+                            if n_gen == 0 {
+                                token_lats.push((true, now.duration_since(sess.arrived)));
+                            } else {
+                                token_lats.push((false, now.duration_since(sess.last_at)));
+                            }
+                            sess.gref.push_token(tok);
+                            sess.last_at = now;
+                            let new_len = row.tokens.len() + 1;
+                            let finished = n_gen + 1 >= sess.max_new
+                                || sess.stop == Some(tok)
+                                || new_len >= max_seq;
+                            if finished {
+                                let sess = sessions.remove(&row.id).unwrap();
+                                sess.gref.finish(Ok(()));
+                            } else {
+                                // the session's token vector moves on into
+                                // its continuation row — no clone
+                                let mut toks = row.tokens;
+                                toks.push(tok);
+                                continuations.push((Request::new(row.id, toks), sess.arrived));
+                            }
+                        }
                     }
-                }
-                Err(e) => {
-                    for t in &token_refs {
-                        t.fulfil(Err(anyhow::anyhow!("{e}")));
+                    if !token_lats.is_empty() {
+                        let mut m = shared.metrics.lock().unwrap();
+                        for (is_first, lat) in token_lats {
+                            if is_first {
+                                m.record_first_token(lat);
+                            } else {
+                                m.record_decode_token(lat);
+                            }
+                        }
+                    }
+                    if !continuations.is_empty() {
+                        let mut b = batcher.lock().unwrap();
+                        // reversed so batch row order survives the
+                        // front-pushes (decode priority)
+                        for (r, arrived) in continuations.into_iter().rev() {
+                            b.requeue_front(r, arrived);
+                        }
+                        drop(b);
+                        let _ = signal.send(());
                     }
                 }
             }
-            rref.fulfil(result);
+            Err(e) => {
+                if from_batcher {
+                    let mut sessions = shared.sessions.lock().unwrap();
+                    for row in &rows {
+                        if let Some(sess) = sessions.remove(&row.id) {
+                            sess.gref.finish(Err(anyhow::anyhow!("{e}")));
+                        }
+                    }
+                }
+            }
+        }
+        rref.fulfil(result);
+    }
+}
+
+/// Watchdog: periodically fail in-flight batches older than `deadline`.
+/// A non-replier worker error drops the activation, so the replier never
+/// reports and the batch would otherwise hang its `RRef` (and `shutdown`
+/// would busy-wait forever on `pending_count`).
+fn watchdog_loop(shared: Arc<Shared>, deadline: Duration) {
+    // short dozes keep shutdown responsive; the pending scan itself runs at
+    // deadline/4 granularity (bounded to 1s) so the shared lock is touched
+    // rarely relative to the hot path
+    let doze = Duration::from_millis(5);
+    let scan_every = (deadline / 4).clamp(Duration::from_millis(1), Duration::from_secs(1));
+    let mut last_scan = Instant::now();
+    while !shared.stopping.load(Ordering::SeqCst) {
+        std::thread::sleep(doze);
+        if last_scan.elapsed() >= scan_every {
+            expire_stale(&shared, deadline);
+            last_scan = Instant::now();
         }
     }
+}
+
+/// Remove and fail every pending batch older than `deadline`. Returns how
+/// many batches were expired.
+fn expire_stale(shared: &Shared, deadline: Duration) -> usize {
+    let stale: Vec<(u64, Pending)> = {
+        let mut pending = shared.pending.lock().unwrap();
+        let uids: Vec<u64> = pending
+            .iter()
+            .filter(|(_, p)| p.rref.submitted_at.elapsed() > deadline)
+            .map(|(&u, _)| u)
+            .collect();
+        uids.into_iter().map(|u| (u, pending.remove(&u).unwrap())).collect()
+    };
+    let n = stale.len();
+    for (uid, p) in stale {
+        let msg = format!(
+            "batch {uid} exceeded the {deadline:?} watchdog deadline \
+             (a worker error likely dropped the activation)"
+        );
+        if p.from_batcher {
+            let mut sessions = shared.sessions.lock().unwrap();
+            for row in &p.rows {
+                if let Some(sess) = sessions.remove(&row.id) {
+                    sess.gref.finish(Err(anyhow::anyhow!("{msg}")));
+                }
+            }
+        }
+        p.rref.fulfil(Err(anyhow::anyhow!("{msg}")));
+    }
+    n
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -586,4 +874,91 @@ fn build_worker(
         embed_lits: None,
         logits_lits: None,
     })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn genref_streams_in_order() {
+        let g = GenRef::new(vec![1, 2]);
+        let g2 = g.clone();
+        let h = std::thread::spawn(move || {
+            let mut got = Vec::new();
+            while let Some(t) = g2.next().unwrap() {
+                got.push(t);
+            }
+            got
+        });
+        for t in [10, 11, 12] {
+            g.push_token(t);
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        g.finish(Ok(()));
+        assert_eq!(h.join().unwrap(), vec![10, 11, 12]);
+        assert_eq!(g.to_here().unwrap(), vec![1, 2, 10, 11, 12]);
+        assert_eq!(g.n_generated(), 3);
+        assert!(g.is_done());
+        assert_eq!(g.prompt(), &[1, 2]);
+    }
+
+    #[test]
+    fn genref_drains_buffered_tokens_before_error() {
+        let g = GenRef::new(vec![1]);
+        g.push_token(5);
+        g.finish(Err(anyhow::anyhow!("poisoned")));
+        assert_eq!(g.next().unwrap(), Some(5));
+        assert!(g.next().is_err());
+        assert!(g.to_here().is_err());
+    }
+
+    fn test_shared() -> Shared {
+        Shared {
+            bus: CommandBus::new(1).0,
+            tickets: TicketCounter::new(),
+            pending: Mutex::new(HashMap::new()),
+            sessions: Mutex::new(HashMap::new()),
+            metrics: Mutex::new(Recorder::new()),
+            stopping: AtomicBool::new(false),
+        }
+    }
+
+    #[test]
+    fn watchdog_expires_poisoned_batches_and_their_sessions() {
+        let shared = test_shared();
+        let gref = GenRef::new(vec![1, 2]);
+        let now = Instant::now();
+        shared.sessions.lock().unwrap().insert(
+            9,
+            Session {
+                prompt_len: 2,
+                max_new: 4,
+                stop: None,
+                arrived: now,
+                last_at: now,
+                gref: gref.clone(),
+            },
+        );
+        let rref = RRef::new(0);
+        shared.pending.lock().unwrap().insert(
+            0,
+            Pending {
+                rref: rref.clone(),
+                rows: vec![Request::new(9, vec![1, 2])],
+                from_batcher: true,
+            },
+        );
+        // under a generous deadline nothing expires
+        assert_eq!(expire_stale(&shared, Duration::from_secs(3600)), 0);
+        assert!(!rref.is_ready());
+        // at a zero deadline the batch is poisoned: the RRef errors instead
+        // of hanging, and the session's stream fails
+        std::thread::sleep(Duration::from_millis(2));
+        assert_eq!(expire_stale(&shared, Duration::ZERO), 1);
+        assert!(rref.to_here().is_err());
+        assert!(gref.to_here().is_err());
+        assert!(shared.sessions.lock().unwrap().is_empty());
+        assert!(shared.pending.lock().unwrap().is_empty());
+    }
 }

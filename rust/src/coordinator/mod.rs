@@ -19,7 +19,7 @@ pub mod engine;
 pub mod rpc;
 pub mod worker;
 
-pub use batcher::{Batcher, Request};
+pub use batcher::{smallest_fitting_bucket, Batcher, Request};
 pub use consistency::{ConsistencyQueue, TicketCounter};
-pub use engine::{Engine, LaunchConfig, MemoryMode, TokenRef};
+pub use engine::{Engine, GenRef, GenRequest, LaunchConfig, MemoryMode, TokenRef};
 pub use rpc::{BatchInput, BatchOutput, RRef};

@@ -24,6 +24,12 @@ pub struct BatchInput {
     /// Per-sequence valid lengths (the DRCE metadata the engine binds to
     /// the command, §4.3).
     pub valid_lens: Vec<usize>,
+    /// Per-row session ids (iteration-level scheduling metadata): which
+    /// generation session each batch row belongs to, `u64::MAX` for pad
+    /// rows. Worker-side observability — logs and debugging can attribute
+    /// a row to its session; the engine collector routes tokens through
+    /// its own pending-row table, not this field.
+    pub req_ids: Vec<u64>,
     /// Padded shape point this batch was bucketed into.
     pub batch: usize,
     pub seq: usize,
@@ -158,6 +164,7 @@ mod tests {
         BatchInput {
             ids: IntTensor::new(&[1, 4], vec![1, 2, 3, 0]),
             valid_lens: vec![3],
+            req_ids: vec![0],
             batch: 1,
             seq: 4,
         }

@@ -139,8 +139,13 @@ impl Worker {
                     let _ = self.reply_tx.send((uid, Err(e)));
                 } else {
                     // poison downstream by dropping; the engine watchdog
-                    // will surface the stall. Log loudly for debugging.
-                    eprintln!("worker {} failed: {e:#}", self.ctx.device_id());
+                    // will surface the stall. Log loudly, attributing the
+                    // batch to its sessions via the per-row ids.
+                    eprintln!(
+                        "worker {} failed on batch {uid} (sessions {:?}): {e:#}",
+                        self.ctx.device_id(),
+                        input.req_ids,
+                    );
                 }
             }
         }

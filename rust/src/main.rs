@@ -66,11 +66,51 @@ fn cmd_generate(args: &Args) -> i32 {
         .filter_map(|t| t.trim().parse().ok())
         .collect();
     let n = args.usize("tokens", 8);
-    match engine.generate(prompt.clone(), n) {
-        Ok(tokens) => {
-            println!("prompt {:?}", prompt);
-            println!("output {:?}", tokens);
+    if n == 0 {
+        // engine.generate owns the n==0 semantics (validates the prompt,
+        // returns it unchanged)
+        match engine.generate(prompt.clone(), 0) {
+            Ok(tokens) => {
+                println!("prompt {:?}", prompt);
+                println!("output {:?}", tokens);
+            }
+            Err(e) => {
+                eprintln!("generate failed: {e:#}");
+                return 1;
+            }
         }
+        engine.shutdown();
+        return 0;
+    }
+    // stream tokens as the scheduler produces them, then print the result
+    let gref = match engine
+        .generate_stream(energonai::coordinator::GenRequest::new(prompt.clone(), n))
+    {
+        Ok(g) => g,
+        Err(e) => {
+            eprintln!("generate failed: {e:#}");
+            return 1;
+        }
+    };
+    println!("prompt {:?}", prompt);
+    print!("tokens ");
+    loop {
+        match gref.next() {
+            Ok(Some(t)) => {
+                print!("{t} ");
+                use std::io::Write;
+                let _ = std::io::stdout().flush();
+            }
+            Ok(None) => break,
+            Err(e) => {
+                eprintln!("\ngenerate failed: {e:#}");
+                return 1;
+            }
+        }
+    }
+    println!();
+    match gref.to_here() {
+        Ok(tokens) => println!("output {:?}", tokens),
         Err(e) => {
             eprintln!("generate failed: {e:#}");
             return 1;
@@ -142,7 +182,10 @@ fn cmd_serve(args: &Args) -> i32 {
     let addr = args.get_or("addr", "127.0.0.1:7070");
     match Server::start(engine, addr) {
         Ok(server) => {
-            println!("serving on {} — protocol: `infer 1,2,3` | `stats` | `quit`", server.addr);
+            println!(
+                "serving on {} — protocol: `infer 1,2,3` | `gen 8 1,2,3` | `stats` | `quit`",
+                server.addr
+            );
             // serve until killed
             loop {
                 std::thread::sleep(std::time::Duration::from_secs(3600));

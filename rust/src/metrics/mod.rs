@@ -1,7 +1,9 @@
 //! Serving metrics: latency distribution + throughput, the two axes every
-//! figure in the paper's evaluation reports — plus the activation-arena
-//! allocation counters the §Perf pass watches (fresh allocations vs bytes
-//! recycled on the host hot path).
+//! figure in the paper's evaluation reports — plus the generation-level
+//! axes the iteration scheduler adds (TTFT, per-token decode latency,
+//! tokens/sec, mean batch occupancy) and the activation-arena allocation
+//! counters the §Perf pass watches (fresh allocations vs bytes recycled on
+//! the host hot path).
 
 use crate::memory::arena::ArenaStats;
 use std::time::{Duration, Instant};
@@ -12,7 +14,18 @@ pub struct Recorder {
     started: Instant,
     first_completion: Option<Instant>,
     last_completion: Option<Instant>,
+    /// Token-emission window, tracked separately from batch completions so
+    /// tokens/sec is not diluted by unrelated (non-generation) batches.
+    first_token: Option<Instant>,
+    last_token: Option<Instant>,
     latencies_us: Vec<u64>,
+    /// Time-to-first-token per generation session (submit → first sampled
+    /// token, including batch-formation queueing).
+    ttft_us: Vec<u64>,
+    /// Per-token decode latency (gap between consecutive engine steps of
+    /// one session), first token excluded.
+    tok_lat_us: Vec<u64>,
+    tokens_done: u64,
     requests_done: u64,
     batches_done: u64,
     arena: ArenaStats,
@@ -30,7 +43,12 @@ impl Recorder {
             started: Instant::now(),
             first_completion: None,
             last_completion: None,
+            first_token: None,
+            last_token: None,
             latencies_us: Vec::new(),
+            ttft_us: Vec::new(),
+            tok_lat_us: Vec::new(),
+            tokens_done: 0,
             requests_done: 0,
             batches_done: 0,
             arena: ArenaStats::default(),
@@ -64,6 +82,26 @@ impl Recorder {
         self.batches_done += 1;
     }
 
+    /// A generation session's first token completed `ttft` after submit.
+    pub fn record_first_token(&mut self, ttft: Duration) {
+        self.ttft_us.push(ttft.as_micros() as u64);
+        self.count_token();
+    }
+
+    /// A generation session produced a continuation token `gap` after its
+    /// previous one.
+    pub fn record_decode_token(&mut self, gap: Duration) {
+        self.tok_lat_us.push(gap.as_micros() as u64);
+        self.count_token();
+    }
+
+    fn count_token(&mut self) {
+        let now = Instant::now();
+        self.first_token.get_or_insert(now);
+        self.last_token = Some(now);
+        self.tokens_done += 1;
+    }
+
     pub fn batches(&self) -> u64 {
         self.batches_done
     }
@@ -72,14 +110,43 @@ impl Recorder {
         self.requests_done
     }
 
-    fn percentile(&self, p: f64) -> Option<Duration> {
-        if self.latencies_us.is_empty() {
+    /// Generated tokens streamed through the session lifecycle.
+    pub fn tokens(&self) -> u64 {
+        self.tokens_done
+    }
+
+    /// Mean requests per dispatched batch — >1 means the scheduler is
+    /// coalescing concurrent work into shared buckets.
+    pub fn mean_occupancy(&self) -> f64 {
+        if self.batches_done == 0 {
+            0.0
+        } else {
+            self.requests_done as f64 / self.batches_done as f64
+        }
+    }
+
+    fn pct_of(xs: &[u64], p: f64) -> Option<Duration> {
+        if xs.is_empty() {
             return None;
         }
-        let mut xs = self.latencies_us.clone();
+        let mut xs = xs.to_vec();
         xs.sort_unstable();
         let idx = ((xs.len() as f64 - 1.0) * p).round() as usize;
         Some(Duration::from_micros(xs[idx]))
+    }
+
+    fn percentile(&self, p: f64) -> Option<Duration> {
+        Self::pct_of(&self.latencies_us, p)
+    }
+
+    /// Time-to-first-token percentile across finished/streaming sessions.
+    pub fn ttft_percentile(&self, p: f64) -> Option<Duration> {
+        Self::pct_of(&self.ttft_us, p)
+    }
+
+    /// Per-token decode latency percentile.
+    pub fn token_percentile(&self, p: f64) -> Option<Duration> {
+        Self::pct_of(&self.tok_lat_us, p)
     }
 
     pub fn p50(&self) -> Option<Duration> {
@@ -112,6 +179,17 @@ impl Recorder {
         }
     }
 
+    /// Generated tokens per second over the token-emission window (not the
+    /// batch-completion window, which may include non-generation batches).
+    pub fn tokens_per_sec(&self) -> f64 {
+        match (self.first_token, self.last_token) {
+            (Some(a), Some(b)) if b > a && self.tokens_done > 0 => {
+                (self.tokens_done as f64 - 1.0).max(1.0) / (b - a).as_secs_f64()
+            }
+            _ => 0.0,
+        }
+    }
+
     pub fn elapsed(&self) -> Duration {
         self.started.elapsed()
     }
@@ -126,6 +204,18 @@ impl Recorder {
             fmt_opt(self.p99()),
             self.throughput_rps(),
         );
+        if self.tokens_done > 0 {
+            s.push_str(&format!(
+                "; gen {} toks {:.1} tok/s occupancy {:.2}; ttft p50 {} p99 {}; tok p50 {} p99 {}",
+                self.tokens_done,
+                self.tokens_per_sec(),
+                self.mean_occupancy(),
+                fmt_opt(self.ttft_percentile(0.50)),
+                fmt_opt(self.ttft_percentile(0.99)),
+                fmt_opt(self.token_percentile(0.50)),
+                fmt_opt(self.token_percentile(0.99)),
+            ));
+        }
         if self.arena != ArenaStats::default() {
             s.push_str(&format!(
                 "; arena {} fresh / {} reused ({} recycled)",
@@ -173,6 +263,35 @@ mod tests {
         r.record_batch(Duration::from_millis(5), 8);
         assert_eq!(r.requests(), 16);
         assert_eq!(r.batches(), 2);
+    }
+
+    #[test]
+    fn generation_axes_recorded() {
+        let mut r = Recorder::new();
+        assert_eq!(r.tokens(), 0);
+        assert!(r.ttft_percentile(0.5).is_none());
+        assert!(r.token_percentile(0.5).is_none());
+        assert!(!r.summary().contains("ttft"));
+        r.record_first_token(Duration::from_millis(8));
+        for ms in [2u64, 3, 4] {
+            r.record_decode_token(Duration::from_millis(ms));
+        }
+        assert_eq!(r.tokens(), 4);
+        assert_eq!(r.ttft_percentile(0.5).unwrap(), Duration::from_millis(8));
+        assert_eq!(r.token_percentile(0.5).unwrap(), Duration::from_millis(3));
+        assert!(r.token_percentile(0.5).unwrap() <= r.token_percentile(0.99).unwrap());
+        let s = r.summary();
+        assert!(s.contains("ttft p50"), "{s}");
+        assert!(s.contains("tok p50"), "{s}");
+    }
+
+    #[test]
+    fn occupancy_is_requests_over_batches() {
+        let mut r = Recorder::new();
+        assert_eq!(r.mean_occupancy(), 0.0);
+        r.record_batch(Duration::from_millis(1), 4);
+        r.record_batch(Duration::from_millis(1), 2);
+        assert!((r.mean_occupancy() - 3.0).abs() < 1e-9);
     }
 
     #[test]

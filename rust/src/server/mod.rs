@@ -5,13 +5,18 @@
 //!   client:  `infer 12,7,42\n`   — comma-separated token ids
 //!   server:  `ok 99\n`           — greedy next token
 //!            `err <message>\n`
+//!   client:  `gen 8 12,7,42\n`   — generate up to 8 continuation tokens
+//!   server:  `tok 99\n`          — streamed as each engine step completes
+//!            `...`
+//!            `done 12,7,42,99,...\n` — the full sequence on completion
 //!   client:  `stats\n`           — server: `ok <metrics summary>\n`
 //!   client:  `quit\n`            — closes the connection.
 //!
-//! Requests flow through the engine's dynamic batcher, so concurrent
-//! clients get batched together exactly like the paper's engine.
+//! Requests flow through the engine's continuation batcher, so concurrent
+//! clients — including every decode step of their generations — get
+//! batched together exactly like the paper's engine.
 
-use crate::coordinator::engine::Engine;
+use crate::coordinator::engine::{Engine, GenRef, GenRequest};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -73,47 +78,125 @@ fn handle_conn(stream: TcpStream, engine: Arc<Engine>) {
             Ok(l) => l,
             Err(_) => break,
         };
-        let reply = handle_line(line.trim(), &engine);
-        match reply {
-            Some(r) => {
+        match dispatch(line.trim(), &engine) {
+            Action::Close => break,
+            Action::Reply(r) => {
                 if writer.write_all(r.as_bytes()).is_err() {
                     break;
                 }
             }
-            None => break, // quit
+            Action::Stream(gref) => {
+                // write each token line as the scheduler streams it —
+                // TcpStream is unbuffered, so the client sees tokens as
+                // engine steps complete
+                if stream_tokens(&gref, |s| writer.write_all(s.as_bytes())).is_err() {
+                    break;
+                }
+            }
         }
     }
     let _ = peer;
 }
 
-/// One request line → one reply line (None = close).
-pub fn handle_line(line: &str, engine: &Engine) -> Option<String> {
+/// What one protocol line asks the connection loop to do.
+pub enum Action {
+    /// Write a single reply line.
+    Reply(String),
+    /// Stream a generation session (`tok …` lines, then `done …`).
+    Stream(GenRef),
+    /// Close the connection.
+    Close,
+}
+
+/// Parse one request line into an [`Action`]. `gen` is non-blocking — the
+/// session enters the continuation batcher and the returned `GenRef`
+/// streams from the connection loop.
+pub fn dispatch(line: &str, engine: &Engine) -> Action {
     if line == "quit" {
-        return None;
+        return Action::Close;
     }
     if line == "stats" {
-        return Some(format!("ok {}\n", engine.metrics_snapshot().summary()));
+        return Action::Reply(format!("ok {}\n", engine.metrics_snapshot().summary()));
     }
     if let Some(rest) = line.strip_prefix("infer ") {
-        let tokens: Result<Vec<i32>, _> = rest.split(',').map(|t| t.trim().parse::<i32>()).collect();
-        return Some(match tokens {
-            Ok(tokens) if !tokens.is_empty() => match engine.submit(tokens) {
-                Ok(fut) => match fut.to_here() {
-                    Ok(tok) => format!("ok {tok}\n"),
-                    Err(e) => format!("err {e}\n"),
-                },
-                Err(e) => format!("err {e}\n"),
+        return match parse_tokens(rest) {
+            Some(tokens) => match engine.submit(tokens).and_then(|fut| fut.to_here()) {
+                Ok(tok) => Action::Reply(format!("ok {tok}\n")),
+                Err(e) => Action::Reply(format!("err {e}\n")),
             },
-            _ => "err malformed token list\n".to_string(),
-        });
+            None => Action::Reply("err malformed token list\n".to_string()),
+        };
     }
-    Some("err unknown command (infer/stats/quit)\n".to_string())
+    if let Some(rest) = line.strip_prefix("gen ") {
+        let mut parts = rest.splitn(2, ' ');
+        let n = parts.next().and_then(|n| n.trim().parse::<usize>().ok());
+        let tokens = parts.next().and_then(parse_tokens);
+        return match (n, tokens) {
+            (Some(n), Some(tokens)) if n >= 1 => {
+                match engine.generate_stream(GenRequest::new(tokens, n)) {
+                    Ok(gref) => Action::Stream(gref),
+                    Err(e) => Action::Reply(format!("err {e}\n")),
+                }
+            }
+            _ => Action::Reply("err usage: gen <n> <t0,t1,...>\n".to_string()),
+        };
+    }
+    Action::Reply("err unknown command (infer/gen/stats/quit)\n".to_string())
+}
+
+fn parse_tokens(csv: &str) -> Option<Vec<i32>> {
+    let tokens: Result<Vec<i32>, _> = csv.split(',').map(|t| t.trim().parse::<i32>()).collect();
+    match tokens {
+        Ok(t) if !t.is_empty() => Some(t),
+        _ => None,
+    }
+}
+
+/// Drive one generation stream through `write`: a `tok <t>` line per
+/// sampled token, then `done <full csv>` (or `err <msg>` on failure).
+/// The outer Result is the transport's; protocol errors go to the client.
+fn stream_tokens<W: FnMut(&str) -> std::io::Result<()>>(
+    gref: &GenRef,
+    mut write: W,
+) -> std::io::Result<()> {
+    loop {
+        match gref.next() {
+            Ok(Some(t)) => write(&format!("tok {t}\n"))?,
+            Ok(None) => {
+                let full = match gref.to_here() {
+                    Ok(seq) => seq,
+                    Err(e) => return write(&format!("err {e}\n")),
+                };
+                let csv: Vec<String> = full.iter().map(i32::to_string).collect();
+                return write(&format!("done {}\n", csv.join(",")));
+            }
+            Err(e) => return write(&format!("err {e}\n")),
+        }
+    }
+}
+
+/// One request line → the full reply as a single string (None = close).
+/// Streaming replies are drained to completion — handy for tests and
+/// non-incremental callers; live connections use [`dispatch`] directly.
+pub fn handle_line(line: &str, engine: &Engine) -> Option<String> {
+    match dispatch(line, engine) {
+        Action::Close => None,
+        Action::Reply(r) => Some(r),
+        Action::Stream(gref) => {
+            let mut out = String::new();
+            let _ = stream_tokens(&gref, |s| {
+                out.push_str(s);
+                Ok(())
+            });
+            Some(out)
+        }
+    }
 }
 
 #[cfg(test)]
 mod tests {
-    // Protocol parsing is tested through handle_line in the integration
-    // suite (rust/tests/server_loop.rs) where a real engine exists; here we
-    // only check the command grammar against a never-used engine is not
-    // constructible without artifacts, so grammar-only cases live there too.
+    // Protocol behaviour is tested through dispatch/handle_line in the
+    // integration suite (rust/tests/server_loop.rs) where a real engine
+    // exists — an Engine is not constructible without AOT artifacts, so
+    // grammar-only cases live there too.
 }

@@ -83,6 +83,45 @@ pub fn padding_waste(requests: &[Request], pad: usize) -> f64 {
     1.0 - valid as f64 / (requests.len() * pad) as f64
 }
 
+/// Multi-client generation scenario for the iteration-level scheduler
+/// benches and tests: `clients` concurrent sessions, each with a prompt
+/// drawn from `prompt_dist` and asking for `new_tokens` continuation
+/// tokens. Decode steps of concurrent sessions should coalesce into
+/// shared buckets, which shows up as mean batch occupancy > 1.
+#[derive(Clone, Copy, Debug)]
+pub struct GenScenario {
+    pub clients: usize,
+    pub new_tokens: usize,
+    pub prompt_dist: LengthDist,
+    pub vocab: usize,
+    pub seed: u64,
+}
+
+impl GenScenario {
+    /// The paper-flavoured default: N clients, short heavy-tailed prompts.
+    pub fn concurrent(clients: usize, new_tokens: usize, max_prompt: usize, vocab: usize) -> Self {
+        GenScenario {
+            clients,
+            new_tokens,
+            prompt_dist: LengthDist::HeavyTail(max_prompt, 1.1),
+            vocab,
+            seed: 2209,
+        }
+    }
+
+    /// One reproducible prompt per client.
+    pub fn prompts(&self) -> Vec<Vec<i32>> {
+        let mut gen = Generator::new(self.seed, self.prompt_dist, self.vocab);
+        (0..self.clients).map(|_| gen.request().tokens).collect()
+    }
+
+    /// Upper bound on generated tokens (sessions may stop early at the
+    /// longest compiled bucket).
+    pub fn max_total_tokens(&self) -> usize {
+        self.clients * self.new_tokens
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -131,6 +170,17 @@ mod tests {
             let (ra, rb) = (a.request(), b.request());
             assert_eq!(ra.tokens, rb.tokens);
         }
+    }
+
+    #[test]
+    fn gen_scenario_is_reproducible_and_sized() {
+        let sc = GenScenario::concurrent(8, 16, 12, 100);
+        let a = sc.prompts();
+        let b = sc.prompts();
+        assert_eq!(a, b, "same seed must give same prompts");
+        assert_eq!(a.len(), 8);
+        assert!(a.iter().all(|p| (1..=12).contains(&p.len())));
+        assert_eq!(sc.max_total_tokens(), 128);
     }
 
     #[test]

@@ -1,0 +1,174 @@
+//! Iteration-level generation scheduler: the continuation-batched request
+//! lifecycle end to end. Concurrent multi-token generations must coalesce
+//! into shared decode buckets without changing any greedy token, streams
+//! must arrive in order, and stop tokens must cut sessions short.
+
+use energonai::coordinator::engine::{Engine, GenRequest, LaunchConfig};
+use energonai::workload::GenScenario;
+
+fn engine() -> Engine {
+    Engine::launch(LaunchConfig::preset("tiny")).unwrap()
+}
+
+/// Concurrent sessions interleave in shared buckets yet produce exactly
+/// the tokens sequential generation produces (greedy decoding is
+/// deterministic and batch-composition independent).
+#[test]
+fn concurrent_generations_match_sequential() {
+    let engine = engine();
+    let prompts: Vec<Vec<i32>> = (0..4)
+        .map(|i| vec![(i * 17 + 5) as i32 % 100 + 1, (i + 2) as i32, 9])
+        .collect();
+
+    // sequential oracle: one session at a time
+    let expect: Vec<Vec<i32>> = prompts
+        .iter()
+        .map(|p| engine.generate(p.clone(), 8).unwrap())
+        .collect();
+
+    // all four at once, submitted back-to-back (generate_stream is
+    // non-blocking, so the sessions are live simultaneously)
+    let grefs: Vec<_> = prompts
+        .iter()
+        .map(|p| engine.generate_stream(GenRequest::new(p.clone(), 8)).unwrap())
+        .collect();
+    let got: Vec<Vec<i32>> = grefs.iter().map(|g| g.to_here().unwrap()).collect();
+    assert_eq!(got, expect, "concurrent sessions changed greedy tokens");
+    engine.shutdown();
+}
+
+/// The acceptance bar: ≥4 concurrent 16-token generations batch their
+/// decode steps together — mean batch occupancy strictly above 1.
+#[test]
+fn concurrent_decode_steps_share_batches() {
+    let engine = engine();
+    let sc = GenScenario::concurrent(8, 16, 8, engine.cfg.vocab);
+    let grefs: Vec<_> = sc
+        .prompts()
+        .into_iter()
+        .map(|p| engine.generate_stream(GenRequest::new(p, sc.new_tokens)).unwrap())
+        .collect();
+    let mut total_generated = 0;
+    for g in &grefs {
+        total_generated += g.to_here().unwrap().len() - g.prompt().len();
+    }
+    assert!(total_generated >= 8, "sessions barely generated: {total_generated}");
+
+    let m = engine.metrics_snapshot();
+    assert_eq!(m.tokens(), total_generated as u64, "{}", m.summary());
+    assert!(
+        m.mean_occupancy() > 1.0,
+        "decode steps never coalesced: {}",
+        m.summary()
+    );
+    // the generation axes must be populated
+    assert!(m.ttft_percentile(0.5).is_some(), "{}", m.summary());
+    assert!(m.token_percentile(0.5).is_some(), "{}", m.summary());
+    assert!(m.tokens_per_sec() > 0.0, "{}", m.summary());
+    engine.shutdown();
+}
+
+/// A stop token ends the session early, and the stop token itself is the
+/// last emitted token.
+#[test]
+fn stop_token_exits_early() {
+    let engine = engine();
+    let prompt = vec![5, 9, 2];
+    let free = engine.generate(prompt.clone(), 6).unwrap();
+    assert!(free.len() > prompt.len() + 1, "need ≥2 generated tokens to test stop");
+    // stop at the second generated token
+    let stop = free[prompt.len() + 1];
+    let got = engine
+        .generate_stream(GenRequest::new(prompt.clone(), 6).with_stop(stop))
+        .unwrap()
+        .to_here()
+        .unwrap();
+    // expected: the free-running sequence truncated right after the first
+    // occurrence of `stop` among generated tokens
+    let cut = free[prompt.len()..].iter().position(|&t| t == stop).unwrap();
+    let expect = &free[..prompt.len() + cut + 1];
+    assert_eq!(got, expect, "stop token did not truncate the session");
+    assert_eq!(*got.last().unwrap(), stop);
+    engine.shutdown();
+}
+
+/// `GenRef::next` streams tokens incrementally, in emission order, and
+/// agrees with the final `to_here` sequence.
+#[test]
+fn streaming_matches_final_sequence() {
+    let engine = engine();
+    let prompt = vec![3, 1, 4, 1, 5];
+    let gref = engine
+        .generate_stream(GenRequest::new(prompt.clone(), 6))
+        .unwrap();
+    let mut streamed = Vec::new();
+    while let Some(t) = gref.next().unwrap() {
+        streamed.push(t);
+        assert!(gref.n_generated() >= streamed.len());
+    }
+    assert!(!streamed.is_empty());
+    assert!(streamed.len() <= 6);
+    let full = gref.to_here().unwrap();
+    assert_eq!(full[..prompt.len()], prompt[..]);
+    assert_eq!(full[prompt.len()..], streamed[..]);
+    // and the blocking wrapper produces the same continuation
+    assert_eq!(engine.generate(prompt, 6).unwrap(), full);
+    engine.shutdown();
+}
+
+/// Every concurrent `generate` call gets its own request id — none of the
+/// sessions can collide (the seed's `generate` used id 0 for every step).
+#[test]
+fn concurrent_generate_calls_do_not_collide() {
+    let engine = std::sync::Arc::new(engine());
+    let prompts: Vec<Vec<i32>> = (0..6).map(|i| vec![(i + 1) as i32; 4]).collect();
+    let expect: Vec<Vec<i32>> = prompts
+        .iter()
+        .map(|p| engine.generate(p.clone(), 5).unwrap())
+        .collect();
+    let handles: Vec<_> = prompts
+        .iter()
+        .cloned()
+        .map(|p| {
+            let engine = engine.clone();
+            std::thread::spawn(move || engine.generate(p, 5).unwrap())
+        })
+        .collect();
+    for (h, e) in handles.into_iter().zip(&expect) {
+        assert_eq!(&h.join().unwrap(), e, "a racing generate call was corrupted");
+    }
+    match std::sync::Arc::try_unwrap(engine) {
+        Ok(e) => e.shutdown(),
+        Err(_) => panic!("engine still referenced"),
+    }
+}
+
+/// Sessions queued but unfinished at shutdown are drained, not dropped.
+#[test]
+fn shutdown_drains_live_sessions() {
+    let engine = engine();
+    let grefs: Vec<_> = (0..5)
+        .map(|i| {
+            engine
+                .generate_stream(GenRequest::new(vec![i as i32 + 1, 7], 4))
+                .unwrap()
+        })
+        .collect();
+    engine.shutdown();
+    for g in grefs {
+        let out = g.to_here().expect("session must complete before teardown");
+        assert!(out.len() > 2, "no tokens generated: {out:?}");
+    }
+}
+
+/// max_new_tokens == 0 is rejected; empty prompts are rejected.
+#[test]
+fn invalid_gen_requests_rejected() {
+    let engine = engine();
+    assert!(engine.generate_stream(GenRequest::new(vec![1, 2], 0)).is_err());
+    assert!(engine.generate_stream(GenRequest::new(vec![], 4)).is_err());
+    // oversized prompt propagates the batcher error and leaks no session
+    assert!(engine.generate_stream(GenRequest::new(vec![1; 500], 4)).is_err());
+    assert_eq!(engine.session_count(), 0);
+    engine.shutdown();
+}

@@ -58,6 +58,46 @@ fn tcp_round_trip_with_concurrent_clients() {
 }
 
 #[test]
+fn tcp_gen_streams_tokens_then_done() {
+    let engine = engine();
+    let expect = engine.generate(vec![5, 9, 2], 4).unwrap();
+    let server = Server::start(engine.clone(), "127.0.0.1:0").unwrap();
+
+    let stream = TcpStream::connect(server.addr).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+    writeln!(writer, "gen 4 5,9,2").unwrap();
+
+    let mut toks = Vec::new();
+    let done = loop {
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let line = line.trim().to_string();
+        if let Some(t) = line.strip_prefix("tok ") {
+            toks.push(t.parse::<i32>().unwrap());
+        } else if let Some(rest) = line.strip_prefix("done ") {
+            break rest
+                .split(',')
+                .map(|t| t.parse::<i32>().unwrap())
+                .collect::<Vec<i32>>();
+        } else {
+            panic!("unexpected stream line {line:?}");
+        }
+    };
+    // streamed tokens are exactly the continuation, and the final line is
+    // the full sequence — identical to the in-process generate() result
+    assert_eq!(done, expect);
+    assert_eq!(toks[..], done[3..]);
+    writeln!(writer, "quit").unwrap();
+
+    server.stop();
+    match Arc::try_unwrap(engine) {
+        Ok(e) => e.shutdown(),
+        Err(_) => panic!("engine still referenced"),
+    }
+}
+
+#[test]
 fn protocol_grammar() {
     let engine = engine();
     // quit closes
@@ -70,9 +110,19 @@ fn protocol_grammar() {
         let r = handle_line(bad, &engine).unwrap();
         assert!(r.starts_with("err "), "{bad:?} -> {r:?}");
     }
+    // malformed gen commands
+    for bad in ["gen ", "gen x 1,2", "gen 4", "gen 4 a,b", "gen 0 1,2"] {
+        let r = handle_line(bad, &engine).unwrap();
+        assert!(r.starts_with("err "), "{bad:?} -> {r:?}");
+    }
     // valid inference
     let r = handle_line("infer 4, 8, 15", &engine).unwrap();
     assert!(r.starts_with("ok "), "{r:?}");
+    // valid generation (drained form): tok lines then done
+    let r = handle_line("gen 3 4, 8, 15", &engine).unwrap();
+    assert!(r.starts_with("tok "), "{r:?}");
+    assert!(r.lines().last().unwrap().starts_with("done "), "{r:?}");
+    assert_eq!(r.lines().filter(|l| l.starts_with("tok ")).count(), 3, "{r:?}");
     // stats
     let r = handle_line("stats", &engine).unwrap();
     assert!(r.contains("req/s"), "{r:?}");

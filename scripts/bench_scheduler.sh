@@ -1,0 +1,21 @@
+#!/usr/bin/env bash
+# Run the iteration-level scheduler benchmark (single-client vs coalesced
+# multi-client decode) and refresh BENCH_scheduler.json at the repo root.
+#
+# Usage: scripts/bench_scheduler.sh [extra cargo args...]
+set -euo pipefail
+
+cd "$(dirname "$0")/../rust"
+
+if ! ls ../artifacts/manifest.json >/dev/null 2>&1 && ! ls artifacts/manifest.json >/dev/null 2>&1; then
+    echo "warning: no AOT artifacts found — the bench will skip (run 'make artifacts')" >&2
+fi
+
+cargo bench --bench scheduler "$@"
+
+out="$(cd .. && pwd)/BENCH_scheduler.json"
+if [ -f "$out" ]; then
+    echo "refreshed $out"
+else
+    echo "warning: $out was not written (bench skipped?)" >&2
+fi

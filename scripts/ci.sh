@@ -1,0 +1,13 @@
+#!/usr/bin/env bash
+# CI gate: release build, full test suite, formatting. Keep this pinned to
+# exactly what the repo's tier-1 verification runs so local and CI results
+# agree.
+#
+# Usage: scripts/ci.sh
+set -euo pipefail
+
+cd "$(dirname "$0")/../rust"
+
+cargo build --release
+cargo test -q
+cargo fmt --check
