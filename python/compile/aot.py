@@ -84,26 +84,55 @@ PLANS = {
             "tps": [1, 2, 4],
             "drce": [(4, 64, 128)],
         },
+        # long-context preset for the decode-latency sweep
+        # (scripts/bench_decode.sh: per-token latency vs prefix length)
+        "base": {
+            "points": [(1, 32), (1, 128)],
+            "tps": [1],
+            "drce": [],
+        },
     },
 }
 
 
 def plan_jobs(plan: dict):
-    """Expand a plan into (cfg, kind, kwargs) lowering jobs."""
+    """Expand a plan into (cfg, kind, kwargs) lowering jobs.
+
+    Every prefill shape point (batch, seq) also gets the incremental-decode
+    family for its batch width: ``embed_decode``/``layer_full_decode`` (and
+    per-tp ``attn_shard_decode`` + ``mlp_shard`` with rows = batch), a
+    seq=1 ``logits``, and the cache-seeding ``layer_full_kv`` /
+    ``attn_shard_kv`` prefill twins.
+    """
     jobs = []
     for preset, spec in plan.items():
         cfg = PRESETS[preset]
         rows_done = set()
+        widths_done = set()
         for batch, seq in spec["points"]:
             jobs.append((cfg, "embed", dict(batch=batch, seq=seq)))
             jobs.append((cfg, "layer_full", dict(batch=batch, seq=seq)))
+            jobs.append((cfg, "layer_full_kv", dict(batch=batch, seq=seq)))
             jobs.append((cfg, "logits", dict(batch=batch, seq=seq)))
             for tp in spec["tps"]:
                 jobs.append((cfg, "attn_shard", dict(batch=batch, seq=seq, tp=tp)))
+                jobs.append((cfg, "attn_shard_kv", dict(batch=batch, seq=seq, tp=tp)))
                 rows = batch * seq
                 if (tp, rows) not in rows_done:
                     rows_done.add((tp, rows))
                     jobs.append((cfg, "mlp_shard", dict(batch=batch, seq=seq, tp=tp)))
+            if batch not in widths_done:
+                widths_done.add(batch)
+                jobs.append((cfg, "embed_decode", dict(batch=batch)))
+                jobs.append((cfg, "layer_full_decode", dict(batch=batch)))
+                jobs.append((cfg, "logits", dict(batch=batch, seq=1)))
+                for tp in spec["tps"]:
+                    jobs.append((cfg, "attn_shard_decode", dict(batch=batch, tp=tp)))
+                    if (tp, batch) not in rows_done:
+                        rows_done.add((tp, batch))
+                        jobs.append(
+                            (cfg, "mlp_shard", dict(batch=batch, seq=1, tp=tp, t_bucket=batch))
+                        )
         for batch, seq, t in spec.get("drce", []):
             for tp in spec["tps"]:
                 jobs.append(

@@ -10,6 +10,29 @@ This file defines every AOT *variant* the Rust coordinator executes:
                    matrix, padding rebuilt only around MHA
   logits           final layernorm + tied-embedding head   (last PP stage)
 
+Incremental-decode variants (the KV-cache path; DRCE's goal of eliminating
+redundant computation, §4.2.2, applied along the *time* axis):
+
+  embed_decode       embedding of one token per row at an explicit position
+  layer_full_kv      layer_full that additionally emits the layer's K/V rows
+                     (prefill of generation sessions fills the cache)
+  attn_shard_kv      attn_shard that additionally emits the shard's K/V rows
+  layer_full_decode  one layer over a single-position (B, 1, H) activation,
+                     attending over (B, S, H) cache tensors; emits the new
+                     K/V row so the host writes it into its paged cache
+  attn_shard_decode  the TP half of the above (caches are (B, S, H/tp);
+                     the MLP half reuses ``mlp_shard`` with rows = B)
+
+Decode attention is a (1, S) matrix-vector product per head — a different
+shape regime from the flash-style prefill kernel, so it is expressed
+directly in jnp (online softmax buys nothing at query length 1). The new
+token's K/V row is blended into the cache at position ``valid_len - 1``
+with a one-hot mask before attending, so the query sees itself; keys at or
+beyond ``valid_len`` get a finite additive ``NEG_INF`` bias. NOTE: that
+bias only suppresses *bounded* scores — the host must hand in zeroed
+staging beyond the valid prefix (``worker.rs::kv_staging`` does), since a
+NaN or huge-magnitude garbage key would survive any additive mask.
+
 Tensor-parallel partitioning follows Megatron-LM's 1-D strategy exactly as
 the paper describes (§4.1.3): the first linear of each pair is column-
 split, the second row-split, so each layer needs a single all-reduce per
@@ -36,7 +59,7 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
-from .kernels import attention, layernorm, linear
+from .kernels import NEG_INF, attention, layernorm, linear
 from .kernels.pack import rebuild_padding, remove_padding
 from .kernels.ref import causal_padding_bias
 
@@ -139,8 +162,12 @@ def shard_layer_params(params: dict, tp: int, rank: int, n_heads: int) -> dict:
 # Module builders
 # ---------------------------------------------------------------------------
 
-def _mha(x, bias, wqkv, bqkv, wo, bo, heads_local: int):
-    """Attention core on padded (B, S, H_in) input with local heads."""
+def _mha_kv(x, bias, wqkv, bqkv, wo, bo, heads_local: int):
+    """Attention core on padded (B, S, H_in) input with local heads.
+
+    Returns ``(out, k, v)`` — k/v in the flat (B, S, heads_local * hd)
+    layout the KV cache stores (head split is cheap to redo at decode).
+    """
     b, s, _ = x.shape
     qkv = linear(x, wqkv, bqkv)
     q, k, v = jnp.split(qkv, 3, axis=-1)
@@ -151,7 +178,48 @@ def _mha(x, bias, wqkv, bqkv, wo, bo, heads_local: int):
 
     o = attention(to_heads(q), to_heads(k), to_heads(v), bias)
     o = o.transpose(0, 2, 1, 3).reshape(b, s, heads_local * hd)
-    return linear(o, wo, bo)
+    return linear(o, wo, bo), k, v
+
+
+def _mha(x, bias, wqkv, bqkv, wo, bo, heads_local: int):
+    return _mha_kv(x, bias, wqkv, bqkv, wo, bo, heads_local)[0]
+
+
+def _mha_decode(x, valid_len, k_cache, v_cache, wqkv, bqkv, wo, bo, heads_local: int):
+    """Attention core for one query position per row against a cache.
+
+    ``x`` is the layernormed (B, 1, H) activation; ``k_cache``/``v_cache``
+    are (B, S, H_local) with positions ``0 .. valid_len-2`` populated;
+    ``valid_len`` counts tokens *including* the one being decoded. The new
+    K/V row is blended in at ``valid_len - 1`` (so the query attends to
+    itself) and returned for the host to append to its cache.
+    """
+    b = x.shape[0]
+    s = k_cache.shape[1]
+    h_local = k_cache.shape[2]
+    hd = h_local // heads_local
+    qkv = linear(x, wqkv, bqkv)  # (B, 1, 3*H_local)
+    q, k_new, v_new = jnp.split(qkv, 3, axis=-1)
+
+    pos = valid_len - 1  # (B,)
+    onehot = (jnp.arange(s)[None, :] == pos[:, None]).astype(k_cache.dtype)[:, :, None]
+    k_full = k_cache * (1.0 - onehot) + k_new * onehot  # (B, S, H_local)
+    v_full = v_cache * (1.0 - onehot) + v_new * onehot
+
+    def to_heads(t, n):
+        return t.reshape(b, n, heads_local, hd).transpose(0, 2, 1, 3)
+
+    qh = to_heads(q, 1).astype(jnp.float32)  # (B, nh, 1, hd)
+    kh = to_heads(k_full, s).astype(jnp.float32)  # (B, nh, S, hd)
+    vh = to_heads(v_full, s).astype(jnp.float32)
+    keymask = jnp.arange(s)[None, :] < valid_len[:, None]  # (B, S)
+    bias = jnp.where(keymask, 0.0, NEG_INF)[:, None, None, :]  # (B, 1, 1, S)
+    scale = 1.0 / (hd**0.5)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", qh, kh) * scale + bias
+    p = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bhqk,bhkd->bhqd", p, vh).astype(x.dtype)
+    o = o.transpose(0, 2, 1, 3).reshape(b, 1, h_local)
+    return linear(o, wo, bo), k_new, v_new
 
 
 def build_layer_full(cfg: ModelConfig) -> Callable:
@@ -228,6 +296,80 @@ def build_drce_attn_shard(cfg: ModelConfig, tp: int, batch: int, seq: int, t_buc
     return fn
 
 
+def build_layer_full_kv(cfg: ModelConfig) -> Callable:
+    """`layer_full` that also emits the layer's K/V rows (B, S, H) so the
+    coordinator can seed a generation session's cache during prefill."""
+
+    def fn(x, valid_len, ln1_g, ln1_b, wqkv, bqkv, wo, bo, ln2_g, ln2_b, w1, b1, w2, b2):
+        bias = causal_padding_bias(valid_len, x.shape[1])
+        a = layernorm(x, ln1_g, ln1_b)
+        attn, k, v = _mha_kv(a, bias, wqkv, bqkv, wo, bo, cfg.n_heads)
+        r = x + attn
+        m = layernorm(r, ln2_g, ln2_b)
+        m = linear(m, w1, b1, act="gelu")
+        m = linear(m, w2, b2)
+        return (r + m, k, v)
+
+    return fn
+
+
+def build_attn_shard_kv(cfg: ModelConfig, tp: int) -> Callable:
+    """`attn_shard` that also emits the shard's K/V rows (B, S, H/tp)."""
+    heads_local = cfg.n_heads // tp
+
+    def fn(x, valid_len, ln1_g, ln1_b, wqkv, bqkv, wo, bo):
+        bias = causal_padding_bias(valid_len, x.shape[1])
+        a = layernorm(x, ln1_g, ln1_b)
+        return _mha_kv(a, bias, wqkv, bqkv, wo, bo, heads_local)
+
+    return fn
+
+
+def build_layer_full_decode(cfg: ModelConfig) -> Callable:
+    """One layer over a single-position activation against the KV cache.
+
+    Inputs: x (B, 1, H), valid_len (B,) counting the current token,
+    k_cache/v_cache (B, S, H). Outputs: (y, k_new, v_new) with the new
+    K/V row (B, 1, H) for the host to append.
+    """
+
+    def fn(x, valid_len, k_cache, v_cache, ln1_g, ln1_b, wqkv, bqkv, wo, bo, ln2_g, ln2_b, w1, b1, w2, b2):
+        a = layernorm(x, ln1_g, ln1_b)
+        attn, k_new, v_new = _mha_decode(
+            a, valid_len, k_cache, v_cache, wqkv, bqkv, wo, bo, cfg.n_heads
+        )
+        r = x + attn
+        m = layernorm(r, ln2_g, ln2_b)
+        m = linear(m, w1, b1, act="gelu")
+        m = linear(m, w2, b2)
+        return (r + m, k_new, v_new)
+
+    return fn
+
+
+def build_attn_shard_decode(cfg: ModelConfig, tp: int) -> Callable:
+    """TP attention half of a decode step: partial output (B, 1, H) plus
+    the shard's new K/V row (B, 1, H/tp). The coordinator all-reduces the
+    partial, adds the residual, and runs ``mlp_shard`` with rows = B."""
+    heads_local = cfg.n_heads // tp
+
+    def fn(x, valid_len, k_cache, v_cache, ln1_g, ln1_b, wqkv, bqkv, wo, bo):
+        a = layernorm(x, ln1_g, ln1_b)
+        return _mha_decode(a, valid_len, k_cache, v_cache, wqkv, bqkv, wo, bo, heads_local)
+
+    return fn
+
+
+def build_embed_decode(cfg: ModelConfig) -> Callable:
+    """Embedding of one token per row at an explicit position (the decode
+    step's position is ``valid_len - 1``, bound host-side)."""
+
+    def fn(ids, pos, wte, wpe):
+        return (jnp.take(wte, ids, axis=0) + wpe[pos][:, None, :],)
+
+    return fn
+
+
 def build_embed(cfg: ModelConfig) -> Callable:
     def fn(ids, wte, wpe):
         s = ids.shape[1]
@@ -294,6 +436,48 @@ def variant(cfg: ModelConfig, kind: str, *, batch: int = 1, seq: int = 16, tp: i
         name = f"{cfg.name}_mlp_shard_tp{tp}_r{rows}"
         args = [("r", _spec((rows, h)))] + params(MLP_PARAMS)
         return name, build_mlp_shard(cfg, tp), args
+    if kind == "layer_full_kv":
+        name = f"{cfg.name}_layer_full_kv_b{batch}_s{seq}"
+        args = [
+            ("x", _spec((batch, seq, h))),
+            ("valid_len", _spec((batch,), I32)),
+        ] + params(ATTN_PARAMS + MLP_PARAMS)
+        return name, build_layer_full_kv(cfg), args
+    if kind == "attn_shard_kv":
+        name = f"{cfg.name}_attn_shard_kv_tp{tp}_b{batch}_s{seq}"
+        args = [
+            ("x", _spec((batch, seq, h))),
+            ("valid_len", _spec((batch,), I32)),
+        ] + params(ATTN_PARAMS)
+        return name, build_attn_shard_kv(cfg, tp), args
+    if kind == "layer_full_decode":
+        # cache capacity is always max_seq; the name needs only the width
+        name = f"{cfg.name}_layer_full_decode_b{batch}"
+        args = [
+            ("x", _spec((batch, 1, h))),
+            ("valid_len", _spec((batch,), I32)),
+            ("k_cache", _spec((batch, cfg.max_seq, h))),
+            ("v_cache", _spec((batch, cfg.max_seq, h))),
+        ] + params(ATTN_PARAMS + MLP_PARAMS)
+        return name, build_layer_full_decode(cfg), args
+    if kind == "attn_shard_decode":
+        name = f"{cfg.name}_attn_shard_decode_tp{tp}_b{batch}"
+        args = [
+            ("x", _spec((batch, 1, h))),
+            ("valid_len", _spec((batch,), I32)),
+            ("k_cache", _spec((batch, cfg.max_seq, h // tp))),
+            ("v_cache", _spec((batch, cfg.max_seq, h // tp))),
+        ] + params(ATTN_PARAMS)
+        return name, build_attn_shard_decode(cfg, tp), args
+    if kind == "embed_decode":
+        name = f"{cfg.name}_embed_decode_b{batch}"
+        args = [
+            ("ids", _spec((batch, 1), I32)),
+            ("pos", _spec((batch,), I32)),
+            ("wte", _spec((cfg.vocab, h))),
+            ("wpe", _spec((cfg.max_seq, h))),
+        ]
+        return name, build_embed_decode(cfg), args
     if kind == "drce_attn_shard":
         assert t_bucket > 0
         name = f"{cfg.name}_drce_attn_shard_tp{tp}_b{batch}_s{seq}_t{t_bucket}"

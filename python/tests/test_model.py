@@ -189,20 +189,193 @@ class TestEmbedLogits:
         )
 
 
+class TestDecode:
+    """Incremental-decode variants: cached single-position execution must
+    reproduce the full-prefix padded path exactly (the Rust differential
+    test `rust/tests/kv_decode.rs` pins the same invariant end to end)."""
+
+    def _prefix_kv(self, x, valid, params):
+        """Oracle K/V of the padded prefix (what the cache would hold)."""
+        a = ref.layernorm_ref(x, params["ln1_g"], params["ln1_b"])
+        qkv = ref.linear_ref(a, params["wqkv"], params["bqkv"])
+        _, k, v = jnp.split(qkv, 3, axis=-1)
+        return k, v
+
+    def test_kv_outputs_match_oracle_and_y_matches_layer_full(self):
+        params = make_layer_params(jax.random.PRNGKey(20), TINY)
+        batch, seq = 2, 16
+        x = jax.random.normal(jax.random.PRNGKey(21), (batch, seq, TINY.hidden))
+        valid = jnp.array([seq, 9], jnp.int32)
+        (y_full,) = M.build_layer_full(TINY)(x, valid, *param_list(params, ALL))
+        y_kv, k, v = M.build_layer_full_kv(TINY)(x, valid, *param_list(params, ALL))
+        assert_allclose(np.asarray(y_kv), np.asarray(y_full), rtol=1e-5, atol=1e-5)
+        k_ref, v_ref = self._prefix_kv(x, valid, params)
+        assert_allclose(np.asarray(k), np.asarray(k_ref), rtol=5e-4, atol=5e-4)
+        assert_allclose(np.asarray(v), np.asarray(v_ref), rtol=5e-4, atol=5e-4)
+
+    @pytest.mark.parametrize("lens", [[16, 9], [5, 12]])
+    def test_decode_step_matches_full_layer_last_position(self, lens):
+        """Running position L-1 through layer_full_decode with the prefix
+        cache must equal row L-1 of layer_full over the whole sequence."""
+        cfg = TINY
+        params = make_layer_params(jax.random.PRNGKey(22), cfg)
+        batch, seq = len(lens), 16
+        x = jax.random.normal(jax.random.PRNGKey(23), (batch, seq, cfg.hidden))
+        valid = jnp.asarray(lens, jnp.int32)
+        (expect,) = M.build_layer_full(cfg)(x, valid, *param_list(params, ALL))
+
+        # cache = oracle K/V of positions 0..L-2; staging is zero elsewhere
+        k_all, v_all = self._prefix_kv(x, valid, params)
+        prefix = jnp.arange(seq)[None, :, None] < (valid[:, None, None] - 1)
+        k_cache = jnp.where(prefix, k_all, 0.0)
+        # pad the cache out to max_seq like the Rust staging buffer does
+        padw = cfg.max_seq - seq
+        k_cache = jnp.pad(k_cache, ((0, 0), (0, padw), (0, 0)))
+        v_cache = jnp.pad(jnp.where(prefix, v_all, 0.0), ((0, 0), (0, padw), (0, 0)))
+
+        x_last = jnp.stack([x[b, l - 1] for b, l in enumerate(lens)])[:, None, :]
+        y, k_new, v_new = M.build_layer_full_decode(cfg)(
+            x_last, valid, k_cache, v_cache, *param_list(params, ALL)
+        )
+        for b, l in enumerate(lens):
+            assert_allclose(
+                np.asarray(y)[b, 0], np.asarray(expect)[b, l - 1], rtol=2e-3, atol=2e-3
+            )
+            assert_allclose(
+                np.asarray(k_new)[b, 0], np.asarray(k_all)[b, l - 1], rtol=1e-3, atol=1e-3
+            )
+            assert_allclose(
+                np.asarray(v_new)[b, 0], np.asarray(v_all)[b, l - 1], rtol=1e-3, atol=1e-3
+            )
+
+    @pytest.mark.parametrize("tp", [1, 2])
+    def test_attn_shard_decode_reassembles(self, tp):
+        """TP decode shards + all-reduce + host residual + mlp_shard(rows=B)
+        must equal layer_full_decode — the coordinator's decode contract."""
+        cfg = TINY
+        params = make_layer_params(jax.random.PRNGKey(24), cfg)
+        batch, seq = 2, cfg.max_seq
+        lens = [7, 13]
+        valid = jnp.asarray(lens, jnp.int32)
+        x_last = jax.random.normal(jax.random.PRNGKey(25), (batch, 1, cfg.hidden))
+        k_all = jax.random.normal(jax.random.PRNGKey(26), (batch, seq, cfg.hidden)) * 0.5
+        v_all = jax.random.normal(jax.random.PRNGKey(27), (batch, seq, cfg.hidden)) * 0.5
+        prefix = jnp.arange(seq)[None, :, None] < (valid[:, None, None] - 1)
+        k_cache = jnp.where(prefix, k_all, 0.0)
+        v_cache = jnp.where(prefix, v_all, 0.0)
+
+        expect, k_ref, v_ref = M.build_layer_full_decode(cfg)(
+            x_last, valid, k_cache, v_cache, *param_list(params, ALL)
+        )
+
+        hd = cfg.head_dim
+        heads_local = cfg.n_heads // tp
+        w = heads_local * hd
+        shards = [M.shard_layer_params(params, tp, r, cfg.n_heads) for r in range(tp)]
+        decode_fn = M.build_attn_shard_decode(cfg, tp)
+        mlp_fn = M.build_mlp_shard(cfg, tp)
+        # head-group column shard of the cache, mirroring shard_layer_params
+        parts = []
+        for r, s in enumerate(shards):
+            sl = slice(r * w, (r + 1) * w)
+            parts.append(
+                decode_fn(
+                    x_last, valid, k_cache[..., sl], v_cache[..., sl],
+                    *param_list(s, M.ATTN_PARAMS),
+                )
+            )
+        attn_sum = sum(p[0] for p in parts)
+        r_res = x_last + attn_sum
+        r2 = r_res.reshape(batch, cfg.hidden)
+        mlp_sum = sum(mlp_fn(r2, *param_list(s, M.MLP_PARAMS))[0] for s in shards)
+        y = r_res + mlp_sum.reshape(batch, 1, cfg.hidden)
+        assert_allclose(np.asarray(y), np.asarray(expect), rtol=2e-3, atol=2e-3)
+        # shard K/V rows concatenate to the full new row
+        k_cat = jnp.concatenate([p[1] for p in parts], axis=-1)
+        v_cat = jnp.concatenate([p[2] for p in parts], axis=-1)
+        assert_allclose(np.asarray(k_cat), np.asarray(k_ref), rtol=1e-3, atol=1e-3)
+        assert_allclose(np.asarray(v_cat), np.asarray(v_ref), rtol=1e-3, atol=1e-3)
+
+    def test_embed_decode_matches_embed_position(self):
+        cfg = TINY
+        ids = jnp.array([[1, 5, 7, 9], [2, 2, 3, 4]], jnp.int32)
+        wte = jax.random.normal(jax.random.PRNGKey(28), (cfg.vocab, cfg.hidden))
+        wpe = jax.random.normal(jax.random.PRNGKey(29), (cfg.max_seq, cfg.hidden))
+        (full,) = M.build_embed(cfg)(ids, wte, wpe)
+        pos = jnp.array([3, 1], jnp.int32)
+        last_ids = jnp.stack([ids[b, p] for b, p in enumerate([3, 1])])[:, None]
+        (y,) = M.build_embed_decode(cfg)(last_ids, pos, wte, wpe)
+        for b, p in enumerate([3, 1]):
+            assert_allclose(np.asarray(y)[b, 0], np.asarray(full)[b, p], rtol=1e-6)
+
+    def test_incremental_generation_matches_full_prefix(self):
+        """Token-by-token decode through the cache reproduces the full
+        padded forward at every step — the O(N·(P+N)) → O(P+N) claim is
+        only valid because of this invariant."""
+        cfg = TINY
+        params = make_layer_params(jax.random.PRNGKey(30), cfg)
+        seq = 10
+        x = jax.random.normal(jax.random.PRNGKey(31), (1, seq, cfg.hidden))
+        kv_fn = M.build_layer_full_kv(cfg)
+        dec_fn = M.build_layer_full_decode(cfg)
+
+        # prefill positions 0..4 through the kv twin
+        p_len = 5
+        valid_p = jnp.array([p_len], jnp.int32)
+        xp = jnp.pad(x[:, :p_len], ((0, 0), (0, cfg.max_seq - p_len), (0, 0)))
+        _, k, v = kv_fn(xp, valid_p, *param_list(params, ALL))
+        k_cache = jnp.where(jnp.arange(cfg.max_seq)[None, :, None] < p_len, k, 0.0)
+        v_cache = jnp.where(jnp.arange(cfg.max_seq)[None, :, None] < p_len, v, 0.0)
+
+        for l in range(p_len + 1, seq + 1):
+            valid = jnp.array([l], jnp.int32)
+            y, k_new, v_new = dec_fn(
+                x[:, l - 1 : l], valid, k_cache, v_cache, *param_list(params, ALL)
+            )
+            (expect,) = M.build_layer_full(cfg)(
+                jnp.pad(x[:, :l], ((0, 0), (0, cfg.max_seq - l), (0, 0))),
+                valid,
+                *param_list(params, ALL),
+            )
+            assert_allclose(
+                np.asarray(y)[0, 0], np.asarray(expect)[0, l - 1], rtol=2e-3, atol=2e-3
+            )
+            onehot = (jnp.arange(cfg.max_seq) == l - 1)[None, :, None]
+            k_cache = jnp.where(onehot, k_new, k_cache)
+            v_cache = jnp.where(onehot, v_new, v_cache)
+
+    def test_decode_variants_lower(self):
+        # the exact path aot.py takes must trace without concrete inputs
+        for kind, kw in [
+            ("embed_decode", dict(batch=2)),
+            ("layer_full_decode", dict(batch=2)),
+            ("attn_shard_decode", dict(batch=2, tp=2)),
+            ("layer_full_kv", dict(batch=2, seq=16)),
+            ("attn_shard_kv", dict(batch=2, seq=16, tp=2)),
+        ]:
+            name, fn, args = M.variant(TINY, kind, **kw)
+            jax.jit(fn).lower(*[s for _, s in args])
+
+
 class TestVariantRegistry:
     def test_all_kinds_have_specs(self):
-        for kind, kw in [
-            ("embed", dict(batch=2, seq=16)),
-            ("layer_full", dict(batch=2, seq=16)),
-            ("attn_shard", dict(batch=2, seq=16, tp=2)),
-            ("mlp_shard", dict(batch=2, seq=16, tp=2)),
-            ("drce_attn_shard", dict(batch=2, seq=16, tp=2, t_bucket=16)),
-            ("logits", dict(batch=2, seq=16)),
+        for kind, kw, n_out in [
+            ("embed", dict(batch=2, seq=16), 1),
+            ("layer_full", dict(batch=2, seq=16), 1),
+            ("attn_shard", dict(batch=2, seq=16, tp=2), 1),
+            ("mlp_shard", dict(batch=2, seq=16, tp=2), 1),
+            ("drce_attn_shard", dict(batch=2, seq=16, tp=2, t_bucket=16), 1),
+            ("logits", dict(batch=2, seq=16), 1),
+            ("embed_decode", dict(batch=2), 1),
+            ("layer_full_kv", dict(batch=2, seq=16), 3),
+            ("attn_shard_kv", dict(batch=2, seq=16, tp=2), 3),
+            ("layer_full_decode", dict(batch=2), 3),
+            ("attn_shard_decode", dict(batch=2, tp=2), 3),
         ]:
             name, fn, args = M.variant(TINY, kind, **kw)
             assert name.startswith("tiny_")
             out = jax.eval_shape(fn, *[s for _, s in args])
-            assert len(out) == 1
+            assert len(out) == n_out, kind
 
     def test_unknown_kind_raises(self):
         with pytest.raises(ValueError):

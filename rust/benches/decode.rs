@@ -1,0 +1,125 @@
+//! Incremental-decode benchmark: per-token decode latency vs. prefix
+//! length, paged KV cache vs. the legacy re-prefill path (the ISSUE 3
+//! acceptance experiment).
+//!
+//! The claim under test: with the cache, a decode step runs O(1) positions
+//! through the linears, so per-token latency stays flat as the prefix
+//! grows; without it every step re-runs the whole prefix, so per-token
+//! latency grows roughly linearly with prefix length.
+//!
+//! Medians land machine-readably in `BENCH_decode.json` at the repo root
+//! (regenerate with `scripts/bench_decode.sh`; `BENCH_SMOKE=1` runs a
+//! fast single-prefix sanity pass for CI).
+
+use energonai::coordinator::engine::{Engine, GenRequest, LaunchConfig};
+use energonai::runtime::{find_artifacts, Manifest};
+use std::time::Instant;
+
+type Results = Vec<(String, f64)>;
+
+/// Per-token decode p50 for one (preset, prefix, cache) cell, on a fresh
+/// engine so metrics are isolated.
+fn run_cell(preset: &str, prefix: usize, new_tokens: usize, cache: bool, results: &mut Results) -> Option<f64> {
+    let engine = match Engine::launch(
+        LaunchConfig::preset(preset).with_warmup(true).with_kv_cache(cache),
+    ) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("skip {preset} p{prefix} cache={cache}: {e:#}");
+            return None;
+        }
+    };
+    if cache && !engine.kv_cache_on() {
+        eprintln!("skip {preset} p{prefix}: decode artifacts missing");
+        engine.shutdown();
+        return None;
+    }
+    let prompt: Vec<i32> = (0..prefix).map(|i| (i % 90 + 1) as i32).collect();
+    let t0 = Instant::now();
+    let out = engine.generate_stream(GenRequest::new(prompt, new_tokens)).unwrap();
+    let full = out.to_here().unwrap();
+    let wall = t0.elapsed();
+    let m = engine.metrics_snapshot();
+    let p50 = m.token_percentile(0.50).map(|d| d.as_secs_f64() * 1e6);
+    let label = if cache { "cache" } else { "nocache" };
+    println!(
+        "{preset} prefix {prefix:>4} {label:>7}: {} tokens in {:.1}ms, tok p50 {}",
+        full.len() - prefix,
+        wall.as_secs_f64() * 1e3,
+        p50.map(|v| format!("{v:.1}µs")).unwrap_or_else(|| "-".into()),
+    );
+    let key = |k: &str| format!("{label}_prefix{prefix}_{k}");
+    results.push((key("wall_us"), wall.as_secs_f64() * 1e6));
+    if let Some(v) = p50 {
+        results.push((key("tok_p50_us"), v));
+    }
+    if let Some(d) = m.token_percentile(0.99) {
+        results.push((key("tok_p99_us"), d.as_secs_f64() * 1e6));
+    }
+    engine.shutdown();
+    p50
+}
+
+fn write_json(preset: &str, results: &Results) {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_decode.json");
+    let mut body = String::from("{\n  \"schema\": \"bench_decode/v1\",\n");
+    body.push_str("  \"generated_by\": \"scripts/bench_decode.sh\",\n");
+    body.push_str(&format!("  \"preset\": \"{preset}\",\n"));
+    body.push_str("  \"results\": {\n");
+    for (i, (k, v)) in results.iter().enumerate() {
+        let comma = if i + 1 == results.len() { "" } else { "," };
+        body.push_str(&format!("    \"{k}\": {v:.2}{comma}\n"));
+    }
+    body.push_str("  }\n}\n");
+    match std::fs::write(path, body) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}
+
+fn main() {
+    let dir = match find_artifacts() {
+        Ok(d) => d,
+        Err(_) => {
+            eprintln!("no AOT artifacts found — run `make artifacts` first; skipping");
+            return;
+        }
+    };
+    let manifest = Manifest::cached(dir).unwrap();
+    let smoke = std::env::var("BENCH_SMOKE").is_ok();
+    // the base preset carries the (1, 128) long-context point for the
+    // sweep; fall back to tiny (max prefix 24) when it isn't compiled
+    let (preset, prefixes, new_tokens) = if smoke {
+        ("tiny", vec![8], 4)
+    } else if !manifest.decode_widths("base", 1).is_empty() {
+        ("base", vec![8, 32, 120], 8)
+    } else {
+        eprintln!("(base decode artifacts missing — falling back to the tiny sweep)");
+        ("tiny", vec![8, 16, 24], 8)
+    };
+
+    println!("== incremental decode: per-token latency vs prefix ({preset}) ==\n");
+    let mut results = Results::new();
+    let mut flat: Vec<(usize, f64, f64)> = Vec::new(); // (prefix, cache, nocache)
+    for &p in &prefixes {
+        let c = run_cell(preset, p, new_tokens, true, &mut results);
+        let n = run_cell(preset, p, new_tokens, false, &mut results);
+        if let (Some(c), Some(n)) = (c, n) {
+            flat.push((p, c, n));
+        }
+        println!();
+    }
+    if let (Some(first), Some(last)) = (flat.first(), flat.last()) {
+        if flat.len() >= 2 {
+            println!(
+                "cache p50 growth {}→{}: {:.2}x (acceptance: ≤1.2x); \
+                 nocache growth: {:.2}x",
+                first.0,
+                last.0,
+                last.1 / first.1,
+                last.2 / first.2,
+            );
+        }
+    }
+    write_json(preset, &results);
+}

@@ -158,6 +158,12 @@ fn bench_manifest(results: &mut Results) {
         std::hint::black_box(Manifest::load(&dir).unwrap());
     });
     record(results, "manifest_parse_us", s);
+    // the memoized path engines/tests/benches actually take (§Perf):
+    // one parse per path per process, then an Arc clone
+    let s = run_print("manifest cached lookup", 2, 50, || {
+        std::hint::black_box(Manifest::cached(&dir).unwrap());
+    });
+    record(results, "manifest_cached_us", s);
 }
 
 fn write_json(results: &Results) {

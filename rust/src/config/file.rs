@@ -15,6 +15,7 @@
 //! drce = true
 //! blocking_comms = false
 //! consistency_queue = true
+//! kv_cache = true        # incremental decode via the paged K/V cache
 //! pool_threads = 4
 //! max_batch = 32
 //! batch_timeout_us = 2000
@@ -49,6 +50,7 @@ pub fn launch_from_doc(doc: &TomlDoc) -> anyhow::Result<LaunchConfig> {
     launch.engine.max_batch = doc.usize_or("engine.max_batch", 32);
     launch.engine.batch_timeout_us = doc.usize_or("engine.batch_timeout_us", 2000) as u64;
     launch.engine.batch_deadline_ms = doc.usize_or("engine.batch_deadline_ms", 30_000) as u64;
+    launch.engine.kv_cache = doc.bool_or("engine.kv_cache", true);
 
     if let Some(n) = doc.get("model.n_layers").and_then(|v| v.as_usize()) {
         launch = launch.with_layers(n);
@@ -77,7 +79,7 @@ pub fn launch_from_doc(doc: &TomlDoc) -> anyhow::Result<LaunchConfig> {
             "parallel.tp", "parallel.pp",
             "engine.drce", "engine.blocking_comms", "engine.consistency_queue",
             "engine.pool_threads", "engine.max_batch", "engine.batch_timeout_us",
-            "engine.batch_deadline_ms",
+            "engine.batch_deadline_ms", "engine.kv_cache",
             "model.n_layers",
             "memory.mode", "memory.n_local", "memory.lookahead", "memory.time_scale", "memory.link",
         ];

@@ -174,6 +174,13 @@ pub struct EngineConfig {
     pub drce: bool,
     /// Blocking collectives (FasterTransformer style) instead of NBPP.
     pub blocking_comms: bool,
+    /// Incremental decode through the paged K/V cache: continuation steps
+    /// run a single position against cached K/V instead of re-running the
+    /// whole prefix. Requires the decode artifacts (`embed_decode`,
+    /// `layer_full_decode`/`attn_shard_decode`); the engine silently falls
+    /// back to re-prefill decode when they are missing from the manifest.
+    /// Disabling this is also the baseline half of the decode bench.
+    pub kv_cache: bool,
 }
 
 impl Default for EngineConfig {
@@ -186,6 +193,7 @@ impl Default for EngineConfig {
             consistency_queue: true,
             drce: false,
             blocking_comms: false,
+            kv_cache: true,
         }
     }
 }

@@ -13,22 +13,40 @@
 //! step, carrying their original arrival timestamp. Decode steps therefore
 //! take priority over fresh prefills and coalesce with each other into
 //! shared buckets, Orca-style.
+//!
+//! Prefill and decode are **distinct bucket kinds**: a prefill batch pads
+//! whole prompts into a compiled (batch, seq) point, while a decode batch
+//! is a width-only bucket of single-position steps — one newest token per
+//! row, executed against each session's paged K/V cache. `form` never
+//! mixes the two; it batches the longest same-phase run at the queue
+//! front (continuations re-enter front-first together, so concurrent
+//! decodes still coalesce).
 
-use super::rpc::BatchInput;
+use super::rpc::{BatchInput, Phase};
 use crate::tensor::IntTensor;
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
 
-/// One inference request: a token sequence.
+/// One inference request: a token sequence, tagged with the engine step
+/// kind it needs next (a fresh prompt prefills; a cached continuation
+/// decodes its newest token only).
 #[derive(Clone, Debug)]
 pub struct Request {
     pub id: u64,
     pub tokens: Vec<i32>,
+    pub phase: Phase,
 }
 
 impl Request {
     pub fn new(id: u64, tokens: Vec<i32>) -> Request {
-        Request { id, tokens }
+        Request { id, tokens, phase: Phase::Prefill }
+    }
+
+    /// A continuation step of a cached session: `tokens` is the full
+    /// evolving sequence (the collector and length bookkeeping need it),
+    /// but only the last token enters the decode batch.
+    pub fn decode(id: u64, tokens: Vec<i32>) -> Request {
+        Request { id, tokens, phase: Phase::Decode }
     }
 
     pub fn len(&self) -> usize {
@@ -55,21 +73,37 @@ pub fn smallest_fitting_bucket(
         .min_by_key(|&(b, s)| b * s)
 }
 
-/// A formed batch: requests + the bucket it was padded into.
+/// A formed batch: requests + the bucket it was padded into. Decode
+/// batches use a width-only bucket `(w, 1)`.
 #[derive(Clone, Debug)]
 pub struct FormedBatch {
     pub requests: Vec<Request>,
     pub bucket: (usize, usize), // (batch, seq)
+    pub phase: Phase,
 }
 
 impl FormedBatch {
     /// Materialize the padded id tensor + valid-length metadata.
+    ///
+    /// Prefill: the usual (batch, seq) padded prompt tensor. Decode: a
+    /// (batch, 1) tensor of each session's newest token, with
+    /// `valid_lens` carrying the *total* session length (the decode
+    /// variants attend over `valid_len` cache positions and place the new
+    /// K/V row at `valid_len - 1`).
     pub fn to_input(&self) -> BatchInput {
         let (b, s) = self.bucket;
         let mut ids = vec![0i32; b * s];
         let mut valid = Vec::with_capacity(b);
         for (i, r) in self.requests.iter().enumerate() {
-            ids[i * s..i * s + r.len()].copy_from_slice(&r.tokens);
+            match self.phase {
+                Phase::Prefill => {
+                    ids[i * s..i * s + r.len()].copy_from_slice(&r.tokens);
+                }
+                Phase::Decode => {
+                    debug_assert_eq!(s, 1, "decode buckets are width-only");
+                    ids[i] = *r.tokens.last().expect("empty decode request");
+                }
+            }
             valid.push(r.len());
         }
         // bucket rows beyond the real requests are zero-length pads
@@ -91,6 +125,8 @@ impl FormedBatch {
             req_ids,
             batch: b,
             seq: s,
+            phase: self.phase,
+            cache: false,
         }
     }
 }
@@ -99,6 +135,10 @@ impl FormedBatch {
 pub struct Batcher {
     /// Available (batch, seq) buckets, sorted.
     buckets: Vec<(usize, usize)>,
+    /// Compiled decode widths as width-only points `(w, 1)`, sorted.
+    /// Empty when the engine runs without a KV cache — decode requests
+    /// then never reach the queue.
+    decode_points: Vec<(usize, usize)>,
     max_batch: usize,
     timeout: Duration,
     queue: VecDeque<(Request, Instant)>,
@@ -108,7 +148,19 @@ impl Batcher {
     pub fn new(mut buckets: Vec<(usize, usize)>, max_batch: usize, timeout: Duration) -> Batcher {
         assert!(!buckets.is_empty(), "no AOT shape points available");
         buckets.sort();
-        Batcher { buckets, max_batch, timeout, queue: VecDeque::new() }
+        Batcher { buckets, decode_points: Vec::new(), max_batch, timeout, queue: VecDeque::new() }
+    }
+
+    /// Enable decode buckets for the given compiled widths.
+    pub fn with_decode_widths(mut self, mut widths: Vec<usize>) -> Batcher {
+        widths.sort_unstable();
+        widths.dedup();
+        self.decode_points = widths.into_iter().map(|w| (w, 1)).collect();
+        self
+    }
+
+    pub fn decode_widths(&self) -> Vec<usize> {
+        self.decode_points.iter().map(|&(w, _)| w).collect()
     }
 
     pub fn max_seq(&self) -> usize {
@@ -147,11 +199,6 @@ impl Batcher {
         self.queue.len()
     }
 
-    /// Smallest bucket fitting (n requests, max_len).
-    fn pick_bucket(&self, n: usize, max_len: usize) -> Option<(usize, usize)> {
-        smallest_fitting_bucket(&self.buckets, n, max_len)
-    }
-
     /// Largest request count any bucket supports.
     fn max_bucket_batch(&self) -> usize {
         self.buckets.iter().map(|&(b, _)| b).max().unwrap()
@@ -159,17 +206,37 @@ impl Batcher {
 
     /// Form the next batch if the policy says go: either a full batch is
     /// available or the oldest request has waited past the timeout.
+    ///
+    /// Only the contiguous same-phase run at the queue front is batched —
+    /// prefill and decode run different executables, so a batch never
+    /// mixes them. Decode continuations carry their original (long-
+    /// expired) arrival time, so a decode run at the front dispatches
+    /// immediately and as one shared bucket.
     pub fn form(&mut self, now: Instant) -> Option<FormedBatch> {
         if self.queue.is_empty() {
             return None;
         }
-        let cap = self.max_batch.min(self.max_bucket_batch());
+        let phase = self.queue[0].0.phase;
+        let run = self
+            .queue
+            .iter()
+            .take_while(|(r, _)| r.phase == phase)
+            .count();
+        let cap = match phase {
+            Phase::Prefill => self.max_batch.min(self.max_bucket_batch()),
+            Phase::Decode => {
+                let max_w = self.decode_points.iter().map(|&(w, _)| w).max().unwrap_or(0);
+                assert!(max_w > 0, "decode request queued but no decode widths compiled");
+                self.max_batch.min(max_w)
+            }
+        };
         let oldest_expired = now.duration_since(self.queue[0].1) >= self.timeout;
-        if self.queue.len() < cap && !oldest_expired {
+        if run < cap && !oldest_expired {
             return None;
         }
-        // take up to cap requests, but never exceed what some bucket fits
-        let take = self.queue.len().min(cap);
+        // take up to cap same-phase requests, but never exceed what some
+        // bucket fits
+        let take = run.min(cap);
         let mut reqs: Vec<(Request, Instant)> = Vec::with_capacity(take);
         let mut max_len = 0;
         for _ in 0..take {
@@ -181,10 +248,16 @@ impl Batcher {
         // back to the queue until one does. max_seq is checked on push, so
         // shrinking the count always converges to a feasible bucket.
         loop {
-            if let Some(bucket) = self.pick_bucket(reqs.len(), max_len) {
+            let bucket = match phase {
+                Phase::Prefill => smallest_fitting_bucket(&self.buckets, reqs.len(), max_len),
+                // decode row "length" is always the single newest token
+                Phase::Decode => smallest_fitting_bucket(&self.decode_points, reqs.len(), 1),
+            };
+            if let Some(bucket) = bucket {
                 return Some(FormedBatch {
                     requests: reqs.into_iter().map(|(r, _)| r).collect(),
                     bucket,
+                    phase,
                 });
             }
             // shed the last request back, keeping its *original* arrival
@@ -192,7 +265,9 @@ impl Batcher {
             // request that already waited a full batching window
             let pair = reqs.pop().expect("bucket must fit a single request");
             self.queue.push_front(pair);
-            max_len = reqs.iter().map(|(r, _)| r.len()).max().unwrap_or(0);
+            if phase == Phase::Prefill {
+                max_len = reqs.iter().map(|(r, _)| r.len()).max().unwrap_or(0);
+            }
         }
     }
 
@@ -294,7 +369,7 @@ mod tests {
 
     #[test]
     fn to_input_pads_and_clamps() {
-        let fb = FormedBatch { requests: vec![req(7, 3)], bucket: (2, 16) };
+        let fb = FormedBatch { requests: vec![req(7, 3)], bucket: (2, 16), phase: Phase::Prefill };
         let input = fb.to_input();
         assert_eq!(input.ids.shape, vec![2, 16]);
         assert_eq!(input.valid_lens, vec![3, 1]); // empty row clamped to 1
@@ -348,6 +423,62 @@ mod tests {
         assert_eq!(smallest_fitting_bucket(&points, 2, 20), Some((4, 32)));
         assert_eq!(smallest_fitting_bucket(&points, 5, 8), None);
         assert_eq!(smallest_fitting_bucket(&points, 1, 64), None);
+    }
+
+    fn decode_batcher() -> Batcher {
+        batcher().with_decode_widths(vec![1, 2, 4])
+    }
+
+    #[test]
+    fn decode_run_forms_width_bucket_immediately() {
+        let mut b = decode_batcher();
+        let old = Instant::now() - Duration::from_millis(20);
+        // three continuations re-enter front-first (reverse push order)
+        for id in [3u64, 2, 1] {
+            b.requeue_front(Request::decode(id, vec![7; 10 + id as usize]), old);
+        }
+        let fb = b.form(Instant::now()).expect("expired decode run must dispatch");
+        assert_eq!(fb.phase, Phase::Decode);
+        assert_eq!(fb.bucket, (4, 1), "3 rows need the width-4 bucket");
+        assert_eq!(fb.requests.len(), 3);
+        assert_eq!(fb.requests[0].id, 1);
+    }
+
+    #[test]
+    fn decode_and_prefill_never_mix() {
+        let mut b = decode_batcher();
+        let old = Instant::now() - Duration::from_millis(20);
+        b.push_at(req(9, 8), old).unwrap(); // expired prefill at the back
+        b.requeue_front(Request::decode(1, vec![5; 6]), old);
+        b.requeue_front(Request::decode(0, vec![5; 4]), old);
+        let fb = b.form(Instant::now()).unwrap();
+        assert_eq!(fb.phase, Phase::Decode);
+        assert_eq!(fb.requests.len(), 2, "prefill must not ride in a decode bucket");
+        let fb2 = b.form(Instant::now()).unwrap();
+        assert_eq!(fb2.phase, Phase::Prefill);
+        assert_eq!(fb2.requests[0].id, 9);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn decode_input_carries_last_token_and_total_len() {
+        let fb = FormedBatch {
+            requests: vec![Request::decode(7, vec![4, 5, 6])],
+            bucket: (2, 1),
+            phase: Phase::Decode,
+        };
+        let input = fb.to_input();
+        assert_eq!(input.phase, Phase::Decode);
+        assert_eq!(input.ids.shape, vec![2, 1]);
+        assert_eq!(input.ids.data, vec![6, 0]); // newest token + pad
+        assert_eq!(input.valid_lens, vec![3, 1]); // total len; pad clamped
+        assert_eq!(input.req_ids, vec![7, u64::MAX]);
+    }
+
+    #[test]
+    fn decode_widths_are_sorted_and_deduped() {
+        let b = batcher().with_decode_widths(vec![4, 1, 4, 2]);
+        assert_eq!(b.decode_widths(), vec![1, 2, 4]);
     }
 
     #[test]

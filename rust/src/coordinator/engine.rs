@@ -6,6 +6,14 @@
 //! generations from many clients coalesce into shared decode buckets
 //! (Orca-style continuation batching).
 //!
+//! With the decode artifacts compiled, continuation steps are
+//! **incremental**: the session's prefill seeds a paged per-worker K/V
+//! cache (`memory::kvcache`), each continuation runs a single position
+//! against it through the `*_decode` variants, and the collector releases
+//! a session's blocks — by ticketed command through the consistency
+//! queue — on completion, stop token, error, or watchdog poison. Without
+//! them the engine falls back to the legacy re-prefill continuation path.
+//!
 //! Public usage mirrors the paper's Fig. 9, plus streaming generation:
 //!
 //! ```no_run
@@ -26,11 +34,12 @@
 
 use super::batcher::{smallest_fitting_bucket, Batcher, FormedBatch, Request};
 use super::consistency::TicketCounter;
-use super::rpc::{CommandBus, RRef};
+use super::rpc::{CommandBus, Phase, RRef};
 use super::worker::{ActMsg, Reply, Worker, WorkerCtx};
 use crate::comm::channel::{CommWorld, Mode};
 use crate::comm::collective::ChunkMsg;
 use crate::config::{EngineConfig, ModelConfig, ParallelConfig};
+use crate::memory::kvcache::{KvCache, KvCacheConfig};
 use crate::memory::pool::{PoolConfig, PooledProvider};
 use crate::memory::{LayerProvider, ResidentProvider};
 use crate::metrics::Recorder;
@@ -115,6 +124,14 @@ impl LaunchConfig {
 
     pub fn with_warmup(mut self, on: bool) -> Self {
         self.warmup = on;
+        self
+    }
+
+    /// Incremental decode via the paged K/V cache on/off (on by default;
+    /// off is the re-prefill baseline the differential tests and the
+    /// decode bench compare against).
+    pub fn with_kv_cache(mut self, on: bool) -> Self {
+        self.engine.kv_cache = on;
         self
     }
 }
@@ -290,6 +307,9 @@ struct Shared {
     sessions: Mutex<HashMap<u64, Session>>,
     metrics: Mutex<Recorder>,
     stopping: AtomicBool,
+    /// Incremental decode is live: sessions re-enter as decode steps and
+    /// finished sessions' cache blocks are released by ticketed command.
+    kv_on: bool,
 }
 
 impl Shared {
@@ -298,7 +318,11 @@ impl Shared {
     /// value so the row token vectors move into `Pending` instead of being
     /// cloned per step (§Perf).
     fn publish(&self, fb: FormedBatch, from_batcher: bool) -> RRef {
-        let input = std::sync::Arc::new(fb.to_input());
+        let mut input = fb.to_input();
+        // only batcher sessions seed the cache; direct infer_batch rows
+        // have no session lifecycle and must not leave blocks behind
+        input.cache = self.kv_on && from_batcher && input.phase == Phase::Prefill;
+        let input = std::sync::Arc::new(input);
         let uid = self.tickets.issue();
         let rref = RRef::new(uid);
         self.pending.lock().unwrap().insert(
@@ -307,6 +331,17 @@ impl Shared {
         );
         self.bus.publish(uid, &input);
         rref
+    }
+
+    /// Free finished sessions' K/V blocks on every worker. Ticketed like a
+    /// forward so the release drains through each worker's consistency
+    /// queue *after* the session's final step (completion, stop token, or
+    /// watchdog poison).
+    fn release_sessions(&self, ids: Vec<u64>) {
+        if self.kv_on && !ids.is_empty() {
+            let uid = self.tickets.issue();
+            self.bus.publish_release(uid, ids);
+        }
     }
 }
 
@@ -328,7 +363,9 @@ impl Engine {
     /// (each builds its own PJRT client, shards its layer range, compiles
     /// its variants), then start the dispatcher pool and collector.
     pub fn launch(launch: LaunchConfig) -> anyhow::Result<Engine> {
-        let manifest = Arc::new(Manifest::load(crate::runtime::find_artifacts()?)?);
+        // memoized parse: every engine (tests, benches, servers) shares
+        // one parsed manifest per artifacts path (§Perf: manifest_parse_us)
+        let manifest = Manifest::cached(crate::runtime::find_artifacts()?)?;
         let mut cfg = ModelConfig::preset(&launch.preset)
             .ok_or_else(|| anyhow::anyhow!("unknown preset {}", launch.preset))?;
         if let Some(n) = launch.n_layers {
@@ -342,6 +379,16 @@ impl Engine {
             "no artifacts for preset {}; run `make artifacts`",
             launch.preset
         );
+        // incremental decode goes live only when the whole decode family
+        // is compiled for this (preset, tp); otherwise fall back to the
+        // legacy re-prefill continuation path (old artifacts keep working)
+        let decode_widths = if launch.engine.kv_cache && manifest.has_kv_prefill(&launch.preset, par.tp)
+        {
+            manifest.decode_widths(&launch.preset, par.tp)
+        } else {
+            Vec::new()
+        };
+        let kv_on = !decode_widths.is_empty();
 
         let world = par.world_size();
         let (bus, cmd_rxs) = CommandBus::new(world);
@@ -371,6 +418,7 @@ impl Engine {
                         MemoryMode::Pmep { pool, .. } => pool.lookahead.max(1),
                         _ => 1,
                     },
+                    kv_cache: kv_on,
                 };
                 let args = (
                     ctx,
@@ -421,14 +469,18 @@ impl Engine {
             sessions: Mutex::new(HashMap::new()),
             metrics: Mutex::new(Recorder::new()),
             stopping: AtomicBool::new(false),
+            kv_on,
         });
 
         // ---- batcher ---------------------------------------------------------
-        let batcher = Arc::new(Mutex::new(Batcher::new(
-            manifest.shape_points(&launch.preset),
-            launch.engine.max_batch,
-            Duration::from_micros(launch.engine.batch_timeout_us),
-        )));
+        let batcher = Arc::new(Mutex::new(
+            Batcher::new(
+                manifest.shape_points(&launch.preset),
+                launch.engine.max_batch,
+                Duration::from_micros(launch.engine.batch_timeout_us),
+            )
+            .with_decode_widths(decode_widths),
+        ));
         let max_seq = batcher.lock().unwrap().max_seq();
         let (batch_signal, batch_rx) = std::sync::mpsc::channel::<()>();
 
@@ -528,7 +580,7 @@ impl Engine {
         let max_len = requests.iter().map(Request::len).max().unwrap();
         let bucket = smallest_fitting_bucket(&points, n, max_len)
             .ok_or_else(|| anyhow::anyhow!("no compiled bucket fits ({n}, {max_len})"))?;
-        let fb = FormedBatch { requests, bucket };
+        let fb = FormedBatch { requests, bucket, phase: Phase::Prefill };
         Ok(self.shared.publish(fb, false))
     }
 
@@ -571,10 +623,12 @@ impl Engine {
 
     /// Greedy autoregressive generation: extend `prompt` by up to
     /// `n_tokens`, each step flowing through the shared continuation
-    /// batcher (no KV cache — decode steps re-run prefill and coalesce
-    /// with other live sessions). Blocking wrapper over
-    /// [`Engine::generate_stream`]; generation ends early once the context
-    /// reaches the longest compiled bucket.
+    /// batcher. With the decode artifacts present, continuation steps are
+    /// *incremental*: one position runs against the session's paged K/V
+    /// cache instead of re-running the whole prefix (O(P+N) layer
+    /// executions for N tokens over a P-token prompt, not O(N·(P+N))).
+    /// Blocking wrapper over [`Engine::generate_stream`]; generation ends
+    /// early once the context reaches the longest compiled bucket.
     pub fn generate(&self, prompt: Vec<i32>, n_tokens: usize) -> anyhow::Result<Vec<i32>> {
         if n_tokens == 0 {
             anyhow::ensure!(!prompt.is_empty(), "empty prompt");
@@ -584,12 +638,18 @@ impl Engine {
     }
 
     /// Snapshot of serving metrics, with the process-wide activation-arena
-    /// allocation counters folded in (fresh allocs vs bytes recycled on the
-    /// host hot path — §Perf).
+    /// allocation counters (§Perf) and the paged-KV-cache pressure gauges
+    /// (blocks in use / peak / recycled / slab bytes) folded in.
     pub fn metrics_snapshot(&self) -> Recorder {
         let mut r = self.shared.metrics.lock().unwrap().clone();
         r.record_arena(crate::memory::arena::ArenaPool::global_stats());
+        r.record_kvcache(crate::memory::kvcache::global_stats());
         r
+    }
+
+    /// Is incremental decode live (decode artifacts present + enabled)?
+    pub fn kv_cache_on(&self) -> bool {
+        self.shared.kv_on
     }
 
     pub fn pending_count(&self) -> usize {
@@ -659,6 +719,8 @@ fn collector_loop(
                     let now = Instant::now();
                     // (request, original arrival) pairs to re-enqueue
                     let mut continuations: Vec<(Request, Instant)> = Vec::new();
+                    // finished sessions whose worker-side K/V blocks can go
+                    let mut released: Vec<u64> = Vec::new();
                     // (is_first, latency) per emitted token, recorded after
                     // the sessions lock drops (one metrics lock per batch)
                     let mut token_lats: Vec<(bool, Duration)> = Vec::new();
@@ -676,6 +738,7 @@ fn collector_loop(
                                     sess.gref.finish(Err(anyhow::anyhow!(
                                         "batch {uid} returned no token for row {i}"
                                     )));
+                                    released.push(row.id);
                                     continue;
                                 }
                             };
@@ -694,14 +757,26 @@ fn collector_loop(
                             if finished {
                                 let sess = sessions.remove(&row.id).unwrap();
                                 sess.gref.finish(Ok(()));
+                                released.push(row.id);
                             } else {
                                 // the session's token vector moves on into
-                                // its continuation row — no clone
+                                // its continuation row — no clone. With the
+                                // cache live this is a *decode* step: only
+                                // the newest token runs through the layers.
                                 let mut toks = row.tokens;
                                 toks.push(tok);
-                                continuations.push((Request::new(row.id, toks), sess.arrived));
+                                let req = if shared.kv_on {
+                                    Request::decode(row.id, toks)
+                                } else {
+                                    Request::new(row.id, toks)
+                                };
+                                continuations.push((req, sess.arrived));
                             }
                         }
+                        // publish while the sessions lock is held: shutdown's
+                        // drain must not observe an empty table before the
+                        // release command is on every worker's queue
+                        shared.release_sessions(released);
                     }
                     if !token_lats.is_empty() {
                         let mut m = shared.metrics.lock().unwrap();
@@ -727,12 +802,16 @@ fn collector_loop(
             }
             Err(e) => {
                 if from_batcher {
+                    let mut released = Vec::new();
                     let mut sessions = shared.sessions.lock().unwrap();
                     for row in &rows {
                         if let Some(sess) = sessions.remove(&row.id) {
                             sess.gref.finish(Err(anyhow::anyhow!("{e}")));
+                            released.push(row.id);
                         }
                     }
+                    // under the lock — see the Ok branch
+                    shared.release_sessions(released);
                 }
             }
         }
@@ -779,12 +858,19 @@ fn expire_stale(shared: &Shared, deadline: Duration) -> usize {
              (a worker error likely dropped the activation)"
         );
         if p.from_batcher {
+            let mut released = Vec::new();
             let mut sessions = shared.sessions.lock().unwrap();
             for row in &p.rows {
                 if let Some(sess) = sessions.remove(&row.id) {
                     sess.gref.finish(Err(anyhow::anyhow!("{msg}")));
+                    released.push(row.id);
                 }
             }
+            // poisoned sessions must not leak their cache blocks: workers
+            // that survive still hold them until this ticketed release,
+            // published under the sessions lock so shutdown's drain can't
+            // race past an un-published release
+            shared.release_sessions(released);
         }
         p.rref.fulfil(Err(anyhow::anyhow!("{msg}")));
     }
@@ -839,9 +925,23 @@ fn build_worker(
             .filter(|v| v.tp == ctx.par.tp)
             .map(|v| v.t_bucket)
             .collect();
+        let prefill_kinds = [
+            "embed",
+            "layer_full",
+            "layer_full_kv",
+            "logits",
+            "attn_shard",
+            "attn_shard_kv",
+            "mlp_shard",
+        ];
         for (b, s) in manifest.shape_points(&ctx.preset) {
-            for kind in ["embed", "layer_full", "logits", "attn_shard", "mlp_shard"] {
-                let name = Manifest::name_of(&ctx.preset, kind, b, s, if kind == "attn_shard" || kind == "mlp_shard" { ctx.par.tp } else { 1 }, 0);
+            for kind in prefill_kinds {
+                let tp = if kind.starts_with("attn_shard") || kind == "mlp_shard" {
+                    ctx.par.tp
+                } else {
+                    1
+                };
+                let name = Manifest::name_of(&ctx.preset, kind, b, s, tp, 0);
                 if let Ok(v) = manifest.get(&name) {
                     let _ = device.load(&manifest, v);
                 }
@@ -857,7 +957,34 @@ fn build_worker(
                 }
             }
         }
+        if ctx.kv_cache {
+            for w in manifest.decode_widths(&ctx.preset, ctx.par.tp) {
+                for (kind, seq) in [
+                    ("embed_decode", 0),
+                    ("layer_full_decode", 0),
+                    ("attn_shard_decode", 0),
+                    ("mlp_shard", 1),
+                    ("logits", 1),
+                ] {
+                    let tp = if kind.starts_with("attn_shard") || kind == "mlp_shard" {
+                        ctx.par.tp
+                    } else {
+                        1
+                    };
+                    let name = Manifest::name_of(&ctx.preset, kind, w, seq, tp, 0);
+                    if let Ok(v) = manifest.get(&name) {
+                        let _ = device.load(&manifest, v);
+                    }
+                }
+            }
+        }
     }
+
+    // paged per-session K/V storage for this worker's layer shard: width
+    // is hidden/tp (the shard's K or V row), 8 positions per block
+    let kv = ctx
+        .kv_cache
+        .then(|| KvCache::new(KvCacheConfig::new(8, ctx.layers.len(), cfg.hidden / ctx.par.tp)));
 
     Ok(Worker {
         ctx,
@@ -873,6 +1000,7 @@ fn build_worker(
         weight_lits: Default::default(),
         embed_lits: None,
         logits_lits: None,
+        kv,
     })
 }
 
@@ -921,6 +1049,7 @@ mod tests {
             sessions: Mutex::new(HashMap::new()),
             metrics: Mutex::new(Recorder::new()),
             stopping: AtomicBool::new(false),
+            kv_on: true,
         }
     }
 

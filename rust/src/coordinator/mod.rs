@@ -22,4 +22,4 @@ pub mod worker;
 pub use batcher::{smallest_fitting_bucket, Batcher, Request};
 pub use consistency::{ConsistencyQueue, TicketCounter};
 pub use engine::{Engine, GenRef, GenRequest, LaunchConfig, MemoryMode, TokenRef};
-pub use rpc::{BatchInput, BatchOutput, RRef};
+pub use rpc::{BatchInput, BatchOutput, Phase, RRef};

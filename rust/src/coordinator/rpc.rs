@@ -16,23 +16,43 @@ use std::sync::{Arc, Condvar, Mutex};
 
 use std::time::Instant;
 
+/// Which kind of engine step a batch row is (incremental decode): a
+/// prefill runs the whole padded prompt through the layers; a decode runs
+/// a single position against each session's paged K/V cache.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Phase {
+    #[default]
+    Prefill,
+    Decode,
+}
+
 /// A batched inference task, as published to workers.
 #[derive(Clone, Debug)]
 pub struct BatchInput {
-    /// Token ids (batch, seq) — consumed by stage 0 only.
+    /// Token ids — (batch, seq) for prefill (consumed by stage 0 only);
+    /// (batch, 1) holding each session's newest token for decode.
     pub ids: IntTensor,
     /// Per-sequence valid lengths (the DRCE metadata the engine binds to
-    /// the command, §4.3).
+    /// the command, §4.3). For decode rows this is the *total* session
+    /// length including the token being decoded — it exceeds `seq` (1).
     pub valid_lens: Vec<usize>,
     /// Per-row session ids (iteration-level scheduling metadata): which
     /// generation session each batch row belongs to, `u64::MAX` for pad
-    /// rows. Worker-side observability — logs and debugging can attribute
-    /// a row to its session; the engine collector routes tokens through
-    /// its own pending-row table, not this field.
+    /// rows. The KV-cache path keys each worker's paged cache by these;
+    /// the engine collector still routes tokens through its own
+    /// pending-row table.
     pub req_ids: Vec<u64>,
-    /// Padded shape point this batch was bucketed into.
+    /// Padded shape point this batch was bucketed into. Decode buckets
+    /// are width-only: `seq == 1`.
     pub batch: usize,
     pub seq: usize,
+    /// Prefill or single-position decode.
+    pub phase: Phase,
+    /// Prefill only: seed each row's session K/V cache (the `*_kv`
+    /// variants) so continuation steps can decode incrementally. Set by
+    /// the engine for batcher sessions when the cache is enabled; direct
+    /// `infer_batch` batches never touch the cache.
+    pub cache: bool,
 }
 
 impl BatchInput {
@@ -57,6 +77,11 @@ pub enum Command {
     /// shared, not cloned per worker (§Perf: publish is O(world) sends,
     /// not O(world) tensor copies).
     Forward { uid: u64, input: Arc<BatchInput> },
+    /// Free the listed sessions' K/V cache blocks. Ticketed like
+    /// `Forward` and processed through the same consistency queue, so a
+    /// release can never overtake a still-queued decode step of the same
+    /// session on a lagging worker.
+    Release { uid: u64, ids: Arc<Vec<u64>> },
     /// Drain and exit the worker loop.
     Shutdown,
 }
@@ -85,6 +110,16 @@ impl CommandBus {
             // ignore send errors during shutdown races; the engine joins
             // workers before dropping the bus in orderly teardown
             let _ = s.send(Command::Forward { uid, input: input.clone() });
+        }
+    }
+
+    /// Publish a cache-release for finished sessions to every worker.
+    /// Consumes a ticket from the same counter as `publish` — tickets must
+    /// stay gap-free for the consistency queues to drain.
+    pub fn publish_release(&self, uid: u64, ids: Vec<u64>) {
+        let ids = Arc::new(ids);
+        for s in &self.senders {
+            let _ = s.send(Command::Release { uid, ids: ids.clone() });
         }
     }
 
@@ -167,6 +202,8 @@ mod tests {
             req_ids: vec![0],
             batch: 1,
             seq: 4,
+            phase: Phase::Prefill,
+            cache: false,
         }
     }
 
@@ -181,6 +218,21 @@ mod tests {
                     assert_eq!(input.valid_lens, vec![3]);
                 }
                 _ => panic!("expected Forward"),
+            }
+        }
+    }
+
+    #[test]
+    fn release_reaches_all_workers() {
+        let (bus, rxs) = CommandBus::new(2);
+        bus.publish_release(3, vec![7, 9]);
+        for rx in &rxs {
+            match rx.recv().unwrap() {
+                Command::Release { uid, ids } => {
+                    assert_eq!(uid, 3);
+                    assert_eq!(*ids, vec![7, 9]);
+                }
+                _ => panic!("expected Release"),
             }
         }
     }

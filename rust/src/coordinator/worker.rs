@@ -6,14 +6,15 @@
 //! execution (§4.2).
 
 use super::consistency::ConsistencyQueue;
-use super::rpc::{BatchInput, BatchOutput, Command};
+use super::rpc::{BatchInput, BatchOutput, Command, Phase};
 use crate::comm::channel::Endpoint;
 use crate::comm::collective::{ring_allreduce, ChunkMsg};
 use crate::config::{ModelConfig, ParallelConfig};
+use crate::memory::kvcache::KvCache;
 use crate::memory::LayerProvider;
 use crate::runtime::{valid_len_arg, Device, Manifest};
 use crate::tensor::drce::{self, DrceMaps};
-use crate::tensor::{Tensor, Value};
+use crate::tensor::{IntTensor, Tensor, Value};
 use std::collections::HashMap;
 use std::ops::Range;
 use std::rc::Rc;
@@ -43,6 +44,9 @@ pub struct WorkerCtx {
     pub consistency: bool,
     /// Prefetch lookahead hint passed to the layer provider.
     pub lookahead: usize,
+    /// Incremental decode via the paged K/V cache (requires the decode
+    /// artifacts; the engine resolves availability at launch).
+    pub kv_cache: bool,
 }
 
 impl WorkerCtx {
@@ -86,6 +90,10 @@ pub struct Worker {
     pub weight_lits: HashMap<(usize, WeightKind), (u64, Rc<Vec<xla::Literal>>)>,
     pub embed_lits: Option<Vec<xla::Literal>>,
     pub logits_lits: Option<Vec<xla::Literal>>,
+    /// Paged per-session K/V storage for this worker's layers (`None`
+    /// when incremental decode is off or the artifacts lack the decode
+    /// variants). Sessions are freed by ticketed `Command::Release`.
+    pub kv: Option<KvCache>,
 }
 
 /// Which argument tail of a layer.
@@ -103,26 +111,43 @@ enum Act {
     Packed(Tensor, DrceMaps),
 }
 
+/// A ticketed unit of worker work: a forward pass or a cache release.
+/// Both flow through the consistency queue so releases can never overtake
+/// a still-queued decode step of the same session.
+enum Work {
+    Forward(Arc<BatchInput>),
+    Release(Arc<Vec<u64>>),
+}
+
 impl Worker {
     /// Main loop: drain commands through the consistency queue, execute in
     /// ticket order, exit on Shutdown.
     pub fn run(mut self) {
-        let mut queue: ConsistencyQueue<(u64, std::sync::Arc<BatchInput>)> =
-            ConsistencyQueue::new(self.ctx.consistency);
+        let mut queue: ConsistencyQueue<(u64, Work)> = ConsistencyQueue::new(self.ctx.consistency);
         let mut shutting_down = false;
         loop {
-            if let Some((uid, input)) = queue.pop_ready() {
+            if let Some((uid, work)) = queue.pop_ready() {
                 // With the queue disabled (ablation), pop order is arrival
                 // order, which can differ across workers — exactly the
                 // mispairing hazard §4.2 describes.
-                self.execute_logged(uid, &input);
+                match work {
+                    Work::Forward(input) => self.execute_logged(uid, &input),
+                    Work::Release(ids) => {
+                        if let Some(kv) = &mut self.kv {
+                            for &id in ids.iter() {
+                                kv.free(id);
+                            }
+                        }
+                    }
+                }
                 continue;
             }
             if shutting_down {
                 break;
             }
             match self.cmd_rx.recv() {
-                Ok(Command::Forward { uid, input }) => queue.push(uid, (uid, input)),
+                Ok(Command::Forward { uid, input }) => queue.push(uid, (uid, Work::Forward(input))),
+                Ok(Command::Release { uid, ids }) => queue.push(uid, (uid, Work::Release(ids))),
                 Ok(Command::Shutdown) | Err(_) => shutting_down = true,
             }
         }
@@ -154,10 +179,17 @@ impl Worker {
     /// Execute one batch through this worker's stage. Returns the reply if
     /// this worker is the replier.
     fn execute(&mut self, uid: u64, input: &BatchInput) -> anyhow::Result<Option<BatchOutput>> {
+        if input.phase == Phase::Decode {
+            return self.execute_decode(uid, input);
+        }
         let (b, s) = (input.batch, input.seq);
         let h = self.ctx.cfg.hidden;
         let valid = valid_len_arg(&input.valid_lens);
-        let drce_maps = self.plan_drce(input)?;
+        // cache-seeding prefill runs the padded `*_kv` variants (they
+        // can't emit K/V rows from the packed layout, so DRCE steps aside
+        // for generation prefills)
+        let store_kv = input.cache && self.kv.is_some();
+        let drce_maps = if store_kv { None } else { self.plan_drce(input)? };
 
         // ---- acquire the stage input ------------------------------------
         let mut act = if self.ctx.is_first_stage() {
@@ -194,8 +226,11 @@ impl Worker {
             for ahead in 1..=self.ctx.lookahead.max(1) {
                 self.provider.prefetch(local + ahead);
             }
-            act = self.run_layer(local, act, &valid, input)?;
+            act = self.run_layer(local, act, &valid, input, store_kv)?;
             self.provider.release(local);
+        }
+        if store_kv {
+            self.kv_advance(input);
         }
 
         // ---- hand off or reply --------------------------------------------
@@ -222,6 +257,77 @@ impl Worker {
         Ok(Some(BatchOutput { uid, next_tokens, logits }))
     }
 
+    /// One decode engine step: embed the newest token per row at its
+    /// position, run every local layer as a single-position attention over
+    /// the session's cached K/V (appending the new row), and project the
+    /// (b, 1, v) logits. The whole prefix never re-enters the linears —
+    /// the O(N·(P+N)) → O(P+N) win of incremental decode.
+    fn execute_decode(
+        &mut self,
+        uid: u64,
+        input: &BatchInput,
+    ) -> anyhow::Result<Option<BatchOutput>> {
+        anyhow::ensure!(self.kv.is_some(), "decode batch {uid} but the KV cache is disabled");
+        anyhow::ensure!(input.seq == 1, "decode batch {uid} has seq {}", input.seq);
+        let valid = valid_len_arg(&input.valid_lens);
+
+        // ---- acquire the stage input ------------------------------------
+        let mut x = if self.ctx.is_first_stage() {
+            let v = self.variant("embed_decode", input, 0)?;
+            if self.embed_lits.is_none() {
+                let w = self.embed_weights.as_ref().expect("stage 0 has embed weights");
+                self.embed_lits = Some(crate::runtime::pjrt::prepare(w)?);
+            }
+            let pos: Vec<i32> = input.valid_lens.iter().map(|&l| (l.max(1) - 1) as i32).collect();
+            let acts = [
+                Value::I32(input.ids.clone()),
+                Value::I32(IntTensor::from_vec(pos)),
+            ];
+            self.device
+                .execute_prepared(&self.manifest, &v, &acts, self.embed_lits.as_ref().unwrap())?
+                .remove(0)
+        } else {
+            let prev = self.ctx.par.device_of(self.ctx.stage - 1, self.ctx.tp_rank);
+            let (got_uid, t) = self.act_ep.recv(prev);
+            if self.ctx.consistency {
+                anyhow::ensure!(
+                    got_uid == uid,
+                    "stage {} received activation for batch {got_uid}, expected {uid}",
+                    self.ctx.stage
+                );
+            }
+            t
+        };
+
+        // ---- run my layers ----------------------------------------------
+        let first = self.ctx.layers.start;
+        self.provider.prefetch(0);
+        for layer in self.ctx.layers.clone() {
+            let local = layer - first;
+            for ahead in 1..=self.ctx.lookahead.max(1) {
+                self.provider.prefetch(local + ahead);
+            }
+            x = self.run_layer_decode(local, x, &valid, input)?;
+            self.provider.release(local);
+        }
+        self.kv_advance(input);
+
+        // ---- hand off or reply --------------------------------------------
+        if !self.ctx.is_last_stage() {
+            let next = self.ctx.par.device_of(self.ctx.stage + 1, self.ctx.tp_rank);
+            self.act_ep.send(next, (uid, x));
+            return Ok(None);
+        }
+        if !self.ctx.is_replier() {
+            return Ok(None);
+        }
+        // (b, 1) logits: argmax reads position 0 of every row (the clamp
+        // in argmax_next_tokens maps any valid_len to the only position)
+        let logits = self.run_logits(x, input)?;
+        let next_tokens = argmax_next_tokens(&logits, &input.valid_lens);
+        Ok(Some(BatchOutput { uid, next_tokens, logits }))
+    }
+
     /// Decide whether this batch runs packed, identically on all workers:
     /// DRCE is on, a (b, s, tp) bucket exists, and the valid tokens fit.
     fn plan_drce(&self, input: &BatchInput) -> anyhow::Result<Option<DrceMaps>> {
@@ -243,7 +349,7 @@ impl Worker {
     }
 
     fn variant(&self, kind: &str, input: &BatchInput, t_bucket: usize) -> anyhow::Result<crate::runtime::VariantMeta> {
-        let tp = if kind == "layer_full" || kind == "embed" || kind == "logits" {
+        let tp = if kind.starts_with("layer_full") || kind.starts_with("embed") || kind == "logits" {
             1
         } else {
             self.ctx.par.tp
@@ -299,16 +405,31 @@ impl Worker {
     }
 
     /// One transformer layer: fused single-device, TP-sharded, or DRCE.
-    fn run_layer(&mut self, local: usize, act: Act, valid: &Value, input: &BatchInput) -> anyhow::Result<Act> {
+    /// With `store_kv` the padded variants run their `*_kv` twins and the
+    /// emitted K/V rows seed each real row's session cache.
+    fn run_layer(
+        &mut self,
+        local: usize,
+        act: Act,
+        valid: &Value,
+        input: &BatchInput,
+        store_kv: bool,
+    ) -> anyhow::Result<Act> {
         let (b, s) = (input.batch, input.seq);
         let h = self.ctx.cfg.hidden;
         let tp = self.ctx.par.tp;
         match act {
             Act::Padded(x) if tp == 1 => {
-                let v = self.variant("layer_full", input, 0)?;
+                let kind = if store_kv { "layer_full_kv" } else { "layer_full" };
+                let v = self.variant(kind, input, 0)?;
                 let lits = self.layer_lits(local, WeightKind::All)?;
                 let acts = [Value::F32(x), valid.clone()];
-                let y = self.device.execute_prepared(&self.manifest, &v, &acts, &lits)?.remove(0);
+                let mut out = self.device.execute_prepared(&self.manifest, &v, &acts, &lits)?;
+                let y = out.remove(0);
+                if store_kv {
+                    let (k, vv) = (out.remove(0), out.remove(0));
+                    self.kv_store_prefill(local, input, &k, &vv);
+                }
                 Ok(Act::Padded(y))
             }
             Act::Padded(mut x) => {
@@ -317,10 +438,16 @@ impl Worker {
                 // share its storage once: the clone below is an Arc bump,
                 // not a data copy (§Perf).
                 x.make_shared();
-                let v = self.variant("attn_shard", input, 0)?;
+                let kind = if store_kv { "attn_shard_kv" } else { "attn_shard" };
+                let v = self.variant(kind, input, 0)?;
                 let lits = self.layer_lits(local, WeightKind::Attn)?;
                 let acts = [Value::F32(x.clone()), valid.clone()];
-                let partial = self.device.execute_prepared(&self.manifest, &v, &acts, &lits)?.remove(0);
+                let mut out = self.device.execute_prepared(&self.manifest, &v, &acts, &lits)?;
+                let partial = out.remove(0);
+                if store_kv {
+                    let (k, vv) = (out.remove(0), out.remove(0));
+                    self.kv_store_prefill(local, input, &k, &vv);
+                }
                 let attn_sum = self.allreduce(partial);
                 let mut r = x.add(&attn_sum); // arena scratch
                 r.make_shared();
@@ -353,6 +480,125 @@ impl Worker {
                 let partial = self.device.execute_prepared(&self.manifest, &v, &acts, &lits)?.remove(0);
                 let mlp_sum = self.allreduce(partial);
                 Ok(Act::Packed(r.add(&mlp_sum), maps))
+            }
+        }
+    }
+
+    /// One transformer layer of a decode step: single-position attention
+    /// over the gathered cache, then (under TP) the usual all-reduce +
+    /// residual + `mlp_shard` with rows = batch.
+    fn run_layer_decode(
+        &mut self,
+        local: usize,
+        x: Tensor,
+        valid: &Value,
+        input: &BatchInput,
+    ) -> anyhow::Result<Tensor> {
+        let b = input.batch;
+        let h = self.ctx.cfg.hidden;
+        let tp = self.ctx.par.tp;
+        let (kc, vc) = self.kv_staging(local, input)?;
+        if tp == 1 {
+            let v = self.variant("layer_full_decode", input, 0)?;
+            let lits = self.layer_lits(local, WeightKind::All)?;
+            let acts = [Value::F32(x), valid.clone(), Value::F32(kc), Value::F32(vc)];
+            let mut out = self.device.execute_prepared(&self.manifest, &v, &acts, &lits)?;
+            let y = out.remove(0);
+            let (k_new, v_new) = (out.remove(0), out.remove(0));
+            self.kv_write_new(local, input, &k_new, &v_new);
+            return Ok(y);
+        }
+        let mut x = x;
+        x.make_shared();
+        let v = self.variant("attn_shard_decode", input, 0)?;
+        let lits = self.layer_lits(local, WeightKind::Attn)?;
+        let acts = [Value::F32(x.clone()), valid.clone(), Value::F32(kc), Value::F32(vc)];
+        let mut out = self.device.execute_prepared(&self.manifest, &v, &acts, &lits)?;
+        let partial = out.remove(0);
+        let (k_new, v_new) = (out.remove(0), out.remove(0));
+        self.kv_write_new(local, input, &k_new, &v_new);
+        let attn_sum = self.allreduce(partial);
+        let mut r = x.add(&attn_sum); // arena scratch
+        r.make_shared();
+        // decode MLP rows = batch (variant name mlp_shard_tp{tp}_r{b})
+        let v = self.variant("mlp_shard", input, 0)?;
+        let lits = self.layer_lits(local, WeightKind::Mlp)?;
+        let r2 = r.clone().reshape(&[b, h]);
+        let partial = self
+            .device
+            .execute_prepared(&self.manifest, &v, &[Value::F32(r2)], &lits)?
+            .remove(0);
+        let mlp_sum = self.allreduce(partial).reshape(&[b, 1, h]);
+        Ok(r.add(&mlp_sum))
+    }
+
+    /// Gather each real row's cached K/V for `local` into zeroed staging
+    /// tensors of shape (b, max_seq, h/tp). Zeroing matters: masked score
+    /// slots must hold finite small values, not recycled-arena garbage
+    /// that could dominate the softmax max.
+    fn kv_staging(&mut self, local: usize, input: &BatchInput) -> anyhow::Result<(Tensor, Tensor)> {
+        let b = input.batch;
+        let cap = self.ctx.cfg.max_seq;
+        let w = self.ctx.cfg.hidden / self.ctx.par.tp;
+        let mut kc = Tensor::pooled_zeros(&[b, cap, w]);
+        let mut vc = Tensor::pooled_zeros(&[b, cap, w]);
+        let kv = self.kv.as_ref().expect("kv_staging without a cache");
+        for (i, (&id, &len)) in input.req_ids.iter().zip(&input.valid_lens).enumerate() {
+            if id == u64::MAX {
+                continue; // pad row: all-zero cache, fully masked anyway
+            }
+            let dst_k = &mut kc.data[i * cap * w..(i + 1) * cap * w];
+            let dst_v = &mut vc.data[i * cap * w..(i + 1) * cap * w];
+            let got = kv.gather(id, local, dst_k, dst_v);
+            anyhow::ensure!(
+                got + 1 == len,
+                "session {id} layer {local}: cache holds {got} rows, decode expects {}",
+                len - 1
+            );
+        }
+        Ok((kc, vc))
+    }
+
+    /// Append each real row's new K/V row (shape (b, 1, w)) at position
+    /// `valid_len - 1`.
+    fn kv_write_new(&mut self, local: usize, input: &BatchInput, k_new: &Tensor, v_new: &Tensor) {
+        let w = self.ctx.cfg.hidden / self.ctx.par.tp;
+        let kv = self.kv.as_mut().expect("kv_write_new without a cache");
+        for (i, (&id, &len)) in input.req_ids.iter().zip(&input.valid_lens).enumerate() {
+            if id == u64::MAX {
+                continue;
+            }
+            let pos = len - 1;
+            let row = i * w..(i + 1) * w;
+            kv.write_row(id, local, pos, &k_new.data[row.clone()], &v_new.data[row]);
+        }
+    }
+
+    /// Seed the cache from a prefill `*_kv` output: rows 0..valid_len of
+    /// each real batch row, for layer `local`. K/V are (b, s, w); a row's
+    /// positions are contiguous, so the store is per-(block, layer)
+    /// memcpys via [`KvCache::write_prefix`], mirroring `gather`.
+    fn kv_store_prefill(&mut self, local: usize, input: &BatchInput, k: &Tensor, v: &Tensor) {
+        let s = input.seq;
+        let w = self.ctx.cfg.hidden / self.ctx.par.tp;
+        let kv = self.kv.as_mut().expect("kv_store_prefill without a cache");
+        for (i, (&id, &len)) in input.req_ids.iter().zip(&input.valid_lens).enumerate() {
+            if id == u64::MAX {
+                continue;
+            }
+            let row = i * s * w..(i * s + len) * w;
+            kv.write_prefix(id, local, len, &k.data[row.clone()], &v.data[row]);
+        }
+    }
+
+    /// Publish every real row's new cache length after all local layers
+    /// ran (prefill: the prompt length; decode: one more position).
+    fn kv_advance(&mut self, input: &BatchInput) {
+        if let Some(kv) = self.kv.as_mut() {
+            for (&id, &len) in input.req_ids.iter().zip(&input.valid_lens) {
+                if id != u64::MAX {
+                    kv.advance(id, len);
+                }
             }
         }
     }
@@ -402,6 +648,7 @@ mod tests {
             drce: false,
             consistency: true,
             lookahead: 1,
+            kv_cache: false,
         };
         assert_eq!(ctx.device_id(), 2);
         assert!(ctx.is_last_stage());

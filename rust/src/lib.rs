@@ -11,7 +11,10 @@
 //!   techniques: non-blocking pipeline parallelism
 //!   ([`coordinator::pipeline`]), distributed redundant computation
 //!   elimination ([`tensor::drce`] + the `drce_attn_shard` artifacts), and
-//!   peer memory pooling ([`memory`]).
+//!   peer memory pooling ([`memory`]) — plus incremental decode through a
+//!   paged per-session K/V cache ([`memory::kvcache`] + the `*_decode`
+//!   artifacts), which removes per-token prefill recompute from the
+//!   generation hot path.
 //! * **L2 (python/compile/model.py)** — the transformer compute graph in
 //!   JAX, AOT-lowered to HLO text artifacts loaded by [`runtime`].
 //! * **L1 (python/compile/kernels/)** — Pallas kernels (fused attention,

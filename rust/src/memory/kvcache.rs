@@ -1,0 +1,483 @@
+//! Paged per-session K/V cache: the storage half of incremental decode.
+//!
+//! Generation sessions keep the K/V rows of every processed position so a
+//! decode step runs *one* position through the linears instead of
+//! re-running the whole prefix (the paper's redundant-computation-
+//! elimination idea, §4.2.2, applied along the time axis). Storage is
+//! **paged** in the spirit of the paper's memory-pooling technique (§4.4):
+//! one worker-local slab is carved into fixed-size *position blocks*; each
+//! session holds a block table mapping logical position-block → physical
+//! block, so thousands of concurrent sessions of wildly different lengths
+//! share the slab with at most `block_positions - 1` wasted rows each and
+//! zero copying on growth.
+//!
+//! Block layout (one block, `layers` local layers, K and V planes):
+//!
+//! ```text
+//! [layer 0 | K rows][layer 0 | V rows][layer 1 | K rows]...
+//!            each plane: block_positions × width f32
+//! ```
+//!
+//! so the (layer, K/V) plane of a block is contiguous and `gather` into
+//! the per-step staging tensor is one `copy_from_slice` per (block,
+//! layer). Freed blocks go to a free list and are recycled before the
+//! slab grows; alloc/recycle/peak counters are mirrored into process-wide
+//! atomics surfaced through `metrics::Recorder` (like the activation
+//! arena's, §Perf).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Process-wide counters, aggregated across every worker's cache.
+/// `blocks_in_use` is a gauge; the rest are monotonic.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct KvStats {
+    /// Blocks currently backing live sessions (all workers).
+    pub blocks_in_use: u64,
+    /// High-water mark of `blocks_in_use`.
+    pub blocks_peak: u64,
+    /// Block checkouts served from a free list instead of slab growth.
+    pub blocks_recycled: u64,
+    /// Blocks newly carved by growing a slab.
+    pub blocks_grown: u64,
+    /// Total slab bytes reserved across workers.
+    pub slab_bytes: u64,
+    /// Sessions currently holding cache entries.
+    pub sessions: u64,
+}
+
+static G_IN_USE: AtomicU64 = AtomicU64::new(0);
+static G_PEAK: AtomicU64 = AtomicU64::new(0);
+static G_RECYCLED: AtomicU64 = AtomicU64::new(0);
+static G_GROWN: AtomicU64 = AtomicU64::new(0);
+static G_SLAB_BYTES: AtomicU64 = AtomicU64::new(0);
+static G_SESSIONS: AtomicU64 = AtomicU64::new(0);
+
+/// Process-wide snapshot (what `Engine::metrics_snapshot` folds into the
+/// `Recorder`). Workers update the atomics as they allocate and free.
+pub fn global_stats() -> KvStats {
+    KvStats {
+        blocks_in_use: G_IN_USE.load(Ordering::Relaxed),
+        blocks_peak: G_PEAK.load(Ordering::Relaxed),
+        blocks_recycled: G_RECYCLED.load(Ordering::Relaxed),
+        blocks_grown: G_GROWN.load(Ordering::Relaxed),
+        slab_bytes: G_SLAB_BYTES.load(Ordering::Relaxed),
+        sessions: G_SESSIONS.load(Ordering::Relaxed),
+    }
+}
+
+fn note_in_use_delta(delta: i64) {
+    let now = if delta >= 0 {
+        G_IN_USE.fetch_add(delta as u64, Ordering::Relaxed) + delta as u64
+    } else {
+        G_IN_USE.fetch_sub((-delta) as u64, Ordering::Relaxed) - (-delta) as u64
+    };
+    G_PEAK.fetch_max(now, Ordering::Relaxed);
+}
+
+/// Geometry of one worker's cache.
+#[derive(Clone, Copy, Debug)]
+pub struct KvCacheConfig {
+    /// Positions per block (the paging granularity).
+    pub block_positions: usize,
+    /// Local transformer layers this worker executes.
+    pub layers: usize,
+    /// Width of one K (or V) row in f32 — `hidden / tp`.
+    pub width: usize,
+    /// Blocks added per slab growth (amortizes allocation).
+    pub grow_blocks: usize,
+}
+
+impl KvCacheConfig {
+    pub fn new(block_positions: usize, layers: usize, width: usize) -> KvCacheConfig {
+        assert!(block_positions >= 1 && layers >= 1 && width >= 1);
+        KvCacheConfig { block_positions, layers, width, grow_blocks: 64 }
+    }
+
+    /// f32 elements in one block: layers × {K,V} × positions × width.
+    pub fn block_elems(&self) -> usize {
+        self.layers * 2 * self.block_positions * self.width
+    }
+}
+
+/// One session's cache state: its block table and filled length.
+#[derive(Debug, Default)]
+struct SessionKv {
+    /// Logical position-block b lives in physical block `blocks[b]`.
+    blocks: Vec<u32>,
+    /// Positions 0..len hold valid K/V rows (all layers).
+    len: usize,
+}
+
+/// Worker-local paged K/V store. Single-threaded by construction (it lives
+/// inside a `Worker`); cross-worker visibility is via the global counters.
+pub struct KvCache {
+    cfg: KvCacheConfig,
+    slab: Vec<f32>,
+    free_list: Vec<u32>,
+    sessions: HashMap<u64, SessionKv>,
+    n_blocks: usize,
+}
+
+impl KvCache {
+    pub fn new(cfg: KvCacheConfig) -> KvCache {
+        KvCache {
+            cfg,
+            slab: Vec::new(),
+            free_list: Vec::new(),
+            sessions: HashMap::new(),
+            n_blocks: 0,
+        }
+    }
+
+    pub fn config(&self) -> &KvCacheConfig {
+        &self.cfg
+    }
+
+    /// Blocks currently reserved by live sessions (this worker).
+    pub fn blocks_in_use(&self) -> usize {
+        self.n_blocks - self.free_list.len()
+    }
+
+    /// Total blocks ever carved into this worker's slab.
+    pub fn capacity_blocks(&self) -> usize {
+        self.n_blocks
+    }
+
+    pub fn session_count(&self) -> usize {
+        self.sessions.len()
+    }
+
+    /// Positions filled for a session (`None` if it has no cache entry).
+    pub fn len(&self, session: u64) -> Option<usize> {
+        self.sessions.get(&session).map(|s| s.len)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sessions.is_empty()
+    }
+
+    fn checkout_block(&mut self) -> u32 {
+        if let Some(b) = self.free_list.pop() {
+            G_RECYCLED.fetch_add(1, Ordering::Relaxed);
+            note_in_use_delta(1);
+            return b;
+        }
+        // grow the slab by a chunk of blocks; existing indices stay valid
+        let first = self.n_blocks as u32;
+        let add = self.cfg.grow_blocks.max(1);
+        self.slab.resize((self.n_blocks + add) * self.cfg.block_elems(), 0.0);
+        self.n_blocks += add;
+        G_GROWN.fetch_add(add as u64, Ordering::Relaxed);
+        G_SLAB_BYTES.fetch_add((add * self.cfg.block_elems() * 4) as u64, Ordering::Relaxed);
+        // newly carved blocks beyond the checked-out one go to the free list
+        for b in (first + 1)..(self.n_blocks as u32) {
+            self.free_list.push(b);
+        }
+        note_in_use_delta(1);
+        first
+    }
+
+    /// Ensure `session` has blocks covering positions `0..=pos`.
+    fn ensure(&mut self, session: u64, pos: usize) {
+        if !self.sessions.contains_key(&session) {
+            G_SESSIONS.fetch_add(1, Ordering::Relaxed);
+            self.sessions.insert(session, SessionKv::default());
+        }
+        let need = pos / self.cfg.block_positions + 1;
+        let have = self.sessions[&session].blocks.len();
+        for _ in have..need {
+            let b = self.checkout_block();
+            self.sessions.get_mut(&session).unwrap().blocks.push(b);
+        }
+    }
+
+    /// Offset of the (block-local) K plane of `(physical block, layer)`.
+    fn plane(&self, block: u32, layer: usize, v_plane: bool) -> usize {
+        let bp = self.cfg.block_positions;
+        let w = self.cfg.width;
+        block as usize * self.cfg.block_elems() + (layer * 2 + v_plane as usize) * bp * w
+    }
+
+    /// Write one position's K and V rows for one layer. Allocates blocks as
+    /// needed; `advance` publishes the position once every layer wrote it.
+    pub fn write_row(&mut self, session: u64, layer: usize, pos: usize, k: &[f32], v: &[f32]) {
+        let w = self.cfg.width;
+        assert_eq!(k.len(), w, "k row width mismatch");
+        assert_eq!(v.len(), w, "v row width mismatch");
+        assert!(layer < self.cfg.layers, "layer {layer} out of range");
+        self.ensure(session, pos);
+        let bp = self.cfg.block_positions;
+        let block = self.sessions[&session].blocks[pos / bp];
+        let slot = pos % bp;
+        let k_off = self.plane(block, layer, false) + slot * w;
+        self.slab[k_off..k_off + w].copy_from_slice(k);
+        let v_off = self.plane(block, layer, true) + slot * w;
+        self.slab[v_off..v_off + w].copy_from_slice(v);
+    }
+
+    /// Write positions `0..len` of one layer in bulk (prefill seeding):
+    /// `k`/`v` hold `len` contiguous rows. The mirror of [`KvCache::gather`]
+    /// — one `copy_from_slice` per (block, layer) plane instead of
+    /// per-position lookups.
+    pub fn write_prefix(&mut self, session: u64, layer: usize, len: usize, k: &[f32], v: &[f32]) {
+        let w = self.cfg.width;
+        assert!(k.len() >= len * w && v.len() >= len * w, "prefix rows too short");
+        assert!(layer < self.cfg.layers, "layer {layer} out of range");
+        if len == 0 {
+            return;
+        }
+        self.ensure(session, len - 1);
+        let bp = self.cfg.block_positions;
+        let mut done = 0usize;
+        for bi in 0..(len + bp - 1) / bp {
+            let block = self.sessions[&session].blocks[bi];
+            let take = (len - done).min(bp);
+            let k_off = self.plane(block, layer, false);
+            self.slab[k_off..k_off + take * w].copy_from_slice(&k[done * w..(done + take) * w]);
+            let v_off = self.plane(block, layer, true);
+            self.slab[v_off..v_off + take * w].copy_from_slice(&v[done * w..(done + take) * w]);
+            done += take;
+        }
+    }
+
+    /// Publish that positions `0..len` are now valid for `session` (called
+    /// once per engine step, after every local layer wrote its rows).
+    pub fn advance(&mut self, session: u64, len: usize) {
+        let s = self.sessions.get_mut(&session).expect("advance on unknown session");
+        debug_assert!(len >= s.len, "cache cannot shrink");
+        s.len = len;
+    }
+
+    /// Copy a session's filled K and V rows for `layer` into the head of
+    /// `dst_k`/`dst_v` (the per-step staging tensors, laid out as
+    /// `capacity × width` rows per batch row). Returns the copied length.
+    pub fn gather(&self, session: u64, layer: usize, dst_k: &mut [f32], dst_v: &mut [f32]) -> usize {
+        let s = match self.sessions.get(&session) {
+            Some(s) => s,
+            None => return 0,
+        };
+        let bp = self.cfg.block_positions;
+        let w = self.cfg.width;
+        assert!(s.len * w <= dst_k.len() && s.len * w <= dst_v.len(), "staging too small");
+        let mut done = 0usize;
+        for &block in &s.blocks {
+            let take = (s.len - done).min(bp);
+            if take == 0 {
+                break;
+            }
+            let k_off = self.plane(block, layer, false);
+            dst_k[done * w..(done + take) * w]
+                .copy_from_slice(&self.slab[k_off..k_off + take * w]);
+            let v_off = self.plane(block, layer, true);
+            dst_v[done * w..(done + take) * w]
+                .copy_from_slice(&self.slab[v_off..v_off + take * w]);
+            done += take;
+        }
+        done
+    }
+
+    /// Release a session's blocks back to the free list. Idempotent.
+    pub fn free(&mut self, session: u64) {
+        if let Some(s) = self.sessions.remove(&session) {
+            let n = s.blocks.len();
+            self.free_list.extend(s.blocks);
+            if n > 0 {
+                note_in_use_delta(-(n as i64));
+            }
+            G_SESSIONS.fetch_sub(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Drop every session (worker teardown).
+    pub fn clear(&mut self) {
+        let ids: Vec<u64> = self.sessions.keys().copied().collect();
+        for id in ids {
+            self.free(id);
+        }
+    }
+}
+
+impl Drop for KvCache {
+    fn drop(&mut self) {
+        self.clear();
+        G_SLAB_BYTES.fetch_sub((self.n_blocks * self.cfg.block_elems() * 4) as u64, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cache(bp: usize, layers: usize, width: usize) -> KvCache {
+        let mut cfg = KvCacheConfig::new(bp, layers, width);
+        cfg.grow_blocks = 4; // small chunks so tests exercise growth
+        KvCache::new(cfg)
+    }
+
+    fn row(tag: f32, w: usize) -> Vec<f32> {
+        (0..w).map(|i| tag + i as f32 / 100.0).collect()
+    }
+
+    #[test]
+    fn write_gather_roundtrip_across_blocks() {
+        // 3 positions per block so position 7 spans 3 blocks
+        let mut c = cache(3, 2, 4);
+        let n = 8;
+        for pos in 0..n {
+            for layer in 0..2 {
+                let tag = (layer * 100 + pos) as f32;
+                c.write_row(9, layer, pos, &row(tag, 4), &row(tag + 0.5, 4));
+            }
+        }
+        c.advance(9, n);
+        assert_eq!(c.len(9), Some(n));
+        for layer in 0..2 {
+            let mut k = vec![-1.0; n * 4];
+            let mut v = vec![-1.0; n * 4];
+            assert_eq!(c.gather(9, layer, &mut k, &mut v), n);
+            for pos in 0..n {
+                let tag = (layer * 100 + pos) as f32;
+                assert_eq!(&k[pos * 4..pos * 4 + 4], &row(tag, 4)[..], "k l{layer} p{pos}");
+                assert_eq!(&v[pos * 4..pos * 4 + 4], &row(tag + 0.5, 4)[..], "v l{layer} p{pos}");
+            }
+        }
+        assert_eq!(c.blocks_in_use(), 3); // ceil(8/3)
+    }
+
+    #[test]
+    fn write_prefix_matches_per_row_writes() {
+        let n = 7; // spans 3 blocks of 3
+        let w = 4;
+        let mut rows_k = Vec::new();
+        let mut rows_v = Vec::new();
+        for pos in 0..n {
+            rows_k.extend(row(pos as f32, w));
+            rows_v.extend(row(pos as f32 + 0.5, w));
+        }
+        let mut a = cache(3, 2, w);
+        for pos in 0..n {
+            for layer in 0..2 {
+                let r = pos * w..(pos + 1) * w;
+                a.write_row(1, layer, pos, &rows_k[r.clone()], &rows_v[r]);
+            }
+        }
+        a.advance(1, n);
+        let mut b = cache(3, 2, w);
+        for layer in 0..2 {
+            b.write_prefix(1, layer, n, &rows_k, &rows_v);
+        }
+        b.advance(1, n);
+        for layer in 0..2 {
+            let (mut ka, mut va) = (vec![0.0; n * w], vec![0.0; n * w]);
+            let (mut kb, mut vb) = (vec![0.0; n * w], vec![0.0; n * w]);
+            assert_eq!(a.gather(1, layer, &mut ka, &mut va), n);
+            assert_eq!(b.gather(1, layer, &mut kb, &mut vb), n);
+            assert_eq!(ka, kb, "layer {layer} k diverged");
+            assert_eq!(va, vb, "layer {layer} v diverged");
+            assert_eq!(kb, rows_k, "layer {layer} k roundtrip");
+        }
+        // zero-length prefix is a no-op that allocates nothing
+        let mut c = cache(3, 1, w);
+        c.write_prefix(9, 0, 0, &[], &[]);
+        assert_eq!(c.blocks_in_use(), 0);
+    }
+
+    #[test]
+    fn gather_copies_only_advanced_prefix() {
+        let mut c = cache(4, 1, 2);
+        for pos in 0..3 {
+            c.write_row(1, 0, pos, &row(pos as f32, 2), &row(pos as f32, 2));
+        }
+        c.advance(1, 2); // third row written but not yet published
+        let mut k = vec![0.0; 4 * 2];
+        let mut v = vec![0.0; 4 * 2];
+        assert_eq!(c.gather(1, 0, &mut k, &mut v), 2);
+        assert_eq!(&k[0..2], &row(0.0, 2)[..]);
+        assert_eq!(&k[2..4], &row(1.0, 2)[..]);
+        // staging beyond len untouched
+        assert_eq!(&k[4..], &[0.0; 4]);
+    }
+
+    #[test]
+    fn free_recycles_blocks_and_sessions_share_the_slab() {
+        let mut c = cache(2, 1, 2);
+        // 100 sequential sessions of 6 positions (3 blocks each): the slab
+        // must not grow past what one session needs (plus grow chunking)
+        let mut peak_capacity = 0;
+        for id in 0..100u64 {
+            for pos in 0..6 {
+                c.write_row(id, 0, pos, &row(pos as f32, 2), &row(pos as f32, 2));
+            }
+            c.advance(id, 6);
+            peak_capacity = peak_capacity.max(c.capacity_blocks());
+            c.free(id);
+            assert_eq!(c.blocks_in_use(), 0, "session {id} leaked blocks");
+        }
+        assert_eq!(c.capacity_blocks(), peak_capacity, "slab grew after first session");
+        assert!(peak_capacity <= 4, "one 3-block session grew {peak_capacity} blocks");
+        assert_eq!(c.session_count(), 0);
+    }
+
+    #[test]
+    fn free_is_idempotent_and_unknown_gather_is_empty() {
+        let mut c = cache(2, 1, 2);
+        c.write_row(5, 0, 0, &[1.0, 2.0], &[3.0, 4.0]);
+        c.advance(5, 1);
+        c.free(5);
+        c.free(5);
+        let mut k = vec![0.0; 2];
+        let mut v = vec![0.0; 2];
+        assert_eq!(c.gather(5, 0, &mut k, &mut v), 0);
+        assert_eq!(c.blocks_in_use(), 0);
+    }
+
+    #[test]
+    fn concurrent_sessions_do_not_alias() {
+        let mut c = cache(2, 1, 2);
+        for id in 0..8u64 {
+            for pos in 0..5 {
+                let tag = (id * 10 + pos as u64) as f32;
+                c.write_row(id, 0, pos, &row(tag, 2), &row(tag, 2));
+            }
+            c.advance(id, 5);
+        }
+        for id in 0..8u64 {
+            let mut k = vec![0.0; 5 * 2];
+            let mut v = vec![0.0; 5 * 2];
+            assert_eq!(c.gather(id, 0, &mut k, &mut v), 5);
+            for pos in 0..5 {
+                let tag = (id * 10 + pos as u64) as f32;
+                assert_eq!(&k[pos * 2..pos * 2 + 2], &row(tag, 2)[..], "id {id} pos {pos}");
+            }
+        }
+        assert_eq!(c.blocks_in_use(), 8 * 3); // ceil(5/2) per session
+    }
+
+    #[test]
+    fn global_stats_track_use_and_recycling() {
+        // other tests mutate the process-wide counters concurrently, so
+        // assert only on monotonic counters' deltas
+        let before = global_stats();
+        let mut c = cache(2, 1, 2);
+        c.write_row(1, 0, 0, &[1.0, 2.0], &[3.0, 4.0]);
+        c.advance(1, 1);
+        let mid = global_stats();
+        assert!(mid.blocks_grown > before.blocks_grown, "growth not counted");
+        assert!(mid.blocks_peak >= 1);
+        c.free(1);
+        c.write_row(2, 0, 0, &[1.0, 2.0], &[3.0, 4.0]);
+        let after = global_stats();
+        assert!(after.blocks_recycled > before.blocks_recycled, "free list unused");
+        // instance-level invariants are deterministic
+        assert_eq!(c.blocks_in_use(), 1);
+        assert_eq!(c.session_count(), 1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn wrong_width_panics() {
+        let mut c = cache(2, 1, 4);
+        c.write_row(0, 0, 0, &[1.0], &[1.0]);
+    }
+}

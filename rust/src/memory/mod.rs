@@ -10,7 +10,13 @@
 //!   eviction after use. Blocking on an unfinished copy is recorded as
 //!   stall time — the number PMEP is designed to drive to zero.
 //!
-//! A third concern lives here too: the **activation arena** ([`arena`]),
+//! The **paged K/V cache** ([`kvcache`]) lives here too: per-session K/V
+//! storage for incremental decode, carved from one worker-local slab in
+//! fixed-size position blocks with free-list recycling — the memory-
+//! pooling discipline of §4.4 applied to generation state, so thousands
+//! of concurrent sessions share the slab without per-session allocation.
+//!
+//! A further concern is the **activation arena** ([`arena`]),
 //! the size-bucketed `Vec<f32>` recycler behind the zero-copy host hot
 //! path (§Perf). Ownership rules in one line: *whoever checks a buffer out
 //! returns it by dropping it* — drops shelve the buffer on the dropping
@@ -20,10 +26,12 @@
 //! [`arena`] for the full model.
 
 pub mod arena;
+pub mod kvcache;
 pub mod ledger;
 pub mod pool;
 
 pub use arena::{ArenaBuf, ArenaPool, ArenaStats};
+pub use kvcache::{KvCache, KvCacheConfig, KvStats};
 pub use ledger::MemoryLedger;
 pub use pool::{PoolConfig, PooledProvider};
 

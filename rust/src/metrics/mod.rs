@@ -6,6 +6,7 @@
 //! the host hot path).
 
 use crate::memory::arena::ArenaStats;
+use crate::memory::kvcache::KvStats;
 use std::time::{Duration, Instant};
 
 /// Accumulates batch completions.
@@ -29,6 +30,7 @@ pub struct Recorder {
     requests_done: u64,
     batches_done: u64,
     arena: ArenaStats,
+    kvcache: KvStats,
 }
 
 impl Default for Recorder {
@@ -52,6 +54,7 @@ impl Recorder {
             requests_done: 0,
             batches_done: 0,
             arena: ArenaStats::default(),
+            kvcache: KvStats::default(),
         }
     }
 
@@ -66,6 +69,18 @@ impl Recorder {
     /// The last recorded arena allocation counters.
     pub fn arena_stats(&self) -> ArenaStats {
         self.arena
+    }
+
+    /// Fold a paged-KV-cache snapshot into the recorder (the engine uses
+    /// [`crate::memory::kvcache::global_stats`] on every
+    /// `metrics_snapshot`, so operators can watch cache pressure).
+    pub fn record_kvcache(&mut self, stats: KvStats) {
+        self.kvcache = stats;
+    }
+
+    /// The last recorded KV-cache counters.
+    pub fn kvcache_stats(&self) -> KvStats {
+        self.kvcache
     }
 
     /// Record a completed batch of unknown size (counts as 1 request).
@@ -224,6 +239,15 @@ impl Recorder {
                 crate::util::fmt_bytes(self.arena.bytes_recycled),
             ));
         }
+        if self.kvcache != KvStats::default() {
+            s.push_str(&format!(
+                "; kvcache {} blocks in use (peak {}, {} recycled, {} slab)",
+                self.kvcache.blocks_in_use,
+                self.kvcache.blocks_peak,
+                self.kvcache.blocks_recycled,
+                crate::util::fmt_bytes(self.kvcache.slab_bytes),
+            ));
+        }
         s
     }
 }
@@ -292,6 +316,23 @@ mod tests {
         r.record_batch(Duration::from_millis(1), 4);
         r.record_batch(Duration::from_millis(1), 2);
         assert!((r.mean_occupancy() - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn kvcache_counters_surface_in_summary() {
+        let mut r = Recorder::new();
+        assert!(!r.summary().contains("kvcache"));
+        r.record_kvcache(KvStats {
+            blocks_in_use: 12,
+            blocks_peak: 40,
+            blocks_recycled: 99,
+            blocks_grown: 41,
+            slab_bytes: 64 * 1024,
+            sessions: 3,
+        });
+        assert_eq!(r.kvcache_stats().blocks_peak, 40);
+        let s = r.summary();
+        assert!(s.contains("kvcache 12 blocks in use (peak 40"), "{s}");
     }
 
     #[test]

@@ -60,14 +60,6 @@ pub fn shard_layer(cfg: &ModelConfig, full: &LayerWeights, tp: usize, rank: usiz
     }
 }
 
-impl crate::tensor::Tensor {
-    /// 1-D slice [a, b) — bias sharding helper.
-    pub fn slice_rows_1d(&self, a: usize, b: usize) -> crate::tensor::Tensor {
-        assert_eq!(self.rank(), 1);
-        crate::tensor::Tensor::new(&[b - a], self.data[a..b].to_vec())
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;

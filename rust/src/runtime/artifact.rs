@@ -6,6 +6,7 @@
 use crate::util::json::Json;
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex, OnceLock};
 
 /// Supported artifact dtypes (all our variants use these two).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -91,7 +92,28 @@ fn parse_arg(j: &Json, with_name: bool) -> anyhow::Result<ArgMeta> {
     })
 }
 
+/// Process-wide memoized manifests, keyed by canonical artifacts dir.
+static MANIFEST_CACHE: OnceLock<Mutex<BTreeMap<PathBuf, Arc<Manifest>>>> = OnceLock::new();
+
 impl Manifest {
+    /// Memoized [`Manifest::load`], keyed by the (canonicalized) artifacts
+    /// path. Parsing the full-plan manifest costs ~2 ms
+    /// (`BENCH_hotpath.json: manifest_parse_us`), and every engine, bench
+    /// and test construction used to pay it again; the registry parses
+    /// once per path per process. Artifacts are written by `make
+    /// artifacts` and immutable while a process runs.
+    pub fn cached(dir: impl AsRef<Path>) -> anyhow::Result<Arc<Manifest>> {
+        let key = std::fs::canonicalize(dir.as_ref()).unwrap_or_else(|_| dir.as_ref().to_path_buf());
+        let cache = MANIFEST_CACHE.get_or_init(|| Mutex::new(BTreeMap::new()));
+        if let Some(m) = cache.lock().unwrap().get(&key) {
+            return Ok(m.clone());
+        }
+        // parse outside the lock; a racing double-parse is harmless
+        let m = Arc::new(Manifest::load(dir)?);
+        cache.lock().unwrap().insert(key, m.clone());
+        Ok(m)
+    }
+
     /// Load `<dir>/manifest.json`.
     pub fn load(dir: impl AsRef<Path>) -> anyhow::Result<Manifest> {
         let dir = dir.as_ref().to_path_buf();
@@ -176,6 +198,13 @@ impl Manifest {
             "drce_attn_shard" => {
                 format!("{preset}_drce_attn_shard_tp{tp}_b{batch}_s{seq}_t{t_bucket}")
             }
+            // incremental decode: cache capacity is implied (max_seq), so
+            // decode names carry only the bucket width
+            "embed_decode" => format!("{preset}_embed_decode_b{batch}"),
+            "layer_full_decode" => format!("{preset}_layer_full_decode_b{batch}"),
+            "attn_shard_decode" => format!("{preset}_attn_shard_decode_tp{tp}_b{batch}"),
+            "layer_full_kv" => format!("{preset}_layer_full_kv_b{batch}_s{seq}"),
+            "attn_shard_kv" => format!("{preset}_attn_shard_kv_tp{tp}_b{batch}_s{seq}"),
             other => panic!("unknown variant kind {other:?}"),
         }
     }
@@ -189,6 +218,48 @@ impl Manifest {
         pts.sort();
         pts.dedup();
         pts
+    }
+
+    /// Compiled decode bucket widths for `(preset, tp)`: every width for
+    /// which the *whole* decode family exists (`embed_decode`, the layer
+    /// decode variant, a seq=1 `logits`, and — under TP — the rows=width
+    /// `mlp_shard`). The engine enables incremental decode only for these.
+    pub fn decode_widths(&self, preset: &str, tp: usize) -> Vec<usize> {
+        let kind = if tp == 1 { "layer_full_decode" } else { "attn_shard_decode" };
+        let mut ws: Vec<usize> = self
+            .by_kind(preset, kind)
+            .filter(|v| tp == 1 || v.tp == tp)
+            .map(|v| v.batch)
+            .filter(|&w| {
+                let mut need = vec![
+                    Self::name_of(preset, "embed_decode", w, 0, 1, 0),
+                    Self::name_of(preset, "logits", w, 1, 1, 0),
+                ];
+                if tp > 1 {
+                    need.push(Self::name_of(preset, "mlp_shard", w, 1, tp, 0));
+                }
+                need.iter().all(|n| self.variants.contains_key(n))
+            })
+            .collect();
+        ws.sort_unstable();
+        ws.dedup();
+        ws
+    }
+
+    /// Do the cache-seeding `*_kv` prefill twins exist for every shape
+    /// point of `(preset, tp)`? Required before the engine can route
+    /// generation prefills through the KV path.
+    pub fn has_kv_prefill(&self, preset: &str, tp: usize) -> bool {
+        let points = self.shape_points(preset);
+        !points.is_empty()
+            && points.iter().all(|&(b, s)| {
+                let name = if tp == 1 {
+                    Self::name_of(preset, "layer_full_kv", b, s, 1, 0)
+                } else {
+                    Self::name_of(preset, "attn_shard_kv", b, s, tp, 0)
+                };
+                self.variants.contains_key(&name)
+            })
     }
 }
 
@@ -241,6 +312,78 @@ mod tests {
         );
         assert_eq!(Manifest::name_of("tiny", "mlp_shard", 2, 16, 2, 0), "tiny_mlp_shard_tp2_r32");
         assert_eq!(Manifest::name_of("tiny", "mlp_shard", 0, 0, 1, 16), "tiny_mlp_shard_tp1_r16");
+        // the incremental-decode family
+        assert_eq!(Manifest::name_of("tiny", "embed_decode", 2, 0, 1, 0), "tiny_embed_decode_b2");
+        assert_eq!(
+            Manifest::name_of("tiny", "layer_full_decode", 4, 0, 1, 0),
+            "tiny_layer_full_decode_b4"
+        );
+        assert_eq!(
+            Manifest::name_of("tiny", "attn_shard_decode", 2, 0, 2, 0),
+            "tiny_attn_shard_decode_tp2_b2"
+        );
+        assert_eq!(
+            Manifest::name_of("tiny", "layer_full_kv", 2, 16, 1, 0),
+            "tiny_layer_full_kv_b2_s16"
+        );
+        assert_eq!(
+            Manifest::name_of("small", "attn_shard_kv", 4, 64, 2, 0),
+            "small_attn_shard_kv_tp2_b4_s64"
+        );
+    }
+
+    #[test]
+    fn cached_load_is_memoized_per_path() {
+        let dir = std::env::temp_dir().join(format!("eai-man-cache-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        write_sample(&dir);
+        let a = Manifest::cached(&dir).unwrap();
+        let b = Manifest::cached(&dir).unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "second load re-parsed the manifest");
+        assert_eq!(a.configs["tiny"].hidden, 64);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Minimal manifest carrying a complete decode family for width 2.
+    const DECODE_SAMPLE: &str = r#"{
+      "format_version": 1,
+      "configs": [{"name": "tiny", "hidden": 64, "n_heads": 2, "head_dim": 32,
+                   "ffn": 256, "vocab": 128, "max_seq": 32, "n_layers": 4}],
+      "variants": [
+        {"name": "tiny_layer_full_b2_s16", "kind": "layer_full", "preset": "tiny",
+         "file": "f.hlo.txt", "batch": 2, "seq": 16, "tp": 1, "t_bucket": 0,
+         "inputs": [], "outputs": []},
+        {"name": "tiny_layer_full_kv_b2_s16", "kind": "layer_full_kv", "preset": "tiny",
+         "file": "f.hlo.txt", "batch": 2, "seq": 16, "tp": 1, "t_bucket": 0,
+         "inputs": [], "outputs": []},
+        {"name": "tiny_layer_full_decode_b2", "kind": "layer_full_decode", "preset": "tiny",
+         "file": "f.hlo.txt", "batch": 2, "seq": 0, "tp": 1, "t_bucket": 0,
+         "inputs": [], "outputs": []},
+        {"name": "tiny_layer_full_decode_b4", "kind": "layer_full_decode", "preset": "tiny",
+         "file": "f.hlo.txt", "batch": 4, "seq": 0, "tp": 1, "t_bucket": 0,
+         "inputs": [], "outputs": []},
+        {"name": "tiny_embed_decode_b2", "kind": "embed_decode", "preset": "tiny",
+         "file": "f.hlo.txt", "batch": 2, "seq": 0, "tp": 1, "t_bucket": 0,
+         "inputs": [], "outputs": []},
+        {"name": "tiny_logits_b2_s1", "kind": "logits", "preset": "tiny",
+         "file": "f.hlo.txt", "batch": 2, "seq": 1, "tp": 1, "t_bucket": 0,
+         "inputs": [], "outputs": []}
+      ]
+    }"#;
+
+    #[test]
+    fn decode_widths_require_the_whole_family() {
+        let dir = std::env::temp_dir().join(format!("eai-man-dec-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), DECODE_SAMPLE).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        // width 2 has embed_decode + logits_s1; width 4 is missing both
+        assert_eq!(m.decode_widths("tiny", 1), vec![2]);
+        // no attn_shard_decode at all => no tp=2 widths
+        assert!(m.decode_widths("tiny", 2).is_empty());
+        assert!(m.has_kv_prefill("tiny", 1));
+        assert!(!m.has_kv_prefill("tiny", 2));
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -326,6 +326,13 @@ impl Tensor {
         Tensor::from_storage(&parts[0].shape, Storage::Exclusive(buf))
     }
 
+    /// Shared bounds check for the `slice_*` family: `[a, b)` must sit
+    /// inside `0..n`.
+    #[inline]
+    fn check_slice_range(a: usize, b: usize, n: usize, what: &str) {
+        assert!(a <= b && b <= n, "bad {what} slice [{a}, {b}) of {n}");
+    }
+
     /// Column slice [c0, c1) of a 2-D tensor — weight sharding. Single pass
     /// of `extend_from_slice` over precomputed row ranges into arena
     /// scratch; the contiguous full-width case is one memcpy (or a shared
@@ -334,7 +341,7 @@ impl Tensor {
     pub fn slice_cols(&self, c0: usize, c1: usize) -> Tensor {
         assert_eq!(self.rank(), 2);
         let (rows, cols) = (self.shape[0], self.shape[1]);
-        assert!(c0 <= c1 && c1 <= cols);
+        Self::check_slice_range(c0, c1, cols, "col");
         let w = c1 - c0;
         if w == cols {
             // contiguous full-width fast path: the slice IS the buffer
@@ -363,7 +370,7 @@ impl Tensor {
     /// zero-copy view; otherwise it copies into arena scratch.
     pub fn slice_rows(&self, r0: usize, r1: usize) -> Tensor {
         let cols = self.cols();
-        assert!(r0 <= r1 && r1 <= self.rows());
+        Self::check_slice_range(r0, r1, self.rows(), "row");
         let shape = vec![r1 - r0, cols];
         match &self.data {
             Storage::Shared { buf, off, .. } => Tensor {
@@ -379,6 +386,17 @@ impl Tensor {
                 data: Storage::Exclusive(ArenaBuf::copy_of(&self.data[r0 * cols..r1 * cols])),
             },
         }
+    }
+
+    /// 1-D slice [a, b) — bias sharding helper (the rank-1 sibling of
+    /// [`Tensor::slice_rows`]), copied into arena scratch.
+    pub fn slice_rows_1d(&self, a: usize, b: usize) -> Tensor {
+        assert_eq!(self.rank(), 1);
+        Self::check_slice_range(a, b, self.len(), "1-d");
+        Tensor::from_storage(
+            &[b - a],
+            Storage::Exclusive(ArenaBuf::copy_of(&self.data[a..b])),
+        )
     }
 
     /// Scale every element (bias pre-division for row-sharded linears),
@@ -514,6 +532,21 @@ mod tests {
         assert_eq!(t.slice_cols(1, 3).data, vec![1., 2., 5., 6.]);
         assert_eq!(t.slice_rows(1, 2).data, vec![4., 5., 6., 7.]);
         assert_eq!(t.slice_cols(1, 3).shape, vec![2, 2]);
+        let b = Tensor::new(&[4], vec![1., 2., 3., 4.]);
+        assert_eq!(b.slice_rows_1d(1, 3).data, vec![2., 3.]);
+        assert_eq!(b.slice_rows_1d(1, 3).shape, vec![2]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn slice_rows_1d_rejects_rank2() {
+        Tensor::zeros(&[2, 2]).slice_rows_1d(0, 1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn slice_out_of_range_panics() {
+        Tensor::new(&[4], vec![0.; 4]).slice_rows_1d(3, 5);
     }
 
     #[test]

@@ -1,0 +1,177 @@
+//! Incremental decode vs. the legacy re-prefill path, differentially.
+//!
+//! The KV-cache path (prefill seeds per-worker paged caches; continuation
+//! steps run one position against them) must emit exactly the token
+//! streams the re-prefill path emits — greedy decoding is deterministic,
+//! so any divergence is a cache-management bug. Checked across tp=1/tp=2,
+//! stop-token early exit, and sessions that run into the context limit;
+//! plus engine-level checks that finished sessions return their blocks.
+
+use energonai::coordinator::engine::{Engine, GenRequest, LaunchConfig};
+use energonai::memory::kvcache;
+use std::sync::Mutex;
+
+/// Serializes every test in this binary: two of them assert on the
+/// process-wide kvcache gauges, so no other engine may run concurrently.
+static STATS_LOCK: Mutex<()> = Mutex::new(());
+
+fn stats_guard() -> std::sync::MutexGuard<'static, ()> {
+    // a poisoned lock just means another test failed; the counters are
+    // still coherent
+    STATS_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn launch(kv: bool, tp: usize) -> Engine {
+    Engine::launch(
+        LaunchConfig::preset("tiny")
+            .with_parallel(tp, 1)
+            .with_kv_cache(kv),
+    )
+    .unwrap()
+}
+
+fn prompts() -> Vec<Vec<i32>> {
+    (0..5)
+        .map(|i| {
+            let len = 2 + (i * 3) % 7;
+            (0..len).map(|j| ((i * 31 + j * 7) % 100 + 1) as i32).collect()
+        })
+        .collect()
+}
+
+/// The acceptance bar: cached incremental decode produces byte-identical
+/// token streams to the legacy path, sequentially and concurrently.
+fn assert_parity(tp: usize) {
+    let _guard = stats_guard();
+    let legacy = launch(false, tp);
+    assert!(!legacy.kv_cache_on(), "kv_cache(false) must disable decode");
+    let expect: Vec<Vec<i32>> = prompts()
+        .into_iter()
+        .map(|p| legacy.generate(p, 8).unwrap())
+        .collect();
+    legacy.shutdown();
+
+    let cached = launch(true, tp);
+    assert!(
+        cached.kv_cache_on(),
+        "decode artifacts missing for tp={tp}; re-run `make artifacts`"
+    );
+    // sequential sessions
+    let got: Vec<Vec<i32>> = prompts()
+        .into_iter()
+        .map(|p| cached.generate(p, 8).unwrap())
+        .collect();
+    assert_eq!(got, expect, "cached decode diverged (sequential, tp={tp})");
+    // concurrent sessions: decode buckets coalesce and must still agree
+    let grefs: Vec<_> = prompts()
+        .into_iter()
+        .map(|p| cached.generate_stream(GenRequest::new(p, 8)).unwrap())
+        .collect();
+    let got: Vec<Vec<i32>> = grefs.iter().map(|g| g.to_here().unwrap()).collect();
+    assert_eq!(got, expect, "cached decode diverged (concurrent, tp={tp})");
+    cached.shutdown();
+}
+
+#[test]
+fn cached_decode_matches_reprefill_tp1() {
+    assert_parity(1);
+}
+
+#[test]
+fn cached_decode_matches_reprefill_tp2() {
+    assert_parity(2);
+}
+
+/// Stop-token early exit: identical truncation on both paths, and the
+/// stopped session's blocks are freed.
+#[test]
+fn stop_token_parity() {
+    let _guard = stats_guard();
+    let legacy = launch(false, 1);
+    let prompt = vec![5, 9, 2];
+    let free_run = legacy.generate(prompt.clone(), 6).unwrap();
+    assert!(free_run.len() > prompt.len() + 1);
+    let stop = free_run[prompt.len() + 1];
+    let expect = legacy
+        .generate_stream(GenRequest::new(prompt.clone(), 6).with_stop(stop))
+        .unwrap()
+        .to_here()
+        .unwrap();
+    legacy.shutdown();
+
+    let cached = launch(true, 1);
+    let got = cached
+        .generate_stream(GenRequest::new(prompt.clone(), 6).with_stop(stop))
+        .unwrap()
+        .to_here()
+        .unwrap();
+    assert_eq!(got, expect, "stop-token truncation diverged");
+    assert_eq!(*got.last().unwrap(), stop);
+    cached.shutdown();
+}
+
+/// Sessions that run into the longest compiled bucket (tiny: 32) end at
+/// the same point on both paths — the cache capacity equals max_seq, so
+/// the limit must come from the scheduler, not a cache overflow.
+#[test]
+fn max_length_session_parity() {
+    let _guard = stats_guard();
+    let legacy = launch(false, 1);
+    let prompt: Vec<i32> = (1..=28).collect();
+    let expect = legacy.generate(prompt.clone(), 16).unwrap();
+    legacy.shutdown();
+    // 28 + 16 > 32: the session must stop early at the context limit
+    assert!(expect.len() < 28 + 16, "context limit never hit");
+
+    let cached = launch(true, 1);
+    let got = cached.generate(prompt, 16).unwrap();
+    assert_eq!(got, expect, "context-limit truncation diverged");
+    cached.shutdown();
+}
+
+/// Engine-level no-leak: after every session completes and the engine
+/// drains, all cache blocks are back on the free lists.
+#[test]
+fn finished_sessions_release_their_blocks() {
+    let _guard = stats_guard();
+    let before = kvcache::global_stats().blocks_in_use;
+    let engine = launch(true, 1);
+    let grefs: Vec<_> = prompts()
+        .into_iter()
+        .map(|p| engine.generate_stream(GenRequest::new(p, 6)).unwrap())
+        .collect();
+    for g in &grefs {
+        g.to_here().unwrap();
+    }
+    let m = engine.metrics_snapshot();
+    assert!(m.kvcache_stats().blocks_peak > 0, "cache never used: {}", m.summary());
+    engine.shutdown(); // drains sessions; ticketed releases ran before workers exited
+    let after = kvcache::global_stats().blocks_in_use;
+    assert_eq!(after, before, "cache blocks leaked across the engine lifetime");
+}
+
+/// Re-used engine serves many session waves without growing the slab
+/// beyond the first wave's peak (block recycling at the engine level).
+#[test]
+fn sequential_waves_recycle_blocks() {
+    let _guard = stats_guard();
+    let engine = launch(true, 1);
+    let mut peak_after_first = 0;
+    for wave in 0..5 {
+        for p in prompts() {
+            engine.generate(p, 4).unwrap();
+        }
+        let grown = kvcache::global_stats().blocks_grown;
+        if wave == 0 {
+            peak_after_first = grown;
+        } else {
+            assert_eq!(
+                grown, peak_after_first,
+                "wave {wave} grew the slab instead of recycling"
+            );
+        }
+    }
+    let m = engine.metrics_snapshot();
+    assert!(m.kvcache_stats().blocks_recycled > 0, "{}", m.summary());
+    engine.shutdown();
+}

@@ -1,0 +1,22 @@
+#!/usr/bin/env bash
+# Run the incremental-decode benchmark (per-token latency vs prefix length,
+# paged KV cache vs re-prefill) and refresh BENCH_decode.json at the repo
+# root. BENCH_SMOKE=1 runs a fast single-prefix sanity pass (CI).
+#
+# Usage: scripts/bench_decode.sh [extra cargo args...]
+set -euo pipefail
+
+cd "$(dirname "$0")/../rust"
+
+if ! ls ../artifacts/manifest.json >/dev/null 2>&1 && ! ls artifacts/manifest.json >/dev/null 2>&1; then
+    echo "warning: no AOT artifacts found — the bench will skip (run 'make artifacts')" >&2
+fi
+
+cargo bench --bench decode "$@"
+
+out="$(cd .. && pwd)/BENCH_decode.json"
+if [ -f "$out" ]; then
+    echo "refreshed $out"
+else
+    echo "warning: $out was not written (bench skipped?)" >&2
+fi

@@ -11,3 +11,7 @@ cd "$(dirname "$0")/../rust"
 cargo build --release
 cargo test -q
 cargo fmt --check
+
+# decode-bench smoke: one prefix, few tokens — catches decode-path and
+# BENCH_decode.json regressions without the full sweep's runtime
+BENCH_SMOKE=1 cargo bench --bench decode
