@@ -78,11 +78,16 @@ PLANS = {
             "points": [(1, 16), (2, 16), (4, 32)],
             "tps": [1, 2],
             "drce": [(2, 16, 16), (4, 32, 64)],
+            # decode bucket widths compiled *independently* of the prefill
+            # batch points: wide decode buckets serve many concurrent
+            # sessions without widening any prefill bucket
+            "decode_widths": [1, 2, 4, 8, 16],
         },
         "small": {
             "points": [(2, 32), (4, 64)],
             "tps": [1, 2, 4],
             "drce": [(4, 64, 128)],
+            "decode_widths": [2, 4, 8, 16],
         },
         # long-context preset for the decode-latency sweep
         # (scripts/bench_decode.sh: per-token latency vs prefix length)
@@ -95,6 +100,23 @@ PLANS = {
 }
 
 
+def decode_family_jobs(cfg, width, tps, rows_done):
+    """Lowering jobs for one decode bucket width: ``embed_decode`` /
+    ``layer_full_decode`` (and per-tp ``attn_shard_decode`` + ``mlp_shard``
+    with rows = width) plus a seq=1 ``logits``."""
+    jobs = [
+        (cfg, "embed_decode", dict(batch=width)),
+        (cfg, "layer_full_decode", dict(batch=width)),
+        (cfg, "logits", dict(batch=width, seq=1)),
+    ]
+    for tp in tps:
+        jobs.append((cfg, "attn_shard_decode", dict(batch=width, tp=tp)))
+        if (tp, width) not in rows_done:
+            rows_done.add((tp, width))
+            jobs.append((cfg, "mlp_shard", dict(batch=width, seq=1, tp=tp, t_bucket=width)))
+    return jobs
+
+
 def plan_jobs(plan: dict):
     """Expand a plan into (cfg, kind, kwargs) lowering jobs.
 
@@ -102,7 +124,9 @@ def plan_jobs(plan: dict):
     family for its batch width: ``embed_decode``/``layer_full_decode`` (and
     per-tp ``attn_shard_decode`` + ``mlp_shard`` with rows = batch), a
     seq=1 ``logits``, and the cache-seeding ``layer_full_kv`` /
-    ``attn_shard_kv`` prefill twins.
+    ``attn_shard_kv`` prefill twins. A preset's ``decode_widths`` adds
+    further decode families *decoupled* from the prefill points, so wide
+    decode buckets (e.g. 8/16) exist without an equally wide prefill.
     """
     jobs = []
     for preset, spec in plan.items():
@@ -123,16 +147,11 @@ def plan_jobs(plan: dict):
                     jobs.append((cfg, "mlp_shard", dict(batch=batch, seq=seq, tp=tp)))
             if batch not in widths_done:
                 widths_done.add(batch)
-                jobs.append((cfg, "embed_decode", dict(batch=batch)))
-                jobs.append((cfg, "layer_full_decode", dict(batch=batch)))
-                jobs.append((cfg, "logits", dict(batch=batch, seq=1)))
-                for tp in spec["tps"]:
-                    jobs.append((cfg, "attn_shard_decode", dict(batch=batch, tp=tp)))
-                    if (tp, batch) not in rows_done:
-                        rows_done.add((tp, batch))
-                        jobs.append(
-                            (cfg, "mlp_shard", dict(batch=batch, seq=1, tp=tp, t_bucket=batch))
-                        )
+                jobs.extend(decode_family_jobs(cfg, batch, spec["tps"], rows_done))
+        for width in spec.get("decode_widths", []):
+            if width not in widths_done:
+                widths_done.add(width)
+                jobs.extend(decode_family_jobs(cfg, width, spec["tps"], rows_done))
         for batch, seq, t in spec.get("drce", []):
             for tp in spec["tps"]:
                 jobs.append(

@@ -53,6 +53,31 @@ class TestPlans:
                 names.append((cfg.name, kw.get("tp", 1), rows))
         assert len(names) == len(set(names))
 
+    def test_decode_widths_decoupled_from_prefill_points(self):
+        # widths 8/16 exist on tiny with no (8, s) or (16, s) prefill point
+        jobs = aot.plan_jobs(aot.PLANS["full"])
+        tiny = [(k, kw) for cfg, k, kw in jobs if cfg.name == "tiny"]
+        widths = sorted(kw["batch"] for k, kw in tiny if k == "layer_full_decode")
+        assert widths == aot.PLANS["full"]["tiny"]["decode_widths"]
+        prefill_batches = {kw["batch"] for k, kw in tiny if k == "layer_full"}
+        assert not {8, 16} & prefill_batches
+        # every extra width carries its full family: embed_decode, seq-1
+        # logits, per-tp attn_shard_decode and rows=width mlp_shard
+        for w in (8, 16):
+            assert any(k == "embed_decode" and kw["batch"] == w for k, kw in tiny)
+            assert any(k == "logits" and kw["batch"] == w and kw["seq"] == 1 for k, kw in tiny)
+            for tp in aot.PLANS["full"]["tiny"]["tps"]:
+                assert any(
+                    k == "attn_shard_decode" and kw["batch"] == w and kw["tp"] == tp
+                    for k, kw in tiny
+                )
+            # rows=w mlp_shard exists (possibly shared with a prefill
+            # point of the same row count — variant names key on rows)
+            assert any(
+                k == "mlp_shard" and (kw.get("t_bucket") or kw["batch"] * kw["seq"]) == w
+                for k, kw in tiny
+            )
+
 
 class TestEndToEnd:
     def test_quick_plan_writes_manifest(self, tmp_path):

@@ -1,0 +1,158 @@
+//! Tiered-KV-cache benchmark: concurrent sessions served vs. device slab
+//! size, spill on vs. off (the ISSUE 4 acceptance experiment).
+//!
+//! The claim under test: with the host tier enabled, a device slab sized
+//! for K sessions serves 3K+ concurrent generation sessions with
+//! byte-identical token streams and bounded decode-latency degradation
+//! (< 2× the resident-only p99), because cold sessions' blocks park in
+//! pooled host memory between decode steps and are prefetched back one
+//! bucket ahead of re-entry.
+//!
+//! Results land machine-readably in `BENCH_kvspill.json` at the repo root
+//! (regenerate with `scripts/bench_kvspill.sh`; `BENCH_SMOKE=1` runs a
+//! smaller session wave for CI).
+
+use energonai::coordinator::engine::{Engine, GenRequest, GenRef, LaunchConfig};
+use energonai::memory::kvcache;
+use energonai::runtime::find_artifacts;
+use std::time::Instant;
+
+type Results = Vec<(String, f64)>;
+
+struct CellOut {
+    tokens: Vec<Vec<i32>>,
+    p99_us: Option<f64>,
+}
+
+fn prompts(n: usize) -> Vec<Vec<i32>> {
+    (0..n)
+        .map(|i| {
+            let len = 2 + (i * 3) % 7;
+            (0..len).map(|j| ((i * 31 + j * 7) % 100 + 1) as i32).collect()
+        })
+        .collect()
+}
+
+/// Run `sessions` concurrent generations on a fresh engine; `device`
+/// blocks per worker when spilling (0 = resident-only baseline).
+fn run_cell(sessions: usize, new_tokens: usize, device: usize, results: &mut Results) -> Option<CellOut> {
+    let label = if device > 0 { "spill" } else { "resident" };
+    let mut lc = LaunchConfig::preset("tiny").with_warmup(true);
+    // identical dispatcher pool in both cells: the p99 ratio must
+    // measure tiering overhead, not a different in-flight bound
+    lc.engine.pool_threads = 2;
+    if device > 0 {
+        lc = lc.with_kv_spill(device, 0);
+    }
+    let engine = match Engine::launch(lc) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("skip {label}: {e:#}");
+            return None;
+        }
+    };
+    if !engine.kv_cache_on() {
+        eprintln!("skip {label}: decode artifacts missing");
+        engine.shutdown();
+        return None;
+    }
+    let before = kvcache::global_stats();
+    let t0 = Instant::now();
+    let grefs: Vec<GenRef> = prompts(sessions)
+        .into_iter()
+        .map(|p| engine.generate_stream(GenRequest::new(p, new_tokens)).unwrap())
+        .collect();
+    let tokens: Vec<Vec<i32>> = grefs.iter().map(|g| g.to_here().unwrap()).collect();
+    let wall = t0.elapsed();
+    let m = engine.metrics_snapshot();
+    let stats = m.kvcache_stats();
+    let p99 = m.token_percentile(0.99).map(|d| d.as_secs_f64() * 1e6);
+    println!(
+        "{label:>8}: {sessions} sessions x {new_tokens} toks in {:.1}ms; tok p99 {}; \
+         {} spills / {} prefetches ({} out, {} in), stall {:.1}ms, peak {} blocks",
+        wall.as_secs_f64() * 1e3,
+        p99.map(|v| format!("{v:.1}µs")).unwrap_or_else(|| "-".into()),
+        stats.spills - before.spills,
+        stats.prefetches - before.prefetches,
+        stats.spill_bytes - before.spill_bytes,
+        stats.prefetch_bytes - before.prefetch_bytes,
+        (stats.prefetch_stall_us - before.prefetch_stall_us) as f64 / 1e3,
+        stats.blocks_peak,
+    );
+    let key = |k: &str| format!("{label}_{k}");
+    results.push((key("wall_us"), wall.as_secs_f64() * 1e6));
+    results.push((key("sessions"), sessions as f64));
+    results.push((key("spills"), (stats.spills - before.spills) as f64));
+    results.push((key("prefetches"), (stats.prefetches - before.prefetches) as f64));
+    results.push((key("spill_bytes"), (stats.spill_bytes - before.spill_bytes) as f64));
+    results.push((key("prefetch_bytes"), (stats.prefetch_bytes - before.prefetch_bytes) as f64));
+    results.push((
+        key("prefetch_stall_us"),
+        (stats.prefetch_stall_us - before.prefetch_stall_us) as f64,
+    ));
+    results.push((key("gather_spilled"), (stats.gather_spilled - before.gather_spilled) as f64));
+    results.push((key("overflow_blocks"), (stats.overflow_blocks - before.overflow_blocks) as f64));
+    if let Some(v) = p99 {
+        results.push((key("tok_p99_us"), v));
+    }
+    if let Some(d) = m.token_percentile(0.50) {
+        results.push((key("tok_p50_us"), d.as_secs_f64() * 1e6));
+    }
+    engine.shutdown();
+    Some(CellOut { tokens, p99_us: p99 })
+}
+
+fn write_json(results: &Results) {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_kvspill.json");
+    let mut body = String::from("{\n  \"schema\": \"bench_kvspill/v1\",\n");
+    body.push_str("  \"generated_by\": \"scripts/bench_kvspill.sh\",\n");
+    body.push_str("  \"preset\": \"tiny\",\n");
+    body.push_str("  \"results\": {\n");
+    for (i, (k, v)) in results.iter().enumerate() {
+        let comma = if i + 1 == results.len() { "" } else { "," };
+        body.push_str(&format!("    \"{k}\": {v:.2}{comma}\n"));
+    }
+    body.push_str("  }\n}\n");
+    match std::fs::write(path, body) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}
+
+fn main() {
+    if find_artifacts().is_err() {
+        eprintln!("no AOT artifacts found — run `make artifacts` first; skipping");
+        return;
+    }
+    let smoke = std::env::var("BENCH_SMOKE").is_ok();
+    // tiny sessions run to <= 16 positions => <= 2 blocks each. A device
+    // tier of 8 blocks holds ~K=4 sessions; the wave is >= 3K.
+    let (sessions, new_tokens, device) = if smoke { (12, 4, 8) } else { (24, 8, 8) };
+
+    println!("== tiered KV cache: {sessions} concurrent sessions, device tier {device} blocks ==\n");
+    let mut results = Results::new();
+    let resident = run_cell(sessions, new_tokens, 0, &mut results);
+    let spilled = run_cell(sessions, new_tokens, device, &mut results);
+    if let (Some(r), Some(s)) = (resident, spilled) {
+        let parity = r.tokens == s.tokens;
+        results.push(("parity".into(), if parity { 1.0 } else { 0.0 }));
+        println!(
+            "\nparity: {}",
+            if parity { "byte-identical token streams" } else { "DIVERGED (tiering bug!)" }
+        );
+        if let (Some(rp), Some(sp)) = (r.p99_us, s.p99_us) {
+            results.push(("p99_ratio".into(), sp / rp));
+            println!(
+                "tok p99 spill/resident: {:.2}x (acceptance: < 2x)",
+                sp / rp
+            );
+        }
+        if !parity {
+            // keep the counters on disk — they are the evidence needed
+            // to debug the divergence — then fail the smoke gate
+            write_json(&results);
+            std::process::exit(1);
+        }
+    }
+    write_json(&results);
+}

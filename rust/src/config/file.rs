@@ -16,6 +16,9 @@
 //! blocking_comms = false
 //! consistency_queue = true
 //! kv_cache = true        # incremental decode via the paged K/V cache
+//! kv_spill = true        # tiered cache: spill cold sessions to host
+//! kv_device_blocks = 256 # device-tier cap per worker (blocks)
+//! kv_host_blocks = 1024  # host-tier capacity (0 = unlimited)
 //! pool_threads = 4
 //! max_batch = 32
 //! batch_timeout_us = 2000
@@ -51,6 +54,23 @@ pub fn launch_from_doc(doc: &TomlDoc) -> anyhow::Result<LaunchConfig> {
     launch.engine.batch_timeout_us = doc.usize_or("engine.batch_timeout_us", 2000) as u64;
     launch.engine.batch_deadline_ms = doc.usize_or("engine.batch_deadline_ms", 30_000) as u64;
     launch.engine.kv_cache = doc.bool_or("engine.kv_cache", true);
+    launch.engine.kv_spill = doc.bool_or("engine.kv_spill", false);
+    launch.engine.kv_device_blocks = doc.usize_or("engine.kv_device_blocks", 0);
+    launch.engine.kv_host_blocks = doc.usize_or("engine.kv_host_blocks", 0);
+    launch.engine.kv_spill_high_water =
+        doc.f64_or("engine.kv_spill_high_water", launch.engine.kv_spill_high_water);
+    launch.engine.kv_spill_low_water =
+        doc.f64_or("engine.kv_spill_low_water", launch.engine.kv_spill_low_water);
+    anyhow::ensure!(
+        !launch.engine.kv_spill || launch.engine.kv_device_blocks > 0,
+        "engine.kv_spill requires engine.kv_device_blocks > 0"
+    );
+    anyhow::ensure!(
+        launch.engine.kv_spill_low_water <= launch.engine.kv_spill_high_water
+            && launch.engine.kv_spill_high_water <= 1.0
+            && launch.engine.kv_spill_low_water >= 0.0,
+        "kv spill water marks must satisfy 0 <= low <= high <= 1"
+    );
 
     if let Some(n) = doc.get("model.n_layers").and_then(|v| v.as_usize()) {
         launch = launch.with_layers(n);
@@ -80,6 +100,8 @@ pub fn launch_from_doc(doc: &TomlDoc) -> anyhow::Result<LaunchConfig> {
             "engine.drce", "engine.blocking_comms", "engine.consistency_queue",
             "engine.pool_threads", "engine.max_batch", "engine.batch_timeout_us",
             "engine.batch_deadline_ms", "engine.kv_cache",
+            "engine.kv_spill", "engine.kv_device_blocks", "engine.kv_host_blocks",
+            "engine.kv_spill_high_water", "engine.kv_spill_low_water",
             "model.n_layers",
             "memory.mode", "memory.n_local", "memory.lookahead", "memory.time_scale", "memory.link",
         ];
@@ -147,6 +169,37 @@ lookahead = 2
         assert_eq!(l.parallel.world_size(), 1);
         assert!(matches!(l.memory, MemoryMode::Resident));
         assert!(l.engine.consistency_queue);
+    }
+
+    #[test]
+    fn kv_spill_round_trip_and_validation() {
+        let doc = TomlDoc::parse(
+            r#"
+[engine]
+kv_spill = true
+kv_device_blocks = 64
+kv_host_blocks = 256
+kv_spill_high_water = 0.8
+kv_spill_low_water = 0.5
+"#,
+        )
+        .unwrap();
+        let l = launch_from_doc(&doc).unwrap();
+        assert!(l.engine.kv_spill);
+        assert_eq!(l.engine.kv_device_blocks, 64);
+        assert_eq!(l.engine.kv_host_blocks, 256);
+        assert!((l.engine.kv_spill_high_water - 0.8).abs() < 1e-9);
+        assert!((l.engine.kv_spill_low_water - 0.5).abs() < 1e-9);
+        // spill without a device cap is a config error, not a silent no-op
+        let doc = TomlDoc::parse("[engine]\nkv_spill = true\n").unwrap();
+        let err = launch_from_doc(&doc).unwrap_err().to_string();
+        assert!(err.contains("kv_device_blocks"), "{err}");
+        // inverted water marks are rejected
+        let doc = TomlDoc::parse(
+            "[engine]\nkv_spill = true\nkv_device_blocks = 8\nkv_spill_low_water = 0.95\n",
+        )
+        .unwrap();
+        assert!(launch_from_doc(&doc).is_err());
     }
 
     #[test]

@@ -181,6 +181,20 @@ pub struct EngineConfig {
     /// back to re-prefill decode when they are missing from the manifest.
     /// Disabling this is also the baseline half of the decode bench.
     pub kv_cache: bool,
+    /// Tiered K/V cache (§4.4 applied to generation state): cap every
+    /// worker's device slab and spill cold sessions' blocks to a pooled
+    /// host tier, staging them back before their next decode bucket.
+    /// Off by default — the resident-only fast path is byte-identical.
+    pub kv_spill: bool,
+    /// Device-tier capacity in blocks per worker (required > 0 for
+    /// `kv_spill`; 0 leaves the slab unbounded).
+    pub kv_device_blocks: usize,
+    /// Host-tier capacity in blocks (0 = unlimited).
+    pub kv_host_blocks: usize,
+    /// Spill trigger: fraction of `kv_device_blocks` in use.
+    pub kv_spill_high_water: f64,
+    /// Spill target: evict cold sessions down to this fraction.
+    pub kv_spill_low_water: f64,
 }
 
 impl Default for EngineConfig {
@@ -194,6 +208,11 @@ impl Default for EngineConfig {
             drce: false,
             blocking_comms: false,
             kv_cache: true,
+            kv_spill: false,
+            kv_device_blocks: 0,
+            kv_host_blocks: 0,
+            kv_spill_high_water: 0.90,
+            kv_spill_low_water: 0.70,
         }
     }
 }

@@ -23,6 +23,7 @@
 //! decodes still coalesce).
 
 use super::rpc::{BatchInput, Phase};
+use crate::memory::kvcache::tier::{TierCmd, TierPolicy};
 use crate::tensor::IntTensor;
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
@@ -142,13 +143,33 @@ pub struct Batcher {
     max_batch: usize,
     timeout: Duration,
     queue: VecDeque<(Request, Instant)>,
+    /// Engine-side tiered-KV residency model (`None` = resident-only,
+    /// the byte-identical fast path). When present, `form` becomes the
+    /// **admission gate**: decode buckets are only formed from
+    /// resident-or-prefetched sessions (spilled rows get a sync prefetch
+    /// command first), prefill batches defer when the device tier cannot
+    /// hold them, and prefetch hints are issued one bucket ahead.
+    tier: Option<TierPolicy>,
+    /// Spill/prefetch commands the policy decided on during `form`,
+    /// drained by the caller via [`Batcher::take_tier_cmds`] and
+    /// published *before* the formed batch so ticket order makes every
+    /// gated session resident by the time its forward executes.
+    tier_cmds: Vec<TierCmd>,
 }
 
 impl Batcher {
     pub fn new(mut buckets: Vec<(usize, usize)>, max_batch: usize, timeout: Duration) -> Batcher {
         assert!(!buckets.is_empty(), "no AOT shape points available");
         buckets.sort();
-        Batcher { buckets, decode_points: Vec::new(), max_batch, timeout, queue: VecDeque::new() }
+        Batcher {
+            buckets,
+            decode_points: Vec::new(),
+            max_batch,
+            timeout,
+            queue: VecDeque::new(),
+            tier: None,
+            tier_cmds: Vec::new(),
+        }
     }
 
     /// Enable decode buckets for the given compiled widths.
@@ -157,6 +178,26 @@ impl Batcher {
         widths.dedup();
         self.decode_points = widths.into_iter().map(|w| (w, 1)).collect();
         self
+    }
+
+    /// Attach the tiered-KV policy (spill-to-host mode).
+    pub fn with_tier(mut self, tier: TierPolicy) -> Batcher {
+        self.tier = Some(tier);
+        self
+    }
+
+    pub fn tier(&self) -> Option<&TierPolicy> {
+        self.tier.as_ref()
+    }
+
+    pub fn tier_mut(&mut self) -> Option<&mut TierPolicy> {
+        self.tier.as_mut()
+    }
+
+    /// Drain the tier commands the last `form` calls produced. The caller
+    /// must publish these (ticketed) before publishing the formed batch.
+    pub fn take_tier_cmds(&mut self) -> Vec<TierCmd> {
+        std::mem::take(&mut self.tier_cmds)
     }
 
     pub fn decode_widths(&self) -> Vec<usize> {
@@ -189,10 +230,24 @@ impl Batcher {
     /// Re-enqueue an unfinished generation session at the *front* of the
     /// queue (decode priority): its next step dispatches before any fresh
     /// prefill, so concurrent decodes coalesce into shared buckets. The
-    /// original arrival time is preserved.
+    /// original arrival time is preserved. With the tier policy attached
+    /// this is also the **cold mark**: the session just left a batch, so
+    /// it becomes spillable (LRU by last decode step) until its next
+    /// bucket forms.
     pub fn requeue_front(&mut self, r: Request, arrived: Instant) {
         debug_assert!(r.len() <= self.max_seq() && !r.is_empty());
+        if let Some(t) = self.tier.as_mut() {
+            t.on_requeue(r.id);
+        }
         self.queue.push_front((r, arrived));
+    }
+
+    /// Finished sessions: credit their blocks in the tier model (no-op
+    /// without a tier policy).
+    pub fn tier_free(&mut self, ids: &[u64]) {
+        if let Some(t) = self.tier.as_mut() {
+            t.on_free(ids);
+        }
     }
 
     pub fn pending(&self) -> usize {
@@ -236,7 +291,27 @@ impl Batcher {
         }
         // take up to cap same-phase requests, but never exceed what some
         // bucket fits
-        let take = run.min(cap);
+        let mut take = run.min(cap);
+        // tier capacity caps the bucket width: a decode bucket must fit
+        // beside the already-pinned in-flight working set (cold resident
+        // sessions don't count — the gate can spill them), and a prefill
+        // wave splits into buckets that fit the device tier alone
+        if let Some(t) = self.tier.as_ref() {
+            let rows: Vec<(u64, usize)> =
+                self.queue.iter().take(take).map(|(r, _)| (r.id, r.len())).collect();
+            take = match phase {
+                Phase::Prefill => t.max_prefill_rows(&rows).min(take),
+                Phase::Decode => {
+                    let m = t.max_decode_rows(&rows).min(take);
+                    if m == 0 {
+                        // everything is pinned by in-flight buckets:
+                        // defer until one completes and unpins
+                        return None;
+                    }
+                    m
+                }
+            };
+        }
         let mut reqs: Vec<(Request, Instant)> = Vec::with_capacity(take);
         let mut max_len = 0;
         for _ in 0..take {
@@ -254,6 +329,9 @@ impl Batcher {
                 Phase::Decode => smallest_fitting_bucket(&self.decode_points, reqs.len(), 1),
             };
             if let Some(bucket) = bucket {
+                if !self.tier_gate(phase, &mut reqs) {
+                    return None; // admission control deferred the batch
+                }
                 return Some(FormedBatch {
                     requests: reqs.into_iter().map(|(r, _)| r).collect(),
                     bucket,
@@ -271,7 +349,65 @@ impl Batcher {
         }
     }
 
-    /// Drain everything regardless of timeout (shutdown path).
+    /// The tiered-KV admission gate, run once a bucket has been chosen.
+    /// Returns `false` when admission control defers the batch (the
+    /// requests are pushed back to the queue front in order). Any spill /
+    /// prefetch commands the policy decides on are buffered in
+    /// `tier_cmds` — even on deferral, since pressure relief was already
+    /// applied to the model.
+    fn tier_gate(&mut self, phase: Phase, reqs: &mut Vec<(Request, Instant)>) -> bool {
+        let tier = match self.tier.as_mut() {
+            Some(t) => t,
+            None => return true,
+        };
+        let rows: Vec<(u64, usize)> = reqs.iter().map(|(r, _)| (r.id, r.len())).collect();
+        match phase {
+            Phase::Prefill => {
+                let (cmds, admitted) = tier.admit_prefill(&rows);
+                self.tier_cmds.extend(cmds);
+                if !admitted {
+                    // device tier is full of busy sessions: leave the
+                    // prompts queued (original order + arrival times) and
+                    // retry once running sessions finish. Decode
+                    // continuations re-enter at the queue front, so they
+                    // are never starved by a parked prefill.
+                    for pair in reqs.drain(..).rev() {
+                        self.queue.push_front(pair);
+                    }
+                    return false;
+                }
+            }
+            Phase::Decode => {
+                self.tier_cmds.extend(tier.gate_decode(&rows));
+                // prefetch hints one decode bucket ahead (the
+                // `PoolConfig.lookahead` idea applied to sessions): the
+                // next bucket's worth of queued continuations gets staged
+                // back now, so their admission needs no sync fetch
+                let max_w = self.decode_points.iter().map(|&(w, _)| w).max().unwrap_or(0);
+                let ahead = tier.config().lookahead * max_w.min(self.max_batch);
+                if ahead > 0 {
+                    let upcoming: Vec<(u64, usize)> = self
+                        .queue
+                        .iter()
+                        .take_while(|(r, _)| r.phase == Phase::Decode)
+                        .take(ahead)
+                        .map(|(r, _)| (r.id, r.len()))
+                        .collect();
+                    if !upcoming.is_empty() {
+                        let cmds = tier.prefetch_hint(&upcoming);
+                        self.tier_cmds.extend(cmds);
+                    }
+                }
+            }
+        }
+        true
+    }
+
+    /// Drain everything regardless of timeout (shutdown path). With a
+    /// tier policy attached this is best-effort: prefill batches parked
+    /// by admission control stay queued (`pending() > 0`) until running
+    /// sessions free device blocks — the engine's shutdown drain keeps
+    /// ticking `form` for exactly that reason, rather than calling this.
     pub fn flush(&mut self) -> Vec<FormedBatch> {
         let mut out = Vec::new();
         while !self.queue.is_empty() {
@@ -479,6 +615,90 @@ mod tests {
     fn decode_widths_are_sorted_and_deduped() {
         let b = batcher().with_decode_widths(vec![4, 1, 4, 2]);
         assert_eq!(b.decode_widths(), vec![1, 2, 4]);
+    }
+
+    use crate::memory::kvcache::tier::TierConfig;
+
+    #[test]
+    fn no_tier_means_no_commands() {
+        let mut b = decode_batcher();
+        let old = Instant::now() - Duration::from_millis(20);
+        b.requeue_front(Request::decode(1, vec![5; 4]), old);
+        b.form(Instant::now()).expect("decode forms");
+        assert!(b.tier().is_none());
+        assert!(b.take_tier_cmds().is_empty());
+    }
+
+    #[test]
+    fn prefill_admission_defers_until_capacity_frees() {
+        // one-block device tier (bp=8: a len-8 prompt is one block)
+        let mut b = batcher()
+            .with_decode_widths(vec![1, 2, 4])
+            .with_tier(TierPolicy::new(TierConfig::new(1, 4), 8));
+        let old = Instant::now() - Duration::from_millis(20);
+        b.push_at(req(1, 8), old).unwrap();
+        let fb = b.form(Instant::now()).expect("first prompt admits");
+        assert_eq!(fb.requests[0].id, 1);
+        assert!(b.take_tier_cmds().is_empty());
+        // 1 is pinned (in flight): 2 cannot fit and cannot evict -> defer
+        b.push_at(req(2, 8), old).unwrap();
+        assert!(b.form(Instant::now()).is_none(), "must defer while 1 is pinned");
+        assert_eq!(b.pending(), 1, "deferred request stays queued");
+        // 1 finishes and frees its blocks; 2 admits now
+        b.tier_free(&[1]);
+        let fb2 = b.form(Instant::now()).expect("admits after free");
+        assert_eq!(fb2.requests[0].id, 2);
+    }
+
+    #[test]
+    fn decode_gate_prefetches_and_hints_spilled_sessions() {
+        // max_batch 1 => width-1 decode buckets, so the lookahead peeks a
+        // *queued* session instead of batching it
+        let mut b = Batcher::new(vec![(1, 16), (2, 16), (4, 32)], 1, Duration::from_millis(10))
+            .with_decode_widths(vec![1, 2, 4])
+            .with_tier(TierPolicy::new(TierConfig::new(8, 64), 8));
+        let old = Instant::now() - Duration::from_millis(20);
+        // fill the 8-block device tier with 8 one-block sessions
+        for id in 1..=8u64 {
+            b.push_at(req(id, 8), old).unwrap();
+            let fb = b.form(Instant::now()).expect("prefill admits");
+            assert_eq!(fb.requests[0].id, id);
+            assert!(b.take_tier_cmds().is_empty());
+            b.tier_mut().unwrap().on_requeue(id);
+        }
+        // a 9th prompt forces LRU spills (1 is coldest)
+        b.push_at(req(9, 8), old).unwrap();
+        b.form(Instant::now()).expect("prefill admits by spilling");
+        let cmds = b.take_tier_cmds();
+        assert!(
+            matches!(&cmds[0], TierCmd::Spill(ids) if ids.contains(&1) && ids.contains(&2)),
+            "{cmds:?}"
+        );
+        b.tier_mut().unwrap().on_requeue(9);
+        assert_eq!(b.tier().unwrap().is_resident(1), Some(false));
+        assert_eq!(b.tier().unwrap().is_resident(2), Some(false));
+        // session 1's decode bucket forms; spilled session 2 queues behind
+        b.requeue_front(Request::decode(2, vec![7; 9]), old);
+        b.requeue_front(Request::decode(1, vec![7; 9]), old);
+        let fb = b.form(Instant::now()).expect("decode bucket forms");
+        assert_eq!(fb.phase, Phase::Decode);
+        assert_eq!(fb.requests.len(), 1);
+        assert_eq!(fb.requests[0].id, 1);
+        let cmds = b.take_tier_cmds();
+        // 1 staged back synchronously for its own bucket...
+        assert!(
+            cmds.iter()
+                .any(|c| matches!(c, TierCmd::Prefetch { ids, hint: false } if ids == &vec![1])),
+            "{cmds:?}"
+        );
+        // ...and 2 hinted back one bucket ahead
+        assert!(
+            cmds.iter()
+                .any(|c| matches!(c, TierCmd::Prefetch { ids, hint: true } if ids.contains(&2))),
+            "{cmds:?}"
+        );
+        assert_eq!(b.tier().unwrap().is_resident(1), Some(true));
+        assert_eq!(b.tier().unwrap().is_resident(2), Some(true));
     }
 
     #[test]

@@ -14,6 +14,15 @@
 //! queue — on completion, stop token, error, or watchdog poison. Without
 //! them the engine falls back to the legacy re-prefill continuation path.
 //!
+//! With `engine.kv_spill` the cache is **tiered** (§4.4 applied to
+//! generation state): every worker's device slab is capped, cold
+//! sessions spill whole-session block images to a ledger-accounted host
+//! tier, and the batch former — consulting the engine-side
+//! `TierPolicy` — publishes ticketed `Spill`/`Prefetch` commands ahead
+//! of each bucket so sessions are always resident when their decode step
+//! executes (prefetch-on-reentry, one bucket of lookahead, prefill
+//! admission control).
+//!
 //! Public usage mirrors the paper's Fig. 9, plus streaming generation:
 //!
 //! ```no_run
@@ -39,6 +48,7 @@ use super::worker::{ActMsg, Reply, Worker, WorkerCtx};
 use crate::comm::channel::{CommWorld, Mode};
 use crate::comm::collective::ChunkMsg;
 use crate::config::{EngineConfig, ModelConfig, ParallelConfig};
+use crate::memory::kvcache::tier::{TierCmd, TierConfig, TierPolicy};
 use crate::memory::kvcache::{KvCache, KvCacheConfig};
 use crate::memory::pool::{PoolConfig, PooledProvider};
 use crate::memory::{LayerProvider, ResidentProvider};
@@ -134,7 +144,25 @@ impl LaunchConfig {
         self.engine.kv_cache = on;
         self
     }
+
+    /// Enable the tiered K/V cache: cap every worker's device slab at
+    /// `device_blocks` and spill cold sessions to a host tier of
+    /// `host_blocks` (0 = unlimited), with prefetch-on-reentry and
+    /// admission control. Requires the decode artifacts (`kv_cache`);
+    /// with spill off the resident-only fast path is byte-identical to
+    /// before.
+    pub fn with_kv_spill(mut self, device_blocks: usize, host_blocks: usize) -> Self {
+        self.engine.kv_spill = true;
+        self.engine.kv_device_blocks = device_blocks;
+        self.engine.kv_host_blocks = host_blocks;
+        self
+    }
 }
+
+/// Paging granularity every worker's cache and the engine-side tier
+/// policy must agree on (block counts per session are derived from it on
+/// both sides).
+pub const KV_BLOCK_POSITIONS: usize = 8;
 
 /// A generation request entering the session lifecycle: the prompt, how
 /// many continuation tokens to sample, and an optional stop token that
@@ -343,6 +371,21 @@ impl Shared {
             self.bus.publish_release(uid, ids);
         }
     }
+
+    /// Publish the tier policy's spill/prefetch decisions, one ticket
+    /// each, in decision order. Called by the batch former *before* it
+    /// hands the formed batch to a dispatcher, so every tier command's
+    /// ticket precedes the forward that depends on it — the consistency
+    /// queue then guarantees residency without any worker backchannel.
+    fn publish_tier(&self, cmds: Vec<TierCmd>) {
+        for cmd in cmds {
+            let uid = self.tickets.issue();
+            match cmd {
+                TierCmd::Spill(ids) => self.bus.publish_spill(uid, ids),
+                TierCmd::Prefetch { ids, hint } => self.bus.publish_prefetch(uid, ids, hint),
+            }
+        }
+    }
 }
 
 /// The running system: workers + dispatcher pool + collector.
@@ -389,6 +432,25 @@ impl Engine {
             Vec::new()
         };
         let kv_on = !decode_widths.is_empty();
+        // tiered KV cache: spill cold sessions to pooled host memory.
+        // Engine-side policy + per-worker host tiers only exist when the
+        // knob is on *and* incremental decode is live; otherwise the
+        // resident-only fast path is untouched. Builder-path configs get
+        // the same validation the TOML loader enforces — a bad spill
+        // config is an Err here, not a silent no-op or a thread panic.
+        if launch.engine.kv_spill {
+            anyhow::ensure!(
+                launch.engine.kv_device_blocks > 0,
+                "engine.kv_spill requires engine.kv_device_blocks > 0"
+            );
+            anyhow::ensure!(
+                launch.engine.kv_spill_low_water <= launch.engine.kv_spill_high_water
+                    && launch.engine.kv_spill_high_water <= 1.0
+                    && launch.engine.kv_spill_low_water >= 0.0,
+                "kv spill water marks must satisfy 0 <= low <= high <= 1"
+            );
+        }
+        let spill_on = kv_on && launch.engine.kv_spill;
 
         let world = par.world_size();
         let (bus, cmd_rxs) = CommandBus::new(world);
@@ -420,6 +482,31 @@ impl Engine {
                     },
                     kv_cache: kv_on,
                 };
+                // paged per-session K/V storage for this worker's layer
+                // shard: width is hidden/tp (the shard's K or V row);
+                // under spill the device slab is capped and a ledger-
+                // accounted host tier sits behind it
+                let kv_cfg = kv_on.then(|| {
+                    let mut c = KvCacheConfig::new(
+                        KV_BLOCK_POSITIONS,
+                        ctx.layers.len(),
+                        cfg.hidden / par.tp,
+                    )
+                    .with_device_id(ctx.device_id());
+                    if spill_on {
+                        // host_blocks == 0 means "unlimited" at the
+                        // engine level; the worker tier encodes that as
+                        // a saturating capacity
+                        let host = match launch.engine.kv_host_blocks {
+                            0 => usize::MAX,
+                            n => n,
+                        };
+                        c = c
+                            .with_device_capacity(launch.engine.kv_device_blocks)
+                            .with_host_tier(host);
+                    }
+                    c
+                });
                 let args = (
                     ctx,
                     manifest.clone(),
@@ -427,6 +514,7 @@ impl Engine {
                     launch.memory.clone(),
                     launch.seed,
                     launch.warmup,
+                    kv_cfg,
                     coll_it.next().unwrap(),
                     act_it.next().unwrap(),
                     cmd_it.next().unwrap(),
@@ -434,9 +522,9 @@ impl Engine {
                 );
                 let ready_tx = ready_tx.clone();
                 workers.push(std::thread::spawn(move || {
-                    let (ctx, man, cfg, mem, seed, warm, coll, act, cmd, reply) = args;
+                    let (ctx, man, cfg, mem, seed, warm, kv_cfg, coll, act, cmd, reply) = args;
                     let id = ctx.device_id();
-                    match build_worker(ctx, man, cfg, mem, seed, warm, coll, act, cmd, reply) {
+                    match build_worker(ctx, man, cfg, mem, seed, warm, kv_cfg, coll, act, cmd, reply) {
                         Ok(w) => {
                             let _ = ready_tx.send(Ok(id));
                             w.run()
@@ -473,14 +561,22 @@ impl Engine {
         });
 
         // ---- batcher ---------------------------------------------------------
-        let batcher = Arc::new(Mutex::new(
-            Batcher::new(
-                manifest.shape_points(&launch.preset),
-                launch.engine.max_batch,
-                Duration::from_micros(launch.engine.batch_timeout_us),
-            )
-            .with_decode_widths(decode_widths),
-        ));
+        let mut b = Batcher::new(
+            manifest.shape_points(&launch.preset),
+            launch.engine.max_batch,
+            Duration::from_micros(launch.engine.batch_timeout_us),
+        )
+        .with_decode_widths(decode_widths);
+        if spill_on {
+            // the engine-side residency model: form() becomes the
+            // admission gate and spill/prefetch decision point
+            let mut tcfg =
+                TierConfig::new(launch.engine.kv_device_blocks, launch.engine.kv_host_blocks);
+            tcfg.high_water = launch.engine.kv_spill_high_water;
+            tcfg.low_water = launch.engine.kv_spill_low_water;
+            b = b.with_tier(TierPolicy::new(tcfg, KV_BLOCK_POSITIONS));
+        }
+        let batcher = Arc::new(Mutex::new(b));
         let max_seq = batcher.lock().unwrap().max_seq();
         let (batch_signal, batch_rx) = std::sync::mpsc::channel::<()>();
 
@@ -506,8 +602,9 @@ impl Engine {
         // configured deadline instead of letting shutdown spin.
         {
             let shared = shared.clone();
+            let batcher = batcher.clone();
             let deadline = Duration::from_millis(launch.engine.batch_deadline_ms.max(1));
-            service.push(std::thread::spawn(move || watchdog_loop(shared, deadline)));
+            service.push(std::thread::spawn(move || watchdog_loop(shared, batcher, deadline)));
         }
 
         // ---- former + dispatcher pool (Fig. 5) -------------------------------
@@ -526,7 +623,17 @@ impl Engine {
                     }
                     let _ = batch_rx.recv_timeout(tick);
                     loop {
-                        let fb = batcher.lock().unwrap().form(Instant::now());
+                        let (fb, tier_cmds) = {
+                            let mut b = batcher.lock().unwrap();
+                            let fb = b.form(Instant::now());
+                            (fb, b.take_tier_cmds())
+                        };
+                        // tier commands are published here — before the
+                        // batch reaches a dispatcher — so their tickets
+                        // precede the forward's on every worker
+                        if !tier_cmds.is_empty() {
+                            shared.publish_tier(tier_cmds);
+                        }
                         match fb {
                             Some(fb) => {
                                 if fb_tx.send(fb).is_err() {
@@ -650,6 +757,13 @@ impl Engine {
     /// Is incremental decode live (decode artifacts present + enabled)?
     pub fn kv_cache_on(&self) -> bool {
         self.shared.kv_on
+    }
+
+    /// Is the tiered (spill-to-host) K/V cache live?
+    pub fn kv_spill_on(&self) -> bool {
+        self.shared.kv_on
+            && self.launch.engine.kv_spill
+            && self.launch.engine.kv_device_blocks > 0
     }
 
     pub fn pending_count(&self) -> usize {
@@ -776,7 +890,7 @@ fn collector_loop(
                         // publish while the sessions lock is held: shutdown's
                         // drain must not observe an empty table before the
                         // release command is on every worker's queue
-                        shared.release_sessions(released);
+                        shared.release_sessions(released.clone());
                     }
                     if !token_lats.is_empty() {
                         let mut m = shared.metrics.lock().unwrap();
@@ -788,10 +902,14 @@ fn collector_loop(
                             }
                         }
                     }
-                    if !continuations.is_empty() {
+                    if !continuations.is_empty() || !released.is_empty() {
                         let mut b = batcher.lock().unwrap();
+                        // tier model: freed sessions credit their blocks
+                        // (freed capacity may admit a deferred prefill)
+                        b.tier_free(&released);
                         // reversed so batch row order survives the
-                        // front-pushes (decode priority)
+                        // front-pushes (decode priority); requeue_front
+                        // also cold-marks each session in the tier model
                         for (r, arrived) in continuations.into_iter().rev() {
                             b.requeue_front(r, arrived);
                         }
@@ -803,15 +921,21 @@ fn collector_loop(
             Err(e) => {
                 if from_batcher {
                     let mut released = Vec::new();
-                    let mut sessions = shared.sessions.lock().unwrap();
-                    for row in &rows {
-                        if let Some(sess) = sessions.remove(&row.id) {
-                            sess.gref.finish(Err(anyhow::anyhow!("{e}")));
-                            released.push(row.id);
+                    {
+                        let mut sessions = shared.sessions.lock().unwrap();
+                        for row in &rows {
+                            if let Some(sess) = sessions.remove(&row.id) {
+                                sess.gref.finish(Err(anyhow::anyhow!("{e}")));
+                                released.push(row.id);
+                            }
                         }
+                        // under the lock — see the Ok branch
+                        shared.release_sessions(released.clone());
                     }
-                    // under the lock — see the Ok branch
-                    shared.release_sessions(released);
+                    if !released.is_empty() {
+                        batcher.lock().unwrap().tier_free(&released);
+                        let _ = signal.send(());
+                    }
                 }
             }
         }
@@ -823,7 +947,7 @@ fn collector_loop(
 /// A non-replier worker error drops the activation, so the replier never
 /// reports and the batch would otherwise hang its `RRef` (and `shutdown`
 /// would busy-wait forever on `pending_count`).
-fn watchdog_loop(shared: Arc<Shared>, deadline: Duration) {
+fn watchdog_loop(shared: Arc<Shared>, batcher: Arc<Mutex<Batcher>>, deadline: Duration) {
     // short dozes keep shutdown responsive; the pending scan itself runs at
     // deadline/4 granularity (bounded to 1s) so the shared lock is touched
     // rarely relative to the hot path
@@ -833,7 +957,7 @@ fn watchdog_loop(shared: Arc<Shared>, deadline: Duration) {
     while !shared.stopping.load(Ordering::SeqCst) {
         std::thread::sleep(doze);
         if last_scan.elapsed() >= scan_every {
-            expire_stale(&shared, deadline);
+            expire_stale(&shared, &batcher, deadline);
             last_scan = Instant::now();
         }
     }
@@ -841,7 +965,7 @@ fn watchdog_loop(shared: Arc<Shared>, deadline: Duration) {
 
 /// Remove and fail every pending batch older than `deadline`. Returns how
 /// many batches were expired.
-fn expire_stale(shared: &Shared, deadline: Duration) -> usize {
+fn expire_stale(shared: &Shared, batcher: &Mutex<Batcher>, deadline: Duration) -> usize {
     let stale: Vec<(u64, Pending)> = {
         let mut pending = shared.pending.lock().unwrap();
         let uids: Vec<u64> = pending
@@ -859,18 +983,24 @@ fn expire_stale(shared: &Shared, deadline: Duration) -> usize {
         );
         if p.from_batcher {
             let mut released = Vec::new();
-            let mut sessions = shared.sessions.lock().unwrap();
-            for row in &p.rows {
-                if let Some(sess) = sessions.remove(&row.id) {
-                    sess.gref.finish(Err(anyhow::anyhow!("{msg}")));
-                    released.push(row.id);
+            {
+                let mut sessions = shared.sessions.lock().unwrap();
+                for row in &p.rows {
+                    if let Some(sess) = sessions.remove(&row.id) {
+                        sess.gref.finish(Err(anyhow::anyhow!("{msg}")));
+                        released.push(row.id);
+                    }
                 }
+                // poisoned sessions must not leak their cache blocks: workers
+                // that survive still hold them until this ticketed release,
+                // published under the sessions lock so shutdown's drain can't
+                // race past an un-published release
+                shared.release_sessions(released.clone());
             }
-            // poisoned sessions must not leak their cache blocks: workers
-            // that survive still hold them until this ticketed release,
-            // published under the sessions lock so shutdown's drain can't
-            // race past an un-published release
-            shared.release_sessions(released);
+            // tier model: poisoned sessions' blocks (either tier) are free
+            if !released.is_empty() {
+                batcher.lock().unwrap().tier_free(&released);
+            }
         }
         p.rref.fulfil(Err(anyhow::anyhow!("{msg}")));
     }
@@ -885,6 +1015,7 @@ fn build_worker(
     memory: MemoryMode,
     seed: u64,
     warmup: bool,
+    kv_cfg: Option<KvCacheConfig>,
     coll_ep: crate::comm::channel::Endpoint<ChunkMsg>,
     act_ep: crate::comm::channel::Endpoint<ActMsg>,
     cmd_rx: std::sync::mpsc::Receiver<super::rpc::Command>,
@@ -980,11 +1111,9 @@ fn build_worker(
         }
     }
 
-    // paged per-session K/V storage for this worker's layer shard: width
-    // is hidden/tp (the shard's K or V row), 8 positions per block
-    let kv = ctx
-        .kv_cache
-        .then(|| KvCache::new(KvCacheConfig::new(8, ctx.layers.len(), cfg.hidden / ctx.par.tp)));
+    // paged (possibly two-tier) per-session K/V storage for this
+    // worker's layer shard; the engine sized the config at launch
+    let kv = kv_cfg.map(KvCache::new);
 
     Ok(Worker {
         ctx,
@@ -1078,13 +1207,23 @@ mod tests {
                 from_batcher: true,
             },
         );
+        let batcher = Mutex::new(
+            Batcher::new(vec![(1, 16)], 4, Duration::from_millis(10))
+                .with_tier(TierPolicy::new(TierConfig::new(8, 8), 8)),
+        );
+        // the tier model learns of the session via its decode gate
+        batcher.lock().unwrap().tier_mut().unwrap().gate_decode(&[(9, 2)]);
+        assert_eq!(batcher.lock().unwrap().tier().unwrap().session_count(), 1);
         // under a generous deadline nothing expires
-        assert_eq!(expire_stale(&shared, Duration::from_secs(3600)), 0);
+        assert_eq!(expire_stale(&shared, &batcher, Duration::from_secs(3600)), 0);
         assert!(!rref.is_ready());
         // at a zero deadline the batch is poisoned: the RRef errors instead
         // of hanging, and the session's stream fails
         std::thread::sleep(Duration::from_millis(2));
-        assert_eq!(expire_stale(&shared, Duration::ZERO), 1);
+        assert_eq!(expire_stale(&shared, &batcher, Duration::ZERO), 1);
+        // the poisoned session's blocks were credited in the tier model
+        assert_eq!(batcher.lock().unwrap().tier().unwrap().session_count(), 0);
+        assert_eq!(batcher.lock().unwrap().tier().unwrap().device_used(), 0);
         assert!(rref.to_here().is_err());
         assert!(gref.to_here().is_err());
         assert!(shared.sessions.lock().unwrap().is_empty());

@@ -82,6 +82,18 @@ pub enum Command {
     /// release can never overtake a still-queued decode step of the same
     /// session on a lagging worker.
     Release { uid: u64, ids: Arc<Vec<u64>> },
+    /// Write the listed sessions' K/V blocks out to the host tier
+    /// (tiered cache). Ticketed: victims are chosen cold by the engine's
+    /// tier policy, and ticket order guarantees the spill lands after
+    /// any earlier forward that still reads those sessions.
+    Spill { uid: u64, ids: Arc<Vec<u64>> },
+    /// Stage the listed sessions' K/V blocks back into the device tier.
+    /// Published *before* the decode bucket that needs them, so ticket
+    /// order doubles as the residency guarantee; `hint` marks lookahead
+    /// prefetches (a bucket ahead) vs sync fetches at bucket admission
+    /// (whose copy time is the decode stall the lookahead exists to
+    /// hide).
+    Prefetch { uid: u64, ids: Arc<Vec<u64>>, hint: bool },
     /// Drain and exit the worker loop.
     Shutdown,
 }
@@ -120,6 +132,22 @@ impl CommandBus {
         let ids = Arc::new(ids);
         for s in &self.senders {
             let _ = s.send(Command::Release { uid, ids: ids.clone() });
+        }
+    }
+
+    /// Publish a tier spill (device → host) for the listed sessions.
+    pub fn publish_spill(&self, uid: u64, ids: Vec<u64>) {
+        let ids = Arc::new(ids);
+        for s in &self.senders {
+            let _ = s.send(Command::Spill { uid, ids: ids.clone() });
+        }
+    }
+
+    /// Publish a tier prefetch (host → device) for the listed sessions.
+    pub fn publish_prefetch(&self, uid: u64, ids: Vec<u64>, hint: bool) {
+        let ids = Arc::new(ids);
+        for s in &self.senders {
+            let _ = s.send(Command::Prefetch { uid, ids: ids.clone(), hint });
         }
     }
 
@@ -233,6 +261,30 @@ mod tests {
                     assert_eq!(*ids, vec![7, 9]);
                 }
                 _ => panic!("expected Release"),
+            }
+        }
+    }
+
+    #[test]
+    fn tier_commands_reach_all_workers() {
+        let (bus, rxs) = CommandBus::new(2);
+        bus.publish_spill(4, vec![1]);
+        bus.publish_prefetch(5, vec![1], true);
+        for rx in &rxs {
+            match rx.recv().unwrap() {
+                Command::Spill { uid, ids } => {
+                    assert_eq!(uid, 4);
+                    assert_eq!(*ids, vec![1]);
+                }
+                _ => panic!("expected Spill"),
+            }
+            match rx.recv().unwrap() {
+                Command::Prefetch { uid, ids, hint } => {
+                    assert_eq!(uid, 5);
+                    assert_eq!(*ids, vec![1]);
+                    assert!(hint);
+                }
+                _ => panic!("expected Prefetch"),
             }
         }
     }

@@ -92,7 +92,9 @@ pub struct Worker {
     pub logits_lits: Option<Vec<xla::Literal>>,
     /// Paged per-session K/V storage for this worker's layers (`None`
     /// when incremental decode is off or the artifacts lack the decode
-    /// variants). Sessions are freed by ticketed `Command::Release`.
+    /// variants). Sessions are freed by ticketed `Command::Release`;
+    /// under the tiered cache, `Command::Spill`/`Command::Prefetch` move
+    /// whole sessions between the device slab and the host tier.
     pub kv: Option<KvCache>,
 }
 
@@ -111,12 +113,16 @@ enum Act {
     Packed(Tensor, DrceMaps),
 }
 
-/// A ticketed unit of worker work: a forward pass or a cache release.
-/// Both flow through the consistency queue so releases can never overtake
-/// a still-queued decode step of the same session.
+/// A ticketed unit of worker work: a forward pass, a cache release, or a
+/// tier move. All flow through the consistency queue, so a release can
+/// never overtake a still-queued decode step of the same session — and a
+/// prefetch published before a decode bucket is always applied before
+/// that bucket executes (the tiered cache's residency guarantee).
 enum Work {
     Forward(Arc<BatchInput>),
     Release(Arc<Vec<u64>>),
+    Spill(Arc<Vec<u64>>),
+    Prefetch { ids: Arc<Vec<u64>>, hint: bool },
 }
 
 impl Worker {
@@ -139,6 +145,31 @@ impl Worker {
                             }
                         }
                     }
+                    Work::Spill(ids) => {
+                        if let Some(kv) = &mut self.kv {
+                            for &id in ids.iter() {
+                                kv.spill(id);
+                            }
+                        }
+                    }
+                    Work::Prefetch { ids, hint } => {
+                        if let Some(kv) = &mut self.kv {
+                            let t0 = std::time::Instant::now();
+                            let mut moved = 0u64;
+                            for &id in ids.iter() {
+                                moved += kv.prefetch(id);
+                            }
+                            // a non-hint prefetch was issued at bucket
+                            // admission: its copy time sits on the decode
+                            // critical path (the stall the lookahead
+                            // hints exist to hide)
+                            if !hint && moved > 0 {
+                                crate::memory::kvcache::note_prefetch_stall_us(
+                                    t0.elapsed().as_micros() as u64,
+                                );
+                            }
+                        }
+                    }
                 }
                 continue;
             }
@@ -148,6 +179,10 @@ impl Worker {
             match self.cmd_rx.recv() {
                 Ok(Command::Forward { uid, input }) => queue.push(uid, (uid, Work::Forward(input))),
                 Ok(Command::Release { uid, ids }) => queue.push(uid, (uid, Work::Release(ids))),
+                Ok(Command::Spill { uid, ids }) => queue.push(uid, (uid, Work::Spill(ids))),
+                Ok(Command::Prefetch { uid, ids, hint }) => {
+                    queue.push(uid, (uid, Work::Prefetch { ids, hint }))
+                }
                 Ok(Command::Shutdown) | Err(_) => shutting_down = true,
             }
         }

@@ -1,0 +1,910 @@
+//! Paged per-session K/V cache: the storage half of incremental decode —
+//! now a **two-tier** store.
+//!
+//! Generation sessions keep the K/V rows of every processed position so a
+//! decode step runs *one* position through the linears instead of
+//! re-running the whole prefix (the paper's redundant-computation-
+//! elimination idea, §4.2.2, applied along the time axis). Storage is
+//! **paged** in the spirit of the paper's memory-pooling technique (§4.4):
+//! one worker-local slab is carved into fixed-size *position blocks*; each
+//! session holds a block table mapping logical position-block → physical
+//! block, so thousands of concurrent sessions of wildly different lengths
+//! share the slab with at most `block_positions - 1` wasted rows each and
+//! zero copying on growth.
+//!
+//! The **device tier** is that slab. The **host tier** ([`tier::HostTier`])
+//! is a [`crate::memory::MemoryLedger`]-accounted spill arena: a cold
+//! session's whole block set can be written out ([`KvCache::spill`]) and
+//! staged back ([`KvCache::prefetch`]) — §4.4's larger heterogeneous
+//! memory space applied to generation state, so the number of *live*
+//! sessions is no longer capped by the device slab. Which sessions move,
+//! and when, is decided engine-side by [`tier::TierPolicy`] and arrives
+//! here as ticketed commands; this module only executes the copies.
+//!
+//! Block layout (one block, `layers` local layers, K and V planes):
+//!
+//! ```text
+//! [layer 0 | K rows][layer 0 | V rows][layer 1 | K rows]...
+//!            each plane: block_positions × width f32
+//! ```
+//!
+//! so the (layer, K/V) plane of a block is contiguous and `gather` into
+//! the per-step staging tensor is one `copy_from_slice` per (block,
+//! layer). Freed blocks go to a free list and are recycled before the
+//! slab grows; alloc/recycle/peak/spill counters are mirrored into
+//! process-wide atomics surfaced through `metrics::Recorder` (like the
+//! activation arena's, §Perf).
+
+pub mod tier;
+
+use crate::memory::arena::ArenaPool;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use tier::HostTier;
+
+/// Process-wide counters, aggregated across every worker's cache.
+/// `blocks_in_use`, `host_bytes` and `sessions*` are gauges; the rest are
+/// monotonic.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct KvStats {
+    /// Blocks currently backing live sessions (all workers).
+    pub blocks_in_use: u64,
+    /// High-water mark of `blocks_in_use`.
+    pub blocks_peak: u64,
+    /// Block checkouts served from a free list instead of slab growth.
+    pub blocks_recycled: u64,
+    /// Blocks newly carved by growing a slab.
+    pub blocks_grown: u64,
+    /// Total slab bytes reserved across workers.
+    pub slab_bytes: u64,
+    /// Sessions currently holding cache entries.
+    pub sessions: u64,
+    /// Whole-session writes to the host tier.
+    pub spills: u64,
+    /// Whole-session stagings back to the device tier.
+    pub prefetches: u64,
+    /// Bytes moved device → host by spills.
+    pub spill_bytes: u64,
+    /// Bytes moved host → device by prefetches.
+    pub prefetch_bytes: u64,
+    /// Host-tier bytes currently held (all workers).
+    pub host_bytes: u64,
+    /// Sessions currently parked in the host tier.
+    pub sessions_spilled: u64,
+    /// Time spent copying sessions back synchronously because a decode
+    /// bucket needed them *now* (the lookahead failed to hide it) — the
+    /// decode-stall-on-prefetch number.
+    pub prefetch_stall_us: u64,
+    /// `gather`/`write_row`/`write_prefix` calls that hit a spilled
+    /// session (admission-gate bug: loud, never silent).
+    pub gather_spilled: u64,
+    /// `free` calls for sessions this cache never held (error-path
+    /// releases are legitimate but must be visible).
+    pub free_unknown: u64,
+    /// Spills refused because the host tier ledger was full.
+    pub spill_denied: u64,
+    /// Device blocks carved past the configured soft capacity (the
+    /// engine-side policy failed to keep pressure down).
+    pub overflow_blocks: u64,
+}
+
+static G_IN_USE: AtomicU64 = AtomicU64::new(0);
+static G_PEAK: AtomicU64 = AtomicU64::new(0);
+static G_RECYCLED: AtomicU64 = AtomicU64::new(0);
+static G_GROWN: AtomicU64 = AtomicU64::new(0);
+static G_SLAB_BYTES: AtomicU64 = AtomicU64::new(0);
+static G_SESSIONS: AtomicU64 = AtomicU64::new(0);
+static G_SPILLS: AtomicU64 = AtomicU64::new(0);
+static G_PREFETCHES: AtomicU64 = AtomicU64::new(0);
+static G_SPILL_BYTES: AtomicU64 = AtomicU64::new(0);
+static G_PREFETCH_BYTES: AtomicU64 = AtomicU64::new(0);
+static G_HOST_BYTES: AtomicU64 = AtomicU64::new(0);
+static G_SESSIONS_SPILLED: AtomicU64 = AtomicU64::new(0);
+static G_PREFETCH_STALL_US: AtomicU64 = AtomicU64::new(0);
+static G_GATHER_SPILLED: AtomicU64 = AtomicU64::new(0);
+static G_FREE_UNKNOWN: AtomicU64 = AtomicU64::new(0);
+static G_SPILL_DENIED: AtomicU64 = AtomicU64::new(0);
+static G_OVERFLOW: AtomicU64 = AtomicU64::new(0);
+
+/// Process-wide snapshot (what `Engine::metrics_snapshot` folds into the
+/// `Recorder`). Workers update the atomics as they allocate and free.
+pub fn global_stats() -> KvStats {
+    KvStats {
+        blocks_in_use: G_IN_USE.load(Ordering::Relaxed),
+        blocks_peak: G_PEAK.load(Ordering::Relaxed),
+        blocks_recycled: G_RECYCLED.load(Ordering::Relaxed),
+        blocks_grown: G_GROWN.load(Ordering::Relaxed),
+        slab_bytes: G_SLAB_BYTES.load(Ordering::Relaxed),
+        sessions: G_SESSIONS.load(Ordering::Relaxed),
+        spills: G_SPILLS.load(Ordering::Relaxed),
+        prefetches: G_PREFETCHES.load(Ordering::Relaxed),
+        spill_bytes: G_SPILL_BYTES.load(Ordering::Relaxed),
+        prefetch_bytes: G_PREFETCH_BYTES.load(Ordering::Relaxed),
+        host_bytes: G_HOST_BYTES.load(Ordering::Relaxed),
+        sessions_spilled: G_SESSIONS_SPILLED.load(Ordering::Relaxed),
+        prefetch_stall_us: G_PREFETCH_STALL_US.load(Ordering::Relaxed),
+        gather_spilled: G_GATHER_SPILLED.load(Ordering::Relaxed),
+        free_unknown: G_FREE_UNKNOWN.load(Ordering::Relaxed),
+        spill_denied: G_SPILL_DENIED.load(Ordering::Relaxed),
+        overflow_blocks: G_OVERFLOW.load(Ordering::Relaxed),
+    }
+}
+
+/// Attribute synchronous (non-hint) prefetch copy time — the worker calls
+/// this with the measured duration of each sync staging.
+pub fn note_prefetch_stall_us(us: u64) {
+    G_PREFETCH_STALL_US.fetch_add(us, Ordering::Relaxed);
+}
+
+fn note_in_use_delta(delta: i64) {
+    let now = if delta >= 0 {
+        G_IN_USE.fetch_add(delta as u64, Ordering::Relaxed) + delta as u64
+    } else {
+        G_IN_USE.fetch_sub((-delta) as u64, Ordering::Relaxed) - (-delta) as u64
+    };
+    G_PEAK.fetch_max(now, Ordering::Relaxed);
+}
+
+/// Geometry of one worker's cache.
+#[derive(Clone, Copy, Debug)]
+pub struct KvCacheConfig {
+    /// Positions per block (the paging granularity).
+    pub block_positions: usize,
+    /// Local transformer layers this worker executes.
+    pub layers: usize,
+    /// Width of one K (or V) row in f32 — `hidden / tp`.
+    pub width: usize,
+    /// Blocks added per slab growth (amortizes allocation).
+    pub grow_blocks: usize,
+    /// Soft cap on device-tier blocks (0 = unbounded, the resident-only
+    /// configuration). Growth past the cap is tolerated — correctness
+    /// never hinges on the engine-side policy — but counted loudly in
+    /// `overflow_blocks`, and growth switches to single blocks so the
+    /// gauge is exact.
+    pub capacity_blocks: usize,
+    /// Host (spill) tier capacity in blocks (0 = tier disabled).
+    pub host_blocks: usize,
+    /// Ledger device id (observability only).
+    pub device: usize,
+}
+
+impl KvCacheConfig {
+    pub fn new(block_positions: usize, layers: usize, width: usize) -> KvCacheConfig {
+        assert!(block_positions >= 1 && layers >= 1 && width >= 1);
+        KvCacheConfig {
+            block_positions,
+            layers,
+            width,
+            grow_blocks: 64,
+            capacity_blocks: 0,
+            host_blocks: 0,
+            device: 0,
+        }
+    }
+
+    /// Cap the device tier at `blocks` (soft; see `capacity_blocks`).
+    pub fn with_device_capacity(mut self, blocks: usize) -> KvCacheConfig {
+        self.capacity_blocks = blocks;
+        self
+    }
+
+    /// Enable the host spill tier with room for `blocks` blocks
+    /// (0 keeps it disabled).
+    pub fn with_host_tier(mut self, blocks: usize) -> KvCacheConfig {
+        self.host_blocks = blocks;
+        self
+    }
+
+    pub fn with_device_id(mut self, device: usize) -> KvCacheConfig {
+        self.device = device;
+        self
+    }
+
+    /// f32 elements in one block: layers × {K,V} × positions × width.
+    pub fn block_elems(&self) -> usize {
+        self.layers * 2 * self.block_positions * self.width
+    }
+
+    /// Bytes in one block.
+    pub fn block_bytes(&self) -> u64 {
+        (self.block_elems() * 4) as u64
+    }
+}
+
+/// One session's cache state: its block table and filled length. A
+/// spilled session keeps its length but its blocks live in the host tier.
+#[derive(Debug, Default)]
+struct SessionKv {
+    /// Logical position-block b lives in physical block `blocks[b]`
+    /// (empty while spilled).
+    blocks: Vec<u32>,
+    /// Positions 0..len hold valid K/V rows (all layers).
+    len: usize,
+    /// Blocks are parked in the host tier.
+    spilled: bool,
+}
+
+/// Worker-local paged K/V store. Single-threaded by construction (it lives
+/// inside a `Worker`); cross-worker visibility is via the global counters.
+pub struct KvCache {
+    cfg: KvCacheConfig,
+    slab: Vec<f32>,
+    free_list: Vec<u32>,
+    sessions: HashMap<u64, SessionKv>,
+    n_blocks: usize,
+    /// Host spill tier (`None` when `cfg.host_blocks == 0`).
+    host: Option<HostTier>,
+}
+
+impl KvCache {
+    pub fn new(cfg: KvCacheConfig) -> KvCache {
+        // usize::MAX host blocks means "unlimited": saturate the byte cap
+        let host = (cfg.host_blocks > 0).then(|| {
+            HostTier::new(cfg.device, (cfg.host_blocks as u64).saturating_mul(cfg.block_bytes()))
+        });
+        KvCache {
+            cfg,
+            slab: Vec::new(),
+            free_list: Vec::new(),
+            sessions: HashMap::new(),
+            n_blocks: 0,
+            host,
+        }
+    }
+
+    pub fn config(&self) -> &KvCacheConfig {
+        &self.cfg
+    }
+
+    /// Blocks currently reserved by live sessions (this worker).
+    pub fn blocks_in_use(&self) -> usize {
+        self.n_blocks - self.free_list.len()
+    }
+
+    /// Total blocks ever carved into this worker's slab.
+    pub fn capacity_blocks(&self) -> usize {
+        self.n_blocks
+    }
+
+    pub fn session_count(&self) -> usize {
+        self.sessions.len()
+    }
+
+    /// Sessions currently parked in the host tier (this worker).
+    pub fn spilled_count(&self) -> usize {
+        self.host.as_ref().map_or(0, HostTier::sessions)
+    }
+
+    /// Host-tier bytes in use (this worker).
+    pub fn host_bytes_used(&self) -> u64 {
+        self.host.as_ref().map_or(0, HostTier::bytes_used)
+    }
+
+    /// Is this session's cache parked in the host tier?
+    pub fn is_spilled(&self, session: u64) -> bool {
+        self.sessions.get(&session).map_or(false, |s| s.spilled)
+    }
+
+    /// Positions filled for a session (`None` if it has no cache entry).
+    pub fn len(&self, session: u64) -> Option<usize> {
+        self.sessions.get(&session).map(|s| s.len)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sessions.is_empty()
+    }
+
+    fn checkout_block(&mut self) -> u32 {
+        if let Some(b) = self.free_list.pop() {
+            G_RECYCLED.fetch_add(1, Ordering::Relaxed);
+            note_in_use_delta(1);
+            return b;
+        }
+        // grow the slab by a chunk of blocks; existing indices stay valid.
+        // Near or past the soft cap the chunk shrinks so the overflow
+        // gauge counts policy failures block-exactly.
+        let first = self.n_blocks as u32;
+        let cap = self.cfg.capacity_blocks;
+        let add = if cap == 0 {
+            self.cfg.grow_blocks.max(1)
+        } else if self.n_blocks < cap {
+            self.cfg.grow_blocks.max(1).min(cap - self.n_blocks)
+        } else {
+            G_OVERFLOW.fetch_add(1, Ordering::Relaxed);
+            1
+        };
+        self.slab.resize((self.n_blocks + add) * self.cfg.block_elems(), 0.0);
+        self.n_blocks += add;
+        G_GROWN.fetch_add(add as u64, Ordering::Relaxed);
+        G_SLAB_BYTES.fetch_add(add as u64 * self.cfg.block_bytes(), Ordering::Relaxed);
+        // newly carved blocks beyond the checked-out one go to the free list
+        for b in (first + 1)..(self.n_blocks as u32) {
+            self.free_list.push(b);
+        }
+        note_in_use_delta(1);
+        first
+    }
+
+    /// Ensure `session` has blocks covering positions `0..=pos`.
+    fn ensure(&mut self, session: u64, pos: usize) {
+        if !self.sessions.contains_key(&session) {
+            G_SESSIONS.fetch_add(1, Ordering::Relaxed);
+            self.sessions.insert(session, SessionKv::default());
+        }
+        let need = pos / self.cfg.block_positions + 1;
+        let have = self.sessions[&session].blocks.len();
+        for _ in have..need {
+            let b = self.checkout_block();
+            self.sessions.get_mut(&session).unwrap().blocks.push(b);
+        }
+    }
+
+    /// Offset of the (block-local) K plane of `(physical block, layer)`.
+    fn plane(&self, block: u32, layer: usize, v_plane: bool) -> usize {
+        let bp = self.cfg.block_positions;
+        let w = self.cfg.width;
+        block as usize * self.cfg.block_elems() + (layer * 2 + v_plane as usize) * bp * w
+    }
+
+    /// Write one position's K and V rows for one layer. Allocates blocks as
+    /// needed; `advance` publishes the position once every layer wrote it.
+    pub fn write_row(&mut self, session: u64, layer: usize, pos: usize, k: &[f32], v: &[f32]) {
+        let w = self.cfg.width;
+        assert_eq!(k.len(), w, "k row width mismatch");
+        assert_eq!(v.len(), w, "v row width mismatch");
+        assert!(layer < self.cfg.layers, "layer {layer} out of range");
+        if self.is_spilled(session) {
+            // same loudness contract as gather: counter + debug assert;
+            // release builds drop the write instead of allocating fresh
+            // zeroed blocks beside the spilled image (which would corrupt
+            // the cache and leak the new blocks on the next prefetch)
+            G_GATHER_SPILLED.fetch_add(1, Ordering::Relaxed);
+            debug_assert!(false, "write_row on spilled session {session} (prefetch it first)");
+            return;
+        }
+        self.ensure(session, pos);
+        let bp = self.cfg.block_positions;
+        let block = self.sessions[&session].blocks[pos / bp];
+        let slot = pos % bp;
+        let k_off = self.plane(block, layer, false) + slot * w;
+        self.slab[k_off..k_off + w].copy_from_slice(k);
+        let v_off = self.plane(block, layer, true) + slot * w;
+        self.slab[v_off..v_off + w].copy_from_slice(v);
+    }
+
+    /// Write positions `0..len` of one layer in bulk (prefill seeding):
+    /// `k`/`v` hold `len` contiguous rows. The mirror of [`KvCache::gather`]
+    /// — one `copy_from_slice` per (block, layer) plane instead of
+    /// per-position lookups.
+    pub fn write_prefix(&mut self, session: u64, layer: usize, len: usize, k: &[f32], v: &[f32]) {
+        let w = self.cfg.width;
+        assert!(k.len() >= len * w && v.len() >= len * w, "prefix rows too short");
+        assert!(layer < self.cfg.layers, "layer {layer} out of range");
+        if len == 0 {
+            return;
+        }
+        if self.is_spilled(session) {
+            // see write_row: loud, and never write beside a spilled image
+            G_GATHER_SPILLED.fetch_add(1, Ordering::Relaxed);
+            debug_assert!(false, "write_prefix on spilled session {session} (prefetch it first)");
+            return;
+        }
+        self.ensure(session, len - 1);
+        let bp = self.cfg.block_positions;
+        let mut done = 0usize;
+        for bi in 0..(len + bp - 1) / bp {
+            let block = self.sessions[&session].blocks[bi];
+            let take = (len - done).min(bp);
+            let k_off = self.plane(block, layer, false);
+            self.slab[k_off..k_off + take * w].copy_from_slice(&k[done * w..(done + take) * w]);
+            let v_off = self.plane(block, layer, true);
+            self.slab[v_off..v_off + take * w].copy_from_slice(&v[done * w..(done + take) * w]);
+            done += take;
+        }
+    }
+
+    /// Publish that positions `0..len` are now valid for `session` (called
+    /// once per engine step, after every local layer wrote its rows).
+    pub fn advance(&mut self, session: u64, len: usize) {
+        let s = self.sessions.get_mut(&session).expect("advance on unknown session");
+        debug_assert!(len >= s.len, "cache cannot shrink");
+        s.len = len;
+    }
+
+    /// Copy a session's filled K and V rows for `layer` into the head of
+    /// `dst_k`/`dst_v` (the per-step staging tensors, laid out as
+    /// `capacity × width` rows per batch row). Returns the copied length.
+    ///
+    /// A spilled session is an admission-gate failure and is **loud**:
+    /// the `gather_spilled` counter trips, debug builds assert, and
+    /// release builds return 0 so the caller's length check fails the
+    /// batch instead of decoding against garbage.
+    pub fn gather(&self, session: u64, layer: usize, dst_k: &mut [f32], dst_v: &mut [f32]) -> usize {
+        let s = match self.sessions.get(&session) {
+            Some(s) => s,
+            None => return 0,
+        };
+        if s.spilled {
+            G_GATHER_SPILLED.fetch_add(1, Ordering::Relaxed);
+            debug_assert!(
+                false,
+                "gather on spilled session {session}: the admission gate must prefetch before dispatch"
+            );
+            return 0;
+        }
+        let bp = self.cfg.block_positions;
+        let w = self.cfg.width;
+        assert!(s.len * w <= dst_k.len() && s.len * w <= dst_v.len(), "staging too small");
+        let mut done = 0usize;
+        for &block in &s.blocks {
+            let take = (s.len - done).min(bp);
+            if take == 0 {
+                break;
+            }
+            let k_off = self.plane(block, layer, false);
+            dst_k[done * w..(done + take) * w]
+                .copy_from_slice(&self.slab[k_off..k_off + take * w]);
+            let v_off = self.plane(block, layer, true);
+            dst_v[done * w..(done + take) * w]
+                .copy_from_slice(&self.slab[v_off..v_off + take * w]);
+            done += take;
+        }
+        done
+    }
+
+    /// Write a session's whole block set out to the host tier and return
+    /// its device blocks to the free list. Returns the bytes moved, or 0
+    /// when nothing happened (unknown/already-spilled session — benign:
+    /// a release may have raced the command — or host tier disabled/full,
+    /// which trips `spill_denied`).
+    pub fn spill(&mut self, session: u64) -> u64 {
+        if self.host.is_none() {
+            G_SPILL_DENIED.fetch_add(1, Ordering::Relaxed);
+            return 0;
+        }
+        let be = self.cfg.block_elems();
+        let block_bytes = self.cfg.block_bytes();
+        let s = match self.sessions.get_mut(&session) {
+            Some(s) if !s.spilled && !s.blocks.is_empty() => s,
+            _ => return 0,
+        };
+        let bytes = s.blocks.len() as u64 * block_bytes;
+        let host = self.host.as_mut().unwrap();
+        if host.ledger.alloc(bytes).is_err() {
+            G_SPILL_DENIED.fetch_add(1, Ordering::Relaxed);
+            return 0;
+        }
+        // block images go into one arena buffer; spill/prefetch cycles
+        // recycle these through the arena shelves (§Perf)
+        let mut buf = ArenaPool::checkout(s.blocks.len() * be);
+        for (i, &b) in s.blocks.iter().enumerate() {
+            let src = b as usize * be;
+            buf[i * be..(i + 1) * be].copy_from_slice(&self.slab[src..src + be]);
+        }
+        host.bufs.insert(session, buf);
+        let n = s.blocks.len();
+        self.free_list.extend(s.blocks.drain(..));
+        s.spilled = true;
+        note_in_use_delta(-(n as i64));
+        G_SPILLS.fetch_add(1, Ordering::Relaxed);
+        G_SPILL_BYTES.fetch_add(bytes, Ordering::Relaxed);
+        G_HOST_BYTES.fetch_add(bytes, Ordering::Relaxed);
+        G_SESSIONS_SPILLED.fetch_add(1, Ordering::Relaxed);
+        bytes
+    }
+
+    /// Stage a spilled session's blocks back into the device tier.
+    /// Returns the bytes moved (0 for unknown or already-resident
+    /// sessions — benign, e.g. a hint that arrived after a sync fetch).
+    pub fn prefetch(&mut self, session: u64) -> u64 {
+        match self.sessions.get(&session) {
+            Some(s) if s.spilled => {}
+            _ => return 0,
+        }
+        let be = self.cfg.block_elems();
+        let buf = self
+            .host
+            .as_mut()
+            .expect("spilled session without a host tier")
+            .bufs
+            .remove(&session)
+            .expect("spilled session has a host buffer");
+        let n_blocks = buf.len() / be;
+        let mut blocks = Vec::with_capacity(n_blocks);
+        for _ in 0..n_blocks {
+            blocks.push(self.checkout_block());
+        }
+        for (i, &b) in blocks.iter().enumerate() {
+            let dst = b as usize * be;
+            self.slab[dst..dst + be].copy_from_slice(&buf[i * be..(i + 1) * be]);
+        }
+        let bytes = (buf.len() * 4) as u64;
+        drop(buf); // back to the arena shelf for the next spill
+        self.host.as_mut().unwrap().ledger.dealloc(bytes);
+        let s = self.sessions.get_mut(&session).unwrap();
+        s.blocks = blocks;
+        s.spilled = false;
+        G_PREFETCHES.fetch_add(1, Ordering::Relaxed);
+        G_PREFETCH_BYTES.fetch_add(bytes, Ordering::Relaxed);
+        G_HOST_BYTES.fetch_sub(bytes, Ordering::Relaxed);
+        G_SESSIONS_SPILLED.fetch_sub(1, Ordering::Relaxed);
+        bytes
+    }
+
+    /// Release a session's blocks — device *or* host tier — and forget
+    /// it. Returns `false` (and trips the `free_unknown` counter: loud,
+    /// never silent) when this cache holds nothing for the session, which
+    /// legitimately happens on error-path releases for batches this
+    /// worker never executed.
+    pub fn free(&mut self, session: u64) -> bool {
+        match self.sessions.remove(&session) {
+            None => {
+                G_FREE_UNKNOWN.fetch_add(1, Ordering::Relaxed);
+                false
+            }
+            Some(s) => {
+                if s.spilled {
+                    let host = self.host.as_mut().expect("spilled session without a host tier");
+                    let buf =
+                        host.bufs.remove(&session).expect("spilled session has a host buffer");
+                    let bytes = (buf.len() * 4) as u64;
+                    host.ledger.dealloc(bytes);
+                    G_HOST_BYTES.fetch_sub(bytes, Ordering::Relaxed);
+                    G_SESSIONS_SPILLED.fetch_sub(1, Ordering::Relaxed);
+                } else {
+                    let n = s.blocks.len();
+                    self.free_list.extend(s.blocks);
+                    if n > 0 {
+                        note_in_use_delta(-(n as i64));
+                    }
+                }
+                G_SESSIONS.fetch_sub(1, Ordering::Relaxed);
+                true
+            }
+        }
+    }
+
+    /// Drop every session (worker teardown).
+    pub fn clear(&mut self) {
+        let ids: Vec<u64> = self.sessions.keys().copied().collect();
+        for id in ids {
+            self.free(id);
+        }
+    }
+}
+
+impl Drop for KvCache {
+    fn drop(&mut self) {
+        self.clear();
+        G_SLAB_BYTES.fetch_sub(self.n_blocks as u64 * self.cfg.block_bytes(), Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cache(bp: usize, layers: usize, width: usize) -> KvCache {
+        let mut cfg = KvCacheConfig::new(bp, layers, width);
+        cfg.grow_blocks = 4; // small chunks so tests exercise growth
+        KvCache::new(cfg)
+    }
+
+    fn tiered(bp: usize, layers: usize, width: usize, device: usize, host: usize) -> KvCache {
+        let mut cfg = KvCacheConfig::new(bp, layers, width)
+            .with_device_capacity(device)
+            .with_host_tier(host);
+        cfg.grow_blocks = 4;
+        KvCache::new(cfg)
+    }
+
+    fn row(tag: f32, w: usize) -> Vec<f32> {
+        (0..w).map(|i| tag + i as f32 / 100.0).collect()
+    }
+
+    /// Fill `n` positions over `layers` layers with deterministic rows.
+    fn fill(c: &mut KvCache, id: u64, layers: usize, n: usize, w: usize) {
+        for pos in 0..n {
+            for layer in 0..layers {
+                let tag = (id * 1000 + layer as u64 * 100 + pos as u64) as f32;
+                c.write_row(id, layer, pos, &row(tag, w), &row(tag + 0.5, w));
+            }
+        }
+        c.advance(id, n);
+    }
+
+    fn check(c: &KvCache, id: u64, layers: usize, n: usize, w: usize) {
+        for layer in 0..layers {
+            let mut k = vec![-1.0; n * w];
+            let mut v = vec![-1.0; n * w];
+            assert_eq!(c.gather(id, layer, &mut k, &mut v), n, "id {id} layer {layer}");
+            for pos in 0..n {
+                let tag = (id * 1000 + layer as u64 * 100 + pos as u64) as f32;
+                assert_eq!(&k[pos * w..(pos + 1) * w], &row(tag, w)[..], "k {id}/{layer}/{pos}");
+                assert_eq!(
+                    &v[pos * w..(pos + 1) * w],
+                    &row(tag + 0.5, w)[..],
+                    "v {id}/{layer}/{pos}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn write_gather_roundtrip_across_blocks() {
+        // 3 positions per block so position 7 spans 3 blocks
+        let mut c = cache(3, 2, 4);
+        fill(&mut c, 9, 2, 8, 4);
+        assert_eq!(c.len(9), Some(8));
+        check(&c, 9, 2, 8, 4);
+        assert_eq!(c.blocks_in_use(), 3); // ceil(8/3)
+    }
+
+    #[test]
+    fn write_prefix_matches_per_row_writes() {
+        let n = 7; // spans 3 blocks of 3
+        let w = 4;
+        let mut rows_k = Vec::new();
+        let mut rows_v = Vec::new();
+        for pos in 0..n {
+            rows_k.extend(row(pos as f32, w));
+            rows_v.extend(row(pos as f32 + 0.5, w));
+        }
+        let mut a = cache(3, 2, w);
+        for pos in 0..n {
+            for layer in 0..2 {
+                let r = pos * w..(pos + 1) * w;
+                a.write_row(1, layer, pos, &rows_k[r.clone()], &rows_v[r]);
+            }
+        }
+        a.advance(1, n);
+        let mut b = cache(3, 2, w);
+        for layer in 0..2 {
+            b.write_prefix(1, layer, n, &rows_k, &rows_v);
+        }
+        b.advance(1, n);
+        for layer in 0..2 {
+            let (mut ka, mut va) = (vec![0.0; n * w], vec![0.0; n * w]);
+            let (mut kb, mut vb) = (vec![0.0; n * w], vec![0.0; n * w]);
+            assert_eq!(a.gather(1, layer, &mut ka, &mut va), n);
+            assert_eq!(b.gather(1, layer, &mut kb, &mut vb), n);
+            assert_eq!(ka, kb, "layer {layer} k diverged");
+            assert_eq!(va, vb, "layer {layer} v diverged");
+            assert_eq!(kb, rows_k, "layer {layer} k roundtrip");
+        }
+        // zero-length prefix is a no-op that allocates nothing
+        let mut c = cache(3, 1, w);
+        c.write_prefix(9, 0, 0, &[], &[]);
+        assert_eq!(c.blocks_in_use(), 0);
+    }
+
+    #[test]
+    fn gather_copies_only_advanced_prefix() {
+        let mut c = cache(4, 1, 2);
+        for pos in 0..3 {
+            c.write_row(1, 0, pos, &row(pos as f32, 2), &row(pos as f32, 2));
+        }
+        c.advance(1, 2); // third row written but not yet published
+        let mut k = vec![0.0; 4 * 2];
+        let mut v = vec![0.0; 4 * 2];
+        assert_eq!(c.gather(1, 0, &mut k, &mut v), 2);
+        assert_eq!(&k[0..2], &row(0.0, 2)[..]);
+        assert_eq!(&k[2..4], &row(1.0, 2)[..]);
+        // staging beyond len untouched
+        assert_eq!(&k[4..], &[0.0; 4]);
+    }
+
+    #[test]
+    fn free_recycles_blocks_and_sessions_share_the_slab() {
+        let mut c = cache(2, 1, 2);
+        // 100 sequential sessions of 6 positions (3 blocks each): the slab
+        // must not grow past what one session needs (plus grow chunking)
+        let mut peak_capacity = 0;
+        for id in 0..100u64 {
+            for pos in 0..6 {
+                c.write_row(id, 0, pos, &row(pos as f32, 2), &row(pos as f32, 2));
+            }
+            c.advance(id, 6);
+            peak_capacity = peak_capacity.max(c.capacity_blocks());
+            assert!(c.free(id), "session {id} was live");
+            assert_eq!(c.blocks_in_use(), 0, "session {id} leaked blocks");
+        }
+        assert_eq!(c.capacity_blocks(), peak_capacity, "slab grew after first session");
+        assert!(peak_capacity <= 4, "one 3-block session grew {peak_capacity} blocks");
+        assert_eq!(c.session_count(), 0);
+    }
+
+    #[test]
+    fn free_unknown_is_counted_not_silent() {
+        let mut c = cache(2, 1, 2);
+        c.write_row(5, 0, 0, &[1.0, 2.0], &[3.0, 4.0]);
+        c.advance(5, 1);
+        assert!(c.free(5));
+        let before = global_stats().free_unknown;
+        // second free: the session is unknown now — tolerated (error-path
+        // releases hit this) but visible in the counter
+        assert!(!c.free(5));
+        assert!(global_stats().free_unknown > before, "unknown free went uncounted");
+        let mut k = vec![0.0; 2];
+        let mut v = vec![0.0; 2];
+        assert_eq!(c.gather(5, 0, &mut k, &mut v), 0);
+        assert_eq!(c.blocks_in_use(), 0);
+    }
+
+    #[test]
+    fn concurrent_sessions_do_not_alias() {
+        let mut c = cache(2, 1, 2);
+        for id in 0..8u64 {
+            fill(&mut c, id, 1, 5, 2);
+        }
+        for id in 0..8u64 {
+            check(&c, id, 1, 5, 2);
+        }
+        assert_eq!(c.blocks_in_use(), 8 * 3); // ceil(5/2) per session
+    }
+
+    #[test]
+    fn global_stats_track_use_and_recycling() {
+        // other tests mutate the process-wide counters concurrently, so
+        // assert only on monotonic counters' deltas
+        let before = global_stats();
+        let mut c = cache(2, 1, 2);
+        c.write_row(1, 0, 0, &[1.0, 2.0], &[3.0, 4.0]);
+        c.advance(1, 1);
+        let mid = global_stats();
+        assert!(mid.blocks_grown > before.blocks_grown, "growth not counted");
+        assert!(mid.blocks_peak >= 1);
+        c.free(1);
+        c.write_row(2, 0, 0, &[1.0, 2.0], &[3.0, 4.0]);
+        let after = global_stats();
+        assert!(after.blocks_recycled > before.blocks_recycled, "free list unused");
+        // instance-level invariants are deterministic
+        assert_eq!(c.blocks_in_use(), 1);
+        assert_eq!(c.session_count(), 1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn wrong_width_panics() {
+        let mut c = cache(2, 1, 4);
+        c.write_row(0, 0, 0, &[1.0], &[1.0]);
+    }
+
+    // ---- two-tier behaviour -------------------------------------------
+
+    #[test]
+    fn spill_prefetch_roundtrip_preserves_rows() {
+        let mut c = tiered(3, 2, 4, 8, 64);
+        fill(&mut c, 7, 2, 8, 4); // 3 blocks
+        let before_use = c.blocks_in_use();
+        let bytes = c.spill(7);
+        assert_eq!(bytes, 3 * c.config().block_bytes());
+        assert!(c.is_spilled(7));
+        assert_eq!(c.blocks_in_use(), before_use - 3);
+        assert_eq!(c.host_bytes_used(), bytes);
+        assert_eq!(c.spilled_count(), 1);
+        // a second session can reuse the freed blocks meanwhile
+        fill(&mut c, 8, 2, 5, 4);
+        assert_eq!(c.prefetch(7), bytes);
+        assert!(!c.is_spilled(7));
+        assert_eq!(c.host_bytes_used(), 0);
+        // both sessions read back exactly what was written
+        check(&c, 7, 2, 8, 4);
+        check(&c, 8, 2, 5, 4);
+        // growth continues cleanly after staging back
+        for layer in 0..2u64 {
+            let tag = (7 * 1000 + layer * 100 + 8) as f32;
+            c.write_row(7, layer as usize, 8, &row(tag, 4), &row(tag + 0.5, 4));
+        }
+        c.advance(7, 9);
+        check(&c, 7, 2, 9, 4);
+    }
+
+    #[test]
+    fn spill_noops_are_benign_and_denials_counted() {
+        let mut c = tiered(2, 1, 2, 4, 1); // host tier: one block only
+        fill(&mut c, 1, 1, 2, 2); // 1 block
+        fill(&mut c, 2, 1, 4, 2); // 2 blocks: won't fit the host tier
+        let denied_before = global_stats().spill_denied;
+        assert_eq!(c.spill(2), 0, "host tier must refuse an oversized spill");
+        assert!(global_stats().spill_denied > denied_before);
+        assert!(!c.is_spilled(2));
+        // unknown session / double spill / prefetch of resident: no-ops
+        assert_eq!(c.spill(99), 0);
+        assert!(c.spill(1) > 0);
+        assert_eq!(c.spill(1), 0);
+        assert_eq!(c.prefetch(99), 0);
+        assert_eq!(c.prefetch(2), 0);
+        // no-host-tier cache refuses loudly too
+        let mut flat = cache(2, 1, 2);
+        fill(&mut flat, 1, 1, 2, 2);
+        let denied_before = global_stats().spill_denied;
+        assert_eq!(flat.spill(1), 0);
+        assert!(global_stats().spill_denied > denied_before);
+    }
+
+    #[test]
+    fn gather_on_spilled_session_is_loud() {
+        let mut c = tiered(2, 1, 2, 4, 8);
+        fill(&mut c, 3, 1, 2, 2);
+        assert!(c.spill(3) > 0);
+        let before = global_stats().gather_spilled;
+        let mut k = vec![0.0; 4];
+        let mut v = vec![0.0; 4];
+        // debug builds assert; release builds return 0 so the caller's
+        // row-count check fails the batch. Either way the counter trips.
+        let got = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            c.gather(3, 0, &mut k, &mut v)
+        }));
+        match got {
+            Ok(n) => {
+                assert!(!cfg!(debug_assertions), "debug builds must assert");
+                assert_eq!(n, 0, "spilled gather must not fabricate rows");
+            }
+            Err(_) => assert!(cfg!(debug_assertions), "release builds must not panic"),
+        }
+        assert!(global_stats().gather_spilled > before, "spilled gather went uncounted");
+    }
+
+    #[test]
+    fn write_on_spilled_session_is_loud_and_does_not_leak() {
+        let mut c = tiered(2, 1, 2, 4, 8);
+        fill(&mut c, 3, 1, 2, 2);
+        assert!(c.spill(3) > 0);
+        let before = global_stats().gather_spilled;
+        let in_use = c.blocks_in_use();
+        let got = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            c.write_row(3, 0, 2, &[9.0, 9.0], &[9.0, 9.0]);
+        }));
+        if got.is_ok() {
+            assert!(!cfg!(debug_assertions), "debug builds must assert");
+        }
+        // no fresh blocks were carved beside the spilled image
+        assert_eq!(c.blocks_in_use(), in_use, "spilled write allocated device blocks");
+        assert!(c.is_spilled(3));
+        assert!(global_stats().gather_spilled > before, "spilled write went uncounted");
+        // the image itself is intact
+        assert!(c.prefetch(3) > 0);
+        check(&c, 3, 1, 2, 2);
+    }
+
+    #[test]
+    fn free_drops_host_tier_entries() {
+        let mut c = tiered(2, 1, 2, 4, 8);
+        fill(&mut c, 1, 1, 4, 2); // 2 blocks
+        assert!(c.spill(1) > 0);
+        assert!(c.host_bytes_used() > 0);
+        assert!(c.free(1));
+        assert_eq!(c.host_bytes_used(), 0);
+        assert_eq!(c.spilled_count(), 0);
+        assert_eq!(c.session_count(), 0);
+        assert_eq!(c.blocks_in_use(), 0);
+    }
+
+    #[test]
+    fn device_soft_cap_counts_overflow_exactly() {
+        let mut c = tiered(2, 1, 2, 2, 8); // cap: 2 device blocks
+        let before = global_stats().overflow_blocks;
+        fill(&mut c, 1, 1, 4, 2); // exactly 2 blocks: at cap, no overflow
+        assert_eq!(global_stats().overflow_blocks, before);
+        assert_eq!(c.capacity_blocks(), 2, "growth must clamp to the cap");
+        fill(&mut c, 2, 1, 3, 2); // 2 more blocks: both carved past cap
+        assert_eq!(global_stats().overflow_blocks, before + 2);
+        assert_eq!(c.capacity_blocks(), 4);
+    }
+
+    #[test]
+    fn spilled_sessions_survive_device_churn() {
+        // many sessions cycling through a tiny device tier while one
+        // session sits spilled: its image must come back bit-exact
+        let mut c = tiered(2, 2, 3, 4, 16);
+        fill(&mut c, 42, 2, 6, 3); // 3 blocks
+        assert!(c.spill(42) > 0);
+        for id in 0..20u64 {
+            fill(&mut c, id, 2, 4, 3);
+            c.free(id);
+        }
+        assert!(c.prefetch(42) > 0);
+        check(&c, 42, 2, 6, 3);
+    }
+}

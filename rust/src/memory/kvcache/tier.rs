@@ -1,0 +1,708 @@
+//! The spill/prefetch engine behind the two-tier K/V cache.
+//!
+//! Two halves, mirroring the split between the centralized engine and the
+//! SPMD workers (§4.1.2):
+//!
+//! * [`HostTier`] — the **worker-side** spill arena: a
+//!   [`MemoryLedger`]-accounted store of whole-session block images. A
+//!   spill copies every device block a session holds into one arena
+//!   buffer (checked out of the PR-1 activation arena, so buffers cycle
+//!   between spills instead of hitting the allocator); a prefetch copies
+//!   it back into freshly checked-out device blocks and returns the
+//!   buffer to the arena shelf. This is the paper's §4.4 heterogeneous
+//!   memory space applied to generation state instead of weights.
+//!
+//! * [`TierPolicy`] — the **engine-side** model of every worker's tier
+//!   occupancy. Block counts per session are sharding-independent
+//!   (`ceil(len / block_positions)` on every worker, whatever its tp/pp
+//!   slice), so one model tracks them all. The policy decides *which*
+//!   sessions spill (LRU by last decode step, cold and unpinned only)
+//!   and *when* sessions stage back (sync at decode-bucket admission,
+//!   or one bucket ahead as a prefetch hint, mirroring
+//!   `PoolConfig.lookahead`), and emits [`TierCmd`]s the engine publishes
+//!   as ticketed commands through the consistency queue. Ticket order is
+//!   the correctness story: a `Prefetch` issued at bucket-formation time
+//!   always carries a smaller ticket than the bucket's `Forward`, so by
+//!   the time any worker pops the decode step, its sessions are resident
+//!   — without any worker-to-engine backchannel.
+//!
+//! The policy also implements **admission control**: a prefill batch
+//! whose sessions cannot fit the device tier even after spilling every
+//! cold session is deferred (left in the batcher queue) until running
+//! sessions finish, instead of overflowing the slab.
+
+use crate::memory::arena::ArenaBuf;
+use crate::memory::ledger::MemoryLedger;
+use std::collections::HashMap;
+
+/// Worker-side host tier: spilled sessions' block images, byte-accounted
+/// by a [`MemoryLedger`] so "host tier full" is an explicit, observable
+/// condition rather than silent growth.
+pub struct HostTier {
+    pub(super) ledger: MemoryLedger,
+    pub(super) bufs: HashMap<u64, ArenaBuf>,
+}
+
+impl HostTier {
+    /// `capacity_bytes` of 0 means unlimited.
+    pub fn new(device: usize, capacity_bytes: u64) -> HostTier {
+        let cap = if capacity_bytes == 0 { u64::MAX } else { capacity_bytes };
+        HostTier { ledger: MemoryLedger::new(device, cap), bufs: HashMap::new() }
+    }
+
+    pub fn bytes_used(&self) -> u64 {
+        self.ledger.used()
+    }
+
+    pub fn sessions(&self) -> usize {
+        self.bufs.len()
+    }
+}
+
+/// Tiering knobs (engine-side policy and worker-side caches share these
+/// numbers; the engine derives both from `EngineConfig`).
+#[derive(Clone, Copy, Debug)]
+pub struct TierConfig {
+    /// Device-tier capacity in blocks (per worker).
+    pub device_blocks: usize,
+    /// Host-tier capacity in blocks (0 = unlimited).
+    pub host_blocks: usize,
+    /// Spill trigger: fraction of `device_blocks` in use.
+    pub high_water: f64,
+    /// Spill target: evict cold sessions until use falls to this fraction.
+    pub low_water: f64,
+    /// How many decode buckets ahead prefetch hints are issued
+    /// (mirrors `PoolConfig.lookahead`; 0 disables hints).
+    pub lookahead: usize,
+}
+
+impl TierConfig {
+    pub fn new(device_blocks: usize, host_blocks: usize) -> TierConfig {
+        assert!(device_blocks >= 1, "device tier needs at least one block");
+        TierConfig {
+            device_blocks,
+            host_blocks,
+            high_water: 0.90,
+            low_water: 0.70,
+            lookahead: 1,
+        }
+    }
+}
+
+/// One spill/prefetch decision, published by the engine as a ticketed
+/// command so every worker applies it at the same point in its execution
+/// order.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum TierCmd {
+    /// Write these sessions' blocks out to the host tier.
+    Spill(Vec<u64>),
+    /// Stage these sessions' blocks back into the device tier. `hint`
+    /// distinguishes lookahead prefetches (overlappable) from sync
+    /// prefetches at bucket admission (decode-stall path).
+    Prefetch { ids: Vec<u64>, hint: bool },
+}
+
+/// Counters the policy accumulates (engine-side intent; the worker-side
+/// truth lives in `kvcache::global_stats`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TierPolicyStats {
+    /// Sessions selected for spill.
+    pub spills: u64,
+    /// Sessions staged back one bucket ahead (the overlap win).
+    pub prefetch_hints: u64,
+    /// Sessions staged back synchronously at bucket admission (each one
+    /// is a decode stall the lookahead failed to hide).
+    pub prefetch_syncs: u64,
+    /// Prefill batches deferred by admission control.
+    pub prefill_deferrals: u64,
+    /// Spill candidates skipped because the host tier was full.
+    pub spill_denied: u64,
+}
+
+#[derive(Debug)]
+struct TierSession {
+    /// Total positions the session's cache holds (tracked at decode-gate
+    /// time, so it matches what the worker writes during that step).
+    len: usize,
+    resident: bool,
+    /// In a formed-but-uncompleted batch: never a spill victim.
+    pinned: bool,
+    /// Decode-bucket step of last use (the LRU axis).
+    last_step: u64,
+}
+
+fn blocks_for(block_positions: usize, len: usize) -> usize {
+    ((len + block_positions - 1) / block_positions).max(1)
+}
+
+/// Engine-side residency model + eviction/prefetch policy.
+pub struct TierPolicy {
+    cfg: TierConfig,
+    block_positions: usize,
+    sessions: HashMap<u64, TierSession>,
+    device_used: usize,
+    host_used: usize,
+    /// Blocks held by pinned (in-flight) sessions — maintained
+    /// incrementally so decode admission is O(bucket), not O(sessions).
+    pinned_used: usize,
+    /// A prefill batch is currently parked by admission control (dedups
+    /// the deferral counter across the former's retries).
+    deferral_streak: bool,
+    step: u64,
+    pub stats: TierPolicyStats,
+}
+
+impl TierPolicy {
+    pub fn new(cfg: TierConfig, block_positions: usize) -> TierPolicy {
+        assert!(block_positions >= 1);
+        assert!(
+            cfg.low_water <= cfg.high_water && cfg.high_water <= 1.0 && cfg.low_water >= 0.0,
+            "water marks must satisfy 0 <= low <= high <= 1"
+        );
+        TierPolicy {
+            cfg,
+            block_positions,
+            sessions: HashMap::new(),
+            device_used: 0,
+            host_used: 0,
+            pinned_used: 0,
+            deferral_streak: false,
+            step: 0,
+            stats: TierPolicyStats::default(),
+        }
+    }
+
+    pub fn config(&self) -> &TierConfig {
+        &self.cfg
+    }
+
+    /// Device-tier blocks the model believes are in use.
+    pub fn device_used(&self) -> usize {
+        self.device_used
+    }
+
+    /// Host-tier blocks the model believes are in use.
+    pub fn host_used(&self) -> usize {
+        self.host_used
+    }
+
+    /// Blocks pinned by in-flight batches (subset of `device_used`).
+    pub fn pinned_used(&self) -> usize {
+        self.pinned_used
+    }
+
+    pub fn session_count(&self) -> usize {
+        self.sessions.len()
+    }
+
+    /// `None` if the session is unknown to the policy.
+    pub fn is_resident(&self, id: u64) -> Option<bool> {
+        self.sessions.get(&id).map(|s| s.resident)
+    }
+
+    fn blocks_of(&self, len: usize) -> usize {
+        blocks_for(self.block_positions, len)
+    }
+
+    fn high_mark(&self) -> usize {
+        ((self.cfg.device_blocks as f64) * self.cfg.high_water).floor() as usize
+    }
+
+    fn low_mark(&self) -> usize {
+        ((self.cfg.device_blocks as f64) * self.cfg.low_water).floor() as usize
+    }
+
+    /// Spill cold sessions (LRU by last decode step; never pinned ones)
+    /// until device use falls to `target` blocks or candidates run out.
+    /// Updates the model and returns the victim ids in eviction order.
+    /// `count_denials` suppresses the `spill_denied` stat on retries of
+    /// an already-parked prefill, so the counter reflects distinct
+    /// events rather than the former's ~ms retry cadence.
+    fn spill_to(&mut self, target: usize, count_denials: bool) -> Vec<u64> {
+        if self.device_used <= target {
+            return Vec::new();
+        }
+        let mut candidates: Vec<(u64, u64, usize)> = self
+            .sessions
+            .iter()
+            .filter(|(_, s)| s.resident && !s.pinned)
+            .map(|(&id, s)| (s.last_step, id, self.blocks_of(s.len)))
+            .collect();
+        candidates.sort_unstable();
+        let host_cap = if self.cfg.host_blocks == 0 { usize::MAX } else { self.cfg.host_blocks };
+        let mut victims = Vec::new();
+        for (_, id, blocks) in candidates {
+            if self.device_used <= target {
+                break;
+            }
+            if self.host_used + blocks > host_cap {
+                if count_denials {
+                    self.stats.spill_denied += 1;
+                }
+                continue; // a smaller session may still fit
+            }
+            self.sessions.get_mut(&id).unwrap().resident = false;
+            self.device_used -= blocks;
+            self.host_used += blocks;
+            self.stats.spills += 1;
+            victims.push(id);
+        }
+        victims
+    }
+
+    /// Admission control for a prefill batch: `rows` are `(session id,
+    /// prompt length)`. Returns the tier commands to publish (pressure
+    /// spills happen even on deferral — relief is never wrong) and
+    /// whether the batch may be formed. On `false` the caller must leave
+    /// the requests queued and retry once running sessions finish.
+    pub fn admit_prefill(&mut self, rows: &[(u64, usize)]) -> (Vec<TierCmd>, bool) {
+        let need: usize = rows.iter().map(|&(_, len)| self.blocks_of(len)).sum();
+        let mut cmds = Vec::new();
+        if self.device_used + need > self.cfg.device_blocks {
+            let target = self.cfg.device_blocks.saturating_sub(need).min(self.low_mark());
+            // a parked prefill is retried every former tick: count its
+            // host-full denials once per park, not once per retry
+            let victims = self.spill_to(target, !self.deferral_streak);
+            if !victims.is_empty() {
+                cmds.push(TierCmd::Spill(victims));
+            }
+        }
+        // a batch bigger than the whole device tier can never be admitted
+        // by waiting; let it through and rely on the slab's soft cap
+        let oversized = need > self.cfg.device_blocks;
+        if self.device_used + need > self.cfg.device_blocks && !oversized {
+            // count distinct parked batches, not the former's retries
+            if !self.deferral_streak {
+                self.stats.prefill_deferrals += 1;
+                self.deferral_streak = true;
+            }
+            return (cmds, false);
+        }
+        self.deferral_streak = false;
+        self.step += 1;
+        for &(id, len) in rows {
+            let blocks = self.blocks_of(len);
+            self.device_used += blocks;
+            self.pinned_used += blocks;
+            self.sessions.insert(
+                id,
+                TierSession { len, resident: true, pinned: true, last_step: self.step },
+            );
+        }
+        (cmds, true)
+    }
+
+    /// Decode-side admission: the largest prefix of `rows` a decode
+    /// bucket may contain without the *pinned* working set (in-flight
+    /// buckets + this one) exceeding the device tier — cold resident
+    /// sessions don't count, since `gate_decode` can spill them. Returns
+    /// 0 when in-flight buckets already pin everything (the caller must
+    /// defer until one completes); a lone session bigger than the whole
+    /// device tier is let through (soft cap) rather than livelocked.
+    pub fn max_decode_rows(&self, rows: &[(u64, usize)]) -> usize {
+        let pinned = self.pinned_used;
+        debug_assert_eq!(
+            pinned,
+            self.sessions
+                .values()
+                .filter(|s| s.pinned)
+                .map(|s| self.blocks_of(s.len))
+                .sum::<usize>(),
+            "pinned-block accounting drifted"
+        );
+        let mut used = pinned;
+        let mut n = 0;
+        for &(_, len) in rows {
+            let b = self.blocks_of(len);
+            if used + b > self.cfg.device_blocks {
+                break;
+            }
+            used += b;
+            n += 1;
+        }
+        if n == 0 && pinned == 0 {
+            1 // oversized lone session: soft-cap tolerance
+        } else {
+            n
+        }
+    }
+
+    /// Prefill-side bucket cap: the largest prefix of `rows` whose
+    /// prompts alone fit the device tier (so a wide prompt wave splits
+    /// into admissible buckets instead of tripping the oversized-batch
+    /// overflow path). Always at least 1 — a lone oversized prompt still
+    /// goes through the soft cap.
+    pub fn max_prefill_rows(&self, rows: &[(u64, usize)]) -> usize {
+        let mut used = 0;
+        let mut n = 0;
+        for &(_, len) in rows {
+            let b = self.blocks_of(len);
+            if used + b > self.cfg.device_blocks {
+                break;
+            }
+            used += b;
+            n += 1;
+        }
+        n.max(1)
+    }
+
+    /// Gate a decode bucket: `rows` are `(session id, total length
+    /// including the token being decoded)`. Pins every row, charges block
+    /// growth, stages spilled rows back (sync prefetch — the decode-stall
+    /// path the lookahead hints exist to avoid), and relieves pressure
+    /// past the high-water mark. Returned commands must be published
+    /// before the bucket's `Forward`.
+    pub fn gate_decode(&mut self, rows: &[(u64, usize)]) -> Vec<TierCmd> {
+        self.step += 1;
+        let step = self.step;
+        let bp = self.block_positions;
+        let mut sync_ids = Vec::new();
+        for &(id, len) in rows {
+            if !self.sessions.contains_key(&id) {
+                // unknown to the policy (e.g. policy attached after the
+                // session started): adopt it as resident
+                let blocks = blocks_for(bp, len);
+                self.device_used += blocks;
+                self.pinned_used += blocks;
+                self.sessions.insert(
+                    id,
+                    TierSession { len, resident: true, pinned: true, last_step: step },
+                );
+                continue;
+            }
+            let s = self.sessions.get_mut(&id).unwrap();
+            let old = blocks_for(bp, s.len);
+            let new = blocks_for(bp, len);
+            let was_spilled = !s.resident;
+            let was_pinned = s.pinned;
+            s.resident = true;
+            s.len = len;
+            s.pinned = true;
+            s.last_step = step;
+            if was_spilled {
+                // its blocks move host -> device at the old size; growth
+                // (if any) lands on the device side
+                sync_ids.push(id);
+                self.host_used -= old;
+                self.device_used += old;
+            }
+            self.device_used += new - old;
+            self.pinned_used += new - if was_pinned { old } else { 0 };
+        }
+        let mut cmds = Vec::new();
+        if self.device_used > self.high_mark() {
+            let victims = self.spill_to(self.low_mark(), true);
+            if !victims.is_empty() {
+                cmds.push(TierCmd::Spill(victims));
+            }
+        }
+        if !sync_ids.is_empty() {
+            self.stats.prefetch_syncs += sync_ids.len() as u64;
+            cmds.push(TierCmd::Prefetch { ids: sync_ids, hint: false });
+        }
+        cmds
+    }
+
+    /// Lookahead: `upcoming` are the `(id, len)` pairs expected in the
+    /// *next* decode bucket. Spilled ones are staged back now (hint
+    /// prefetch) so their bucket admits without a sync stall — but only
+    /// while staying under the high-water mark; hints never cause
+    /// eviction (that would thrash).
+    pub fn prefetch_hint(&mut self, upcoming: &[(u64, usize)]) -> Vec<TierCmd> {
+        if self.cfg.lookahead == 0 {
+            return Vec::new();
+        }
+        let bp = self.block_positions;
+        let mut ids = Vec::new();
+        for &(id, _len) in upcoming {
+            let s = match self.sessions.get(&id) {
+                Some(s) => s,
+                None => continue,
+            };
+            if s.resident {
+                continue;
+            }
+            let blocks = blocks_for(bp, s.len);
+            if self.device_used + blocks > self.high_mark() {
+                continue; // no headroom for this one — a smaller session
+                          // later in the bucket may still fit
+            }
+            let s = self.sessions.get_mut(&id).unwrap();
+            s.resident = true;
+            s.last_step = self.step;
+            self.host_used -= blocks;
+            self.device_used += blocks;
+            ids.push(id);
+        }
+        if ids.is_empty() {
+            return Vec::new();
+        }
+        self.stats.prefetch_hints += ids.len() as u64;
+        vec![TierCmd::Prefetch { ids, hint: true }]
+    }
+
+    /// A session's batch completed and it re-entered the queue: unpin and
+    /// stamp recency (it is now the *warmest* cold session).
+    pub fn on_requeue(&mut self, id: u64) {
+        let step = self.step;
+        if let Some(s) = self.sessions.get_mut(&id) {
+            let was_pinned = s.pinned;
+            s.pinned = false;
+            s.last_step = step;
+            if was_pinned {
+                self.pinned_used -= blocks_for(self.block_positions, s.len);
+            }
+        }
+    }
+
+    /// Finished sessions: credit whichever tier held their blocks.
+    pub fn on_free(&mut self, ids: &[u64]) {
+        for id in ids {
+            if let Some(s) = self.sessions.remove(id) {
+                let blocks = self.blocks_of(s.len);
+                if s.resident {
+                    self.device_used -= blocks;
+                } else {
+                    self.host_used -= blocks;
+                }
+                if s.pinned {
+                    self.pinned_used -= blocks;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn policy(device_blocks: usize, host_blocks: usize) -> TierPolicy {
+        // bp=2: a len-4 session is 2 blocks
+        TierPolicy::new(TierConfig::new(device_blocks, host_blocks), 2)
+    }
+
+    fn spilled_ids(cmds: &[TierCmd]) -> Vec<u64> {
+        cmds.iter()
+            .flat_map(|c| match c {
+                TierCmd::Spill(ids) => ids.clone(),
+                _ => vec![],
+            })
+            .collect()
+    }
+
+    #[test]
+    fn resident_sessions_need_no_commands() {
+        let mut p = policy(16, 16);
+        let (cmds, ok) = p.admit_prefill(&[(1, 4), (2, 4)]);
+        assert!(ok && cmds.is_empty());
+        assert_eq!(p.device_used(), 4);
+        p.on_requeue(1);
+        p.on_requeue(2);
+        let cmds = p.gate_decode(&[(1, 5), (2, 5)]);
+        assert!(cmds.is_empty(), "{cmds:?}");
+        // len 5 crosses into a 3rd block per session
+        assert_eq!(p.device_used(), 6);
+        assert_eq!(p.pinned_used(), 6, "gated rows are pinned");
+        p.on_requeue(1);
+        assert_eq!(p.pinned_used(), 3, "requeue unpins");
+        p.on_free(&[1, 2]);
+        assert_eq!(p.device_used(), 0);
+        assert_eq!(p.pinned_used(), 0, "free credits pinned blocks");
+        assert_eq!(p.session_count(), 0);
+    }
+
+    #[test]
+    fn eviction_is_lru_by_last_decode_step() {
+        // 8 device blocks, sessions of 2 blocks each
+        let mut p = policy(8, 64);
+        for id in 0..3u64 {
+            let (_, ok) = p.admit_prefill(&[(id, 4)]);
+            assert!(ok);
+            p.on_requeue(id);
+        }
+        // touch 0 most recently: decode order 1, 2, 0
+        for id in [1u64, 2, 0] {
+            p.gate_decode(&[(id, 4)]);
+            p.on_requeue(id);
+        }
+        // admitting three more 2-block sessions (6 + 6 > 8) must evict
+        // the least recently *decoded* sessions: 1 then 2 — never 0
+        let (cmds, ok) = p.admit_prefill(&[(10, 4), (11, 4), (12, 4)]);
+        assert!(ok);
+        assert_eq!(spilled_ids(&cmds), vec![1, 2]);
+        assert_eq!(p.is_resident(0), Some(true));
+        assert_eq!(p.is_resident(1), Some(false));
+        assert_eq!(p.host_used(), 4);
+    }
+
+    #[test]
+    fn pinned_sessions_are_never_victims() {
+        let mut p = policy(2, 64);
+        let (_, ok) = p.admit_prefill(&[(1, 4)]);
+        assert!(ok);
+        // 1 is still pinned (in flight); admitting 2 can't evict it and
+        // can't fit beside it -> deferred
+        let (cmds, ok) = p.admit_prefill(&[(2, 4)]);
+        assert!(!ok && cmds.is_empty());
+        assert_eq!(p.stats.prefill_deferrals, 1);
+        // once 1 completes and cools, 2 admits by evicting it
+        p.on_requeue(1);
+        let (cmds, ok) = p.admit_prefill(&[(2, 4)]);
+        assert!(ok);
+        assert_eq!(spilled_ids(&cmds), vec![1]);
+    }
+
+    #[test]
+    fn spilled_bucket_rows_sync_prefetch() {
+        let mut p = policy(2, 64);
+        let (_, ok) = p.admit_prefill(&[(1, 4)]);
+        assert!(ok);
+        p.on_requeue(1);
+        let (_, ok) = p.admit_prefill(&[(2, 4)]); // evicts 1
+        assert!(ok);
+        assert_eq!(p.is_resident(1), Some(false));
+        p.on_requeue(2);
+        // 1's next decode step must bring it back before the forward;
+        // 2 (cold, LRU) is evicted to relieve pressure
+        let cmds = p.gate_decode(&[(1, 5)]);
+        assert_eq!(spilled_ids(&cmds), vec![2]);
+        assert!(cmds
+            .iter()
+            .any(|c| matches!(c, TierCmd::Prefetch { ids, hint: false } if ids == &vec![1])));
+        // spills are published before prefetches
+        assert!(matches!(cmds[0], TierCmd::Spill(_)));
+        assert_eq!(p.is_resident(1), Some(true));
+        assert_eq!(p.stats.prefetch_syncs, 1);
+    }
+
+    #[test]
+    fn lookahead_hint_stages_back_without_pinning() {
+        let mut p = policy(6, 64);
+        let (_, ok) = p.admit_prefill(&[(1, 4)]);
+        assert!(ok);
+        p.on_requeue(1);
+        // 4 + 2 = 6 new blocks force 1 (2 blocks) out
+        let (cmds, ok) = p.admit_prefill(&[(2, 8), (3, 4)]);
+        assert!(ok);
+        assert_eq!(spilled_ids(&cmds), vec![1]);
+        p.on_free(&[2, 3]);
+        let cmds = p.prefetch_hint(&[(1, 5)]);
+        assert_eq!(cmds, vec![TierCmd::Prefetch { ids: vec![1], hint: true }]);
+        assert_eq!(p.is_resident(1), Some(true));
+        assert_eq!(p.stats.prefetch_hints, 1);
+        // the following gate sees it resident: no sync prefetch
+        let cmds = p.gate_decode(&[(1, 5)]);
+        assert!(cmds.is_empty(), "{cmds:?}");
+        assert_eq!(p.stats.prefetch_syncs, 0);
+    }
+
+    #[test]
+    fn hints_never_push_past_the_high_water_mark() {
+        let mut p = policy(8, 64); // high mark = 7 blocks
+        let (_, ok) = p.admit_prefill(&[(1, 4)]); // 2 blocks
+        assert!(ok);
+        p.on_requeue(1);
+        let (_, ok) = p.admit_prefill(&[(2, 8)]); // 4 blocks
+        assert!(ok);
+        p.on_requeue(2);
+        let (cmds, ok) = p.admit_prefill(&[(3, 8)]); // forces 1 out
+        assert!(ok);
+        assert_eq!(spilled_ids(&cmds), vec![1]);
+        p.on_requeue(3);
+        let (cmds, ok) = p.admit_prefill(&[(4, 8)]); // forces 2 out
+        assert!(ok);
+        assert_eq!(spilled_ids(&cmds), vec![2]);
+        p.on_free(&[3]); // 4 (4 blocks) stays resident
+        assert_eq!(p.device_used(), 4);
+        // hinting both 1 (2 blocks: 4 + 2 = 6 <= 7, fits) and 2
+        // (4 blocks: 6 + 4 = 10 > 7, skipped)
+        let cmds = p.prefetch_hint(&[(1, 5), (2, 9)]);
+        assert_eq!(cmds, vec![TierCmd::Prefetch { ids: vec![1], hint: true }]);
+        assert_eq!(p.is_resident(2), Some(false));
+    }
+
+    #[test]
+    fn host_capacity_denies_spills() {
+        let mut p = policy(2, 2); // host tier: 2 blocks only
+        let (_, ok) = p.admit_prefill(&[(1, 4)]); // 2 blocks
+        assert!(ok);
+        p.on_requeue(1);
+        let (_, ok) = p.admit_prefill(&[(2, 4)]); // evicts 1 -> host full
+        assert!(ok);
+        p.on_requeue(2);
+        assert_eq!(p.host_used(), 2);
+        // a third session: no spill possible (host full) -> deferred
+        let (cmds, ok) = p.admit_prefill(&[(3, 4)]);
+        assert!(!ok && spilled_ids(&cmds).is_empty());
+        assert!(p.stats.spill_denied > 0);
+        // freeing the spilled session makes host room again
+        p.on_free(&[1]);
+        assert_eq!(p.host_used(), 0);
+        let (_, ok) = p.admit_prefill(&[(3, 4)]);
+        assert!(ok);
+    }
+
+    #[test]
+    fn oversized_batch_is_admitted_not_livelocked() {
+        let mut p = policy(2, 8);
+        // 4 blocks of prompts can never fit a 2-block device tier; the
+        // policy lets it through (soft cap) instead of deferring forever
+        let (_, ok) = p.admit_prefill(&[(1, 4), (2, 4)]);
+        assert!(ok);
+        assert_eq!(p.device_used(), 4);
+    }
+
+    #[test]
+    fn free_of_spilled_session_credits_the_host_tier() {
+        let mut p = policy(2, 8);
+        let (_, ok) = p.admit_prefill(&[(1, 4)]);
+        assert!(ok);
+        p.on_requeue(1);
+        let (_, ok) = p.admit_prefill(&[(2, 4)]);
+        assert!(ok);
+        assert_eq!((p.device_used(), p.host_used()), (2, 2));
+        p.on_free(&[1, 2]);
+        assert_eq!((p.device_used(), p.host_used()), (0, 0));
+    }
+
+    #[test]
+    fn decode_admission_caps_the_bucket_by_pinned_blocks() {
+        let mut p = policy(4, 64); // bp=2
+        // nothing pinned: a full device tier of rows fits
+        assert_eq!(p.max_decode_rows(&[(1, 4), (2, 4), (3, 4)]), 2); // 2+2 fit, 3rd doesn't
+        // a lone oversized session passes (soft cap) instead of livelocking
+        assert_eq!(p.max_decode_rows(&[(9, 100)]), 1);
+        // pin 2 blocks via an in-flight prefill: one 2-block row still fits
+        let (_, ok) = p.admit_prefill(&[(1, 4)]);
+        assert!(ok);
+        assert_eq!(p.max_decode_rows(&[(2, 4), (3, 4)]), 1);
+        // pin everything: nothing fits -> caller must defer
+        let (_, ok) = p.admit_prefill(&[(2, 4)]);
+        assert!(ok);
+        assert_eq!(p.max_decode_rows(&[(3, 4)]), 0);
+        // completion unpins and decode admission resumes
+        p.on_requeue(1);
+        p.on_requeue(2);
+        assert_eq!(p.max_decode_rows(&[(3, 4)]), 1);
+    }
+
+    #[test]
+    fn prefill_rows_cap_splits_wide_waves() {
+        let p = policy(4, 64); // bp=2
+        // 4 two-block prompts: only 2 fit the 4-block device tier at once
+        let rows: Vec<(u64, usize)> = (0..4).map(|id| (id, 4)).collect();
+        assert_eq!(p.max_prefill_rows(&rows), 2);
+        // a lone oversized prompt still passes (soft cap)
+        assert_eq!(p.max_prefill_rows(&[(9, 100)]), 1);
+    }
+
+    #[test]
+    fn blocks_for_rounds_up() {
+        assert_eq!(blocks_for(8, 1), 1);
+        assert_eq!(blocks_for(8, 8), 1);
+        assert_eq!(blocks_for(8, 9), 2);
+        // a zero-length session still accounts for one block
+        assert_eq!(blocks_for(8, 0), 1);
+    }
+}

@@ -36,14 +36,18 @@ impl MemoryLedger {
     }
 
     /// Reserve bytes; errors if over capacity (the memory wall, literally).
+    /// The message carries everything an operator needs to size the tier:
+    /// the device id, the requested size, and how much is actually free.
     pub fn alloc(&mut self, bytes: u64) -> anyhow::Result<()> {
         anyhow::ensure!(
             self.can_fit(bytes),
-            "device {} OOM: {} used + {} requested > {} capacity",
+            "device {} OOM: requested {} but only {} of {} free ({} used, peak {})",
             self.device,
-            self.used,
-            bytes,
-            self.capacity
+            crate::util::fmt_bytes(bytes),
+            crate::util::fmt_bytes(self.free()),
+            crate::util::fmt_bytes(self.capacity),
+            crate::util::fmt_bytes(self.used),
+            crate::util::fmt_bytes(self.peak)
         );
         self.used += bytes;
         self.peak = self.peak.max(self.used);
@@ -111,6 +115,38 @@ mod tests {
         l.alloc(90).unwrap();
         assert!(l.alloc(20).is_err());
         assert_eq!(l.used(), 90); // failed alloc doesn't leak
+    }
+
+    #[test]
+    fn oom_message_names_device_and_free_bytes() {
+        let mut l = MemoryLedger::new(3, 100);
+        l.alloc(90).unwrap();
+        let msg = l.alloc(20).unwrap_err().to_string();
+        assert!(msg.contains("device 3"), "{msg}");
+        assert!(msg.contains("requested 20B"), "{msg}");
+        assert!(msg.contains("10B of 100B free"), "{msg}");
+    }
+
+    #[test]
+    fn exact_capacity_boundary() {
+        let mut l = MemoryLedger::new(0, 100);
+        // filling to exactly capacity is allowed...
+        assert!(l.can_fit(100));
+        l.alloc(100).unwrap();
+        assert_eq!(l.free(), 0);
+        assert_eq!(l.peak(), 100);
+        // ...but one more byte is not, and the failed alloc moves nothing
+        assert!(!l.can_fit(1));
+        assert!(l.alloc(1).is_err());
+        assert_eq!(l.used(), 100);
+        assert_eq!(l.peak(), 100);
+        // zero-byte allocs at the boundary are free
+        assert!(l.can_fit(0));
+        l.alloc(0).unwrap();
+        // draining and refilling keeps the peak at the high-water mark
+        l.dealloc(100);
+        l.alloc(40).unwrap();
+        assert_eq!(l.peak(), 100);
     }
 
     #[test]

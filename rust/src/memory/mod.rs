@@ -15,6 +15,11 @@
 //! fixed-size position blocks with free-list recycling — the memory-
 //! pooling discipline of §4.4 applied to generation state, so thousands
 //! of concurrent sessions share the slab without per-session allocation.
+//! The cache is **two-tiered**: cold sessions spill whole-session block
+//! images into a ledger-accounted host arena ([`kvcache::tier`]) and are
+//! staged back before their next decode bucket dispatches, under an
+//! engine-side LRU policy ([`kvcache::tier::TierPolicy`]) — so the live
+//! session count is bounded by device + host capacity, not the slab.
 //!
 //! A further concern is the **activation arena** ([`arena`]),
 //! the size-bucketed `Vec<f32>` recycler behind the zero-copy host hot
@@ -31,6 +36,7 @@ pub mod ledger;
 pub mod pool;
 
 pub use arena::{ArenaBuf, ArenaPool, ArenaStats};
+pub use kvcache::tier::{TierCmd, TierConfig, TierPolicy};
 pub use kvcache::{KvCache, KvCacheConfig, KvStats};
 pub use ledger::MemoryLedger;
 pub use pool::{PoolConfig, PooledProvider};

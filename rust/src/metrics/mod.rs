@@ -248,6 +248,22 @@ impl Recorder {
                 crate::util::fmt_bytes(self.kvcache.slab_bytes),
             ));
         }
+        if self.kvcache.spills + self.kvcache.prefetches > 0 {
+            s.push_str(&format!(
+                "; kvspill {} out / {} in ({} spilled, {} held, stall {}ms)",
+                self.kvcache.spills,
+                self.kvcache.prefetches,
+                crate::util::fmt_bytes(self.kvcache.spill_bytes),
+                crate::util::fmt_bytes(self.kvcache.host_bytes),
+                self.kvcache.prefetch_stall_us / 1000,
+            ));
+        }
+        if self.kvcache.gather_spilled + self.kvcache.overflow_blocks > 0 {
+            s.push_str(&format!(
+                "; KVSPILL-ANOMALY {} spilled gathers, {} overflow blocks",
+                self.kvcache.gather_spilled, self.kvcache.overflow_blocks,
+            ));
+        }
         s
     }
 }
@@ -329,10 +345,35 @@ mod tests {
             blocks_grown: 41,
             slab_bytes: 64 * 1024,
             sessions: 3,
+            ..Default::default()
         });
         assert_eq!(r.kvcache_stats().blocks_peak, 40);
         let s = r.summary();
         assert!(s.contains("kvcache 12 blocks in use (peak 40"), "{s}");
+        assert!(!s.contains("kvspill"), "no tier traffic -> no spill line: {s}");
+    }
+
+    #[test]
+    fn kvspill_counters_surface_in_summary() {
+        let mut r = Recorder::new();
+        r.record_kvcache(KvStats {
+            blocks_in_use: 4,
+            spills: 7,
+            prefetches: 6,
+            spill_bytes: 7 * 16 * 1024,
+            prefetch_bytes: 6 * 16 * 1024,
+            host_bytes: 16 * 1024,
+            sessions_spilled: 1,
+            prefetch_stall_us: 2500,
+            ..Default::default()
+        });
+        let s = r.summary();
+        assert!(s.contains("kvspill 7 out / 6 in"), "{s}");
+        assert!(s.contains("stall 2ms"), "{s}");
+        assert!(!s.contains("ANOMALY"), "{s}");
+        // loud-path counters surface as an anomaly marker
+        r.record_kvcache(KvStats { gather_spilled: 1, ..Default::default() });
+        assert!(r.summary().contains("KVSPILL-ANOMALY 1 spilled gathers"), "{}", r.summary());
     }
 
     #[test]

@@ -1,0 +1,200 @@
+//! Tiered KV cache, differentially: spilling cold sessions to the host
+//! tier and prefetching them on re-entry must be invisible in the token
+//! streams (greedy decoding is deterministic, so any divergence is a
+//! tiering bug) while letting a device slab sized for K sessions serve
+//! many more concurrent sessions than K.
+//!
+//! Every test skips cleanly when the AOT artifacts are absent (the same
+//! condition under which an `Engine` cannot launch at all), so the suite
+//! never *adds* failures on an artifact-less checkout.
+
+use energonai::coordinator::engine::{Engine, GenRequest, GenRef, LaunchConfig};
+use energonai::memory::kvcache;
+use energonai::runtime::{find_artifacts, Manifest};
+use std::sync::Mutex;
+
+/// Serializes every test in this binary: several assert on the
+/// process-wide kvcache gauges, so no other engine may run concurrently.
+static STATS_LOCK: Mutex<()> = Mutex::new(());
+
+fn stats_guard() -> std::sync::MutexGuard<'static, ()> {
+    STATS_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Decode artifacts for (tiny, tp) present? When not, the test is a
+/// no-op — matching the seed state instead of adding failures.
+fn artifacts_ready(tp: usize) -> bool {
+    let dir = match find_artifacts() {
+        Ok(d) => d,
+        Err(_) => {
+            eprintln!("skipping: no AOT artifacts (run `make artifacts`)");
+            return false;
+        }
+    };
+    let man = match Manifest::cached(dir) {
+        Ok(m) => m,
+        Err(_) => return false,
+    };
+    let ok = !man.decode_widths("tiny", tp).is_empty() && man.has_kv_prefill("tiny", tp);
+    if !ok {
+        eprintln!("skipping: decode artifacts missing for tiny/tp{tp}");
+    }
+    ok
+}
+
+/// A spill-enabled engine with a deliberately tiny device tier:
+/// `device_blocks` blocks per worker, unlimited host tier. Two dispatcher
+/// threads bound the number of pinned (in-flight) sessions.
+fn launch_spill(tp: usize, device_blocks: usize) -> Engine {
+    let mut lc = LaunchConfig::preset("tiny")
+        .with_parallel(tp, 1)
+        .with_kv_spill(device_blocks, 0);
+    lc.engine.pool_threads = 2;
+    Engine::launch(lc).unwrap()
+}
+
+fn launch_resident(tp: usize) -> Engine {
+    Engine::launch(LaunchConfig::preset("tiny").with_parallel(tp, 1)).unwrap()
+}
+
+fn prompts(n: usize) -> Vec<Vec<i32>> {
+    (0..n)
+        .map(|i| {
+            let len = 2 + (i * 3) % 7;
+            (0..len).map(|j| ((i * 31 + j * 7) % 100 + 1) as i32).collect()
+        })
+        .collect()
+}
+
+/// The tentpole acceptance bar: with a device tier sized for ~K sessions,
+/// 3K+ concurrent sessions all complete, spill/prefetch counters move,
+/// and every token stream is byte-identical to the resident-only run.
+fn assert_spill_parity(tp: usize, n_sessions: usize, device_blocks: usize) {
+    if !artifacts_ready(tp) {
+        return;
+    }
+    let _guard = stats_guard();
+
+    let resident = launch_resident(tp);
+    assert!(resident.kv_cache_on(), "decode artifacts present but cache off");
+    assert!(!resident.kv_spill_on());
+    let expect: Vec<Vec<i32>> = prompts(n_sessions)
+        .into_iter()
+        .map(|p| resident.generate(p, 8).unwrap())
+        .collect();
+    resident.shutdown();
+
+    let before = kvcache::global_stats();
+    let spilled = launch_spill(tp, device_blocks);
+    assert!(spilled.kv_spill_on());
+    let grefs: Vec<GenRef> = prompts(n_sessions)
+        .into_iter()
+        .map(|p| spilled.generate_stream(GenRequest::new(p, 8)).unwrap())
+        .collect();
+    let got: Vec<Vec<i32>> = grefs.iter().map(|g| g.to_here().unwrap()).collect();
+    assert_eq!(got, expect, "tiered decode diverged (tp={tp})");
+
+    let stats = spilled.metrics_snapshot().kvcache_stats();
+    assert!(
+        stats.spills > before.spills,
+        "device tier of {device_blocks} blocks never spilled under {n_sessions} sessions"
+    );
+    assert!(stats.prefetches > before.prefetches, "spilled sessions never staged back");
+    assert_eq!(
+        stats.gather_spilled, before.gather_spilled,
+        "a decode bucket dispatched against a spilled session"
+    );
+    spilled.shutdown();
+    // everything released from both tiers after the drain
+    let after = kvcache::global_stats();
+    assert_eq!(after.blocks_in_use, before.blocks_in_use, "device blocks leaked");
+    assert_eq!(after.host_bytes, before.host_bytes, "host-tier bytes leaked");
+    assert_eq!(after.sessions_spilled, before.sessions_spilled);
+}
+
+#[test]
+fn tiered_decode_matches_resident_tp1() {
+    // tiny prompts run 2..8 tokens -> 9..16 positions -> 1..2 blocks per
+    // session. 8 device blocks ≈ 4 sessions; 16 concurrent = 4x that.
+    assert_spill_parity(1, 16, 8);
+}
+
+#[test]
+fn tiered_decode_matches_resident_tp2() {
+    assert_spill_parity(2, 16, 8);
+}
+
+/// Stop-token early exit with blocks in the host tier: same truncation,
+/// and the stopped sessions' blocks leave both tiers.
+#[test]
+fn stop_token_parity_with_spill() {
+    if !artifacts_ready(1) {
+        return;
+    }
+    let _guard = stats_guard();
+    let resident = launch_resident(1);
+    let prompt = vec![5, 9, 2];
+    let free_run = resident.generate(prompt.clone(), 6).unwrap();
+    assert!(free_run.len() > prompt.len() + 1);
+    let stop = free_run[prompt.len() + 1];
+    let expect: Vec<Vec<i32>> = (0..8)
+        .map(|_| {
+            resident
+                .generate_stream(GenRequest::new(prompt.clone(), 6).with_stop(stop))
+                .unwrap()
+                .to_here()
+                .unwrap()
+        })
+        .collect();
+    resident.shutdown();
+
+    let before = kvcache::global_stats();
+    let spilled = launch_spill(1, 4);
+    let grefs: Vec<GenRef> = (0..8)
+        .map(|_| {
+            spilled
+                .generate_stream(GenRequest::new(prompt.clone(), 6).with_stop(stop))
+                .unwrap()
+        })
+        .collect();
+    let got: Vec<Vec<i32>> = grefs.iter().map(|g| g.to_here().unwrap()).collect();
+    assert_eq!(got, expect, "stop-token truncation diverged under spill");
+    for g in &got {
+        assert_eq!(*g.last().unwrap(), stop);
+    }
+    spilled.shutdown();
+    let after = kvcache::global_stats();
+    assert_eq!(after.blocks_in_use, before.blocks_in_use, "stop-token leaked device blocks");
+    assert_eq!(after.host_bytes, before.host_bytes, "stop-token leaked host bytes");
+}
+
+/// Sequential waves through a tiny device tier: the slab must not grow
+/// beyond its cap (no overflow) and the host tier must fully drain.
+#[test]
+fn waves_respect_the_device_cap() {
+    if !artifacts_ready(1) {
+        return;
+    }
+    let _guard = stats_guard();
+    let before = kvcache::global_stats();
+    let engine = launch_spill(1, 8);
+    for _ in 0..3 {
+        let grefs: Vec<GenRef> = prompts(12)
+            .into_iter()
+            .map(|p| engine.generate_stream(GenRequest::new(p, 4)).unwrap())
+            .collect();
+        for g in &grefs {
+            g.to_here().unwrap();
+        }
+    }
+    let stats = engine.metrics_snapshot().kvcache_stats();
+    assert_eq!(
+        stats.overflow_blocks, before.overflow_blocks,
+        "admission control let the device tier overflow"
+    );
+    assert_eq!(stats.gather_spilled, before.gather_spilled);
+    engine.shutdown();
+    let after = kvcache::global_stats();
+    assert_eq!(after.blocks_in_use, before.blocks_in_use);
+    assert_eq!(after.host_bytes, before.host_bytes);
+}

@@ -1,0 +1,23 @@
+#!/usr/bin/env bash
+# Run the tiered-KV-cache benchmark (concurrent sessions served by a
+# capped device slab + host spill tier vs. the resident-only baseline)
+# and refresh BENCH_kvspill.json at the repo root. BENCH_SMOKE=1 runs a
+# smaller session wave (CI).
+#
+# Usage: scripts/bench_kvspill.sh [extra cargo args...]
+set -euo pipefail
+
+cd "$(dirname "$0")/../rust"
+
+if ! ls ../artifacts/manifest.json >/dev/null 2>&1 && ! ls artifacts/manifest.json >/dev/null 2>&1; then
+    echo "warning: no AOT artifacts found — the bench will skip (run 'make artifacts')" >&2
+fi
+
+cargo bench --bench kvspill "$@"
+
+out="$(cd .. && pwd)/BENCH_kvspill.json"
+if [ -f "$out" ]; then
+    echo "refreshed $out"
+else
+    echo "warning: $out was not written (bench skipped?)" >&2
+fi

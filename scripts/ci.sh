@@ -15,3 +15,8 @@ cargo fmt --check
 # decode-bench smoke: one prefix, few tokens — catches decode-path and
 # BENCH_decode.json regressions without the full sweep's runtime
 BENCH_SMOKE=1 cargo bench --bench decode
+
+# kvspill smoke: a small concurrent-session wave through a capped device
+# tier — catches tiering regressions (parity failure exits non-zero) and
+# refreshes BENCH_kvspill.json
+BENCH_SMOKE=1 cargo bench --bench kvspill
