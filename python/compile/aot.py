@@ -82,12 +82,16 @@ PLANS = {
             # batch points: wide decode buckets serve many concurrent
             # sessions without widening any prefill bucket
             "decode_widths": [1, 2, 4, 8, 16],
+            # speculative decode: verify-window sizes compiled for every
+            # decode width (one `*_verify` family per (width, k))
+            "spec_ks": [2, 4],
         },
         "small": {
             "points": [(2, 32), (4, 64)],
             "tps": [1, 2, 4],
             "drce": [(4, 64, 128)],
             "decode_widths": [2, 4, 8, 16],
+            "spec_ks": [2, 4],
         },
         # long-context preset for the decode-latency sweep
         # (scripts/bench_decode.sh: per-token latency vs prefix length)
@@ -117,6 +121,28 @@ def decode_family_jobs(cfg, width, tps, rows_done):
     return jobs
 
 
+def verify_family_jobs(cfg, width, k, tps, rows_done, logits_done):
+    """Lowering jobs for one speculative-verify bucket ``(width, k)``:
+    ``embed_verify`` / ``layer_full_verify`` (and per-tp
+    ``attn_shard_verify`` + ``mlp_shard`` with rows = width*k) plus a
+    seq=k ``logits`` head scoring every window row."""
+    jobs = [
+        (cfg, "embed_verify", dict(batch=width, seq=k)),
+        (cfg, "layer_full_verify", dict(batch=width, seq=k)),
+    ]
+    if (width, k) not in logits_done:
+        logits_done.add((width, k))
+        jobs.append((cfg, "logits", dict(batch=width, seq=k)))
+    for tp in tps:
+        jobs.append((cfg, "attn_shard_verify", dict(batch=width, seq=k, tp=tp)))
+        if (tp, width * k) not in rows_done:
+            rows_done.add((tp, width * k))
+            jobs.append(
+                (cfg, "mlp_shard", dict(batch=width, seq=k, tp=tp, t_bucket=width * k))
+            )
+    return jobs
+
+
 def plan_jobs(plan: dict):
     """Expand a plan into (cfg, kind, kwargs) lowering jobs.
 
@@ -127,13 +153,17 @@ def plan_jobs(plan: dict):
     ``attn_shard_kv`` prefill twins. A preset's ``decode_widths`` adds
     further decode families *decoupled* from the prefill points, so wide
     decode buckets (e.g. 8/16) exist without an equally wide prefill.
+    A preset's ``spec_ks`` additionally emits one speculative-verify
+    family per (width, k) over every width compiled above.
     """
     jobs = []
     for preset, spec in plan.items():
         cfg = PRESETS[preset]
         rows_done = set()
         widths_done = set()
+        logits_done = set()
         for batch, seq in spec["points"]:
+            logits_done.add((batch, seq))
             jobs.append((cfg, "embed", dict(batch=batch, seq=seq)))
             jobs.append((cfg, "layer_full", dict(batch=batch, seq=seq)))
             jobs.append((cfg, "layer_full_kv", dict(batch=batch, seq=seq)))
@@ -152,6 +182,12 @@ def plan_jobs(plan: dict):
             if width not in widths_done:
                 widths_done.add(width)
                 jobs.extend(decode_family_jobs(cfg, width, spec["tps"], rows_done))
+        # speculative decode: a verify family per (decode width, window k)
+        for k in spec.get("spec_ks", []):
+            for width in sorted(widths_done):
+                jobs.extend(
+                    verify_family_jobs(cfg, width, k, spec["tps"], rows_done, logits_done)
+                )
         for batch, seq, t in spec.get("drce", []):
             for tp in spec["tps"]:
                 jobs.append(

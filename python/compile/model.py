@@ -23,6 +23,28 @@ redundant computation, §4.2.2, applied along the *time* axis):
   attn_shard_decode  the TP half of the above (caches are (B, S, H/tp);
                      the MLP half reuses ``mlp_shard`` with rows = B)
 
+Speculative-decode variants (draft-and-verify: score a window of K
+candidate tokens against the cache in ONE pass, with causal masking
+*inside* the window, so the scheduler can commit the longest accepted
+prefix — tokens-per-pass > 1 at unchanged greedy semantics):
+
+  embed_verify       embedding of K tokens per row at explicit positions
+                     base .. base+K-1 (base = valid_len - K, bound host-side)
+  layer_full_verify  one layer over a (B, K, H) candidate window attending
+                     over (B, S, H) cache tensors; window row j sees cache
+                     positions 0..base+j (its own row included); emits the
+                     K new K/V rows for the host to append speculatively
+  attn_shard_verify  the TP half of the above (caches are (B, S, H/tp);
+                     the MLP half reuses ``mlp_shard`` with rows = B*K)
+
+Row j of a verify window computes a plain decode step at position base+j
+given the prefix — ``test_model.py::TestVerify`` pins that per-row
+equivalence (to float tolerance: the two variants compile to different
+fused programs, so equality is numerical, not bitwise — a near-argmax-tie
+is the theoretical divergence window; the Rust differential suite pins
+stream equality empirically). The seq=K ``logits`` head scores every
+window row at once.
+
 Decode attention is a (1, S) matrix-vector product per head — a different
 shape regime from the flash-style prefill kernel, so it is expressed
 directly in jnp (online softmax buys nothing at query length 1). The new
@@ -222,6 +244,51 @@ def _mha_decode(x, valid_len, k_cache, v_cache, wqkv, bqkv, wo, bo, heads_local:
     return linear(o, wo, bo), k_new, v_new
 
 
+def _mha_verify(x, valid_len, k_cache, v_cache, wqkv, bqkv, wo, bo, heads_local: int):
+    """Attention core for a K-position candidate window against a cache.
+
+    ``x`` is the layernormed (B, K, H) activation of the window tokens;
+    ``k_cache``/``v_cache`` are (B, S, H_local) with positions
+    ``0 .. base-1`` populated, where ``base = valid_len - K`` and
+    ``valid_len`` counts tokens *including* the whole window. The K new
+    K/V rows are blended in at positions ``base + j`` before attending,
+    and window query j sees exactly keys ``0 .. base+j`` (causal masking
+    inside the window) — so row j reproduces a plain decode step at
+    position ``base + j``. The new rows are returned for the host to
+    append speculatively (and truncate back to the accepted prefix).
+    """
+    b, k_win = x.shape[0], x.shape[1]
+    s = k_cache.shape[1]
+    h_local = k_cache.shape[2]
+    hd = h_local // heads_local
+    qkv = linear(x, wqkv, bqkv)  # (B, K, 3*H_local)
+    q, k_new, v_new = jnp.split(qkv, 3, axis=-1)
+
+    base = valid_len - k_win  # (B,)
+    # scatter the window rows into the cache: position base+j <- row j
+    pos = base[:, None] + jnp.arange(k_win)[None, :]  # (B, K)
+    onehot = (jnp.arange(s)[None, :, None] == pos[:, None, :]).astype(k_cache.dtype)  # (B, S, K)
+    in_window = jnp.sum(onehot, axis=-1, keepdims=True)  # (B, S, 1) 0/1
+    k_full = k_cache * (1.0 - in_window) + jnp.einsum("bsj,bjh->bsh", onehot, k_new)
+    v_full = v_cache * (1.0 - in_window) + jnp.einsum("bsj,bjh->bsh", onehot, v_new)
+
+    def to_heads(t, n):
+        return t.reshape(b, n, heads_local, hd).transpose(0, 2, 1, 3)
+
+    qh = to_heads(q, k_win).astype(jnp.float32)  # (B, nh, K, hd)
+    kh = to_heads(k_full, s).astype(jnp.float32)  # (B, nh, S, hd)
+    vh = to_heads(v_full, s).astype(jnp.float32)
+    # query j (position base+j) attends keys at positions <= base+j
+    keymask = jnp.arange(s)[None, None, :] <= pos[:, :, None]  # (B, K, S)
+    bias = jnp.where(keymask, 0.0, NEG_INF)[:, None, :, :]  # (B, 1, K, S)
+    scale = 1.0 / (hd**0.5)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", qh, kh) * scale + bias
+    p = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bhqk,bhkd->bhqd", p, vh).astype(x.dtype)
+    o = o.transpose(0, 2, 1, 3).reshape(b, k_win, h_local)
+    return linear(o, wo, bo), k_new, v_new
+
+
 def build_layer_full(cfg: ModelConfig) -> Callable:
     """Whole layer, single device: y = r + mlp(ln2(r)), r = x + attn(ln1(x))."""
 
@@ -360,6 +427,54 @@ def build_attn_shard_decode(cfg: ModelConfig, tp: int) -> Callable:
     return fn
 
 
+def build_layer_full_verify(cfg: ModelConfig) -> Callable:
+    """One layer over a K-token candidate window against the KV cache.
+
+    Inputs: x (B, K, H), valid_len (B,) counting every window token,
+    k_cache/v_cache (B, S, H). Outputs: (y, k_new, v_new) with the K new
+    K/V rows (B, K, H) the host appends speculatively.
+    """
+
+    def fn(x, valid_len, k_cache, v_cache, ln1_g, ln1_b, wqkv, bqkv, wo, bo, ln2_g, ln2_b, w1, b1, w2, b2):
+        a = layernorm(x, ln1_g, ln1_b)
+        attn, k_new, v_new = _mha_verify(
+            a, valid_len, k_cache, v_cache, wqkv, bqkv, wo, bo, cfg.n_heads
+        )
+        r = x + attn
+        m = layernorm(r, ln2_g, ln2_b)
+        m = linear(m, w1, b1, act="gelu")
+        m = linear(m, w2, b2)
+        return (r + m, k_new, v_new)
+
+    return fn
+
+
+def build_attn_shard_verify(cfg: ModelConfig, tp: int) -> Callable:
+    """TP attention half of a verify step: partial output (B, K, H) plus
+    the shard's new K/V rows (B, K, H/tp). The coordinator all-reduces the
+    partial, adds the residual, and runs ``mlp_shard`` with rows = B*K."""
+    heads_local = cfg.n_heads // tp
+
+    def fn(x, valid_len, k_cache, v_cache, ln1_g, ln1_b, wqkv, bqkv, wo, bo):
+        a = layernorm(x, ln1_g, ln1_b)
+        return _mha_verify(a, valid_len, k_cache, v_cache, wqkv, bqkv, wo, bo, heads_local)
+
+    return fn
+
+
+def build_embed_verify(cfg: ModelConfig) -> Callable:
+    """Embedding of K tokens per row at explicit consecutive positions
+    ``pos + j`` (the verify window starts at ``valid_len - K``, bound
+    host-side as ``pos``)."""
+
+    def fn(ids, pos, wte, wpe):
+        k_win = ids.shape[1]
+        positions = pos[:, None] + jnp.arange(k_win)[None, :]  # (B, K)
+        return (jnp.take(wte, ids, axis=0) + wpe[positions],)
+
+    return fn
+
+
 def build_embed_decode(cfg: ModelConfig) -> Callable:
     """Embedding of one token per row at an explicit position (the decode
     step's position is ``valid_len - 1``, bound host-side)."""
@@ -469,6 +584,34 @@ def variant(cfg: ModelConfig, kind: str, *, batch: int = 1, seq: int = 16, tp: i
             ("v_cache", _spec((batch, cfg.max_seq, h // tp))),
         ] + params(ATTN_PARAMS)
         return name, build_attn_shard_decode(cfg, tp), args
+    if kind == "layer_full_verify":
+        # the verify window size rides in `seq`; cache capacity is max_seq
+        name = f"{cfg.name}_layer_full_verify_b{batch}_k{seq}"
+        args = [
+            ("x", _spec((batch, seq, h))),
+            ("valid_len", _spec((batch,), I32)),
+            ("k_cache", _spec((batch, cfg.max_seq, h))),
+            ("v_cache", _spec((batch, cfg.max_seq, h))),
+        ] + params(ATTN_PARAMS + MLP_PARAMS)
+        return name, build_layer_full_verify(cfg), args
+    if kind == "attn_shard_verify":
+        name = f"{cfg.name}_attn_shard_verify_tp{tp}_b{batch}_k{seq}"
+        args = [
+            ("x", _spec((batch, seq, h))),
+            ("valid_len", _spec((batch,), I32)),
+            ("k_cache", _spec((batch, cfg.max_seq, h // tp))),
+            ("v_cache", _spec((batch, cfg.max_seq, h // tp))),
+        ] + params(ATTN_PARAMS)
+        return name, build_attn_shard_verify(cfg, tp), args
+    if kind == "embed_verify":
+        name = f"{cfg.name}_embed_verify_b{batch}_k{seq}"
+        args = [
+            ("ids", _spec((batch, seq), I32)),
+            ("pos", _spec((batch,), I32)),
+            ("wte", _spec((cfg.vocab, h))),
+            ("wpe", _spec((cfg.max_seq, h))),
+        ]
+        return name, build_embed_verify(cfg), args
     if kind == "embed_decode":
         name = f"{cfg.name}_embed_decode_b{batch}"
         args = [

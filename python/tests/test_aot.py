@@ -79,6 +79,40 @@ class TestPlans:
             )
 
 
+    def test_spec_ks_emit_whole_verify_families(self):
+        # every (width, k) pair carries embed_verify, layer_full_verify,
+        # a seq=k logits head, per-tp attn_shard_verify and a rows=w*k
+        # mlp_shard (possibly shared with another point of the same rows)
+        jobs = aot.plan_jobs(aot.PLANS["full"])
+        tiny = [(k, kw) for cfg, k, kw in jobs if cfg.name == "tiny"]
+        widths = sorted(kw["batch"] for k, kw in tiny if k == "layer_full_decode")
+        for w in widths:
+            for spec_k in aot.PLANS["full"]["tiny"]["spec_ks"]:
+                assert any(
+                    k == "embed_verify" and kw["batch"] == w and kw["seq"] == spec_k
+                    for k, kw in tiny
+                ), (w, spec_k)
+                assert any(
+                    k == "layer_full_verify" and kw["batch"] == w and kw["seq"] == spec_k
+                    for k, kw in tiny
+                )
+                assert any(
+                    k == "logits" and kw["batch"] == w and kw["seq"] == spec_k
+                    for k, kw in tiny
+                )
+                for tp in aot.PLANS["full"]["tiny"]["tps"]:
+                    assert any(
+                        k == "attn_shard_verify"
+                        and kw["batch"] == w and kw["seq"] == spec_k and kw["tp"] == tp
+                        for k, kw in tiny
+                    )
+                assert any(
+                    k == "mlp_shard"
+                    and (kw.get("t_bucket") or kw["batch"] * kw["seq"]) == w * spec_k
+                    for k, kw in tiny
+                )
+
+
 class TestEndToEnd:
     def test_quick_plan_writes_manifest(self, tmp_path):
         rc = aot.main(["--out", str(tmp_path), "--plan", "quick"])

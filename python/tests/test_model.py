@@ -357,6 +357,162 @@ class TestDecode:
             jax.jit(fn).lower(*[s for _, s in args])
 
 
+class TestVerify:
+    """Speculative-decode verify variants: row j of a (B, K) candidate
+    window must equal a plain decode step at position base+j for every
+    j < K — the per-row equivalence that makes draft-and-verify lossless
+    under greedy sampling (the Rust differential suite
+    `rust/tests/spec_decode.rs` pins the same invariant end to end)."""
+
+    def _prefix_kv(self, x, params):
+        """Oracle K/V rows of the padded input (what the cache holds)."""
+        a = ref.layernorm_ref(x, params["ln1_g"], params["ln1_b"])
+        qkv = ref.linear_ref(a, params["wqkv"], params["bqkv"])
+        _, k, v = jnp.split(qkv, 3, axis=-1)
+        return k, v
+
+    @pytest.mark.parametrize("k_win", [2, 4])
+    def test_verify_rows_match_sequential_decode(self, k_win):
+        """One verify pass over a K-window == K sequential decode steps
+        feeding each new K/V row back into the cache."""
+        cfg = TINY
+        params = make_layer_params(jax.random.PRNGKey(40), cfg)
+        batch, s = 2, cfg.max_seq
+        lens = [9, 6]  # total tokens *including* the window
+        valid = jnp.asarray(lens, jnp.int32)
+        base = valid - k_win
+        x_win = jax.random.normal(jax.random.PRNGKey(41), (batch, k_win, cfg.hidden))
+        k_all = jax.random.normal(jax.random.PRNGKey(42), (batch, s, cfg.hidden)) * 0.5
+        v_all = jax.random.normal(jax.random.PRNGKey(43), (batch, s, cfg.hidden)) * 0.5
+        prefix = jnp.arange(s)[None, :, None] < base[:, None, None]
+        k_cache = jnp.where(prefix, k_all, 0.0)
+        v_cache = jnp.where(prefix, v_all, 0.0)
+
+        y, k_new, v_new = M.build_layer_full_verify(cfg)(
+            x_win, valid, k_cache, v_cache, *param_list(params, ALL)
+        )
+        assert y.shape == (batch, k_win, cfg.hidden)
+        assert k_new.shape == (batch, k_win, cfg.hidden)
+
+        # oracle: run the window one position at a time through the plain
+        # decode variant, appending each step's K/V row before the next
+        dec = M.build_layer_full_decode(cfg)
+        kc, vc = k_cache, v_cache
+        for j in range(k_win):
+            vl = base + j + 1  # tokens incl the one being decoded
+            yj, kj, vj = dec(x_win[:, j : j + 1], vl, kc, vc, *param_list(params, ALL))
+            assert_allclose(
+                np.asarray(y)[:, j], np.asarray(yj)[:, 0], rtol=2e-3, atol=2e-3,
+                err_msg=f"window row {j} diverged from the decode step",
+            )
+            assert_allclose(np.asarray(k_new)[:, j], np.asarray(kj)[:, 0], rtol=1e-3, atol=1e-3)
+            assert_allclose(np.asarray(v_new)[:, j], np.asarray(vj)[:, 0], rtol=1e-3, atol=1e-3)
+            onehot = (jnp.arange(s)[None, :] == (base + j)[:, None])[:, :, None]
+            kc = jnp.where(onehot, kj, kc)
+            vc = jnp.where(onehot, vj, vc)
+
+    def test_verify_rows_match_ref_layer(self):
+        """Window rows also match the pure-ref full-prefix layer at the
+        corresponding positions (per-row causal masking is correct)."""
+        cfg = TINY
+        params = make_layer_params(jax.random.PRNGKey(44), cfg)
+        k_win, total = 3, 11
+        s = cfg.max_seq
+        x = jax.random.normal(jax.random.PRNGKey(45), (1, s, cfg.hidden))
+        x = x * (jnp.arange(s)[None, :, None] < total)
+        base = total - k_win
+        k_all, v_all = self._prefix_kv(x, params)
+        keep = jnp.arange(s)[None, :, None] < base
+        y, k_new, v_new = M.build_layer_full_verify(cfg)(
+            x[:, base:total],
+            jnp.array([total], jnp.int32),
+            jnp.where(keep, k_all, 0.0),
+            jnp.where(keep, v_all, 0.0),
+            *param_list(params, ALL),
+        )
+        for j in range(k_win):
+            vl = jnp.array([base + j + 1], jnp.int32)
+            expect = ref.layer_ref(x, vl, params, cfg.n_heads)
+            assert_allclose(
+                np.asarray(y)[0, j], np.asarray(expect)[0, base + j], rtol=2e-3, atol=2e-3,
+                err_msg=f"window row {j} diverged from the ref layer",
+            )
+            assert_allclose(np.asarray(k_new)[0, j], np.asarray(k_all)[0, base + j], rtol=1e-3, atol=1e-3)
+            assert_allclose(np.asarray(v_new)[0, j], np.asarray(v_all)[0, base + j], rtol=1e-3, atol=1e-3)
+
+    @pytest.mark.parametrize("tp", [1, 2])
+    def test_attn_shard_verify_reassembles(self, tp):
+        """TP verify shards + all-reduce + host residual + mlp_shard with
+        rows=B*K must equal layer_full_verify — the coordinator's verify
+        contract."""
+        cfg = TINY
+        params = make_layer_params(jax.random.PRNGKey(46), cfg)
+        batch, k_win, s = 2, 4, cfg.max_seq
+        lens = [8, 13]
+        valid = jnp.asarray(lens, jnp.int32)
+        base = valid - k_win
+        x_win = jax.random.normal(jax.random.PRNGKey(47), (batch, k_win, cfg.hidden))
+        k_all = jax.random.normal(jax.random.PRNGKey(48), (batch, s, cfg.hidden)) * 0.5
+        v_all = jax.random.normal(jax.random.PRNGKey(49), (batch, s, cfg.hidden)) * 0.5
+        prefix = jnp.arange(s)[None, :, None] < base[:, None, None]
+        k_cache = jnp.where(prefix, k_all, 0.0)
+        v_cache = jnp.where(prefix, v_all, 0.0)
+
+        expect, k_ref, v_ref = M.build_layer_full_verify(cfg)(
+            x_win, valid, k_cache, v_cache, *param_list(params, ALL)
+        )
+
+        hd = cfg.head_dim
+        heads_local = cfg.n_heads // tp
+        w = heads_local * hd
+        shards = [M.shard_layer_params(params, tp, r, cfg.n_heads) for r in range(tp)]
+        verify_fn = M.build_attn_shard_verify(cfg, tp)
+        mlp_fn = M.build_mlp_shard(cfg, tp)
+        parts = []
+        for r, sh in enumerate(shards):
+            sl = slice(r * w, (r + 1) * w)
+            parts.append(
+                verify_fn(
+                    x_win, valid, k_cache[..., sl], v_cache[..., sl],
+                    *param_list(sh, M.ATTN_PARAMS),
+                )
+            )
+        attn_sum = sum(p[0] for p in parts)
+        r_res = x_win + attn_sum
+        r2 = r_res.reshape(batch * k_win, cfg.hidden)
+        mlp_sum = sum(mlp_fn(r2, *param_list(sh, M.MLP_PARAMS))[0] for sh in shards)
+        y = r_res + mlp_sum.reshape(batch, k_win, cfg.hidden)
+        assert_allclose(np.asarray(y), np.asarray(expect), rtol=2e-3, atol=2e-3)
+        k_cat = jnp.concatenate([p[1] for p in parts], axis=-1)
+        v_cat = jnp.concatenate([p[2] for p in parts], axis=-1)
+        assert_allclose(np.asarray(k_cat), np.asarray(k_ref), rtol=1e-3, atol=1e-3)
+        assert_allclose(np.asarray(v_cat), np.asarray(v_ref), rtol=1e-3, atol=1e-3)
+
+    def test_embed_verify_matches_embed_positions(self):
+        cfg = TINY
+        ids = jnp.array([[1, 5, 7, 9], [2, 2, 3, 4]], jnp.int32)
+        wte = jax.random.normal(jax.random.PRNGKey(50), (cfg.vocab, cfg.hidden))
+        wpe = jax.random.normal(jax.random.PRNGKey(51), (cfg.max_seq, cfg.hidden))
+        (full,) = M.build_embed(cfg)(ids, wte, wpe)
+        # verify the window ids[ :, 1:3] at base positions [1, 0]
+        base = jnp.array([1, 0], jnp.int32)
+        win = jnp.stack([ids[0, 1:3], ids[1, 0:2]])
+        (y,) = M.build_embed_verify(cfg)(win, base, wte, wpe)
+        for b, p in enumerate([1, 0]):
+            for j in range(2):
+                assert_allclose(np.asarray(y)[b, j], np.asarray(full)[b, p + j], rtol=1e-6)
+
+    def test_verify_variants_lower(self):
+        # the exact path aot.py takes must trace without concrete inputs
+        for kind, kw in [
+            ("embed_verify", dict(batch=2, seq=4)),
+            ("layer_full_verify", dict(batch=2, seq=4)),
+            ("attn_shard_verify", dict(batch=2, seq=2, tp=2)),
+        ]:
+            name, fn, args = M.variant(TINY, kind, **kw)
+            jax.jit(fn).lower(*[s for _, s in args])
+
+
 class TestVariantRegistry:
     def test_all_kinds_have_specs(self):
         for kind, kw, n_out in [
@@ -371,6 +527,9 @@ class TestVariantRegistry:
             ("attn_shard_kv", dict(batch=2, seq=16, tp=2), 3),
             ("layer_full_decode", dict(batch=2), 3),
             ("attn_shard_decode", dict(batch=2, tp=2), 3),
+            ("embed_verify", dict(batch=2, seq=4), 1),
+            ("layer_full_verify", dict(batch=2, seq=4), 3),
+            ("attn_shard_verify", dict(batch=2, seq=2, tp=2), 3),
         ]:
             name, fn, args = M.variant(TINY, kind, **kw)
             assert name.startswith("tiny_")

@@ -1,0 +1,171 @@
+//! Speculative-decode benchmark: per-token latency, accept rate and
+//! tokens-per-pass, plain decode vs draft-and-verify at k∈{2,4} (the
+//! ISSUE 5 acceptance experiment).
+//!
+//! Two workloads bound the accept-rate sweep: a *repetitive* prompt
+//! (cyclic tokens — the regime n-gram drafting, and small greedy models,
+//! both love) and an *adversarial* pseudo-random prompt. Each speculative
+//! cell runs twice, once with the free n-gram drafter and once with a
+//! replay drafter fed the known greedy continuation — the perfect
+//! small-model stand-in that shows the ceiling. Every cell's stream is
+//! compared byte-for-byte against the plain run; a mismatch exits
+//! non-zero (speculation must be lossless), which is what the CI smoke
+//! leg gates on.
+//!
+//! Medians land machine-readably in `BENCH_specdecode.json` at the repo
+//! root (regenerate with `scripts/bench_specdecode.sh`; `BENCH_SMOKE=1`
+//! runs a fast single-workload pass for CI).
+
+use energonai::coordinator::drafter::{NGramDrafter, ReplayDrafter};
+use energonai::coordinator::engine::{Engine, GenRequest, LaunchConfig};
+use energonai::runtime::{find_artifacts, Manifest};
+use std::time::Instant;
+
+type Results = Vec<(String, f64)>;
+
+struct Cell {
+    stream: Vec<i32>,
+    wall_us: f64,
+    tok_p50_us: Option<f64>,
+    tokens_per_pass: Option<f64>,
+    accept_rate: Option<f64>,
+}
+
+fn run_cell(
+    prompt: &[i32],
+    new_tokens: usize,
+    spec_k: usize,           // 0 = plain decode
+    replay: Option<&[i32]>,  // Some(truth) = perfect drafter
+) -> Cell {
+    let mut lc = LaunchConfig::preset("tiny").with_warmup(true);
+    if spec_k > 0 {
+        lc = lc.with_speculative(true).with_spec_k(spec_k);
+        if let Some(truth) = replay {
+            lc = lc.with_drafter(ReplayDrafter { script: truth.to_vec() });
+        } else {
+            lc = lc.with_drafter(NGramDrafter::default());
+        }
+    }
+    let engine = Engine::launch(lc).expect("engine launch");
+    if spec_k > 0 {
+        assert!(engine.speculative_on(), "verify artifacts missing — run `make artifacts`");
+    }
+    let t0 = Instant::now();
+    let stream = engine
+        .generate_stream(GenRequest::new(prompt.to_vec(), new_tokens))
+        .unwrap()
+        .to_here()
+        .unwrap();
+    let wall_us = t0.elapsed().as_secs_f64() * 1e6;
+    let m = engine.metrics_snapshot();
+    let cell = Cell {
+        stream,
+        wall_us,
+        tok_p50_us: m.token_percentile(0.50).map(|d| d.as_secs_f64() * 1e6),
+        tokens_per_pass: m.spec_tokens_per_pass(),
+        accept_rate: m.spec_accept_rate(),
+    };
+    engine.shutdown();
+    cell
+}
+
+fn push(results: &mut Results, key: String, v: Option<f64>) {
+    if let Some(v) = v {
+        results.push((key, v));
+    }
+}
+
+fn write_json(results: &Results) {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_specdecode.json");
+    let mut body = String::from("{\n  \"schema\": \"bench_specdecode/v1\",\n");
+    body.push_str("  \"generated_by\": \"scripts/bench_specdecode.sh\",\n");
+    body.push_str("  \"preset\": \"tiny\",\n");
+    body.push_str("  \"results\": {\n");
+    for (i, (k, v)) in results.iter().enumerate() {
+        let comma = if i + 1 == results.len() { "" } else { "," };
+        body.push_str(&format!("    \"{k}\": {v:.3}{comma}\n"));
+    }
+    body.push_str("  }\n}\n");
+    match std::fs::write(path, body) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}
+
+fn main() {
+    if find_artifacts()
+        .ok()
+        .and_then(|d| Manifest::cached(d).ok())
+        .map(|m| m.verify_points("tiny", 1).is_empty())
+        .unwrap_or(true)
+    {
+        eprintln!("no verify artifacts found — run `make artifacts` first; skipping");
+        return;
+    }
+    let smoke = std::env::var("BENCH_SMOKE").is_ok();
+    let new_tokens = if smoke { 8 } else { 16 };
+    let ks: &[usize] = if smoke { &[4] } else { &[2, 4] };
+    // the accept-rate sweep's two poles
+    let repetitive: Vec<i32> = [7, 8, 9].iter().cycle().take(12).copied().collect();
+    let adversarial: Vec<i32> = (0..12).map(|i| (i * 37 + 11) % 90 + 1).collect();
+    let workloads: Vec<(&str, Vec<i32>)> = if smoke {
+        vec![("repetitive", repetitive)]
+    } else {
+        vec![("repetitive", repetitive), ("adversarial", adversarial)]
+    };
+
+    println!("== speculative decode: accept rate & tokens-per-pass (tiny) ==\n");
+    let mut results = Results::new();
+    let mut parity_ok = true;
+    for (wname, prompt) in &workloads {
+        let plain = run_cell(prompt, new_tokens, 0, None);
+        println!(
+            "{wname:>11} plain   : {} toks in {:.1}ms, tok p50 {}",
+            plain.stream.len() - prompt.len(),
+            plain.wall_us / 1e3,
+            plain.tok_p50_us.map(|v| format!("{v:.0}µs")).unwrap_or_else(|| "-".into()),
+        );
+        results.push((format!("plain_{wname}_wall_us"), plain.wall_us));
+        push(&mut results, format!("plain_{wname}_tok_p50_us"), plain.tok_p50_us);
+        for &k in ks {
+            for (dname, replay) in
+                [("ngram", None), ("replay", Some(plain.stream.as_slice()))]
+            {
+                let c = run_cell(prompt, new_tokens, k, replay);
+                let ok = c.stream == plain.stream;
+                parity_ok &= ok;
+                println!(
+                    "{wname:>11} k{k} {dname:>6}: tok/pass {} accept {} tok p50 {}{}",
+                    c.tokens_per_pass.map(|v| format!("{v:.2}")).unwrap_or_else(|| "-".into()),
+                    c.accept_rate.map(|v| format!("{:.0}%", v * 100.0)).unwrap_or_else(|| "-".into()),
+                    c.tok_p50_us.map(|v| format!("{v:.0}µs")).unwrap_or_else(|| "-".into()),
+                    if ok { "" } else { "  PARITY FAILURE" },
+                );
+                let key = |s: &str| format!("spec_k{k}_{wname}_{dname}_{s}");
+                results.push((key("wall_us"), c.wall_us));
+                push(&mut results, key("tok_p50_us"), c.tok_p50_us);
+                push(&mut results, key("tokens_per_pass"), c.tokens_per_pass);
+                push(&mut results, key("accept_rate"), c.accept_rate);
+                results.push((key("parity"), if ok { 1.0 } else { 0.0 }));
+            }
+        }
+        println!();
+    }
+    write_json(&results);
+    // acceptance: tokens-per-pass > 1.3 on the repetitive workload with a
+    // good drafter (the replay ceiling pins it deterministically)
+    let tpp = results
+        .iter()
+        .find(|(k, _)| k.ends_with("repetitive_replay_tokens_per_pass"))
+        .map(|&(_, v)| v)
+        .unwrap_or(0.0);
+    println!("repetitive tokens-per-pass (replay ceiling): {tpp:.2} (acceptance: > 1.3)");
+    if !parity_ok {
+        eprintln!("FAILED: a speculative stream diverged from plain decode");
+        std::process::exit(1);
+    }
+    if tpp <= 1.3 {
+        eprintln!("FAILED: tokens-per-pass {tpp:.2} <= 1.3 on the repetitive workload");
+        std::process::exit(1);
+    }
+}

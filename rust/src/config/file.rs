@@ -19,6 +19,8 @@
 //! kv_spill = true        # tiered cache: spill cold sessions to host
 //! kv_device_blocks = 256 # device-tier cap per worker (blocks)
 //! kv_host_blocks = 1024  # host-tier capacity (0 = unlimited)
+//! speculative = true     # draft-and-verify decode over the cache
+//! spec_k = 4             # largest verify window (1 committed + k-1 drafts)
 //! pool_threads = 4
 //! max_batch = 32
 //! batch_timeout_us = 2000
@@ -61,6 +63,16 @@ pub fn launch_from_doc(doc: &TomlDoc) -> anyhow::Result<LaunchConfig> {
         doc.f64_or("engine.kv_spill_high_water", launch.engine.kv_spill_high_water);
     launch.engine.kv_spill_low_water =
         doc.f64_or("engine.kv_spill_low_water", launch.engine.kv_spill_low_water);
+    launch.engine.speculative = doc.bool_or("engine.speculative", false);
+    launch.engine.spec_k = doc.usize_or("engine.spec_k", launch.engine.spec_k);
+    anyhow::ensure!(
+        !launch.engine.speculative || launch.engine.spec_k >= 2,
+        "engine.speculative requires engine.spec_k >= 2 (one committed token + >= 1 draft)"
+    );
+    anyhow::ensure!(
+        !launch.engine.speculative || launch.engine.kv_cache,
+        "engine.speculative requires engine.kv_cache (the verify pass scores against it)"
+    );
     anyhow::ensure!(
         !launch.engine.kv_spill || launch.engine.kv_device_blocks > 0,
         "engine.kv_spill requires engine.kv_device_blocks > 0"
@@ -102,6 +114,7 @@ pub fn launch_from_doc(doc: &TomlDoc) -> anyhow::Result<LaunchConfig> {
             "engine.batch_deadline_ms", "engine.kv_cache",
             "engine.kv_spill", "engine.kv_device_blocks", "engine.kv_host_blocks",
             "engine.kv_spill_high_water", "engine.kv_spill_low_water",
+            "engine.speculative", "engine.spec_k",
             "model.n_layers",
             "memory.mode", "memory.n_local", "memory.lookahead", "memory.time_scale", "memory.link",
         ];
@@ -200,6 +213,26 @@ kv_spill_low_water = 0.5
         )
         .unwrap();
         assert!(launch_from_doc(&doc).is_err());
+    }
+
+    #[test]
+    fn speculative_round_trip_and_validation() {
+        let doc = TomlDoc::parse("[engine]\nspeculative = true\nspec_k = 2\n").unwrap();
+        let l = launch_from_doc(&doc).unwrap();
+        assert!(l.engine.speculative);
+        assert_eq!(l.engine.spec_k, 2);
+        // defaults: off, window 4
+        let l = launch_from_doc(&TomlDoc::parse("").unwrap()).unwrap();
+        assert!(!l.engine.speculative);
+        assert_eq!(l.engine.spec_k, 4);
+        // a window of 1 has no draft to verify — config error, not a no-op
+        let doc = TomlDoc::parse("[engine]\nspeculative = true\nspec_k = 1\n").unwrap();
+        let err = launch_from_doc(&doc).unwrap_err().to_string();
+        assert!(err.contains("spec_k"), "{err}");
+        // speculation without the cache cannot verify anything
+        let doc = TomlDoc::parse("[engine]\nspeculative = true\nkv_cache = false\n").unwrap();
+        let err = launch_from_doc(&doc).unwrap_err().to_string();
+        assert!(err.contains("kv_cache"), "{err}");
     }
 
     #[test]

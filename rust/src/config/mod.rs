@@ -195,6 +195,24 @@ pub struct EngineConfig {
     pub kv_spill_high_water: f64,
     /// Spill target: evict cold sessions down to this fraction.
     pub kv_spill_low_water: f64,
+    /// Speculative decode (draft-and-verify): a cheap drafter proposes
+    /// tokens and one `*_verify` pass scores the whole window, committing
+    /// the longest accepted prefix — tokens-per-pass > 1 at unchanged
+    /// greedy streams (pinned empirically by the differential suite; the
+    /// verify and decode kernels agree to float tolerance, so a
+    /// near-argmax-tie is the theoretical exception). Requires the verify
+    /// artifact family and the KV
+    /// cache, and runs only under pp == 1 (acceptance is computed on the
+    /// last stage, which must own every layer's cache); the engine falls
+    /// back to plain decode whenever any of that is missing. Off by
+    /// default: with it off, token streams are byte-identical to the
+    /// non-speculative engine by construction (the verify path is never
+    /// entered).
+    pub speculative: bool,
+    /// Largest verify window (committed token + drafted tokens) a
+    /// speculative step may use; the engine picks the largest compiled
+    /// k ≤ this that fits the session's remaining budget and context.
+    pub spec_k: usize,
 }
 
 impl Default for EngineConfig {
@@ -213,6 +231,8 @@ impl Default for EngineConfig {
             kv_host_blocks: 0,
             kv_spill_high_water: 0.90,
             kv_spill_low_water: 0.70,
+            speculative: false,
+            spec_k: 4,
         }
     }
 }

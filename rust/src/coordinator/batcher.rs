@@ -30,28 +30,52 @@ use std::time::{Duration, Instant};
 
 /// One inference request: a token sequence, tagged with the engine step
 /// kind it needs next (a fresh prompt prefills; a cached continuation
-/// decodes its newest token only).
+/// decodes its newest token only; a speculative continuation verifies its
+/// newest token plus a drafted window in one pass).
 #[derive(Clone, Debug)]
 pub struct Request {
     pub id: u64,
     pub tokens: Vec<i32>,
     pub phase: Phase,
+    /// Verify steps only: the drafted candidate tokens following the
+    /// newest committed token — the verify window is `[last committed,
+    /// draft...]`, so its size is `draft.len() + 1`. Empty otherwise.
+    pub draft: Vec<i32>,
 }
 
 impl Request {
     pub fn new(id: u64, tokens: Vec<i32>) -> Request {
-        Request { id, tokens, phase: Phase::Prefill }
+        Request { id, tokens, phase: Phase::Prefill, draft: Vec::new() }
     }
 
     /// A continuation step of a cached session: `tokens` is the full
     /// evolving sequence (the collector and length bookkeeping need it),
     /// but only the last token enters the decode batch.
     pub fn decode(id: u64, tokens: Vec<i32>) -> Request {
-        Request { id, tokens, phase: Phase::Decode }
+        Request { id, tokens, phase: Phase::Decode, draft: Vec::new() }
+    }
+
+    /// A speculative continuation step: the last committed token plus
+    /// `draft` enter the verify batch as a `draft.len() + 1`-token window.
+    pub fn verify(id: u64, tokens: Vec<i32>, draft: Vec<i32>) -> Request {
+        debug_assert!(!draft.is_empty(), "a verify step needs at least one drafted token");
+        Request { id, tokens, phase: Phase::Verify, draft }
     }
 
     pub fn len(&self) -> usize {
         self.tokens.len()
+    }
+
+    /// Window size this request's engine step scores: the drafted tokens
+    /// plus the newest committed one (1 for plain decode / prefill).
+    pub fn window(&self) -> usize {
+        self.draft.len() + 1
+    }
+
+    /// Positions the session's K/V cache will hold right after this step
+    /// (speculative rows included) — what tier-capacity checks must use.
+    pub fn cache_len(&self) -> usize {
+        self.tokens.len() + self.draft.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -90,7 +114,11 @@ impl FormedBatch {
     /// (batch, 1) tensor of each session's newest token, with
     /// `valid_lens` carrying the *total* session length (the decode
     /// variants attend over `valid_len` cache positions and place the new
-    /// K/V row at `valid_len - 1`).
+    /// K/V row at `valid_len - 1`). Verify: a (batch, k) tensor holding
+    /// each session's newest token followed by its k-1 drafted tokens,
+    /// with `valid_lens` counting the whole window (`len + k - 1`) — the
+    /// verify variants place the window's K/V rows at positions
+    /// `valid_len - k ..= valid_len - 1` with causal masking inside it.
     pub fn to_input(&self) -> BatchInput {
         let (b, s) = self.bucket;
         let mut ids = vec![0i32; b * s];
@@ -99,21 +127,35 @@ impl FormedBatch {
             match self.phase {
                 Phase::Prefill => {
                     ids[i * s..i * s + r.len()].copy_from_slice(&r.tokens);
+                    valid.push(r.len());
                 }
                 Phase::Decode => {
                     debug_assert_eq!(s, 1, "decode buckets are width-only");
                     ids[i] = *r.tokens.last().expect("empty decode request");
+                    valid.push(r.len());
+                }
+                Phase::Verify => {
+                    debug_assert_eq!(r.window(), s, "verify bucket k mismatch");
+                    ids[i * s] = *r.tokens.last().expect("empty verify request");
+                    ids[i * s + 1..i * s + s].copy_from_slice(&r.draft);
+                    // the whole drafted window counts as valid tokens
+                    valid.push(r.len() + r.draft.len());
                 }
             }
-            valid.push(r.len());
         }
         // bucket rows beyond the real requests are zero-length pads
         valid.resize(b, 0);
         // executables mask keys at valid_len, but a 0-length row would
-        // produce a fully-masked softmax; clamp to 1 over the zero token
+        // produce a fully-masked softmax; clamp pads to one window over
+        // the zero token (verify windows need valid >= k so the window
+        // base position stays non-negative)
+        let pad_min = match self.phase {
+            Phase::Verify => s,
+            _ => 1,
+        };
         for v in valid.iter_mut() {
             if *v == 0 {
-                *v = 1;
+                *v = pad_min;
             }
         }
         // per-row session ids: pad rows carry the sentinel so the
@@ -140,6 +182,11 @@ pub struct Batcher {
     /// Empty when the engine runs without a KV cache — decode requests
     /// then never reach the queue.
     decode_points: Vec<(usize, usize)>,
+    /// Compiled speculative-verify points `(width, k)`, sorted. Empty
+    /// when speculation is off — verify requests then never reach the
+    /// queue. A verify bucket never mixes windows of different k (the
+    /// variants are shape-specialized per k).
+    verify_points: Vec<(usize, usize)>,
     max_batch: usize,
     timeout: Duration,
     queue: VecDeque<(Request, Instant)>,
@@ -164,6 +211,7 @@ impl Batcher {
         Batcher {
             buckets,
             decode_points: Vec::new(),
+            verify_points: Vec::new(),
             max_batch,
             timeout,
             queue: VecDeque::new(),
@@ -177,6 +225,15 @@ impl Batcher {
         widths.sort_unstable();
         widths.dedup();
         self.decode_points = widths.into_iter().map(|w| (w, 1)).collect();
+        self
+    }
+
+    /// Enable speculative-verify buckets for the given compiled
+    /// `(width, k)` points.
+    pub fn with_verify_points(mut self, mut points: Vec<(usize, usize)>) -> Batcher {
+        points.sort_unstable();
+        points.dedup();
+        self.verify_points = points;
         self
     }
 
@@ -202,6 +259,10 @@ impl Batcher {
 
     pub fn decode_widths(&self) -> Vec<usize> {
         self.decode_points.iter().map(|&(w, _)| w).collect()
+    }
+
+    pub fn verify_points(&self) -> &[(usize, usize)] {
+        &self.verify_points
     }
 
     pub fn max_seq(&self) -> usize {
@@ -235,7 +296,8 @@ impl Batcher {
     /// it becomes spillable (LRU by last decode step) until its next
     /// bucket forms.
     pub fn requeue_front(&mut self, r: Request, arrived: Instant) {
-        debug_assert!(r.len() <= self.max_seq() && !r.is_empty());
+        // a verify window's speculative rows must also fit the cache
+        debug_assert!(r.cache_len() <= self.max_seq() && !r.is_empty());
         if let Some(t) = self.tier.as_mut() {
             t.on_requeue(r.id);
         }
@@ -272,16 +334,33 @@ impl Batcher {
             return None;
         }
         let phase = self.queue[0].0.phase;
+        // verify buckets are shape-specialized per window size k: only a
+        // same-k run can share one (runs are homogeneous anyway — the
+        // collector picks one k per wave of coalescing continuations)
+        let window = self.queue[0].0.window();
         let run = self
             .queue
             .iter()
-            .take_while(|(r, _)| r.phase == phase)
+            .take_while(|(r, _)| {
+                r.phase == phase && (phase != Phase::Verify || r.window() == window)
+            })
             .count();
         let cap = match phase {
             Phase::Prefill => self.max_batch.min(self.max_bucket_batch()),
             Phase::Decode => {
                 let max_w = self.decode_points.iter().map(|&(w, _)| w).max().unwrap_or(0);
                 assert!(max_w > 0, "decode request queued but no decode widths compiled");
+                self.max_batch.min(max_w)
+            }
+            Phase::Verify => {
+                let max_w = self
+                    .verify_points
+                    .iter()
+                    .filter(|&&(_, k)| k == window)
+                    .map(|&(w, _)| w)
+                    .max()
+                    .unwrap_or(0);
+                assert!(max_w > 0, "verify request queued but no k={window} buckets compiled");
                 self.max_batch.min(max_w)
             }
         };
@@ -297,11 +376,13 @@ impl Batcher {
         // sessions don't count — the gate can spill them), and a prefill
         // wave splits into buckets that fit the device tier alone
         if let Some(t) = self.tier.as_ref() {
+            // verify rows speculatively append draft-window K/V rows, so
+            // capacity checks use the post-step cache length
             let rows: Vec<(u64, usize)> =
-                self.queue.iter().take(take).map(|(r, _)| (r.id, r.len())).collect();
+                self.queue.iter().take(take).map(|(r, _)| (r.id, r.cache_len())).collect();
             take = match phase {
                 Phase::Prefill => t.max_prefill_rows(&rows).min(take),
-                Phase::Decode => {
+                Phase::Decode | Phase::Verify => {
                     let m = t.max_decode_rows(&rows).min(take);
                     if m == 0 {
                         // everything is pinned by in-flight buckets:
@@ -327,6 +408,18 @@ impl Batcher {
                 Phase::Prefill => smallest_fitting_bucket(&self.buckets, reqs.len(), max_len),
                 // decode row "length" is always the single newest token
                 Phase::Decode => smallest_fitting_bucket(&self.decode_points, reqs.len(), 1),
+                // verify buckets: exact-k points only, widths compared as
+                // width-only (the k column is the fixed window, not a pad
+                // target)
+                Phase::Verify => {
+                    let pts: Vec<(usize, usize)> = self
+                        .verify_points
+                        .iter()
+                        .filter(|&&(_, k)| k == window)
+                        .map(|&(w, _)| (w, 1))
+                        .collect();
+                    smallest_fitting_bucket(&pts, reqs.len(), 1).map(|(w, _)| (w, window))
+                }
             };
             if let Some(bucket) = bucket {
                 if !self.tier_gate(phase, &mut reqs) {
@@ -360,7 +453,7 @@ impl Batcher {
             Some(t) => t,
             None => return true,
         };
-        let rows: Vec<(u64, usize)> = reqs.iter().map(|(r, _)| (r.id, r.len())).collect();
+        let rows: Vec<(u64, usize)> = reqs.iter().map(|(r, _)| (r.id, r.cache_len())).collect();
         match phase {
             Phase::Prefill => {
                 let (cmds, admitted) = tier.admit_prefill(&rows);
@@ -377,7 +470,7 @@ impl Batcher {
                     return false;
                 }
             }
-            Phase::Decode => {
+            Phase::Decode | Phase::Verify => {
                 self.tier_cmds.extend(tier.gate_decode(&rows));
                 // prefetch hints one decode bucket ahead (the
                 // `PoolConfig.lookahead` idea applied to sessions): the
@@ -389,9 +482,9 @@ impl Batcher {
                     let upcoming: Vec<(u64, usize)> = self
                         .queue
                         .iter()
-                        .take_while(|(r, _)| r.phase == Phase::Decode)
+                        .take_while(|(r, _)| r.phase != Phase::Prefill)
                         .take(ahead)
-                        .map(|(r, _)| (r.id, r.len()))
+                        .map(|(r, _)| (r.id, r.cache_len()))
                         .collect();
                     if !upcoming.is_empty() {
                         let cmds = tier.prefetch_hint(&upcoming);
@@ -615,6 +708,83 @@ mod tests {
     fn decode_widths_are_sorted_and_deduped() {
         let b = batcher().with_decode_widths(vec![4, 1, 4, 2]);
         assert_eq!(b.decode_widths(), vec![1, 2, 4]);
+    }
+
+    fn verify_batcher() -> Batcher {
+        batcher()
+            .with_decode_widths(vec![1, 2, 4])
+            .with_verify_points(vec![(1, 2), (2, 2), (4, 2), (1, 4), (2, 4), (4, 4)])
+    }
+
+    #[test]
+    fn verify_run_forms_exact_k_bucket() {
+        let mut b = verify_batcher();
+        let old = Instant::now() - Duration::from_millis(20);
+        for id in [3u64, 2, 1] {
+            b.requeue_front(Request::verify(id, vec![7; 6], vec![9, 9, 9]), old);
+        }
+        let fb = b.form(Instant::now()).expect("expired verify run must dispatch");
+        assert_eq!(fb.phase, Phase::Verify);
+        assert_eq!(fb.bucket, (4, 4), "3 rows of k=4 need the (4, 4) bucket");
+        assert_eq!(fb.requests.len(), 3);
+        assert_eq!(fb.requests[0].id, 1);
+    }
+
+    #[test]
+    fn verify_buckets_never_mix_ks_or_phases() {
+        let mut b = verify_batcher();
+        let old = Instant::now() - Duration::from_millis(20);
+        b.push_at(req(9, 8), old).unwrap(); // expired prefill at the back
+        b.requeue_front(Request::decode(5, vec![5; 6]), old);
+        b.requeue_front(Request::verify(2, vec![5; 6], vec![8, 8, 8]), old); // k=4
+        b.requeue_front(Request::verify(1, vec![5; 4], vec![8]), old); // k=2
+        let fb = b.form(Instant::now()).unwrap();
+        assert_eq!((fb.phase, fb.bucket), (Phase::Verify, (1, 2)));
+        assert_eq!(fb.requests[0].id, 1);
+        let fb = b.form(Instant::now()).unwrap();
+        assert_eq!((fb.phase, fb.bucket), (Phase::Verify, (1, 4)));
+        assert_eq!(fb.requests[0].id, 2);
+        let fb = b.form(Instant::now()).unwrap();
+        assert_eq!(fb.phase, Phase::Decode);
+        assert_eq!(fb.requests[0].id, 5);
+        let fb = b.form(Instant::now()).unwrap();
+        assert_eq!(fb.phase, Phase::Prefill);
+        assert_eq!(fb.requests[0].id, 9);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn verify_input_carries_window_and_total_len() {
+        let fb = FormedBatch {
+            requests: vec![Request::verify(7, vec![4, 5, 6], vec![11, 12, 13])],
+            bucket: (2, 4),
+            phase: Phase::Verify,
+        };
+        let input = fb.to_input();
+        assert_eq!(input.phase, Phase::Verify);
+        assert_eq!(input.ids.shape, vec![2, 4]);
+        // newest committed token + the drafted window, then a pad row
+        assert_eq!(input.ids.data, vec![6, 11, 12, 13, 0, 0, 0, 0]);
+        // total tokens incl the draft; pad rows clamp to one window
+        assert_eq!(input.valid_lens, vec![6, 4]);
+        assert_eq!(input.req_ids, vec![7, u64::MAX]);
+    }
+
+    #[test]
+    fn verify_tier_gate_accounts_speculative_rows() {
+        // bp=8: a verify step over 7 committed + 3 drafted rows needs
+        // ceil(10/8)=2 blocks — with only 1 device block the bucket must
+        // not pass the gate without spilling someone else first
+        let mut b = batcher()
+            .with_decode_widths(vec![1, 2, 4])
+            .with_verify_points(vec![(1, 4), (2, 4), (4, 4)])
+            .with_tier(TierPolicy::new(TierConfig::new(8, 64), 8));
+        let old = Instant::now() - Duration::from_millis(20);
+        b.requeue_front(Request::verify(1, vec![7; 7], vec![9, 9, 9]), old);
+        b.form(Instant::now()).expect("verify bucket forms");
+        assert!(b.take_tier_cmds().is_empty());
+        // the tier model charged 2 blocks, not 1
+        assert_eq!(b.tier().unwrap().device_used(), 2);
     }
 
     use crate::memory::kvcache::tier::TierConfig;

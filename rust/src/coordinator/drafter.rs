@@ -1,0 +1,234 @@
+//! Drafters for speculative decoding: cheap token proposers whose guesses
+//! the verify pass scores in one batched forward (draft-and-verify).
+//!
+//! The contract is deliberately tiny — [`Drafter::draft`] maps a session's
+//! committed token history to `n` proposed continuation tokens — so a
+//! small-model drafter (a distilled LM running its own forward) can slot
+//! in behind the same trait later. What ships today is the classic free
+//! drafter: [`NGramDrafter`], longest-suffix n-gram matching over the
+//! session's own history with a repeat-last-token fallback. It costs
+//! microseconds, accepts well on repetitive continuations (code, lists,
+//! loops — and small greedy models settle into cycles fast), and accepts
+//! nothing on white-noise output, where speculation gracefully degenerates
+//! to plain decode (the verify pass still commits one true greedy token).
+//!
+//! Speculation is **lossless** regardless of the drafter: the verify pass
+//! computes the true greedy token at every window position, so a wrong
+//! draft costs only wasted compute, never a changed stream. The harness
+//! drafters at the bottom ([`ReplayDrafter`], [`MisdraftDrafter`]) pin the
+//! two extremes — a perfect small-model stand-in (100% accept) and an
+//! adversarial one (0% accept) — for the differential tests and the
+//! accept-rate sweep in `benches/specdecode.rs`.
+
+use std::fmt;
+use std::sync::Arc;
+
+/// A token proposer for draft-and-verify decoding. Implementations must
+/// be cheap relative to one engine forward and side-effect free: `draft`
+/// is called by the engine collector on the hot continuation path, once
+/// per verify step, with the session's full committed history (prompt +
+/// generated tokens, in order).
+pub trait Drafter: Send + Sync {
+    /// Propose `n` tokens continuing `history`. Must return exactly `n`
+    /// tokens; out-of-vocabulary ids are clamped by the engine before
+    /// they reach a verify batch, so a sloppy drafter degrades accept
+    /// rate, never correctness.
+    fn draft(&self, history: &[i32], n: usize) -> Vec<i32>;
+
+    /// Short name for metrics / logs.
+    fn name(&self) -> &'static str {
+        "drafter"
+    }
+}
+
+/// Cloneable, debuggable handle to a shared drafter (what
+/// [`crate::coordinator::engine::LaunchConfig`] carries).
+#[derive(Clone)]
+pub struct DrafterHandle(pub Arc<dyn Drafter>);
+
+impl DrafterHandle {
+    pub fn new(d: impl Drafter + 'static) -> DrafterHandle {
+        DrafterHandle(Arc::new(d))
+    }
+}
+
+impl fmt::Debug for DrafterHandle {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "DrafterHandle({})", self.0.name())
+    }
+}
+
+/// Longest-suffix n-gram drafter: to propose the next token, find the
+/// most recent earlier occurrence of the longest (≤ `max_order`) suffix
+/// of the history and replay the token that followed it; with no match,
+/// repeat the last token. Drafting `n` tokens chains the rule on its own
+/// proposals, so a detected cycle is replayed whole.
+pub struct NGramDrafter {
+    /// Longest suffix length to match (≥ 1).
+    pub max_order: usize,
+}
+
+impl Default for NGramDrafter {
+    fn default() -> Self {
+        NGramDrafter { max_order: 3 }
+    }
+}
+
+impl NGramDrafter {
+    pub fn new(max_order: usize) -> NGramDrafter {
+        assert!(max_order >= 1, "n-gram order must be >= 1");
+        NGramDrafter { max_order }
+    }
+
+    /// One-token prediction over an explicit history.
+    fn predict(&self, h: &[i32]) -> i32 {
+        let len = h.len();
+        if len == 0 {
+            return 0;
+        }
+        // longest suffix first; its most recent earlier occurrence wins
+        let max = self.max_order.min(len - 1);
+        for order in (1..=max).rev() {
+            let suffix = &h[len - order..];
+            for start in (0..len - order).rev() {
+                if &h[start..start + order] == suffix {
+                    return h[start + order];
+                }
+            }
+        }
+        h[len - 1] // repetition fallback
+    }
+}
+
+impl Drafter for NGramDrafter {
+    fn draft(&self, history: &[i32], n: usize) -> Vec<i32> {
+        let mut ctx: Vec<i32> = history.to_vec();
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            let t = self.predict(&ctx);
+            out.push(t);
+            ctx.push(t);
+        }
+        out
+    }
+
+    fn name(&self) -> &'static str {
+        "ngram"
+    }
+}
+
+/// Harness drafter: replays a known continuation `script` indexed by
+/// absolute position (prompt + generated so far), modelling a *perfect*
+/// small-model drafter — every in-script draft is the true greedy token,
+/// so the accept rate is 100% until the script runs out. Used by the
+/// accept-rate sweep and the best-case differential tests.
+pub struct ReplayDrafter {
+    /// The full expected sequence (prompt included).
+    pub script: Vec<i32>,
+}
+
+impl Drafter for ReplayDrafter {
+    fn draft(&self, history: &[i32], n: usize) -> Vec<i32> {
+        (0..n)
+            .map(|j| {
+                let pos = history.len() + j;
+                self.script.get(pos).copied().unwrap_or_else(|| {
+                    *self.script.last().unwrap_or(&0)
+                })
+            })
+            .collect()
+    }
+
+    fn name(&self) -> &'static str {
+        "replay"
+    }
+}
+
+/// Harness drafter forced to a 0% accept rate: proposes `truth[pos] + 1`
+/// (mod vocab) at every position, guaranteed unequal to the true greedy
+/// token — the worst case, where every verify pass degenerates to one
+/// committed token (plain-decode throughput) and every speculatively
+/// appended K/V row must be truncated back. Pins the no-leak /
+/// byte-identical-stream invariants in `rust/tests/spec_decode.rs`.
+pub struct MisdraftDrafter {
+    /// The true greedy sequence (prompt included).
+    pub truth: Vec<i32>,
+    pub vocab: i32,
+}
+
+impl Drafter for MisdraftDrafter {
+    fn draft(&self, history: &[i32], n: usize) -> Vec<i32> {
+        (0..n)
+            .map(|j| {
+                let pos = history.len() + j;
+                let t = self.truth.get(pos).copied().unwrap_or(0);
+                (t + 1).rem_euclid(self.vocab.max(1))
+            })
+            .collect()
+    }
+
+    fn name(&self) -> &'static str {
+        "misdraft"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ngram_replays_a_cycle() {
+        let d = NGramDrafter::default();
+        // history ends in the cycle 7 8 9 7 8 9; suffix ..9 matched at the
+        // earlier occurrence proposes 7, then 8, then 9 (chained)
+        let h = vec![1, 7, 8, 9, 7, 8, 9];
+        assert_eq!(d.draft(&h, 3), vec![7, 8, 9]);
+    }
+
+    #[test]
+    fn ngram_prefers_longest_suffix() {
+        let d = NGramDrafter::new(3);
+        // suffix [5, 6] occurred earlier followed by 1; the shorter
+        // suffix [6] also occurred followed by 9 — order-2 must win
+        let h = vec![5, 6, 1, 6, 9, 5, 6];
+        assert_eq!(d.draft(&h, 1), vec![1]);
+    }
+
+    #[test]
+    fn ngram_falls_back_to_repeat() {
+        let d = NGramDrafter::default();
+        assert_eq!(d.draft(&[1, 2, 3], 2), vec![3, 3]);
+        assert_eq!(d.draft(&[], 2), vec![0, 0]);
+    }
+
+    #[test]
+    fn replay_follows_the_script() {
+        let d = ReplayDrafter { script: vec![10, 11, 12, 13, 14] };
+        assert_eq!(d.draft(&[10, 11], 2), vec![12, 13]);
+        // past the end: repeats the last scripted token
+        assert_eq!(d.draft(&[10, 11, 12, 13], 3), vec![14, 14, 14]);
+    }
+
+    #[test]
+    fn misdraft_never_matches_truth() {
+        let truth = vec![3, 1, 4, 1, 5, 9, 2, 6];
+        let d = MisdraftDrafter { truth: truth.clone(), vocab: 10 };
+        for hist_len in 1..truth.len() {
+            let drafts = d.draft(&truth[..hist_len], 3);
+            for (j, t) in drafts.iter().enumerate() {
+                if let Some(&tr) = truth.get(hist_len + j) {
+                    assert_ne!(*t, tr, "misdraft matched truth at {}", hist_len + j);
+                }
+                assert!((0..10).contains(t));
+            }
+        }
+    }
+
+    #[test]
+    fn handle_is_cloneable_and_debuggable() {
+        let h = DrafterHandle::new(NGramDrafter::default());
+        let h2 = h.clone();
+        assert_eq!(format!("{h2:?}"), "DrafterHandle(ngram)");
+        assert_eq!(h.0.draft(&[4, 4], 1), vec![4]);
+    }
+}

@@ -43,6 +43,7 @@
 
 use super::batcher::{smallest_fitting_bucket, Batcher, FormedBatch, Request};
 use super::consistency::TicketCounter;
+use super::drafter::{Drafter, DrafterHandle, NGramDrafter};
 use super::rpc::{CommandBus, Phase, RRef};
 use super::worker::{ActMsg, Reply, Worker, WorkerCtx};
 use crate::comm::channel::{CommWorld, Mode};
@@ -87,6 +88,12 @@ pub struct LaunchConfig {
     /// Pre-compile all variants at launch (keeps latency measurements
     /// clean; off by default for fast test startup).
     pub warmup: bool,
+    /// Speculative-decode drafter (`engine.speculative`). `None` uses the
+    /// built-in n-gram drafter; tests and benches slot in harness
+    /// drafters ([`super::drafter::ReplayDrafter`] /
+    /// [`super::drafter::MisdraftDrafter`]) to pin the accept-rate
+    /// extremes, and a small-model drafter can ride the same trait.
+    pub drafter: Option<DrafterHandle>,
 }
 
 impl LaunchConfig {
@@ -99,6 +106,7 @@ impl LaunchConfig {
             seed: 42,
             n_layers: None,
             warmup: false,
+            drafter: None,
         }
     }
 
@@ -142,6 +150,27 @@ impl LaunchConfig {
     /// decode bench compare against).
     pub fn with_kv_cache(mut self, on: bool) -> Self {
         self.engine.kv_cache = on;
+        self
+    }
+
+    /// Speculative decode (draft-and-verify) on/off. Requires the verify
+    /// artifact family, the KV cache, and pp == 1; the engine falls back
+    /// to plain decode otherwise. Off = the verify path is never entered,
+    /// so streams are byte-identical to the non-speculative engine.
+    pub fn with_speculative(mut self, on: bool) -> Self {
+        self.engine.speculative = on;
+        self
+    }
+
+    /// Cap the verify window (1 committed token + up to `k - 1` drafts).
+    pub fn with_spec_k(mut self, k: usize) -> Self {
+        self.engine.spec_k = k;
+        self
+    }
+
+    /// Use a custom [`Drafter`] for speculative decode (default: n-gram).
+    pub fn with_drafter(mut self, d: impl Drafter + 'static) -> Self {
+        self.drafter = Some(DrafterHandle::new(d));
         self
     }
 
@@ -327,6 +356,17 @@ struct Pending {
     from_batcher: bool,
 }
 
+/// Collector-side context for speculative decode: present only when the
+/// verify artifact family is live (so `Some` == "speculation on").
+struct SpecShared {
+    drafter: Arc<dyn Drafter>,
+    /// Compiled verify window sizes (ascending, every k >= 2; lone
+    /// sessions pad into the smallest compiled width for their k).
+    ks: Vec<usize>,
+    /// Draft sanitation: proposed ids are folded into [0, vocab).
+    vocab: i32,
+}
+
 struct Shared {
     bus: CommandBus,
     tickets: TicketCounter,
@@ -338,6 +378,10 @@ struct Shared {
     /// Incremental decode is live: sessions re-enter as decode steps and
     /// finished sessions' cache blocks are released by ticketed command.
     kv_on: bool,
+    /// Speculative decode is live: continuations re-enter as drafted
+    /// verify windows whenever a compiled k fits the session's remaining
+    /// budget and context (plain decode otherwise).
+    spec: Option<SpecShared>,
 }
 
 impl Shared {
@@ -432,6 +476,38 @@ impl Engine {
             Vec::new()
         };
         let kv_on = !decode_widths.is_empty();
+        // speculative decode goes live only when incremental decode is,
+        // the verify family is compiled, and pp == 1 (acceptance is
+        // computed from the logits on the last stage, which under pp > 1
+        // could not truncate earlier stages' caches without a worker
+        // backchannel). Otherwise continuations stay plain decode steps.
+        if launch.engine.speculative {
+            anyhow::ensure!(
+                launch.engine.spec_k >= 2,
+                "engine.speculative requires engine.spec_k >= 2"
+            );
+        }
+        let verify_points = if kv_on && launch.engine.speculative && par.pp == 1 {
+            manifest.verify_points(&launch.preset, par.tp)
+        } else {
+            Vec::new()
+        };
+        // usable window sizes: capped by spec_k. Any compiled width can
+        // host a lone session — the batcher pads a short run into the
+        // smallest fitting width (verify pad rows clamp to one window),
+        // exactly like decode buckets on presets with no width-1 point.
+        let mut spec_ks: Vec<usize> = verify_points
+            .iter()
+            .filter(|&&(_, k)| k >= 2 && k <= launch.engine.spec_k)
+            .map(|&(_, k)| k)
+            .collect();
+        spec_ks.sort_unstable();
+        spec_ks.dedup();
+        let verify_points: Vec<(usize, usize)> = verify_points
+            .into_iter()
+            .filter(|(_, k)| spec_ks.contains(k))
+            .collect();
+        let spec_on = !spec_ks.is_empty();
         // tiered KV cache: spill cold sessions to pooled host memory.
         // Engine-side policy + per-worker host tiers only exist when the
         // knob is on *and* incremental decode is live; otherwise the
@@ -558,6 +634,15 @@ impl Engine {
             metrics: Mutex::new(Recorder::new()),
             stopping: AtomicBool::new(false),
             kv_on,
+            spec: spec_on.then(|| SpecShared {
+                drafter: launch
+                    .drafter
+                    .clone()
+                    .map(|d| d.0)
+                    .unwrap_or_else(|| Arc::new(NGramDrafter::default())),
+                ks: spec_ks,
+                vocab: cfg.vocab as i32,
+            }),
         });
 
         // ---- batcher ---------------------------------------------------------
@@ -566,7 +651,8 @@ impl Engine {
             launch.engine.max_batch,
             Duration::from_micros(launch.engine.batch_timeout_us),
         )
-        .with_decode_widths(decode_widths);
+        .with_decode_widths(decode_widths)
+        .with_verify_points(verify_points);
         if spill_on {
             // the engine-side residency model: form() becomes the
             // admission gate and spill/prefetch decision point
@@ -759,6 +845,18 @@ impl Engine {
         self.shared.kv_on
     }
 
+    /// Is speculative (draft-and-verify) decode live — knob on, verify
+    /// artifacts present, KV cache live, pp == 1?
+    pub fn speculative_on(&self) -> bool {
+        self.shared.spec.is_some()
+    }
+
+    /// Compiled verify window sizes the engine may use (empty when
+    /// speculation is off).
+    pub fn spec_ks(&self) -> Vec<usize> {
+        self.shared.spec.as_ref().map(|s| s.ks.clone()).unwrap_or_default()
+    }
+
     /// Is the tiered (spill-to-host) K/V cache live?
     pub fn kv_spill_on(&self) -> bool {
         self.shared.kv_on
@@ -831,13 +929,21 @@ fn collector_loop(
                 shared.metrics.lock().unwrap().record_batch(latency, rows.len());
                 if from_batcher {
                     let now = Instant::now();
-                    // (request, original arrival) pairs to re-enqueue
-                    let mut continuations: Vec<(Request, Instant)> = Vec::new();
+                    // unfinished sessions staged for re-enqueue as
+                    // (id, tokens, remaining budget, original arrival) —
+                    // the continuation requests themselves (and with
+                    // speculation on, the *drafting*, which may one day
+                    // be a small-model forward) are built only after the
+                    // sessions lock drops, so drafter cost never blocks
+                    // submissions or other collector iterations
+                    let mut staged: Vec<(u64, Vec<i32>, usize, Instant)> = Vec::new();
                     // finished sessions whose worker-side K/V blocks can go
                     let mut released: Vec<u64> = Vec::new();
                     // (is_first, latency) per emitted token, recorded after
                     // the sessions lock drops (one metrics lock per batch)
                     let mut token_lats: Vec<(bool, Duration)> = Vec::new();
+                    // per verify row: (drafted, accepted, emitted)
+                    let mut spec_rows: Vec<(u64, u64, u64)> = Vec::new();
                     {
                         let mut sessions = shared.sessions.lock().unwrap();
                         for (i, row) in rows.into_iter().enumerate() {
@@ -845,46 +951,83 @@ fn collector_loop(
                                 Some(s) => s,
                                 None => continue, // session already failed/expired
                             };
-                            let tok = match out.next_tokens.get(i) {
-                                Some(&t) => t,
-                                None => {
-                                    let sess = sessions.remove(&row.id).unwrap();
-                                    sess.gref.finish(Err(anyhow::anyhow!(
-                                        "batch {uid} returned no token for row {i}"
-                                    )));
-                                    released.push(row.id);
-                                    continue;
-                                }
+                            // the greedy tokens this engine step committed
+                            // for the row: one for prefill / plain decode,
+                            // `accepted + 1` for a verify pass
+                            let committed: Vec<i32> = match row.phase {
+                                Phase::Verify => match out.accepted.get(i) {
+                                    Some(c) if !c.is_empty() => c.clone(),
+                                    _ => {
+                                        let sess = sessions.remove(&row.id).unwrap();
+                                        sess.gref.finish(Err(anyhow::anyhow!(
+                                            "verify batch {uid} returned no acceptance for row {i}"
+                                        )));
+                                        released.push(row.id);
+                                        continue;
+                                    }
+                                },
+                                _ => match out.next_tokens.get(i) {
+                                    Some(&t) => vec![t],
+                                    None => {
+                                        let sess = sessions.remove(&row.id).unwrap();
+                                        sess.gref.finish(Err(anyhow::anyhow!(
+                                            "batch {uid} returned no token for row {i}"
+                                        )));
+                                        released.push(row.id);
+                                        continue;
+                                    }
+                                },
                             };
-                            let n_gen = row.tokens.len() - sess.prompt_len;
-                            if n_gen == 0 {
-                                token_lats.push((true, now.duration_since(sess.arrived)));
-                            } else {
-                                token_lats.push((false, now.duration_since(sess.last_at)));
+                            // stream the committed tokens in order under
+                            // exactly the per-token finish rules plain
+                            // decode applies — budget, stop token and
+                            // context limit truncate a verify window
+                            // mid-flight the same way they would have
+                            // ended a plain decode session, so speculation
+                            // never changes a stream
+                            let mut toks = row.tokens;
+                            let gap = now.duration_since(sess.last_at);
+                            let m = committed.len() as u32;
+                            let mut consumed = 0u64;
+                            let mut finished = false;
+                            for &tok in &committed {
+                                let n_gen = toks.len() - sess.prompt_len;
+                                if n_gen == 0 {
+                                    token_lats.push((true, now.duration_since(sess.arrived)));
+                                } else {
+                                    // one engine step emitted m tokens:
+                                    // attribute an equal share of the gap
+                                    // to each so per-token percentiles
+                                    // reflect the speculative speedup
+                                    token_lats.push((false, gap / m));
+                                }
+                                sess.gref.push_token(tok);
+                                toks.push(tok);
+                                consumed += 1;
+                                finished = n_gen + 1 >= sess.max_new
+                                    || sess.stop == Some(tok)
+                                    || toks.len() >= max_seq;
+                                if finished {
+                                    break;
+                                }
                             }
-                            sess.gref.push_token(tok);
                             sess.last_at = now;
-                            let new_len = row.tokens.len() + 1;
-                            let finished = n_gen + 1 >= sess.max_new
-                                || sess.stop == Some(tok)
-                                || new_len >= max_seq;
+                            if row.phase == Phase::Verify {
+                                spec_rows.push((
+                                    row.draft.len() as u64,
+                                    (committed.len() - 1) as u64,
+                                    consumed,
+                                ));
+                            }
                             if finished {
                                 let sess = sessions.remove(&row.id).unwrap();
                                 sess.gref.finish(Ok(()));
                                 released.push(row.id);
                             } else {
                                 // the session's token vector moves on into
-                                // its continuation row — no clone. With the
-                                // cache live this is a *decode* step: only
-                                // the newest token runs through the layers.
-                                let mut toks = row.tokens;
-                                toks.push(tok);
-                                let req = if shared.kv_on {
-                                    Request::decode(row.id, toks)
-                                } else {
-                                    Request::new(row.id, toks)
-                                };
-                                continuations.push((req, sess.arrived));
+                                // its continuation row — no clone
+                                let remaining = sess.max_new - (toks.len() - sess.prompt_len);
+                                staged.push((row.id, toks, remaining, sess.arrived));
                             }
                         }
                         // publish while the sessions lock is held: shutdown's
@@ -892,7 +1035,7 @@ fn collector_loop(
                         // release command is on every worker's queue
                         shared.release_sessions(released.clone());
                     }
-                    if !token_lats.is_empty() {
+                    if !token_lats.is_empty() || !spec_rows.is_empty() {
                         let mut m = shared.metrics.lock().unwrap();
                         for (is_first, lat) in token_lats {
                             if is_first {
@@ -901,7 +1044,27 @@ fn collector_loop(
                                 m.record_decode_token(lat);
                             }
                         }
+                        for (drafted, accepted, emitted) in spec_rows {
+                            m.record_spec(drafted, accepted, emitted);
+                        }
                     }
+                    // build the continuation steps (decode, or a drafted
+                    // verify window when a compiled k fits the budget and
+                    // context) outside every lock
+                    let continuations: Vec<(Request, Instant)> = staged
+                        .into_iter()
+                        .map(|(id, toks, remaining, arrived)| {
+                            let req = continuation_request(
+                                shared.spec.as_ref(),
+                                shared.kv_on,
+                                id,
+                                toks,
+                                remaining,
+                                max_seq,
+                            );
+                            (req, arrived)
+                        })
+                        .collect();
                     if !continuations.is_empty() || !released.is_empty() {
                         let mut b = batcher.lock().unwrap();
                         // tier model: freed sessions credit their blocks
@@ -943,6 +1106,45 @@ fn collector_loop(
     }
 }
 
+/// Build the next continuation step for an unfinished session holding
+/// `toks` committed tokens: a drafted verify window when speculation is
+/// live and a compiled k fits both the remaining token budget and the
+/// context (`valid = len + k - 1 <= max_seq`), otherwise a plain decode
+/// step (or a legacy re-prefill without the cache). Drafts are sanitized
+/// — folded into the vocabulary and padded/truncated to exactly k-1 — so
+/// a sloppy [`Drafter`] can only lower the accept rate, never break a
+/// batch.
+fn continuation_request(
+    spec: Option<&SpecShared>,
+    kv_on: bool,
+    id: u64,
+    toks: Vec<i32>,
+    remaining: usize,
+    max_seq: usize,
+) -> Request {
+    if !kv_on {
+        return Request::new(id, toks);
+    }
+    if let Some(sp) = spec {
+        let n = toks.len();
+        // the verify window occupies cache positions up to n + k - 2
+        let room = (max_seq + 1).saturating_sub(n);
+        if let Some(k) = sp.ks.iter().rev().copied().find(|&k| k <= remaining && k <= room) {
+            let mut draft = sp.drafter.draft(&toks, k - 1);
+            draft.truncate(k - 1);
+            let fill = *draft.last().or(toks.last()).unwrap_or(&0);
+            while draft.len() < k - 1 {
+                draft.push(fill);
+            }
+            for t in draft.iter_mut() {
+                *t = t.rem_euclid(sp.vocab.max(1));
+            }
+            return Request::verify(id, toks, draft);
+        }
+    }
+    Request::decode(id, toks)
+}
+
 /// Watchdog: periodically fail in-flight batches older than `deadline`.
 /// A non-replier worker error drops the activation, so the replier never
 /// reports and the batch would otherwise hang its `RRef` (and `shutdown`
@@ -954,26 +1156,72 @@ fn watchdog_loop(shared: Arc<Shared>, batcher: Arc<Mutex<Batcher>>, deadline: Du
     let doze = Duration::from_millis(5);
     let scan_every = (deadline / 4).clamp(Duration::from_millis(1), Duration::from_secs(1));
     let mut last_scan = Instant::now();
+    let mut head: Option<(u64, Instant)> = None;
     while !shared.stopping.load(Ordering::SeqCst) {
         std::thread::sleep(doze);
         if last_scan.elapsed() >= scan_every {
-            expire_stale(&shared, &batcher, deadline);
+            expire_stale(&shared, &batcher, deadline, &mut head);
             last_scan = Instant::now();
         }
     }
 }
 
-/// Remove and fail every pending batch older than `deadline`. Returns how
-/// many batches were expired.
-fn expire_stale(shared: &Shared, batcher: &Mutex<Batcher>, deadline: Duration) -> usize {
+/// Fail the *head* pending batch (minimum ticket) once it has been head
+/// for longer than `deadline`, and remove it — along with every other
+/// pending batch whose publish age also exceeds the deadline, since a
+/// timed-out head proves the pipeline is wedged (workers reply in ticket
+/// order, so nothing queued behind a dead head can ever complete) and
+/// those batches have already served their full wait behind it. Returns
+/// how many batches were expired.
+///
+/// Only the head can *trigger* expiry: a batch queued behind an
+/// in-flight one is merely waiting its turn, so its age since publish is
+/// not by itself evidence of poisoning. The seed watchdog compared every
+/// pending batch's publish-time age against the deadline, so a long
+/// generation's re-enqueued continuations (or any dispatch backlog under
+/// a short deadline) could be expired spuriously while the engine was
+/// making perfectly healthy progress; `head` tracks (uid, promoted-at)
+/// so the trigger clock only starts when a batch reaches the front of
+/// the worker queues. The cascade keeps a genuinely poisoned backlog
+/// draining in one scan (as before the fix) rather than one promotion
+/// per deadline.
+/// `gen_scheduler.rs::short_deadline_does_not_poison_long_generations`
+/// is the regression test.
+fn expire_stale(
+    shared: &Shared,
+    batcher: &Mutex<Batcher>,
+    deadline: Duration,
+    head: &mut Option<(u64, Instant)>,
+) -> usize {
     let stale: Vec<(u64, Pending)> = {
         let mut pending = shared.pending.lock().unwrap();
-        let uids: Vec<u64> = pending
-            .iter()
-            .filter(|(_, p)| p.rref.submitted_at.elapsed() > deadline)
-            .map(|(&u, _)| u)
-            .collect();
-        uids.into_iter().map(|u| (u, pending.remove(&u).unwrap())).collect()
+        let oldest = pending.keys().copied().min();
+        let uid = match oldest {
+            None => {
+                *head = None;
+                return 0;
+            }
+            Some(uid) => uid,
+        };
+        if head.map(|(u, _)| u) != Some(uid) {
+            // a new batch reached the front: its deadline starts now
+            *head = Some((uid, Instant::now()));
+        }
+        let (_, since) = head.unwrap();
+        if since.elapsed() > deadline {
+            *head = None;
+            // the head is wedged: take it plus the backlog that has
+            // already waited a full deadline behind it
+            let mut uids: Vec<u64> = pending
+                .iter()
+                .filter(|(&u, p)| u == uid || p.rref.submitted_at.elapsed() > deadline)
+                .map(|(&u, _)| u)
+                .collect();
+            uids.sort_unstable();
+            uids.into_iter().map(|u| (u, pending.remove(&u).unwrap())).collect()
+        } else {
+            Vec::new()
+        }
     };
     let n = stale.len();
     for (uid, p) in stale {
@@ -1108,6 +1356,25 @@ fn build_worker(
                     }
                 }
             }
+            for (w, k) in manifest.verify_points(&ctx.preset, ctx.par.tp) {
+                for kind in [
+                    "embed_verify",
+                    "layer_full_verify",
+                    "attn_shard_verify",
+                    "mlp_shard",
+                    "logits",
+                ] {
+                    let tp = if kind.starts_with("attn_shard") || kind == "mlp_shard" {
+                        ctx.par.tp
+                    } else {
+                        1
+                    };
+                    let name = Manifest::name_of(&ctx.preset, kind, w, k, tp, 0);
+                    if let Ok(v) = manifest.get(&name) {
+                        let _ = device.load(&manifest, v);
+                    }
+                }
+            }
         }
     }
 
@@ -1179,6 +1446,7 @@ mod tests {
             metrics: Mutex::new(Recorder::new()),
             stopping: AtomicBool::new(false),
             kv_on: true,
+            spec: None,
         }
     }
 
@@ -1214,13 +1482,15 @@ mod tests {
         // the tier model learns of the session via its decode gate
         batcher.lock().unwrap().tier_mut().unwrap().gate_decode(&[(9, 2)]);
         assert_eq!(batcher.lock().unwrap().tier().unwrap().session_count(), 1);
-        // under a generous deadline nothing expires
-        assert_eq!(expire_stale(&shared, &batcher, Duration::from_secs(3600)), 0);
+        // under a generous deadline nothing expires (this scan also
+        // promotes the batch to watchdog head, starting its clock)
+        let mut head = None;
+        assert_eq!(expire_stale(&shared, &batcher, Duration::from_secs(3600), &mut head), 0);
         assert!(!rref.is_ready());
-        // at a zero deadline the batch is poisoned: the RRef errors instead
-        // of hanging, and the session's stream fails
+        // at a zero deadline the head batch is poisoned: the RRef errors
+        // instead of hanging, and the session's stream fails
         std::thread::sleep(Duration::from_millis(2));
-        assert_eq!(expire_stale(&shared, &batcher, Duration::ZERO), 1);
+        assert_eq!(expire_stale(&shared, &batcher, Duration::ZERO, &mut head), 1);
         // the poisoned session's blocks were credited in the tier model
         assert_eq!(batcher.lock().unwrap().tier().unwrap().session_count(), 0);
         assert_eq!(batcher.lock().unwrap().tier().unwrap().device_used(), 0);
@@ -1228,5 +1498,100 @@ mod tests {
         assert!(gref.to_here().is_err());
         assert!(shared.sessions.lock().unwrap().is_empty());
         assert!(shared.pending.lock().unwrap().is_empty());
+    }
+
+    /// The satellite fix: only the *head* batch (minimum ticket) can
+    /// trigger expiry, and its clock starts at promotion — a batch queued
+    /// behind an in-flight one is waiting its turn, not poisoned, no
+    /// matter how long ago it was published. The seed compared every
+    /// pending batch's publish age to the deadline, so a dispatch backlog
+    /// under a short deadline (e.g. a long generation's continuation
+    /// steps) died spuriously. Once a head *does* time out, though, the
+    /// pipeline is provably wedged and the backlog that already waited a
+    /// full deadline behind it cascades in the same scan.
+    #[test]
+    fn watchdog_expiry_is_head_triggered_with_cascade() {
+        let shared = test_shared();
+        let batcher = Mutex::new(Batcher::new(vec![(1, 16)], 4, Duration::from_millis(10)));
+        let insert = |uid: u64| {
+            let rref = RRef::new(uid);
+            shared.pending.lock().unwrap().insert(
+                uid,
+                Pending {
+                    rref: rref.clone(),
+                    rows: vec![Request::new(100 + uid, vec![1, 2])],
+                    from_batcher: false,
+                },
+            );
+            rref
+        };
+        let refs: Vec<RRef> = (0..3u64).map(insert).collect();
+        std::thread::sleep(Duration::from_millis(3));
+        // every batch's *publish* age now exceeds a 1ms deadline, but the
+        // first scan only promotes batch 0 to head (clock starts fresh):
+        // nothing expires — this is the spurious-kill fix
+        let mut head = None;
+        let deadline = Duration::from_millis(1);
+        assert_eq!(expire_stale(&shared, &batcher, deadline, &mut head), 0);
+        assert_eq!(shared.pending.lock().unwrap().len(), 3);
+        // once the head has been head for > deadline the pipeline is
+        // wedged: it expires together with the old backlog in one scan,
+        // but a batch published *after* the head wedged must not cascade
+        std::thread::sleep(Duration::from_millis(3));
+        let fresh = insert(3);
+        let expired = expire_stale(&shared, &batcher, deadline, &mut head);
+        assert!(refs.iter().all(RRef::is_ready), "wedged backlog must fail in one scan");
+        if expired == 3 {
+            assert!(!fresh.is_ready(), "a batch younger than the deadline must survive");
+            // the survivor is promoted with a fresh clock and only dies
+            // after its own grace period
+            assert_eq!(expire_stale(&shared, &batcher, deadline, &mut head), 0);
+            std::thread::sleep(Duration::from_millis(3));
+            assert_eq!(expire_stale(&shared, &batcher, deadline, &mut head), 1);
+            assert!(fresh.is_ready());
+        } else {
+            // timing slop: the 'fresh' batch aged past the 1ms deadline
+            // before the scan evaluated it, so it cascaded too
+            assert_eq!(expired, 4);
+            assert!(fresh.is_ready());
+        }
+        assert!(shared.pending.lock().unwrap().is_empty());
+        // an empty pending set clears the head tracker
+        assert_eq!(expire_stale(&shared, &batcher, deadline, &mut head), 0);
+        assert!(head.is_none());
+    }
+
+    #[test]
+    fn continuation_request_picks_fitting_windows() {
+        let spec = SpecShared {
+            drafter: Arc::new(NGramDrafter::default()),
+            ks: vec![2, 4],
+            vocab: 100,
+        };
+        // plenty of budget and room: the largest k (4) wins, k-1 drafts
+        let r = continuation_request(Some(&spec), true, 7, vec![5, 6, 5, 6], 10, 32);
+        assert_eq!(r.phase, Phase::Verify);
+        assert_eq!(r.window(), 4);
+        assert_eq!(r.draft.len(), 3);
+        assert!(r.draft.iter().all(|t| (0..100).contains(t)));
+        // remaining budget 3: k=4 would overshoot, k=2 fits
+        let r = continuation_request(Some(&spec), true, 7, vec![5, 6, 5], 3, 32);
+        assert_eq!(r.window(), 2);
+        // remaining budget 1: no k >= 2 fits -> plain decode
+        let r = continuation_request(Some(&spec), true, 7, vec![5, 6], 1, 32);
+        assert_eq!(r.phase, Phase::Decode);
+        // context nearly full (n = max_seq - 1 => room = 2): k=2 only
+        let toks: Vec<i32> = (0..31).collect();
+        let r = continuation_request(Some(&spec), true, 7, toks, 10, 32);
+        assert_eq!(r.window(), 2);
+        // context full to the brim (n = max_seq => room = 1): decode
+        let toks: Vec<i32> = (0..32).collect();
+        let r = continuation_request(Some(&spec), true, 7, toks, 10, 32);
+        assert_eq!(r.phase, Phase::Decode);
+        // speculation off / cache off
+        let r = continuation_request(None, true, 7, vec![1], 10, 32);
+        assert_eq!(r.phase, Phase::Decode);
+        let r = continuation_request(None, false, 7, vec![1], 10, 32);
+        assert_eq!(r.phase, Phase::Prefill);
     }
 }

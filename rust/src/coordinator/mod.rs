@@ -15,11 +15,13 @@
 
 pub mod batcher;
 pub mod consistency;
+pub mod drafter;
 pub mod engine;
 pub mod rpc;
 pub mod worker;
 
 pub use batcher::{smallest_fitting_bucket, Batcher, Request};
 pub use consistency::{ConsistencyQueue, TicketCounter};
+pub use drafter::{Drafter, DrafterHandle, MisdraftDrafter, NGramDrafter, ReplayDrafter};
 pub use engine::{Engine, GenRef, GenRequest, LaunchConfig, MemoryMode, TokenRef};
 pub use rpc::{BatchInput, BatchOutput, Phase, RRef};

@@ -18,12 +18,15 @@ use std::time::Instant;
 
 /// Which kind of engine step a batch row is (incremental decode): a
 /// prefill runs the whole padded prompt through the layers; a decode runs
-/// a single position against each session's paged K/V cache.
+/// a single position against each session's paged K/V cache; a verify
+/// runs a k-token drafted window against the cache in one pass
+/// (speculative decode) and commits the longest accepted prefix.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub enum Phase {
     #[default]
     Prefill,
     Decode,
+    Verify,
 }
 
 /// A batched inference task, as published to workers.
@@ -69,6 +72,13 @@ pub struct BatchOutput {
     pub uid: u64,
     pub next_tokens: Vec<i32>,
     pub logits: Tensor,
+    /// Verify batches only: per row, the greedy tokens the pass committed
+    /// in order — the accepted drafted prefix plus the one corrected /
+    /// bonus token from the first rejected position (so its length is
+    /// `accepted + 1`, between 1 and the window size). Empty for prefill
+    /// and plain decode batches; `next_tokens[i] == accepted[i][0]` when
+    /// present.
+    pub accepted: Vec<Vec<i32>>,
 }
 
 /// Commands the engine publishes.
@@ -309,6 +319,7 @@ mod tests {
                 uid: 1,
                 next_tokens: vec![5],
                 logits: Tensor::zeros(&[1]),
+                accepted: Vec::new(),
             }));
         });
         let out = r.to_here().unwrap();
@@ -326,7 +337,12 @@ mod tests {
     #[test]
     fn try_take_consumes_once() {
         let r = RRef::new(3);
-        r.fulfil(Ok(BatchOutput { uid: 3, next_tokens: vec![], logits: Tensor::zeros(&[1]) }));
+        r.fulfil(Ok(BatchOutput {
+            uid: 3,
+            next_tokens: vec![],
+            logits: Tensor::zeros(&[1]),
+            accepted: Vec::new(),
+        }));
         assert!(r.try_take().is_some());
         assert!(r.try_take().is_none());
     }

@@ -217,6 +217,9 @@ impl Worker {
         if input.phase == Phase::Decode {
             return self.execute_decode(uid, input);
         }
+        if input.phase == Phase::Verify {
+            return self.execute_verify(uid, input);
+        }
         let (b, s) = (input.batch, input.seq);
         let h = self.ctx.cfg.hidden;
         let valid = valid_len_arg(&input.valid_lens);
@@ -289,7 +292,7 @@ impl Worker {
         }
         let logits = self.run_logits(x, input)?;
         let next_tokens = argmax_next_tokens(&logits, &input.valid_lens);
-        Ok(Some(BatchOutput { uid, next_tokens, logits }))
+        Ok(Some(BatchOutput { uid, next_tokens, logits, accepted: Vec::new() }))
     }
 
     /// One decode engine step: embed the newest token per row at its
@@ -342,7 +345,7 @@ impl Worker {
             for ahead in 1..=self.ctx.lookahead.max(1) {
                 self.provider.prefetch(local + ahead);
             }
-            x = self.run_layer_decode(local, x, &valid, input)?;
+            x = self.run_layer_cached(local, x, &valid, input, 1)?;
             self.provider.release(local);
         }
         self.kv_advance(input);
@@ -360,7 +363,136 @@ impl Worker {
         // in argmax_next_tokens maps any valid_len to the only position)
         let logits = self.run_logits(x, input)?;
         let next_tokens = argmax_next_tokens(&logits, &input.valid_lens);
-        Ok(Some(BatchOutput { uid, next_tokens, logits }))
+        Ok(Some(BatchOutput { uid, next_tokens, logits, accepted: Vec::new() }))
+    }
+
+    /// One speculative engine step: embed the k-token drafted window per
+    /// row at its positions, run every local layer as a windowed attention
+    /// over the session's cached K/V (appending all k new rows), score the
+    /// whole window with the seq=k logits head, accept the longest drafted
+    /// prefix that matches the true greedy tokens, and truncate the
+    /// rejected speculative rows back out of the cache. One pass commits
+    /// `accepted + 1` tokens — the tokens-per-pass > 1 win of speculative
+    /// decoding, lossless because every committed token is the argmax the
+    /// plain decode path would have produced. (Strictly: the verify and
+    /// decode variants are *differently compiled* programs whose logits
+    /// agree to float tolerance, not bitwise — a near-tie between the top
+    /// two vocab entries could in principle argmax differently. The
+    /// differential suite pins stream equality empirically; it is not a
+    /// by-construction guarantee.)
+    ///
+    /// Verify batches only exist under pp == 1 (the engine gates them):
+    /// acceptance is computed from the logits, which every last-stage
+    /// worker evaluates locally so each can truncate its own cache —
+    /// earlier pipeline stages would have no way to learn the accepted
+    /// length without a backchannel. Under TP every rank sees bitwise-
+    /// identical all-reduced activations, so their acceptance decisions
+    /// agree (pinned by the tp=2 differential suite).
+    fn execute_verify(
+        &mut self,
+        uid: u64,
+        input: &BatchInput,
+    ) -> anyhow::Result<Option<BatchOutput>> {
+        anyhow::ensure!(self.kv.is_some(), "verify batch {uid} but the KV cache is disabled");
+        anyhow::ensure!(
+            self.ctx.par.pp == 1,
+            "verify batch {uid} under pp={} (the engine must gate speculation off)",
+            self.ctx.par.pp
+        );
+        let k = input.seq;
+        anyhow::ensure!(k >= 2, "verify batch {uid} has window {k}");
+        let valid = valid_len_arg(&input.valid_lens);
+
+        // ---- embed the window -------------------------------------------
+        let v = self.variant("embed_verify", input, 0)?;
+        if self.embed_lits.is_none() {
+            let w = self.embed_weights.as_ref().expect("stage 0 has embed weights");
+            self.embed_lits = Some(crate::runtime::pjrt::prepare(w)?);
+        }
+        // base position of each row's window: valid_len - k
+        let pos: Vec<i32> = input.valid_lens.iter().map(|&l| (l.max(k) - k) as i32).collect();
+        let acts = [Value::I32(input.ids.clone()), Value::I32(IntTensor::from_vec(pos))];
+        let mut x = self
+            .device
+            .execute_prepared(&self.manifest, &v, &acts, self.embed_lits.as_ref().unwrap())?
+            .remove(0);
+
+        // ---- run my layers ----------------------------------------------
+        let first = self.ctx.layers.start;
+        self.provider.prefetch(0);
+        for layer in self.ctx.layers.clone() {
+            let local = layer - first;
+            for ahead in 1..=self.ctx.lookahead.max(1) {
+                self.provider.prefetch(local + ahead);
+            }
+            x = self.run_layer_cached(local, x, &valid, input, k)?;
+            self.provider.release(local);
+        }
+        // every window row is in the cache now; the acceptance pass below
+        // truncates the rejected tail
+        self.kv_advance(input);
+
+        // ---- score the window + accept ----------------------------------
+        // every last-stage worker computes the logits (the all-reduced
+        // activation is identical on all tp ranks) so each can truncate
+        // its own cache shard; only the replier also builds the reply
+        let logits = self.run_logits(x, input)?;
+        let (b, s, vsz) = (logits.shape[0], logits.shape[1], logits.shape[2]);
+        debug_assert_eq!((b, s), (input.batch, k));
+        let mut next_tokens = Vec::with_capacity(b);
+        let mut accepted: Vec<Vec<i32>> = Vec::with_capacity(b);
+        for (i, (&id, &len)) in input.req_ids.iter().zip(&input.valid_lens).enumerate() {
+            if id == u64::MAX {
+                next_tokens.push(0);
+                accepted.push(Vec::new());
+                continue;
+            }
+            // greedy token after each window prefix — selected by the
+            // same argmax rule plain decode uses (argmax_next_tokens),
+            // which is what keeps acceptance lossless
+            let verified: Vec<i32> = (0..k)
+                .map(|j| argmax_row(&logits.data[(i * k + j) * vsz..(i * k + j + 1) * vsz]))
+                .collect();
+            // longest drafted prefix matching the true greedy tokens:
+            // drafted token j (ids slot j+1) must equal verified[j]
+            let mut a = 0;
+            while a < k - 1 && input.ids.data[i * k + a + 1] == verified[a] {
+                a += 1;
+            }
+            // committed tokens: the accepted drafts are verified[0..a]
+            // (each equals its draft), plus the bonus token verified[a]
+            let committed: Vec<i32> = verified[..=a].to_vec();
+            // cache keeps the rows of window positions 0..=a; rows for
+            // the rejected tail come back out before the session's next
+            // step reads (or re-appends over) those positions
+            let keep = len - k + a + 1;
+            self.kv.as_mut().expect("verify without a cache").truncate_tail(id, keep);
+            next_tokens.push(committed[0]);
+            accepted.push(committed);
+        }
+        if !self.ctx.is_replier() {
+            return Ok(None);
+        }
+        Ok(Some(BatchOutput { uid, next_tokens, logits, accepted }))
+    }
+
+    /// Append each real row's new K/V rows (shape (b, window, w)) at
+    /// window positions `valid_len - window ..= valid_len - 1` (plain
+    /// decode is the window == 1 case).
+    fn kv_write_window(&mut self, local: usize, input: &BatchInput, k_new: &Tensor, v_new: &Tensor) {
+        let k = input.seq;
+        let w = self.ctx.cfg.hidden / self.ctx.par.tp;
+        let kv = self.kv.as_mut().expect("kv_write_window without a cache");
+        for (i, (&id, &len)) in input.req_ids.iter().zip(&input.valid_lens).enumerate() {
+            if id == u64::MAX {
+                continue;
+            }
+            let base = len - k;
+            for j in 0..k {
+                let row = (i * k + j) * w..(i * k + j + 1) * w;
+                kv.write_row(id, local, base + j, &k_new.data[row.clone()], &v_new.data[row]);
+            }
+        }
     }
 
     /// Decide whether this batch runs packed, identically on all workers:
@@ -519,59 +651,79 @@ impl Worker {
         }
     }
 
-    /// One transformer layer of a decode step: single-position attention
-    /// over the gathered cache, then (under TP) the usual all-reduce +
-    /// residual + `mlp_shard` with rows = batch.
-    fn run_layer_decode(
+    /// One transformer layer of a cached continuation step — the shared
+    /// body of plain decode (`window == 1`) and speculative verify
+    /// (`window == k`): windowed attention over the gathered cache
+    /// (emitting the window's K/V rows, written back at positions
+    /// `valid_len - window ..`), then — under TP — the usual all-reduce +
+    /// residual + `mlp_shard` with rows = b·window. One body on purpose:
+    /// decode and verify must stay numerically in lockstep for the
+    /// acceptance parity the differential suite pins, so a fix to either
+    /// path lands in both.
+    fn run_layer_cached(
         &mut self,
         local: usize,
         x: Tensor,
         valid: &Value,
         input: &BatchInput,
+        window: usize,
     ) -> anyhow::Result<Tensor> {
         let b = input.batch;
+        debug_assert_eq!(input.seq, window);
         let h = self.ctx.cfg.hidden;
         let tp = self.ctx.par.tp;
-        let (kc, vc) = self.kv_staging(local, input)?;
+        let (kc, vc) = self.kv_staging(local, input, window)?;
+        let (full_kind, shard_kind) = if window == 1 {
+            ("layer_full_decode", "attn_shard_decode")
+        } else {
+            ("layer_full_verify", "attn_shard_verify")
+        };
         if tp == 1 {
-            let v = self.variant("layer_full_decode", input, 0)?;
+            let v = self.variant(full_kind, input, 0)?;
             let lits = self.layer_lits(local, WeightKind::All)?;
             let acts = [Value::F32(x), valid.clone(), Value::F32(kc), Value::F32(vc)];
             let mut out = self.device.execute_prepared(&self.manifest, &v, &acts, &lits)?;
             let y = out.remove(0);
             let (k_new, v_new) = (out.remove(0), out.remove(0));
-            self.kv_write_new(local, input, &k_new, &v_new);
+            self.kv_write_window(local, input, &k_new, &v_new);
             return Ok(y);
         }
         let mut x = x;
         x.make_shared();
-        let v = self.variant("attn_shard_decode", input, 0)?;
+        let v = self.variant(shard_kind, input, 0)?;
         let lits = self.layer_lits(local, WeightKind::Attn)?;
         let acts = [Value::F32(x.clone()), valid.clone(), Value::F32(kc), Value::F32(vc)];
         let mut out = self.device.execute_prepared(&self.manifest, &v, &acts, &lits)?;
         let partial = out.remove(0);
         let (k_new, v_new) = (out.remove(0), out.remove(0));
-        self.kv_write_new(local, input, &k_new, &v_new);
+        self.kv_write_window(local, input, &k_new, &v_new);
         let attn_sum = self.allreduce(partial);
         let mut r = x.add(&attn_sum); // arena scratch
         r.make_shared();
-        // decode MLP rows = batch (variant name mlp_shard_tp{tp}_r{b})
+        // rows = b·window (variant name mlp_shard_tp{tp}_r{b*window})
         let v = self.variant("mlp_shard", input, 0)?;
         let lits = self.layer_lits(local, WeightKind::Mlp)?;
-        let r2 = r.clone().reshape(&[b, h]);
+        let r2 = r.clone().reshape(&[b * window, h]);
         let partial = self
             .device
             .execute_prepared(&self.manifest, &v, &[Value::F32(r2)], &lits)?
             .remove(0);
-        let mlp_sum = self.allreduce(partial).reshape(&[b, 1, h]);
+        let mlp_sum = self.allreduce(partial).reshape(&[b, window, h]);
         Ok(r.add(&mlp_sum))
     }
 
     /// Gather each real row's cached K/V for `local` into zeroed staging
     /// tensors of shape (b, max_seq, h/tp). Zeroing matters: masked score
     /// slots must hold finite small values, not recycled-arena garbage
-    /// that could dominate the softmax max.
-    fn kv_staging(&mut self, local: usize, input: &BatchInput) -> anyhow::Result<(Tensor, Tensor)> {
+    /// that could dominate the softmax max. `window` is how many of the
+    /// row's `valid_len` positions this step itself computes (1 for plain
+    /// decode, k for a verify window) — the cache must hold the rest.
+    fn kv_staging(
+        &mut self,
+        local: usize,
+        input: &BatchInput,
+        window: usize,
+    ) -> anyhow::Result<(Tensor, Tensor)> {
         let b = input.batch;
         let cap = self.ctx.cfg.max_seq;
         let w = self.ctx.cfg.hidden / self.ctx.par.tp;
@@ -586,27 +738,12 @@ impl Worker {
             let dst_v = &mut vc.data[i * cap * w..(i + 1) * cap * w];
             let got = kv.gather(id, local, dst_k, dst_v);
             anyhow::ensure!(
-                got + 1 == len,
-                "session {id} layer {local}: cache holds {got} rows, decode expects {}",
-                len - 1
+                got + window == len,
+                "session {id} layer {local}: cache holds {got} rows, step expects {}",
+                len - window
             );
         }
         Ok((kc, vc))
-    }
-
-    /// Append each real row's new K/V row (shape (b, 1, w)) at position
-    /// `valid_len - 1`.
-    fn kv_write_new(&mut self, local: usize, input: &BatchInput, k_new: &Tensor, v_new: &Tensor) {
-        let w = self.ctx.cfg.hidden / self.ctx.par.tp;
-        let kv = self.kv.as_mut().expect("kv_write_new without a cache");
-        for (i, (&id, &len)) in input.req_ids.iter().zip(&input.valid_lens).enumerate() {
-            if id == u64::MAX {
-                continue;
-            }
-            let pos = len - 1;
-            let row = i * w..(i + 1) * w;
-            kv.write_row(id, local, pos, &k_new.data[row.clone()], &v_new.data[row]);
-        }
     }
 
     /// Seed the cache from a prefill `*_kv` output: rows 0..valid_len of
@@ -646,6 +783,18 @@ impl Worker {
     }
 }
 
+/// Greedy token selection over one logits row — the single argmax rule
+/// every sampling path shares (plain decode via [`argmax_next_tokens`],
+/// verify acceptance in `execute_verify`), so speculation can never pick
+/// a different token than plain decode would.
+pub fn argmax_row(row: &[f32]) -> i32 {
+    row.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(j, _)| j as i32)
+        .unwrap()
+}
+
 /// Greedy next-token: argmax of the logits row at position valid-1.
 pub fn argmax_next_tokens(logits: &Tensor, valid_lens: &[usize]) -> Vec<i32> {
     let (b, s, v) = (logits.shape[0], logits.shape[1], logits.shape[2]);
@@ -653,14 +802,7 @@ pub fn argmax_next_tokens(logits: &Tensor, valid_lens: &[usize]) -> Vec<i32> {
     let mut out = Vec::with_capacity(b);
     for (i, &vl) in valid_lens.iter().enumerate() {
         let pos = vl.clamp(1, s) - 1;
-        let row = &logits.data[(i * s + pos) * v..(i * s + pos + 1) * v];
-        let argmax = row
-            .iter()
-            .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-            .map(|(j, _)| j as i32)
-            .unwrap();
-        out.push(argmax);
+        out.push(argmax_row(&logits.data[(i * s + pos) * v..(i * s + pos + 1) * v]));
     }
     out
 }

@@ -14,7 +14,9 @@
 //!   peer memory pooling ([`memory`]) — plus incremental decode through a
 //!   paged per-session K/V cache ([`memory::kvcache`] + the `*_decode`
 //!   artifacts), which removes per-token prefill recompute from the
-//!   generation hot path.
+//!   generation hot path, and speculative draft-and-verify decoding
+//!   ([`coordinator::drafter`] + the `*_verify` artifacts), which commits
+//!   up to k greedy tokens per engine pass losslessly.
 //! * **L2 (python/compile/model.py)** — the transformer compute graph in
 //!   JAX, AOT-lowered to HLO text artifacts loaded by [`runtime`].
 //! * **L1 (python/compile/kernels/)** — Pallas kernels (fused attention,

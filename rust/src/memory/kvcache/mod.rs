@@ -83,6 +83,12 @@ pub struct KvStats {
     pub free_unknown: u64,
     /// Spills refused because the host tier ledger was full.
     pub spill_denied: u64,
+    /// `truncate_tail` calls that actually shortened a session
+    /// (speculative decode: rejected draft rows cut back).
+    pub truncates: u64,
+    /// Blocks returned to the free list (or host bytes' worth of blocks
+    /// released) by tail truncation.
+    pub truncated_blocks: u64,
     /// Device blocks carved past the configured soft capacity (the
     /// engine-side policy failed to keep pressure down).
     pub overflow_blocks: u64,
@@ -105,6 +111,8 @@ static G_GATHER_SPILLED: AtomicU64 = AtomicU64::new(0);
 static G_FREE_UNKNOWN: AtomicU64 = AtomicU64::new(0);
 static G_SPILL_DENIED: AtomicU64 = AtomicU64::new(0);
 static G_OVERFLOW: AtomicU64 = AtomicU64::new(0);
+static G_TRUNCATES: AtomicU64 = AtomicU64::new(0);
+static G_TRUNCATED_BLOCKS: AtomicU64 = AtomicU64::new(0);
 
 /// Process-wide snapshot (what `Engine::metrics_snapshot` folds into the
 /// `Recorder`). Workers update the atomics as they allocate and free.
@@ -127,6 +135,8 @@ pub fn global_stats() -> KvStats {
         free_unknown: G_FREE_UNKNOWN.load(Ordering::Relaxed),
         spill_denied: G_SPILL_DENIED.load(Ordering::Relaxed),
         overflow_blocks: G_OVERFLOW.load(Ordering::Relaxed),
+        truncates: G_TRUNCATES.load(Ordering::Relaxed),
+        truncated_blocks: G_TRUNCATED_BLOCKS.load(Ordering::Relaxed),
     }
 }
 
@@ -531,6 +541,57 @@ impl KvCache {
         bytes
     }
 
+    /// Shrink a session's cache to its first `new_len` positions,
+    /// returning now-unreferenced whole blocks to the free list — the
+    /// speculative-decode cleanup: a verify step appends K/V rows for its
+    /// whole drafted window, and the rejected tail must come back out
+    /// before the session's next step reads the cache. Growing is not
+    /// possible through this call (`new_len >= len` is a no-op on the
+    /// length), and unknown sessions are tolerated loudly (`free_unknown`
+    /// counter) like [`KvCache::free`].
+    ///
+    /// A *spilled* session can be truncated too: the parked host image is
+    /// shortened in place and its ledger bytes credited, so block
+    /// accounting stays exact across any interleaving of
+    /// append/truncate/spill/prefetch/free (pinned by the property test
+    /// below).
+    pub fn truncate_tail(&mut self, session: u64, new_len: usize) -> bool {
+        let bp = self.cfg.block_positions;
+        let be = self.cfg.block_elems();
+        let s = match self.sessions.get_mut(&session) {
+            None => {
+                G_FREE_UNKNOWN.fetch_add(1, Ordering::Relaxed);
+                return false;
+            }
+            Some(s) => s,
+        };
+        let shortened = new_len < s.len;
+        s.len = s.len.min(new_len);
+        let need = if new_len == 0 { 0 } else { (new_len + bp - 1) / bp };
+        if s.spilled {
+            let host = self.host.as_mut().expect("spilled session without a host tier");
+            let buf = host.bufs.get_mut(&session).expect("spilled session has a host buffer");
+            let have = buf.len() / be;
+            if have > need {
+                let freed = have - need;
+                buf.vec_mut().truncate(need * be);
+                let bytes = (freed * be * 4) as u64;
+                host.ledger.dealloc(bytes);
+                G_HOST_BYTES.fetch_sub(bytes, Ordering::Relaxed);
+                G_TRUNCATED_BLOCKS.fetch_add(freed as u64, Ordering::Relaxed);
+            }
+        } else if s.blocks.len() > need {
+            let freed = s.blocks.len() - need;
+            self.free_list.extend(s.blocks.drain(need..));
+            note_in_use_delta(-(freed as i64));
+            G_TRUNCATED_BLOCKS.fetch_add(freed as u64, Ordering::Relaxed);
+        }
+        if shortened {
+            G_TRUNCATES.fetch_add(1, Ordering::Relaxed);
+        }
+        true
+    }
+
     /// Release a session's blocks — device *or* host tier — and forget
     /// it. Returns `false` (and trips the `free_unknown` counter: loud,
     /// never silent) when this cache holds nothing for the session, which
@@ -891,6 +952,186 @@ mod tests {
         fill(&mut c, 2, 1, 3, 2); // 2 more blocks: both carved past cap
         assert_eq!(global_stats().overflow_blocks, before + 2);
         assert_eq!(c.capacity_blocks(), 4);
+    }
+
+    // ---- tail truncation (speculative decode) --------------------------
+
+    #[test]
+    fn truncate_tail_frees_whole_blocks_and_keeps_prefix() {
+        let mut c = cache(3, 2, 4);
+        fill(&mut c, 1, 2, 8, 4); // 3 blocks (ceil 8/3)
+        assert_eq!(c.blocks_in_use(), 3);
+        // cut back to 4 positions: ceil(4/3) = 2 blocks stay
+        assert!(c.truncate_tail(1, 4));
+        assert_eq!(c.len(1), Some(4));
+        assert_eq!(c.blocks_in_use(), 2);
+        check(&c, 1, 2, 4, 4);
+        // re-growing over the truncated region recycles the freed block
+        // (instance-level capacity must not grow — other tests run
+        // concurrently, so the process-wide counters can't be compared)
+        let cap_before = c.capacity_blocks();
+        for pos in 4..8 {
+            for layer in 0..2 {
+                let tag = (1000 + layer * 100 + pos) as f32;
+                c.write_row(1, layer, pos, &row(tag, 4), &row(tag + 0.5, 4));
+            }
+        }
+        c.advance(1, 8);
+        assert_eq!(c.capacity_blocks(), cap_before, "truncate leaked to growth");
+        check(&c, 1, 2, 8, 4);
+    }
+
+    #[test]
+    fn truncate_tail_edge_cases() {
+        let mut c = cache(2, 1, 2);
+        fill(&mut c, 1, 1, 5, 2); // 3 blocks
+        // growing via truncate is a length no-op
+        assert!(c.truncate_tail(1, 9));
+        assert_eq!(c.len(1), Some(5));
+        assert_eq!(c.blocks_in_use(), 3);
+        // same length: no blocks move, nothing changes
+        let t_before = global_stats().truncates;
+        assert!(c.truncate_tail(1, 5));
+        assert_eq!(c.len(1), Some(5));
+        assert_eq!(c.blocks_in_use(), 3);
+        // to zero: every block comes back, session stays known
+        assert!(c.truncate_tail(1, 0));
+        assert_eq!(c.len(1), Some(0));
+        assert_eq!(c.blocks_in_use(), 0);
+        assert_eq!(c.session_count(), 1);
+        assert!(global_stats().truncates > t_before);
+        // unknown session: loud, not silent
+        let u_before = global_stats().free_unknown;
+        assert!(!c.truncate_tail(99, 1));
+        assert!(global_stats().free_unknown > u_before);
+        // mid-block cut: the partial block stays, rows above len are
+        // simply never gathered again
+        let mut c = cache(4, 1, 2);
+        fill(&mut c, 2, 1, 6, 2); // 2 blocks
+        assert!(c.truncate_tail(2, 3));
+        assert_eq!(c.blocks_in_use(), 1);
+        check(&c, 2, 1, 3, 2);
+    }
+
+    #[test]
+    fn truncate_tail_shrinks_spilled_images() {
+        let mut c = tiered(2, 1, 2, 8, 16);
+        fill(&mut c, 5, 1, 8, 2); // 4 blocks
+        let bytes_full = c.spill(5);
+        assert_eq!(bytes_full, 4 * c.config().block_bytes());
+        // truncate while parked: the host image shortens in place
+        assert!(c.truncate_tail(5, 3)); // ceil(3/2) = 2 blocks stay
+        assert_eq!(c.host_bytes_used(), 2 * c.config().block_bytes());
+        assert!(c.is_spilled(5));
+        // staging back restores exactly the surviving prefix
+        assert_eq!(c.prefetch(5), 2 * c.config().block_bytes());
+        assert_eq!(c.len(5), Some(3));
+        assert_eq!(c.blocks_in_use(), 2);
+        check(&c, 5, 1, 3, 2);
+        assert!(c.free(5));
+        assert_eq!(c.blocks_in_use(), 0);
+        assert_eq!(c.host_bytes_used(), 0);
+    }
+
+    /// Property-style: random interleavings of append / truncate / spill /
+    /// prefetch / free preserve block accounting and gathered-row contents.
+    /// A deterministic LCG drives the schedule; a shadow model (per-session
+    /// expected length) checks every gather against the rows `fill`-style
+    /// writes produced.
+    #[test]
+    fn random_interleavings_preserve_accounting_and_contents() {
+        const BP: usize = 3;
+        const LAYERS: usize = 2;
+        const W: usize = 4;
+        const N_SESSIONS: u64 = 6;
+        let mut c = tiered(BP, LAYERS, W, 16, 64);
+        let mut rng: u64 = 0x9E37_79B9_7F4A_7C15;
+        let mut next = |m: u64| {
+            rng = rng.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            (rng >> 33) % m
+        };
+        // shadow model: session -> Some(len) while alive
+        let mut model: Vec<Option<usize>> = vec![None; N_SESSIONS as usize];
+
+        let blocks_of = |len: usize| if len == 0 { 0 } else { (len + BP - 1) / BP };
+        for step in 0..400 {
+            let id = next(N_SESSIONS);
+            let idx = id as usize;
+            match next(5) {
+                // append 1..=3 positions (prefetch first if parked — the
+                // production write path never touches a spilled session)
+                0 => {
+                    if c.is_spilled(id) {
+                        c.prefetch(id);
+                    }
+                    let cur = model[idx].unwrap_or(0);
+                    let n = 1 + next(3) as usize;
+                    let new = (cur + n).min(24);
+                    for pos in cur..new {
+                        for layer in 0..LAYERS {
+                            let tag = (id * 1000 + layer as u64 * 100 + pos as u64) as f32;
+                            c.write_row(id, layer, pos, &row(tag, W), &row(tag + 0.5, W));
+                        }
+                    }
+                    if new > 0 {
+                        c.advance(id, new);
+                    }
+                    model[idx] = Some(new);
+                }
+                // truncate to a random shorter length
+                1 => {
+                    if let Some(len) = model[idx] {
+                        let keep = next(len as u64 + 1) as usize;
+                        assert!(c.truncate_tail(id, keep), "live session refused truncate");
+                        model[idx] = Some(keep.min(len));
+                    }
+                }
+                2 => {
+                    c.spill(id);
+                }
+                3 => {
+                    c.prefetch(id);
+                }
+                _ => {
+                    if model[idx].is_some() {
+                        assert!(c.free(id), "live session refused free (step {step})");
+                        model[idx] = None;
+                    }
+                }
+            }
+            // invariant: device blocks in use == Σ ceil(len/bp) over
+            // resident sessions — append grows to exactly that, and
+            // truncate frees back down to exactly that
+            let expect_device: usize = model
+                .iter()
+                .enumerate()
+                .filter(|(i, l)| l.is_some() && !c.is_spilled(*i as u64))
+                .map(|(_, l)| blocks_of(l.unwrap()))
+                .sum();
+            assert_eq!(
+                c.blocks_in_use(),
+                expect_device,
+                "step {step}: block accounting drifted from the model"
+            );
+        }
+        // contents: every surviving session gathers exactly its prefix
+        for id in 0..N_SESSIONS {
+            if let Some(len) = model[id as usize] {
+                if c.is_spilled(id) {
+                    c.prefetch(id);
+                }
+                check(&c, id, LAYERS, len, W);
+            }
+        }
+        // teardown: everything comes back
+        for id in 0..N_SESSIONS {
+            if model[id as usize].is_some() {
+                c.free(id);
+            }
+        }
+        assert_eq!(c.blocks_in_use(), 0, "interleaving leaked device blocks");
+        assert_eq!(c.host_bytes_used(), 0, "interleaving leaked host bytes");
+        assert_eq!(c.session_count(), 0);
     }
 
     #[test]

@@ -386,8 +386,12 @@ impl TierPolicy {
                 self.host_used -= old;
                 self.device_used += old;
             }
-            self.device_used += new - old;
-            self.pinned_used += new - if was_pinned { old } else { 0 };
+            // the length can shrink as well as grow: a speculative verify
+            // step charges its whole drafted window, and the worker
+            // truncates rejected rows before the session's next step
+            self.device_used = self.device_used.saturating_sub(old) + new;
+            self.pinned_used =
+                self.pinned_used.saturating_sub(if was_pinned { old } else { 0 }) + new;
         }
         let mut cmds = Vec::new();
         if self.device_used > self.high_mark() {

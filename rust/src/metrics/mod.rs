@@ -29,6 +29,16 @@ pub struct Recorder {
     tokens_done: u64,
     requests_done: u64,
     batches_done: u64,
+    /// Speculative decode: verify passes completed (one per session row
+    /// per verify batch).
+    spec_passes: u64,
+    /// Drafted tokens scored by verify passes.
+    spec_drafted: u64,
+    /// Drafted tokens accepted (matched the true greedy token).
+    spec_accepted: u64,
+    /// Tokens actually committed to session streams by verify passes
+    /// (accepted + the bonus token, minus any cut off by stop/budget).
+    spec_emitted: u64,
     arena: ArenaStats,
     kvcache: KvStats,
 }
@@ -53,6 +63,10 @@ impl Recorder {
             tokens_done: 0,
             requests_done: 0,
             batches_done: 0,
+            spec_passes: 0,
+            spec_drafted: 0,
+            spec_accepted: 0,
+            spec_emitted: 0,
             arena: ArenaStats::default(),
             kvcache: KvStats::default(),
         }
@@ -115,6 +129,32 @@ impl Recorder {
         self.first_token.get_or_insert(now);
         self.last_token = Some(now);
         self.tokens_done += 1;
+    }
+
+    /// One verify pass of a session row completed: it scored `drafted`
+    /// proposed tokens, `accepted` of them matched the true greedy
+    /// continuation, and `emitted` tokens were committed to the stream
+    /// (`accepted + 1` unless the stop token / budget cut it short).
+    pub fn record_spec(&mut self, drafted: u64, accepted: u64, emitted: u64) {
+        self.spec_passes += 1;
+        self.spec_drafted += drafted;
+        self.spec_accepted += accepted;
+        self.spec_emitted += emitted;
+    }
+
+    pub fn spec_passes(&self) -> u64 {
+        self.spec_passes
+    }
+
+    /// Fraction of drafted tokens accepted by verify passes.
+    pub fn spec_accept_rate(&self) -> Option<f64> {
+        (self.spec_drafted > 0).then(|| self.spec_accepted as f64 / self.spec_drafted as f64)
+    }
+
+    /// Mean tokens committed per verify pass (> 1 is the speculative win;
+    /// 1.0 is the plain-decode degenerate case).
+    pub fn spec_tokens_per_pass(&self) -> Option<f64> {
+        (self.spec_passes > 0).then(|| self.spec_emitted as f64 / self.spec_passes as f64)
     }
 
     pub fn batches(&self) -> u64 {
@@ -231,6 +271,16 @@ impl Recorder {
                 fmt_opt(self.token_percentile(0.99)),
             ));
         }
+        if self.spec_passes > 0 {
+            s.push_str(&format!(
+                "; spec {} passes {:.2} tok/pass accept {:.0}% ({}/{} drafts)",
+                self.spec_passes,
+                self.spec_tokens_per_pass().unwrap_or(0.0),
+                self.spec_accept_rate().unwrap_or(0.0) * 100.0,
+                self.spec_accepted,
+                self.spec_drafted,
+            ));
+        }
         if self.arena != ArenaStats::default() {
             s.push_str(&format!(
                 "; arena {} fresh / {} reused ({} recycled)",
@@ -323,6 +373,24 @@ mod tests {
         let s = r.summary();
         assert!(s.contains("ttft p50"), "{s}");
         assert!(s.contains("tok p50"), "{s}");
+    }
+
+    #[test]
+    fn spec_axes_recorded() {
+        let mut r = Recorder::new();
+        assert_eq!(r.spec_passes(), 0);
+        assert!(r.spec_accept_rate().is_none());
+        assert!(r.spec_tokens_per_pass().is_none());
+        assert!(!r.summary().contains("spec"), "{}", r.summary());
+        // 3 drafts, 2 accepted, 3 emitted; then a worst-case pass
+        r.record_spec(3, 2, 3);
+        r.record_spec(3, 0, 1);
+        assert_eq!(r.spec_passes(), 2);
+        assert!((r.spec_accept_rate().unwrap() - 2.0 / 6.0).abs() < 1e-9);
+        assert!((r.spec_tokens_per_pass().unwrap() - 2.0).abs() < 1e-9);
+        let s = r.summary();
+        assert!(s.contains("spec 2 passes"), "{s}");
+        assert!(s.contains("2.00 tok/pass"), "{s}");
     }
 
     #[test]

@@ -203,6 +203,12 @@ impl Manifest {
             "embed_decode" => format!("{preset}_embed_decode_b{batch}"),
             "layer_full_decode" => format!("{preset}_layer_full_decode_b{batch}"),
             "attn_shard_decode" => format!("{preset}_attn_shard_decode_tp{tp}_b{batch}"),
+            // speculative decode: the verify window size k rides in `seq`
+            "embed_verify" => format!("{preset}_embed_verify_b{batch}_k{seq}"),
+            "layer_full_verify" => format!("{preset}_layer_full_verify_b{batch}_k{seq}"),
+            "attn_shard_verify" => {
+                format!("{preset}_attn_shard_verify_tp{tp}_b{batch}_k{seq}")
+            }
             "layer_full_kv" => format!("{preset}_layer_full_kv_b{batch}_s{seq}"),
             "attn_shard_kv" => format!("{preset}_attn_shard_kv_tp{tp}_b{batch}_s{seq}"),
             other => panic!("unknown variant kind {other:?}"),
@@ -244,6 +250,34 @@ impl Manifest {
         ws.sort_unstable();
         ws.dedup();
         ws
+    }
+
+    /// Compiled speculative-verify buckets `(width, k)` for `(preset,
+    /// tp)`: every pair for which the *whole* verify family exists
+    /// (`embed_verify`, the layer verify variant, a seq=k `logits`
+    /// scoring all window rows, and — under TP — the rows=width*k
+    /// `mlp_shard`). The engine enables draft-and-verify decoding only
+    /// for these.
+    pub fn verify_points(&self, preset: &str, tp: usize) -> Vec<(usize, usize)> {
+        let kind = if tp == 1 { "layer_full_verify" } else { "attn_shard_verify" };
+        let mut pts: Vec<(usize, usize)> = self
+            .by_kind(preset, kind)
+            .filter(|v| tp == 1 || v.tp == tp)
+            .map(|v| (v.batch, v.seq))
+            .filter(|&(w, k)| {
+                let mut need = vec![
+                    Self::name_of(preset, "embed_verify", w, k, 1, 0),
+                    Self::name_of(preset, "logits", w, k, 1, 0),
+                ];
+                if tp > 1 {
+                    need.push(Self::name_of(preset, "mlp_shard", w, k, tp, 0));
+                }
+                need.iter().all(|n| self.variants.contains_key(n))
+            })
+            .collect();
+        pts.sort_unstable();
+        pts.dedup();
+        pts
     }
 
     /// Do the cache-seeding `*_kv` prefill twins exist for every shape
@@ -330,6 +364,16 @@ mod tests {
             Manifest::name_of("small", "attn_shard_kv", 4, 64, 2, 0),
             "small_attn_shard_kv_tp2_b4_s64"
         );
+        // the speculative-verify family (window size k rides in seq)
+        assert_eq!(Manifest::name_of("tiny", "embed_verify", 2, 4, 1, 0), "tiny_embed_verify_b2_k4");
+        assert_eq!(
+            Manifest::name_of("tiny", "layer_full_verify", 2, 4, 1, 0),
+            "tiny_layer_full_verify_b2_k4"
+        );
+        assert_eq!(
+            Manifest::name_of("tiny", "attn_shard_verify", 2, 2, 2, 0),
+            "tiny_attn_shard_verify_tp2_b2_k2"
+        );
     }
 
     #[test]
@@ -383,6 +427,55 @@ mod tests {
         assert!(m.decode_widths("tiny", 2).is_empty());
         assert!(m.has_kv_prefill("tiny", 1));
         assert!(!m.has_kv_prefill("tiny", 2));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Minimal manifest carrying a complete verify family for (2, 2) and
+    /// incomplete ones for (2, 4) (no logits) and (4, 2) (no embed).
+    const VERIFY_SAMPLE: &str = r#"{
+      "format_version": 1,
+      "configs": [{"name": "tiny", "hidden": 64, "n_heads": 2, "head_dim": 32,
+                   "ffn": 256, "vocab": 128, "max_seq": 32, "n_layers": 4}],
+      "variants": [
+        {"name": "tiny_layer_full_verify_b2_k2", "kind": "layer_full_verify", "preset": "tiny",
+         "file": "f.hlo.txt", "batch": 2, "seq": 2, "tp": 1, "t_bucket": 0,
+         "inputs": [], "outputs": []},
+        {"name": "tiny_layer_full_verify_b2_k4", "kind": "layer_full_verify", "preset": "tiny",
+         "file": "f.hlo.txt", "batch": 2, "seq": 4, "tp": 1, "t_bucket": 0,
+         "inputs": [], "outputs": []},
+        {"name": "tiny_layer_full_verify_b4_k2", "kind": "layer_full_verify", "preset": "tiny",
+         "file": "f.hlo.txt", "batch": 4, "seq": 2, "tp": 1, "t_bucket": 0,
+         "inputs": [], "outputs": []},
+        {"name": "tiny_attn_shard_verify_tp2_b2_k2", "kind": "attn_shard_verify", "preset": "tiny",
+         "file": "f.hlo.txt", "batch": 2, "seq": 2, "tp": 2, "t_bucket": 0,
+         "inputs": [], "outputs": []},
+        {"name": "tiny_embed_verify_b2_k2", "kind": "embed_verify", "preset": "tiny",
+         "file": "f.hlo.txt", "batch": 2, "seq": 2, "tp": 1, "t_bucket": 0,
+         "inputs": [], "outputs": []},
+        {"name": "tiny_embed_verify_b2_k4", "kind": "embed_verify", "preset": "tiny",
+         "file": "f.hlo.txt", "batch": 2, "seq": 4, "tp": 1, "t_bucket": 0,
+         "inputs": [], "outputs": []},
+        {"name": "tiny_logits_b2_s2", "kind": "logits", "preset": "tiny",
+         "file": "f.hlo.txt", "batch": 2, "seq": 2, "tp": 1, "t_bucket": 0,
+         "inputs": [], "outputs": []},
+        {"name": "tiny_mlp_shard_tp2_r4", "kind": "mlp_shard", "preset": "tiny",
+         "file": "f.hlo.txt", "batch": 2, "seq": 2, "tp": 2, "t_bucket": 0,
+         "inputs": [], "outputs": []}
+      ]
+    }"#;
+
+    #[test]
+    fn verify_points_require_the_whole_family() {
+        let dir = std::env::temp_dir().join(format!("eai-man-ver-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), VERIFY_SAMPLE).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        // (2,2) is complete; (2,4) lacks its logits head; (4,2) lacks embed
+        assert_eq!(m.verify_points("tiny", 1), vec![(2, 2)]);
+        // tp=2 needs attn_shard_verify AND the rows=w*k mlp_shard
+        assert_eq!(m.verify_points("tiny", 2), vec![(2, 2)]);
+        // no tp=4 shards at all
+        assert!(m.verify_points("tiny", 4).is_empty());
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -161,6 +161,43 @@ fn shutdown_drains_live_sessions() {
     }
 }
 
+/// Regression (watchdog vs long generations): a generation whose total
+/// wall time exceeds `batch_deadline_ms` must still complete when every
+/// individual engine step is healthy. The seed watchdog compared every
+/// pending batch's publish-time age against the deadline, so a
+/// continuation batch re-enqueued behind a dispatch backlog aged from
+/// the moment it was published — not from when the workers actually got
+/// to it — and a long generation under a short deadline could be
+/// poisoned spuriously. The fixed watchdog only ages the head batch
+/// (minimum ticket) from its promotion, so a healthy backlog can never
+/// expire.
+#[test]
+fn short_deadline_does_not_poison_long_generations() {
+    let mut lc = LaunchConfig::preset("tiny");
+    // short relative to a whole multi-session run, generous relative to
+    // one engine step — exactly the regime where only queueing time
+    // could (wrongly) trip the watchdog
+    lc.engine.batch_deadline_ms = 250;
+    lc.engine.pool_threads = 4; // several batches in flight -> a backlog
+    let engine = Engine::launch(lc).unwrap();
+    // enough concurrent long generations that total wall time clears the
+    // deadline comfortably
+    let grefs: Vec<_> = (0..8)
+        .map(|i| {
+            engine
+                .generate_stream(GenRequest::new(vec![(i % 90 + 1) as i32, 7, 3], 16))
+                .unwrap()
+        })
+        .collect();
+    let mut total = 0;
+    for g in &grefs {
+        let out = g.to_here().expect("healthy generation was poisoned by the watchdog");
+        total += out.len() - 3;
+    }
+    assert!(total >= 8, "sessions barely generated: {total}");
+    engine.shutdown();
+}
+
 /// max_new_tokens == 0 is rejected; empty prompts are rejected.
 #[test]
 fn invalid_gen_requests_rejected() {

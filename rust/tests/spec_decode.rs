@@ -1,0 +1,304 @@
+//! Speculative decode, differentially: draft-and-verify continuation
+//! steps must be invisible in the token streams. Greedy decoding is
+//! deterministic, and the verify pass commits exactly the tokens plain
+//! decode would have sampled — so any divergence, under any drafter, at
+//! any accept rate, is a speculation bug. Checked across tp=1/tp=2 and
+//! k∈{2,4}, through stop-token and context-limit truncation mid-window,
+//! and with a drafter forced to a 0% accept rate (the worst case must
+//! degenerate to plain-decode behaviour with no K/V leak).
+//!
+//! Every test skips cleanly when the AOT artifacts are absent (the same
+//! condition under which an `Engine` cannot launch at all), so the suite
+//! never *adds* failures on an artifact-less checkout.
+
+use energonai::coordinator::drafter::{MisdraftDrafter, ReplayDrafter};
+use energonai::coordinator::engine::{Engine, GenRequest, GenRef, LaunchConfig};
+use energonai::memory::kvcache;
+use energonai::runtime::{find_artifacts, Manifest};
+use std::sync::Mutex;
+
+/// Serializes every test in this binary: several assert on the
+/// process-wide kvcache gauges, so no other engine may run concurrently.
+static STATS_LOCK: Mutex<()> = Mutex::new(());
+
+fn stats_guard() -> std::sync::MutexGuard<'static, ()> {
+    STATS_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Verify artifacts for (tiny, tp, k) present? When not, the test is a
+/// no-op — matching the seed state instead of adding failures.
+fn artifacts_ready(tp: usize, k: usize) -> bool {
+    let dir = match find_artifacts() {
+        Ok(d) => d,
+        Err(_) => {
+            eprintln!("skipping: no AOT artifacts (run `make artifacts`)");
+            return false;
+        }
+    };
+    let man = match Manifest::cached(dir) {
+        Ok(m) => m,
+        Err(_) => return false,
+    };
+    let ok = !man.decode_widths("tiny", tp).is_empty()
+        && man.has_kv_prefill("tiny", tp)
+        && man.verify_points("tiny", tp).iter().any(|&(_, kk)| kk == k);
+    if !ok {
+        eprintln!("skipping: verify artifacts missing for tiny/tp{tp}/k{k}");
+    }
+    ok
+}
+
+fn launch_plain(tp: usize) -> Engine {
+    Engine::launch(LaunchConfig::preset("tiny").with_parallel(tp, 1)).unwrap()
+}
+
+/// A speculative engine capped at window `k` (so k∈{2,4} are pinned
+/// independently), with the default n-gram drafter unless overridden.
+fn spec_config(tp: usize, k: usize) -> LaunchConfig {
+    LaunchConfig::preset("tiny").with_parallel(tp, 1).with_speculative(true).with_spec_k(k)
+}
+
+fn prompts() -> Vec<Vec<i32>> {
+    let mut ps: Vec<Vec<i32>> = (0..4)
+        .map(|i| {
+            let len = 2 + (i * 3) % 7;
+            (0..len).map(|j| ((i * 31 + j * 7) % 100 + 1) as i32).collect()
+        })
+        .collect();
+    // a repetitive prompt too: the n-gram drafter should do well on it,
+    // exercising the accepted-prefix (not just the rejected-tail) path
+    ps.push(vec![7, 8, 9, 7, 8, 9, 7, 8]);
+    ps
+}
+
+/// The acceptance bar: speculative streams byte-identical to plain greedy
+/// decode, sequentially and concurrently, with speculation demonstrably
+/// engaged.
+fn assert_spec_parity(tp: usize, k: usize) {
+    if !artifacts_ready(tp, k) {
+        return;
+    }
+    let _guard = stats_guard();
+    let plain = launch_plain(tp);
+    assert!(plain.kv_cache_on());
+    assert!(!plain.speculative_on(), "speculation must be off by default");
+    let expect: Vec<Vec<i32>> = prompts()
+        .into_iter()
+        .map(|p| plain.generate(p, 8).unwrap())
+        .collect();
+    plain.shutdown();
+
+    let spec = Engine::launch(spec_config(tp, k)).unwrap();
+    assert!(
+        spec.speculative_on(),
+        "verify artifacts present but speculation did not engage (tp={tp}, k={k})"
+    );
+    assert_eq!(spec.spec_ks().last(), Some(&k), "spec_k cap not honoured");
+    // sequential sessions
+    let got: Vec<Vec<i32>> = prompts()
+        .into_iter()
+        .map(|p| spec.generate(p, 8).unwrap())
+        .collect();
+    assert_eq!(got, expect, "speculative decode diverged (sequential, tp={tp}, k={k})");
+    // concurrent sessions: verify buckets coalesce and must still agree
+    let grefs: Vec<GenRef> = prompts()
+        .into_iter()
+        .map(|p| spec.generate_stream(GenRequest::new(p, 8)).unwrap())
+        .collect();
+    let got: Vec<Vec<i32>> = grefs.iter().map(|g| g.to_here().unwrap()).collect();
+    assert_eq!(got, expect, "speculative decode diverged (concurrent, tp={tp}, k={k})");
+    let m = spec.metrics_snapshot();
+    assert!(m.spec_passes() > 0, "speculation never ran a verify pass: {}", m.summary());
+    assert!(
+        m.spec_tokens_per_pass().unwrap() >= 1.0,
+        "tokens-per-pass below the plain-decode floor: {}",
+        m.summary()
+    );
+    spec.shutdown();
+}
+
+#[test]
+fn speculative_matches_plain_tp1_k2() {
+    assert_spec_parity(1, 2);
+}
+
+#[test]
+fn speculative_matches_plain_tp1_k4() {
+    assert_spec_parity(1, 4);
+}
+
+#[test]
+fn speculative_matches_plain_tp2_k2() {
+    assert_spec_parity(2, 2);
+}
+
+#[test]
+fn speculative_matches_plain_tp2_k4() {
+    assert_spec_parity(2, 4);
+}
+
+/// A perfect drafter (replaying the known greedy continuation) commits
+/// multiple tokens per pass — the tokens-per-pass > 1 win — while the
+/// stream stays byte-identical.
+#[test]
+fn perfect_drafter_commits_multiple_tokens_per_pass() {
+    if !artifacts_ready(1, 4) {
+        return;
+    }
+    let _guard = stats_guard();
+    let plain = launch_plain(1);
+    let prompt = vec![5, 9, 2];
+    let truth = plain.generate(prompt.clone(), 12).unwrap();
+    plain.shutdown();
+
+    let mut lc = spec_config(1, 4);
+    lc = lc.with_drafter(ReplayDrafter { script: truth.clone() });
+    let spec = Engine::launch(lc).unwrap();
+    let got = spec.generate(prompt, 12).unwrap();
+    assert_eq!(got, truth, "perfect drafter changed the stream");
+    let m = spec.metrics_snapshot();
+    assert!(
+        m.spec_tokens_per_pass().unwrap() > 1.3,
+        "perfect drafter should clear 1.3 tokens/pass: {}",
+        m.summary()
+    );
+    assert!(
+        m.spec_accept_rate().unwrap() > 0.9,
+        "replayed truth should accept ~100%: {}",
+        m.summary()
+    );
+    spec.shutdown();
+}
+
+/// Stop-token truncation mid-window: the drafter keeps proposing past the
+/// stop token, the verify pass accepts those drafts (they match greedy),
+/// but the collector must cut the stream right after the stop token —
+/// exactly where plain decode stops.
+#[test]
+fn stop_token_truncates_mid_window() {
+    if !artifacts_ready(1, 4) {
+        return;
+    }
+    let _guard = stats_guard();
+    let plain = launch_plain(1);
+    let prompt = vec![5, 9, 2];
+    let free_run = plain.generate(prompt.clone(), 8).unwrap();
+    assert!(free_run.len() > prompt.len() + 1);
+    // stop at the second generated token: with k=4 windows the stop lands
+    // mid-window rather than on a step boundary
+    let stop = free_run[prompt.len() + 1];
+    let expect = plain
+        .generate_stream(GenRequest::new(prompt.clone(), 8).with_stop(stop))
+        .unwrap()
+        .to_here()
+        .unwrap();
+    plain.shutdown();
+
+    // the replay drafter guarantees accepted windows *past* the stop
+    let mut lc = spec_config(1, 4);
+    lc = lc.with_drafter(ReplayDrafter { script: free_run.clone() });
+    let spec = Engine::launch(lc).unwrap();
+    let got = spec
+        .generate_stream(GenRequest::new(prompt.clone(), 8).with_stop(stop))
+        .unwrap()
+        .to_here()
+        .unwrap();
+    assert_eq!(got, expect, "stop-token truncation diverged under speculation");
+    assert_eq!(*got.last().unwrap(), stop);
+    spec.shutdown();
+}
+
+/// Context-limit truncation mid-window: a session whose verify window
+/// would run past the longest compiled bucket must stop at exactly the
+/// same point as plain decode (the engine shrinks or abandons the window
+/// near the limit; the collector applies the same per-token length rule).
+#[test]
+fn context_limit_truncates_mid_window() {
+    if !artifacts_ready(1, 4) {
+        return;
+    }
+    let _guard = stats_guard();
+    let plain = launch_plain(1);
+    let prompt: Vec<i32> = (1..=27).collect();
+    let expect = plain.generate(prompt.clone(), 16).unwrap();
+    plain.shutdown();
+    // 27 + 16 > 32: the session must stop early at the context limit
+    assert!(expect.len() < 27 + 16, "context limit never hit");
+
+    let spec = Engine::launch(spec_config(1, 4)).unwrap();
+    let got = spec.generate(prompt, 16).unwrap();
+    assert_eq!(got, expect, "context-limit truncation diverged under speculation");
+    spec.shutdown();
+}
+
+/// The worst case: a drafter forced to 0% accept rate. Every verify pass
+/// degenerates to one committed token (plain-decode progress), every
+/// speculatively appended K/V row is truncated back out, the stream is
+/// unchanged, and no cache blocks leak.
+#[test]
+fn zero_accept_drafter_degenerates_cleanly() {
+    if !artifacts_ready(1, 4) {
+        return;
+    }
+    let _guard = stats_guard();
+    let blocks_before = kvcache::global_stats().blocks_in_use;
+    let plain = launch_plain(1);
+    let vocab = plain.cfg.vocab as i32;
+    let ps = prompts();
+    let truths: Vec<Vec<i32>> = ps.iter().map(|p| plain.generate(p.clone(), 8).unwrap()).collect();
+    plain.shutdown();
+
+    for (p, truth) in ps.into_iter().zip(&truths) {
+        let mut lc = spec_config(1, 4);
+        lc = lc.with_drafter(MisdraftDrafter { truth: truth.clone(), vocab });
+        let spec = Engine::launch(lc).unwrap();
+        let got = spec.generate(p, 8).unwrap();
+        assert_eq!(&got, truth, "0%-accept drafter changed the stream");
+        let m = spec.metrics_snapshot();
+        assert!(m.spec_passes() > 0, "{}", m.summary());
+        assert_eq!(
+            m.spec_accept_rate(),
+            Some(0.0),
+            "misdrafts must never be accepted: {}",
+            m.summary()
+        );
+        assert!(
+            (m.spec_tokens_per_pass().unwrap() - 1.0).abs() < 1e-9,
+            "worst case must emit exactly one token per pass: {}",
+            m.summary()
+        );
+        // every rejected window was truncated back out of the cache
+        assert!(m.kvcache_stats().truncates > 0, "{}", m.summary());
+        spec.shutdown();
+    }
+    // no KV leak: block counters return to the baseline
+    let after = kvcache::global_stats();
+    assert_eq!(
+        after.blocks_in_use, blocks_before,
+        "0%-accept speculation leaked cache blocks"
+    );
+}
+
+/// Speculation engages the verify path for coalesced concurrent sessions
+/// too, and the engine drains cleanly with blocks back on the free lists.
+#[test]
+fn concurrent_speculative_sessions_release_all_blocks() {
+    if !artifacts_ready(1, 4) {
+        return;
+    }
+    let _guard = stats_guard();
+    let before = kvcache::global_stats().blocks_in_use;
+    let spec = Engine::launch(spec_config(1, 4)).unwrap();
+    let grefs: Vec<GenRef> = prompts()
+        .into_iter()
+        .map(|p| spec.generate_stream(GenRequest::new(p, 6)).unwrap())
+        .collect();
+    for g in &grefs {
+        g.to_here().unwrap();
+    }
+    let m = spec.metrics_snapshot();
+    assert!(m.spec_passes() > 0, "{}", m.summary());
+    spec.shutdown();
+    let after = kvcache::global_stats().blocks_in_use;
+    assert_eq!(after, before, "speculative sessions leaked cache blocks");
+}

@@ -1,0 +1,24 @@
+#!/usr/bin/env bash
+# Run the speculative-decode benchmark (plain vs draft-and-verify at
+# k∈{2,4}, repetitive vs adversarial prompts, n-gram vs replay drafter)
+# and refresh BENCH_specdecode.json at the repo root. A speculative
+# stream diverging from plain decode exits non-zero. BENCH_SMOKE=1 runs
+# a single-workload pass (CI).
+#
+# Usage: scripts/bench_specdecode.sh [extra cargo args...]
+set -euo pipefail
+
+cd "$(dirname "$0")/../rust"
+
+if ! ls ../artifacts/manifest.json >/dev/null 2>&1 && ! ls artifacts/manifest.json >/dev/null 2>&1; then
+    echo "warning: no AOT artifacts found — the bench will skip (run 'make artifacts')" >&2
+fi
+
+cargo bench --bench specdecode "$@"
+
+out="$(cd .. && pwd)/BENCH_specdecode.json"
+if [ -f "$out" ]; then
+    echo "refreshed $out"
+else
+    echo "warning: $out was not written (bench skipped?)" >&2
+fi

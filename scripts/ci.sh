@@ -9,7 +9,29 @@ set -euo pipefail
 cd "$(dirname "$0")/../rust"
 
 cargo build --release
-cargo test -q
+
+# tier-1 tests, with a per-suite pass/fail summary at the end so CI logs
+# show *which* integration suite regressed, not just that one did
+test_log="$(mktemp)"
+trap 'rm -f "$test_log"' EXIT
+test_rc=0
+cargo test 2>&1 | tee "$test_log" || test_rc=$?
+echo
+echo "== tier-1 per-suite summary =="
+awk '
+    # "Running unittests src/lib.rs (target/…)" / "Running tests/foo.rs (target/…)"
+    /^[[:space:]]+Running / { suite = ($2 == "unittests") ? $3 : $2 }
+    /^[[:space:]]+Doc-tests / { suite = "doc-tests " $2 }
+    /^test result:/ {
+        status = ($3 == "ok.") ? "PASS" : "FAIL"
+        printf "  %-4s %-40s %s\n", status, suite, $0
+    }
+' "$test_log"
+if [ "$test_rc" -ne 0 ]; then
+    echo "tier-1 tests FAILED (exit $test_rc)" >&2
+    exit "$test_rc"
+fi
+
 cargo fmt --check
 
 # decode-bench smoke: one prefix, few tokens — catches decode-path and
@@ -20,3 +42,8 @@ BENCH_SMOKE=1 cargo bench --bench decode
 # tier — catches tiering regressions (parity failure exits non-zero) and
 # refreshes BENCH_kvspill.json
 BENCH_SMOKE=1 cargo bench --bench kvspill
+
+# speculative-decode smoke: plain vs draft-and-verify on the repetitive
+# workload — a stream divergence or tokens-per-pass <= 1.3 exits
+# non-zero, and BENCH_specdecode.json is refreshed
+BENCH_SMOKE=1 cargo bench --bench specdecode
