@@ -1,0 +1,161 @@
+//! Saturation benchmark: the seeded hostile-traffic scenario (Poisson
+//! bursts, heavy-tailed lengths, multi-turn re-entry, 25% mid-stream
+//! disconnects, one injected worker stall) against an engine with
+//! admission control — versus an unfaulted control run on the same seed.
+//!
+//! The claims under test: the engine sheds instead of queueing
+//! unboundedly, no K/V block leaks on either tier (hard gate), survivor
+//! streams stay byte-identical to the control run (hard gate), and
+//! shutdown drains cleanly under chaos.
+//!
+//! Results land machine-readably in `BENCH_saturation.json` at the repo
+//! root (regenerate with `scripts/bench_saturation.sh`; `BENCH_SMOKE=1`
+//! runs a smaller client pool for CI).
+
+use energonai::coordinator::engine::{Engine, LaunchConfig};
+use energonai::memory::kvcache;
+use energonai::runtime::find_artifacts;
+use energonai::workload::loadgen::{
+    parity_mismatches, pctl_us, run_saturation, LoadReport, SaturationScenario,
+};
+
+type Results = Vec<(String, f64)>;
+
+const SEED: u64 = 2209;
+
+fn run_cell(
+    label: &str,
+    lc: LaunchConfig,
+    scenario: &SaturationScenario,
+    results: &mut Results,
+) -> Option<(LoadReport, u64)> {
+    let before = kvcache::global_stats();
+    let engine = match Engine::launch(lc) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("skip {label}: {e:#}");
+            return None;
+        }
+    };
+    if !engine.kv_cache_on() {
+        eprintln!("skip {label}: decode artifacts missing");
+        engine.shutdown();
+        return None;
+    }
+    let max_context =
+        engine.manifest.shape_points("tiny").iter().map(|&(_, s)| s).max().unwrap();
+    let report = run_saturation(&engine, scenario, max_context);
+    let m = engine.metrics_snapshot();
+    let (shed, cancelled) = (m.shed(), m.cancelled());
+    engine.shutdown();
+    let after = kvcache::global_stats();
+    let leaked = after.blocks_in_use.saturating_sub(before.blocks_in_use)
+        + after.host_bytes.saturating_sub(before.host_bytes)
+        + after.double_free.saturating_sub(before.double_free);
+    println!(
+        "{label:>8}: {} turns in {:.1}ms — {} completed / {} disconnected / {} shed / {} errors; \
+         {:.0} tok/s, TTFT p99 {}µs, TPOT p99 {}µs, {} engine-cancelled, {} leaked",
+        report.turns(),
+        report.wall.as_secs_f64() * 1e3,
+        report.completed,
+        report.disconnected,
+        report.shed,
+        report.errors,
+        report.tokens_per_sec(),
+        pctl_us(&report.ttft_us, 99.0),
+        pctl_us(&report.tpot_us, 99.0),
+        cancelled,
+        leaked,
+    );
+    let key = |k: &str| format!("{label}_{k}");
+    results.push((key("turns"), report.turns() as f64));
+    results.push((key("completed"), report.completed as f64));
+    results.push((key("disconnected"), report.disconnected as f64));
+    results.push((key("shed"), report.shed as f64));
+    results.push((key("errors"), report.errors as f64));
+    results.push((key("shed_rate"), report.shed_rate()));
+    results.push((key("tokens_per_sec"), report.tokens_per_sec()));
+    results.push((key("wall_us"), report.wall.as_secs_f64() * 1e6));
+    results.push((key("ttft_p50_us"), pctl_us(&report.ttft_us, 50.0) as f64));
+    results.push((key("ttft_p99_us"), pctl_us(&report.ttft_us, 99.0) as f64));
+    results.push((key("tpot_p50_us"), pctl_us(&report.tpot_us, 50.0) as f64));
+    results.push((key("tpot_p99_us"), pctl_us(&report.tpot_us, 99.0) as f64));
+    results.push((key("engine_shed"), shed as f64));
+    results.push((key("engine_cancelled"), cancelled as f64));
+    results.push((key("leaked_blocks"), leaked as f64));
+    Some((report, leaked))
+}
+
+fn write_json(results: &Results) {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_saturation.json");
+    let mut body = String::from("{\n  \"schema\": \"bench_saturation/v1\",\n");
+    body.push_str("  \"generated_by\": \"scripts/bench_saturation.sh\",\n");
+    body.push_str("  \"preset\": \"tiny\",\n");
+    body.push_str(&format!("  \"seed\": {SEED},\n"));
+    body.push_str("  \"results\": {\n");
+    for (i, (k, v)) in results.iter().enumerate() {
+        let comma = if i + 1 == results.len() { "" } else { "," };
+        body.push_str(&format!("    \"{k}\": {v:.2}{comma}\n"));
+    }
+    body.push_str("  }\n}\n");
+    match std::fs::write(path, body) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}
+
+fn main() {
+    if find_artifacts().is_err() {
+        eprintln!("no AOT artifacts found — run `make artifacts` first; skipping");
+        return;
+    }
+    let smoke = std::env::var("BENCH_SMOKE").is_ok();
+    let (clients, turns) = if smoke { (8, 3) } else { (16, 4) };
+
+    println!("== saturation: {clients} clients x {turns} turns, seed {SEED} ==\n");
+    let mut results = Results::new();
+    results.push(("clients".into(), clients as f64));
+    results.push(("turns_per_client".into(), turns as f64));
+
+    // control: same seed, no chaos, no caps — the parity reference
+    let control = run_cell(
+        "control",
+        LaunchConfig::preset("tiny").with_warmup(true),
+        &SaturationScenario::new(SEED, clients, turns),
+        &mut results,
+    );
+
+    // chaos: 25% mid-stream disconnects, a stalled worker reply window,
+    // and a queued-prefill cap so overload sheds instead of queueing
+    let chaos = run_cell(
+        "chaos",
+        LaunchConfig::preset("tiny")
+            .with_warmup(true)
+            .with_admission(2, 0)
+            .with_faults("delay3ms@t6..9", SEED),
+        &SaturationScenario::new(SEED, clients, turns).with_disconnects(0.25),
+        &mut results,
+    );
+
+    if let (Some((control, leak_c)), Some((chaos, leak_h))) = (control, chaos) {
+        let diffs = parity_mismatches(&control, &chaos);
+        results.push(("parity".into(), if diffs.is_empty() { 1.0 } else { 0.0 }));
+        println!(
+            "\nparity: {}",
+            if diffs.is_empty() {
+                "survivor streams byte-identical to control".to_string()
+            } else {
+                format!("DIVERGED:\n{}", diffs.join("\n"))
+            }
+        );
+        let leaked = leak_c + leak_h;
+        write_json(&results);
+        if !diffs.is_empty() || leaked > 0 {
+            // the counters on disk are the evidence; fail the smoke gate
+            eprintln!("FAIL: parity_diffs={} leaked={leaked}", diffs.len());
+            std::process::exit(1);
+        }
+        return;
+    }
+    write_json(&results);
+}

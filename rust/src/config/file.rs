@@ -24,6 +24,12 @@
 //! pool_threads = 4
 //! max_batch = 32
 //! batch_timeout_us = 2000
+//! max_queue_depth = 64   # load shedding: busy-reject past this (0 = off)
+//! admission_token_budget = 4096 # defer prefills past this KV load (0 = off)
+//! slo_ttft_ms = 200      # TTFT SLO target feeding the pressure window
+//! slo_tpot_ms = 50       # per-token SLO target
+//! fault_plan = ""        # chaos schedule, e.g. "delay5ms@t3,drop@every16+7@w0"
+//! fault_seed = 0         # seed for probabilistic fault selectors
 //!
 //! [model]
 //! n_layers = 24          # customized layer count (paper §5.5)
@@ -65,6 +71,14 @@ pub fn launch_from_doc(doc: &TomlDoc) -> anyhow::Result<LaunchConfig> {
         doc.f64_or("engine.kv_spill_low_water", launch.engine.kv_spill_low_water);
     launch.engine.speculative = doc.bool_or("engine.speculative", false);
     launch.engine.spec_k = doc.usize_or("engine.spec_k", launch.engine.spec_k);
+    launch.engine.max_queue_depth = doc.usize_or("engine.max_queue_depth", 0);
+    launch.engine.admission_token_budget = doc.usize_or("engine.admission_token_budget", 0);
+    launch.engine.slo_ttft_ms = doc.usize_or("engine.slo_ttft_ms", 0) as u64;
+    launch.engine.slo_tpot_ms = doc.usize_or("engine.slo_tpot_ms", 0) as u64;
+    launch.engine.fault_plan = doc.str_or("engine.fault_plan", "").to_string();
+    launch.engine.fault_seed = doc.usize_or("engine.fault_seed", 0) as u64;
+    // fail at load time, not at worker spawn, on an unparsable schedule
+    crate::coordinator::FaultPlan::parse(&launch.engine.fault_plan, launch.engine.fault_seed)?;
     anyhow::ensure!(
         !launch.engine.speculative || launch.engine.spec_k >= 2,
         "engine.speculative requires engine.spec_k >= 2 (one committed token + >= 1 draft)"
@@ -115,6 +129,9 @@ pub fn launch_from_doc(doc: &TomlDoc) -> anyhow::Result<LaunchConfig> {
             "engine.kv_spill", "engine.kv_device_blocks", "engine.kv_host_blocks",
             "engine.kv_spill_high_water", "engine.kv_spill_low_water",
             "engine.speculative", "engine.spec_k",
+            "engine.max_queue_depth", "engine.admission_token_budget",
+            "engine.slo_ttft_ms", "engine.slo_tpot_ms",
+            "engine.fault_plan", "engine.fault_seed",
             "model.n_layers",
             "memory.mode", "memory.n_local", "memory.lookahead", "memory.time_scale", "memory.link",
         ];
@@ -233,6 +250,36 @@ kv_spill_low_water = 0.5
         let doc = TomlDoc::parse("[engine]\nspeculative = true\nkv_cache = false\n").unwrap();
         let err = launch_from_doc(&doc).unwrap_err().to_string();
         assert!(err.contains("kv_cache"), "{err}");
+    }
+
+    #[test]
+    fn robustness_knobs_round_trip_and_validation() {
+        let doc = TomlDoc::parse(
+            r#"
+[engine]
+max_queue_depth = 64
+admission_token_budget = 4096
+slo_ttft_ms = 200
+slo_tpot_ms = 50
+fault_plan = "delay5ms@t3,drop@every16+7@w0"
+fault_seed = 7
+"#,
+        )
+        .unwrap();
+        let l = launch_from_doc(&doc).unwrap();
+        assert_eq!(l.engine.max_queue_depth, 64);
+        assert_eq!(l.engine.admission_token_budget, 4096);
+        assert_eq!((l.engine.slo_ttft_ms, l.engine.slo_tpot_ms), (200, 50));
+        assert_eq!(l.engine.fault_plan, "delay5ms@t3,drop@every16+7@w0");
+        assert_eq!(l.engine.fault_seed, 7);
+        // defaults: everything off
+        let l = launch_from_doc(&TomlDoc::parse("").unwrap()).unwrap();
+        assert_eq!(l.engine.max_queue_depth, 0);
+        assert_eq!(l.engine.admission_token_budget, 0);
+        assert!(l.engine.fault_plan.is_empty());
+        // an unparsable fault schedule fails at load time
+        let doc = TomlDoc::parse("[engine]\nfault_plan = \"explode@sometimes\"\n").unwrap();
+        assert!(launch_from_doc(&doc).is_err());
     }
 
     #[test]

@@ -213,6 +213,25 @@ pub struct EngineConfig {
     /// speculative step may use; the engine picks the largest compiled
     /// k ≤ this that fits the session's remaining budget and context.
     pub spec_k: usize,
+    /// Load shedding: max queued prefill requests before new submissions
+    /// get a structured `busy` rejection (0 = unlimited queueing). Under
+    /// SLO pressure the effective cap halves (an unlimited cap degrades
+    /// to `2 * max_batch`).
+    pub max_queue_depth: usize,
+    /// Token-budget admission gate: new prefill buckets defer while the
+    /// KV positions held by unfinished sessions exceed this (0 = off).
+    pub admission_token_budget: usize,
+    /// TTFT SLO target in ms (0 = untracked). Violations feed the
+    /// Recorder's rolling pressure window, which tightens admission.
+    pub slo_ttft_ms: u64,
+    /// Per-token (TPOT) SLO target in ms (0 = untracked).
+    pub slo_tpot_ms: u64,
+    /// Chaos fault schedule, e.g. `"delay5ms@t3,drop@every16+7@w0"`
+    /// (empty = no faults). Parsed by `coordinator::FaultPlan`; applied
+    /// at the worker reply boundary so collectives never desynchronize.
+    pub fault_plan: String,
+    /// Seed for probabilistic fault selectors (`p<frac>`).
+    pub fault_seed: u64,
 }
 
 impl Default for EngineConfig {
@@ -233,6 +252,12 @@ impl Default for EngineConfig {
             kv_spill_low_water: 0.70,
             speculative: false,
             spec_k: 4,
+            max_queue_depth: 0,
+            admission_token_budget: 0,
+            slo_ttft_ms: 0,
+            slo_tpot_ms: 0,
+            fault_plan: String::new(),
+            fault_seed: 0,
         }
     }
 }

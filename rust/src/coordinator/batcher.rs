@@ -25,8 +25,29 @@
 use super::rpc::{BatchInput, Phase};
 use crate::memory::kvcache::tier::{TierCmd, TierPolicy};
 use crate::tensor::IntTensor;
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 use std::time::{Duration, Instant};
+
+/// Structured load-shed rejection: the admission gate refused a new
+/// request instead of queueing it unboundedly. Carried through
+/// `anyhow::Error` so callers (the engine, then the server) can downcast
+/// and answer the client with a `busy` line rather than a hard error.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Busy {
+    /// Which gate fired: `"queue-full"` (depth cap) or `"slo-pressure"`
+    /// (depth cap tightened by SLO violations).
+    pub reason: &'static str,
+    /// Prefill requests queued at the moment of rejection.
+    pub queued: usize,
+}
+
+impl std::fmt::Display for Busy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "busy ({}): {} prefills queued", self.reason, self.queued)
+    }
+}
+
+impl std::error::Error for Busy {}
 
 /// One inference request: a token sequence, tagged with the engine step
 /// kind it needs next (a fresh prompt prefills; a cached continuation
@@ -202,6 +223,23 @@ pub struct Batcher {
     /// published *before* the formed batch so ticket order makes every
     /// gated session resident by the time its forward executes.
     tier_cmds: Vec<TierCmd>,
+    /// Load-shed depth cap: max queued *prefill* requests before `admit`
+    /// rejects with [`Busy`] (0 = unlimited). Decode continuations are
+    /// never shed — a session already holding KV must run to completion
+    /// or be cancelled, not abandoned mid-stream.
+    max_queue_depth: usize,
+    /// Token-budget admission gate: when the KV positions held by
+    /// admitted-but-unfinished sessions reach this, `form` defers new
+    /// prefill buckets until releases drain the ledger (0 = unlimited).
+    token_budget: usize,
+    /// KV positions per admitted session, updated as batches form and
+    /// continuations re-enter; retired by `tier_free` / `purge`. This is
+    /// the batcher-local view of decode working-set load that the token
+    /// budget meters — in-flight sessions are *not* in `queue`, so queue
+    /// length alone cannot see them.
+    active_tokens: HashMap<u64, usize>,
+    /// Prefill buckets deferred by the token budget (observability).
+    budget_deferrals: u64,
 }
 
 impl Batcher {
@@ -217,7 +255,19 @@ impl Batcher {
             queue: VecDeque::new(),
             tier: None,
             tier_cmds: Vec::new(),
+            max_queue_depth: 0,
+            token_budget: 0,
+            active_tokens: HashMap::new(),
+            budget_deferrals: 0,
         }
+    }
+
+    /// Enable load-shed admission control: a queued-prefill depth cap and
+    /// a token budget over the active working set (0 = unlimited each).
+    pub fn with_admission(mut self, max_queue_depth: usize, token_budget: usize) -> Batcher {
+        self.max_queue_depth = max_queue_depth;
+        self.token_budget = token_budget;
+        self
     }
 
     /// Enable decode buckets for the given compiled widths.
@@ -288,6 +338,55 @@ impl Batcher {
         Ok(())
     }
 
+    /// Admission-gated enqueue for *new* requests (the server path).
+    /// Rejects with a downcastable [`Busy`] when the queued-prefill depth
+    /// cap is hit, instead of queueing unboundedly. Under SLO `pressure`
+    /// (the Recorder's rolling violation window is hot) the cap tightens
+    /// to half — and a cap of 0 (unlimited) degrades to `2 * max_batch`
+    /// so a saturated engine still sheds rather than building an
+    /// ever-growing backlog it can never serve within SLO.
+    pub fn admit(&mut self, r: Request, arrived: Instant, pressure: bool) -> anyhow::Result<()> {
+        let mut cap = self.max_queue_depth;
+        if pressure {
+            cap = if cap == 0 { 2 * self.max_batch } else { (cap / 2).max(1) };
+        }
+        if cap > 0 {
+            let queued = self.queued_prefills();
+            if queued >= cap {
+                let reason = if pressure { "slo-pressure" } else { "queue-full" };
+                return Err(anyhow::Error::new(Busy { reason, queued }));
+            }
+        }
+        self.push_at(r, arrived)
+    }
+
+    /// Drop a cancelled session's queued step, if any. Returns whether a
+    /// queued request was actually removed — `false` means the session is
+    /// in flight (or already finished) and must instead be evicted at the
+    /// next collector step. Either way the session leaves the token
+    /// ledger: its KV release is the caller's next move.
+    pub fn purge(&mut self, id: u64) -> bool {
+        let before = self.queue.len();
+        self.queue.retain(|(r, _)| r.id != id);
+        self.active_tokens.remove(&id);
+        self.queue.len() != before
+    }
+
+    /// Queued prefill requests (the depth the admission cap meters).
+    pub fn queued_prefills(&self) -> usize {
+        self.queue.iter().filter(|(r, _)| r.phase == Phase::Prefill).count()
+    }
+
+    /// KV positions currently held by admitted-but-unfinished sessions.
+    pub fn active_token_load(&self) -> usize {
+        self.active_tokens.values().sum()
+    }
+
+    /// Prefill buckets the token budget has deferred so far.
+    pub fn budget_deferrals(&self) -> u64 {
+        self.budget_deferrals
+    }
+
     /// Re-enqueue an unfinished generation session at the *front* of the
     /// queue (decode priority): its next step dispatches before any fresh
     /// prefill, so concurrent decodes coalesce into shared buckets. The
@@ -301,12 +400,17 @@ impl Batcher {
         if let Some(t) = self.tier.as_mut() {
             t.on_requeue(r.id);
         }
+        // keep the token ledger tracking the session's grown context
+        self.active_tokens.insert(r.id, r.cache_len());
         self.queue.push_front((r, arrived));
     }
 
     /// Finished sessions: credit their blocks in the tier model (no-op
-    /// without a tier policy).
+    /// without a tier policy) and retire them from the admission ledger.
     pub fn tier_free(&mut self, ids: &[u64]) {
+        for id in ids {
+            self.active_tokens.remove(id);
+        }
         if let Some(t) = self.tier.as_mut() {
             t.on_free(ids);
         }
@@ -371,6 +475,35 @@ impl Batcher {
         // take up to cap same-phase requests, but never exceed what some
         // bucket fits
         let mut take = run.min(cap);
+        // token-budget admission: new prefill buckets defer while the KV
+        // positions held by unfinished sessions saturate the budget, and
+        // otherwise shrink to what still fits beside that working set.
+        // Decode/verify continuations are exempt — they only ever *drain*
+        // the ledger, and deferring them would deadlock the very sessions
+        // the budget is waiting on. A lone oversized prompt against an
+        // empty ledger still admits: the budget meters concurrency, not
+        // single-request size (max_seq already bounds that on push).
+        if phase == Phase::Prefill && self.token_budget > 0 {
+            let active = self.active_token_load();
+            if active >= self.token_budget {
+                self.budget_deferrals += 1;
+                return None;
+            }
+            let mut fit = 0;
+            let mut cum = 0usize;
+            for (r, _) in self.queue.iter().take(take) {
+                cum += r.len();
+                if active + cum > self.token_budget && !(fit == 0 && active == 0) {
+                    break;
+                }
+                fit += 1;
+            }
+            if fit == 0 {
+                self.budget_deferrals += 1;
+                return None;
+            }
+            take = fit;
+        }
         // tier capacity caps the bucket width: a decode bucket must fit
         // beside the already-pinned in-flight working set (cold resident
         // sessions don't count — the gate can spill them), and a prefill
@@ -424,6 +557,11 @@ impl Batcher {
             if let Some(bucket) = bucket {
                 if !self.tier_gate(phase, &mut reqs) {
                     return None; // admission control deferred the batch
+                }
+                // the batch is committed: its sessions join (or update)
+                // the admission token ledger at their post-step length
+                for (r, _) in reqs.iter() {
+                    self.active_tokens.insert(r.id, r.cache_len());
                 }
                 return Some(FormedBatch {
                     requests: reqs.into_iter().map(|(r, _)| r).collect(),
@@ -881,5 +1019,129 @@ mod tests {
         let total: usize = batches.iter().map(|fb| fb.requests.len()).sum();
         assert_eq!(total, 6);
         assert_eq!(b.pending(), 0);
+    }
+
+    fn busy_of(e: &anyhow::Error) -> &Busy {
+        e.downcast_ref::<Busy>().expect("admission rejection must downcast to Busy")
+    }
+
+    #[test]
+    fn admit_sheds_past_depth_cap() {
+        let mut b = batcher().with_admission(2, 0);
+        let now = Instant::now();
+        b.admit(req(0, 8), now, false).unwrap();
+        b.admit(req(1, 8), now, false).unwrap();
+        let err = b.admit(req(2, 8), now, false).unwrap_err();
+        let busy = busy_of(&err);
+        assert_eq!((busy.reason, busy.queued), ("queue-full", 2));
+        assert_eq!(b.pending(), 2, "shed request must not enter the queue");
+        // the cap meters prefills only: a decode continuation still
+        // requeues (front) and the prefills behind it still count as 2
+        b.requeue_front(Request::decode(9, vec![5; 4]), now);
+        let err = b.admit(req(3, 8), now, false).unwrap_err();
+        assert_eq!(busy_of(&err).queued, 2);
+    }
+
+    #[test]
+    fn admit_pressure_tightens_cap() {
+        // explicit cap 4 halves to 2 under pressure
+        let mut b = batcher().with_admission(4, 0);
+        let now = Instant::now();
+        b.admit(req(0, 8), now, true).unwrap();
+        b.admit(req(1, 8), now, true).unwrap();
+        let err = b.admit(req(2, 8), now, true).unwrap_err();
+        assert_eq!(busy_of(&err).reason, "slo-pressure");
+        // ...but without pressure the full cap still admits
+        b.admit(req(2, 8), now, false).unwrap();
+        // unlimited cap degrades to 2 * max_batch (= 8) under pressure
+        let mut b = batcher();
+        for i in 0..8 {
+            b.admit(req(i, 8), now, true).unwrap();
+            // consume nothing: form won't fire below, queue just grows
+        }
+        assert!(b.admit(req(8, 8), now, true).is_err());
+        assert!(b.admit(req(8, 8), now, false).is_ok(), "no cap without pressure");
+    }
+
+    #[test]
+    fn purge_removes_queued_request_only() {
+        let mut b = batcher();
+        let now = Instant::now();
+        b.push_at(req(1, 8), now).unwrap();
+        b.push_at(req(2, 8), now).unwrap();
+        assert!(b.purge(1), "queued request purges");
+        assert!(!b.purge(1), "second purge finds nothing");
+        assert!(!b.purge(77), "unknown id purges nothing");
+        assert_eq!(b.pending(), 1);
+        let later = now + Duration::from_millis(20);
+        let fb = b.form(later).expect("survivor still forms");
+        assert_eq!(fb.requests.len(), 1);
+        assert_eq!(fb.requests[0].id, 2);
+    }
+
+    #[test]
+    fn token_budget_defers_prefill_until_sessions_retire() {
+        // budget 20: one len-16 prompt fills most of it
+        let mut b = batcher().with_admission(0, 20);
+        let old = Instant::now() - Duration::from_millis(20);
+        b.push_at(req(1, 16), old).unwrap();
+        let fb = b.form(Instant::now()).expect("first prompt admits");
+        assert_eq!(fb.requests[0].id, 1);
+        assert_eq!(b.active_token_load(), 16);
+        // 16 + 8 > 20: the second prompt defers, stays queued
+        b.push_at(req(2, 8), old).unwrap();
+        assert!(b.form(Instant::now()).is_none(), "must defer over budget");
+        assert_eq!(b.pending(), 1);
+        assert_eq!(b.budget_deferrals(), 1);
+        // session 1 finishes -> ledger drains -> 2 admits
+        b.tier_free(&[1]);
+        assert_eq!(b.active_token_load(), 0);
+        let fb2 = b.form(Instant::now()).expect("admits after release");
+        assert_eq!(fb2.requests[0].id, 2);
+    }
+
+    #[test]
+    fn token_budget_splits_wave_and_tracks_growth() {
+        let mut b = decode_batcher().with_admission(0, 20);
+        let old = Instant::now() - Duration::from_millis(20);
+        for id in 1..=4u64 {
+            b.push_at(req(id, 8), old).unwrap();
+        }
+        // 8 + 8 fits the budget of 20; the third row would overflow
+        let fb = b.form(Instant::now()).expect("partial wave admits");
+        assert_eq!(fb.requests.len(), 2);
+        assert_eq!(b.pending(), 2);
+        assert!(b.form(Instant::now()).is_none(), "rest defers");
+        // continuations grow the ledger entry in place (no double count)
+        b.requeue_front(Request::decode(1, vec![7; 9]), old);
+        assert_eq!(b.active_token_load(), 9 + 8);
+        let fb = b.form(Instant::now()).expect("decode is budget-exempt");
+        assert_eq!(fb.phase, Phase::Decode);
+        // cancellation purges the ledger even for in-flight sessions
+        assert!(!b.purge(2), "in-flight session is not queued");
+        assert_eq!(b.active_token_load(), 9);
+    }
+
+    #[test]
+    fn oversized_lone_prompt_still_admits_against_empty_ledger() {
+        // budget 4 < prompt 8: concurrency metering must not wedge a
+        // single request the compiled buckets can serve
+        let mut b = batcher().with_admission(0, 4);
+        let old = Instant::now() - Duration::from_millis(20);
+        b.push_at(req(1, 8), old).unwrap();
+        let fb = b.form(Instant::now()).expect("lone oversized prompt admits");
+        assert_eq!(fb.requests.len(), 1);
+        // but a second one defers until the first retires
+        b.push_at(req(2, 8), old).unwrap();
+        assert!(b.form(Instant::now()).is_none());
+        b.tier_free(&[1]);
+        assert!(b.form(Instant::now()).is_some());
+    }
+
+    #[test]
+    fn busy_formats_and_downcasts_through_anyhow() {
+        let e = anyhow::Error::new(Busy { reason: "queue-full", queued: 3 });
+        assert_eq!(e.to_string(), "busy (queue-full): 3 prefills queued");
+        assert_eq!(e.downcast_ref::<Busy>().unwrap().queued, 3);
     }
 }

@@ -41,9 +41,10 @@
 //! engine.shutdown();
 //! ```
 
-use super::batcher::{smallest_fitting_bucket, Batcher, FormedBatch, Request};
+use super::batcher::{smallest_fitting_bucket, Batcher, Busy, FormedBatch, Request};
 use super::consistency::TicketCounter;
 use super::drafter::{Drafter, DrafterHandle, NGramDrafter};
+use super::fault::FaultPlan;
 use super::rpc::{CommandBus, Phase, RRef};
 use super::worker::{ActMsg, Reply, Worker, WorkerCtx};
 use crate::comm::channel::{CommWorld, Mode};
@@ -56,7 +57,7 @@ use crate::memory::{LayerProvider, ResidentProvider};
 use crate::metrics::Recorder;
 use crate::model::{shard_layer, ModelWeights};
 use crate::runtime::{Device, Manifest};
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
@@ -186,6 +187,35 @@ impl LaunchConfig {
         self.engine.kv_host_blocks = host_blocks;
         self
     }
+
+    /// Load shedding: cap the queued-prefill depth (`max_queue_depth`,
+    /// 0 = unbounded) and bound admitted-but-unfinished KV positions
+    /// (`token_budget`, 0 = unlimited). Past the depth cap `submit` /
+    /// `generate_stream` return a structured [`Busy`] error instead of
+    /// queueing; past the budget new prefills defer inside the former.
+    pub fn with_admission(mut self, max_queue_depth: usize, token_budget: usize) -> Self {
+        self.engine.max_queue_depth = max_queue_depth;
+        self.engine.admission_token_budget = token_budget;
+        self
+    }
+
+    /// SLO targets for TTFT / TPOT in milliseconds (0 disables either).
+    /// Violations feed a rolling window; sustained pressure tightens the
+    /// admission cap so the engine sheds before latency collapses.
+    pub fn with_slo(mut self, ttft_ms: u64, tpot_ms: u64) -> Self {
+        self.engine.slo_ttft_ms = ttft_ms;
+        self.engine.slo_tpot_ms = tpot_ms;
+        self
+    }
+
+    /// Chaos fault injection: a seeded [`FaultPlan`] spec (see
+    /// `coordinator::fault`) applied at every worker's reply boundary.
+    /// Empty spec = no faults. The plan is validated at launch.
+    pub fn with_faults(mut self, plan: &str, seed: u64) -> Self {
+        self.engine.fault_plan = plan.to_string();
+        self.engine.fault_seed = seed;
+        self
+    }
 }
 
 /// Paging granularity every worker's cache and the engine-side tier
@@ -221,9 +251,23 @@ struct GenState {
     /// `next()` read cursor into `toks`.
     read: usize,
     done: bool,
+    /// The client abandoned the session ([`GenRef::cancel`], or a TCP
+    /// disconnect detected by the server). Terminal like `done`, but
+    /// distinguishable so callers can tell "cancelled" from "failed".
+    cancelled: bool,
     /// Failure message, surfaced by `next()`/`to_here()` after any
     /// already-streamed tokens are drained.
     err: Option<String>,
+}
+
+/// How a [`GenRef::cancel`] reaches the engine: the session id plus a
+/// weak handle on the engine's cancellation inbox (weak so a `GenRef`
+/// held past `shutdown` never keeps engine state alive, and a cancel
+/// after teardown is a silent no-op).
+#[derive(Clone)]
+struct CancelHook {
+    id: u64,
+    inbox: std::sync::Weak<Mutex<Vec<u64>>>,
 }
 
 /// Streaming future for one generation session. The collector appends
@@ -234,6 +278,9 @@ struct GenState {
 pub struct GenRef {
     prompt: Arc<Vec<i32>>,
     inner: Arc<(Mutex<GenState>, Condvar)>,
+    /// Engine-side cancellation route, attached by `generate_stream`
+    /// (absent on bare test `GenRef`s — cancel then just ends the stream).
+    hook: Arc<Mutex<Option<CancelHook>>>,
 }
 
 impl GenRef {
@@ -241,24 +288,70 @@ impl GenRef {
         GenRef {
             prompt: Arc::new(prompt),
             inner: Arc::new((Mutex::new(GenState::default()), Condvar::new())),
+            hook: Arc::new(Mutex::new(None)),
         }
     }
 
-    /// Collector side: one more sampled token is available.
+    fn set_cancel_hook(&self, id: u64, inbox: std::sync::Weak<Mutex<Vec<u64>>>) {
+        *self.hook.lock().unwrap() = Some(CancelHook { id, inbox });
+    }
+
+    /// Collector side: one more sampled token is available. Tokens sampled
+    /// by a step already in flight when the session was cancelled are
+    /// dropped — the stream is terminal from the client's point of view.
     fn push_token(&self, t: i32) {
         let (m, cv) = &*self.inner;
-        m.lock().unwrap().toks.push(t);
+        let mut g = m.lock().unwrap();
+        if g.done {
+            return;
+        }
+        g.toks.push(t);
         cv.notify_all();
     }
 
     /// Collector side: the session ended (stop token, budget, context
-    /// limit, or an error).
+    /// limit, or an error). The first terminal state wins: a finish that
+    /// races a cancel keeps the cancel's verdict.
     fn finish(&self, res: anyhow::Result<()>) {
         let (m, cv) = &*self.inner;
         let mut g = m.lock().unwrap();
+        if g.done {
+            return;
+        }
         g.done = true;
         g.err = res.err().map(|e| format!("{e:#}"));
         cv.notify_all();
+    }
+
+    /// Client side: abandon the session. The stream ends immediately with
+    /// a "cancelled" error; the engine purges the session from the batch
+    /// queue (or evicts it at the next collector step if a batch is in
+    /// flight) and frees its K/V blocks on every worker by ticketed
+    /// command — no leak, no further decode work. Idempotent; a cancel
+    /// after natural completion is a no-op.
+    pub fn cancel(&self) {
+        {
+            let (m, cv) = &*self.inner;
+            let mut g = m.lock().unwrap();
+            if g.done {
+                return;
+            }
+            g.done = true;
+            g.cancelled = true;
+            g.err = Some("cancelled".to_string());
+            cv.notify_all();
+        }
+        let hook = self.hook.lock().unwrap().clone();
+        if let Some(h) = hook {
+            if let Some(inbox) = h.inbox.upgrade() {
+                inbox.lock().unwrap().push(h.id);
+            }
+        }
+    }
+
+    /// Did the session end by cancellation (vs. completing or failing)?
+    pub fn is_cancelled(&self) -> bool {
+        self.inner.0.lock().unwrap().cancelled
     }
 
     /// Block for the next streamed token. `Ok(None)` means the session
@@ -382,6 +475,13 @@ struct Shared {
     /// verify windows whenever a compiled k fits the session's remaining
     /// budget and context (plain decode otherwise).
     spec: Option<SpecShared>,
+    /// Cancellation inbox: ids pushed by [`GenRef::cancel`] (client side
+    /// or server disconnect), drained by the former on every tick.
+    cancels: Arc<Mutex<Vec<u64>>>,
+    /// Cancelled sessions whose current step is in flight: evicted at the
+    /// next collector boundary, so the ticketed K/V free always lands
+    /// *after* that step's cache writes on every worker.
+    doomed: Mutex<HashSet<u64>>,
 }
 
 impl Shared {
@@ -413,6 +513,17 @@ impl Shared {
         if self.kv_on && !ids.is_empty() {
             let uid = self.tickets.issue();
             self.bus.publish_release(uid, ids);
+        }
+    }
+
+    /// Free *cancelled* sessions' K/V blocks on every worker. Same
+    /// ticketed-after-the-last-step contract as [`Shared::release_sessions`],
+    /// but published as a distinct `Cancel` command so workers (and fault
+    /// plans / logs) can tell an abandonment from a natural completion.
+    fn cancel_sessions(&self, ids: Vec<u64>) {
+        if self.kv_on && !ids.is_empty() {
+            let uid = self.tickets.issue();
+            self.bus.publish_cancel(uid, ids);
         }
     }
 
@@ -527,6 +638,10 @@ impl Engine {
             );
         }
         let spill_on = kv_on && launch.engine.kv_spill;
+        // chaos fault plan (empty spec parses to the no-fault default):
+        // validated here so a bad spec is a launch error, not a worker
+        // panic mid-traffic
+        let faults = FaultPlan::parse(&launch.engine.fault_plan, launch.engine.fault_seed)?;
 
         let world = par.world_size();
         let (bus, cmd_rxs) = CommandBus::new(world);
@@ -557,6 +672,7 @@ impl Engine {
                         _ => 1,
                     },
                     kv_cache: kv_on,
+                    faults: faults.clone(),
                 };
                 // paged per-session K/V storage for this worker's layer
                 // shard: width is hidden/tp (the shard's K or V row);
@@ -626,12 +742,17 @@ impl Engine {
             }
         }
 
+        let mut recorder = Recorder::new();
+        recorder.set_slo(
+            Duration::from_millis(launch.engine.slo_ttft_ms),
+            Duration::from_millis(launch.engine.slo_tpot_ms),
+        );
         let shared = Arc::new(Shared {
             bus,
             tickets: TicketCounter::new(),
             pending: Mutex::new(HashMap::new()),
             sessions: Mutex::new(HashMap::new()),
-            metrics: Mutex::new(Recorder::new()),
+            metrics: Mutex::new(recorder),
             stopping: AtomicBool::new(false),
             kv_on,
             spec: spec_on.then(|| SpecShared {
@@ -643,6 +764,8 @@ impl Engine {
                 ks: spec_ks,
                 vocab: cfg.vocab as i32,
             }),
+            cancels: Arc::new(Mutex::new(Vec::new())),
+            doomed: Mutex::new(HashSet::new()),
         });
 
         // ---- batcher ---------------------------------------------------------
@@ -652,7 +775,8 @@ impl Engine {
             Duration::from_micros(launch.engine.batch_timeout_us),
         )
         .with_decode_widths(decode_widths)
-        .with_verify_points(verify_points);
+        .with_verify_points(verify_points)
+        .with_admission(launch.engine.max_queue_depth, launch.engine.admission_token_budget);
         if spill_on {
             // the engine-side residency model: form() becomes the
             // admission gate and spill/prefetch decision point
@@ -708,6 +832,10 @@ impl Engine {
                         break;
                     }
                     let _ = batch_rx.recv_timeout(tick);
+                    // cancellations first: purging a dead client's queued
+                    // step before forming means the batch it would have
+                    // ridden in is never built, so no decode work is wasted
+                    process_cancels(&shared, &batcher);
                     loop {
                         let (fb, tier_cmds) = {
                             let mut b = batcher.lock().unwrap();
@@ -788,7 +916,11 @@ impl Engine {
         anyhow::ensure!(req.max_new_tokens >= 1, "max_new_tokens must be >= 1");
         let id = self.next_req_id.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
         let gref = GenRef::new(req.tokens.clone());
+        gref.set_cancel_hook(id, Arc::downgrade(&self.shared.cancels));
         let now = Instant::now();
+        // sustained SLO violations tighten the admission cap (shed early
+        // rather than queue into latency collapse)
+        let pressure = self.shared.metrics.lock().unwrap().under_pressure();
         self.shared.sessions.lock().unwrap().insert(
             id,
             Session {
@@ -800,8 +932,13 @@ impl Engine {
                 gref: gref.clone(),
             },
         );
-        if let Err(e) = self.batcher.lock().unwrap().push_at(Request::new(id, req.tokens), now) {
+        if let Err(e) =
+            self.batcher.lock().unwrap().admit(Request::new(id, req.tokens), now, pressure)
+        {
             self.shared.sessions.lock().unwrap().remove(&id);
+            if e.downcast_ref::<Busy>().is_some() {
+                self.shared.metrics.lock().unwrap().record_shed();
+            }
             return Err(e);
         }
         let _ = self.batch_signal.send(());
@@ -939,6 +1076,9 @@ fn collector_loop(
                     let mut staged: Vec<(u64, Vec<i32>, usize, Instant)> = Vec::new();
                     // finished sessions whose worker-side K/V blocks can go
                     let mut released: Vec<u64> = Vec::new();
+                    // cancelled mid-generation: evicted here, freed by a
+                    // distinct ticketed Cancel command
+                    let mut cancelled: Vec<u64> = Vec::new();
                     // (is_first, latency) per emitted token, recorded after
                     // the sessions lock drops (one metrics lock per batch)
                     let mut token_lats: Vec<(bool, Duration)> = Vec::new();
@@ -946,7 +1086,20 @@ fn collector_loop(
                     let mut spec_rows: Vec<(u64, u64, u64)> = Vec::new();
                     {
                         let mut sessions = shared.sessions.lock().unwrap();
+                        let mut doomed = shared.doomed.lock().unwrap();
                         for (i, row) in rows.into_iter().enumerate() {
+                            // a session cancelled while this step was in
+                            // flight is evicted at this boundary: its K/V
+                            // free (ticketed below) lands after the step's
+                            // cache writes on every worker, and the row's
+                            // token is dropped (push_token is a no-op once
+                            // the stream is terminal)
+                            if doomed.remove(&row.id) {
+                                if sessions.remove(&row.id).is_some() {
+                                    cancelled.push(row.id);
+                                }
+                                continue;
+                            }
                             let sess = match sessions.get_mut(&row.id) {
                                 Some(s) => s,
                                 None => continue, // session already failed/expired
@@ -1034,6 +1187,7 @@ fn collector_loop(
                         // drain must not observe an empty table before the
                         // release command is on every worker's queue
                         shared.release_sessions(released.clone());
+                        shared.cancel_sessions(cancelled.clone());
                     }
                     if !token_lats.is_empty() || !spec_rows.is_empty() {
                         let mut m = shared.metrics.lock().unwrap();
@@ -1065,11 +1219,12 @@ fn collector_loop(
                             (req, arrived)
                         })
                         .collect();
-                    if !continuations.is_empty() || !released.is_empty() {
+                    if !continuations.is_empty() || !released.is_empty() || !cancelled.is_empty() {
                         let mut b = batcher.lock().unwrap();
                         // tier model: freed sessions credit their blocks
                         // (freed capacity may admit a deferred prefill)
                         b.tier_free(&released);
+                        b.tier_free(&cancelled);
                         // reversed so batch row order survives the
                         // front-pushes (decode priority); requeue_front
                         // also cold-marks each session in the tier model
@@ -1086,7 +1241,10 @@ fn collector_loop(
                     let mut released = Vec::new();
                     {
                         let mut sessions = shared.sessions.lock().unwrap();
+                        let mut doomed = shared.doomed.lock().unwrap();
                         for row in &rows {
+                            // a failed batch retires its doomed rows too
+                            doomed.remove(&row.id);
                             if let Some(sess) = sessions.remove(&row.id) {
                                 sess.gref.finish(Err(anyhow::anyhow!("{e}")));
                                 released.push(row.id);
@@ -1143,6 +1301,55 @@ fn continuation_request(
         }
     }
     Request::decode(id, toks)
+}
+
+/// Drain the cancellation inbox (former tick). For every cancelled id:
+/// if its next step is still *queued*, purge it from the batcher, drop
+/// the session, and free its K/V blocks right away by ticketed `Cancel`
+/// command (the ticket is issued after the session's last completed
+/// step, so the consistency queue guarantees the free lands after its
+/// writes). If its step is *in flight*, mark it doomed — the collector
+/// evicts it at the batch boundary instead, because a free published now
+/// could race the in-flight forward's cache writes on a worker that has
+/// not executed the batch yet. Ids that match no live session (already
+/// finished, failed, or expired) are dropped silently — cancel is a
+/// no-op after the fact.
+fn process_cancels(shared: &Shared, batcher: &Mutex<Batcher>) {
+    let fresh: Vec<u64> = {
+        let mut inbox = shared.cancels.lock().unwrap();
+        if inbox.is_empty() {
+            return;
+        }
+        std::mem::take(&mut *inbox)
+    };
+    let mut b = batcher.lock().unwrap();
+    let mut purged: Vec<u64> = Vec::new();
+    let mut n_cancelled = 0u64;
+    {
+        let mut sessions = shared.sessions.lock().unwrap();
+        let mut doomed = shared.doomed.lock().unwrap();
+        for id in fresh {
+            if b.purge(id) {
+                if sessions.remove(&id).is_some() {
+                    n_cancelled += 1;
+                }
+                purged.push(id);
+            } else if sessions.contains_key(&id) && doomed.insert(id) {
+                n_cancelled += 1;
+            }
+        }
+        // under the sessions lock, like every other release publication:
+        // shutdown's drain must not observe an empty table before the
+        // free is on every worker's queue
+        shared.cancel_sessions(purged.clone());
+    }
+    // tier model: purged sessions' blocks (either tier) are free, and
+    // their admission-ledger tokens retire
+    b.tier_free(&purged);
+    drop(b);
+    if n_cancelled > 0 {
+        shared.metrics.lock().unwrap().record_cancelled(n_cancelled);
+    }
 }
 
 /// Watchdog: periodically fail in-flight batches older than `deadline`.
@@ -1233,7 +1440,10 @@ fn expire_stale(
             let mut released = Vec::new();
             {
                 let mut sessions = shared.sessions.lock().unwrap();
+                let mut doomed = shared.doomed.lock().unwrap();
                 for row in &p.rows {
+                    // watchdog-killed sessions retire their doomed marks
+                    doomed.remove(&row.id);
                     if let Some(sess) = sessions.remove(&row.id) {
                         sess.gref.finish(Err(anyhow::anyhow!("{msg}")));
                         released.push(row.id);
@@ -1447,7 +1657,164 @@ mod tests {
             stopping: AtomicBool::new(false),
             kv_on: true,
             spec: None,
+            cancels: Arc::new(Mutex::new(Vec::new())),
+            doomed: Mutex::new(HashSet::new()),
         }
+    }
+
+    fn test_session(gref: &GenRef, prompt_len: usize, max_new: usize) -> Session {
+        let now = Instant::now();
+        Session {
+            prompt_len,
+            max_new,
+            stop: None,
+            arrived: now,
+            last_at: now,
+            gref: gref.clone(),
+        }
+    }
+
+    #[test]
+    fn cancel_is_terminal_and_idempotent() {
+        let g = GenRef::new(vec![1]);
+        g.push_token(7);
+        g.cancel();
+        assert!(g.is_done());
+        assert!(g.is_cancelled());
+        // buffered tokens drain, then the cancelled error surfaces
+        assert_eq!(g.next().unwrap(), Some(7));
+        assert!(g.next().unwrap_err().to_string().contains("cancelled"));
+        // late collector traffic is dropped, a second cancel is a no-op
+        g.push_token(8);
+        g.finish(Ok(()));
+        g.cancel();
+        assert_eq!(g.n_generated(), 1);
+        assert!(g.is_cancelled());
+        // cancel after natural completion does not rewrite the verdict
+        let done = GenRef::new(vec![1]);
+        done.finish(Ok(()));
+        done.cancel();
+        assert!(!done.is_cancelled());
+        assert!(done.to_here().is_ok());
+    }
+
+    #[test]
+    fn cancel_routes_through_the_hook_once() {
+        let inbox = Arc::new(Mutex::new(Vec::new()));
+        let g = GenRef::new(vec![1]);
+        g.set_cancel_hook(42, Arc::downgrade(&inbox));
+        g.cancel();
+        g.cancel();
+        assert_eq!(*inbox.lock().unwrap(), vec![42]);
+        // a hook outliving its engine is a silent no-op
+        let g2 = GenRef::new(vec![1]);
+        g2.set_cancel_hook(43, Arc::downgrade(&inbox));
+        drop(inbox);
+        g2.cancel();
+        assert!(g2.is_cancelled());
+    }
+
+    /// A cancelled session whose step is queued is purged immediately
+    /// (session dropped, ledger retired); one whose step is in flight is
+    /// doomed and evicted at the next collector boundary instead.
+    #[test]
+    fn process_cancels_purges_queued_and_dooms_in_flight() {
+        let shared = test_shared();
+        let batcher = Mutex::new(Batcher::new(vec![(4, 16)], 4, Duration::from_millis(10)));
+        let queued = GenRef::new(vec![1, 2]);
+        let inflight = GenRef::new(vec![3, 4]);
+        {
+            let mut sessions = shared.sessions.lock().unwrap();
+            sessions.insert(1, test_session(&queued, 2, 4));
+            sessions.insert(2, test_session(&inflight, 2, 4));
+        }
+        // session 1 queued; session 2's step rides an in-flight batch
+        batcher.lock().unwrap().push_at(Request::new(1, vec![1, 2]), Instant::now()).unwrap();
+        queued.cancel();
+        inflight.cancel();
+        {
+            let mut inbox = shared.cancels.lock().unwrap();
+            inbox.push(1);
+            inbox.push(2);
+        }
+        process_cancels(&shared, &batcher);
+        assert_eq!(batcher.lock().unwrap().pending(), 0, "queued step purged");
+        let sessions = shared.sessions.lock().unwrap();
+        assert!(!sessions.contains_key(&1), "purged session dropped");
+        assert!(sessions.contains_key(&2), "in-flight session waits for the boundary");
+        drop(sessions);
+        assert!(shared.doomed.lock().unwrap().contains(&2));
+        assert_eq!(shared.metrics.lock().unwrap().cancelled(), 2);
+        // an id matching no live session is dropped silently
+        shared.cancels.lock().unwrap().push(99);
+        process_cancels(&shared, &batcher);
+        assert_eq!(shared.metrics.lock().unwrap().cancelled(), 2);
+        assert!(shared.doomed.lock().unwrap().contains(&2));
+    }
+
+    /// The watchdog head-cascade crossed with the spill tier (satellite):
+    /// a poisoned batch whose sessions live on *different tiers* — one
+    /// device-resident, one spilled to host — must credit `tier_free`
+    /// exactly once per session: both tiers drain to zero, and a repeat
+    /// scan (or a late reply, which gates on the now-empty sessions map)
+    /// cannot double-credit.
+    #[test]
+    fn watchdog_cascade_credits_spilled_sessions_exactly_once() {
+        let shared = test_shared();
+        let g9 = GenRef::new(vec![1, 2]);
+        let g10 = GenRef::new(vec![3, 4]);
+        {
+            let mut sessions = shared.sessions.lock().unwrap();
+            sessions.insert(9, test_session(&g9, 2, 4));
+            sessions.insert(10, test_session(&g10, 2, 4));
+        }
+        let rref = RRef::new(0);
+        shared.pending.lock().unwrap().insert(
+            0,
+            Pending {
+                rref: rref.clone(),
+                rows: vec![Request::decode(9, vec![1, 2]), Request::decode(10, vec![3, 4])],
+                from_batcher: true,
+            },
+        );
+        // a one-block device tier: admitting 10 spills cold 9 to host
+        let batcher = Mutex::new(
+            Batcher::new(vec![(1, 16)], 4, Duration::from_millis(10))
+                .with_decode_widths(vec![1])
+                .with_tier(TierPolicy::new(TierConfig::new(1, 8), 8)),
+        );
+        {
+            let mut b = batcher.lock().unwrap();
+            let t = b.tier_mut().unwrap();
+            t.gate_decode(&[(9, 2)]);
+            t.on_requeue(9);
+            t.gate_decode(&[(10, 4)]);
+            assert_eq!(t.is_resident(9), Some(false), "9 spilled to host");
+            assert_eq!(t.is_resident(10), Some(true), "10 on device");
+            assert_eq!(t.session_count(), 2);
+            assert!(t.host_used() > 0);
+        }
+        let mut head = None;
+        assert_eq!(expire_stale(&shared, &batcher, Duration::from_secs(3600), &mut head), 0);
+        std::thread::sleep(Duration::from_millis(2));
+        assert_eq!(expire_stale(&shared, &batcher, Duration::ZERO, &mut head), 1);
+        {
+            let b = batcher.lock().unwrap();
+            let t = b.tier().unwrap();
+            assert_eq!(t.session_count(), 0, "both sessions credited");
+            assert_eq!(t.device_used(), 0, "device tier drained");
+            assert_eq!(t.host_used(), 0, "host tier drained");
+        }
+        assert!(rref.to_here().is_err());
+        assert!(g9.to_here().is_err());
+        assert!(g10.to_here().is_err());
+        assert!(shared.sessions.lock().unwrap().is_empty());
+        // exactly once: a repeat scan finds nothing to credit and the
+        // tier gauges stay at zero (no double free, no underflow)
+        assert_eq!(expire_stale(&shared, &batcher, Duration::ZERO, &mut head), 0);
+        let b = batcher.lock().unwrap();
+        assert_eq!(b.tier().unwrap().session_count(), 0);
+        assert_eq!(b.tier().unwrap().host_used(), 0);
     }
 
     #[test]

@@ -1,0 +1,301 @@
+//! Chaos fault injection: a seeded, config-driven plan that perturbs
+//! worker replies for chosen tickets, so the failure machinery the
+//! coordinator carries around — the collector watchdog's poison/cascade
+//! path, the spill-tier anomaly counters, shutdown drain under wedged
+//! batches — is deterministically testable instead of dead code.
+//!
+//! A [`FaultPlan`] is parsed from a compact spec string
+//! (`engine.fault_plan` in the config file / `LaunchConfig::with_faults`)
+//! and consulted by every worker at the reply boundary of each `Forward`
+//! ticket. Grammar: comma-separated directives, each
+//!
+//! ```text
+//! <kind>@<selector>[@w<rank>]
+//!
+//! kind:      delay<N>ms | delay<N>us   sleep before replying (a stalled
+//!                                      worker; the batch completes late)
+//!            drop                      execute but never reply (a wedged
+//!                                      worker; the watchdog must poison)
+//!            panic                     reply with an injected error (a
+//!                                      crashed worker; the collector's
+//!                                      error path fails the batch)
+//! selector:  t<N>                      exactly ticket N
+//!            t<A>..<B>                 tickets A..=B
+//!            every<M>+<K>              tickets where ticket % M == K
+//!            p<F>                      probability F per ticket, decided
+//!                                      by a hash of (plan seed, ticket) —
+//!                                      reproducible across runs and
+//!                                      identical on every worker
+//! ```
+//!
+//! Examples: `delay5ms@t3`, `drop@t7@w0`, `panic@every16+5`,
+//! `delay250us@p0.1`. Faults are keyed by the consistency-queue ticket, so
+//! the same plan hits the same logical batch on every run of a seeded
+//! workload — and because every worker evaluates the same pure function,
+//! an unscoped directive perturbs all ranks coherently while `@w<rank>`
+//! confines it to one (the asymmetric case the watchdog exists for).
+
+use std::time::Duration;
+
+/// What to do to one worker's handling of one ticket.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Sleep this long before replying.
+    Delay(Duration),
+    /// Execute but suppress the reply entirely (watchdog path).
+    Drop,
+    /// Replace the reply with an injected error (crash path).
+    Panic,
+}
+
+/// Which tickets a directive selects.
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum Select {
+    Exact(u64),
+    Range(u64, u64),
+    Every { modulo: u64, phase: u64 },
+    Prob(f64),
+}
+
+impl Select {
+    fn hits(&self, seed: u64, ticket: u64) -> bool {
+        match *self {
+            Select::Exact(n) => ticket == n,
+            Select::Range(a, b) => (a..=b).contains(&ticket),
+            Select::Every { modulo, phase } => ticket % modulo == phase,
+            Select::Prob(p) => hash01(seed, ticket) < p,
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+struct Directive {
+    kind: FaultKind,
+    sel: Select,
+    /// Restrict to one worker's world rank (`stage * tp + tp_rank`);
+    /// `None` hits every rank.
+    worker: Option<usize>,
+}
+
+/// A parsed, immutable fault schedule. The empty plan (default) is free:
+/// workers skip the lookup entirely.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultPlan {
+    seed: u64,
+    directives: Vec<Directive>,
+}
+
+/// splitmix64-style hash of (seed, ticket) folded into [0, 1) — the
+/// probabilistic selector's coin, identical on every worker.
+fn hash01(seed: u64, ticket: u64) -> f64 {
+    let mut z = seed ^ ticket.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^= z >> 31;
+    (z >> 11) as f64 / (1u64 << 53) as f64
+}
+
+impl FaultPlan {
+    /// Parse a spec string (see module docs). The empty string is the
+    /// empty plan. `seed` drives only the `p<F>` selectors.
+    pub fn parse(spec: &str, seed: u64) -> anyhow::Result<FaultPlan> {
+        let mut directives = Vec::new();
+        for entry in spec.split(',').map(str::trim).filter(|e| !e.is_empty()) {
+            directives.push(parse_directive(entry)?);
+        }
+        Ok(FaultPlan { seed, directives })
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.directives.is_empty()
+    }
+
+    /// The fault (if any) this worker must apply to this ticket. First
+    /// matching directive wins.
+    pub fn action(&self, worker_rank: usize, ticket: u64) -> Option<FaultKind> {
+        self.directives
+            .iter()
+            .find(|d| d.worker.map_or(true, |w| w == worker_rank) && d.sel.hits(self.seed, ticket))
+            .map(|d| d.kind)
+    }
+}
+
+fn parse_directive(entry: &str) -> anyhow::Result<Directive> {
+    let mut parts = entry.split('@');
+    let kind_s = parts.next().unwrap_or("");
+    let sel_s = parts.next();
+    let worker_s = parts.next();
+    anyhow::ensure!(
+        parts.next().is_none(),
+        "fault directive {entry:?}: too many '@' segments (kind@selector[@w<rank>])"
+    );
+
+    let kind = if kind_s == "drop" {
+        FaultKind::Drop
+    } else if kind_s == "panic" {
+        FaultKind::Panic
+    } else if let Some(d) = kind_s.strip_prefix("delay") {
+        let (num, unit): (&str, fn(u64) -> Duration) = if let Some(n) = d.strip_suffix("ms") {
+            (n, Duration::from_millis)
+        } else if let Some(n) = d.strip_suffix("us") {
+            (n, Duration::from_micros)
+        } else {
+            anyhow::bail!("fault directive {entry:?}: delay needs a ms/us suffix (e.g. delay5ms)");
+        };
+        let n: u64 = num
+            .parse()
+            .map_err(|_| anyhow::anyhow!("fault directive {entry:?}: bad delay amount {num:?}"))?;
+        FaultKind::Delay(unit(n))
+    } else {
+        anyhow::bail!("fault directive {entry:?}: kind must be delay<N>ms|delay<N>us|drop|panic");
+    };
+
+    let sel_s = sel_s
+        .ok_or_else(|| anyhow::anyhow!("fault directive {entry:?}: missing @<selector>"))?;
+    let sel = parse_select(entry, sel_s)?;
+
+    let worker = match worker_s {
+        None => None,
+        Some(w) => {
+            let rank = w
+                .strip_prefix('w')
+                .and_then(|r| r.parse::<usize>().ok())
+                .ok_or_else(|| {
+                    anyhow::anyhow!("fault directive {entry:?}: worker scope must be w<rank>")
+                })?;
+            Some(rank)
+        }
+    };
+    Ok(Directive { kind, sel, worker })
+}
+
+fn parse_select(entry: &str, sel: &str) -> anyhow::Result<Select> {
+    if let Some(t) = sel.strip_prefix('t') {
+        if let Some((a, b)) = t.split_once("..") {
+            let a: u64 = a
+                .parse()
+                .map_err(|_| anyhow::anyhow!("fault directive {entry:?}: bad range start"))?;
+            let b: u64 = b
+                .parse()
+                .map_err(|_| anyhow::anyhow!("fault directive {entry:?}: bad range end"))?;
+            anyhow::ensure!(a <= b, "fault directive {entry:?}: range start > end");
+            return Ok(Select::Range(a, b));
+        }
+        let n: u64 = t
+            .parse()
+            .map_err(|_| anyhow::anyhow!("fault directive {entry:?}: bad ticket number"))?;
+        return Ok(Select::Exact(n));
+    }
+    if let Some(e) = sel.strip_prefix("every") {
+        let (m, k) = e.split_once('+').ok_or_else(|| {
+            anyhow::anyhow!("fault directive {entry:?}: every selector is every<M>+<K>")
+        })?;
+        let m: u64 =
+            m.parse().map_err(|_| anyhow::anyhow!("fault directive {entry:?}: bad modulo"))?;
+        let k: u64 =
+            k.parse().map_err(|_| anyhow::anyhow!("fault directive {entry:?}: bad phase"))?;
+        anyhow::ensure!(m >= 1 && k < m, "fault directive {entry:?}: need M >= 1 and K < M");
+        return Ok(Select::Every { modulo: m, phase: k });
+    }
+    if let Some(p) = sel.strip_prefix('p') {
+        let p: f64 = p
+            .parse()
+            .map_err(|_| anyhow::anyhow!("fault directive {entry:?}: bad probability"))?;
+        anyhow::ensure!((0.0..=1.0).contains(&p), "fault directive {entry:?}: p out of [0,1]");
+        return Ok(Select::Prob(p));
+    }
+    anyhow::bail!("fault directive {entry:?}: selector must be t<N>|t<A>..<B>|every<M>+<K>|p<F>")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_plan_never_fires() {
+        let p = FaultPlan::parse("", 1).unwrap();
+        assert!(p.is_empty());
+        for t in 0..100 {
+            assert_eq!(p.action(0, t), None);
+        }
+        assert_eq!(FaultPlan::default(), p);
+    }
+
+    #[test]
+    fn exact_range_and_modular_selectors() {
+        let p = FaultPlan::parse("drop@t7, panic@t10..12, delay5ms@every8+3", 0).unwrap();
+        assert_eq!(p.action(0, 7), Some(FaultKind::Drop));
+        assert_eq!(p.action(3, 7), Some(FaultKind::Drop), "unscoped hits every rank");
+        assert_eq!(p.action(0, 8), None);
+        for t in 10..=12 {
+            assert_eq!(p.action(1, t), Some(FaultKind::Panic));
+        }
+        assert_eq!(p.action(1, 13), None);
+        assert_eq!(p.action(0, 3), Some(FaultKind::Delay(Duration::from_millis(5))));
+        assert_eq!(p.action(0, 11 + 8), Some(FaultKind::Delay(Duration::from_millis(5))));
+        assert_eq!(p.action(0, 4), None);
+    }
+
+    #[test]
+    fn worker_scope_confines_the_fault() {
+        let p = FaultPlan::parse("drop@t5@w1", 0).unwrap();
+        assert_eq!(p.action(1, 5), Some(FaultKind::Drop));
+        assert_eq!(p.action(0, 5), None);
+        assert_eq!(p.action(2, 5), None);
+    }
+
+    #[test]
+    fn first_match_wins() {
+        let p = FaultPlan::parse("panic@t4, drop@every2+0", 0).unwrap();
+        assert_eq!(p.action(0, 4), Some(FaultKind::Panic));
+        assert_eq!(p.action(0, 6), Some(FaultKind::Drop));
+    }
+
+    #[test]
+    fn probabilistic_selector_is_seeded_and_rank_coherent() {
+        let p = FaultPlan::parse("drop@p0.25", 42).unwrap();
+        let hits: Vec<u64> = (0..400).filter(|&t| p.action(0, t).is_some()).collect();
+        // ~25% fire, and the same set fires again (same seed, any rank)
+        assert!((50..150).contains(&hits.len()), "{} hits", hits.len());
+        let again: Vec<u64> = (0..400).filter(|&t| p.action(3, t).is_some()).collect();
+        assert_eq!(hits, again, "plan must be deterministic and rank-coherent");
+        // a different seed selects a different set
+        let q = FaultPlan::parse("drop@p0.25", 43).unwrap();
+        let other: Vec<u64> = (0..400).filter(|&t| q.action(0, t).is_some()).collect();
+        assert_ne!(hits, other);
+        // p0 never fires, p1 always fires
+        let never = FaultPlan::parse("drop@p0.0", 1).unwrap();
+        assert!((0..100).all(|t| never.action(0, t).is_none()));
+        let always = FaultPlan::parse("drop@p1.0", 1).unwrap();
+        assert!((0..100).all(|t| always.action(0, t).is_some()));
+    }
+
+    #[test]
+    fn delay_units_parse() {
+        let p = FaultPlan::parse("delay250us@t1", 0).unwrap();
+        assert_eq!(p.action(0, 1), Some(FaultKind::Delay(Duration::from_micros(250))));
+        let p = FaultPlan::parse("delay2ms@t1", 0).unwrap();
+        assert_eq!(p.action(0, 1), Some(FaultKind::Delay(Duration::from_millis(2))));
+    }
+
+    #[test]
+    fn malformed_specs_are_errors() {
+        for bad in [
+            "explode@t1",
+            "delay@t1",
+            "delay5@t1",
+            "delayxms@t1",
+            "drop",
+            "drop@x3",
+            "drop@t1..0",
+            "drop@every0+0",
+            "drop@every4+4",
+            "drop@p1.5",
+            "drop@pabc",
+            "drop@t1@q2",
+            "drop@t1@w2@extra",
+        ] {
+            assert!(FaultPlan::parse(bad, 0).is_err(), "{bad:?} should not parse");
+        }
+    }
+}

@@ -17,10 +17,12 @@ pub mod batcher;
 pub mod consistency;
 pub mod drafter;
 pub mod engine;
+pub mod fault;
 pub mod rpc;
 pub mod worker;
 
-pub use batcher::{smallest_fitting_bucket, Batcher, Request};
+pub use batcher::{smallest_fitting_bucket, Batcher, Busy, Request};
+pub use fault::{FaultKind, FaultPlan};
 pub use consistency::{ConsistencyQueue, TicketCounter};
 pub use drafter::{Drafter, DrafterHandle, MisdraftDrafter, NGramDrafter, ReplayDrafter};
 pub use engine::{Engine, GenRef, GenRequest, LaunchConfig, MemoryMode, TokenRef};

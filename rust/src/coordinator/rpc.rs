@@ -104,6 +104,13 @@ pub enum Command {
     /// (whose copy time is the decode stall the lookahead exists to
     /// hide).
     Prefetch { uid: u64, ids: Arc<Vec<u64>>, hint: bool },
+    /// Cancellation propagation: free the listed sessions' K/V blocks on
+    /// both tiers because their clients disconnected mid-generation.
+    /// Worker-side this frees exactly like `Release`, but it is a
+    /// distinct command so cancellation traffic is observable; ticket
+    /// order guarantees the free lands after any in-flight forward that
+    /// still writes those sessions.
+    Cancel { uid: u64, ids: Arc<Vec<u64>> },
     /// Drain and exit the worker loop.
     Shutdown,
 }
@@ -158,6 +165,14 @@ impl CommandBus {
         let ids = Arc::new(ids);
         for s in &self.senders {
             let _ = s.send(Command::Prefetch { uid, ids: ids.clone(), hint });
+        }
+    }
+
+    /// Publish a cancellation release for disconnected sessions.
+    pub fn publish_cancel(&self, uid: u64, ids: Vec<u64>) {
+        let ids = Arc::new(ids);
+        for s in &self.senders {
+            let _ = s.send(Command::Cancel { uid, ids: ids.clone() });
         }
     }
 
@@ -295,6 +310,21 @@ mod tests {
                     assert!(hint);
                 }
                 _ => panic!("expected Prefetch"),
+            }
+        }
+    }
+
+    #[test]
+    fn cancel_reaches_all_workers() {
+        let (bus, rxs) = CommandBus::new(2);
+        bus.publish_cancel(6, vec![11, 12]);
+        for rx in &rxs {
+            match rx.recv().unwrap() {
+                Command::Cancel { uid, ids } => {
+                    assert_eq!(uid, 6);
+                    assert_eq!(*ids, vec![11, 12]);
+                }
+                _ => panic!("expected Cancel"),
             }
         }
     }

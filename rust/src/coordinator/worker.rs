@@ -6,6 +6,7 @@
 //! execution (§4.2).
 
 use super::consistency::ConsistencyQueue;
+use super::fault::{FaultKind, FaultPlan};
 use super::rpc::{BatchInput, BatchOutput, Command, Phase};
 use crate::comm::channel::Endpoint;
 use crate::comm::collective::{ring_allreduce, ChunkMsg};
@@ -47,6 +48,9 @@ pub struct WorkerCtx {
     /// Incremental decode via the paged K/V cache (requires the decode
     /// artifacts; the engine resolves availability at launch).
     pub kv_cache: bool,
+    /// Chaos fault schedule (empty by default): perturbs this worker's
+    /// handling of selected forward tickets at the reply boundary.
+    pub faults: FaultPlan,
 }
 
 impl WorkerCtx {
@@ -121,6 +125,7 @@ enum Act {
 enum Work {
     Forward(Arc<BatchInput>),
     Release(Arc<Vec<u64>>),
+    Cancel(Arc<Vec<u64>>),
     Spill(Arc<Vec<u64>>),
     Prefetch { ids: Arc<Vec<u64>>, hint: bool },
 }
@@ -137,8 +142,18 @@ impl Worker {
                 // order, which can differ across workers — exactly the
                 // mispairing hazard §4.2 describes.
                 match work {
-                    Work::Forward(input) => self.execute_logged(uid, &input),
-                    Work::Release(ids) => {
+                    Work::Forward(input) => {
+                        let fault = if self.ctx.faults.is_empty() {
+                            None
+                        } else {
+                            self.ctx.faults.action(self.ctx.device_id(), uid)
+                        };
+                        self.execute_faulted(uid, &input, fault);
+                    }
+                    // Cancel frees exactly like Release — the distinction
+                    // is observability: one is a finished session, the
+                    // other a disconnected client's
+                    Work::Release(ids) | Work::Cancel(ids) => {
                         if let Some(kv) = &mut self.kv {
                             for &id in ids.iter() {
                                 kv.free(id);
@@ -179,12 +194,56 @@ impl Worker {
             match self.cmd_rx.recv() {
                 Ok(Command::Forward { uid, input }) => queue.push(uid, (uid, Work::Forward(input))),
                 Ok(Command::Release { uid, ids }) => queue.push(uid, (uid, Work::Release(ids))),
+                Ok(Command::Cancel { uid, ids }) => queue.push(uid, (uid, Work::Cancel(ids))),
                 Ok(Command::Spill { uid, ids }) => queue.push(uid, (uid, Work::Spill(ids))),
                 Ok(Command::Prefetch { uid, ids, hint }) => {
                     queue.push(uid, (uid, Work::Prefetch { ids, hint }))
                 }
                 Ok(Command::Shutdown) | Err(_) => shutting_down = true,
             }
+        }
+    }
+
+    /// `execute_logged` with a chaos fault applied at the reply boundary.
+    /// The batch is always *executed* — skipping execution on one rank
+    /// would wedge the TP collectives and desynchronize every rank's K/V
+    /// state — so faults perturb only what the engine observes:
+    ///
+    /// * `Delay` sleeps before executing (a stalled worker: the reply and
+    ///   everything queued behind this ticket arrive late);
+    /// * `Drop` suppresses the reply (observable on the replier rank: the
+    ///   collector never hears back and the watchdog must poison the
+    ///   batch — scope multi-rank plans with `@w<rank>`);
+    /// * `Panic` replaces the reply with an injected error (the
+    ///   crashed-worker case: on the replier the collector's error path
+    ///   fails the batch; on other ranks it logs like any worker error).
+    fn execute_faulted(&mut self, uid: u64, input: &BatchInput, fault: Option<FaultKind>) {
+        if let Some(FaultKind::Delay(d)) = fault {
+            std::thread::sleep(d);
+        }
+        match fault {
+            Some(FaultKind::Drop) => {
+                let r = self.execute(uid, input);
+                eprintln!(
+                    "worker {}: injected reply drop for batch {uid} (execute {})",
+                    self.ctx.device_id(),
+                    if r.is_ok() { "ok" } else { "failed" },
+                );
+            }
+            Some(FaultKind::Panic) => {
+                let _ = self.execute(uid, input);
+                if self.ctx.is_replier() {
+                    let _ = self
+                        .reply_tx
+                        .send((uid, Err(anyhow::anyhow!("injected worker fault on batch {uid}"))));
+                } else {
+                    eprintln!(
+                        "worker {}: injected fault on batch {uid} (non-replier)",
+                        self.ctx.device_id(),
+                    );
+                }
+            }
+            _ => self.execute_logged(uid, input),
         }
     }
 
@@ -826,6 +885,7 @@ mod tests {
             consistency: true,
             lookahead: 1,
             kv_cache: false,
+            faults: FaultPlan::default(),
         };
         assert_eq!(ctx.device_id(), 2);
         assert!(ctx.is_last_stage());

@@ -38,9 +38,15 @@
 pub mod tier;
 
 use crate::memory::arena::ArenaPool;
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
 use tier::HostTier;
+
+/// How many recently-freed session ids each cache remembers to tell a
+/// true double release (a cancellation/watchdog race: freed again after
+/// being freed) apart from a benign unknown free (an error-path release
+/// for a batch this worker never executed).
+const FREED_RING: usize = 1024;
 
 /// Process-wide counters, aggregated across every worker's cache.
 /// `blocks_in_use`, `host_bytes` and `sessions*` are gauges; the rest are
@@ -81,6 +87,12 @@ pub struct KvStats {
     /// `free` calls for sessions this cache never held (error-path
     /// releases are legitimate but must be visible).
     pub free_unknown: u64,
+    /// `free`/`truncate_tail` calls for sessions this cache *recently
+    /// released* — a true double release (cancel racing the watchdog or
+    /// the collector), never legitimate. Counted in release builds,
+    /// debug-asserted in debug builds, and surfaced by the Recorder as a
+    /// `KVFREE-ANOMALY` marker CI greps for.
+    pub double_free: u64,
     /// Spills refused because the host tier ledger was full.
     pub spill_denied: u64,
     /// `truncate_tail` calls that actually shortened a session
@@ -109,6 +121,7 @@ static G_SESSIONS_SPILLED: AtomicU64 = AtomicU64::new(0);
 static G_PREFETCH_STALL_US: AtomicU64 = AtomicU64::new(0);
 static G_GATHER_SPILLED: AtomicU64 = AtomicU64::new(0);
 static G_FREE_UNKNOWN: AtomicU64 = AtomicU64::new(0);
+static G_DOUBLE_FREE: AtomicU64 = AtomicU64::new(0);
 static G_SPILL_DENIED: AtomicU64 = AtomicU64::new(0);
 static G_OVERFLOW: AtomicU64 = AtomicU64::new(0);
 static G_TRUNCATES: AtomicU64 = AtomicU64::new(0);
@@ -133,6 +146,7 @@ pub fn global_stats() -> KvStats {
         prefetch_stall_us: G_PREFETCH_STALL_US.load(Ordering::Relaxed),
         gather_spilled: G_GATHER_SPILLED.load(Ordering::Relaxed),
         free_unknown: G_FREE_UNKNOWN.load(Ordering::Relaxed),
+        double_free: G_DOUBLE_FREE.load(Ordering::Relaxed),
         spill_denied: G_SPILL_DENIED.load(Ordering::Relaxed),
         overflow_blocks: G_OVERFLOW.load(Ordering::Relaxed),
         truncates: G_TRUNCATES.load(Ordering::Relaxed),
@@ -244,6 +258,10 @@ pub struct KvCache {
     n_blocks: usize,
     /// Host spill tier (`None` when `cfg.host_blocks == 0`).
     host: Option<HostTier>,
+    /// Bounded FIFO of recently-released session ids (+ membership set),
+    /// consulted on unknown frees to call out true double releases.
+    freed_ring: VecDeque<u64>,
+    freed_set: HashSet<u64>,
 }
 
 impl KvCache {
@@ -259,6 +277,35 @@ impl KvCache {
             sessions: HashMap::new(),
             n_blocks: 0,
             host,
+            freed_ring: VecDeque::new(),
+            freed_set: HashSet::new(),
+        }
+    }
+
+    /// Remember `session` as recently released (bounded ring).
+    fn note_freed(&mut self, session: u64) {
+        if self.freed_set.insert(session) {
+            if self.freed_ring.len() == FREED_RING {
+                let old = self.freed_ring.pop_front().unwrap();
+                self.freed_set.remove(&old);
+            }
+            self.freed_ring.push_back(session);
+        }
+    }
+
+    /// An unknown session was freed/truncated: classify it as a benign
+    /// error-path release or a true double release, count accordingly,
+    /// and fail fast in debug builds on the latter.
+    fn note_unknown_release(&mut self, session: u64, op: &str) {
+        if self.freed_set.contains(&session) {
+            G_DOUBLE_FREE.fetch_add(1, Ordering::Relaxed);
+            eprintln!(
+                "kvcache device {}: double {op} of session {session} (already released)",
+                self.cfg.device,
+            );
+            debug_assert!(false, "double {op} of session {session}");
+        } else {
+            G_FREE_UNKNOWN.fetch_add(1, Ordering::Relaxed);
         }
     }
 
@@ -340,6 +387,11 @@ impl KvCache {
         if !self.sessions.contains_key(&session) {
             G_SESSIONS.fetch_add(1, Ordering::Relaxed);
             self.sessions.insert(session, SessionKv::default());
+            // a freed id legitimately coming back to life (tests reuse
+            // ids) must not trip the double-release guard later
+            if self.freed_set.remove(&session) {
+                self.freed_ring.retain(|&id| id != session);
+            }
         }
         let need = pos / self.cfg.block_positions + 1;
         let have = self.sessions[&session].blocks.len();
@@ -558,13 +610,11 @@ impl KvCache {
     pub fn truncate_tail(&mut self, session: u64, new_len: usize) -> bool {
         let bp = self.cfg.block_positions;
         let be = self.cfg.block_elems();
-        let s = match self.sessions.get_mut(&session) {
-            None => {
-                G_FREE_UNKNOWN.fetch_add(1, Ordering::Relaxed);
-                return false;
-            }
-            Some(s) => s,
-        };
+        if !self.sessions.contains_key(&session) {
+            self.note_unknown_release(session, "truncate");
+            return false;
+        }
+        let s = self.sessions.get_mut(&session).unwrap();
         let shortened = new_len < s.len;
         s.len = s.len.min(new_len);
         let need = if new_len == 0 { 0 } else { (new_len + bp - 1) / bp };
@@ -596,14 +646,18 @@ impl KvCache {
     /// it. Returns `false` (and trips the `free_unknown` counter: loud,
     /// never silent) when this cache holds nothing for the session, which
     /// legitimately happens on error-path releases for batches this
-    /// worker never executed.
+    /// worker never executed. A session this cache *recently released*
+    /// is different: freeing it again is a double release (a
+    /// cancellation/watchdog race), counted in `double_free` and fatal
+    /// in debug builds.
     pub fn free(&mut self, session: u64) -> bool {
         match self.sessions.remove(&session) {
             None => {
-                G_FREE_UNKNOWN.fetch_add(1, Ordering::Relaxed);
+                self.note_unknown_release(session, "free");
                 false
             }
             Some(s) => {
+                self.note_freed(session);
                 if s.spilled {
                     let host = self.host.as_mut().expect("spilled session without a host tier");
                     let buf =
@@ -778,18 +832,60 @@ mod tests {
     #[test]
     fn free_unknown_is_counted_not_silent() {
         let mut c = cache(2, 1, 2);
+        // a session this cache never held: benign error-path release,
+        // tolerated but visible in the counter — and never a panic
+        let before = global_stats().free_unknown;
+        assert!(!c.free(41));
+        assert!(global_stats().free_unknown > before, "unknown free went uncounted");
+        // a *recently released* session freed again is a true double
+        // release: its own counter, and fatal in debug builds
         c.write_row(5, 0, 0, &[1.0, 2.0], &[3.0, 4.0]);
         c.advance(5, 1);
         assert!(c.free(5));
-        let before = global_stats().free_unknown;
-        // second free: the session is unknown now — tolerated (error-path
-        // releases hit this) but visible in the counter
-        assert!(!c.free(5));
-        assert!(global_stats().free_unknown > before, "unknown free went uncounted");
+        let dbl = global_stats().double_free;
+        let got = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| c.free(5)));
+        match got {
+            Ok(ret) => {
+                assert!(!cfg!(debug_assertions), "debug build must assert on a double free");
+                assert!(!ret);
+            }
+            Err(_) => assert!(cfg!(debug_assertions), "release build must tolerate loudly"),
+        }
+        assert!(global_stats().double_free > dbl, "double free went uncounted");
         let mut k = vec![0.0; 2];
         let mut v = vec![0.0; 2];
         assert_eq!(c.gather(5, 0, &mut k, &mut v), 0);
         assert_eq!(c.blocks_in_use(), 0);
+    }
+
+    #[test]
+    fn revived_session_id_is_not_a_double_free() {
+        let mut c = cache(2, 1, 2);
+        fill(&mut c, 7, 1, 3, 2);
+        assert!(c.free(7));
+        // the same id coming back to life (restarts and tests reuse ids)
+        // makes its next release first-class again
+        fill(&mut c, 7, 1, 2, 2);
+        let dbl = global_stats().double_free;
+        assert!(c.free(7));
+        assert_eq!(global_stats().double_free, dbl, "revived id misread as double free");
+    }
+
+    #[test]
+    fn truncate_of_released_session_is_loud() {
+        let mut c = cache(2, 1, 2);
+        fill(&mut c, 9, 1, 3, 2);
+        assert!(c.free(9));
+        let dbl = global_stats().double_free;
+        let got = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| c.truncate_tail(9, 1)));
+        match got {
+            Ok(ret) => {
+                assert!(!cfg!(debug_assertions));
+                assert!(!ret);
+            }
+            Err(_) => assert!(cfg!(debug_assertions)),
+        }
+        assert!(global_stats().double_free > dbl, "double truncate went uncounted");
     }
 
     #[test]

@@ -7,7 +7,15 @@
 
 use crate::memory::arena::ArenaStats;
 use crate::memory::kvcache::KvStats;
+use std::collections::VecDeque;
 use std::time::{Duration, Instant};
+
+/// Rolling SLO window length: the last N first/continuation tokens vote
+/// on whether the engine is meeting its latency targets.
+const SLO_WINDOW: usize = 64;
+/// Minimum window fill before the pressure signal may fire — a handful of
+/// cold-start tokens must not flip the engine into shedding.
+const SLO_MIN_SAMPLES: usize = 16;
 
 /// Accumulates batch completions.
 #[derive(Clone, Debug)]
@@ -39,6 +47,20 @@ pub struct Recorder {
     /// Tokens actually committed to session streams by verify passes
     /// (accepted + the bonus token, minus any cut off by stop/budget).
     spec_emitted: u64,
+    /// Requests rejected by the admission gate (`busy` replies).
+    shed: u64,
+    /// Sessions cancelled mid-generation (client disconnect / explicit
+    /// `GenRef::cancel`).
+    cancelled: u64,
+    /// TTFT SLO target in µs (0 = untracked).
+    slo_ttft_us: u64,
+    /// Per-token (TPOT) SLO target in µs (0 = untracked).
+    slo_tpot_us: u64,
+    /// Rolling pass/fail votes of the last [`SLO_WINDOW`] tokens.
+    slo_window: VecDeque<bool>,
+    /// Monotonic count of SLO-violating tokens (never decays — the
+    /// rolling window is what feeds the shed decision).
+    slo_violations: u64,
     arena: ArenaStats,
     kvcache: KvStats,
 }
@@ -67,9 +89,67 @@ impl Recorder {
             spec_drafted: 0,
             spec_accepted: 0,
             spec_emitted: 0,
+            shed: 0,
+            cancelled: 0,
+            slo_ttft_us: 0,
+            slo_tpot_us: 0,
+            slo_window: VecDeque::new(),
+            slo_violations: 0,
             arena: ArenaStats::default(),
             kvcache: KvStats::default(),
         }
+    }
+
+    /// Set latency SLO targets (zero disables an axis). Every recorded
+    /// first/continuation token then votes in the rolling window that
+    /// [`Recorder::under_pressure`] reads.
+    pub fn set_slo(&mut self, ttft: Duration, tpot: Duration) {
+        self.slo_ttft_us = ttft.as_micros() as u64;
+        self.slo_tpot_us = tpot.as_micros() as u64;
+    }
+
+    /// The admission gate rejected a request with a `busy` reply.
+    pub fn record_shed(&mut self) {
+        self.shed += 1;
+    }
+
+    /// `n` sessions were cancelled mid-generation.
+    pub fn record_cancelled(&mut self, n: u64) {
+        self.cancelled += n;
+    }
+
+    pub fn shed(&self) -> u64 {
+        self.shed
+    }
+
+    pub fn cancelled(&self) -> u64 {
+        self.cancelled
+    }
+
+    /// Total SLO-violating tokens observed (monotonic).
+    pub fn slo_violations(&self) -> u64 {
+        self.slo_violations
+    }
+
+    fn note_slo(&mut self, violated: bool) {
+        if self.slo_window.len() == SLO_WINDOW {
+            self.slo_window.pop_front();
+        }
+        self.slo_window.push_back(violated);
+        if violated {
+            self.slo_violations += 1;
+        }
+    }
+
+    /// True when a majority of the rolling window violates the SLO — the
+    /// signal that tightens the batcher's admission cap. Requires targets
+    /// to be set and at least [`SLO_MIN_SAMPLES`] recent tokens.
+    pub fn under_pressure(&self) -> bool {
+        if self.slo_window.len() < SLO_MIN_SAMPLES {
+            return false;
+        }
+        let violated = self.slo_window.iter().filter(|v| **v).count();
+        2 * violated > self.slo_window.len()
     }
 
     /// Fold an arena snapshot into the recorder (the engine does this with
@@ -114,6 +194,9 @@ impl Recorder {
     /// A generation session's first token completed `ttft` after submit.
     pub fn record_first_token(&mut self, ttft: Duration) {
         self.ttft_us.push(ttft.as_micros() as u64);
+        if self.slo_ttft_us > 0 {
+            self.note_slo(ttft.as_micros() as u64 > self.slo_ttft_us);
+        }
         self.count_token();
     }
 
@@ -121,6 +204,9 @@ impl Recorder {
     /// previous one.
     pub fn record_decode_token(&mut self, gap: Duration) {
         self.tok_lat_us.push(gap.as_micros() as u64);
+        if self.slo_tpot_us > 0 {
+            self.note_slo(gap.as_micros() as u64 > self.slo_tpot_us);
+        }
         self.count_token();
     }
 
@@ -314,6 +400,27 @@ impl Recorder {
                 self.kvcache.gather_spilled, self.kvcache.overflow_blocks,
             ));
         }
+        if self.kvcache.double_free > 0 {
+            // cancellation/watchdog release races: always loud, CI greps
+            // for this marker
+            s.push_str(&format!(
+                "; KVFREE-ANOMALY {} double frees",
+                self.kvcache.double_free,
+            ));
+        }
+        if self.shed + self.cancelled > 0 {
+            s.push_str(&format!("; shed {} cancelled {}", self.shed, self.cancelled));
+        }
+        if self.slo_ttft_us > 0 || self.slo_tpot_us > 0 {
+            let hot = self.slo_window.iter().filter(|v| **v).count();
+            s.push_str(&format!(
+                "; slo {} violations (window {}/{}{})",
+                self.slo_violations,
+                hot,
+                self.slo_window.len(),
+                if self.under_pressure() { ", shedding" } else { "" },
+            ));
+        }
         s
     }
 }
@@ -442,6 +549,75 @@ mod tests {
         // loud-path counters surface as an anomaly marker
         r.record_kvcache(KvStats { gather_spilled: 1, ..Default::default() });
         assert!(r.summary().contains("KVSPILL-ANOMALY 1 spilled gathers"), "{}", r.summary());
+    }
+
+    #[test]
+    fn shed_and_cancel_counters_surface_in_summary() {
+        let mut r = Recorder::new();
+        assert!(!r.summary().contains("shed"), "{}", r.summary());
+        r.record_shed();
+        r.record_shed();
+        r.record_cancelled(3);
+        assert_eq!((r.shed(), r.cancelled()), (2, 3));
+        assert!(r.summary().contains("shed 2 cancelled 3"), "{}", r.summary());
+    }
+
+    #[test]
+    fn slo_window_feeds_pressure_signal() {
+        let mut r = Recorder::new();
+        // no targets -> no votes, never under pressure
+        r.record_first_token(Duration::from_millis(500));
+        assert!(!r.under_pressure());
+        assert_eq!(r.slo_violations(), 0);
+        assert!(!r.summary().contains("slo"), "{}", r.summary());
+        r.set_slo(Duration::from_millis(10), Duration::from_millis(5));
+        // below-target tokens never trip the signal
+        for _ in 0..SLO_MIN_SAMPLES {
+            r.record_decode_token(Duration::from_millis(1));
+        }
+        assert!(!r.under_pressure());
+        // a majority of violating tokens does — and the counter sticks
+        for _ in 0..SLO_WINDOW {
+            r.record_first_token(Duration::from_millis(50));
+        }
+        assert!(r.under_pressure());
+        assert_eq!(r.slo_violations(), SLO_WINDOW as u64);
+        let s = r.summary();
+        assert!(s.contains("slo 64 violations"), "{s}");
+        assert!(s.contains(", shedding"), "{s}");
+        // recovery: a window full of fast tokens clears the pressure bit
+        // but not the monotonic total
+        for _ in 0..SLO_WINDOW {
+            r.record_decode_token(Duration::from_millis(1));
+        }
+        assert!(!r.under_pressure());
+        assert_eq!(r.slo_violations(), SLO_WINDOW as u64);
+        assert!(!r.summary().contains(", shedding"), "{}", r.summary());
+    }
+
+    #[test]
+    fn pressure_needs_minimum_samples() {
+        let mut r = Recorder::new();
+        r.set_slo(Duration::from_millis(10), Duration::ZERO);
+        for _ in 0..SLO_MIN_SAMPLES - 1 {
+            r.record_first_token(Duration::from_millis(50));
+        }
+        assert!(!r.under_pressure(), "too few samples to judge");
+        r.record_first_token(Duration::from_millis(50));
+        assert!(r.under_pressure());
+        // tpot target is off (ZERO): decode tokens do not vote
+        for _ in 0..SLO_WINDOW {
+            r.record_decode_token(Duration::from_millis(500));
+        }
+        assert_eq!(r.slo_violations(), SLO_MIN_SAMPLES as u64);
+    }
+
+    #[test]
+    fn double_free_surfaces_as_anomaly() {
+        let mut r = Recorder::new();
+        assert!(!r.summary().contains("KVFREE"), "{}", r.summary());
+        r.record_kvcache(KvStats { double_free: 2, ..Default::default() });
+        assert!(r.summary().contains("KVFREE-ANOMALY 2 double frees"), "{}", r.summary());
     }
 
     #[test]

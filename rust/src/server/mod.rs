@@ -12,11 +12,24 @@
 //!   client:  `stats\n`           — server: `ok <metrics summary>\n`
 //!   client:  `quit\n`            — closes the connection.
 //!
+//! Two more reply forms matter under hostile traffic: malformed lines get
+//! a structured `err <reason>\n` (the connection stays up — a garbled
+//! client doesn't tear down its own stream), and when admission control
+//! sheds a request the reply is `busy <reason>: <n> prefills queued\n`,
+//! distinguishable from a hard error so clients can back off and retry.
+//!
+//! Disconnect propagation: if a client drops mid-stream, the failed write
+//! cancels the session ([`GenRef::cancel`]) — the engine purges it from
+//! the batch queue (or evicts it at the next collector boundary) and
+//! frees its K/V blocks on every worker, so a dead client costs no
+//! further decode work and leaks nothing.
+//!
 //! Requests flow through the engine's continuation batcher, so concurrent
 //! clients — including every decode step of their generations — get
 //! batched together exactly like the paper's engine.
 
 use crate::coordinator::engine::{Engine, GenRef, GenRequest};
+use crate::coordinator::Busy;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -90,6 +103,10 @@ fn handle_conn(stream: TcpStream, engine: Arc<Engine>) {
                 // TcpStream is unbuffered, so the client sees tokens as
                 // engine steps complete
                 if stream_tokens(&gref, |s| writer.write_all(s.as_bytes())).is_err() {
+                    // the client hung up mid-generation: cancel so the
+                    // engine stops decoding for a dead socket and frees
+                    // the session's K/V blocks on every worker
+                    gref.cancel();
                     break;
                 }
             }
@@ -122,26 +139,49 @@ pub fn dispatch(line: &str, engine: &Engine) -> Action {
         return match parse_tokens(rest) {
             Some(tokens) => match engine.submit(tokens).and_then(|fut| fut.to_here()) {
                 Ok(tok) => Action::Reply(format!("ok {tok}\n")),
-                Err(e) => Action::Reply(format!("err {e}\n")),
+                Err(e) => reject(&e),
             },
-            None => Action::Reply("err malformed token list\n".to_string()),
+            None => Action::Reply("err infer: malformed token list\n".to_string()),
         };
     }
     if let Some(rest) = line.strip_prefix("gen ") {
+        // parse each field separately so a garbled line gets a *specific*
+        // structured reason, not a catch-all usage string
         let mut parts = rest.splitn(2, ' ');
-        let n = parts.next().and_then(|n| n.trim().parse::<usize>().ok());
-        let tokens = parts.next().and_then(parse_tokens);
-        return match (n, tokens) {
-            (Some(n), Some(tokens)) if n >= 1 => {
-                match engine.generate_stream(GenRequest::new(tokens, n)) {
-                    Ok(gref) => Action::Stream(gref),
-                    Err(e) => Action::Reply(format!("err {e}\n")),
-                }
+        let count = parts.next().unwrap_or("");
+        let n = match count.trim().parse::<usize>() {
+            Ok(n) => n,
+            Err(_) => {
+                return Action::Reply(format!(
+                    "err gen: malformed count {count:?} (usage: gen <n> <t0,t1,...>)\n"
+                ))
             }
-            _ => Action::Reply("err usage: gen <n> <t0,t1,...>\n".to_string()),
+        };
+        if n == 0 {
+            return Action::Reply("err gen: count must be >= 1\n".to_string());
+        }
+        let tokens = match parts.next() {
+            None => return Action::Reply("err gen: missing token list\n".to_string()),
+            Some(csv) => match parse_tokens(csv) {
+                Some(t) => t,
+                None => return Action::Reply("err gen: malformed token list\n".to_string()),
+            },
+        };
+        return match engine.generate_stream(GenRequest::new(tokens, n)) {
+            Ok(gref) => Action::Stream(gref),
+            Err(e) => reject(&e),
         };
     }
     Action::Reply("err unknown command (infer/gen/stats/quit)\n".to_string())
+}
+
+/// Map a submission failure to its reply line: a shed ([`Busy`]) request
+/// gets the structured back-off form, anything else a hard `err`.
+fn reject(e: &anyhow::Error) -> Action {
+    match e.downcast_ref::<Busy>() {
+        Some(b) => Action::Reply(format!("busy {}: {} prefills queued\n", b.reason, b.queued)),
+        None => Action::Reply(format!("err {e}\n")),
+    }
 }
 
 fn parse_tokens(csv: &str) -> Option<Vec<i32>> {
@@ -195,8 +235,70 @@ pub fn handle_line(line: &str, engine: &Engine) -> Option<String> {
 
 #[cfg(test)]
 mod tests {
-    // Protocol behaviour is tested through dispatch/handle_line in the
-    // integration suite (rust/tests/server_loop.rs) where a real engine
-    // exists — an Engine is not constructible without AOT artifacts, so
-    // grammar-only cases live there too.
+    // Engine-backed protocol behaviour is tested through
+    // dispatch/handle_line in the integration suite
+    // (rust/tests/server_loop.rs) where a real engine exists — an Engine
+    // is not constructible without AOT artifacts. The pure parsing layer
+    // is fuzzed here.
+    use super::*;
+
+    #[test]
+    fn parse_tokens_accepts_well_formed_lists() {
+        assert_eq!(parse_tokens("1,2,3"), Some(vec![1, 2, 3]));
+        assert_eq!(parse_tokens("7"), Some(vec![7]));
+        assert_eq!(parse_tokens(" 4 , 8 , 15 "), Some(vec![4, 8, 15]));
+        assert_eq!(parse_tokens("-1,0,2147483647"), Some(vec![-1, 0, i32::MAX]));
+        assert_eq!(parse_tokens("-2147483648"), Some(vec![i32::MIN]));
+    }
+
+    #[test]
+    fn parse_tokens_rejects_malformed_lists() {
+        for bad in [
+            "",
+            " ",
+            ",",
+            "1,",
+            ",1",
+            "1,,2",
+            "a",
+            "1,b",
+            "1;2",
+            "1 2",
+            "0x10",
+            "1.5",
+            "+",
+            "-",
+            "2147483648",           // i32 overflow
+            "-2147483649",          // i32 underflow
+            "99999999999999999999", // way past u64 too
+            "1,2,\n",
+            "\u{1F600}",
+            "1,\u{0}",
+        ] {
+            assert_eq!(parse_tokens(bad), None, "{bad:?} must be rejected");
+        }
+    }
+
+    /// Every rejection path a hostile line can hit must keep the
+    /// connection protocol well-formed: a single line, a known verb
+    /// (`err`/`busy`), trailing newline.
+    #[test]
+    fn reject_distinguishes_busy_from_hard_errors() {
+        let busy = anyhow::Error::new(Busy { reason: "queue-full", queued: 7 });
+        match reject(&busy) {
+            Action::Reply(r) => {
+                assert_eq!(r, "busy queue-full: 7 prefills queued\n");
+            }
+            _ => panic!("busy must reply"),
+        }
+        let hard = anyhow::anyhow!("no compiled bucket fits");
+        match reject(&hard) {
+            Action::Reply(r) => {
+                assert!(r.starts_with("err "), "{r:?}");
+                assert!(r.ends_with('\n'));
+                assert_eq!(r.lines().count(), 1);
+            }
+            _ => panic!("errors must reply"),
+        }
+    }
 }

@@ -1,0 +1,493 @@
+//! Saturation load generation: a seeded client pool that drives the
+//! engine the way hostile traffic does — Poisson bursts, heavy-tailed
+//! prompt and output lengths, multi-turn re-entry with grown context,
+//! and mid-stream disconnects — and reports what the engine did about
+//! it (sustained tok/s, TTFT/TPOT percentiles, shed rate, survivor
+//! streams for differential parity).
+//!
+//! Everything is derived from one seed through forked RNG streams, with
+//! the *chaos* decisions (who disconnects, when) on their own stream:
+//! two scenarios that differ only in `disconnect_pct` produce byte-
+//! identical prompts, arrival gaps and token budgets, so a faulted run
+//! can be compared stream-for-stream against an unfaulted control
+//! ([`parity_mismatches`]) — greedy decode is deterministic per prompt,
+//! and chaos must never change a survivor's bytes.
+
+use crate::coordinator::engine::{Engine, GenRequest};
+use crate::coordinator::Busy;
+use crate::util::rng::Rng;
+use crate::workload::LengthDist;
+use std::time::{Duration, Instant};
+
+/// One seeded hostile-traffic scenario.
+#[derive(Clone, Debug)]
+pub struct SaturationScenario {
+    pub seed: u64,
+    /// Concurrent clients (one thread each in [`run_saturation`]).
+    pub clients: usize,
+    /// Conversation turns per client (turn > 0 re-enters with the grown
+    /// context of the previous completed turn).
+    pub turns: usize,
+    pub prompt_dist: LengthDist,
+    /// Continuation-token budget per turn (heavy-tailed outputs).
+    pub output_dist: LengthDist,
+    pub vocab: usize,
+    /// Per-client Poisson arrival rate (turns/second of *scenario* time;
+    /// the runner sleeps the sampled gaps directly, so pick rates that
+    /// keep the whole run in the hundreds of milliseconds).
+    pub arrival_rate: f64,
+    /// Probability that a turn's client disconnects mid-stream.
+    pub disconnect_pct: f64,
+    /// Fresh tokens a re-entering turn appends to its grown context.
+    pub followup_tokens: usize,
+}
+
+impl SaturationScenario {
+    /// The acceptance-scenario shape: heavy-tailed prompts and outputs,
+    /// bursty arrivals, no chaos (turn it on with
+    /// [`SaturationScenario::with_disconnects`]).
+    pub fn new(seed: u64, clients: usize, turns: usize) -> SaturationScenario {
+        SaturationScenario {
+            seed,
+            clients,
+            turns,
+            prompt_dist: LengthDist::HeavyTail(12, 1.1),
+            output_dist: LengthDist::HeavyTail(6, 1.1),
+            vocab: 100,
+            arrival_rate: 200.0,
+            disconnect_pct: 0.0,
+            followup_tokens: 2,
+        }
+    }
+
+    /// Same plans, plus mid-stream disconnects on `pct` of turns.
+    pub fn with_disconnects(mut self, pct: f64) -> Self {
+        self.disconnect_pct = pct;
+        self
+    }
+
+    /// Materialize the per-client plans. Deterministic in `seed`; the
+    /// chaos stream is forked separately and *always drawn*, so changing
+    /// `disconnect_pct` flips disconnect flags without perturbing any
+    /// prompt, gap or budget.
+    pub fn plan(&self) -> Vec<ClientPlan> {
+        let mut root = Rng::new(self.seed);
+        let mut content = root.fork(1);
+        let mut arrivals = root.fork(2);
+        let mut chaos = root.fork(3);
+        (0..self.clients)
+            .map(|client| {
+                let mut content = content.fork(client as u64);
+                let mut arrivals = arrivals.fork(client as u64);
+                let mut chaos = chaos.fork(client as u64);
+                let turns = (0..self.turns)
+                    .map(|_| {
+                        let plen = self.prompt_dist.sample(&mut content);
+                        let fresh_prompt = (0..plen)
+                            .map(|_| (content.next_below(self.vocab as u64 - 1) + 1) as i32)
+                            .collect();
+                        let followup = (0..self.followup_tokens)
+                            .map(|_| (content.next_below(self.vocab as u64 - 1) + 1) as i32)
+                            .collect();
+                        let new_tokens = self.output_dist.sample(&mut content).max(1);
+                        let delay =
+                            Duration::from_secs_f64(arrivals.exponential(self.arrival_rate));
+                        // both chaos draws happen unconditionally — see plan()
+                        let roll = chaos.next_f64();
+                        let after = 1 + chaos.next_below(new_tokens as u64) as usize;
+                        let disconnect_after =
+                            (roll < self.disconnect_pct).then_some(after.min(new_tokens));
+                        TurnPlan { fresh_prompt, followup, new_tokens, delay, disconnect_after }
+                    })
+                    .collect();
+                ClientPlan { client, turns }
+            })
+            .collect()
+    }
+}
+
+/// One client's scripted conversation.
+#[derive(Clone, Debug)]
+pub struct ClientPlan {
+    pub client: usize,
+    pub turns: Vec<TurnPlan>,
+}
+
+/// One scripted turn.
+#[derive(Clone, Debug)]
+pub struct TurnPlan {
+    /// Prompt when this turn starts a fresh conversation (turn 0, or the
+    /// previous turn did not complete).
+    pub fresh_prompt: Vec<i32>,
+    /// Appended to the previous turn's full sequence on re-entry, so the
+    /// context grows turn over turn.
+    pub followup: Vec<i32>,
+    /// Continuation-token budget.
+    pub new_tokens: usize,
+    /// Poisson gap slept before submitting.
+    pub delay: Duration,
+    /// Disconnect (cancel) after streaming this many tokens.
+    pub disconnect_after: Option<usize>,
+}
+
+/// How one turn ended.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Outcome {
+    Completed,
+    /// Client hung up mid-stream after the recorded tokens.
+    Disconnected,
+    /// Admission control shed the turn (structured busy).
+    Shed,
+    Error(String),
+}
+
+/// One turn's observed stream.
+#[derive(Clone, Debug)]
+pub struct StreamOutcome {
+    pub client: usize,
+    pub turn: usize,
+    pub prompt: Vec<i32>,
+    pub tokens: Vec<i32>,
+    pub outcome: Outcome,
+}
+
+/// Aggregated result of one [`run_saturation`] pass.
+#[derive(Clone, Debug, Default)]
+pub struct LoadReport {
+    pub completed: usize,
+    pub disconnected: usize,
+    pub shed: usize,
+    pub errors: usize,
+    pub tokens_streamed: usize,
+    pub wall: Duration,
+    /// First-token latency per completed-or-disconnected stream, µs.
+    pub ttft_us: Vec<u64>,
+    /// Inter-token gap for every subsequent streamed token, µs.
+    pub tpot_us: Vec<u64>,
+    pub streams: Vec<StreamOutcome>,
+}
+
+impl LoadReport {
+    pub fn turns(&self) -> usize {
+        self.streams.len()
+    }
+
+    /// Fraction of turns shed by admission control.
+    pub fn shed_rate(&self) -> f64 {
+        if self.streams.is_empty() {
+            0.0
+        } else {
+            self.shed as f64 / self.streams.len() as f64
+        }
+    }
+
+    /// Sustained decode throughput over the whole run.
+    pub fn tokens_per_sec(&self) -> f64 {
+        let s = self.wall.as_secs_f64();
+        if s > 0.0 {
+            self.tokens_streamed as f64 / s
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Nearest-rank percentile (p in [0, 100]) of a latency sample, µs.
+/// Returns 0 on an empty sample.
+pub fn pctl_us(xs: &[u64], p: f64) -> u64 {
+    if xs.is_empty() {
+        return 0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_unstable();
+    let rank = ((p / 100.0) * v.len() as f64).ceil() as usize;
+    v[rank.clamp(1, v.len()) - 1]
+}
+
+/// Keys completed streams by (client, turn) and checks that every pair
+/// completed in *both* reports with the same prompt produced the same
+/// bytes — the survivor-parity invariant: chaos may change *which*
+/// streams finish, never *what* a finished stream says. Returns one
+/// human-readable line per violation (empty == parity holds).
+pub fn parity_mismatches(a: &LoadReport, b: &LoadReport) -> Vec<String> {
+    let key = |r: &LoadReport| -> std::collections::HashMap<(usize, usize), (Vec<i32>, Vec<i32>)> {
+        r.streams
+            .iter()
+            .filter(|s| s.outcome == Outcome::Completed)
+            .map(|s| ((s.client, s.turn), (s.prompt.clone(), s.tokens.clone())))
+            .collect()
+    };
+    let (ka, kb) = (key(a), key(b));
+    let mut diffs = Vec::new();
+    for (k, (pa, ta)) in &ka {
+        if let Some((pb, tb)) = kb.get(k) {
+            if pa == pb && ta != tb {
+                diffs.push(format!(
+                    "client {} turn {}: same prompt, tokens {:?} vs {:?}",
+                    k.0, k.1, ta, tb
+                ));
+            }
+        }
+    }
+    diffs.sort();
+    diffs
+}
+
+/// Drive `engine` with the scenario's client pool: one thread per
+/// client, each playing its turns in order — sleep the Poisson gap,
+/// submit (re-entering with grown context when the previous turn
+/// completed and the result still fits `max_context`), stream, and
+/// disconnect mid-stream where the plan says so. Returns the merged
+/// report; leak accounting is the caller's (workers own the block
+/// gauges — see `memory::kvcache::global_stats`).
+pub fn run_saturation(
+    engine: &Engine,
+    scenario: &SaturationScenario,
+    max_context: usize,
+) -> LoadReport {
+    let plans = scenario.plan();
+    let t0 = Instant::now();
+    let mut per_client: Vec<Vec<StreamOutcome>> = Vec::new();
+    let mut lats: Vec<(Vec<u64>, Vec<u64>)> = Vec::new();
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = plans
+            .iter()
+            .map(|plan| scope.spawn(move || run_client(engine, plan, max_context)))
+            .collect();
+        for h in handles {
+            let (streams, ttft, tpot) = h.join().expect("loadgen client panicked");
+            per_client.push(streams);
+            lats.push((ttft, tpot));
+        }
+    });
+    let mut report = LoadReport { wall: t0.elapsed(), ..LoadReport::default() };
+    for streams in per_client {
+        for s in streams {
+            match &s.outcome {
+                Outcome::Completed => report.completed += 1,
+                Outcome::Disconnected => report.disconnected += 1,
+                Outcome::Shed => report.shed += 1,
+                Outcome::Error(_) => report.errors += 1,
+            }
+            report.tokens_streamed += s.tokens.len();
+            report.streams.push(s);
+        }
+    }
+    for (ttft, tpot) in lats {
+        report.ttft_us.extend(ttft);
+        report.tpot_us.extend(tpot);
+    }
+    report.streams.sort_by_key(|s| (s.client, s.turn));
+    report
+}
+
+fn run_client(
+    engine: &Engine,
+    plan: &ClientPlan,
+    max_context: usize,
+) -> (Vec<StreamOutcome>, Vec<u64>, Vec<u64>) {
+    let mut streams = Vec::new();
+    let mut ttft_us = Vec::new();
+    let mut tpot_us = Vec::new();
+    // the grown context of the previous turn, when it completed
+    let mut context: Option<Vec<i32>> = None;
+    for (turn, t) in plan.turns.iter().enumerate() {
+        std::thread::sleep(t.delay);
+        // multi-turn re-entry: continue the conversation if the previous
+        // turn completed and the grown context still fits; otherwise
+        // start fresh (a disconnected client reconnects as a new session)
+        let prompt = match context.take() {
+            Some(mut c)
+                if c.len() + t.followup.len() + t.new_tokens <= max_context =>
+            {
+                c.extend_from_slice(&t.followup);
+                c
+            }
+            _ => t.fresh_prompt.clone(),
+        };
+        let submitted = Instant::now();
+        let gref = match engine.generate_stream(GenRequest::new(prompt.clone(), t.new_tokens)) {
+            Ok(g) => g,
+            Err(e) => {
+                let outcome = if e.downcast_ref::<Busy>().is_some() {
+                    Outcome::Shed
+                } else {
+                    Outcome::Error(format!("{e:#}"))
+                };
+                streams.push(StreamOutcome {
+                    client: plan.client,
+                    turn,
+                    prompt,
+                    tokens: Vec::new(),
+                    outcome,
+                });
+                continue;
+            }
+        };
+        let mut tokens = Vec::new();
+        let mut last = submitted;
+        let outcome = loop {
+            match gref.next() {
+                Ok(Some(tok)) => {
+                    let now = Instant::now();
+                    if tokens.is_empty() {
+                        ttft_us.push(now.duration_since(submitted).as_micros() as u64);
+                    } else {
+                        tpot_us.push(now.duration_since(last).as_micros() as u64);
+                    }
+                    last = now;
+                    tokens.push(tok);
+                    if t.disconnect_after == Some(tokens.len()) {
+                        // the hostile part: hang up mid-stream and never
+                        // read another byte
+                        gref.cancel();
+                        break Outcome::Disconnected;
+                    }
+                }
+                Ok(None) => break Outcome::Completed,
+                Err(e) => {
+                    let msg = format!("{e:#}");
+                    break if msg.contains("cancelled") {
+                        Outcome::Disconnected
+                    } else {
+                        Outcome::Error(msg)
+                    };
+                }
+            }
+        };
+        if outcome == Outcome::Completed {
+            let mut full = prompt.clone();
+            full.extend_from_slice(&tokens);
+            context = Some(full);
+        }
+        streams.push(StreamOutcome { client: plan.client, turn, prompt, tokens, outcome });
+    }
+    (streams, ttft_us, tpot_us)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scenario(pct: f64) -> SaturationScenario {
+        SaturationScenario::new(99, 6, 3).with_disconnects(pct)
+    }
+
+    #[test]
+    fn plans_are_seed_deterministic() {
+        let a = scenario(0.25).plan();
+        let b = scenario(0.25).plan();
+        assert_eq!(a.len(), 6);
+        for (pa, pb) in a.iter().zip(&b) {
+            assert_eq!(pa.turns.len(), 3);
+            for (ta, tb) in pa.turns.iter().zip(&pb.turns) {
+                assert_eq!(ta.fresh_prompt, tb.fresh_prompt);
+                assert_eq!(ta.followup, tb.followup);
+                assert_eq!(ta.new_tokens, tb.new_tokens);
+                assert_eq!(ta.delay, tb.delay);
+                assert_eq!(ta.disconnect_after, tb.disconnect_after);
+            }
+        }
+    }
+
+    /// The differential-run invariant: chaos knobs flip disconnect flags
+    /// only — prompts, budgets and gaps stay byte-identical.
+    #[test]
+    fn disconnect_pct_changes_only_the_chaos_flags() {
+        let clean = scenario(0.0).plan();
+        let chaotic = scenario(0.25).plan();
+        let mut disconnects = 0;
+        for (pc, ph) in clean.iter().zip(&chaotic) {
+            for (tc, th) in pc.turns.iter().zip(&ph.turns) {
+                assert_eq!(tc.fresh_prompt, th.fresh_prompt);
+                assert_eq!(tc.followup, th.followup);
+                assert_eq!(tc.new_tokens, th.new_tokens);
+                assert_eq!(tc.delay, th.delay);
+                assert_eq!(tc.disconnect_after, None);
+                if let Some(k) = th.disconnect_after {
+                    disconnects += 1;
+                    assert!((1..=th.new_tokens).contains(&k));
+                }
+            }
+        }
+        assert!(disconnects > 0, "25% over 18 turns should fire at least once");
+    }
+
+    #[test]
+    fn full_disconnect_pct_marks_every_turn() {
+        let plans = scenario(1.0).plan();
+        assert!(plans
+            .iter()
+            .flat_map(|p| &p.turns)
+            .all(|t| t.disconnect_after.is_some()));
+    }
+
+    #[test]
+    fn pctl_us_nearest_rank() {
+        assert_eq!(pctl_us(&[], 99.0), 0);
+        assert_eq!(pctl_us(&[5], 50.0), 5);
+        let xs: Vec<u64> = (1..=100).collect();
+        assert_eq!(pctl_us(&xs, 50.0), 50);
+        assert_eq!(pctl_us(&xs, 99.0), 99);
+        assert_eq!(pctl_us(&xs, 100.0), 100);
+        // order-independent
+        let mut rev: Vec<u64> = xs.iter().rev().copied().collect();
+        rev.push(1000);
+        assert_eq!(pctl_us(&rev, 99.0), 100);
+    }
+
+    #[test]
+    fn parity_compares_completed_streams_with_equal_prompts() {
+        let s = |client, turn, prompt: Vec<i32>, tokens: Vec<i32>, outcome| StreamOutcome {
+            client,
+            turn,
+            prompt,
+            tokens,
+            outcome,
+        };
+        let mut a = LoadReport::default();
+        let mut b = LoadReport::default();
+        // same prompt, same tokens: fine
+        a.streams.push(s(0, 0, vec![1, 2], vec![9], Outcome::Completed));
+        b.streams.push(s(0, 0, vec![1, 2], vec![9], Outcome::Completed));
+        // completed only on one side: not comparable
+        a.streams.push(s(1, 0, vec![3], vec![7], Outcome::Completed));
+        b.streams.push(s(1, 0, vec![3], vec![7], Outcome::Disconnected));
+        // different prompts (divergent multi-turn context): not comparable
+        a.streams.push(s(2, 1, vec![4, 5], vec![1], Outcome::Completed));
+        b.streams.push(s(2, 1, vec![4, 6], vec![2], Outcome::Completed));
+        assert!(parity_mismatches(&a, &b).is_empty());
+        // same prompt, different tokens: the violation
+        a.streams.push(s(3, 0, vec![8], vec![1, 1], Outcome::Completed));
+        b.streams.push(s(3, 0, vec![8], vec![1, 2], Outcome::Completed));
+        let diffs = parity_mismatches(&a, &b);
+        assert_eq!(diffs.len(), 1);
+        assert!(diffs[0].contains("client 3"));
+    }
+
+    #[test]
+    fn report_rates() {
+        let mut r = LoadReport::default();
+        assert_eq!(r.shed_rate(), 0.0);
+        r.streams.push(StreamOutcome {
+            client: 0,
+            turn: 0,
+            prompt: vec![1],
+            tokens: vec![],
+            outcome: Outcome::Shed,
+        });
+        r.streams.push(StreamOutcome {
+            client: 0,
+            turn: 1,
+            prompt: vec![1],
+            tokens: vec![2, 3],
+            outcome: Outcome::Completed,
+        });
+        r.shed = 1;
+        r.tokens_streamed = 2;
+        r.wall = Duration::from_secs(2);
+        assert!((r.shed_rate() - 0.5).abs() < 1e-9);
+        assert!((r.tokens_per_sec() - 1.0).abs() < 1e-9);
+        assert_eq!(r.turns(), 2);
+    }
+}

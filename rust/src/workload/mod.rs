@@ -11,6 +11,8 @@
 //! Arrivals are either closed-loop (back-to-back batches) or open-loop
 //! Poisson at a target rate.
 
+pub mod loadgen;
+
 use crate::coordinator::batcher::Request;
 use crate::util::rng::Rng;
 use std::time::Duration;

@@ -1,0 +1,332 @@
+//! Fail-safe serving under hostile traffic, differentially: cancellation
+//! propagation (no leaked K/V blocks, no wasted decode work), load
+//! shedding with structured `Busy` rejections, chaos fault injection
+//! (delay / drop / panic at the worker reply boundary), and the seeded
+//! saturation scenario from the acceptance bar — 25% mid-stream
+//! disconnects plus an injected worker stall, with survivor streams
+//! byte-identical to an unfaulted control run.
+//!
+//! Every test skips cleanly when the AOT artifacts are absent (the same
+//! condition under which an `Engine` cannot launch at all), so the suite
+//! never *adds* failures on an artifact-less checkout.
+
+use energonai::coordinator::engine::{Engine, GenRef, GenRequest, LaunchConfig};
+use energonai::coordinator::Busy;
+use energonai::memory::kvcache;
+use energonai::runtime::{find_artifacts, Manifest};
+use energonai::workload::loadgen::{
+    parity_mismatches, run_saturation, Outcome, SaturationScenario,
+};
+use std::sync::Mutex;
+
+/// Serializes every test in this binary: several assert on the
+/// process-wide kvcache gauges, so no other engine may run concurrently.
+static STATS_LOCK: Mutex<()> = Mutex::new(());
+
+fn stats_guard() -> std::sync::MutexGuard<'static, ()> {
+    STATS_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn artifacts_ready() -> bool {
+    let dir = match find_artifacts() {
+        Ok(d) => d,
+        Err(_) => {
+            eprintln!("skipping: no AOT artifacts (run `make artifacts`)");
+            return false;
+        }
+    };
+    let man = match Manifest::cached(dir) {
+        Ok(m) => m,
+        Err(_) => return false,
+    };
+    let ok = !man.decode_widths("tiny", 1).is_empty() && man.has_kv_prefill("tiny", 1);
+    if !ok {
+        eprintln!("skipping: decode artifacts missing for tiny/tp1");
+    }
+    ok
+}
+
+fn launch(cfg: LaunchConfig) -> Engine {
+    Engine::launch(cfg).unwrap()
+}
+
+fn prompts(n: usize) -> Vec<Vec<i32>> {
+    (0..n)
+        .map(|i| {
+            let len = 2 + (i * 3) % 7;
+            (0..len).map(|j| ((i * 31 + j * 7) % 100 + 1) as i32).collect()
+        })
+        .collect()
+}
+
+/// Longest compiled prefill bucket for the tiny preset — the context cap
+/// the load generator must respect.
+fn max_context(engine: &Engine) -> usize {
+    engine.manifest.shape_points("tiny").iter().map(|&(_, s)| s).max().unwrap()
+}
+
+/// Cancelling sessions mid-generation (the client-side half of a TCP
+/// disconnect) must end their streams with a `cancelled` error, leave
+/// survivor streams byte-identical to a cancel-free control run, and
+/// free every K/V block on shutdown.
+#[test]
+fn cancel_mid_generation_leaks_nothing_and_spares_survivors() {
+    if !artifacts_ready() {
+        return;
+    }
+    let _guard = stats_guard();
+    let all = prompts(16);
+
+    // control: the survivors' prompts, no cancellations anywhere
+    let control = launch(LaunchConfig::preset("tiny"));
+    let expect: Vec<Vec<i32>> = all
+        .iter()
+        .step_by(2)
+        .map(|p| control.generate(p.clone(), 8).unwrap())
+        .collect();
+    control.shutdown();
+
+    let before = kvcache::global_stats();
+    let engine = launch(LaunchConfig::preset("tiny"));
+    let grefs: Vec<GenRef> = all
+        .iter()
+        .map(|p| engine.generate_stream(GenRequest::new(p.clone(), 8)).unwrap())
+        .collect();
+    // hang up every odd-indexed client immediately (its session may be
+    // queued or already in flight — both paths must reclaim)
+    for g in grefs.iter().skip(1).step_by(2) {
+        g.cancel();
+    }
+    let survivors: Vec<Vec<i32>> =
+        grefs.iter().step_by(2).map(|g| g.to_here().unwrap()).collect();
+    assert_eq!(survivors, expect, "a cancelled neighbour changed a survivor's stream");
+    let mut cancelled_seen = 0;
+    for g in grefs.iter().skip(1).step_by(2) {
+        match g.to_here() {
+            Err(e) => {
+                assert!(e.to_string().contains("cancelled"), "unexpected error: {e:#}");
+                assert!(g.is_cancelled());
+                cancelled_seen += 1;
+            }
+            // the generation won the race and completed before the
+            // cancel landed — legal, just not the interesting path
+            Ok(_) => assert!(!g.is_cancelled()),
+        }
+    }
+    assert!(cancelled_seen > 0, "all 8 cancels lost the race to 8-token generations");
+    // engine-side accounting: a cancel observed by the client was either
+    // purged from the queue or doomed in flight (a session can, rarely,
+    // retire between the client's cancel and the former's sweep, so exact
+    // equality is not guaranteed — but zero means propagation is broken)
+    let metrics = engine.metrics_snapshot();
+    assert!(metrics.cancelled() > 0, "no cancel ever reached the engine");
+    engine.shutdown();
+    let after = kvcache::global_stats();
+    assert_eq!(after.blocks_in_use, before.blocks_in_use, "cancelled sessions leaked blocks");
+    assert_eq!(after.host_bytes, before.host_bytes);
+    assert_eq!(after.double_free, before.double_free, "a session was released twice");
+}
+
+/// With a queued-prefill depth cap, a submission wave past capacity gets
+/// structured `Busy` rejections (downcastable, with the queue depth)
+/// instead of unbounded queueing — and everything admitted completes.
+#[test]
+fn queue_cap_sheds_with_structured_busy() {
+    if !artifacts_ready() {
+        return;
+    }
+    let _guard = stats_guard();
+    let before = kvcache::global_stats();
+    let mut lc = LaunchConfig::preset("tiny").with_admission(1, 0);
+    lc.engine.pool_threads = 1;
+    let engine = launch(lc);
+    let mut admitted = Vec::new();
+    let mut shed = 0u64;
+    for p in prompts(24) {
+        match engine.generate_stream(GenRequest::new(p, 4)) {
+            Ok(g) => admitted.push(g),
+            Err(e) => {
+                let b = e.downcast_ref::<Busy>().expect("rejection must downcast to Busy");
+                assert_eq!(b.reason, "queue-full");
+                assert!(b.queued >= 1);
+                shed += 1;
+            }
+        }
+    }
+    assert!(shed > 0, "24 rapid submissions never tripped a depth cap of 1");
+    assert!(!admitted.is_empty(), "the cap must shed, not blackhole");
+    for g in &admitted {
+        g.to_here().unwrap();
+    }
+    let metrics = engine.metrics_snapshot();
+    assert_eq!(metrics.shed(), shed);
+    engine.shutdown();
+    let after = kvcache::global_stats();
+    assert_eq!(after.blocks_in_use, before.blocks_in_use, "shed requests leaked blocks");
+}
+
+/// A delay fault stalls replies without changing them: streams stay
+/// byte-identical to the unfaulted run, nothing leaks, shutdown drains.
+#[test]
+fn delay_fault_changes_latency_not_bytes() {
+    if !artifacts_ready() {
+        return;
+    }
+    let _guard = stats_guard();
+    let ps = prompts(6);
+    let clean = launch(LaunchConfig::preset("tiny"));
+    let expect: Vec<Vec<i32>> =
+        ps.iter().map(|p| clean.generate(p.clone(), 6).unwrap()).collect();
+    clean.shutdown();
+
+    let before = kvcache::global_stats();
+    let engine = launch(LaunchConfig::preset("tiny").with_faults("delay2ms@every3+1", 7));
+    let got: Vec<Vec<i32>> =
+        ps.iter().map(|p| engine.generate(p.clone(), 6).unwrap()).collect();
+    assert_eq!(got, expect, "a delay fault must never change a stream");
+    engine.shutdown();
+    let after = kvcache::global_stats();
+    assert_eq!(after.blocks_in_use, before.blocks_in_use);
+}
+
+/// Panic faults fail their batches loudly: the affected sessions' streams
+/// error with the injected message, the engine keeps serving, and every
+/// faulted session's blocks are reclaimed.
+#[test]
+fn panic_fault_fails_batches_without_leaking() {
+    if !artifacts_ready() {
+        return;
+    }
+    let _guard = stats_guard();
+    let before = kvcache::global_stats();
+    let engine = launch(LaunchConfig::preset("tiny").with_faults("panic@every4+0", 7));
+    let grefs: Vec<GenRef> = prompts(12)
+        .into_iter()
+        .map(|p| engine.generate_stream(GenRequest::new(p, 6)).unwrap())
+        .collect();
+    let mut failed = 0;
+    for g in &grefs {
+        match g.to_here() {
+            Ok(_) => {}
+            Err(e) => {
+                assert!(
+                    e.to_string().contains("injected worker fault"),
+                    "unexpected error under panic plan: {e:#}"
+                );
+                failed += 1;
+            }
+        }
+    }
+    assert!(failed > 0, "a panic-every-4th-ticket plan never fired across 12 sessions");
+    engine.shutdown();
+    let after = kvcache::global_stats();
+    assert_eq!(after.blocks_in_use, before.blocks_in_use, "faulted sessions leaked blocks");
+    assert_eq!(after.double_free, before.double_free);
+}
+
+/// Drop faults suppress replies entirely: the watchdog must poison the
+/// orphaned batches at its deadline (streams fail rather than hang) and
+/// shutdown must still drain within it.
+#[test]
+fn drop_fault_is_poisoned_by_the_watchdog_and_drains() {
+    if !artifacts_ready() {
+        return;
+    }
+    let _guard = stats_guard();
+    let before = kvcache::global_stats();
+    let mut lc = LaunchConfig::preset("tiny").with_faults("drop@every5+2@w0", 7);
+    lc.engine.batch_deadline_ms = 100;
+    let engine = launch(lc);
+    let grefs: Vec<GenRef> = prompts(10)
+        .into_iter()
+        .map(|p| engine.generate_stream(GenRequest::new(p, 4)).unwrap())
+        .collect();
+    let mut poisoned = 0;
+    for g in &grefs {
+        match g.to_here() {
+            Ok(_) => {}
+            Err(e) => {
+                assert!(
+                    e.to_string().contains("watchdog deadline"),
+                    "unexpected error under drop plan: {e:#}"
+                );
+                poisoned += 1;
+            }
+        }
+    }
+    assert!(poisoned > 0, "a drop-every-5th-ticket plan never orphaned a batch");
+    // the drain must terminate despite the dropped replies — the watchdog
+    // is what bounds it; a hang here is the regression
+    engine.shutdown();
+    let after = kvcache::global_stats();
+    assert_eq!(after.blocks_in_use, before.blocks_in_use, "poisoned batches leaked blocks");
+}
+
+/// The acceptance scenario: seeded saturation with 25% mid-stream
+/// disconnects and an injected worker stall, against an engine with
+/// admission control. The engine must shed (not queue unboundedly),
+/// leak nothing on either tier, keep survivor streams byte-identical to
+/// the unfaulted control run, and drain shutdown cleanly.
+#[test]
+fn saturation_with_disconnects_and_a_stall_sheds_and_leaks_nothing() {
+    if !artifacts_ready() {
+        return;
+    }
+    let _guard = stats_guard();
+
+    // control: same seed, no disconnects, no faults, no admission caps —
+    // every stream completes, forming the parity reference
+    let control_engine = launch(LaunchConfig::preset("tiny"));
+    let cap = max_context(&control_engine);
+    let control = run_saturation(
+        &control_engine,
+        &SaturationScenario::new(2209, 10, 3),
+        cap,
+    );
+    control_engine.shutdown();
+    assert_eq!(control.disconnected, 0);
+    assert_eq!(control.errors, 0, "control run must be clean: {:?}", control.streams);
+
+    let before = kvcache::global_stats();
+    let mut lc = LaunchConfig::preset("tiny")
+        .with_admission(2, 0)
+        .with_faults("delay3ms@t6..9", 2209);
+    lc.engine.pool_threads = 2;
+    let engine = launch(lc);
+    let report = run_saturation(
+        &engine,
+        &SaturationScenario::new(2209, 10, 3).with_disconnects(0.25),
+        cap,
+    );
+    let metrics = engine.metrics_snapshot();
+    engine.shutdown();
+
+    assert!(report.disconnected > 0, "the 25% chaos stream never fired");
+    assert!(
+        report.streams.iter().any(|s| s.outcome == Outcome::Completed),
+        "nothing survived the scenario"
+    );
+    assert_eq!(
+        report.errors,
+        0,
+        "delay faults and disconnects must not hard-fail streams: {:?}",
+        report
+            .streams
+            .iter()
+            .filter(|s| matches!(s.outcome, Outcome::Error(_)))
+            .collect::<Vec<_>>()
+    );
+    assert_eq!(metrics.shed(), report.shed as u64);
+    assert!(metrics.cancelled() > 0, "disconnects must propagate to the engine");
+
+    // survivor parity: chaos may change *which* streams finish, never
+    // *what* a finished stream says
+    let diffs = parity_mismatches(&control, &report);
+    assert!(diffs.is_empty(), "survivor streams diverged:\n{}", diffs.join("\n"));
+
+    // leaked blocks == 0, on both tiers, after the drain
+    let after = kvcache::global_stats();
+    assert_eq!(after.blocks_in_use, before.blocks_in_use, "saturation leaked device blocks");
+    assert_eq!(after.host_bytes, before.host_bytes, "saturation leaked host bytes");
+    assert_eq!(after.double_free, before.double_free, "a session was released twice");
+}

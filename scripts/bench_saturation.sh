@@ -1,0 +1,24 @@
+#!/usr/bin/env bash
+# Run the saturation benchmark (seeded hostile-traffic client pool with
+# mid-stream disconnects and an injected worker stall vs. an unfaulted
+# control run) and refresh BENCH_saturation.json at the repo root. A
+# survivor-parity divergence or a leaked K/V block exits non-zero.
+# BENCH_SMOKE=1 runs a smaller client pool (CI).
+#
+# Usage: scripts/bench_saturation.sh [extra cargo args...]
+set -euo pipefail
+
+cd "$(dirname "$0")/../rust"
+
+if ! ls ../artifacts/manifest.json >/dev/null 2>&1 && ! ls artifacts/manifest.json >/dev/null 2>&1; then
+    echo "warning: no AOT artifacts found — the bench will skip (run 'make artifacts')" >&2
+fi
+
+cargo bench --bench saturation "$@"
+
+out="$(cd .. && pwd)/BENCH_saturation.json"
+if [ -f "$out" ]; then
+    echo "refreshed $out"
+else
+    echo "warning: $out was not written (bench skipped?)" >&2
+fi

@@ -47,3 +47,10 @@ BENCH_SMOKE=1 cargo bench --bench kvspill
 # workload — a stream divergence or tokens-per-pass <= 1.3 exits
 # non-zero, and BENCH_specdecode.json is refreshed
 BENCH_SMOKE=1 cargo bench --bench specdecode
+
+# chaos smoke: the seeded saturation scenario (fixed seed, 25% mid-stream
+# disconnects + a worker-delay fault window, admission caps) against an
+# unfaulted control — leaked K/V blocks or a survivor-stream divergence
+# exits non-zero, clean shutdown is implied by the bench returning, and
+# BENCH_saturation.json is refreshed
+BENCH_SMOKE=1 cargo bench --bench saturation
