@@ -1,0 +1,195 @@
+//! Shared-prefix reuse benchmark: templated traffic (N shared templates,
+//! most fresh prompts starting with one) against the same engine with
+//! the prefix cache off vs on.
+//!
+//! The claims under test: a trie hit skips the shared prefill work
+//! (prefill tokens executed drop, TTFT improves), completed streams are
+//! byte-identical between the two cells (hard gate — reuse must be
+//! invisible in the bytes), and no K/V block leaks in either cell (hard
+//! gate, shared blocks included).
+//!
+//! Results land machine-readably in `BENCH_prefix.json` at the repo root
+//! (regenerate with `scripts/bench_prefix.sh`; `BENCH_SMOKE=1` runs a
+//! smaller client pool for CI).
+
+use energonai::coordinator::engine::{Engine, LaunchConfig};
+use energonai::memory::kvcache;
+use energonai::runtime::find_artifacts;
+use energonai::workload::loadgen::{
+    parity_mismatches, pctl_us, run_saturation, LoadReport, SaturationScenario,
+};
+use energonai::workload::LengthDist;
+
+type Results = Vec<(String, f64)>;
+
+const SEED: u64 = 2209;
+
+/// Per-cell outcome the cross-cell gates need: the stream report, the
+/// leak counter, and the prompt positions the engine actually computed.
+struct Cell {
+    report: LoadReport,
+    leaked: u64,
+    prefill_toks: u64,
+}
+
+fn run_cell(
+    label: &str,
+    lc: LaunchConfig,
+    scenario: &SaturationScenario,
+    results: &mut Results,
+) -> Option<Cell> {
+    let before = kvcache::global_stats();
+    let engine = match Engine::launch(lc) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("skip {label}: {e:#}");
+            return None;
+        }
+    };
+    if !engine.kv_cache_on() {
+        eprintln!("skip {label}: decode artifacts missing");
+        engine.shutdown();
+        return None;
+    }
+    let max_context =
+        engine.manifest.shape_points("tiny").iter().map(|&(_, s)| s).max().unwrap();
+    let report = run_saturation(&engine, scenario, max_context);
+    let m = engine.metrics_snapshot();
+    let prefill_toks = m.prefill_tokens();
+    let (hits, misses) = m.prefix_hit_counts();
+    engine.shutdown();
+    let after = kvcache::global_stats();
+    let leaked = after.blocks_in_use.saturating_sub(before.blocks_in_use)
+        + after.host_bytes.saturating_sub(before.host_bytes)
+        + after.double_free.saturating_sub(before.double_free);
+    // monotonic process-wide counters: per-cell deltas
+    let grown = after.blocks_grown.saturating_sub(before.blocks_grown);
+    let adopted = after.adopted_blocks.saturating_sub(before.adopted_blocks);
+    let cow = after.cow_copies.saturating_sub(before.cow_copies);
+    println!(
+        "{label:>4}: {} turns in {:.1}ms — {} completed / {} errors; {:.0} tok/s; \
+         TTFT p50 {}µs p99 {}µs; {} prefill toks, {} blocks grown, \
+         {} hits / {} misses, {} adopted, {} cow, {} leaked",
+        report.turns(),
+        report.wall.as_secs_f64() * 1e3,
+        report.completed,
+        report.errors,
+        report.tokens_per_sec(),
+        pctl_us(&report.ttft_us, 50.0),
+        pctl_us(&report.ttft_us, 99.0),
+        prefill_toks,
+        grown,
+        hits,
+        misses,
+        adopted,
+        cow,
+        leaked,
+    );
+    let key = |k: &str| format!("{label}_{k}");
+    results.push((key("turns"), report.turns() as f64));
+    results.push((key("completed"), report.completed as f64));
+    results.push((key("errors"), report.errors as f64));
+    results.push((key("tokens_per_sec"), report.tokens_per_sec()));
+    results.push((key("wall_us"), report.wall.as_secs_f64() * 1e6));
+    results.push((key("ttft_p50_us"), pctl_us(&report.ttft_us, 50.0) as f64));
+    results.push((key("ttft_p99_us"), pctl_us(&report.ttft_us, 99.0) as f64));
+    results.push((key("tpot_p50_us"), pctl_us(&report.tpot_us, 50.0) as f64));
+    results.push((key("prefill_tokens"), prefill_toks as f64));
+    results.push((key("blocks_grown"), grown as f64));
+    results.push((key("prefix_hits"), hits as f64));
+    results.push((key("prefix_misses"), misses as f64));
+    results.push((key("adopted_blocks"), adopted as f64));
+    results.push((key("cow_copies"), cow as f64));
+    results.push((key("leaked_blocks"), leaked as f64));
+    Some(Cell { report, leaked, prefill_toks })
+}
+
+fn write_json(results: &Results) {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_prefix.json");
+    let mut body = String::from("{\n  \"schema\": \"bench_prefix/v1\",\n");
+    body.push_str("  \"generated_by\": \"scripts/bench_prefix.sh\",\n");
+    body.push_str("  \"preset\": \"tiny\",\n");
+    body.push_str(&format!("  \"seed\": {SEED},\n"));
+    body.push_str("  \"results\": {\n");
+    for (i, (k, v)) in results.iter().enumerate() {
+        let comma = if i + 1 == results.len() { "" } else { "," };
+        body.push_str(&format!("    \"{k}\": {v:.2}{comma}\n"));
+    }
+    body.push_str("  }\n}\n");
+    match std::fs::write(path, body) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}
+
+fn main() {
+    if find_artifacts().is_err() {
+        eprintln!("no AOT artifacts found — run `make artifacts` first; skipping");
+        return;
+    }
+    let smoke = std::env::var("BENCH_SMOKE").is_ok();
+    let (clients, turns) = if smoke { (8, 2) } else { (16, 3) };
+
+    // templated traffic: 3 shared 24-token templates over 90% of fresh
+    // prompts, short unique suffixes — the shape a prompt-template
+    // serving workload (few-shot prefixes, system prompts) produces
+    let mut scenario =
+        SaturationScenario::new(SEED, clients, turns).with_templates(3, 0.9, 24);
+    scenario.prompt_dist = LengthDist::HeavyTail(6, 1.1);
+
+    println!(
+        "== prefix reuse: {clients} clients x {turns} turns, 3 templates x 24 toks @ 90%, \
+         seed {SEED} ==\n"
+    );
+    let mut results = Results::new();
+    results.push(("clients".into(), clients as f64));
+    results.push(("turns_per_client".into(), turns as f64));
+    results.push(("templates".into(), 3.0));
+    results.push(("template_tokens".into(), 24.0));
+    results.push(("template_pct".into(), 0.9));
+
+    let off = run_cell(
+        "off",
+        LaunchConfig::preset("tiny").with_warmup(true),
+        &scenario,
+        &mut results,
+    );
+    let on = run_cell(
+        "on",
+        LaunchConfig::preset("tiny").with_warmup(true).with_prefix_cache(true),
+        &scenario,
+        &mut results,
+    );
+
+    if let (Some(off), Some(on)) = (off, on) {
+        let diffs = parity_mismatches(&off.report, &on.report);
+        results.push(("parity".into(), if diffs.is_empty() { 1.0 } else { 0.0 }));
+        let ratio = if on.prefill_toks > 0 {
+            off.prefill_toks as f64 / on.prefill_toks as f64
+        } else {
+            0.0
+        };
+        results.push(("prefill_reduction_x".into(), ratio));
+        println!(
+            "\nparity: {}",
+            if diffs.is_empty() {
+                "completed streams byte-identical across off/on".to_string()
+            } else {
+                format!("DIVERGED:\n{}", diffs.join("\n"))
+            }
+        );
+        println!(
+            "prefill tokens: {} off vs {} on ({ratio:.2}x reduction)",
+            off.prefill_toks, on.prefill_toks
+        );
+        let leaked = off.leaked + on.leaked;
+        write_json(&results);
+        if !diffs.is_empty() || leaked > 0 {
+            // the counters on disk are the evidence; fail the smoke gate
+            eprintln!("FAIL: parity_diffs={} leaked={leaked}", diffs.len());
+            std::process::exit(1);
+        }
+        return;
+    }
+    write_json(&results);
+}

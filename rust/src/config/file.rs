@@ -19,6 +19,7 @@
 //! kv_spill = true        # tiered cache: spill cold sessions to host
 //! kv_device_blocks = 256 # device-tier cap per worker (blocks)
 //! kv_host_blocks = 1024  # host-tier capacity (0 = unlimited)
+//! prefix_cache = true    # shared-prefix K/V reuse at admission
 //! speculative = true     # draft-and-verify decode over the cache
 //! spec_k = 4             # largest verify window (1 committed + k-1 drafts)
 //! pool_threads = 4
@@ -69,6 +70,7 @@ pub fn launch_from_doc(doc: &TomlDoc) -> anyhow::Result<LaunchConfig> {
         doc.f64_or("engine.kv_spill_high_water", launch.engine.kv_spill_high_water);
     launch.engine.kv_spill_low_water =
         doc.f64_or("engine.kv_spill_low_water", launch.engine.kv_spill_low_water);
+    launch.engine.prefix_cache = doc.bool_or("engine.prefix_cache", false);
     launch.engine.speculative = doc.bool_or("engine.speculative", false);
     launch.engine.spec_k = doc.usize_or("engine.spec_k", launch.engine.spec_k);
     launch.engine.max_queue_depth = doc.usize_or("engine.max_queue_depth", 0);
@@ -90,6 +92,10 @@ pub fn launch_from_doc(doc: &TomlDoc) -> anyhow::Result<LaunchConfig> {
     anyhow::ensure!(
         !launch.engine.kv_spill || launch.engine.kv_device_blocks > 0,
         "engine.kv_spill requires engine.kv_device_blocks > 0"
+    );
+    anyhow::ensure!(
+        !launch.engine.prefix_cache || launch.engine.kv_cache,
+        "engine.prefix_cache requires engine.kv_cache (adoption replays through the paged cache)"
     );
     anyhow::ensure!(
         launch.engine.kv_spill_low_water <= launch.engine.kv_spill_high_water
@@ -128,6 +134,7 @@ pub fn launch_from_doc(doc: &TomlDoc) -> anyhow::Result<LaunchConfig> {
             "engine.batch_deadline_ms", "engine.kv_cache",
             "engine.kv_spill", "engine.kv_device_blocks", "engine.kv_host_blocks",
             "engine.kv_spill_high_water", "engine.kv_spill_low_water",
+            "engine.prefix_cache",
             "engine.speculative", "engine.spec_k",
             "engine.max_queue_depth", "engine.admission_token_budget",
             "engine.slo_ttft_ms", "engine.slo_tpot_ms",
@@ -248,6 +255,20 @@ kv_spill_low_water = 0.5
         assert!(err.contains("spec_k"), "{err}");
         // speculation without the cache cannot verify anything
         let doc = TomlDoc::parse("[engine]\nspeculative = true\nkv_cache = false\n").unwrap();
+        let err = launch_from_doc(&doc).unwrap_err().to_string();
+        assert!(err.contains("kv_cache"), "{err}");
+    }
+
+    #[test]
+    fn prefix_cache_round_trip_and_validation() {
+        let doc = TomlDoc::parse("[engine]\nprefix_cache = true\n").unwrap();
+        let l = launch_from_doc(&doc).unwrap();
+        assert!(l.engine.prefix_cache);
+        // default: off (byte-identical fast path)
+        let l = launch_from_doc(&TomlDoc::parse("").unwrap()).unwrap();
+        assert!(!l.engine.prefix_cache);
+        // prefix reuse without the paged cache has nothing to adopt from
+        let doc = TomlDoc::parse("[engine]\nprefix_cache = true\nkv_cache = false\n").unwrap();
         let err = launch_from_doc(&doc).unwrap_err().to_string();
         assert!(err.contains("kv_cache"), "{err}");
     }

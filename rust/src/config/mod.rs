@@ -195,6 +195,14 @@ pub struct EngineConfig {
     pub kv_spill_high_water: f64,
     /// Spill target: evict cold sessions down to this fraction.
     pub kv_spill_low_water: f64,
+    /// Shared-prefix K/V reuse: retain whole-block prompt prefixes in a
+    /// refcounted registry and match new prompts against a trie at
+    /// admission — a hit adopts the cached blocks copy-on-write and
+    /// replays only the unmatched suffix, so templated traffic skips most
+    /// of its prefill work. Requires the KV cache; off by default, and
+    /// off is byte-identical to a build without the feature (no trie, no
+    /// registry, no extra batch metadata).
+    pub prefix_cache: bool,
     /// Speculative decode (draft-and-verify): a cheap drafter proposes
     /// tokens and one `*_verify` pass scores the whole window, committing
     /// the longest accepted prefix — tokens-per-pass > 1 at unchanged
@@ -250,6 +258,7 @@ impl Default for EngineConfig {
             kv_host_blocks: 0,
             kv_spill_high_water: 0.90,
             kv_spill_low_water: 0.70,
+            prefix_cache: false,
             speculative: false,
             spec_k: 4,
             max_queue_depth: 0,

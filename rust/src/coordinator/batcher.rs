@@ -23,6 +23,7 @@
 //! decodes still coalesce).
 
 use super::rpc::{BatchInput, Phase};
+use crate::memory::kvcache::prefix::PrefixIndex;
 use crate::memory::kvcache::tier::{TierCmd, TierPolicy};
 use crate::tensor::IntTensor;
 use std::collections::{HashMap, VecDeque};
@@ -39,11 +40,20 @@ pub struct Busy {
     pub reason: &'static str,
     /// Prefill requests queued at the moment of rejection.
     pub queued: usize,
+    /// Client back-off hint in milliseconds, derived from the Recorder's
+    /// rolling SLO window at rejection time (0 = no estimate, retry at
+    /// will). Carried to the server's `busy` reply so well-behaved
+    /// clients pace their retries instead of hammering a hot gate.
+    pub retry_after_ms: u64,
 }
 
 impl std::fmt::Display for Busy {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        write!(f, "busy ({}): {} prefills queued", self.reason, self.queued)
+        write!(
+            f,
+            "busy ({}): {} prefills queued, retry after {} ms",
+            self.reason, self.queued, self.retry_after_ms
+        )
     }
 }
 
@@ -62,25 +72,61 @@ pub struct Request {
     /// newest committed token — the verify window is `[last committed,
     /// draft...]`, so its size is `draft.len() + 1`. Empty otherwise.
     pub draft: Vec<i32>,
+    /// First step of a shared-prefix hit: adopt `(registrant id,
+    /// positions)` from every worker's prefix registry before this row
+    /// executes. Set only on the stepping decode `form` converts a
+    /// matched prefill into; continuations never carry it.
+    pub adopt: Option<(u64, usize)>,
+    /// Positions this prefill retains into the worker prefix registries
+    /// right after it executes (0 = none; always block-aligned). Set by
+    /// the admission pass when the prompt registers as a future donor.
+    pub retain: usize,
+    /// Cached positions this session adopted at admission — persisted
+    /// through every continuation so the token budget meters only the
+    /// computed suffix and metrics can attribute TTFT to the hit path.
+    pub adopted: usize,
 }
 
 impl Request {
     pub fn new(id: u64, tokens: Vec<i32>) -> Request {
-        Request { id, tokens, phase: Phase::Prefill, draft: Vec::new() }
+        Request {
+            id,
+            tokens,
+            phase: Phase::Prefill,
+            draft: Vec::new(),
+            adopt: None,
+            retain: 0,
+            adopted: 0,
+        }
     }
 
     /// A continuation step of a cached session: `tokens` is the full
     /// evolving sequence (the collector and length bookkeeping need it),
     /// but only the last token enters the decode batch.
     pub fn decode(id: u64, tokens: Vec<i32>) -> Request {
-        Request { id, tokens, phase: Phase::Decode, draft: Vec::new() }
+        Request {
+            id,
+            tokens,
+            phase: Phase::Decode,
+            draft: Vec::new(),
+            adopt: None,
+            retain: 0,
+            adopted: 0,
+        }
     }
 
     /// A speculative continuation step: the last committed token plus
     /// `draft` enter the verify batch as a `draft.len() + 1`-token window.
     pub fn verify(id: u64, tokens: Vec<i32>, draft: Vec<i32>) -> Request {
         debug_assert!(!draft.is_empty(), "a verify step needs at least one drafted token");
-        Request { id, tokens, phase: Phase::Verify, draft }
+        Request { id, tokens, phase: Phase::Verify, draft, adopt: None, retain: 0, adopted: 0 }
+    }
+
+    /// Tag a continuation with the positions its session adopted at
+    /// admission (see [`Request::adopted`]).
+    pub fn with_adopted(mut self, n: usize) -> Request {
+        self.adopted = n;
+        self
     }
 
     pub fn len(&self) -> usize {
@@ -183,6 +229,24 @@ impl FormedBatch {
         // collector never mistakes them for a live session
         let mut req_ids: Vec<u64> = self.requests.iter().map(|r| r.id).collect();
         req_ids.resize(b, u64::MAX);
+        // shared-prefix metadata: only materialized when some row carries
+        // it, so batches formed with the feature off stay byte-identical
+        // to builds that predate it
+        let prefix_adopt = if self.requests.iter().any(|r| r.adopt.is_some()) {
+            let mut v: Vec<Option<(u64, usize)>> =
+                self.requests.iter().map(|r| r.adopt).collect();
+            v.resize(b, None);
+            v
+        } else {
+            Vec::new()
+        };
+        let prefix_retain = if self.requests.iter().any(|r| r.retain > 0) {
+            let mut v: Vec<usize> = self.requests.iter().map(|r| r.retain).collect();
+            v.resize(b, 0);
+            v
+        } else {
+            Vec::new()
+        };
         BatchInput {
             ids: IntTensor::new(&[b, s], ids),
             valid_lens: valid,
@@ -191,6 +255,8 @@ impl FormedBatch {
             seq: s,
             phase: self.phase,
             cache: false,
+            prefix_adopt,
+            prefix_retain,
         }
     }
 }
@@ -236,10 +302,26 @@ pub struct Batcher {
     /// continuations re-enter; retired by `tier_free` / `purge`. This is
     /// the batcher-local view of decode working-set load that the token
     /// budget meters — in-flight sessions are *not* in `queue`, so queue
-    /// length alone cannot see them.
+    /// length alone cannot see them. Sessions that adopted a cached
+    /// prefix are charged their computed suffix only.
     active_tokens: HashMap<u64, usize>,
     /// Prefill buckets deferred by the token budget (observability).
     budget_deferrals: u64,
+    /// Shared-prefix trie (`None` = feature off, the byte-identical fast
+    /// path). When present, `form` runs an admission pass over the
+    /// prefill run at the queue front: prompts whose leading blocks are
+    /// retained in the worker registries convert into stepping decodes
+    /// that adopt those blocks, and fresh prompts register as donors.
+    prefix: Option<PrefixIndex>,
+    /// K/V block size in positions — match/retain granularity.
+    prefix_chunk: usize,
+    /// Device blocks each live registry entry holds (for crediting the
+    /// tier model when the entry is evicted).
+    retained_blocks: HashMap<u64, usize>,
+    /// In-flight adoptions: adopter session id -> leased registrant id.
+    /// The lease is released on the adopter's first completed step (or
+    /// its purge), never twice.
+    adopt_leases: HashMap<u64, u64>,
 }
 
 impl Batcher {
@@ -259,6 +341,10 @@ impl Batcher {
             token_budget: 0,
             active_tokens: HashMap::new(),
             budget_deferrals: 0,
+            prefix: None,
+            prefix_chunk: 0,
+            retained_blocks: HashMap::new(),
+            adopt_leases: HashMap::new(),
         }
     }
 
@@ -293,6 +379,63 @@ impl Batcher {
         self
     }
 
+    /// Enable shared-prefix reuse at admission: a token-id-keyed trie at
+    /// K/V block granularity (`chunk` positions per level) holding at
+    /// most `max_entries` retained prefixes (0 = unbounded). Requires
+    /// decode widths — a matched prompt is served through the decode
+    /// path.
+    pub fn with_prefix_cache(mut self, chunk: usize, max_entries: usize) -> Batcher {
+        assert!(chunk >= 1, "prefix chunk must be at least one position");
+        self.prefix_chunk = chunk;
+        self.prefix = Some(PrefixIndex::new(chunk, max_entries));
+        self
+    }
+
+    pub fn prefix_enabled(&self) -> bool {
+        self.prefix.is_some()
+    }
+
+    /// (hits, misses) the admission matcher has observed so far.
+    pub fn prefix_hit_counts(&self) -> (u64, u64) {
+        self.prefix.as_ref().map_or((0, 0), |p| p.hit_counts())
+    }
+
+    /// Live trie entries (registered donor prefixes).
+    pub fn cached_prefix_entries(&self) -> usize {
+        self.prefix.as_ref().map_or(0, |p| p.len())
+    }
+
+    /// Drain registrant ids whose registry entries must be dropped on the
+    /// workers (cap eviction, registrant spill, purge). The caller
+    /// publishes them as ticketed `EvictPrefix` commands — ticket order
+    /// lands each eviction after the retention and after every adoption
+    /// formed against the entry. Device blocks held by the evicted
+    /// entries are credited back to the tier model here.
+    pub fn take_prefix_evictions(&mut self) -> Vec<u64> {
+        let evicted = match self.prefix.as_mut() {
+            Some(p) => p.take_evictions(),
+            None => return Vec::new(),
+        };
+        for id in &evicted {
+            if let Some(blocks) = self.retained_blocks.remove(id) {
+                if let Some(t) = self.tier.as_mut() {
+                    t.note_released(blocks);
+                }
+            }
+        }
+        evicted
+    }
+
+    /// Failure-path removal: the registrant's prefill batch errored, so
+    /// its retention may never have landed on the workers. Drop the trie
+    /// entries now; the published eviction is a tolerated no-op on any
+    /// worker that never retained.
+    pub fn prefix_drop(&mut self, ids: &[u64]) {
+        if let Some(p) = self.prefix.as_mut() {
+            p.remove(ids);
+        }
+    }
+
     pub fn tier(&self) -> Option<&TierPolicy> {
         self.tier.as_ref()
     }
@@ -303,8 +446,24 @@ impl Batcher {
 
     /// Drain the tier commands the last `form` calls produced. The caller
     /// must publish these (ticketed) before publishing the formed batch.
+    /// A spill decision also removes the victims' trie entries (shared
+    /// registrants are excluded from spill victims, so this is a
+    /// defensive backstop): eviction rides the spill, published through
+    /// the same ticketed stream via [`Batcher::take_prefix_evictions`].
     pub fn take_tier_cmds(&mut self) -> Vec<TierCmd> {
-        std::mem::take(&mut self.tier_cmds)
+        let cmds = std::mem::take(&mut self.tier_cmds);
+        if let Some(p) = self.prefix.as_mut() {
+            for c in &cmds {
+                if let TierCmd::Spill(ids) = c {
+                    let present: Vec<u64> =
+                        ids.iter().copied().filter(|id| p.contains(*id)).collect();
+                    if !present.is_empty() {
+                        p.remove(&present);
+                    }
+                }
+            }
+        }
+        cmds
     }
 
     pub fn decode_widths(&self) -> Vec<usize> {
@@ -345,7 +504,15 @@ impl Batcher {
     /// to half — and a cap of 0 (unlimited) degrades to `2 * max_batch`
     /// so a saturated engine still sheds rather than building an
     /// ever-growing backlog it can never serve within SLO.
-    pub fn admit(&mut self, r: Request, arrived: Instant, pressure: bool) -> anyhow::Result<()> {
+    /// `retry_after_ms` is the caller's current back-off estimate (the
+    /// Recorder's SLO-window hint), stamped into the [`Busy`] rejection.
+    pub fn admit(
+        &mut self,
+        r: Request,
+        arrived: Instant,
+        pressure: bool,
+        retry_after_ms: u64,
+    ) -> anyhow::Result<()> {
         let mut cap = self.max_queue_depth;
         if pressure {
             cap = if cap == 0 { 2 * self.max_batch } else { (cap / 2).max(1) };
@@ -354,7 +521,7 @@ impl Batcher {
             let queued = self.queued_prefills();
             if queued >= cap {
                 let reason = if pressure { "slo-pressure" } else { "queue-full" };
-                return Err(anyhow::Error::new(Busy { reason, queued }));
+                return Err(anyhow::Error::new(Busy { reason, queued, retry_after_ms }));
             }
         }
         self.push_at(r, arrived)
@@ -367,8 +534,28 @@ impl Batcher {
     /// ledger: its KV release is the caller's next move.
     pub fn purge(&mut self, id: u64) -> bool {
         let before = self.queue.len();
-        self.queue.retain(|(r, _)| r.id != id);
+        let mut dropped_prefill = false;
+        self.queue.retain(|(r, _)| {
+            if r.id == id {
+                dropped_prefill |= r.phase == Phase::Prefill;
+                false
+            } else {
+                true
+            }
+        });
         self.active_tokens.remove(&id);
+        if let Some(p) = self.prefix.as_mut() {
+            // a *queued* prefill never executed, so a trie entry it
+            // registered must go (its retention will never land); an
+            // in-flight or finished registrant keeps its entry — the
+            // cached prefix outliving its donor is the whole point
+            if dropped_prefill && p.contains(id) {
+                p.remove(&[id]);
+            }
+            if let Some(donor) = self.adopt_leases.remove(&id) {
+                p.unlease(donor);
+            }
+        }
         self.queue.len() != before
     }
 
@@ -400,9 +587,26 @@ impl Batcher {
         if let Some(t) = self.tier.as_mut() {
             t.on_requeue(r.id);
         }
-        // keep the token ledger tracking the session's grown context
-        self.active_tokens.insert(r.id, r.cache_len());
+        self.prefix_step_done(r.id);
+        // keep the token ledger tracking the session's grown context;
+        // adopted positions were never computed here, so they don't count
+        self.active_tokens.insert(r.id, r.cache_len().saturating_sub(r.adopted));
         self.queue.push_front((r, arrived));
+    }
+
+    /// A session's forward completed (it re-entered the queue or
+    /// finished): its trie entry, if any, becomes matchable — the
+    /// retained rows are durably in every worker's registry — and any
+    /// adoption lease it held is released.
+    fn prefix_step_done(&mut self, id: u64) {
+        let p = match self.prefix.as_mut() {
+            Some(p) => p,
+            None => return,
+        };
+        p.mark_ready(id);
+        if let Some(donor) = self.adopt_leases.remove(&id) {
+            p.unlease(donor);
+        }
     }
 
     /// Finished sessions: credit their blocks in the tier model (no-op
@@ -410,6 +614,7 @@ impl Batcher {
     pub fn tier_free(&mut self, ids: &[u64]) {
         for id in ids {
             self.active_tokens.remove(id);
+            self.prefix_step_done(*id);
         }
         if let Some(t) = self.tier.as_mut() {
             t.on_free(ids);
@@ -437,6 +642,7 @@ impl Batcher {
         if self.queue.is_empty() {
             return None;
         }
+        self.apply_prefix_matches();
         let phase = self.queue[0].0.phase;
         // verify buckets are shape-specialized per window size k: only a
         // same-k run can share one (runs are homogeneous anyway — the
@@ -559,9 +765,15 @@ impl Batcher {
                     return None; // admission control deferred the batch
                 }
                 // the batch is committed: its sessions join (or update)
-                // the admission token ledger at their post-step length
+                // the admission token ledger at their post-step length,
+                // minus any positions adopted from a cached prefix (the
+                // budget meters computed work, and the adopted blocks are
+                // already charged to the registry)
                 for (r, _) in reqs.iter() {
-                    self.active_tokens.insert(r.id, r.cache_len());
+                    self.active_tokens.insert(r.id, r.cache_len().saturating_sub(r.adopted));
+                }
+                if self.prefix.is_some() {
+                    self.commit_prefix_rows(&reqs);
                 }
                 return Some(FormedBatch {
                     requests: reqs.into_iter().map(|(r, _)| r).collect(),
@@ -632,6 +844,94 @@ impl Batcher {
             }
         }
         true
+    }
+
+    /// Shared-prefix admission pass over the contiguous prefill run at
+    /// the queue front. Prompts whose leading blocks are already retained
+    /// in the worker registries convert into **stepping decodes**: adopt
+    /// the cached blocks, then walk the remaining prompt through the
+    /// decode path one token per step — byte-identical to a fresh prefill
+    /// because decode applies the same pinned greedy rule over the same
+    /// cached K/V rows. Prompts that miss register as future donors
+    /// (block-aligned, whole blocks only). Converted rows move ahead of
+    /// the remaining prefills: they are decode steps now, and decode
+    /// priority is the queue's standing rule.
+    fn apply_prefix_matches(&mut self) {
+        if self.prefix.is_none() {
+            return;
+        }
+        let run = self.queue.iter().take_while(|(r, _)| r.phase == Phase::Prefill).count();
+        if run == 0 {
+            return;
+        }
+        let chunk = self.prefix_chunk;
+        let mut stepped: Vec<(Request, Instant)> = Vec::new();
+        let mut kept: Vec<(Request, Instant)> = Vec::new();
+        for _ in 0..run {
+            let (mut r, at) = self.queue.pop_front().unwrap();
+            if r.retain > 0 || r.adopt.is_some() {
+                // already resolved on an earlier (deferred) pass
+                kept.push((r, at));
+                continue;
+            }
+            let p = self.prefix.as_mut().unwrap();
+            // the final prompt position is always computed fresh — its
+            // logits are this row's first sampled token — so the match
+            // caps one position short of the prompt end
+            let cap = ((r.len() - 1) / chunk) * chunk;
+            let hit = if cap > 0 { p.match_longest(&r.tokens[..cap]) } else { None };
+            match hit {
+                Some((donor, m)) => {
+                    p.lease(donor);
+                    self.adopt_leases.insert(r.id, donor);
+                    let step = Request {
+                        id: r.id,
+                        tokens: r.tokens[..m + 1].to_vec(),
+                        phase: Phase::Decode,
+                        draft: Vec::new(),
+                        adopt: Some((donor, m)),
+                        retain: 0,
+                        adopted: m,
+                    };
+                    stepped.push((step, at));
+                }
+                None => {
+                    if p.register(r.id, &r.tokens) {
+                        r.retain = (r.len() / chunk) * chunk;
+                    }
+                    kept.push((r, at));
+                }
+            }
+        }
+        for pair in kept.into_iter().rev() {
+            self.queue.push_front(pair);
+        }
+        for pair in stepped.into_iter().rev() {
+            self.queue.push_front(pair);
+        }
+    }
+
+    /// Post-commit bookkeeping for prefix-cache rows in a formed batch:
+    /// registrants charge their registry blocks to the tier model (the
+    /// registry is its own holder, outliving the session) and both
+    /// registrants and adopters become spill-exempt — their device blocks
+    /// are (or are about to be) shared, and shared blocks never move.
+    fn commit_prefix_rows(&mut self, reqs: &[(Request, Instant)]) {
+        for (r, _) in reqs {
+            if r.retain > 0 && !self.retained_blocks.contains_key(&r.id) {
+                let blocks = r.retain / self.prefix_chunk;
+                self.retained_blocks.insert(r.id, blocks);
+                if let Some(t) = self.tier.as_mut() {
+                    t.note_retained(blocks);
+                    t.mark_shared(r.id);
+                }
+            }
+            if r.adopt.is_some() {
+                if let Some(t) = self.tier.as_mut() {
+                    t.mark_shared(r.id);
+                }
+            }
+        }
     }
 
     /// Drain everything regardless of timeout (shutdown path). With a
@@ -1029,16 +1329,17 @@ mod tests {
     fn admit_sheds_past_depth_cap() {
         let mut b = batcher().with_admission(2, 0);
         let now = Instant::now();
-        b.admit(req(0, 8), now, false).unwrap();
-        b.admit(req(1, 8), now, false).unwrap();
-        let err = b.admit(req(2, 8), now, false).unwrap_err();
+        b.admit(req(0, 8), now, false, 0).unwrap();
+        b.admit(req(1, 8), now, false, 0).unwrap();
+        let err = b.admit(req(2, 8), now, false, 40).unwrap_err();
         let busy = busy_of(&err);
         assert_eq!((busy.reason, busy.queued), ("queue-full", 2));
+        assert_eq!(busy.retry_after_ms, 40, "rejection carries the back-off hint");
         assert_eq!(b.pending(), 2, "shed request must not enter the queue");
         // the cap meters prefills only: a decode continuation still
         // requeues (front) and the prefills behind it still count as 2
         b.requeue_front(Request::decode(9, vec![5; 4]), now);
-        let err = b.admit(req(3, 8), now, false).unwrap_err();
+        let err = b.admit(req(3, 8), now, false, 0).unwrap_err();
         assert_eq!(busy_of(&err).queued, 2);
     }
 
@@ -1047,20 +1348,20 @@ mod tests {
         // explicit cap 4 halves to 2 under pressure
         let mut b = batcher().with_admission(4, 0);
         let now = Instant::now();
-        b.admit(req(0, 8), now, true).unwrap();
-        b.admit(req(1, 8), now, true).unwrap();
-        let err = b.admit(req(2, 8), now, true).unwrap_err();
+        b.admit(req(0, 8), now, true, 0).unwrap();
+        b.admit(req(1, 8), now, true, 0).unwrap();
+        let err = b.admit(req(2, 8), now, true, 0).unwrap_err();
         assert_eq!(busy_of(&err).reason, "slo-pressure");
         // ...but without pressure the full cap still admits
-        b.admit(req(2, 8), now, false).unwrap();
+        b.admit(req(2, 8), now, false, 0).unwrap();
         // unlimited cap degrades to 2 * max_batch (= 8) under pressure
         let mut b = batcher();
         for i in 0..8 {
-            b.admit(req(i, 8), now, true).unwrap();
+            b.admit(req(i, 8), now, true, 0).unwrap();
             // consume nothing: form won't fire below, queue just grows
         }
-        assert!(b.admit(req(8, 8), now, true).is_err());
-        assert!(b.admit(req(8, 8), now, false).is_ok(), "no cap without pressure");
+        assert!(b.admit(req(8, 8), now, true, 0).is_err());
+        assert!(b.admit(req(8, 8), now, false, 0).is_ok(), "no cap without pressure");
     }
 
     #[test]
@@ -1140,8 +1441,154 @@ mod tests {
 
     #[test]
     fn busy_formats_and_downcasts_through_anyhow() {
-        let e = anyhow::Error::new(Busy { reason: "queue-full", queued: 3 });
-        assert_eq!(e.to_string(), "busy (queue-full): 3 prefills queued");
+        let e = anyhow::Error::new(Busy { reason: "queue-full", queued: 3, retry_after_ms: 25 });
+        assert_eq!(e.to_string(), "busy (queue-full): 3 prefills queued, retry after 25 ms");
         assert_eq!(e.downcast_ref::<Busy>().unwrap().queued, 3);
+        assert_eq!(e.downcast_ref::<Busy>().unwrap().retry_after_ms, 25);
+    }
+
+    fn prefix_batcher() -> Batcher {
+        batcher().with_decode_widths(vec![1, 2, 4]).with_prefix_cache(4, 0)
+    }
+
+    /// Drive prompt `toks` for session `id` through prefill + one
+    /// continuation so its registered prefix becomes matchable.
+    fn seed_donor(b: &mut Batcher, id: u64, toks: Vec<i32>) {
+        let old = Instant::now() - Duration::from_millis(20);
+        let len = toks.len();
+        b.push_at(Request::new(id, toks.clone()), old).unwrap();
+        let fb = b.form(Instant::now()).expect("donor prefill forms");
+        assert_eq!((fb.phase, fb.requests[0].id), (Phase::Prefill, id));
+        let mut cont = toks;
+        cont.push(777);
+        b.requeue_front(Request::decode(id, cont), old);
+        let fb = b.form(Instant::now()).expect("donor continuation forms");
+        assert_eq!(fb.phase, Phase::Decode);
+        assert_eq!(fb.requests[0].len(), len + 1);
+    }
+
+    #[test]
+    fn prefix_miss_registers_whole_blocks_for_retention() {
+        let mut b = prefix_batcher();
+        let old = Instant::now() - Duration::from_millis(20);
+        // 10 tokens, chunk 4: two whole blocks (8 positions) register
+        b.push_at(Request::new(1, (0..10).collect()), old).unwrap();
+        let fb = b.form(Instant::now()).expect("miss still prefills");
+        assert_eq!(fb.phase, Phase::Prefill);
+        assert_eq!(fb.requests[0].retain, 8);
+        let input = fb.to_input();
+        assert_eq!(input.prefix_retain[0], 8);
+        assert!(input.prefix_adopt.is_empty(), "no adoptions in this batch");
+        assert_eq!(b.cached_prefix_entries(), 1);
+        assert_eq!(b.prefix_hit_counts(), (0, 1));
+        // a sub-block prompt neither matches nor registers
+        b.push_at(Request::new(2, vec![9, 9, 9]), old).unwrap();
+        let fb = b.form(Instant::now()).unwrap();
+        assert_eq!(fb.requests[0].retain, 0);
+        assert!(fb.to_input().prefix_retain.is_empty());
+        assert_eq!(b.cached_prefix_entries(), 1);
+    }
+
+    #[test]
+    fn prefix_hit_converts_prefill_into_stepping_decode() {
+        let mut b = prefix_batcher();
+        let old = Instant::now() - Duration::from_millis(20);
+        seed_donor(&mut b, 1, (0..10).collect());
+        // same first 8 tokens, different tail: adopt 8, step from there
+        let prompt: Vec<i32> = (0..8).chain([50, 51, 52, 53]).collect();
+        b.push_at(Request::new(2, prompt), old).unwrap();
+        let fb = b.form(Instant::now()).expect("hit forms as a decode step");
+        assert_eq!(fb.phase, Phase::Decode);
+        let r = &fb.requests[0];
+        assert_eq!(r.adopt, Some((1, 8)));
+        assert_eq!(r.adopted, 8);
+        assert_eq!(r.len(), 9, "adopted prefix + the first stepped position");
+        assert_eq!(*r.tokens.last().unwrap(), 50);
+        let input = fb.to_input();
+        assert_eq!(input.prefix_adopt[0], Some((1, 8)));
+        assert_eq!(b.prefix_hit_counts().0, 1);
+        // the token budget meters the computed suffix only
+        assert_eq!(b.active_tokens[&2], 1);
+        // continuations keep the discount
+        b.requeue_front(Request::decode(2, vec![0; 10]).with_adopted(8), old);
+        assert_eq!(b.active_tokens[&2], 2);
+    }
+
+    #[test]
+    fn prefix_match_never_covers_the_final_prompt_position() {
+        let mut b = prefix_batcher();
+        let old = Instant::now() - Duration::from_millis(20);
+        seed_donor(&mut b, 1, (0..8).collect());
+        // identical 8-token prompt: the last position must be computed
+        // fresh (its logits are the first sampled token), so only the
+        // first block can be adopted
+        b.push_at(Request::new(2, (0..8).collect()), old).unwrap();
+        let fb = b.form(Instant::now()).unwrap();
+        assert_eq!(fb.phase, Phase::Decode);
+        assert_eq!(fb.requests[0].adopt, Some((1, 4)));
+    }
+
+    #[test]
+    fn purge_of_queued_registrant_drops_its_trie_entry() {
+        let mut b = prefix_batcher();
+        // fresh arrival: form() registers the prompt but waits for the
+        // batching timeout, leaving the registrant queued
+        b.push_at(Request::new(1, (0..8).collect()), Instant::now()).unwrap();
+        assert!(b.form(Instant::now()).is_none());
+        assert_eq!(b.cached_prefix_entries(), 1);
+        assert!(b.purge(1));
+        assert_eq!(b.cached_prefix_entries(), 0);
+        // the eviction publishes (a no-op on workers that never retained)
+        assert_eq!(b.take_prefix_evictions(), vec![1]);
+    }
+
+    #[test]
+    fn adoption_lease_pins_entry_until_first_step_completes() {
+        let mut b = batcher().with_decode_widths(vec![1, 2, 4]).with_prefix_cache(4, 1);
+        let old = Instant::now() - Duration::from_millis(20);
+        seed_donor(&mut b, 1, (0..8).collect());
+        // an adopter forms against entry 1 and holds a lease on it
+        b.push_at(Request::new(2, (0..6).chain([60, 61]).collect()), old).unwrap();
+        let fb = b.form(Instant::now()).unwrap();
+        assert_eq!(fb.requests[0].adopt, Some((1, 4)));
+        // a second donor overflows the 1-entry cap, but the leased entry
+        // cannot be evicted yet
+        seed_donor(&mut b, 3, vec![9; 8]);
+        assert!(b.take_prefix_evictions().is_empty());
+        assert_eq!(b.cached_prefix_entries(), 2);
+        // the adopter's first step completes: the lease releases and the
+        // FIFO eviction resumes (oldest entry goes)
+        b.requeue_front(Request::decode(2, vec![0; 9]).with_adopted(4), old);
+        assert_eq!(b.take_prefix_evictions(), vec![1]);
+        assert_eq!(b.cached_prefix_entries(), 1);
+    }
+
+    #[test]
+    fn prefix_registry_blocks_charge_and_credit_the_tier_model() {
+        let mut b = batcher()
+            .with_decode_widths(vec![1, 2, 4])
+            .with_prefix_cache(8, 0)
+            .with_tier(TierPolicy::new(TierConfig::new(64, 64), 8));
+        let old = Instant::now() - Duration::from_millis(20);
+        b.push_at(req(1, 16), old).unwrap();
+        b.form(Instant::now()).expect("prefill forms");
+        // session blocks (2) + registry's own hold (2)
+        assert_eq!(b.tier().unwrap().device_used(), 4);
+        b.requeue_front(Request::decode(1, vec![1; 17]), old);
+        b.form(Instant::now()).expect("continuation forms");
+        b.tier_free(&[1]);
+        // the session's blocks are credited; the registry entry remains
+        assert_eq!(b.tier().unwrap().device_used(), 2);
+        b.prefix_drop(&[1]);
+        assert_eq!(b.take_prefix_evictions(), vec![1]);
+        assert_eq!(b.tier().unwrap().device_used(), 0);
+        // shared registrants are spill-exempt while alive
+        b.push_at(req(2, 16), old).unwrap();
+        b.form(Instant::now()).expect("second prefill forms");
+        b.requeue_front(Request::decode(2, vec![1; 17]), old);
+        assert!(
+            b.tier().unwrap().is_resident(2) == Some(true),
+            "registrant stays resident (shared sessions are never victims)"
+        );
     }
 }

@@ -188,6 +188,16 @@ impl LaunchConfig {
         self
     }
 
+    /// Shared-prefix K/V reuse on/off (off by default — off is
+    /// byte-identical to builds that predate the feature). Requires the
+    /// decode artifacts (`kv_cache`); with them live, admission matches
+    /// each new prompt against a trie of retained prefixes and hits adopt
+    /// the cached blocks instead of re-running the shared prefill.
+    pub fn with_prefix_cache(mut self, on: bool) -> Self {
+        self.engine.prefix_cache = on;
+        self
+    }
+
     /// Load shedding: cap the queued-prefill depth (`max_queue_depth`,
     /// 0 = unbounded) and bound admitted-but-unfinished KV positions
     /// (`token_budget`, 0 = unlimited). Past the depth cap `submit` /
@@ -222,6 +232,13 @@ impl LaunchConfig {
 /// policy must agree on (block counts per session are derived from it on
 /// both sides).
 pub const KV_BLOCK_POSITIONS: usize = 8;
+
+/// Capacity cap on the shared-prefix trie: ready, unleased entries past
+/// this count are evicted FIFO (worker registries free the cached blocks
+/// via a ticketed `EvictPrefix`). Generous relative to realistic template
+/// counts — eviction is a backstop against unbounded registry growth, not
+/// a working-set policy.
+pub const PREFIX_CACHE_MAX_ENTRIES: usize = 256;
 
 /// A generation request entering the session lifecycle: the prompt, how
 /// many continuation tokens to sample, and an optional stop token that
@@ -541,6 +558,17 @@ impl Shared {
             }
         }
     }
+
+    /// Publish prefix-registry evictions decided by the trie's capacity
+    /// cap (or a failure-path `prefix_drop`). Ticketed after any tier
+    /// commands from the same `form()` pass, so on every worker the
+    /// eviction lands after the last adoption that leased the entry.
+    fn publish_prefix_evictions(&self, ids: Vec<u64>) {
+        if self.kv_on && !ids.is_empty() {
+            let uid = self.tickets.issue();
+            self.bus.publish_evict(uid, ids);
+        }
+    }
 }
 
 /// The running system: workers + dispatcher pool + collector.
@@ -786,6 +814,14 @@ impl Engine {
             tcfg.low_water = launch.engine.kv_spill_low_water;
             b = b.with_tier(TierPolicy::new(tcfg, KV_BLOCK_POSITIONS));
         }
+        // shared-prefix reuse: admission-time trie matching only exists
+        // when incremental decode is live (adoption replays through the
+        // decode family). Off — the default — leaves every queue and
+        // batch byte-identical to a build without the feature.
+        let prefix_on = kv_on && launch.engine.prefix_cache;
+        if prefix_on {
+            b = b.with_prefix_cache(KV_BLOCK_POSITIONS, PREFIX_CACHE_MAX_ENTRIES);
+        }
         let batcher = Arc::new(Mutex::new(b));
         let max_seq = batcher.lock().unwrap().max_seq();
         let (batch_signal, batch_rx) = std::sync::mpsc::channel::<()>();
@@ -837,10 +873,13 @@ impl Engine {
                     // ridden in is never built, so no decode work is wasted
                     process_cancels(&shared, &batcher);
                     loop {
-                        let (fb, tier_cmds) = {
+                        let (fb, tier_cmds, prefix_evicts) = {
                             let mut b = batcher.lock().unwrap();
                             let fb = b.form(Instant::now());
-                            (fb, b.take_tier_cmds())
+                            // tier cmds drained first: a spill of a stale
+                            // registrant removes its trie entry, and that
+                            // eviction must ride this same drain
+                            (fb, b.take_tier_cmds(), b.take_prefix_evictions())
                         };
                         // tier commands are published here — before the
                         // batch reaches a dispatcher — so their tickets
@@ -848,6 +887,11 @@ impl Engine {
                         if !tier_cmds.is_empty() {
                             shared.publish_tier(tier_cmds);
                         }
+                        // prefix evictions after tier cmds: every adoption
+                        // that leased the evicted entry has already been
+                        // formed and its lease released, so its forward's
+                        // ticket precedes this one
+                        shared.publish_prefix_evictions(prefix_evicts);
                         match fb {
                             Some(fb) => {
                                 if fb_tx.send(fb).is_err() {
@@ -919,8 +963,13 @@ impl Engine {
         gref.set_cancel_hook(id, Arc::downgrade(&self.shared.cancels));
         let now = Instant::now();
         // sustained SLO violations tighten the admission cap (shed early
-        // rather than queue into latency collapse)
-        let pressure = self.shared.metrics.lock().unwrap().under_pressure();
+        // rather than queue into latency collapse); the retry hint rides
+        // any Busy reply so clients back off by observed service time
+        // instead of guessing
+        let (pressure, retry_hint) = {
+            let m = self.shared.metrics.lock().unwrap();
+            (m.under_pressure(), m.retry_after_hint_ms())
+        };
         self.shared.sessions.lock().unwrap().insert(
             id,
             Session {
@@ -933,7 +982,7 @@ impl Engine {
             },
         );
         if let Err(e) =
-            self.batcher.lock().unwrap().admit(Request::new(id, req.tokens), now, pressure)
+            self.batcher.lock().unwrap().admit(Request::new(id, req.tokens), now, pressure, retry_hint)
         {
             self.shared.sessions.lock().unwrap().remove(&id);
             if e.downcast_ref::<Busy>().is_some() {
@@ -974,6 +1023,13 @@ impl Engine {
         let mut r = self.shared.metrics.lock().unwrap().clone();
         r.record_arena(crate::memory::arena::ArenaPool::global_stats());
         r.record_kvcache(crate::memory::kvcache::global_stats());
+        {
+            let b = self.batcher.lock().unwrap();
+            if b.prefix_enabled() {
+                let (hits, misses) = b.prefix_hit_counts();
+                r.record_prefix_index(hits, misses, b.cached_prefix_entries());
+            }
+        }
         r
     }
 
@@ -999,6 +1055,11 @@ impl Engine {
         self.shared.kv_on
             && self.launch.engine.kv_spill
             && self.launch.engine.kv_device_blocks > 0
+    }
+
+    /// Is shared-prefix K/V reuse live — knob on + incremental decode live?
+    pub fn prefix_cache_on(&self) -> bool {
+        self.shared.kv_on && self.launch.engine.prefix_cache
     }
 
     pub fn pending_count(&self) -> usize {
@@ -1073,15 +1134,25 @@ fn collector_loop(
                     // be a small-model forward) are built only after the
                     // sessions lock drops, so drafter cost never blocks
                     // submissions or other collector iterations
-                    let mut staged: Vec<(u64, Vec<i32>, usize, Instant)> = Vec::new();
+                    // the trailing (adopted, stepping) pair carries the
+                    // prefix-reuse state: how many prompt positions the
+                    // session adopted from the cache, and whether it is
+                    // still mid-prompt (stepping) so its continuation must
+                    // stay a plain decode
+                    let mut staged: Vec<(u64, Vec<i32>, usize, Instant, usize, bool)> = Vec::new();
                     // finished sessions whose worker-side K/V blocks can go
                     let mut released: Vec<u64> = Vec::new();
                     // cancelled mid-generation: evicted here, freed by a
                     // distinct ticketed Cancel command
                     let mut cancelled: Vec<u64> = Vec::new();
-                    // (is_first, latency) per emitted token, recorded after
-                    // the sessions lock drops (one metrics lock per batch)
-                    let mut token_lats: Vec<(bool, Duration)> = Vec::new();
+                    // (is_first, prefix_hit, latency) per emitted token,
+                    // recorded after the sessions lock drops (one metrics
+                    // lock per batch)
+                    let mut token_lats: Vec<(bool, bool, Duration)> = Vec::new();
+                    // prompt positions this batch computed (whole prompts
+                    // for fresh prefills, one position per prompt-stepping
+                    // decode row) — the work prefix reuse exists to avoid
+                    let mut prefill_toks: u64 = 0;
                     // per verify row: (drafted, accepted, emitted)
                     let mut spec_rows: Vec<(u64, u64, u64)> = Vec::new();
                     {
@@ -1139,6 +1210,37 @@ fn collector_loop(
                             // ended a plain decode session, so speculation
                             // never changes a stream
                             let mut toks = row.tokens;
+                            // prefill-equivalent work: a fresh prefill
+                            // computes every prompt position; a decode row
+                            // still at or below the prompt boundary (only
+                            // possible for a prefix-cache hit) computes
+                            // exactly one
+                            if row.phase == Phase::Prefill {
+                                prefill_toks += toks.len() as u64;
+                            } else if toks.len() <= sess.prompt_len {
+                                prefill_toks += 1;
+                            }
+                            // prompt-stepping row of a prefix-cache hit:
+                            // every position before the last prompt token
+                            // has a known successor, so the argmax computed
+                            // here is discarded and the actual next prompt
+                            // token is fed instead. Nothing is emitted;
+                            // TTFT keeps running until the step at the
+                            // prompt boundary samples the first real token.
+                            if toks.len() < sess.prompt_len {
+                                let next = sess.gref.prompt()[toks.len()];
+                                toks.push(next);
+                                sess.last_at = now;
+                                staged.push((
+                                    row.id,
+                                    toks,
+                                    sess.max_new,
+                                    sess.arrived,
+                                    row.adopted,
+                                    true,
+                                ));
+                                continue;
+                            }
                             let gap = now.duration_since(sess.last_at);
                             let m = committed.len() as u32;
                             let mut consumed = 0u64;
@@ -1146,13 +1248,17 @@ fn collector_loop(
                             for &tok in &committed {
                                 let n_gen = toks.len() - sess.prompt_len;
                                 if n_gen == 0 {
-                                    token_lats.push((true, now.duration_since(sess.arrived)));
+                                    token_lats.push((
+                                        true,
+                                        row.adopted > 0,
+                                        now.duration_since(sess.arrived),
+                                    ));
                                 } else {
                                     // one engine step emitted m tokens:
                                     // attribute an equal share of the gap
                                     // to each so per-token percentiles
                                     // reflect the speculative speedup
-                                    token_lats.push((false, gap / m));
+                                    token_lats.push((false, false, gap / m));
                                 }
                                 sess.gref.push_token(tok);
                                 toks.push(tok);
@@ -1180,7 +1286,14 @@ fn collector_loop(
                                 // the session's token vector moves on into
                                 // its continuation row — no clone
                                 let remaining = sess.max_new - (toks.len() - sess.prompt_len);
-                                staged.push((row.id, toks, remaining, sess.arrived));
+                                staged.push((
+                                    row.id,
+                                    toks,
+                                    remaining,
+                                    sess.arrived,
+                                    row.adopted,
+                                    false,
+                                ));
                             }
                         }
                         // publish while the sessions lock is held: shutdown's
@@ -1189,11 +1302,12 @@ fn collector_loop(
                         shared.release_sessions(released.clone());
                         shared.cancel_sessions(cancelled.clone());
                     }
-                    if !token_lats.is_empty() || !spec_rows.is_empty() {
+                    if !token_lats.is_empty() || !spec_rows.is_empty() || prefill_toks > 0 {
                         let mut m = shared.metrics.lock().unwrap();
-                        for (is_first, lat) in token_lats {
+                        m.record_prefill_tokens(prefill_toks);
+                        for (is_first, hit, lat) in token_lats {
                             if is_first {
-                                m.record_first_token(lat);
+                                m.record_first_token_prefix(lat, hit);
                             } else {
                                 m.record_decode_token(lat);
                             }
@@ -1207,15 +1321,23 @@ fn collector_loop(
                     // context) outside every lock
                     let continuations: Vec<(Request, Instant)> = staged
                         .into_iter()
-                        .map(|(id, toks, remaining, arrived)| {
-                            let req = continuation_request(
-                                shared.spec.as_ref(),
-                                shared.kv_on,
-                                id,
-                                toks,
-                                remaining,
-                                max_seq,
-                            );
+                        .map(|(id, toks, remaining, arrived, adopted, stepping)| {
+                            let req = if stepping {
+                                // mid-prompt step of a prefix hit: always a
+                                // plain decode — a verify window would treat
+                                // committed prompt tokens as sampled output
+                                Request::decode(id, toks)
+                            } else {
+                                continuation_request(
+                                    shared.spec.as_ref(),
+                                    shared.kv_on,
+                                    id,
+                                    toks,
+                                    remaining,
+                                    max_seq,
+                                )
+                            }
+                            .with_adopted(adopted);
                             (req, arrived)
                         })
                         .collect();
@@ -1254,7 +1376,13 @@ fn collector_loop(
                         shared.release_sessions(released.clone());
                     }
                     if !released.is_empty() {
-                        batcher.lock().unwrap().tier_free(&released);
+                        let mut b = batcher.lock().unwrap();
+                        // a failed batch may be a registrant's prefill —
+                        // its retention never ran, so the trie entry must
+                        // go before tier_free could mark it ready
+                        b.prefix_drop(&released);
+                        b.tier_free(&released);
+                        drop(b);
                         let _ = signal.send(());
                     }
                 }
@@ -1455,9 +1583,14 @@ fn expire_stale(
                 // race past an un-published release
                 shared.release_sessions(released.clone());
             }
-            // tier model: poisoned sessions' blocks (either tier) are free
+            // tier model: poisoned sessions' blocks (either tier) are free.
+            // A poisoned registrant's prefill never completed, so its trie
+            // entry is dropped rather than marked ready (a ready entry
+            // with no worker-side retention would fail every adopter).
             if !released.is_empty() {
-                batcher.lock().unwrap().tier_free(&released);
+                let mut b = batcher.lock().unwrap();
+                b.prefix_drop(&released);
+                b.tier_free(&released);
             }
         }
         p.rref.fulfil(Err(anyhow::anyhow!("{msg}")));

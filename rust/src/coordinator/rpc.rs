@@ -56,6 +56,17 @@ pub struct BatchInput {
     /// the engine for batcher sessions when the cache is enabled; direct
     /// `infer_batch` batches never touch the cache.
     pub cache: bool,
+    /// Shared-prefix adoption metadata, one slot per batch row (empty =
+    /// feature off, the byte-identical default). `Some((donor, positions))`
+    /// on a row's *first* step makes every worker seed the row's session
+    /// from its prefix registry (`KvCache::adopt_prefix`) before touching
+    /// the cache — the adopted positions are never computed again.
+    pub prefix_adopt: Vec<Option<(u64, usize)>>,
+    /// Shared-prefix retention metadata, one count per batch row (empty =
+    /// feature off). A non-zero count on a prefill row makes every worker
+    /// retain the row's first `count` positions in its prefix registry
+    /// (`KvCache::retain_prefix`) after seeding the cache.
+    pub prefix_retain: Vec<usize>,
 }
 
 impl BatchInput {
@@ -111,6 +122,12 @@ pub enum Command {
     /// order guarantees the free lands after any in-flight forward that
     /// still writes those sessions.
     Cancel { uid: u64, ids: Arc<Vec<u64>> },
+    /// Drop the listed shared-prefix registry entries (keyed by their
+    /// registrant session ids) on every worker. Ticketed: eviction is
+    /// decided by the engine-side trie only for lease-free entries, and
+    /// ticket order guarantees the drop lands after every adoption formed
+    /// against the entry.
+    EvictPrefix { uid: u64, ids: Arc<Vec<u64>> },
     /// Drain and exit the worker loop.
     Shutdown,
 }
@@ -173,6 +190,14 @@ impl CommandBus {
         let ids = Arc::new(ids);
         for s in &self.senders {
             let _ = s.send(Command::Cancel { uid, ids: ids.clone() });
+        }
+    }
+
+    /// Publish a shared-prefix registry eviction.
+    pub fn publish_evict(&self, uid: u64, ids: Vec<u64>) {
+        let ids = Arc::new(ids);
+        for s in &self.senders {
+            let _ = s.send(Command::EvictPrefix { uid, ids: ids.clone() });
         }
     }
 
@@ -257,6 +282,8 @@ mod tests {
             seq: 4,
             phase: Phase::Prefill,
             cache: false,
+            prefix_adopt: Vec::new(),
+            prefix_retain: Vec::new(),
         }
     }
 
@@ -310,6 +337,21 @@ mod tests {
                     assert!(hint);
                 }
                 _ => panic!("expected Prefetch"),
+            }
+        }
+    }
+
+    #[test]
+    fn evict_prefix_reaches_all_workers() {
+        let (bus, rxs) = CommandBus::new(2);
+        bus.publish_evict(8, vec![21]);
+        for rx in &rxs {
+            match rx.recv().unwrap() {
+                Command::EvictPrefix { uid, ids } => {
+                    assert_eq!(uid, 8);
+                    assert_eq!(*ids, vec![21]);
+                }
+                _ => panic!("expected EvictPrefix"),
             }
         }
     }

@@ -128,6 +128,7 @@ enum Work {
     Cancel(Arc<Vec<u64>>),
     Spill(Arc<Vec<u64>>),
     Prefetch { ids: Arc<Vec<u64>>, hint: bool },
+    EvictPrefix(Arc<Vec<u64>>),
 }
 
 impl Worker {
@@ -167,6 +168,11 @@ impl Worker {
                             }
                         }
                     }
+                    Work::EvictPrefix(ids) => {
+                        if let Some(kv) = &mut self.kv {
+                            kv.evict_prefix(&ids);
+                        }
+                    }
                     Work::Prefetch { ids, hint } => {
                         if let Some(kv) = &mut self.kv {
                             let t0 = std::time::Instant::now();
@@ -198,6 +204,9 @@ impl Worker {
                 Ok(Command::Spill { uid, ids }) => queue.push(uid, (uid, Work::Spill(ids))),
                 Ok(Command::Prefetch { uid, ids, hint }) => {
                     queue.push(uid, (uid, Work::Prefetch { ids, hint }))
+                }
+                Ok(Command::EvictPrefix { uid, ids }) => {
+                    queue.push(uid, (uid, Work::EvictPrefix(ids)))
                 }
                 Ok(Command::Shutdown) | Err(_) => shutting_down = true,
             }
@@ -328,6 +337,7 @@ impl Worker {
         }
         if store_kv {
             self.kv_advance(input);
+            self.kv_retain(input);
         }
 
         // ---- hand off or reply --------------------------------------------
@@ -366,6 +376,9 @@ impl Worker {
     ) -> anyhow::Result<Option<BatchOutput>> {
         anyhow::ensure!(self.kv.is_some(), "decode batch {uid} but the KV cache is disabled");
         anyhow::ensure!(input.seq == 1, "decode batch {uid} has seq {}", input.seq);
+        // shared-prefix hits arrive as decode steps whose session does not
+        // exist yet: seed it from the registry before any layer gathers
+        self.kv_adopt(input);
         let valid = valid_len_arg(&input.valid_lens);
 
         // ---- acquire the stage input ------------------------------------
@@ -803,6 +816,48 @@ impl Worker {
             );
         }
         Ok((kc, vc))
+    }
+
+    /// Seed adopted rows' sessions from the prefix registry (shared-prefix
+    /// reuse): a hit's first step carries `(donor, positions)` metadata,
+    /// and `kv_staging` would find an empty cache without the adoption.
+    /// A failed adoption (entry evicted despite the lease protocol) leaves
+    /// the session absent, so the staging length check fails the batch
+    /// loudly instead of decoding against garbage.
+    fn kv_adopt(&mut self, input: &BatchInput) {
+        if input.prefix_adopt.is_empty() {
+            return;
+        }
+        let kv = self.kv.as_mut().expect("kv_adopt without a cache");
+        for (i, &id) in input.req_ids.iter().enumerate() {
+            if id == u64::MAX {
+                continue;
+            }
+            if let Some(&Some((donor, positions))) = input.prefix_adopt.get(i) {
+                if kv.len(id).is_none() {
+                    kv.adopt_prefix(id, donor, positions);
+                }
+            }
+        }
+    }
+
+    /// Retain prefill rows' prompt prefixes in the registry (shared-prefix
+    /// reuse): the engine sets a non-zero count for rows whose prompt it
+    /// registered in the admission trie. Runs after `kv_advance`, so the
+    /// retained positions are published.
+    fn kv_retain(&mut self, input: &BatchInput) {
+        if input.prefix_retain.is_empty() {
+            return;
+        }
+        let kv = self.kv.as_mut().expect("kv_retain without a cache");
+        for (i, &id) in input.req_ids.iter().enumerate() {
+            if id == u64::MAX {
+                continue;
+            }
+            if input.prefix_retain.get(i).map_or(0, |&n| n) > 0 {
+                kv.retain_prefix(id, input.prefix_retain[i]);
+            }
+        }
     }
 
     /// Seed the cache from a prefill `*_kv` output: rows 0..valid_len of

@@ -35,6 +35,7 @@
 //! process-wide atomics surfaced through `metrics::Recorder` (like the
 //! activation arena's, §Perf).
 
+pub mod prefix;
 pub mod tier;
 
 use crate::memory::arena::ArenaPool;
@@ -98,12 +99,29 @@ pub struct KvStats {
     /// `truncate_tail` calls that actually shortened a session
     /// (speculative decode: rejected draft rows cut back).
     pub truncates: u64,
-    /// Blocks returned to the free list (or host bytes' worth of blocks
-    /// released) by tail truncation.
+    /// Block references released by tail truncation (shared blocks are
+    /// decremented, not recycled; spilled images count their host bytes'
+    /// worth of blocks).
     pub truncated_blocks: u64,
     /// Device blocks carved past the configured soft capacity (the
     /// engine-side policy failed to keep pressure down).
     pub overflow_blocks: u64,
+    /// Cached prefixes currently retained in worker registries (gauge;
+    /// shared-prefix reuse).
+    pub cached_prefixes: u64,
+    /// Sessions that adopted a cached prefix instead of prefilling it.
+    pub prefix_adopts: u64,
+    /// Device blocks adopted by refcount instead of being written fresh
+    /// (each one is a whole block of prefill K/V that was never stored
+    /// twice).
+    pub adopted_blocks: u64,
+    /// Copy-on-write block copies: a session wrote into a block another
+    /// holder still references, so the block was privatized first.
+    pub cow_copies: u64,
+    /// Spills refused because one of the session's blocks is shared — a
+    /// block another resident holder still reads must never leave the
+    /// device tier ("no block both shared and spilled").
+    pub spill_denied_shared: u64,
 }
 
 static G_IN_USE: AtomicU64 = AtomicU64::new(0);
@@ -126,6 +144,11 @@ static G_SPILL_DENIED: AtomicU64 = AtomicU64::new(0);
 static G_OVERFLOW: AtomicU64 = AtomicU64::new(0);
 static G_TRUNCATES: AtomicU64 = AtomicU64::new(0);
 static G_TRUNCATED_BLOCKS: AtomicU64 = AtomicU64::new(0);
+static G_CACHED_PREFIXES: AtomicU64 = AtomicU64::new(0);
+static G_PREFIX_ADOPTS: AtomicU64 = AtomicU64::new(0);
+static G_ADOPTED_BLOCKS: AtomicU64 = AtomicU64::new(0);
+static G_COW_COPIES: AtomicU64 = AtomicU64::new(0);
+static G_SPILL_DENIED_SHARED: AtomicU64 = AtomicU64::new(0);
 
 /// Process-wide snapshot (what `Engine::metrics_snapshot` folds into the
 /// `Recorder`). Workers update the atomics as they allocate and free.
@@ -151,6 +174,11 @@ pub fn global_stats() -> KvStats {
         overflow_blocks: G_OVERFLOW.load(Ordering::Relaxed),
         truncates: G_TRUNCATES.load(Ordering::Relaxed),
         truncated_blocks: G_TRUNCATED_BLOCKS.load(Ordering::Relaxed),
+        cached_prefixes: G_CACHED_PREFIXES.load(Ordering::Relaxed),
+        prefix_adopts: G_PREFIX_ADOPTS.load(Ordering::Relaxed),
+        adopted_blocks: G_ADOPTED_BLOCKS.load(Ordering::Relaxed),
+        cow_copies: G_COW_COPIES.load(Ordering::Relaxed),
+        spill_denied_shared: G_SPILL_DENIED_SHARED.load(Ordering::Relaxed),
     }
 }
 
@@ -248,6 +276,17 @@ struct SessionKv {
     spilled: bool,
 }
 
+/// A cached shared prefix: the first blocks of some past session's prompt,
+/// retained in the registry beyond that session's lifetime so later
+/// prompts with the same token prefix can adopt them by refcount instead
+/// of prefilling their own copy. `len` is in positions and is always
+/// covered by `blocks`.
+#[derive(Debug, Default)]
+struct CachedPrefix {
+    blocks: Vec<u32>,
+    len: usize,
+}
+
 /// Worker-local paged K/V store. Single-threaded by construction (it lives
 /// inside a `Worker`); cross-worker visibility is via the global counters.
 pub struct KvCache {
@@ -256,6 +295,17 @@ pub struct KvCache {
     free_list: Vec<u32>,
     sessions: HashMap<u64, SessionKv>,
     n_blocks: usize,
+    /// Per-physical-block reference count (0 = on the free list). A block
+    /// is *shared* when more than one holder — session block tables plus
+    /// the prefix registry — references it; shared blocks are freed by
+    /// decrement and privatized copy-on-write before any in-place write.
+    refcounts: Vec<u32>,
+    /// Shared-prefix registry: cached prompt prefixes keyed by the
+    /// registrant's session id (ids are never reused, so the key stays
+    /// unambiguous after the session itself is released). Entries hold
+    /// their own refcount on every block and are dropped only by an
+    /// explicit ticketed eviction ([`KvCache::evict_prefix`]).
+    cached: HashMap<u64, CachedPrefix>,
     /// Host spill tier (`None` when `cfg.host_blocks == 0`).
     host: Option<HostTier>,
     /// Bounded FIFO of recently-released session ids (+ membership set),
@@ -276,6 +326,8 @@ impl KvCache {
             free_list: Vec::new(),
             sessions: HashMap::new(),
             n_blocks: 0,
+            refcounts: Vec::new(),
+            cached: HashMap::new(),
             host,
             freed_ring: VecDeque::new(),
             freed_set: HashSet::new(),
@@ -355,6 +407,7 @@ impl KvCache {
         if let Some(b) = self.free_list.pop() {
             G_RECYCLED.fetch_add(1, Ordering::Relaxed);
             note_in_use_delta(1);
+            self.refcounts[b as usize] = 1;
             return b;
         }
         // grow the slab by a chunk of blocks; existing indices stay valid.
@@ -372,6 +425,7 @@ impl KvCache {
         };
         self.slab.resize((self.n_blocks + add) * self.cfg.block_elems(), 0.0);
         self.n_blocks += add;
+        self.refcounts.resize(self.n_blocks, 0);
         G_GROWN.fetch_add(add as u64, Ordering::Relaxed);
         G_SLAB_BYTES.fetch_add(add as u64 * self.cfg.block_bytes(), Ordering::Relaxed);
         // newly carved blocks beyond the checked-out one go to the free list
@@ -379,7 +433,50 @@ impl KvCache {
             self.free_list.push(b);
         }
         note_in_use_delta(1);
+        self.refcounts[first as usize] = 1;
         first
+    }
+
+    /// Drop one holder's reference to a physical block; the block is
+    /// recycled only when the last holder lets go. Returns `true` when the
+    /// block actually went back to the free list.
+    fn release_block(&mut self, block: u32) -> bool {
+        let rc = &mut self.refcounts[block as usize];
+        debug_assert!(*rc > 0, "release of a free block");
+        *rc = rc.saturating_sub(1);
+        if *rc == 0 {
+            self.free_list.push(block);
+            note_in_use_delta(-1);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Copy-on-write: if the session's block covering `pos` is shared,
+    /// copy its contents into a private block and swap it into the block
+    /// table before writing. New blocks from `ensure` start private, so
+    /// this only ever fires on adopted/retained blocks.
+    fn make_private(&mut self, session: u64, pos: usize) {
+        let bi = pos / self.cfg.block_positions;
+        let old = self.sessions[&session].blocks[bi];
+        if self.refcounts[old as usize] <= 1 {
+            return;
+        }
+        let fresh = self.checkout_block();
+        let be = self.cfg.block_elems();
+        let (src, dst) = (old as usize * be, fresh as usize * be);
+        // split_at_mut: the two block images never overlap
+        if src < dst {
+            let (a, b) = self.slab.split_at_mut(dst);
+            b[..be].copy_from_slice(&a[src..src + be]);
+        } else {
+            let (a, b) = self.slab.split_at_mut(src);
+            b[..be].copy_from_slice(&a[dst..dst + be]);
+        }
+        self.sessions.get_mut(&session).unwrap().blocks[bi] = fresh;
+        self.release_block(old);
+        G_COW_COPIES.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Ensure `session` has blocks covering positions `0..=pos`.
@@ -425,6 +522,7 @@ impl KvCache {
             return;
         }
         self.ensure(session, pos);
+        self.make_private(session, pos);
         let bp = self.cfg.block_positions;
         let block = self.sessions[&session].blocks[pos / bp];
         let slot = pos % bp;
@@ -455,6 +553,7 @@ impl KvCache {
         let bp = self.cfg.block_positions;
         let mut done = 0usize;
         for bi in 0..(len + bp - 1) / bp {
+            self.make_private(session, bi * bp);
             let block = self.sessions[&session].blocks[bi];
             let take = (len - done).min(bp);
             let k_off = self.plane(block, layer, false);
@@ -526,6 +625,15 @@ impl KvCache {
         }
         let be = self.cfg.block_elems();
         let block_bytes = self.cfg.block_bytes();
+        // a block another holder (session or prefix registry) still reads
+        // must never leave the device tier: spilling it would strand the
+        // other holder's reads on a recycled block
+        if let Some(s) = self.sessions.get(&session) {
+            if !s.spilled && s.blocks.iter().any(|&b| self.refcounts[b as usize] > 1) {
+                G_SPILL_DENIED_SHARED.fetch_add(1, Ordering::Relaxed);
+                return 0;
+            }
+        }
         let s = match self.sessions.get_mut(&session) {
             Some(s) if !s.spilled && !s.blocks.is_empty() => s,
             _ => return 0,
@@ -544,10 +652,11 @@ impl KvCache {
             buf[i * be..(i + 1) * be].copy_from_slice(&self.slab[src..src + be]);
         }
         host.bufs.insert(session, buf);
-        let n = s.blocks.len();
-        self.free_list.extend(s.blocks.drain(..));
+        let blocks: Vec<u32> = s.blocks.drain(..).collect();
         s.spilled = true;
-        note_in_use_delta(-(n as i64));
+        for b in blocks {
+            self.release_block(b);
+        }
         G_SPILLS.fetch_add(1, Ordering::Relaxed);
         G_SPILL_BYTES.fetch_add(bytes, Ordering::Relaxed);
         G_HOST_BYTES.fetch_add(bytes, Ordering::Relaxed);
@@ -593,6 +702,108 @@ impl KvCache {
         bytes
     }
 
+    // ---- shared-prefix registry ---------------------------------------
+
+    /// Retain the first `positions` positions of a *resident* session's
+    /// cache in the shared-prefix registry, keyed by the session's own id.
+    /// The registry takes its own reference on every covered block, so the
+    /// cached prefix outlives the session and later prompts can adopt it
+    /// ([`KvCache::adopt_prefix`]) instead of prefilling their own copy.
+    /// `positions` must be block-aligned (the engine only registers whole
+    /// blocks). Returns the number of blocks retained; 0 means nothing was
+    /// retained (unknown/spilled/too-short session, zero positions, or the
+    /// key is already registered).
+    pub fn retain_prefix(&mut self, session: u64, positions: usize) -> usize {
+        let bp = self.cfg.block_positions;
+        if positions == 0 || self.cached.contains_key(&session) {
+            return 0;
+        }
+        debug_assert!(positions % bp == 0, "retained prefixes are block-aligned");
+        let n = (positions + bp - 1) / bp;
+        let blocks: Vec<u32> = match self.sessions.get(&session) {
+            Some(s) if !s.spilled && s.len >= positions && s.blocks.len() >= n => {
+                s.blocks[..n].to_vec()
+            }
+            _ => return 0,
+        };
+        for &b in &blocks {
+            self.refcounts[b as usize] += 1;
+        }
+        self.cached.insert(session, CachedPrefix { blocks, len: positions });
+        G_CACHED_PREFIXES.fetch_add(1, Ordering::Relaxed);
+        n
+    }
+
+    /// Seed a brand-new session from a registry entry: the session's block
+    /// table references the cached blocks (refcount, no copy) and starts
+    /// with `positions` positions already valid — the whole point of the
+    /// feature: those positions' K/V are never computed or stored again.
+    /// `positions` may be shorter than the entry (an unaligned tail block
+    /// stays shared until copy-on-write privatizes it). Returns `false`
+    /// and does nothing when the entry is missing/too short or the
+    /// session already exists.
+    pub fn adopt_prefix(&mut self, session: u64, donor: u64, positions: usize) -> bool {
+        if positions == 0 || self.sessions.contains_key(&session) {
+            return false;
+        }
+        let bp = self.cfg.block_positions;
+        let n = (positions + bp - 1) / bp;
+        let blocks: Vec<u32> = match self.cached.get(&donor) {
+            Some(e) if e.len >= positions && e.blocks.len() >= n => e.blocks[..n].to_vec(),
+            _ => return false,
+        };
+        for &b in &blocks {
+            self.refcounts[b as usize] += 1;
+        }
+        // an id coming back to life must not trip the double-release guard
+        if self.freed_set.remove(&session) {
+            self.freed_ring.retain(|&id| id != session);
+        }
+        self.sessions.insert(session, SessionKv { blocks, len: positions, spilled: false });
+        G_SESSIONS.fetch_add(1, Ordering::Relaxed);
+        G_PREFIX_ADOPTS.fetch_add(1, Ordering::Relaxed);
+        G_ADOPTED_BLOCKS.fetch_add(n as u64, Ordering::Relaxed);
+        true
+    }
+
+    /// Drop registry entries (ticketed eviction from the engine-side trie,
+    /// or spill of the registrant). Unknown keys are tolerated — eviction
+    /// may race a registration that never happened on this worker.
+    pub fn evict_prefix(&mut self, ids: &[u64]) {
+        for &id in ids {
+            if let Some(e) = self.cached.remove(&id) {
+                for b in e.blocks {
+                    self.release_block(b);
+                }
+                G_CACHED_PREFIXES.fetch_sub(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Prefixes currently retained in this worker's registry.
+    pub fn cached_prefix_count(&self) -> usize {
+        self.cached.len()
+    }
+
+    #[cfg(test)]
+    fn refcount_total(&self) -> u64 {
+        self.refcounts.iter().map(|&r| r as u64).sum()
+    }
+
+    #[cfg(test)]
+    fn referenced_blocks(&self) -> usize {
+        self.refcounts.iter().filter(|&&r| r > 0).count()
+    }
+
+    /// Σ block-table lengths over every holder (resident sessions + the
+    /// registry) — the shadow side of the refcount invariant.
+    #[cfg(test)]
+    fn holder_table_blocks(&self) -> u64 {
+        let s: usize = self.sessions.values().map(|s| s.blocks.len()).sum();
+        let c: usize = self.cached.values().map(|e| e.blocks.len()).sum();
+        (s + c) as u64
+    }
+
     /// Shrink a session's cache to its first `new_len` positions,
     /// returning now-unreferenced whole blocks to the free list — the
     /// speculative-decode cleanup: a verify step appends K/V rows for its
@@ -631,10 +842,13 @@ impl KvCache {
                 G_TRUNCATED_BLOCKS.fetch_add(freed as u64, Ordering::Relaxed);
             }
         } else if s.blocks.len() > need {
-            let freed = s.blocks.len() - need;
-            self.free_list.extend(s.blocks.drain(need..));
-            note_in_use_delta(-(freed as i64));
-            G_TRUNCATED_BLOCKS.fetch_add(freed as u64, Ordering::Relaxed);
+            let drained: Vec<u32> = s.blocks.drain(need..).collect();
+            G_TRUNCATED_BLOCKS.fetch_add(drained.len() as u64, Ordering::Relaxed);
+            for b in drained {
+                // shared tail blocks (the registry or another table still
+                // holds them) are decremented, not recycled
+                self.release_block(b);
+            }
         }
         if shortened {
             G_TRUNCATES.fetch_add(1, Ordering::Relaxed);
@@ -667,10 +881,10 @@ impl KvCache {
                     G_HOST_BYTES.fetch_sub(bytes, Ordering::Relaxed);
                     G_SESSIONS_SPILLED.fetch_sub(1, Ordering::Relaxed);
                 } else {
-                    let n = s.blocks.len();
-                    self.free_list.extend(s.blocks);
-                    if n > 0 {
-                        note_in_use_delta(-(n as i64));
+                    for b in s.blocks {
+                        // a shared block survives its session: the prefix
+                        // registry (or an adopter) still reads it
+                        self.release_block(b);
                     }
                 }
                 G_SESSIONS.fetch_sub(1, Ordering::Relaxed);
@@ -679,12 +893,14 @@ impl KvCache {
         }
     }
 
-    /// Drop every session (worker teardown).
+    /// Drop every session and every retained prefix (worker teardown).
     pub fn clear(&mut self) {
         let ids: Vec<u64> = self.sessions.keys().copied().collect();
         for id in ids {
             self.free(id);
         }
+        let cached: Vec<u64> = self.cached.keys().copied().collect();
+        self.evict_prefix(&cached);
     }
 }
 
@@ -1227,6 +1443,300 @@ mod tests {
         }
         assert_eq!(c.blocks_in_use(), 0, "interleaving leaked device blocks");
         assert_eq!(c.host_bytes_used(), 0, "interleaving leaked host bytes");
+        assert_eq!(c.session_count(), 0);
+    }
+
+    // ---- shared-prefix registry / copy-on-write ------------------------
+
+    #[test]
+    fn retained_prefix_outlives_donor_and_adopts_by_refcount() {
+        let mut c = cache(3, 2, 4);
+        fill(&mut c, 1, 2, 6, 4); // exactly 2 blocks
+        assert_eq!(c.retain_prefix(1, 6), 2);
+        assert_eq!(c.cached_prefix_count(), 1);
+        // double registration under the same key is refused
+        assert_eq!(c.retain_prefix(1, 6), 0);
+        // the donor session dies; the registry keeps its blocks alive
+        assert!(c.free(1));
+        assert_eq!(c.blocks_in_use(), 2, "registry must hold the blocks");
+        // a new session adopts the whole prefix: no copy, no new blocks
+        let adopts = global_stats().prefix_adopts;
+        assert!(c.adopt_prefix(2, 1, 6));
+        assert!(global_stats().prefix_adopts > adopts);
+        assert_eq!(c.blocks_in_use(), 2);
+        assert_eq!(c.len(2), Some(6));
+        // the adopter reads the donor's rows bit-exact
+        check(&c, 1, 2, 6, 4); // tags were written under id 1
+        // growth past the shared prefix allocates a private block
+        for layer in 0..2u64 {
+            let tag = (1 * 1000 + layer * 100 + 6) as f32;
+            c.write_row(2, layer as usize, 6, &row(tag, 4), &row(tag + 0.5, 4));
+        }
+        c.advance(2, 7);
+        assert_eq!(c.blocks_in_use(), 3);
+        check(&c, 1, 2, 7, 4); // rows still follow the donor tag scheme
+        // adopter frees: shared blocks survive, the private one recycles
+        assert!(c.free(2));
+        assert_eq!(c.blocks_in_use(), 2);
+        // eviction releases the last references
+        c.evict_prefix(&[1]);
+        assert_eq!(c.cached_prefix_count(), 0);
+        assert_eq!(c.blocks_in_use(), 0, "evicted prefix leaked blocks");
+        // bogus adopt/evict are no-ops
+        assert!(!c.adopt_prefix(3, 1, 6));
+        c.evict_prefix(&[1]);
+    }
+
+    #[test]
+    fn unaligned_adopt_copies_on_write_before_the_append() {
+        let mut c = cache(4, 1, 2);
+        fill(&mut c, 1, 1, 8, 2); // 2 blocks
+        assert_eq!(c.retain_prefix(1, 8), 2);
+        // adopt only 6 of the 8 positions: the tail block stays shared
+        // while holding donor rows the adopter must not clobber
+        assert!(c.adopt_prefix(2, 1, 6));
+        assert_eq!(c.blocks_in_use(), 2);
+        let cow = global_stats().cow_copies;
+        // the adopter's first append lands inside the shared tail block
+        c.write_row(2, 0, 6, &[9.0, 9.5], &[19.0, 19.5]);
+        c.advance(2, 7);
+        assert!(global_stats().cow_copies > cow, "shared-tail write skipped CoW");
+        assert_eq!(c.blocks_in_use(), 3, "CoW must privatize into a fresh block");
+        // donor and registry images are untouched: a full-length adopter
+        // still sees the original rows at positions 6 and 7
+        check(&c, 1, 1, 8, 2);
+        assert!(c.adopt_prefix(3, 1, 8));
+        check(&c, 1, 1, 8, 2);
+        // and the diverged adopter sees its own row at 6
+        let (mut k, mut v) = (vec![0.0; 7 * 2], vec![0.0; 7 * 2]);
+        assert_eq!(c.gather(2, 0, &mut k, &mut v), 7);
+        assert_eq!(&k[12..14], &[9.0, 9.5]);
+        assert_eq!(&v[12..14], &[19.0, 19.5]);
+        // a second write to the now-private block does not CoW again
+        let cow = global_stats().cow_copies;
+        c.write_row(2, 0, 7, &[1.0, 1.0], &[1.0, 1.0]);
+        assert_eq!(global_stats().cow_copies, cow);
+    }
+
+    #[test]
+    fn spill_refuses_shared_blocks() {
+        let mut c = tiered(2, 1, 2, 8, 16);
+        fill(&mut c, 1, 1, 4, 2); // 2 blocks
+        assert_eq!(c.retain_prefix(1, 4), 2);
+        let denied = global_stats().spill_denied_shared;
+        assert_eq!(c.spill(1), 0, "a shared session must never spill");
+        assert!(global_stats().spill_denied_shared > denied);
+        assert!(!c.is_spilled(1));
+        // same refusal for an adopter holding shared blocks
+        assert!(c.adopt_prefix(2, 1, 4));
+        assert_eq!(c.spill(2), 0);
+        assert!(c.free(2));
+        // once the registry lets go (and no adopter holds the blocks),
+        // the session is private again and spills normally
+        c.evict_prefix(&[1]);
+        assert!(c.spill(1) > 0);
+        assert!(c.is_spilled(1));
+        // a spilled session cannot register a prefix
+        assert_eq!(c.retain_prefix(1, 4), 0);
+        assert!(c.prefetch(1) > 0);
+        check(&c, 1, 1, 4, 2);
+        assert!(c.free(1));
+        assert_eq!(c.blocks_in_use(), 0);
+    }
+
+    #[test]
+    fn truncate_below_shared_prefix_decrements_not_frees() {
+        let mut c = cache(2, 1, 2);
+        fill(&mut c, 1, 1, 6, 2); // 3 blocks
+        assert_eq!(c.retain_prefix(1, 6), 3);
+        // the registrant is cut back below its own retained prefix (the
+        // engine never does this; the cache must still stay consistent)
+        assert!(c.truncate_tail(1, 2));
+        assert_eq!(c.blocks_in_use(), 3, "registry still holds all 3 blocks");
+        assert!(c.free(1));
+        assert_eq!(c.blocks_in_use(), 3);
+        // adopters of the full prefix still read the original rows
+        assert!(c.adopt_prefix(2, 1, 6));
+        check(&c, 1, 1, 6, 2);
+        assert!(c.free(2));
+        c.evict_prefix(&[1]);
+        assert_eq!(c.blocks_in_use(), 0);
+    }
+
+    #[test]
+    fn clear_drops_registry_entries_too() {
+        let mut c = cache(2, 1, 2);
+        fill(&mut c, 1, 1, 4, 2);
+        assert_eq!(c.retain_prefix(1, 4), 2);
+        c.clear();
+        assert_eq!(c.session_count(), 0);
+        assert_eq!(c.cached_prefix_count(), 0);
+        assert_eq!(c.blocks_in_use(), 0);
+    }
+
+    /// Property-style: random interleavings of append / truncate / spill /
+    /// prefetch / free / retain / adopt / evict keep the refcount invariant
+    /// — Σ refcounts == Σ holder-table lengths, physical blocks-in-use ==
+    /// blocks with refcount > 0, and no block is ever both shared and
+    /// spilled (shared sessions refuse to spill). A per-position writer-id
+    /// shadow model checks every surviving session's rows, so a missed
+    /// copy-on-write (cross-session clobber) is caught by content, not
+    /// just accounting.
+    #[test]
+    fn random_sharing_interleavings_preserve_refcounts_and_contents() {
+        const BP: usize = 3;
+        const LAYERS: usize = 2;
+        const W: usize = 4;
+        let mut c = tiered(BP, LAYERS, W, 24, 64);
+        let mut rng: u64 = 0x2209_0234_1CAF_E42D;
+        let mut next = |m: u64| {
+            rng = rng.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            (rng >> 33) % m
+        };
+        // shadow model: per live session, the writer id of every position
+        // (adopted positions carry the *donor's* writer id — their rows
+        // were written by the donor and must never change underneath it);
+        // per registry entry, the frozen writer-id vector at retain time.
+        let mut live: HashMap<u64, Vec<u64>> = HashMap::new();
+        let mut reg: HashMap<u64, Vec<u64>> = HashMap::new();
+        let mut next_id: u64 = 1;
+
+        let tag = |writer: u64, layer: usize, pos: usize| {
+            (writer * 1000 + layer as u64 * 100 + pos as u64) as f32
+        };
+        for step in 0..600 {
+            let pick = |m: &HashMap<u64, Vec<u64>>, r: u64| -> Option<u64> {
+                let mut ids: Vec<u64> = m.keys().copied().collect();
+                ids.sort_unstable();
+                if ids.is_empty() { None } else { Some(ids[r as usize % ids.len()]) }
+            };
+            match next(9) {
+                // spawn or append: writes tagged with the session's own id
+                0 | 1 => {
+                    let id = if live.is_empty() || next(3) == 0 {
+                        next_id += 1;
+                        live.insert(next_id, Vec::new());
+                        next_id
+                    } else {
+                        pick(&live, next(1 << 30)).unwrap()
+                    };
+                    if c.is_spilled(id) {
+                        c.prefetch(id);
+                    }
+                    let tags = live.get_mut(&id).unwrap();
+                    let cur = tags.len();
+                    let new = (cur + 1 + next(3) as usize).min(24);
+                    for pos in cur..new {
+                        for layer in 0..LAYERS {
+                            let t = tag(id, layer, pos);
+                            c.write_row(id, layer, pos, &row(t, W), &row(t + 0.5, W));
+                        }
+                        tags.push(id);
+                    }
+                    if new > 0 {
+                        c.advance(id, new);
+                    }
+                }
+                // truncate to a random shorter length
+                2 => {
+                    if let Some(id) = pick(&live, next(1 << 30)) {
+                        let tags = live.get_mut(&id).unwrap();
+                        let keep = next(tags.len() as u64 + 1) as usize;
+                        assert!(c.truncate_tail(id, keep), "live session refused truncate");
+                        tags.truncate(keep);
+                    }
+                }
+                3 => {
+                    if let Some(id) = pick(&live, next(1 << 30)) {
+                        c.spill(id); // refused for shared sessions; either way no leak
+                    }
+                }
+                4 => {
+                    if let Some(id) = pick(&live, next(1 << 30)) {
+                        c.prefetch(id);
+                    }
+                }
+                5 => {
+                    if let Some(id) = pick(&live, next(1 << 30)) {
+                        assert!(c.free(id), "live session refused free (step {step})");
+                        live.remove(&id);
+                    }
+                }
+                // retain: register a block-aligned prefix of a live session
+                6 => {
+                    if let Some(id) = pick(&live, next(1 << 30)) {
+                        let len = live[&id].len();
+                        let aligned = (len / BP) * BP;
+                        let got = c.retain_prefix(id, aligned);
+                        if got > 0 {
+                            reg.insert(id, live[&id][..aligned].to_vec());
+                        }
+                    }
+                }
+                // adopt: a brand-new session takes a (possibly unaligned)
+                // cut of a cached prefix
+                7 => {
+                    if let Some(donor) = pick(&reg, next(1 << 30)) {
+                        let max = reg[&donor].len() as u64;
+                        let positions = 1 + next(max) as usize;
+                        next_id += 1;
+                        assert!(
+                            c.adopt_prefix(next_id, donor, positions),
+                            "step {step}: adopt of a live registry entry failed"
+                        );
+                        live.insert(next_id, reg[&donor][..positions].to_vec());
+                    }
+                }
+                _ => {
+                    if let Some(id) = pick(&reg, next(1 << 30)) {
+                        c.evict_prefix(&[id]);
+                        reg.remove(&id);
+                    }
+                }
+            }
+            assert_eq!(
+                c.refcount_total(),
+                c.holder_table_blocks(),
+                "step {step}: Σrefcounts drifted from the holder tables"
+            );
+            assert_eq!(
+                c.blocks_in_use(),
+                c.referenced_blocks(),
+                "step {step}: physical accounting drifted from refcounts"
+            );
+        }
+        // contents: every surviving session reads exactly the rows its
+        // shadow writers produced — adopted prefixes included
+        for (&id, tags) in &live {
+            if c.is_spilled(id) {
+                c.prefetch(id);
+            }
+            let n = tags.len();
+            for layer in 0..LAYERS {
+                let (mut k, mut v) = (vec![-1.0; 24 * W], vec![-1.0; 24 * W]);
+                assert_eq!(c.gather(id, layer, &mut k, &mut v), n, "session {id}");
+                for (pos, &writer) in tags.iter().enumerate() {
+                    let t = tag(writer, layer, pos);
+                    assert_eq!(
+                        &k[pos * W..(pos + 1) * W],
+                        &row(t, W)[..],
+                        "session {id} layer {layer} pos {pos} (writer {writer})"
+                    );
+                    assert_eq!(&v[pos * W..(pos + 1) * W], &row(t + 0.5, W)[..]);
+                }
+            }
+        }
+        // teardown: every holder lets go and every block comes back
+        let ids: Vec<u64> = live.keys().copied().collect();
+        for id in ids {
+            c.free(id);
+        }
+        let keys: Vec<u64> = reg.keys().copied().collect();
+        c.evict_prefix(&keys);
+        assert_eq!(c.blocks_in_use(), 0, "sharing interleaving leaked device blocks");
+        assert_eq!(c.host_bytes_used(), 0, "sharing interleaving leaked host bytes");
+        assert_eq!(c.refcount_total(), 0);
+        assert_eq!(c.cached_prefix_count(), 0);
         assert_eq!(c.session_count(), 0);
     }
 

@@ -1,0 +1,355 @@
+//! Token-id-keyed prefix trie: the admission half of shared-prefix K/V
+//! reuse.
+//!
+//! The trie lives engine-side (owned by the `Batcher`, consulted under its
+//! lock) and maps *block-granular chunks* of prompt token ids to cached
+//! prefixes held in the worker registries ([`super::KvCache`]'s
+//! `retain_prefix`/`adopt_prefix`). Granularity is one K/V block
+//! (`KV_BLOCK_POSITIONS` tokens per chunk): an entry at depth `d` means
+//! "the first `d × chunk` prompt positions of some past prompt are
+//! retained on every worker under the registrant's session id", so a new
+//! prompt that walks `d` chunks deep can adopt those blocks wholesale and
+//! compute only its suffix.
+//!
+//! Two pieces of state close the lifecycle races:
+//!
+//! - **`ready`**: an entry is registered when its prefill is *formed* but
+//!   only becomes matchable once that forward completed (the registrant's
+//!   rows are durably in every worker's registry). Commands flow through
+//!   ticketed per-worker queues, so any adoption formed after readiness is
+//!   ordered after the registrant's prefill on every worker.
+//! - **`leases`**: each in-flight adoption holds a lease on its entry;
+//!   eviction (capacity or registrant spill) only touches entries that are
+//!   ready with zero leases, so a registry entry can never be dropped on
+//!   the workers while a formed-but-unexecuted batch still adopts from it.
+//!
+//! Evicted ids accumulate in a pending list the batcher drains and
+//! publishes as ticketed `EvictPrefix` commands.
+
+use std::collections::HashMap;
+
+#[derive(Debug, Default)]
+struct Node {
+    /// Child per distinct next chunk of token ids.
+    children: HashMap<Vec<i32>, Node>,
+    /// The registrant whose cached prefix ends exactly here.
+    entry: Option<u64>,
+}
+
+#[derive(Debug)]
+struct EntryMeta {
+    /// The full chunk-aligned token path (for removal).
+    path: Vec<i32>,
+    /// Registrant's prefill has completed; the entry is matchable.
+    ready: bool,
+    /// In-flight adoptions formed against this entry.
+    leases: usize,
+    /// Registration order (FIFO eviction among evictable entries).
+    seq: u64,
+}
+
+/// Engine-side prefix trie with capacity-bounded FIFO eviction.
+#[derive(Debug)]
+pub struct PrefixIndex {
+    chunk: usize,
+    max_entries: usize,
+    root: Node,
+    entries: HashMap<u64, EntryMeta>,
+    seq: u64,
+    pending_evict: Vec<u64>,
+    hits: u64,
+    misses: u64,
+}
+
+impl PrefixIndex {
+    /// `chunk` is the K/V block size in positions; `max_entries` caps the
+    /// number of retained prefixes (0 = unbounded).
+    pub fn new(chunk: usize, max_entries: usize) -> PrefixIndex {
+        assert!(chunk >= 1);
+        PrefixIndex {
+            chunk,
+            max_entries,
+            root: Node::default(),
+            entries: HashMap::new(),
+            seq: 0,
+            pending_evict: Vec::new(),
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn contains(&self, id: u64) -> bool {
+        self.entries.contains_key(&id)
+    }
+
+    /// (matches, misses) observed by `match_longest` so far.
+    pub fn hit_counts(&self) -> (u64, u64) {
+        (self.hits, self.misses)
+    }
+
+    /// Register `id`'s prompt as a cached prefix covering its whole
+    /// blocks (`floor(len/chunk)` chunks). The entry starts not-ready.
+    /// Returns `false` (nothing registered) when the prompt is shorter
+    /// than one chunk, the id is already registered, or an entry with the
+    /// identical chunk path already exists (no point caching it twice).
+    pub fn register(&mut self, id: u64, tokens: &[i32]) -> bool {
+        let chunks = tokens.len() / self.chunk;
+        if chunks == 0 || self.entries.contains_key(&id) {
+            return false;
+        }
+        let path = &tokens[..chunks * self.chunk];
+        let mut node = &mut self.root;
+        for ch in path.chunks_exact(self.chunk) {
+            node = node.children.entry(ch.to_vec()).or_default();
+        }
+        if node.entry.is_some() {
+            return false;
+        }
+        node.entry = Some(id);
+        self.seq += 1;
+        self.entries.insert(
+            id,
+            EntryMeta { path: path.to_vec(), ready: false, leases: 0, seq: self.seq },
+        );
+        self.enforce_cap();
+        true
+    }
+
+    /// The registrant's prefill completed: its rows are in every worker's
+    /// registry, so the entry becomes matchable.
+    pub fn mark_ready(&mut self, id: u64) {
+        if let Some(e) = self.entries.get_mut(&id) {
+            e.ready = true;
+        }
+    }
+
+    /// Longest *ready* cached prefix of `tokens`, as `(registrant id,
+    /// matched positions)`; positions are always a multiple of the chunk.
+    /// An entry deeper than the query still matches for the blocks they
+    /// share: every entry in the subtree below a walked node starts with
+    /// the query's walked chunks, and the worker registries adopt partial
+    /// prefixes of an entry. Counts a hit or miss for the stats line.
+    pub fn match_longest(&mut self, tokens: &[i32]) -> Option<(u64, usize)> {
+        let mut path_nodes: Vec<&Node> = Vec::new();
+        let mut node = &self.root;
+        for ch in tokens.chunks_exact(self.chunk) {
+            match node.children.get(ch) {
+                Some(n) => {
+                    node = n;
+                    path_nodes.push(n);
+                }
+                None => break,
+            }
+        }
+        let mut best = None;
+        for (depth0, n) in path_nodes.iter().enumerate().rev() {
+            if let Some(id) = find_ready_entry(n, &self.entries) {
+                best = Some((id, (depth0 + 1) * self.chunk));
+                break;
+            }
+        }
+        if best.is_some() {
+            self.hits += 1;
+        } else {
+            self.misses += 1;
+        }
+        best
+    }
+
+    /// An adoption was formed against `id`: pin the entry until the
+    /// adopter's forward completes. Returns `false` for unknown entries.
+    pub fn lease(&mut self, id: u64) -> bool {
+        match self.entries.get_mut(&id) {
+            Some(e) => {
+                e.leases += 1;
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// The adopter's forward completed (or its batch failed): release the
+    /// pin taken by [`PrefixIndex::lease`].
+    pub fn unlease(&mut self, id: u64) {
+        if let Some(e) = self.entries.get_mut(&id) {
+            e.leases = e.leases.saturating_sub(1);
+        }
+        self.enforce_cap();
+    }
+
+    /// Force-remove entries (the registrant's blocks are leaving the
+    /// device tier — spill — or the feature is shutting down). Leased
+    /// entries are removed too: the caller publishes the eviction through
+    /// the same ticketed stream as the spill, and adoption commands formed
+    /// earlier hold earlier tickets. Removed ids join the pending-evict
+    /// list for the caller to drain.
+    pub fn remove(&mut self, ids: &[u64]) {
+        for &id in ids {
+            if let Some(meta) = self.entries.remove(&id) {
+                remove_path(&mut self.root, &meta.path, self.chunk);
+                self.pending_evict.push(id);
+            }
+        }
+    }
+
+    /// Drain the ids whose registry entries must be dropped on the
+    /// workers (publish as ticketed `EvictPrefix`).
+    pub fn take_evictions(&mut self) -> Vec<u64> {
+        std::mem::take(&mut self.pending_evict)
+    }
+
+    /// FIFO-evict ready, lease-free entries down to the cap.
+    fn enforce_cap(&mut self) {
+        if self.max_entries == 0 {
+            return;
+        }
+        while self.entries.len() > self.max_entries {
+            let victim = self
+                .entries
+                .iter()
+                .filter(|(_, e)| e.ready && e.leases == 0)
+                .min_by_key(|(_, e)| e.seq)
+                .map(|(&id, _)| id);
+            match victim {
+                Some(id) => self.remove(&[id]),
+                None => break, // everything pinned; retry on the next unlease
+            }
+        }
+    }
+}
+
+/// Any *ready* entry at `node` or in its subtree — smallest id wins so
+/// repeated queries resolve deterministically. All candidates share the
+/// walked chunks with the query, so any of them yields the same adopted
+/// token positions.
+fn find_ready_entry(node: &Node, entries: &HashMap<u64, EntryMeta>) -> Option<u64> {
+    let mut best: Option<u64> = None;
+    if let Some(id) = node.entry {
+        if entries[&id].ready {
+            best = Some(id);
+        }
+    }
+    for child in node.children.values() {
+        if let Some(id) = find_ready_entry(child, entries) {
+            best = Some(best.map_or(id, |b| b.min(id)));
+        }
+    }
+    best
+}
+
+/// Clear the entry at the end of `path` and prune now-empty nodes.
+fn remove_path(node: &mut Node, path: &[i32], chunk: usize) {
+    if path.is_empty() {
+        node.entry = None;
+        return;
+    }
+    let (head, rest) = path.split_at(chunk);
+    if let Some(child) = node.children.get_mut(head) {
+        remove_path(child, rest, chunk);
+        if child.children.is_empty() && child.entry.is_none() {
+            node.children.remove(head);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(n: usize) -> Vec<i32> {
+        (0..n as i32).collect()
+    }
+
+    #[test]
+    fn register_match_roundtrip_block_granular() {
+        let mut t = PrefixIndex::new(4, 0);
+        // 10 tokens -> 2 chunks registered; the trailing 2 are dropped
+        assert!(t.register(1, &toks(10)));
+        assert_eq!(t.match_longest(&toks(10)), None, "not ready yet");
+        t.mark_ready(1);
+        assert_eq!(t.match_longest(&toks(10)), Some((1, 8)));
+        // a shorter query only matches whole chunks it covers
+        assert_eq!(t.match_longest(&toks(7)), Some((1, 4)));
+        assert_eq!(t.match_longest(&toks(3)), None);
+        // divergence inside the first chunk: no match
+        let mut other = toks(10);
+        other[2] = 99;
+        assert_eq!(t.match_longest(&other), None);
+        // divergence in the second chunk: first chunk still matches
+        let mut other = toks(10);
+        other[5] = 99;
+        assert_eq!(t.match_longest(&other), Some((1, 4)));
+        let (hits, misses) = t.hit_counts();
+        assert_eq!((hits, misses), (3, 3));
+    }
+
+    #[test]
+    fn deepest_ready_entry_wins() {
+        let mut t = PrefixIndex::new(2, 0);
+        assert!(t.register(1, &toks(2)));
+        assert!(t.register(2, &toks(6)));
+        t.mark_ready(1);
+        // the deep entry is not ready: the shallow one matches
+        assert_eq!(t.match_longest(&toks(6)), Some((1, 2)));
+        t.mark_ready(2);
+        assert_eq!(t.match_longest(&toks(6)), Some((2, 6)));
+        // duplicate path or id is refused
+        assert!(!t.register(3, &toks(6)));
+        assert!(!t.register(2, &toks(4)));
+        // sub-chunk prompt registers nothing
+        assert!(!t.register(4, &toks(1)));
+        assert_eq!(t.len(), 2);
+    }
+
+    #[test]
+    fn removal_prunes_and_stops_matching() {
+        let mut t = PrefixIndex::new(2, 0);
+        assert!(t.register(1, &toks(4)));
+        assert!(t.register(2, &toks(8)));
+        t.mark_ready(1);
+        t.mark_ready(2);
+        t.remove(&[2]);
+        assert_eq!(t.match_longest(&toks(8)), Some((1, 4)));
+        assert_eq!(t.take_evictions(), vec![2]);
+        assert!(t.take_evictions().is_empty());
+        t.remove(&[1]);
+        assert_eq!(t.match_longest(&toks(8)), None);
+        assert!(t.is_empty());
+        // unknown removal is a tolerated no-op
+        t.remove(&[7]);
+        assert!(t.take_evictions() == vec![1]);
+    }
+
+    #[test]
+    fn capacity_evicts_fifo_but_never_leased_or_pending_entries() {
+        let mut t = PrefixIndex::new(2, 2);
+        assert!(t.register(1, &[1, 1]));
+        assert!(t.register(2, &[2, 2]));
+        t.mark_ready(1);
+        t.mark_ready(2);
+        assert!(t.lease(1));
+        // over cap: id 2 (oldest evictable) goes, leased id 1 survives
+        assert!(t.register(3, &[3, 3]));
+        assert_eq!(t.take_evictions(), vec![2]);
+        assert!(t.contains(1) && t.contains(3));
+        // id 3 is not ready and id 1 is leased: nothing can go yet
+        assert!(t.register(4, &[4, 4]));
+        assert!(t.take_evictions().is_empty());
+        assert_eq!(t.len(), 3);
+        // releasing the lease resumes eviction (oldest first)
+        t.unlease(1);
+        assert_eq!(t.take_evictions(), vec![1]);
+        assert_eq!(t.len(), 2);
+        // lease of an evicted entry reports failure
+        assert!(!t.lease(1));
+        t.unlease(99); // unknown: tolerated
+    }
+}

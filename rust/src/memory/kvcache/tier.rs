@@ -127,6 +127,11 @@ struct TierSession {
     resident: bool,
     /// In a formed-but-uncompleted batch: never a spill victim.
     pinned: bool,
+    /// Holds (or adopted) shared-prefix blocks: never a spill victim —
+    /// spilling would strand another holder's reads on recycled blocks
+    /// ("no block both shared and spilled"). Sticky for the session's
+    /// lifetime; the worker-side refcount guard is the backstop.
+    shared: bool,
     /// Decode-bucket step of last use (the LRU axis).
     last_step: u64,
 }
@@ -225,7 +230,7 @@ impl TierPolicy {
         let mut candidates: Vec<(u64, u64, usize)> = self
             .sessions
             .iter()
-            .filter(|(_, s)| s.resident && !s.pinned)
+            .filter(|(_, s)| s.resident && !s.pinned && !s.shared)
             .map(|(&id, s)| (s.last_step, id, self.blocks_of(s.len)))
             .collect();
         candidates.sort_unstable();
@@ -286,7 +291,7 @@ impl TierPolicy {
             self.pinned_used += blocks;
             self.sessions.insert(
                 id,
-                TierSession { len, resident: true, pinned: true, last_step: self.step },
+                TierSession { len, resident: true, pinned: true, shared: false, last_step: self.step },
             );
         }
         (cmds, true)
@@ -366,7 +371,7 @@ impl TierPolicy {
                 self.pinned_used += blocks;
                 self.sessions.insert(
                     id,
-                    TierSession { len, resident: true, pinned: true, last_step: step },
+                    TierSession { len, resident: true, pinned: true, shared: false, last_step: step },
                 );
                 continue;
             }
@@ -443,6 +448,31 @@ impl TierPolicy {
         }
         self.stats.prefetch_hints += ids.len() as u64;
         vec![TierCmd::Prefetch { ids, hint: true }]
+    }
+
+    /// Flag a session as holding shared-prefix blocks (a registrant whose
+    /// blocks the registry retained, or an adopter referencing cached
+    /// blocks). Shared sessions are excluded from spill candidacy for
+    /// their whole lifetime. Unknown ids are tolerated (the session may
+    /// already have finished).
+    pub fn mark_shared(&mut self, id: u64) {
+        if let Some(s) = self.sessions.get_mut(&id) {
+            s.shared = true;
+        }
+    }
+
+    /// The shared-prefix registry retained `blocks` device blocks. The
+    /// registry is its own holder, independent of the registrant session's
+    /// lifetime, so the policy charges it separately — a deliberate
+    /// over-estimate while the registrant is still alive (the physical
+    /// blocks are shared), which keeps admission conservative.
+    pub fn note_retained(&mut self, blocks: usize) {
+        self.device_used += blocks;
+    }
+
+    /// A registry entry was evicted: credit its device blocks.
+    pub fn note_released(&mut self, blocks: usize) {
+        self.device_used = self.device_used.saturating_sub(blocks);
     }
 
     /// A session's batch completed and it re-entered the queue: unpin and
@@ -699,6 +729,43 @@ mod tests {
         assert_eq!(p.max_prefill_rows(&rows), 2);
         // a lone oversized prompt still passes (soft cap)
         assert_eq!(p.max_prefill_rows(&[(9, 100)]), 1);
+    }
+
+    #[test]
+    fn shared_sessions_are_never_spill_victims() {
+        let mut p = policy(2, 64);
+        let (_, ok) = p.admit_prefill(&[(1, 4)]); // fills the device tier
+        assert!(ok);
+        p.on_requeue(1);
+        p.mark_shared(1);
+        // 1 is cold and unpinned but shared: admission finds no victim
+        // and defers rather than spilling a shared block
+        let (cmds, ok) = p.admit_prefill(&[(2, 4)]);
+        assert!(!ok && spilled_ids(&cmds).is_empty());
+        assert_eq!(p.is_resident(1), Some(true));
+        // decode pressure relief skips it too
+        let cmds = p.gate_decode(&[(1, 4)]);
+        assert!(spilled_ids(&cmds).is_empty());
+        // unknown ids are tolerated
+        p.mark_shared(99);
+        p.on_free(&[1]);
+        assert_eq!(p.device_used(), 0);
+    }
+
+    #[test]
+    fn retained_registry_blocks_are_charged_and_credited() {
+        let mut p = policy(8, 64);
+        let (_, ok) = p.admit_prefill(&[(1, 4)]); // 2 blocks
+        assert!(ok);
+        p.note_retained(2); // registry takes its own hold
+        assert_eq!(p.device_used(), 4);
+        p.on_requeue(1);
+        p.on_free(&[1]); // session dies; the registry hold survives
+        assert_eq!(p.device_used(), 2);
+        p.note_released(2); // trie eviction credits it
+        assert_eq!(p.device_used(), 0);
+        p.note_released(5); // over-credit saturates, never underflows
+        assert_eq!(p.device_used(), 0);
     }
 
     #[test]

@@ -34,6 +34,19 @@ pub struct Recorder {
     /// Per-token decode latency (gap between consecutive engine steps of
     /// one session), first token excluded.
     tok_lat_us: Vec<u64>,
+    /// TTFT split by shared-prefix cache outcome (both empty with the
+    /// prefix cache off — `ttft_us` stays the aggregate either way).
+    ttft_hit_us: Vec<u64>,
+    ttft_miss_us: Vec<u64>,
+    /// Prompt positions actually computed (whole prompts for fresh
+    /// prefills, one per prompt-stepping decode row of a prefix hit) —
+    /// the work shared-prefix reuse exists to cut.
+    prefill_toks: u64,
+    /// Admission-time prefix-trie outcomes (folded from the batcher on
+    /// every `metrics_snapshot`).
+    prefix_hits: u64,
+    prefix_misses: u64,
+    prefix_entries: usize,
     tokens_done: u64,
     requests_done: u64,
     batches_done: u64,
@@ -82,6 +95,12 @@ impl Recorder {
             latencies_us: Vec::new(),
             ttft_us: Vec::new(),
             tok_lat_us: Vec::new(),
+            ttft_hit_us: Vec::new(),
+            ttft_miss_us: Vec::new(),
+            prefill_toks: 0,
+            prefix_hits: 0,
+            prefix_misses: 0,
+            prefix_entries: 0,
             tokens_done: 0,
             requests_done: 0,
             batches_done: 0,
@@ -198,6 +217,76 @@ impl Recorder {
             self.note_slo(ttft.as_micros() as u64 > self.slo_ttft_us);
         }
         self.count_token();
+    }
+
+    /// [`Recorder::record_first_token`] plus the shared-prefix outcome
+    /// tag, so TTFT percentiles can be split by cache hit vs miss (the
+    /// aggregate `ttft_us` series records the token either way).
+    pub fn record_first_token_prefix(&mut self, ttft: Duration, prefix_hit: bool) {
+        if prefix_hit {
+            self.ttft_hit_us.push(ttft.as_micros() as u64);
+        } else {
+            self.ttft_miss_us.push(ttft.as_micros() as u64);
+        }
+        self.record_first_token(ttft);
+    }
+
+    /// `n` prompt positions were computed by completed engine steps.
+    pub fn record_prefill_tokens(&mut self, n: u64) {
+        self.prefill_toks += n;
+    }
+
+    /// Prompt positions actually computed so far (fresh prefills count
+    /// their whole prompt; a prefix hit counts only its unmatched
+    /// suffix, one position per stepping decode).
+    pub fn prefill_tokens(&self) -> u64 {
+        self.prefill_toks
+    }
+
+    /// Fold the admission-time prefix-trie counters in (the engine does
+    /// this from the batcher on every `metrics_snapshot`).
+    pub fn record_prefix_index(&mut self, hits: u64, misses: u64, entries: usize) {
+        self.prefix_hits = hits;
+        self.prefix_misses = misses;
+        self.prefix_entries = entries;
+    }
+
+    /// Admission-time (hits, misses) of the shared-prefix trie.
+    pub fn prefix_hit_counts(&self) -> (u64, u64) {
+        (self.prefix_hits, self.prefix_misses)
+    }
+
+    /// Fraction of admitted prompts that matched a cached prefix.
+    pub fn prefix_hit_rate(&self) -> Option<f64> {
+        let total = self.prefix_hits + self.prefix_misses;
+        (total > 0).then(|| self.prefix_hits as f64 / total as f64)
+    }
+
+    /// TTFT percentile over sessions that adopted a cached prefix.
+    pub fn ttft_hit_percentile(&self, p: f64) -> Option<Duration> {
+        Self::pct_of(&self.ttft_hit_us, p)
+    }
+
+    /// TTFT percentile over sessions that ran a full prefill.
+    pub fn ttft_miss_percentile(&self, p: f64) -> Option<Duration> {
+        Self::pct_of(&self.ttft_miss_us, p)
+    }
+
+    /// Back-off hint stamped into `busy` rejections: roughly how long a
+    /// queue slot takes to open, read off the median observed TTFT (the
+    /// submit→first-token time already includes queueing). Doubled while
+    /// the rolling SLO window says the engine is shedding. Falls back to
+    /// a 50 ms guess before any session has finished its first token.
+    pub fn retry_after_hint_ms(&self) -> u64 {
+        let base = Self::pct_of(&self.ttft_us, 0.50)
+            .map(|d| d.as_millis() as u64)
+            .unwrap_or(50)
+            .clamp(10, 5_000);
+        if self.under_pressure() {
+            base * 2
+        } else {
+            base
+        }
     }
 
     /// A generation session produced a continuation token `gap` after its
@@ -393,6 +482,35 @@ impl Recorder {
                 crate::util::fmt_bytes(self.kvcache.host_bytes),
                 self.kvcache.prefetch_stall_us / 1000,
             ));
+        }
+        if self.prefix_hits + self.prefix_misses > 0 || self.kvcache.prefix_adopts > 0 {
+            s.push_str(&format!(
+                "; prefix {} hits / {} misses ({} cached, {} blocks adopted, {} cow)",
+                self.prefix_hits,
+                self.prefix_misses,
+                self.prefix_entries,
+                self.kvcache.adopted_blocks,
+                self.kvcache.cow_copies,
+            ));
+            if self.kvcache.spill_denied_shared > 0 {
+                // the engine-side exemption should keep shared sessions
+                // off every spill list; the worker refusing one is the
+                // backstop firing — loud, CI greps for this marker
+                s.push_str(&format!(
+                    "; PREFIX-ANOMALY {} shared-block spills denied",
+                    self.kvcache.spill_denied_shared,
+                ));
+            }
+            if !self.ttft_hit_us.is_empty() {
+                s.push_str(&format!(
+                    "; ttft hit p50 {} / miss p50 {}",
+                    fmt_opt(self.ttft_hit_percentile(0.50)),
+                    fmt_opt(self.ttft_miss_percentile(0.50)),
+                ));
+            }
+        }
+        if self.prefill_toks > 0 {
+            s.push_str(&format!("; prefill {} toks", self.prefill_toks));
         }
         if self.kvcache.gather_spilled + self.kvcache.overflow_blocks > 0 {
             s.push_str(&format!(
@@ -618,6 +736,57 @@ mod tests {
         assert!(!r.summary().contains("KVFREE"), "{}", r.summary());
         r.record_kvcache(KvStats { double_free: 2, ..Default::default() });
         assert!(r.summary().contains("KVFREE-ANOMALY 2 double frees"), "{}", r.summary());
+    }
+
+    #[test]
+    fn prefix_axes_recorded_and_surface_in_summary() {
+        let mut r = Recorder::new();
+        assert!(!r.summary().contains("prefix"), "{}", r.summary());
+        assert!(r.prefix_hit_rate().is_none());
+        r.record_prefix_index(3, 1, 2);
+        assert_eq!(r.prefix_hit_counts(), (3, 1));
+        assert!((r.prefix_hit_rate().unwrap() - 0.75).abs() < 1e-9);
+        r.record_kvcache(KvStats { prefix_adopts: 3, adopted_blocks: 9, cow_copies: 1, ..Default::default() });
+        r.record_first_token_prefix(Duration::from_millis(2), true);
+        r.record_first_token_prefix(Duration::from_millis(20), false);
+        r.record_prefill_tokens(17);
+        assert_eq!(r.prefill_tokens(), 17);
+        // the aggregate series sees both first tokens; the split keeps
+        // them apart
+        assert_eq!(r.ttft_percentile(0.99).unwrap(), Duration::from_millis(20));
+        assert_eq!(r.ttft_hit_percentile(0.50).unwrap(), Duration::from_millis(2));
+        assert_eq!(r.ttft_miss_percentile(0.50).unwrap(), Duration::from_millis(20));
+        let s = r.summary();
+        assert!(s.contains("prefix 3 hits / 1 misses (2 cached, 9 blocks adopted, 1 cow)"), "{s}");
+        assert!(s.contains("ttft hit p50"), "{s}");
+        assert!(s.contains("prefill 17 toks"), "{s}");
+        assert!(!s.contains("PREFIX-ANOMALY"), "{s}");
+        // a worker-side spill refusal of a shared block is loud
+        r.record_kvcache(KvStats { prefix_adopts: 3, spill_denied_shared: 2, ..Default::default() });
+        assert!(r.summary().contains("PREFIX-ANOMALY 2 shared-block spills denied"), "{}", r.summary());
+    }
+
+    #[test]
+    fn retry_hint_tracks_observed_ttft_and_pressure() {
+        let mut r = Recorder::new();
+        // no data yet: a default guess, inside the clamp
+        assert_eq!(r.retry_after_hint_ms(), 50);
+        r.record_first_token(Duration::from_millis(120));
+        assert_eq!(r.retry_after_hint_ms(), 120);
+        // sub-clamp medians round up to the floor
+        let mut fast = Recorder::new();
+        for _ in 0..4 {
+            fast.record_first_token(Duration::from_millis(1));
+        }
+        assert_eq!(fast.retry_after_hint_ms(), 10);
+        // sustained SLO violation doubles the hint
+        let mut hot = Recorder::new();
+        hot.set_slo(Duration::from_millis(10), Duration::ZERO);
+        for _ in 0..SLO_WINDOW {
+            hot.record_first_token(Duration::from_millis(40));
+        }
+        assert!(hot.under_pressure());
+        assert_eq!(hot.retry_after_hint_ms(), 80);
     }
 
     #[test]

@@ -15,8 +15,11 @@
 //! Two more reply forms matter under hostile traffic: malformed lines get
 //! a structured `err <reason>\n` (the connection stays up — a garbled
 //! client doesn't tear down its own stream), and when admission control
-//! sheds a request the reply is `busy <reason>: <n> prefills queued\n`,
-//! distinguishable from a hard error so clients can back off and retry.
+//! sheds a request the reply is
+//! `busy <reason>: <n> prefills queued, retry after <ms> ms\n`,
+//! distinguishable from a hard error so clients can back off and retry —
+//! the hint is the engine's median observed time-to-first-token, so the
+//! back-off tracks actual service time rather than a guess.
 //!
 //! Disconnect propagation: if a client drops mid-stream, the failed write
 //! cancels the session ([`GenRef::cancel`]) — the engine purges it from
@@ -179,7 +182,10 @@ pub fn dispatch(line: &str, engine: &Engine) -> Action {
 /// gets the structured back-off form, anything else a hard `err`.
 fn reject(e: &anyhow::Error) -> Action {
     match e.downcast_ref::<Busy>() {
-        Some(b) => Action::Reply(format!("busy {}: {} prefills queued\n", b.reason, b.queued)),
+        Some(b) => Action::Reply(format!(
+            "busy {}: {} prefills queued, retry after {} ms\n",
+            b.reason, b.queued, b.retry_after_ms
+        )),
         None => Action::Reply(format!("err {e}\n")),
     }
 }
@@ -284,10 +290,11 @@ mod tests {
     /// (`err`/`busy`), trailing newline.
     #[test]
     fn reject_distinguishes_busy_from_hard_errors() {
-        let busy = anyhow::Error::new(Busy { reason: "queue-full", queued: 7 });
+        let busy =
+            anyhow::Error::new(Busy { reason: "queue-full", queued: 7, retry_after_ms: 40 });
         match reject(&busy) {
             Action::Reply(r) => {
-                assert_eq!(r, "busy queue-full: 7 prefills queued\n");
+                assert_eq!(r, "busy queue-full: 7 prefills queued, retry after 40 ms\n");
             }
             _ => panic!("busy must reply"),
         }

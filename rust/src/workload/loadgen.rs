@@ -40,6 +40,14 @@ pub struct SaturationScenario {
     pub disconnect_pct: f64,
     /// Fresh tokens a re-entering turn appends to its grown context.
     pub followup_tokens: usize,
+    /// Templated traffic: number of shared prompt templates (0 = off —
+    /// plans are then byte-identical to a scenario without the knob).
+    pub templates: usize,
+    /// Fraction of fresh prompts that start with one of the templates.
+    pub template_pct: f64,
+    /// Tokens per template. Multiples of the engine's K/V block size make
+    /// whole-block prefix reuse likely; any length is legal.
+    pub template_tokens: usize,
 }
 
 impl SaturationScenario {
@@ -57,12 +65,28 @@ impl SaturationScenario {
             arrival_rate: 200.0,
             disconnect_pct: 0.0,
             followup_tokens: 2,
+            templates: 0,
+            template_pct: 0.0,
+            template_tokens: 0,
         }
     }
 
     /// Same plans, plus mid-stream disconnects on `pct` of turns.
     pub fn with_disconnects(mut self, pct: f64) -> Self {
         self.disconnect_pct = pct;
+        self
+    }
+
+    /// Templated traffic: `pct` of fresh prompts start with one of `n`
+    /// shared `tokens`-long templates (the shape that makes a shared-
+    /// prefix cache pay). Template bytes and the per-turn choice come
+    /// from their own forked RNG stream, so every prompt suffix, gap,
+    /// budget and chaos flag stays byte-identical to the untemplated
+    /// scenario — the differential lever for the prefix bench.
+    pub fn with_templates(mut self, n: usize, pct: f64, tokens: usize) -> Self {
+        self.templates = n;
+        self.template_pct = pct;
+        self.template_tokens = tokens;
         self
     }
 
@@ -75,17 +99,41 @@ impl SaturationScenario {
         let mut content = root.fork(1);
         let mut arrivals = root.fork(2);
         let mut chaos = root.fork(3);
+        // the template stream is only ever drawn when templates exist, so
+        // `templates == 0` plans are byte-identical to pre-template builds
+        let mut tmpl = root.fork(4);
+        let templates: Vec<Vec<i32>> = (0..self.templates)
+            .map(|_| {
+                (0..self.template_tokens)
+                    .map(|_| (tmpl.next_below(self.vocab as u64 - 1) + 1) as i32)
+                    .collect()
+            })
+            .collect();
         (0..self.clients)
             .map(|client| {
                 let mut content = content.fork(client as u64);
                 let mut arrivals = arrivals.fork(client as u64);
                 let mut chaos = chaos.fork(client as u64);
+                let mut tmpl = tmpl.fork(client as u64);
                 let turns = (0..self.turns)
                     .map(|_| {
                         let plen = self.prompt_dist.sample(&mut content);
-                        let fresh_prompt = (0..plen)
+                        let mut fresh_prompt: Vec<i32> = (0..plen)
                             .map(|_| (content.next_below(self.vocab as u64 - 1) + 1) as i32)
                             .collect();
+                        // both template draws happen unconditionally (like
+                        // the chaos draws) so `template_pct` flips which
+                        // turns are templated without moving any suffix
+                        let template = if self.templates > 0 {
+                            let roll = tmpl.next_f64();
+                            let idx = tmpl.next_below(self.templates as u64) as usize;
+                            (roll < self.template_pct).then_some(idx)
+                        } else {
+                            None
+                        };
+                        if let Some(idx) = template {
+                            fresh_prompt.splice(0..0, templates[idx].iter().copied());
+                        }
                         let followup = (0..self.followup_tokens)
                             .map(|_| (content.next_below(self.vocab as u64 - 1) + 1) as i32)
                             .collect();
@@ -97,7 +145,14 @@ impl SaturationScenario {
                         let after = 1 + chaos.next_below(new_tokens as u64) as usize;
                         let disconnect_after =
                             (roll < self.disconnect_pct).then_some(after.min(new_tokens));
-                        TurnPlan { fresh_prompt, followup, new_tokens, delay, disconnect_after }
+                        TurnPlan {
+                            fresh_prompt,
+                            followup,
+                            new_tokens,
+                            delay,
+                            disconnect_after,
+                            template,
+                        }
                     })
                     .collect();
                 ClientPlan { client, turns }
@@ -128,6 +183,9 @@ pub struct TurnPlan {
     pub delay: Duration,
     /// Disconnect (cancel) after streaming this many tokens.
     pub disconnect_after: Option<usize>,
+    /// Which shared template (if any) this turn's fresh prompt starts
+    /// with — `fresh_prompt` already includes it.
+    pub template: Option<usize>,
 }
 
 /// How one turn ended.
@@ -420,6 +478,57 @@ mod tests {
             .iter()
             .flat_map(|p| &p.turns)
             .all(|t| t.disconnect_after.is_some()));
+    }
+
+    /// The prefix-bench differential lever: templated plans must share
+    /// their prefixes *and* keep every suffix, gap, budget and chaos flag
+    /// byte-identical to the untemplated scenario.
+    #[test]
+    fn templates_prepend_shared_prefixes_without_moving_anything_else() {
+        let base = scenario(0.25).plan();
+        let templated = scenario(0.25).with_templates(2, 1.0, 8).plan();
+        let mut seen = std::collections::HashMap::new();
+        for (pb, pt) in base.iter().zip(&templated) {
+            for (tb, tt) in pb.turns.iter().zip(&pt.turns) {
+                let idx = tt.template.expect("pct 1.0 templates every turn");
+                assert!(idx < 2);
+                assert_eq!(tt.fresh_prompt.len(), tb.fresh_prompt.len() + 8);
+                assert_eq!(&tt.fresh_prompt[8..], &tb.fresh_prompt[..], "suffix moved");
+                // every turn with the same index carries the same 8 tokens
+                let prefix = tt.fresh_prompt[..8].to_vec();
+                assert_eq!(seen.entry(idx).or_insert_with(|| prefix.clone()), &prefix);
+                assert_eq!(tb.followup, tt.followup);
+                assert_eq!(tb.new_tokens, tt.new_tokens);
+                assert_eq!(tb.delay, tt.delay);
+                assert_eq!(tb.disconnect_after, tt.disconnect_after);
+            }
+        }
+        assert_eq!(seen.len(), 2, "both templates should appear over 18 turns");
+        // distinct templates are distinct token strings
+        assert_ne!(seen[&0], seen[&1]);
+    }
+
+    #[test]
+    fn template_share_knob_flips_only_the_template_flags() {
+        let none = scenario(0.0).with_templates(3, 0.0, 8).plan();
+        let half = scenario(0.0).with_templates(3, 0.5, 8).plan();
+        let base = scenario(0.0).plan();
+        let mut templated = 0;
+        for ((pn, ph), pb) in none.iter().zip(&half).zip(&base) {
+            for ((tn, th), tb) in pn.turns.iter().zip(&ph.turns).zip(&pb.turns) {
+                // pct 0.0 with templates configured is the untemplated plan
+                assert_eq!(tn.template, None);
+                assert_eq!(tn.fresh_prompt, tb.fresh_prompt);
+                match th.template {
+                    Some(_) => {
+                        templated += 1;
+                        assert_eq!(&th.fresh_prompt[8..], &tn.fresh_prompt[..]);
+                    }
+                    None => assert_eq!(th.fresh_prompt, tn.fresh_prompt),
+                }
+            }
+        }
+        assert!(templated > 0, "50% over 18 turns should template at least one");
     }
 
     #[test]

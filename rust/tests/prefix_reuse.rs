@@ -1,0 +1,242 @@
+//! Shared-prefix K/V reuse, differentially.
+//!
+//! A prefix-cache hit adopts the donor's cached blocks and replays only
+//! the unmatched prompt suffix through decode steps — and because the
+//! decode path is already byte-pinned against prefill (see
+//! `tests/kv_decode.rs`), the feature must be invisible in every stream:
+//! on vs off byte-identical at tp=1 and tp=2, divergence after the
+//! shared prefix preserved exactly, and zero block leaks after
+//! cancellation waves and failure-path (chaos) cascades.
+//!
+//! Every test skips cleanly when the AOT artifacts are absent (the same
+//! condition under which an `Engine` cannot launch at all), so the suite
+//! never *adds* failures on an artifact-less checkout.
+
+use energonai::coordinator::engine::{Engine, GenRef, GenRequest, LaunchConfig};
+use energonai::memory::kvcache;
+use energonai::runtime::{find_artifacts, Manifest};
+use std::sync::Mutex;
+
+/// Serializes every test in this binary: several assert on the
+/// process-wide kvcache gauges, so no other engine may run concurrently.
+static STATS_LOCK: Mutex<()> = Mutex::new(());
+
+fn stats_guard() -> std::sync::MutexGuard<'static, ()> {
+    STATS_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn artifacts_ready(tp: usize) -> bool {
+    let dir = match find_artifacts() {
+        Ok(d) => d,
+        Err(_) => {
+            eprintln!("skipping: no AOT artifacts (run `make artifacts`)");
+            return false;
+        }
+    };
+    let man = match Manifest::cached(dir) {
+        Ok(m) => m,
+        Err(_) => return false,
+    };
+    let ok = !man.decode_widths("tiny", tp).is_empty() && man.has_kv_prefill("tiny", tp);
+    if !ok {
+        eprintln!("skipping: decode artifacts missing for tiny/tp{tp}");
+    }
+    ok
+}
+
+fn launch(prefix: bool, tp: usize) -> Engine {
+    Engine::launch(
+        LaunchConfig::preset("tiny")
+            .with_parallel(tp, 1)
+            .with_prefix_cache(prefix),
+    )
+    .unwrap()
+}
+
+/// Templated prompts: a 16-token (2-block) shared template followed by
+/// distinct short suffixes, so admissions after the first can adopt the
+/// template's blocks whole.
+fn template() -> Vec<i32> {
+    (0..16).map(|i| ((i * 13) % 100 + 1) as i32).collect()
+}
+
+fn templated_prompts(n: usize) -> Vec<Vec<i32>> {
+    let t = template();
+    (0..n)
+        .map(|i| {
+            let mut p = t.clone();
+            let len = 2 + (i * 3) % 5;
+            p.extend((0..len).map(|j| ((i * 31 + j * 7) % 100 + 1) as i32));
+            p
+        })
+        .collect()
+}
+
+/// The acceptance bar: with the prefix cache on, templated traffic emits
+/// byte-identical token streams to the off engine — sequentially (every
+/// admission after the donor is a trie hit) and concurrently — while
+/// actually taking the adoption path.
+fn assert_parity(tp: usize) {
+    if !artifacts_ready(tp) {
+        return;
+    }
+    let _guard = stats_guard();
+    let ps = templated_prompts(6);
+    let off = launch(false, tp);
+    assert!(!off.prefix_cache_on(), "prefix_cache(false) must stay off");
+    let expect: Vec<Vec<i32>> = ps.iter().map(|p| off.generate(p.clone(), 8).unwrap()).collect();
+    off.shutdown();
+
+    let before = kvcache::global_stats();
+    let on = launch(true, tp);
+    assert!(on.prefix_cache_on(), "kv decode live but prefix cache not on");
+    // sequential: the first prompt registers, every later one can hit
+    let got: Vec<Vec<i32>> = ps.iter().map(|p| on.generate(p.clone(), 8).unwrap()).collect();
+    assert_eq!(got, expect, "prefix reuse diverged (sequential, tp={tp})");
+    let m = on.metrics_snapshot();
+    let (hits, misses) = m.prefix_hit_counts();
+    assert!(hits > 0, "templated sequential traffic never hit the trie (tp={tp})");
+    assert!(misses >= 1, "the donor admission must have missed");
+    assert!(
+        m.kvcache_stats().adopted_blocks > 0,
+        "trie hits must adopt worker-side blocks"
+    );
+    // concurrent: queued hits, stepping decodes and fresh prefills coalesce
+    let grefs: Vec<GenRef> = ps
+        .iter()
+        .map(|p| on.generate_stream(GenRequest::new(p.clone(), 8)).unwrap())
+        .collect();
+    let got: Vec<Vec<i32>> = grefs.iter().map(|g| g.to_here().unwrap()).collect();
+    assert_eq!(got, expect, "prefix reuse diverged (concurrent, tp={tp})");
+    on.shutdown();
+    let after = kvcache::global_stats();
+    assert_eq!(
+        after.blocks_in_use, before.blocks_in_use,
+        "prefix registry leaked blocks across shutdown (tp={tp})"
+    );
+    assert_eq!(after.double_free, before.double_free, "a shared block was freed twice");
+}
+
+#[test]
+fn prefix_on_matches_off_byte_identically_tp1() {
+    assert_parity(1);
+}
+
+#[test]
+fn prefix_on_matches_off_byte_identically_tp2() {
+    assert_parity(2);
+}
+
+/// Sessions that share a prefix then diverge must diverge exactly as the
+/// off engine says: the adopter's continuation writes go to its own
+/// (copy-on-write) tail, never the donor's — and an adopter with the
+/// donor's identical prompt replays the donor's stream.
+#[test]
+fn divergence_after_shared_prefix_is_exact() {
+    if !artifacts_ready(1) {
+        return;
+    }
+    let _guard = stats_guard();
+    let t = template();
+    let mut a = t.clone();
+    a.extend([7, 9]);
+    let mut b = t.clone();
+    b.extend([42, 3, 5]);
+    let off = launch(false, 1);
+    let ea = off.generate(a.clone(), 8).unwrap();
+    let eb = off.generate(b.clone(), 8).unwrap();
+    off.shutdown();
+
+    let on = launch(true, 1);
+    // donor, then two adopters that fork after block 2
+    let ga = on.generate(a.clone(), 8).unwrap();
+    let gb = on.generate(b.clone(), 8).unwrap();
+    assert_eq!(ga, ea, "donor stream changed");
+    assert_eq!(gb, eb, "post-divergence stream corrupted by shared blocks");
+    // an identical re-submission is a hit on the full shared span and
+    // must replay the donor byte-for-byte (greedy decode is deterministic)
+    let ga2 = on.generate(a.clone(), 8).unwrap();
+    assert_eq!(ga2, ea, "identical prompt after a hit diverged");
+    let (hits, _) = on.metrics_snapshot().prefix_hit_counts();
+    assert!(hits >= 2, "both re-admissions should have hit, saw {hits}");
+    on.shutdown();
+}
+
+/// The refcount invariant under the failure paths: a cancellation wave
+/// over templated traffic (queued, stepping and in-flight sessions
+/// alike) plus a chaos panic plan must leave survivors byte-identical
+/// and return every block — shared or private — on shutdown.
+#[test]
+fn cancel_wave_and_chaos_leak_nothing_with_prefix_on() {
+    if !artifacts_ready(1) {
+        return;
+    }
+    let _guard = stats_guard();
+    let ps = templated_prompts(16);
+
+    // control: the survivors' prompts through a prefix-off engine
+    let control = launch(false, 1);
+    let expect: Vec<Vec<i32>> = ps
+        .iter()
+        .step_by(2)
+        .map(|p| control.generate(p.clone(), 6).unwrap())
+        .collect();
+    control.shutdown();
+
+    // cancellation wave
+    let before = kvcache::global_stats();
+    let engine = launch(true, 1);
+    let grefs: Vec<GenRef> = ps
+        .iter()
+        .map(|p| engine.generate_stream(GenRequest::new(p.clone(), 6)).unwrap())
+        .collect();
+    for g in grefs.iter().skip(1).step_by(2) {
+        g.cancel();
+    }
+    let survivors: Vec<Vec<i32>> = grefs.iter().step_by(2).map(|g| g.to_here().unwrap()).collect();
+    assert_eq!(survivors, expect, "a cancelled adopter changed a survivor's stream");
+    for g in grefs.iter().skip(1).step_by(2) {
+        let _ = g.to_here(); // cancelled or raced-to-done; both fine
+    }
+    engine.shutdown();
+    let after = kvcache::global_stats();
+    assert_eq!(after.blocks_in_use, before.blocks_in_use, "cancel wave leaked shared blocks");
+    assert_eq!(after.host_bytes, before.host_bytes);
+    assert_eq!(after.double_free, before.double_free, "a shared block was freed twice");
+
+    // chaos: every 4th batch panics — failed registrants must drop their
+    // trie entries (never go ready without a retention), survivors stream
+    // exactly, and the registry still drains on shutdown
+    let before = kvcache::global_stats();
+    let engine = Engine::launch(
+        LaunchConfig::preset("tiny")
+            .with_prefix_cache(true)
+            .with_faults("panic@every4+0", 7),
+    )
+    .unwrap();
+    let grefs: Vec<GenRef> = ps
+        .iter()
+        .map(|p| engine.generate_stream(GenRequest::new(p.clone(), 6)).unwrap())
+        .collect();
+    let mut failed = 0;
+    for (g, p) in grefs.iter().zip(&ps) {
+        match g.to_here() {
+            Ok(stream) => {
+                assert_eq!(&stream[..p.len()], &p[..], "stream lost its prompt");
+            }
+            Err(e) => {
+                assert!(
+                    e.to_string().contains("injected worker fault")
+                        || e.to_string().contains("watchdog"),
+                    "unexpected error under panic plan: {e:#}"
+                );
+                failed += 1;
+            }
+        }
+    }
+    assert!(failed > 0, "a panic-every-4th-ticket plan never fired across 16 sessions");
+    engine.shutdown();
+    let after = kvcache::global_stats();
+    assert_eq!(after.blocks_in_use, before.blocks_in_use, "chaos cascade leaked shared blocks");
+    assert_eq!(after.double_free, before.double_free);
+}

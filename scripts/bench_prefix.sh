@@ -1,0 +1,25 @@
+#!/usr/bin/env bash
+# Run the shared-prefix reuse benchmark (templated traffic — a few shared
+# prompt templates over most fresh prompts — against the same engine with
+# the prefix cache off vs on) and refresh BENCH_prefix.json at the repo
+# root. A completed-stream parity divergence between the cells or a
+# leaked K/V block exits non-zero. BENCH_SMOKE=1 runs a smaller client
+# pool (CI).
+#
+# Usage: scripts/bench_prefix.sh [extra cargo args...]
+set -euo pipefail
+
+cd "$(dirname "$0")/../rust"
+
+if ! ls ../artifacts/manifest.json >/dev/null 2>&1 && ! ls artifacts/manifest.json >/dev/null 2>&1; then
+    echo "warning: no AOT artifacts found — the bench will skip (run 'make artifacts')" >&2
+fi
+
+cargo bench --bench prefix_reuse "$@"
+
+out="$(cd .. && pwd)/BENCH_prefix.json"
+if [ -f "$out" ]; then
+    echo "refreshed $out"
+else
+    echo "warning: $out was not written (bench skipped?)" >&2
+fi

@@ -54,3 +54,9 @@ BENCH_SMOKE=1 cargo bench --bench specdecode
 # exits non-zero, clean shutdown is implied by the bench returning, and
 # BENCH_saturation.json is refreshed
 BENCH_SMOKE=1 cargo bench --bench saturation
+
+# prefix-reuse smoke: templated traffic with the prefix cache off vs on —
+# a completed-stream divergence between the cells or a leaked K/V block
+# (shared blocks included) exits non-zero, and BENCH_prefix.json is
+# refreshed
+BENCH_SMOKE=1 cargo bench --bench prefix_reuse
