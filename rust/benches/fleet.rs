@@ -1,0 +1,166 @@
+//! Fleet benchmark: throughput of the session-affine router at 1/2/4
+//! replicas on the seeded saturation scenario, plus a kill-and-failover
+//! cell — 3 replicas, one killed mid-run on the scenario's own seeded
+//! schedule — measuring TTFT/TPOT through the failure and the per-
+//! failover replay latency.
+//!
+//! Hard gates (exit 1): survivor streams through the kill must stay
+//! byte-identical to a single-engine no-kill control, no session may be
+//! lost (errors == 0, every turn completes), and no K/V block may leak
+//! on either tier fleet-wide.
+//!
+//! Results land machine-readably in `BENCH_fleet.json` at the repo root
+//! (regenerate with `scripts/bench_fleet.sh`; `BENCH_SMOKE=1` runs a
+//! smaller client pool for CI).
+
+use energonai::coordinator::engine::LaunchConfig;
+use energonai::coordinator::fleet::Fleet;
+use energonai::memory::kvcache;
+use energonai::runtime::find_artifacts;
+use energonai::workload::loadgen::{
+    parity_mismatches, pctl_us, run_fleet_saturation, LoadReport, ReplicaKill,
+    SaturationScenario,
+};
+use std::time::Duration;
+
+type Results = Vec<(String, f64)>;
+
+const SEED: u64 = 2209;
+
+fn run_cell(
+    label: &str,
+    replicas: usize,
+    scenario: &SaturationScenario,
+    kills: &[ReplicaKill],
+    results: &mut Results,
+) -> Option<(LoadReport, u64)> {
+    // the context cap is a property of the compiled artifacts, identical
+    // across replicas
+    let max_context = energonai::runtime::Manifest::cached(find_artifacts().ok()?)
+        .ok()?
+        .shape_points("tiny")
+        .iter()
+        .map(|&(_, s)| s)
+        .max()?;
+    let before = kvcache::global_stats();
+    let fleet = match Fleet::launch(LaunchConfig::preset("tiny").with_warmup(true), replicas) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("skip {label}: {e:#}");
+            return None;
+        }
+    };
+    let report = run_fleet_saturation(&fleet, scenario, max_context, kills);
+    let stats = fleet.stats();
+    fleet.shutdown();
+    let after = kvcache::global_stats();
+    let leaked = after.blocks_in_use.saturating_sub(before.blocks_in_use)
+        + after.host_bytes.saturating_sub(before.host_bytes)
+        + after.double_free.saturating_sub(before.double_free);
+    let failover_p50 =
+        stats.failover_percentile(0.50).map_or(0, |d| d.as_micros() as u64);
+    let failover_p99 =
+        stats.failover_percentile(0.99).map_or(0, |d| d.as_micros() as u64);
+    println!(
+        "{label:>12}: {} turns in {:.1}ms — {} completed / {} shed ({} recovered) / {} errors; \
+         {:.0} tok/s, TTFT p99 {}µs, TPOT p99 {}µs; {} failovers (p50 {}µs p99 {}µs), {} leaked",
+        report.turns(),
+        report.wall.as_secs_f64() * 1e3,
+        report.completed,
+        report.shed,
+        report.recovered,
+        report.errors,
+        report.tokens_per_sec(),
+        pctl_us(&report.ttft_us, 99.0),
+        pctl_us(&report.tpot_us, 99.0),
+        stats.failovers,
+        failover_p50,
+        failover_p99,
+        leaked,
+    );
+    let key = |k: &str| format!("{label}_{k}");
+    results.push((key("replicas"), replicas as f64));
+    results.push((key("turns"), report.turns() as f64));
+    results.push((key("completed"), report.completed as f64));
+    results.push((key("shed"), report.shed as f64));
+    results.push((key("recovered"), report.recovered as f64));
+    results.push((key("busy_rejections"), report.busy_rejections as f64));
+    results.push((key("errors"), report.errors as f64));
+    results.push((key("tokens_per_sec"), report.tokens_per_sec()));
+    results.push((key("wall_us"), report.wall.as_secs_f64() * 1e6));
+    results.push((key("ttft_p50_us"), pctl_us(&report.ttft_us, 50.0) as f64));
+    results.push((key("ttft_p99_us"), pctl_us(&report.ttft_us, 99.0) as f64));
+    results.push((key("tpot_p50_us"), pctl_us(&report.tpot_us, 50.0) as f64));
+    results.push((key("tpot_p99_us"), pctl_us(&report.tpot_us, 99.0) as f64));
+    results.push((key("failovers"), stats.failovers as f64));
+    results.push((key("failover_p50_us"), failover_p50 as f64));
+    results.push((key("failover_p99_us"), failover_p99 as f64));
+    results.push((key("leaked_blocks"), leaked as f64));
+    Some((report, leaked))
+}
+
+fn write_json(results: &Results) {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_fleet.json");
+    let mut body = String::from("{\n  \"schema\": \"bench_fleet/v1\",\n");
+    body.push_str("  \"generated_by\": \"scripts/bench_fleet.sh\",\n");
+    body.push_str("  \"preset\": \"tiny\",\n");
+    body.push_str(&format!("  \"seed\": {SEED},\n"));
+    body.push_str("  \"results\": {\n");
+    for (i, (k, v)) in results.iter().enumerate() {
+        let comma = if i + 1 == results.len() { "" } else { "," };
+        body.push_str(&format!("    \"{k}\": {v:.2}{comma}\n"));
+    }
+    body.push_str("  }\n}\n");
+    match std::fs::write(path, body) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}
+
+fn main() {
+    if find_artifacts().is_err() {
+        eprintln!("no AOT artifacts found — run `make artifacts` first; skipping");
+        return;
+    }
+    let smoke = std::env::var("BENCH_SMOKE").is_ok();
+    let (clients, turns) = if smoke { (8, 3) } else { (16, 4) };
+    let scenario = SaturationScenario::new(SEED, clients, turns);
+
+    println!("== fleet: {clients} clients x {turns} turns, seed {SEED} ==\n");
+    let mut results = Results::new();
+    results.push(("clients".into(), clients as f64));
+    results.push(("turns_per_client".into(), turns as f64));
+
+    // throughput scaling: the same traffic over 1/2/4 replicas
+    let control = run_cell("n1", 1, &scenario, &[], &mut results);
+    run_cell("n2", 2, &scenario, &[], &mut results);
+    run_cell("n4", 4, &scenario, &[], &mut results);
+
+    // kill-and-failover: 3 replicas, one killed mid-run on the seeded
+    // schedule; latency percentiles include streams that failed over
+    let kills = scenario.kill_schedule(3, 1, Duration::from_millis(60));
+    let killed = run_cell("kill1of3", 3, &scenario, &kills, &mut results);
+
+    if let (Some((control, leak_c)), Some((killed, leak_k))) = (control, killed) {
+        let diffs = parity_mismatches(&control, &killed);
+        results.push(("parity".into(), if diffs.is_empty() { 1.0 } else { 0.0 }));
+        println!(
+            "\nparity: {}",
+            if diffs.is_empty() {
+                "streams through the kill byte-identical to the 1-replica control".to_string()
+            } else {
+                format!("DIVERGED:\n{}", diffs.join("\n"))
+            }
+        );
+        let lost = killed.turns() - killed.completed - killed.shed;
+        let leaked = leak_c + leak_k;
+        write_json(&results);
+        if !diffs.is_empty() || lost > 0 || leaked > 0 {
+            // the counters on disk are the evidence; fail the smoke gate
+            eprintln!("FAIL: parity_diffs={} lost_sessions={lost} leaked={leaked}", diffs.len());
+            std::process::exit(1);
+        }
+        return;
+    }
+    write_json(&results);
+}

@@ -29,6 +29,7 @@
 //! admission_token_budget = 4096 # defer prefills past this KV load (0 = off)
 //! slo_ttft_ms = 200      # TTFT SLO target feeding the pressure window
 //! slo_tpot_ms = 50       # per-token SLO target
+//! pressure_max_new_tokens = 8 # degrade: clamp budgets under pressure (0 = shed)
 //! fault_plan = ""        # chaos schedule, e.g. "delay5ms@t3,drop@every16+7@w0"
 //! fault_seed = 0         # seed for probabilistic fault selectors
 //!
@@ -77,6 +78,7 @@ pub fn launch_from_doc(doc: &TomlDoc) -> anyhow::Result<LaunchConfig> {
     launch.engine.admission_token_budget = doc.usize_or("engine.admission_token_budget", 0);
     launch.engine.slo_ttft_ms = doc.usize_or("engine.slo_ttft_ms", 0) as u64;
     launch.engine.slo_tpot_ms = doc.usize_or("engine.slo_tpot_ms", 0) as u64;
+    launch.engine.pressure_max_new_tokens = doc.usize_or("engine.pressure_max_new_tokens", 0);
     launch.engine.fault_plan = doc.str_or("engine.fault_plan", "").to_string();
     launch.engine.fault_seed = doc.usize_or("engine.fault_seed", 0) as u64;
     // fail at load time, not at worker spawn, on an unparsable schedule
@@ -138,6 +140,7 @@ pub fn launch_from_doc(doc: &TomlDoc) -> anyhow::Result<LaunchConfig> {
             "engine.speculative", "engine.spec_k",
             "engine.max_queue_depth", "engine.admission_token_budget",
             "engine.slo_ttft_ms", "engine.slo_tpot_ms",
+            "engine.pressure_max_new_tokens",
             "engine.fault_plan", "engine.fault_seed",
             "model.n_layers",
             "memory.mode", "memory.n_local", "memory.lookahead", "memory.time_scale", "memory.link",
@@ -282,6 +285,7 @@ max_queue_depth = 64
 admission_token_budget = 4096
 slo_ttft_ms = 200
 slo_tpot_ms = 50
+pressure_max_new_tokens = 8
 fault_plan = "delay5ms@t3,drop@every16+7@w0"
 fault_seed = 7
 "#,
@@ -291,12 +295,14 @@ fault_seed = 7
         assert_eq!(l.engine.max_queue_depth, 64);
         assert_eq!(l.engine.admission_token_budget, 4096);
         assert_eq!((l.engine.slo_ttft_ms, l.engine.slo_tpot_ms), (200, 50));
+        assert_eq!(l.engine.pressure_max_new_tokens, 8);
         assert_eq!(l.engine.fault_plan, "delay5ms@t3,drop@every16+7@w0");
         assert_eq!(l.engine.fault_seed, 7);
         // defaults: everything off
         let l = launch_from_doc(&TomlDoc::parse("").unwrap()).unwrap();
         assert_eq!(l.engine.max_queue_depth, 0);
         assert_eq!(l.engine.admission_token_budget, 0);
+        assert_eq!(l.engine.pressure_max_new_tokens, 0);
         assert!(l.engine.fault_plan.is_empty());
         // an unparsable fault schedule fails at load time
         let doc = TomlDoc::parse("[engine]\nfault_plan = \"explode@sometimes\"\n").unwrap();

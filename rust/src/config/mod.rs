@@ -234,6 +234,12 @@ pub struct EngineConfig {
     pub slo_ttft_ms: u64,
     /// Per-token (TPOT) SLO target in ms (0 = untracked).
     pub slo_tpot_ms: u64,
+    /// Graceful degradation before shedding: while the SLO pressure
+    /// window votes "shedding", clamp each admitted session's
+    /// `max_new_tokens` to this floor instead of replying `Busy`
+    /// outright (0 = off; shed as before). Shorter answers drain the
+    /// queue faster without turning load spikes into hard errors.
+    pub pressure_max_new_tokens: usize,
     /// Chaos fault schedule, e.g. `"delay5ms@t3,drop@every16+7@w0"`
     /// (empty = no faults). Parsed by `coordinator::FaultPlan`; applied
     /// at the worker reply boundary so collectives never desynchronize.
@@ -265,6 +271,7 @@ impl Default for EngineConfig {
             admission_token_budget: 0,
             slo_ttft_ms: 0,
             slo_tpot_ms: 0,
+            pressure_max_new_tokens: 0,
             fault_plan: String::new(),
             fault_seed: 0,
         }

@@ -58,7 +58,7 @@ use crate::metrics::Recorder;
 use crate::model::{shard_layer, ModelWeights};
 use crate::runtime::{Device, Manifest};
 use std::collections::{HashMap, HashSet};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
@@ -226,6 +226,14 @@ impl LaunchConfig {
         self.engine.fault_seed = seed;
         self
     }
+
+    /// Graceful degradation: while the SLO window votes "shedding",
+    /// clamp admitted sessions' `max_new_tokens` to this floor instead
+    /// of rejecting them outright (0 = off, shed as before).
+    pub fn with_pressure_floor(mut self, max_new_tokens: usize) -> Self {
+        self.engine.pressure_max_new_tokens = max_new_tokens;
+        self
+    }
 }
 
 /// Paging granularity every worker's cache and the engine-side tier
@@ -301,7 +309,10 @@ pub struct GenRef {
 }
 
 impl GenRef {
-    fn new(prompt: Vec<i32>) -> GenRef {
+    // The constructor and producer-side hooks are crate-visible: the
+    // replica fleet builds its own outer GenRef per session and relays
+    // tokens into it from whichever replica currently runs the session.
+    pub(crate) fn new(prompt: Vec<i32>) -> GenRef {
         GenRef {
             prompt: Arc::new(prompt),
             inner: Arc::new((Mutex::new(GenState::default()), Condvar::new())),
@@ -309,14 +320,14 @@ impl GenRef {
         }
     }
 
-    fn set_cancel_hook(&self, id: u64, inbox: std::sync::Weak<Mutex<Vec<u64>>>) {
+    pub(crate) fn set_cancel_hook(&self, id: u64, inbox: std::sync::Weak<Mutex<Vec<u64>>>) {
         *self.hook.lock().unwrap() = Some(CancelHook { id, inbox });
     }
 
     /// Collector side: one more sampled token is available. Tokens sampled
     /// by a step already in flight when the session was cancelled are
     /// dropped — the stream is terminal from the client's point of view.
-    fn push_token(&self, t: i32) {
+    pub(crate) fn push_token(&self, t: i32) {
         let (m, cv) = &*self.inner;
         let mut g = m.lock().unwrap();
         if g.done {
@@ -329,7 +340,7 @@ impl GenRef {
     /// Collector side: the session ended (stop token, budget, context
     /// limit, or an error). The first terminal state wins: a finish that
     /// races a cancel keeps the cancel's verdict.
-    fn finish(&self, res: anyhow::Result<()>) {
+    pub(crate) fn finish(&self, res: anyhow::Result<()>) {
         let (m, cv) = &*self.inner;
         let mut g = m.lock().unwrap();
         if g.done {
@@ -431,6 +442,11 @@ pub struct TokenRef {
 }
 
 impl TokenRef {
+    /// Wrap a one-token stream (the fleet router's `submit` path).
+    pub(crate) fn from_gen(gref: GenRef) -> TokenRef {
+        TokenRef { gref }
+    }
+
     pub fn to_here(&self) -> anyhow::Result<i32> {
         match self.gref.next()? {
             Some(t) => Ok(t),
@@ -485,6 +501,10 @@ struct Shared {
     sessions: Mutex<HashMap<u64, Session>>,
     metrics: Mutex<Recorder>,
     stopping: AtomicBool,
+    /// Collector liveness: bumped once per worker reply processed. A
+    /// fleet health probe reads this — a counter that stalls while
+    /// batches are pending marks a wedged pipeline.
+    ticks: AtomicU64,
     /// Incremental decode is live: sessions re-enter as decode steps and
     /// finished sessions' cache blocks are released by ticketed command.
     kv_on: bool,
@@ -782,6 +802,7 @@ impl Engine {
             sessions: Mutex::new(HashMap::new()),
             metrics: Mutex::new(recorder),
             stopping: AtomicBool::new(false),
+            ticks: AtomicU64::new(0),
             kv_on,
             spec: spec_on.then(|| SpecShared {
                 drafter: launch
@@ -970,11 +991,21 @@ impl Engine {
             let m = self.shared.metrics.lock().unwrap();
             (m.under_pressure(), m.retry_after_hint_ms())
         };
+        // graceful degradation before shedding: while under pressure,
+        // clamp the token budget to the configured floor — a short
+        // answer drains the queue faster than a busy error retries it
+        let floor = self.launch.engine.pressure_max_new_tokens;
+        let max_new = if pressure && floor > 0 && req.max_new_tokens > floor {
+            self.shared.metrics.lock().unwrap().record_degraded();
+            floor
+        } else {
+            req.max_new_tokens
+        };
         self.shared.sessions.lock().unwrap().insert(
             id,
             Session {
                 prompt_len: req.tokens.len(),
-                max_new: req.max_new_tokens,
+                max_new,
                 stop: req.stop_token,
                 arrived: now,
                 last_at: now,
@@ -1071,6 +1102,31 @@ impl Engine {
         self.shared.sessions.lock().unwrap().len()
     }
 
+    /// Collector liveness ticks: worker replies processed so far. A
+    /// fleet health probe watches the delta — a counter that stalls
+    /// while batches are pending marks a wedged pipeline.
+    pub fn collector_ticks(&self) -> u64 {
+        self.shared.ticks.load(Ordering::Relaxed)
+    }
+
+    /// Prefill requests waiting in the admission queue (placement
+    /// pressure for the fleet router).
+    pub fn queued_prefills(&self) -> usize {
+        self.batcher.lock().unwrap().queued_prefills()
+    }
+
+    /// The rolling SLO window currently votes "shedding".
+    pub fn under_pressure(&self) -> bool {
+        self.shared.metrics.lock().unwrap().under_pressure()
+    }
+
+    /// `(device, host)` K/V blocks in use in the engine-side tier model
+    /// (`None` without the spill tier) — the spill-aware half of fleet
+    /// headroom scoring, and the drain verb's leak gauge.
+    pub fn tier_usage(&self) -> Option<(usize, usize)> {
+        self.batcher.lock().unwrap().tier().map(|t| (t.device_used(), t.host_used()))
+    }
+
     /// Orderly teardown: drain every live session and in-flight batch,
     /// stop services, shut workers down, join everything.
     pub fn shutdown(self) {
@@ -1116,6 +1172,9 @@ fn collector_loop(
     max_seq: usize,
 ) {
     while let Ok((uid, result)) = reply_rx.recv() {
+        // liveness tick for fleet health probes: every processed reply
+        // advances this, whatever its verdict
+        shared.ticks.fetch_add(1, Ordering::Relaxed);
         let entry = shared.pending.lock().unwrap().remove(&uid);
         let Pending { rref, rows, from_batcher } = match entry {
             Some(p) => p,
@@ -1788,6 +1847,7 @@ mod tests {
             sessions: Mutex::new(HashMap::new()),
             metrics: Mutex::new(Recorder::new()),
             stopping: AtomicBool::new(false),
+            ticks: AtomicU64::new(0),
             kv_on: true,
             spec: None,
             cancels: Arc::new(Mutex::new(Vec::new())),

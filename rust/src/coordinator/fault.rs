@@ -10,7 +10,7 @@
 //! ticket. Grammar: comma-separated directives, each
 //!
 //! ```text
-//! <kind>@<selector>[@w<rank>]
+//! <kind>@<selector>[@w<rank>][@r<id>]
 //!
 //! kind:      delay<N>ms | delay<N>us   sleep before replying (a stalled
 //!                                      worker; the batch completes late)
@@ -34,6 +34,13 @@
 //! workload — and because every worker evaluates the same pure function,
 //! an unscoped directive perturbs all ranks coherently while `@w<rank>`
 //! confines it to one (the asymmetric case the watchdog exists for).
+//!
+//! `@r<id>` confines a directive to one *replica* of a fleet (scopes
+//! combine in either order, each at most once, e.g. `drop@t7@w0@r2`).
+//! Replica identity lives in the fleet router, not the engine: the fleet
+//! splits a plan with [`FaultPlan::split_for_replicas`] and hands each
+//! engine its own scope-stripped spec, so on a standalone engine (which
+//! has no replica identity) a replica-scoped directive never fires.
 
 use std::time::Duration;
 
@@ -75,6 +82,10 @@ struct Directive {
     /// Restrict to one worker's world rank (`stage * tp + tp_rank`);
     /// `None` hits every rank.
     worker: Option<usize>,
+    /// Restrict to one fleet replica. Engines never carry a replica
+    /// identity, so a scoped directive is inert until the fleet strips
+    /// the scope via [`FaultPlan::split_for_replicas`].
+    replica: Option<usize>,
 }
 
 /// A parsed, immutable fault schedule. The empty plan (default) is free:
@@ -111,12 +122,59 @@ impl FaultPlan {
     }
 
     /// The fault (if any) this worker must apply to this ticket. First
-    /// matching directive wins.
+    /// matching directive wins. Replica-scoped directives never fire
+    /// here: an engine has no replica identity — the fleet router strips
+    /// the scope before the plan reaches an engine.
     pub fn action(&self, worker_rank: usize, ticket: u64) -> Option<FaultKind> {
         self.directives
             .iter()
-            .find(|d| d.worker.map_or(true, |w| w == worker_rank) && d.sel.hits(self.seed, ticket))
+            .find(|d| {
+                d.replica.is_none()
+                    && d.worker.map_or(true, |w| w == worker_rank)
+                    && d.sel.hits(self.seed, ticket)
+            })
             .map(|d| d.kind)
+    }
+
+    /// Partition a replica-scoped spec into one engine-ready spec per
+    /// replica: an `@r<id>` directive lands only in replica `id`'s spec
+    /// (with the scope stripped — engines stay replica-unaware), an
+    /// unscoped directive lands in every spec. The whole spec is
+    /// validated up front, including that every referenced replica
+    /// exists in a fleet of `replicas`.
+    pub fn split_for_replicas(spec: &str, replicas: usize) -> anyhow::Result<Vec<String>> {
+        FaultPlan::parse(spec, 0)?;
+        let mut out = vec![Vec::<String>::new(); replicas];
+        for entry in spec.split(',').map(str::trim).filter(|e| !e.is_empty()) {
+            let mut replica = None;
+            let mut kept = Vec::new();
+            for (i, seg) in entry.split('@').enumerate() {
+                // only scope positions (after kind@selector) can carry @r
+                if i >= 2 {
+                    if let Some(id) = seg.strip_prefix('r').and_then(|r| r.parse::<usize>().ok()) {
+                        replica = Some(id);
+                        continue;
+                    }
+                }
+                kept.push(seg);
+            }
+            let stripped = kept.join("@");
+            match replica {
+                Some(id) => {
+                    anyhow::ensure!(
+                        id < replicas,
+                        "fault directive {entry:?}: replica r{id} out of range (fleet has {replicas})"
+                    );
+                    out[id].push(stripped);
+                }
+                None => {
+                    for per_replica in &mut out {
+                        per_replica.push(stripped.clone());
+                    }
+                }
+            }
+        }
+        Ok(out.into_iter().map(|v| v.join(",")).collect())
     }
 }
 
@@ -124,10 +182,11 @@ fn parse_directive(entry: &str) -> anyhow::Result<Directive> {
     let mut parts = entry.split('@');
     let kind_s = parts.next().unwrap_or("");
     let sel_s = parts.next();
-    let worker_s = parts.next();
+    let scope_a = parts.next();
+    let scope_b = parts.next();
     anyhow::ensure!(
         parts.next().is_none(),
-        "fault directive {entry:?}: too many '@' segments (kind@selector[@w<rank>])"
+        "fault directive {entry:?}: too many '@' segments (kind@selector[@w<rank>][@r<id>])"
     );
 
     let kind = if kind_s == "drop" {
@@ -154,19 +213,26 @@ fn parse_directive(entry: &str) -> anyhow::Result<Directive> {
         .ok_or_else(|| anyhow::anyhow!("fault directive {entry:?}: missing @<selector>"))?;
     let sel = parse_select(entry, sel_s)?;
 
-    let worker = match worker_s {
-        None => None,
-        Some(w) => {
-            let rank = w
-                .strip_prefix('w')
-                .and_then(|r| r.parse::<usize>().ok())
-                .ok_or_else(|| {
-                    anyhow::anyhow!("fault directive {entry:?}: worker scope must be w<rank>")
-                })?;
-            Some(rank)
+    let mut worker = None;
+    let mut replica = None;
+    for scope in [scope_a, scope_b].into_iter().flatten() {
+        if let Some(rank) = scope.strip_prefix('w').and_then(|r| r.parse::<usize>().ok()) {
+            anyhow::ensure!(
+                worker.is_none(),
+                "fault directive {entry:?}: duplicate w<rank> scope"
+            );
+            worker = Some(rank);
+        } else if let Some(id) = scope.strip_prefix('r').and_then(|r| r.parse::<usize>().ok()) {
+            anyhow::ensure!(
+                replica.is_none(),
+                "fault directive {entry:?}: duplicate r<id> scope"
+            );
+            replica = Some(id);
+        } else {
+            anyhow::bail!("fault directive {entry:?}: scope must be w<rank> or r<id>");
         }
-    };
-    Ok(Directive { kind, sel, worker })
+    }
+    Ok(Directive { kind, sel, worker, replica })
 }
 
 fn parse_select(entry: &str, sel: &str) -> anyhow::Result<Select> {
@@ -245,6 +311,44 @@ mod tests {
     }
 
     #[test]
+    fn replica_scope_parses_but_is_inert_on_a_bare_engine() {
+        // scopes combine in either order, each at most once
+        for spec in ["drop@t5@r1", "drop@t5@w0@r1", "drop@t5@r1@w0"] {
+            let p = FaultPlan::parse(spec, 0).unwrap();
+            assert!(!p.is_empty());
+            // an engine has no replica identity: the directive never fires
+            for rank in 0..4 {
+                assert_eq!(p.action(rank, 5), None, "{spec}");
+            }
+        }
+    }
+
+    #[test]
+    fn split_for_replicas_partitions_and_strips_the_scope() {
+        let spec = "delay5ms@t3, drop@t7@r1, panic@t9@r0@w2, drop@every4+1@w0@r1";
+        let per = FaultPlan::split_for_replicas(spec, 2).unwrap();
+        assert_eq!(per[0], "delay5ms@t3,panic@t9@w2");
+        assert_eq!(per[1], "delay5ms@t3,drop@t7,drop@every4+1@w0");
+        // the stripped specs parse, and now fire on their engine
+        let p0 = FaultPlan::parse(&per[0], 0).unwrap();
+        assert_eq!(p0.action(2, 9), Some(FaultKind::Panic));
+        assert_eq!(p0.action(0, 7), None, "r1's directive must not leak into r0");
+        let p1 = FaultPlan::parse(&per[1], 0).unwrap();
+        assert_eq!(p1.action(0, 7), Some(FaultKind::Drop));
+        // unscoped spec fans out to every replica; empty spec stays empty
+        assert_eq!(FaultPlan::split_for_replicas("drop@t1", 3).unwrap(), vec![
+            "drop@t1".to_string(),
+            "drop@t1".to_string(),
+            "drop@t1".to_string()
+        ]);
+        assert_eq!(FaultPlan::split_for_replicas("", 2).unwrap(), vec!["", ""]);
+        // a directive naming a replica outside the fleet is an error
+        assert!(FaultPlan::split_for_replicas("drop@t1@r5", 2).is_err());
+        // and a malformed spec fails validation before partitioning
+        assert!(FaultPlan::split_for_replicas("drop@t1@q2", 2).is_err());
+    }
+
+    #[test]
     fn first_match_wins() {
         let p = FaultPlan::parse("panic@t4, drop@every2+0", 0).unwrap();
         assert_eq!(p.action(0, 4), Some(FaultKind::Panic));
@@ -294,6 +398,11 @@ mod tests {
             "drop@pabc",
             "drop@t1@q2",
             "drop@t1@w2@extra",
+            "drop@t1@r",
+            "drop@t1@rx",
+            "drop@t1@r1@r2",
+            "drop@t1@w0@w1",
+            "drop@t1@w0@r1@r2",
         ] {
             assert!(FaultPlan::parse(bad, 0).is_err(), "{bad:?} should not parse");
         }

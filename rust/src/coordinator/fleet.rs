@@ -1,0 +1,652 @@
+//! Fault-tolerant replica fleet: N self-contained engine replicas in one
+//! process behind a session-affine router.
+//!
+//! One coordinator is both a throughput ceiling and a single point of
+//! failure — a wedged or killed engine takes every session it holds down
+//! with it. The fleet makes replicas fungible (the DeepSpeed-Inference
+//! serving model) without giving up streaming sessions:
+//!
+//! - **Placement** is session-affine with spill-aware headroom scoring:
+//!   a returning client lands on its previous replica while it stays
+//!   healthy (its K/V context and hot prefixes live there), new sessions
+//!   go to the healthy replica with the most admission headroom (live
+//!   sessions, queued prefills, SLO pressure, device-tier occupancy). A
+//!   `Busy` from the preferred replica falls through to the next-best
+//!   one before the caller ever sees it.
+//! - **Health probes** run in a supervisor loop: collector liveness
+//!   ticks (worker replies processed), queue depth, and the `Recorder`
+//!   SLO pressure bit per replica, surfaced through
+//!   [`crate::metrics::FleetRollup`].
+//! - **Failure verbs**: [`Fleet::drain`] stops placement and lets
+//!   sessions finish, then proves zero blocks in use on both tiers at
+//!   teardown; [`Fleet::kill`] marks a replica dead and fails its work
+//!   fast; failover is implicit — any session whose replica is dead or
+//!   draining when its stream errors is transparently **replayed on a
+//!   survivor**.
+//!
+//! Failover = replay-from-committed-tokens: the client holds an *outer*
+//! [`GenRef`] owned by the fleet; a relay thread copies tokens into it
+//! from whichever replica currently runs the session, so the committed
+//! tokens live in the outer stream state regardless of replica health.
+//! On failure the relay re-prefills `prompt ⊕ committed` with the
+//! remaining budget on a survivor. Greedy decode is deterministic in the
+//! token sequence, so the survivor's continuation is byte-identical to
+//! the one the dead replica would have produced — the client sees one
+//! uninterrupted stream, never a mid-stream error.
+
+use super::batcher::Busy;
+use super::engine::{Engine, GenRef, GenRequest, LaunchConfig, TokenRef};
+use super::fault::FaultPlan;
+use crate::metrics::{FleetRollup, ReplicaSnapshot};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::{self, JoinHandle};
+use std::time::{Duration, Instant};
+
+/// Supervisor probe / cancel-propagation cadence.
+const SUPERVISE_EVERY: Duration = Duration::from_millis(2);
+/// How long a failover keeps retrying `Busy` survivors before giving up
+/// and failing the session for real.
+const FAILOVER_DEADLINE: Duration = Duration::from_secs(10);
+
+/// A replica's lifecycle state. Transitions only move right
+/// (`Healthy → Draining → Dead` or `Healthy → Dead`); a dead replica
+/// never rejoins the fleet.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReplicaState {
+    /// Accepting placements.
+    Healthy,
+    /// No new placements; existing sessions run to completion.
+    Draining,
+    /// Gone. Sessions it held have failed over or finished.
+    Dead,
+}
+
+impl ReplicaState {
+    fn name(self) -> &'static str {
+        match self {
+            ReplicaState::Healthy => "healthy",
+            ReplicaState::Draining => "draining",
+            ReplicaState::Dead => "dead",
+        }
+    }
+}
+
+/// What [`Fleet::drain`] proved at teardown.
+#[derive(Clone, Copy, Debug)]
+pub struct DrainReport {
+    pub replica: usize,
+    /// Sessions still live on the replica when the drain began.
+    pub sessions_at_start: usize,
+    /// K/V blocks still in use on the device tier at teardown (a clean
+    /// drain leaves zero).
+    pub device_blocks: usize,
+    /// Same for the host (spill) tier.
+    pub host_blocks: usize,
+}
+
+/// Last health-probe snapshot, kept so `stats` can describe a replica
+/// even after its engine is gone.
+#[derive(Clone, Copy, Default)]
+struct Probe {
+    ticks: u64,
+    queued: usize,
+    sessions: usize,
+    pressure: bool,
+}
+
+struct ReplicaSlot {
+    id: usize,
+    /// `None` once killed/drained (the engine was consumed by shutdown).
+    engine: Mutex<Option<Engine>>,
+    state: Mutex<ReplicaState>,
+    placed: AtomicU64,
+    probe: Mutex<Probe>,
+}
+
+impl ReplicaSlot {
+    fn state(&self) -> ReplicaState {
+        *self.state.lock().unwrap()
+    }
+}
+
+/// One live fleet session: the client-facing stream, the replica-facing
+/// stream, and everything needed to replay it elsewhere.
+struct SessionMeta {
+    outer: GenRef,
+    inner: GenRef,
+    replica: usize,
+    prompt: Vec<i32>,
+    /// Tokens already pushed to the outer stream — the replay point.
+    committed: Vec<i32>,
+    max_new: usize,
+    stop: Option<i32>,
+    client: Option<u64>,
+}
+
+struct FleetShared {
+    replicas: Vec<ReplicaSlot>,
+    sessions: Mutex<HashMap<u64, SessionMeta>>,
+    /// Client key → last replica that held its session (KV locality).
+    affinity: Mutex<HashMap<u64, usize>>,
+    /// Outer-GenRef cancel hook inbox, drained by the supervisor and
+    /// propagated to the session's current inner stream.
+    cancels: Arc<Mutex<Vec<u64>>>,
+    next_id: AtomicU64,
+    stopping: AtomicBool,
+    placed: AtomicU64,
+    failovers: AtomicU64,
+    failover_us: Mutex<Vec<u64>>,
+    kills: AtomicU64,
+    drains: AtomicU64,
+}
+
+/// The router. All failure verbs and stats go through here; sessions
+/// created by [`Fleet::generate_stream`] survive any single replica.
+pub struct Fleet {
+    shared: Arc<FleetShared>,
+    supervisor: Option<JoinHandle<()>>,
+    relays: Mutex<Vec<JoinHandle<()>>>,
+    reapers: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl Fleet {
+    /// Launch `n` replicas of `base`. Each replica gets its own engine
+    /// (workers, batcher, collector, K/V tiers); a replica-scoped fault
+    /// plan (`@r<id>`, see `coordinator::fault`) is partitioned so each
+    /// engine only ever sees its own directives.
+    pub fn launch(base: LaunchConfig, n: usize) -> anyhow::Result<Fleet> {
+        anyhow::ensure!(n >= 1, "a fleet needs at least one replica");
+        let plans = FaultPlan::split_for_replicas(&base.engine.fault_plan, n)?;
+        let mut replicas = Vec::with_capacity(n);
+        for (id, plan) in plans.into_iter().enumerate() {
+            let mut launch = base.clone();
+            launch.engine.fault_plan = plan;
+            replicas.push(ReplicaSlot {
+                id,
+                engine: Mutex::new(Some(Engine::launch(launch)?)),
+                state: Mutex::new(ReplicaState::Healthy),
+                placed: AtomicU64::new(0),
+                probe: Mutex::new(Probe::default()),
+            });
+        }
+        let shared = Arc::new(FleetShared {
+            replicas,
+            sessions: Mutex::new(HashMap::new()),
+            affinity: Mutex::new(HashMap::new()),
+            cancels: Arc::new(Mutex::new(Vec::new())),
+            next_id: AtomicU64::new(0),
+            stopping: AtomicBool::new(false),
+            placed: AtomicU64::new(0),
+            failovers: AtomicU64::new(0),
+            failover_us: Mutex::new(Vec::new()),
+            kills: AtomicU64::new(0),
+            drains: AtomicU64::new(0),
+        });
+        let supervisor = thread::spawn({
+            let shared = shared.clone();
+            move || supervise(&shared)
+        });
+        Ok(Fleet {
+            shared,
+            supervisor: Some(supervisor),
+            relays: Mutex::new(Vec::new()),
+            reapers: Mutex::new(Vec::new()),
+        })
+    }
+
+    pub fn replicas(&self) -> usize {
+        self.shared.replicas.len()
+    }
+
+    pub fn replica_state(&self, id: usize) -> Option<ReplicaState> {
+        self.shared.replicas.get(id).map(|s| s.state())
+    }
+
+    /// Start a streaming session with no client affinity.
+    pub fn generate_stream(&self, req: GenRequest) -> anyhow::Result<GenRef> {
+        self.start_session(req, None)
+    }
+
+    /// Start a streaming session for `client`: placement prefers the
+    /// replica that last held one of the client's sessions (its K/V
+    /// context and any cached prefixes are local there).
+    pub fn generate_stream_for(&self, client: u64, req: GenRequest) -> anyhow::Result<GenRef> {
+        self.start_session(req, Some(client))
+    }
+
+    /// Blocking greedy generation through the fleet (mirrors
+    /// `Engine::generate`).
+    pub fn generate(&self, prompt: Vec<i32>, n_tokens: usize) -> anyhow::Result<Vec<i32>> {
+        if n_tokens == 0 {
+            anyhow::ensure!(!prompt.is_empty(), "empty prompt");
+            return Ok(prompt);
+        }
+        self.generate_stream(GenRequest::new(prompt, n_tokens))?.to_here()
+    }
+
+    /// One-token submission (mirrors `Engine::submit`).
+    pub fn submit(&self, tokens: Vec<i32>) -> anyhow::Result<TokenRef> {
+        Ok(TokenRef::from_gen(self.generate_stream(GenRequest::new(tokens, 1))?))
+    }
+
+    fn start_session(&self, req: GenRequest, client: Option<u64>) -> anyhow::Result<GenRef> {
+        anyhow::ensure!(!req.tokens.is_empty(), "empty prompt");
+        anyhow::ensure!(req.max_new_tokens >= 1, "max_new_tokens must be >= 1");
+        anyhow::ensure!(
+            !self.shared.stopping.load(Ordering::SeqCst),
+            "fleet is shutting down"
+        );
+        let sid = self.shared.next_id.fetch_add(1, Ordering::SeqCst);
+        let outer = GenRef::new(req.tokens.clone());
+        outer.set_cancel_hook(sid, Arc::downgrade(&self.shared.cancels));
+        let (inner, rid) = place(&self.shared, &req, client, None)?;
+        self.shared.sessions.lock().unwrap().insert(
+            sid,
+            SessionMeta {
+                outer: outer.clone(),
+                inner,
+                replica: rid,
+                prompt: req.tokens,
+                committed: Vec::new(),
+                max_new: req.max_new_tokens,
+                stop: req.stop_token,
+                client,
+            },
+        );
+        let handle = thread::spawn({
+            let shared = self.shared.clone();
+            move || relay(&shared, sid)
+        });
+        self.relays.lock().unwrap().push(handle);
+        Ok(outer)
+    }
+
+    /// Deliberately or chaos-driven: mark the replica dead and fail its
+    /// in-flight work fast. Victim sessions' relays observe the error
+    /// and replay on a survivor; the dead engine is drained and joined
+    /// by a background reaper so the caller never blocks on teardown.
+    pub fn kill(&self, id: usize) -> anyhow::Result<()> {
+        let slot = self
+            .shared
+            .replicas
+            .get(id)
+            .ok_or_else(|| anyhow::anyhow!("no replica r{id}"))?;
+        {
+            let mut state = slot.state.lock().unwrap();
+            anyhow::ensure!(*state != ReplicaState::Dead, "replica r{id} is already dead");
+            *state = ReplicaState::Dead;
+        }
+        self.shared.kills.fetch_add(1, Ordering::Relaxed);
+        // fail the victims fast: cancelling the *inner* stream unblocks
+        // each relay with an error while the outer stream stays live, so
+        // the relay's failover path takes over
+        let victims: Vec<GenRef> = {
+            let sessions = self.shared.sessions.lock().unwrap();
+            sessions.values().filter(|m| m.replica == id).map(|m| m.inner.clone()).collect()
+        };
+        for inner in victims {
+            inner.cancel();
+        }
+        if let Some(engine) = slot.engine.lock().unwrap().take() {
+            let reaper = thread::spawn(move || engine.shutdown());
+            self.reapers.lock().unwrap().push(reaper);
+        }
+        Ok(())
+    }
+
+    /// Stop placing on the replica, let its sessions finish, then tear
+    /// the engine down — proving zero K/V blocks in use on either tier
+    /// first. Returns the teardown gauges for the caller to assert on.
+    pub fn drain(&self, id: usize) -> anyhow::Result<DrainReport> {
+        let slot = self
+            .shared
+            .replicas
+            .get(id)
+            .ok_or_else(|| anyhow::anyhow!("no replica r{id}"))?;
+        {
+            let mut state = slot.state.lock().unwrap();
+            anyhow::ensure!(
+                *state == ReplicaState::Healthy,
+                "replica r{id} is {} — only a healthy replica can drain",
+                state.name()
+            );
+            *state = ReplicaState::Draining;
+        }
+        self.shared.drains.fetch_add(1, Ordering::Relaxed);
+        let sessions_at_start = match slot.engine.lock().unwrap().as_ref() {
+            Some(e) => e.session_count(),
+            None => 0,
+        };
+        // relays consume inner streams unconditionally, so every session
+        // finishes (budget, stop token, or context limit) without any
+        // client cooperation; the engine watchdog bounds wedged batches
+        loop {
+            let fleet_side = self
+                .shared
+                .sessions
+                .lock()
+                .unwrap()
+                .values()
+                .filter(|m| m.replica == id)
+                .count();
+            let engine_side = match slot.engine.lock().unwrap().as_ref() {
+                Some(e) => e.session_count() + e.pending_count(),
+                None => 0,
+            };
+            if fleet_side == 0 && engine_side == 0 {
+                break;
+            }
+            thread::sleep(Duration::from_millis(1));
+        }
+        let engine = slot.engine.lock().unwrap().take();
+        let (device_blocks, host_blocks) = match &engine {
+            Some(e) => e.tier_usage().unwrap_or((0, 0)),
+            None => (0, 0),
+        };
+        if let Some(e) = engine {
+            e.shutdown();
+        }
+        *slot.state.lock().unwrap() = ReplicaState::Dead;
+        Ok(DrainReport { replica: id, sessions_at_start, device_blocks, host_blocks })
+    }
+
+    /// Per-replica health/load rollup plus the router's failure-verb
+    /// counters.
+    pub fn stats(&self) -> FleetRollup {
+        let mut replicas = Vec::with_capacity(self.shared.replicas.len());
+        for slot in &self.shared.replicas {
+            let state = slot.state();
+            let snap = match slot.engine.lock().unwrap().as_ref() {
+                Some(e) => ReplicaSnapshot {
+                    id: slot.id,
+                    state: state.name(),
+                    sessions: e.session_count(),
+                    queued_prefills: e.queued_prefills(),
+                    under_pressure: e.under_pressure(),
+                    collector_ticks: e.collector_ticks(),
+                    placed: slot.placed.load(Ordering::Relaxed),
+                    device_blocks: e.tier_usage().map_or(0, |(d, _)| d),
+                    host_blocks: e.tier_usage().map_or(0, |(_, h)| h),
+                    summary: e.metrics_snapshot().summary(),
+                },
+                // engine gone (killed/drained): report the last health
+                // probe taken while it was alive
+                None => {
+                    let probe = *slot.probe.lock().unwrap();
+                    ReplicaSnapshot {
+                        id: slot.id,
+                        state: state.name(),
+                        sessions: probe.sessions,
+                        queued_prefills: probe.queued,
+                        under_pressure: probe.pressure,
+                        collector_ticks: probe.ticks,
+                        placed: slot.placed.load(Ordering::Relaxed),
+                        device_blocks: 0,
+                        host_blocks: 0,
+                        summary: String::new(),
+                    }
+                }
+            };
+            replicas.push(snap);
+        }
+        FleetRollup {
+            replicas,
+            placed: self.shared.placed.load(Ordering::Relaxed),
+            failovers: self.shared.failovers.load(Ordering::Relaxed),
+            failover_us: self.shared.failover_us.lock().unwrap().clone(),
+            kills: self.shared.kills.load(Ordering::Relaxed),
+            drains: self.shared.drains.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Orderly teardown: let every fleet session finish, then shut all
+    /// surviving replicas down and join every service thread.
+    pub fn shutdown(mut self) {
+        self.shared.stopping.store(true, Ordering::SeqCst);
+        // the supervisor exits on the stopping flag, so propagate any
+        // late client cancels ourselves while sessions wind down
+        loop {
+            propagate_cancels(&self.shared);
+            if self.shared.sessions.lock().unwrap().is_empty() {
+                break;
+            }
+            thread::sleep(Duration::from_millis(1));
+        }
+        for handle in self.relays.lock().unwrap().drain(..) {
+            let _ = handle.join();
+        }
+        for slot in &self.shared.replicas {
+            *slot.state.lock().unwrap() = ReplicaState::Dead;
+            if let Some(engine) = slot.engine.lock().unwrap().take() {
+                engine.shutdown();
+            }
+        }
+        for handle in self.reapers.lock().unwrap().drain(..) {
+            let _ = handle.join();
+        }
+        if let Some(handle) = self.supervisor.take() {
+            let _ = handle.join();
+        }
+    }
+}
+
+/// Admission headroom: lower scores first. Weighs live work (sessions,
+/// queued prefills), the SLO pressure bit, and — spill-aware — how full
+/// the device tier is plus how much has already been pushed to the host
+/// tier (a spilled session must be prefetched back before it can run).
+fn headroom(e: &Engine) -> u64 {
+    let mut score = e.session_count() as u64 * 4 + e.queued_prefills() as u64 * 8;
+    if e.under_pressure() {
+        score += 64;
+    }
+    if let Some((device, host)) = e.tier_usage() {
+        let cap = e.launch.engine.kv_device_blocks.max(1) as u64;
+        score += device as u64 * 32 / cap + host as u64;
+    }
+    score
+}
+
+/// Choose a healthy replica and admit `req` there. Affinity wins while
+/// its replica stays healthy; otherwise replicas are tried in headroom
+/// order, falling through `Busy` rejections to the next-best one.
+/// `exclude` bars the failing replica during a failover.
+fn place(
+    shared: &FleetShared,
+    req: &GenRequest,
+    client: Option<u64>,
+    exclude: Option<usize>,
+) -> anyhow::Result<(GenRef, usize)> {
+    let mut order: Vec<(u64, usize)> = Vec::new();
+    for slot in &shared.replicas {
+        if Some(slot.id) == exclude || slot.state() != ReplicaState::Healthy {
+            continue;
+        }
+        if let Some(e) = slot.engine.lock().unwrap().as_ref() {
+            order.push((headroom(e), slot.id));
+        }
+    }
+    order.sort_unstable();
+    let mut order: Vec<usize> = order.into_iter().map(|(_, id)| id).collect();
+    if let Some(c) = client {
+        if let Some(&home) = shared.affinity.lock().unwrap().get(&c) {
+            if let Some(pos) = order.iter().position(|&id| id == home) {
+                order.remove(pos);
+                order.insert(0, home);
+            }
+        }
+    }
+    let mut last_err = anyhow::anyhow!("no healthy replica");
+    for rid in order {
+        let slot = &shared.replicas[rid];
+        if slot.state() != ReplicaState::Healthy {
+            continue;
+        }
+        let guard = slot.engine.lock().unwrap();
+        let Some(engine) = guard.as_ref() else { continue };
+        match engine.generate_stream(req.clone()) {
+            Ok(inner) => {
+                slot.placed.fetch_add(1, Ordering::Relaxed);
+                shared.placed.fetch_add(1, Ordering::Relaxed);
+                if let Some(c) = client {
+                    shared.affinity.lock().unwrap().insert(c, rid);
+                }
+                return Ok((inner, rid));
+            }
+            Err(e) => last_err = e,
+        }
+    }
+    Err(last_err)
+}
+
+/// Per-session pump: copy tokens from the session's current inner stream
+/// to the client's outer stream, failing over to a survivor whenever the
+/// inner stream errors while its replica is dead or draining.
+fn relay(shared: &Arc<FleetShared>, sid: u64) {
+    loop {
+        let inner = {
+            let sessions = shared.sessions.lock().unwrap();
+            match sessions.get(&sid) {
+                Some(m) => {
+                    if m.outer.is_cancelled() {
+                        // client cancelled between iterations: tear the
+                        // replica-side session down and stop
+                        m.inner.cancel();
+                        drop(sessions);
+                        shared.sessions.lock().unwrap().remove(&sid);
+                        return;
+                    }
+                    m.inner.clone()
+                }
+                None => return,
+            }
+        };
+        match inner.next() {
+            Ok(Some(tok)) => {
+                let mut sessions = shared.sessions.lock().unwrap();
+                if let Some(m) = sessions.get_mut(&sid) {
+                    m.outer.push_token(tok);
+                    m.committed.push(tok);
+                }
+            }
+            Ok(None) => {
+                let meta = shared.sessions.lock().unwrap().remove(&sid);
+                if let Some(m) = meta {
+                    m.outer.finish(Ok(()));
+                }
+                return;
+            }
+            Err(err) => {
+                let (outer, home) = {
+                    let sessions = shared.sessions.lock().unwrap();
+                    match sessions.get(&sid) {
+                        Some(m) => (m.outer.clone(), m.replica),
+                        None => return,
+                    }
+                };
+                if outer.is_cancelled() {
+                    // the client's cancel propagated to the inner stream
+                    // (or raced a fault) — the outer verdict is already
+                    // terminal, nothing to replay
+                    shared.sessions.lock().unwrap().remove(&sid);
+                    return;
+                }
+                let healthy = shared.replicas[home].state() == ReplicaState::Healthy;
+                if healthy || shared.stopping.load(Ordering::SeqCst) {
+                    // a genuine engine failure (or teardown): surface it
+                    shared.sessions.lock().unwrap().remove(&sid);
+                    outer.finish(Err(err));
+                    return;
+                }
+                if let Err(fail) = failover(shared, sid) {
+                    shared.sessions.lock().unwrap().remove(&sid);
+                    outer.finish(Err(fail));
+                    return;
+                }
+                // failover swapped m.inner; loop picks the new stream up
+            }
+        }
+    }
+}
+
+/// Replay a victim session on a survivor: re-prefill the prompt plus
+/// every committed token with the remaining budget. Greedy decode makes
+/// the survivor's continuation byte-identical to the one the victim's
+/// replica owed. Retries `Busy` survivors until [`FAILOVER_DEADLINE`].
+fn failover(shared: &Arc<FleetShared>, sid: u64) -> anyhow::Result<()> {
+    let began = Instant::now();
+    let (req, client, old_replica) = {
+        let sessions = shared.sessions.lock().unwrap();
+        let m = sessions
+            .get(&sid)
+            .ok_or_else(|| anyhow::anyhow!("session {sid} vanished mid-failover"))?;
+        let remaining = m.max_new.saturating_sub(m.committed.len());
+        anyhow::ensure!(remaining >= 1, "session {sid} has no budget left to replay");
+        let mut tokens = m.prompt.clone();
+        tokens.extend_from_slice(&m.committed);
+        let mut req = GenRequest::new(tokens, remaining);
+        req.stop_token = m.stop;
+        (req, m.client, m.replica)
+    };
+    loop {
+        match place(shared, &req, client, Some(old_replica)) {
+            Ok((inner, rid)) => {
+                let mut sessions = shared.sessions.lock().unwrap();
+                let m = sessions
+                    .get_mut(&sid)
+                    .ok_or_else(|| anyhow::anyhow!("session {sid} vanished mid-failover"))?;
+                m.inner = inner;
+                m.replica = rid;
+                shared.failovers.fetch_add(1, Ordering::Relaxed);
+                shared
+                    .failover_us
+                    .lock()
+                    .unwrap()
+                    .push(began.elapsed().as_micros() as u64);
+                return Ok(());
+            }
+            Err(e) => {
+                let retriable = e.downcast_ref::<Busy>().is_some();
+                if !retriable || began.elapsed() > FAILOVER_DEADLINE {
+                    return Err(e.context(format!(
+                        "failover of session {sid} off replica r{old_replica}"
+                    )));
+                }
+                let hint = e.downcast_ref::<Busy>().map_or(5, |b| b.retry_after_ms.clamp(1, 50));
+                thread::sleep(Duration::from_millis(hint));
+            }
+        }
+    }
+}
+
+/// Forward outer-stream cancels to whichever inner stream currently
+/// backs each session.
+fn propagate_cancels(shared: &FleetShared) {
+    let ids: Vec<u64> = std::mem::take(&mut *shared.cancels.lock().unwrap());
+    for sid in ids {
+        let inner = shared.sessions.lock().unwrap().get(&sid).map(|m| m.inner.clone());
+        if let Some(inner) = inner {
+            inner.cancel();
+        }
+    }
+}
+
+/// Supervisor loop: cancel propagation plus per-replica health probes.
+fn supervise(shared: &FleetShared) {
+    while !shared.stopping.load(Ordering::SeqCst) {
+        propagate_cancels(shared);
+        for slot in &shared.replicas {
+            let snapshot = slot.engine.lock().unwrap().as_ref().map(|e| Probe {
+                ticks: e.collector_ticks(),
+                queued: e.queued_prefills(),
+                sessions: e.session_count(),
+                pressure: e.under_pressure(),
+            });
+            if let Some(probe) = snapshot {
+                *slot.probe.lock().unwrap() = probe;
+            }
+        }
+        thread::sleep(SUPERVISE_EVERY);
+    }
+}

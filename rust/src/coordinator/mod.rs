@@ -18,6 +18,7 @@ pub mod consistency;
 pub mod drafter;
 pub mod engine;
 pub mod fault;
+pub mod fleet;
 pub mod rpc;
 pub mod worker;
 
@@ -26,4 +27,5 @@ pub use fault::{FaultKind, FaultPlan};
 pub use consistency::{ConsistencyQueue, TicketCounter};
 pub use drafter::{Drafter, DrafterHandle, MisdraftDrafter, NGramDrafter, ReplayDrafter};
 pub use engine::{Engine, GenRef, GenRequest, LaunchConfig, MemoryMode, TokenRef};
+pub use fleet::{DrainReport, Fleet, ReplicaState};
 pub use rpc::{BatchInput, BatchOutput, Phase, RRef};

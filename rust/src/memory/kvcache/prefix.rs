@@ -44,17 +44,28 @@ struct EntryMeta {
     ready: bool,
     /// In-flight adoptions formed against this entry.
     leases: usize,
-    /// Registration order (FIFO eviction among evictable entries).
-    seq: u64,
+    /// Logical-clock stamp of the entry's last match (or its
+    /// registration, before any hit) — the recency half of eviction.
+    last_hit: u64,
+    /// Whole blocks this entry pins on every worker (`path.len / chunk`)
+    /// — the footprint weight: a stale 8-block template costs the device
+    /// tier more than a stale 1-block one.
+    blocks: usize,
 }
 
-/// Engine-side prefix trie with capacity-bounded FIFO eviction.
+/// Engine-side prefix trie with capacity-bounded eviction: the victim is
+/// the ready, lease-free entry with the highest `staleness × blocks
+/// pinned` score — LRU by last hit, weighted by how much device memory
+/// the entry actually holds. Entries that have never been matched age
+/// from their registration stamp, so with equal footprints the policy
+/// degrades to FIFO.
 #[derive(Debug)]
 pub struct PrefixIndex {
     chunk: usize,
     max_entries: usize,
     root: Node,
     entries: HashMap<u64, EntryMeta>,
+    /// Logical clock: bumped on every registration and every hit.
     seq: u64,
     pending_evict: Vec<u64>,
     hits: u64,
@@ -117,7 +128,13 @@ impl PrefixIndex {
         self.seq += 1;
         self.entries.insert(
             id,
-            EntryMeta { path: path.to_vec(), ready: false, leases: 0, seq: self.seq },
+            EntryMeta {
+                path: path.to_vec(),
+                ready: false,
+                leases: 0,
+                last_hit: self.seq,
+                blocks: chunks,
+            },
         );
         self.enforce_cap();
         true
@@ -156,8 +173,14 @@ impl PrefixIndex {
                 break;
             }
         }
-        if best.is_some() {
+        if let Some((id, _)) = best {
             self.hits += 1;
+            // refresh recency: a matched entry is hot, keep it resident
+            self.seq += 1;
+            let stamp = self.seq;
+            if let Some(e) = self.entries.get_mut(&id) {
+                e.last_hit = stamp;
+            }
         } else {
             self.misses += 1;
         }
@@ -206,17 +229,31 @@ impl PrefixIndex {
         std::mem::take(&mut self.pending_evict)
     }
 
-    /// FIFO-evict ready, lease-free entries down to the cap.
+    /// Evict ready, lease-free entries down to the cap. The victim
+    /// maximizes `staleness × blocks pinned` (staleness measured on the
+    /// shared logical clock), so a long-stale multi-block template is
+    /// reclaimed before a recently-hit or cheap one; ties fall to the
+    /// entry with the oldest last hit, then the smallest id, which keeps
+    /// the policy deterministic and FIFO-compatible for never-hit,
+    /// equal-footprint entries.
     fn enforce_cap(&mut self) {
         if self.max_entries == 0 {
             return;
         }
         while self.entries.len() > self.max_entries {
+            let clock = self.seq;
             let victim = self
                 .entries
                 .iter()
                 .filter(|(_, e)| e.ready && e.leases == 0)
-                .min_by_key(|(_, e)| e.seq)
+                .max_by_key(|(&id, e)| {
+                    let staleness = clock - e.last_hit;
+                    (
+                        staleness * e.blocks as u64,
+                        std::cmp::Reverse(e.last_hit),
+                        std::cmp::Reverse(id),
+                    )
+                })
                 .map(|(&id, _)| id);
             match victim {
                 Some(id) => self.remove(&[id]),
@@ -351,5 +388,38 @@ mod tests {
         // lease of an evicted entry reports failure
         assert!(!t.lease(1));
         t.unlease(99); // unknown: tolerated
+    }
+
+    #[test]
+    fn a_match_refreshes_recency_and_deflects_eviction() {
+        let mut t = PrefixIndex::new(2, 2);
+        assert!(t.register(1, &[1, 1]));
+        assert!(t.register(2, &[2, 2]));
+        t.mark_ready(1);
+        t.mark_ready(2);
+        // hit the *older* entry: it becomes the most recently used
+        assert_eq!(t.match_longest(&[1, 1]), Some((1, 2)));
+        // over cap: id 2 is now the stalest despite registering later
+        assert!(t.register(3, &[3, 3]));
+        assert_eq!(t.take_evictions(), vec![2]);
+        assert!(t.contains(1) && t.contains(3));
+    }
+
+    #[test]
+    fn eviction_weighs_staleness_by_blocks_pinned() {
+        let mut t = PrefixIndex::new(2, 2);
+        // id 1 pins 3 blocks (6 tokens / chunk 2), id 2 pins 1 block
+        assert!(t.register(1, &toks(6)));
+        assert!(t.register(2, &[9, 9]));
+        t.mark_ready(1);
+        t.mark_ready(2);
+        // refresh the big entry so it is *fresher* than the small one...
+        assert_eq!(t.match_longest(&toks(6)), Some((1, 6)));
+        // ...yet its staleness × 3-block footprint still outweighs the
+        // small entry's: clock 4 at eviction, id 1 scores (4-3)*3 = 3,
+        // id 2 scores (4-2)*1 = 2, so the expensive entry goes first
+        assert!(t.register(3, &[8, 8]));
+        assert_eq!(t.take_evictions(), vec![1]);
+        assert!(t.contains(2) && t.contains(3));
     }
 }

@@ -65,6 +65,9 @@ pub struct Recorder {
     /// Sessions cancelled mid-generation (client disconnect / explicit
     /// `GenRef::cancel`).
     cancelled: u64,
+    /// Sessions admitted with a clamped token budget (graceful
+    /// degradation under SLO pressure instead of a `busy` reply).
+    degraded: u64,
     /// TTFT SLO target in µs (0 = untracked).
     slo_ttft_us: u64,
     /// Per-token (TPOT) SLO target in µs (0 = untracked).
@@ -110,6 +113,7 @@ impl Recorder {
             spec_emitted: 0,
             shed: 0,
             cancelled: 0,
+            degraded: 0,
             slo_ttft_us: 0,
             slo_tpot_us: 0,
             slo_window: VecDeque::new(),
@@ -137,12 +141,22 @@ impl Recorder {
         self.cancelled += n;
     }
 
+    /// A session was admitted with its `max_new_tokens` clamped to the
+    /// pressure floor instead of being shed.
+    pub fn record_degraded(&mut self) {
+        self.degraded += 1;
+    }
+
     pub fn shed(&self) -> u64 {
         self.shed
     }
 
     pub fn cancelled(&self) -> u64 {
         self.cancelled
+    }
+
+    pub fn degraded(&self) -> u64 {
+        self.degraded
     }
 
     /// Total SLO-violating tokens observed (monotonic).
@@ -526,8 +540,11 @@ impl Recorder {
                 self.kvcache.double_free,
             ));
         }
-        if self.shed + self.cancelled > 0 {
+        if self.shed + self.cancelled + self.degraded > 0 {
             s.push_str(&format!("; shed {} cancelled {}", self.shed, self.cancelled));
+            if self.degraded > 0 {
+                s.push_str(&format!(" degraded {}", self.degraded));
+            }
         }
         if self.slo_ttft_us > 0 || self.slo_tpot_us > 0 {
             let hot = self.slo_window.iter().filter(|v| **v).count();
@@ -545,6 +562,113 @@ impl Recorder {
 
 fn fmt_opt(d: Option<Duration>) -> String {
     d.map(crate::util::fmt_duration).unwrap_or_else(|| "-".into())
+}
+
+/// One replica's health and load as seen by the fleet router's probe
+/// loop — a point-in-time snapshot, not an accumulator.
+#[derive(Clone, Debug)]
+pub struct ReplicaSnapshot {
+    pub id: usize,
+    /// `"healthy"`, `"draining"`, or `"dead"`.
+    pub state: &'static str,
+    /// Live sessions held by the replica's engine.
+    pub sessions: usize,
+    /// Prefill requests waiting in the replica's admission queue.
+    pub queued_prefills: usize,
+    /// The replica's rolling SLO window votes "shedding".
+    pub under_pressure: bool,
+    /// Collector liveness ticks (worker replies processed so far); a
+    /// stalled counter with work pending marks a wedged pipeline.
+    pub collector_ticks: u64,
+    /// Sessions the router has placed here over the fleet's lifetime.
+    pub placed: u64,
+    /// (device, host) K/V blocks in use in the replica's tier model
+    /// (zeros without the spill tier).
+    pub device_blocks: usize,
+    pub host_blocks: usize,
+    /// The replica Recorder's one-line summary (empty once dead).
+    pub summary: String,
+}
+
+/// Fleet-wide rollup assembled by `coordinator::fleet::Fleet::stats`:
+/// per-replica snapshots plus the router's own failure-verb counters.
+#[derive(Clone, Debug, Default)]
+pub struct FleetRollup {
+    pub replicas: Vec<ReplicaSnapshot>,
+    /// Sessions placed across all replicas.
+    pub placed: u64,
+    /// Sessions transparently replayed on a survivor.
+    pub failovers: u64,
+    /// Per-failover latency samples (error detected → replacement
+    /// stream admitted), in µs.
+    pub failover_us: Vec<u64>,
+    pub kills: u64,
+    pub drains: u64,
+}
+
+impl FleetRollup {
+    pub fn healthy(&self) -> usize {
+        self.replicas.iter().filter(|r| r.state == "healthy").count()
+    }
+
+    /// Nearest-rank percentile over the failover latency samples.
+    pub fn failover_percentile(&self, p: f64) -> Option<Duration> {
+        if self.failover_us.is_empty() {
+            return None;
+        }
+        let mut xs = self.failover_us.clone();
+        xs.sort_unstable();
+        let rank = (p * xs.len() as f64).ceil() as usize;
+        Some(Duration::from_micros(xs[rank.clamp(1, xs.len()) - 1]))
+    }
+
+    /// One aggregated line for the TCP `stats`/`fleet` verbs.
+    pub fn summary(&self) -> String {
+        let mut s = format!(
+            "fleet {} replicas ({} healthy); placed {}",
+            self.replicas.len(),
+            self.healthy(),
+            self.placed,
+        );
+        if self.failovers > 0 {
+            s.push_str(&format!(
+                "; failovers {} (p50 {} p99 {})",
+                self.failovers,
+                fmt_opt(self.failover_percentile(0.50)),
+                fmt_opt(self.failover_percentile(0.99)),
+            ));
+        }
+        if self.kills + self.drains > 0 {
+            s.push_str(&format!("; kills {} drains {}", self.kills, self.drains));
+        }
+        s
+    }
+
+    /// One line with a per-replica segment each — the `fleet` verb's
+    /// detailed form (still newline-free: the TCP protocol is
+    /// line-oriented).
+    pub fn detail(&self) -> String {
+        let mut s = self.summary();
+        for r in &self.replicas {
+            s.push_str(&format!(
+                " | r{} {}: {} sessions, {} queued, {} placed, ticks {}{}",
+                r.id,
+                r.state,
+                r.sessions,
+                r.queued_prefills,
+                r.placed,
+                r.collector_ticks,
+                if r.under_pressure { ", pressure" } else { "" },
+            ));
+            if r.device_blocks + r.host_blocks > 0 {
+                s.push_str(&format!(
+                    ", tiers {}d/{}h",
+                    r.device_blocks, r.host_blocks
+                ));
+            }
+        }
+        s
+    }
 }
 
 #[cfg(test)]
@@ -804,5 +928,58 @@ mod tests {
         assert_eq!(r.arena_stats().reuses, 98);
         let s = r.summary();
         assert!(s.contains("arena 2 fresh / 98 reused"), "{s}");
+    }
+
+    #[test]
+    fn degraded_counter_surfaces_in_summary() {
+        let mut r = Recorder::new();
+        assert!(!r.summary().contains("degraded"), "{}", r.summary());
+        r.record_degraded();
+        r.record_degraded();
+        assert_eq!(r.degraded(), 2);
+        // degraded admissions surface even with zero sheds/cancels
+        assert!(r.summary().contains("shed 0 cancelled 0 degraded 2"), "{}", r.summary());
+    }
+
+    #[test]
+    fn fleet_rollup_summary_and_detail() {
+        let snap = |id: usize, state: &'static str, sessions: usize| ReplicaSnapshot {
+            id,
+            state,
+            sessions,
+            queued_prefills: id,
+            under_pressure: false,
+            collector_ticks: 10 * id as u64,
+            placed: 5,
+            device_blocks: if id == 1 { 3 } else { 0 },
+            host_blocks: 0,
+            summary: String::new(),
+        };
+        let mut roll = FleetRollup {
+            replicas: vec![snap(0, "healthy", 2), snap(1, "healthy", 1), snap(2, "dead", 0)],
+            placed: 15,
+            failovers: 2,
+            failover_us: vec![900, 1_100],
+            kills: 1,
+            drains: 0,
+        };
+        assert_eq!(roll.healthy(), 2);
+        assert_eq!(roll.failover_percentile(0.50), Some(Duration::from_micros(900)));
+        assert_eq!(roll.failover_percentile(0.99), Some(Duration::from_micros(1_100)));
+        let s = roll.summary();
+        assert!(s.contains("fleet 3 replicas (2 healthy)"), "{s}");
+        assert!(s.contains("placed 15"), "{s}");
+        assert!(s.contains("failovers 2"), "{s}");
+        assert!(s.contains("kills 1 drains 0"), "{s}");
+        let d = roll.detail();
+        assert!(d.contains("| r0 healthy: 2 sessions"), "{d}");
+        assert!(d.contains("| r2 dead: 0 sessions"), "{d}");
+        assert!(d.contains("tiers 3d/0h"), "{d}");
+        assert!(!d.contains('\n'), "line protocol: {d}");
+        // quiet fleet: no failure segments at all
+        roll.failovers = 0;
+        roll.kills = 0;
+        let s = roll.summary();
+        assert!(!s.contains("failovers") && !s.contains("kills"), "{s}");
     }
 }

@@ -10,6 +10,8 @@
 //!            `...`
 //!            `done 12,7,42,99,...\n` — the full sequence on completion
 //!   client:  `stats\n`           — server: `ok <metrics summary>\n`
+//!   client:  `fleet\n`           — server: `ok <per-replica rollup>\n`
+//!                                  (fleet-backed servers only)
 //!   client:  `quit\n`            — closes the connection.
 //!
 //! Two more reply forms matter under hostile traffic: malformed lines get
@@ -30,8 +32,15 @@
 //! Requests flow through the engine's continuation batcher, so concurrent
 //! clients — including every decode step of their generations — get
 //! batched together exactly like the paper's engine.
+//!
+//! The connection loop is dispatcher-agnostic: [`Server::start`] serves a
+//! single [`Engine`], [`Server::start_fleet`] serves a replica [`Fleet`]
+//! (requests route through session-affine placement, and the `fleet`
+//! verb exposes the per-replica health rollup). The wire protocol is
+//! identical either way — a client cannot tell how many replicas answer.
 
 use crate::coordinator::engine::{Engine, GenRef, GenRequest};
+use crate::coordinator::fleet::Fleet;
 use crate::coordinator::Busy;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -45,21 +54,39 @@ pub struct Server {
     handle: Option<std::thread::JoinHandle<()>>,
 }
 
+/// The per-line dispatcher a connection loop runs — `dispatch` with its
+/// engine (or fleet) captured.
+type Dispatcher = dyn Fn(&str) -> Action + Send + Sync;
+
 impl Server {
     /// Bind `addr` (e.g. "127.0.0.1:0") and serve the engine.
     pub fn start(engine: Arc<Engine>, addr: &str) -> anyhow::Result<Server> {
+        Server::start_with(addr, move |line| dispatch(line, &engine))
+    }
+
+    /// Bind `addr` and serve a replica fleet: same wire protocol, with
+    /// requests placed session-affinely and the extra `fleet` verb.
+    pub fn start_fleet(fleet: Arc<Fleet>, addr: &str) -> anyhow::Result<Server> {
+        Server::start_with(addr, move |line| dispatch_fleet(line, &fleet))
+    }
+
+    fn start_with<D>(addr: &str, dispatcher: D) -> anyhow::Result<Server>
+    where
+        D: Fn(&str) -> Action + Send + Sync + 'static,
+    {
         let listener = TcpListener::bind(addr)?;
         listener.set_nonblocking(true)?;
         let local = listener.local_addr()?;
         let stop = Arc::new(AtomicBool::new(false));
         let stop2 = stop.clone();
+        let dispatcher: Arc<Dispatcher> = Arc::new(dispatcher);
         let handle = std::thread::spawn(move || {
             let mut conns = Vec::new();
             while !stop2.load(Ordering::SeqCst) {
                 match listener.accept() {
                     Ok((stream, _)) => {
-                        let engine = engine.clone();
-                        conns.push(std::thread::spawn(move || handle_conn(stream, engine)));
+                        let dispatcher = dispatcher.clone();
+                        conns.push(std::thread::spawn(move || handle_conn(stream, dispatcher)));
                     }
                     Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                         std::thread::sleep(std::time::Duration::from_millis(5));
@@ -82,7 +109,7 @@ impl Server {
     }
 }
 
-fn handle_conn(stream: TcpStream, engine: Arc<Engine>) {
+fn handle_conn(stream: TcpStream, dispatcher: Arc<Dispatcher>) {
     let peer = stream.peer_addr().ok();
     let mut writer = match stream.try_clone() {
         Ok(w) => w,
@@ -94,7 +121,7 @@ fn handle_conn(stream: TcpStream, engine: Arc<Engine>) {
             Ok(l) => l,
             Err(_) => break,
         };
-        match dispatch(line.trim(), &engine) {
+        match dispatcher(line.trim()) {
             Action::Close => break,
             Action::Reply(r) => {
                 if writer.write_all(r.as_bytes()).is_err() {
@@ -128,23 +155,33 @@ pub enum Action {
     Close,
 }
 
-/// Parse one request line into an [`Action`]. `gen` is non-blocking — the
-/// session enters the continuation batcher and the returned `GenRef`
-/// streams from the connection loop.
-pub fn dispatch(line: &str, engine: &Engine) -> Action {
+/// One parsed protocol line, dispatcher-agnostic — [`dispatch`] and
+/// [`dispatch_fleet`] map it onto their backend.
+enum Cmd {
+    Quit,
+    Stats,
+    /// The per-replica rollup (only meaningful on a fleet server).
+    FleetStats,
+    Infer(Vec<i32>),
+    Gen(usize, Vec<i32>),
+    /// Malformed / unknown: the full structured reply line.
+    Bad(String),
+}
+
+fn parse_line(line: &str) -> Cmd {
     if line == "quit" {
-        return Action::Close;
+        return Cmd::Quit;
     }
     if line == "stats" {
-        return Action::Reply(format!("ok {}\n", engine.metrics_snapshot().summary()));
+        return Cmd::Stats;
+    }
+    if line == "fleet" {
+        return Cmd::FleetStats;
     }
     if let Some(rest) = line.strip_prefix("infer ") {
         return match parse_tokens(rest) {
-            Some(tokens) => match engine.submit(tokens).and_then(|fut| fut.to_here()) {
-                Ok(tok) => Action::Reply(format!("ok {tok}\n")),
-                Err(e) => reject(&e),
-            },
-            None => Action::Reply("err infer: malformed token list\n".to_string()),
+            Some(tokens) => Cmd::Infer(tokens),
+            None => Cmd::Bad("err infer: malformed token list\n".to_string()),
         };
     }
     if let Some(rest) = line.strip_prefix("gen ") {
@@ -155,27 +192,66 @@ pub fn dispatch(line: &str, engine: &Engine) -> Action {
         let n = match count.trim().parse::<usize>() {
             Ok(n) => n,
             Err(_) => {
-                return Action::Reply(format!(
+                return Cmd::Bad(format!(
                     "err gen: malformed count {count:?} (usage: gen <n> <t0,t1,...>)\n"
                 ))
             }
         };
         if n == 0 {
-            return Action::Reply("err gen: count must be >= 1\n".to_string());
+            return Cmd::Bad("err gen: count must be >= 1\n".to_string());
         }
-        let tokens = match parts.next() {
-            None => return Action::Reply("err gen: missing token list\n".to_string()),
+        return match parts.next() {
+            None => Cmd::Bad("err gen: missing token list\n".to_string()),
             Some(csv) => match parse_tokens(csv) {
-                Some(t) => t,
-                None => return Action::Reply("err gen: malformed token list\n".to_string()),
+                Some(t) => Cmd::Gen(n, t),
+                None => Cmd::Bad("err gen: malformed token list\n".to_string()),
             },
         };
-        return match engine.generate_stream(GenRequest::new(tokens, n)) {
+    }
+    Cmd::Bad("err unknown command (infer/gen/stats/fleet/quit)\n".to_string())
+}
+
+/// Parse one request line into an [`Action`]. `gen` is non-blocking — the
+/// session enters the continuation batcher and the returned `GenRef`
+/// streams from the connection loop.
+pub fn dispatch(line: &str, engine: &Engine) -> Action {
+    match parse_line(line) {
+        Cmd::Quit => Action::Close,
+        Cmd::Stats => Action::Reply(format!("ok {}\n", engine.metrics_snapshot().summary())),
+        Cmd::FleetStats => {
+            Action::Reply("err fleet: not a fleet server (single engine)\n".to_string())
+        }
+        Cmd::Infer(tokens) => match engine.submit(tokens).and_then(|fut| fut.to_here()) {
+            Ok(tok) => Action::Reply(format!("ok {tok}\n")),
+            Err(e) => reject(&e),
+        },
+        Cmd::Gen(n, tokens) => match engine.generate_stream(GenRequest::new(tokens, n)) {
             Ok(gref) => Action::Stream(gref),
             Err(e) => reject(&e),
-        };
+        },
+        Cmd::Bad(reply) => Action::Reply(reply),
     }
-    Action::Reply("err unknown command (infer/gen/stats/quit)\n".to_string())
+}
+
+/// [`dispatch`] against a replica fleet: identical wire protocol (the
+/// streamed `GenRef` is the fleet's failover-transparent outer handle),
+/// `stats` rolls up the whole fleet, and `fleet` adds the per-replica
+/// health detail.
+pub fn dispatch_fleet(line: &str, fleet: &Fleet) -> Action {
+    match parse_line(line) {
+        Cmd::Quit => Action::Close,
+        Cmd::Stats => Action::Reply(format!("ok {}\n", fleet.stats().summary())),
+        Cmd::FleetStats => Action::Reply(format!("ok {}\n", fleet.stats().detail())),
+        Cmd::Infer(tokens) => match fleet.submit(tokens).and_then(|fut| fut.to_here()) {
+            Ok(tok) => Action::Reply(format!("ok {tok}\n")),
+            Err(e) => reject(&e),
+        },
+        Cmd::Gen(n, tokens) => match fleet.generate_stream(GenRequest::new(tokens, n)) {
+            Ok(gref) => Action::Stream(gref),
+            Err(e) => reject(&e),
+        },
+        Cmd::Bad(reply) => Action::Reply(reply),
+    }
 }
 
 /// Map a submission failure to its reply line: a shed ([`Busy`]) request
@@ -225,7 +301,16 @@ fn stream_tokens<W: FnMut(&str) -> std::io::Result<()>>(
 /// Streaming replies are drained to completion — handy for tests and
 /// non-incremental callers; live connections use [`dispatch`] directly.
 pub fn handle_line(line: &str, engine: &Engine) -> Option<String> {
-    match dispatch(line, engine) {
+    drain_action(dispatch(line, engine))
+}
+
+/// [`handle_line`] for a fleet-backed server.
+pub fn handle_line_fleet(line: &str, fleet: &Fleet) -> Option<String> {
+    drain_action(dispatch_fleet(line, fleet))
+}
+
+fn drain_action(action: Action) -> Option<String> {
+    match action {
         Action::Close => None,
         Action::Reply(r) => Some(r),
         Action::Stream(gref) => {
@@ -282,6 +367,17 @@ mod tests {
             "1,\u{0}",
         ] {
             assert_eq!(parse_tokens(bad), None, "{bad:?} must be rejected");
+        }
+    }
+
+    #[test]
+    fn fleet_verb_parses_and_unknown_commands_mention_it() {
+        assert!(matches!(parse_line("fleet"), Cmd::FleetStats));
+        assert!(matches!(parse_line("quit"), Cmd::Quit));
+        assert!(matches!(parse_line("gen 3 1,2"), Cmd::Gen(3, _)));
+        match parse_line("nonsense") {
+            Cmd::Bad(r) => assert!(r.contains("fleet"), "{r:?}"),
+            _ => panic!("unknown command must be Bad"),
         }
     }
 

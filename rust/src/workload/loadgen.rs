@@ -12,12 +12,31 @@
 //! can be compared stream-for-stream against an unfaulted control
 //! ([`parity_mismatches`]) — greedy decode is deterministic per prompt,
 //! and chaos must never change a survivor's bytes.
+//!
+//! The same discipline covers the newer knobs: busy-retry backoff
+//! jitter rides stream 5 and the replica-[`kill_schedule`]
+//! (SaturationScenario::kill_schedule) rides stream 6, both forked
+//! *after* the original content/arrival/chaos/template streams — so
+//! backing off or scheduling kills perturbs no other draw. Clients
+//! honor `Busy::retry_after_ms` (jittered, bounded retries) and report
+//! shed-then-succeeded turns as `recovered`; [`run_fleet_saturation`]
+//! drives a replica fleet instead of a bare engine and executes the
+//! kill schedule mid-run.
 
-use crate::coordinator::engine::{Engine, GenRequest};
+use crate::coordinator::engine::{Engine, GenRef, GenRequest};
+use crate::coordinator::fleet::Fleet;
 use crate::coordinator::Busy;
 use crate::util::rng::Rng;
 use crate::workload::LengthDist;
 use std::time::{Duration, Instant};
+
+/// How many times a client re-submits a `Busy` turn before giving up
+/// and recording it as shed.
+const MAX_BUSY_RETRIES: usize = 3;
+/// Ceiling on one backoff sleep, ms — the engine's hint is honored up
+/// to here (an engine under heavy pressure can hint seconds; a loadgen
+/// client should not stall a whole scenario on one turn).
+const MAX_BACKOFF_MS: f64 = 200.0;
 
 /// One seeded hostile-traffic scenario.
 #[derive(Clone, Debug)]
@@ -102,6 +121,9 @@ impl SaturationScenario {
         // the template stream is only ever drawn when templates exist, so
         // `templates == 0` plans are byte-identical to pre-template builds
         let mut tmpl = root.fork(4);
+        // busy-retry jitter rides its own stream so backing off never
+        // perturbs prompts, gaps, budgets, or chaos flags
+        let mut backoff = root.fork(5);
         let templates: Vec<Vec<i32>> = (0..self.templates)
             .map(|_| {
                 (0..self.template_tokens)
@@ -155,10 +177,51 @@ impl SaturationScenario {
                         }
                     })
                     .collect();
-                ClientPlan { client, turns }
+                ClientPlan { client, turns, backoff_seed: backoff.fork(client as u64).next_u64() }
             })
             .collect()
     }
+
+    /// Deterministic replica-kill schedule on its own forked stream (6):
+    /// up to `kills` *distinct* replicas — capped at `replicas - 1`, the
+    /// last survivor is never scheduled — each at a uniform offset
+    /// inside `window`, sorted by time. Forked after every client
+    /// stream, so adding kills to a scenario perturbs no prompt, gap,
+    /// budget, chaos flag, or backoff draw — the differential lever for
+    /// the failover suites.
+    pub fn kill_schedule(
+        &self,
+        replicas: usize,
+        kills: usize,
+        window: Duration,
+    ) -> Vec<ReplicaKill> {
+        let mut root = Rng::new(self.seed);
+        for tag in 1..=5 {
+            let _ = root.fork(tag);
+        }
+        let mut kr = root.fork(6);
+        let mut ids: Vec<usize> = (0..replicas).collect();
+        kr.shuffle(&mut ids);
+        let mut schedule: Vec<ReplicaKill> = ids
+            .into_iter()
+            .take(kills.min(replicas.saturating_sub(1)))
+            .map(|replica| ReplicaKill {
+                after: Duration::from_secs_f64(kr.next_f64() * window.as_secs_f64()),
+                replica,
+            })
+            .collect();
+        schedule.sort_by_key(|k| k.after);
+        schedule
+    }
+}
+
+/// One scheduled deliberate replica kill (see
+/// [`SaturationScenario::kill_schedule`] / [`run_fleet_saturation`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ReplicaKill {
+    /// Offset from the run's start.
+    pub after: Duration,
+    pub replica: usize,
 }
 
 /// One client's scripted conversation.
@@ -166,6 +229,8 @@ impl SaturationScenario {
 pub struct ClientPlan {
     pub client: usize,
     pub turns: Vec<TurnPlan>,
+    /// Seeds the client's busy-retry jitter stream.
+    pub backoff_seed: u64,
 }
 
 /// One scripted turn.
@@ -215,6 +280,13 @@ pub struct LoadReport {
     pub completed: usize,
     pub disconnected: usize,
     pub shed: usize,
+    /// Turns that were admitted after at least one `Busy` rejection —
+    /// shed-then-succeeded, the payoff of honoring `retry_after_ms`.
+    pub recovered: usize,
+    /// Total `Busy` replies observed by clients, *including* retries
+    /// that later succeeded (so this equals the engine's shed counter,
+    /// whereas `shed` counts only turns that gave up).
+    pub busy_rejections: usize,
     pub errors: usize,
     pub tokens_streamed: usize,
     pub wall: Duration,
@@ -291,10 +363,29 @@ pub fn parity_mismatches(a: &LoadReport, b: &LoadReport) -> Vec<String> {
     diffs
 }
 
+/// What the client pool is driving: a bare engine or a replica fleet.
+/// Fleet placement is session-affine, so the fleet variant forwards the
+/// client id as the affinity key.
+#[derive(Clone, Copy)]
+enum Target<'a> {
+    Engine(&'a Engine),
+    Fleet(&'a Fleet),
+}
+
+impl Target<'_> {
+    fn generate_stream(&self, client: u64, req: GenRequest) -> anyhow::Result<GenRef> {
+        match *self {
+            Target::Engine(e) => e.generate_stream(req),
+            Target::Fleet(f) => f.generate_stream_for(client, req),
+        }
+    }
+}
+
 /// Drive `engine` with the scenario's client pool: one thread per
 /// client, each playing its turns in order — sleep the Poisson gap,
 /// submit (re-entering with grown context when the previous turn
-/// completed and the result still fits `max_context`), stream, and
+/// completed and the result still fits `max_context`, backing off with
+/// jitter on `Busy` up to [`MAX_BUSY_RETRIES`] times), stream, and
 /// disconnect mid-stream where the plan says so. Returns the merged
 /// report; leak accounting is the caller's (workers own the block
 /// gauges — see `memory::kvcache::global_stats`).
@@ -303,24 +394,60 @@ pub fn run_saturation(
     scenario: &SaturationScenario,
     max_context: usize,
 ) -> LoadReport {
+    run_target(Target::Engine(engine), scenario, max_context, &[])
+}
+
+/// [`run_saturation`] against a replica fleet, with a deliberate
+/// [`kill_schedule`](SaturationScenario::kill_schedule) executed on its
+/// own thread while the clients play: each kill fires at its offset
+/// from the run's start, and the fleet is expected to fail victims over
+/// so that survivor parity against a no-kill control still holds.
+pub fn run_fleet_saturation(
+    fleet: &Fleet,
+    scenario: &SaturationScenario,
+    max_context: usize,
+    kills: &[ReplicaKill],
+) -> LoadReport {
+    run_target(Target::Fleet(fleet), scenario, max_context, kills)
+}
+
+fn run_target(
+    target: Target<'_>,
+    scenario: &SaturationScenario,
+    max_context: usize,
+    kills: &[ReplicaKill],
+) -> LoadReport {
     let plans = scenario.plan();
     let t0 = Instant::now();
-    let mut per_client: Vec<Vec<StreamOutcome>> = Vec::new();
-    let mut lats: Vec<(Vec<u64>, Vec<u64>)> = Vec::new();
+    let mut per_client: Vec<ClientResult> = Vec::new();
     std::thread::scope(|scope| {
+        if !kills.is_empty() {
+            if let Target::Fleet(fleet) = target {
+                // the assassin: sleeps to each scheduled offset, then
+                // kills — already-dead / out-of-range ids are ignored so
+                // a schedule can outlive a short run
+                scope.spawn(move || {
+                    for k in kills {
+                        let elapsed = t0.elapsed();
+                        if k.after > elapsed {
+                            std::thread::sleep(k.after - elapsed);
+                        }
+                        let _ = fleet.kill(k.replica);
+                    }
+                });
+            }
+        }
         let handles: Vec<_> = plans
             .iter()
-            .map(|plan| scope.spawn(move || run_client(engine, plan, max_context)))
+            .map(|plan| scope.spawn(move || run_client(target, plan, max_context)))
             .collect();
         for h in handles {
-            let (streams, ttft, tpot) = h.join().expect("loadgen client panicked");
-            per_client.push(streams);
-            lats.push((ttft, tpot));
+            per_client.push(h.join().expect("loadgen client panicked"));
         }
     });
     let mut report = LoadReport { wall: t0.elapsed(), ..LoadReport::default() };
-    for streams in per_client {
-        for s in streams {
+    for r in per_client {
+        for s in r.streams {
             match &s.outcome {
                 Outcome::Completed => report.completed += 1,
                 Outcome::Disconnected => report.disconnected += 1,
@@ -330,23 +457,30 @@ pub fn run_saturation(
             report.tokens_streamed += s.tokens.len();
             report.streams.push(s);
         }
-    }
-    for (ttft, tpot) in lats {
-        report.ttft_us.extend(ttft);
-        report.tpot_us.extend(tpot);
+        report.ttft_us.extend(r.ttft_us);
+        report.tpot_us.extend(r.tpot_us);
+        report.recovered += r.recovered;
+        report.busy_rejections += r.busy_rejections;
     }
     report.streams.sort_by_key(|s| (s.client, s.turn));
     report
 }
 
-fn run_client(
-    engine: &Engine,
-    plan: &ClientPlan,
-    max_context: usize,
-) -> (Vec<StreamOutcome>, Vec<u64>, Vec<u64>) {
-    let mut streams = Vec::new();
-    let mut ttft_us = Vec::new();
-    let mut tpot_us = Vec::new();
+/// One client thread's contribution to the merged [`LoadReport`].
+#[derive(Default)]
+struct ClientResult {
+    streams: Vec<StreamOutcome>,
+    ttft_us: Vec<u64>,
+    tpot_us: Vec<u64>,
+    recovered: usize,
+    busy_rejections: usize,
+}
+
+fn run_client(target: Target<'_>, plan: &ClientPlan, max_context: usize) -> ClientResult {
+    let mut res = ClientResult::default();
+    // the busy-backoff jitter stream — forked in plan() after every
+    // other stream, so its existence perturbs nothing
+    let mut backoff = Rng::new(plan.backoff_seed);
     // the grown context of the previous turn, when it completed
     let mut context: Option<Vec<i32>> = None;
     for (turn, t) in plan.turns.iter().enumerate() {
@@ -363,16 +497,46 @@ fn run_client(
             }
             _ => t.fresh_prompt.clone(),
         };
+        // TTFT is measured from the *first* submit — backoff sleeps are
+        // part of the latency the client observed
         let submitted = Instant::now();
-        let gref = match engine.generate_stream(GenRequest::new(prompt.clone(), t.new_tokens)) {
-            Ok(g) => g,
+        let mut rejections = 0usize;
+        let admitted = loop {
+            match target.generate_stream(
+                plan.client as u64,
+                GenRequest::new(prompt.clone(), t.new_tokens),
+            ) {
+                Ok(g) => break Ok(g),
+                Err(e) => match e.downcast_ref::<Busy>() {
+                    Some(b) if rejections < MAX_BUSY_RETRIES => {
+                        rejections += 1;
+                        // honor the engine's hint, jittered to ±50% so a
+                        // shed wave does not resubmit in lockstep
+                        let ms = (b.retry_after_ms.max(1) as f64
+                            * (0.5 + backoff.next_f64()))
+                        .min(MAX_BACKOFF_MS);
+                        std::thread::sleep(Duration::from_secs_f64(ms / 1000.0));
+                    }
+                    _ => break Err(e),
+                },
+            }
+        };
+        res.busy_rejections += rejections;
+        let gref = match admitted {
+            Ok(g) => {
+                if rejections > 0 {
+                    res.recovered += 1;
+                }
+                g
+            }
             Err(e) => {
                 let outcome = if e.downcast_ref::<Busy>().is_some() {
+                    res.busy_rejections += 1; // the final, fatal rejection
                     Outcome::Shed
                 } else {
                     Outcome::Error(format!("{e:#}"))
                 };
-                streams.push(StreamOutcome {
+                res.streams.push(StreamOutcome {
                     client: plan.client,
                     turn,
                     prompt,
@@ -389,9 +553,9 @@ fn run_client(
                 Ok(Some(tok)) => {
                     let now = Instant::now();
                     if tokens.is_empty() {
-                        ttft_us.push(now.duration_since(submitted).as_micros() as u64);
+                        res.ttft_us.push(now.duration_since(submitted).as_micros() as u64);
                     } else {
-                        tpot_us.push(now.duration_since(last).as_micros() as u64);
+                        res.tpot_us.push(now.duration_since(last).as_micros() as u64);
                     }
                     last = now;
                     tokens.push(tok);
@@ -418,9 +582,10 @@ fn run_client(
             full.extend_from_slice(&tokens);
             context = Some(full);
         }
-        streams.push(StreamOutcome { client: plan.client, turn, prompt, tokens, outcome });
+        res.streams
+            .push(StreamOutcome { client: plan.client, turn, prompt, tokens, outcome });
     }
-    (streams, ttft_us, tpot_us)
+    res
 }
 
 #[cfg(test)]
@@ -438,6 +603,7 @@ mod tests {
         assert_eq!(a.len(), 6);
         for (pa, pb) in a.iter().zip(&b) {
             assert_eq!(pa.turns.len(), 3);
+            assert_eq!(pa.backoff_seed, pb.backoff_seed);
             for (ta, tb) in pa.turns.iter().zip(&pb.turns) {
                 assert_eq!(ta.fresh_prompt, tb.fresh_prompt);
                 assert_eq!(ta.followup, tb.followup);
@@ -529,6 +695,52 @@ mod tests {
             }
         }
         assert!(templated > 0, "50% over 18 turns should template at least one");
+    }
+
+    /// Backoff seeds ride stream 5 — they exist, differ per client, and
+    /// never perturb the content/arrival/chaos/template streams that
+    /// older builds drew from forks 1–4.
+    #[test]
+    fn backoff_seeds_are_per_client_and_perturb_nothing() {
+        let plans = scenario(0.25).plan();
+        let seeds: std::collections::HashSet<u64> =
+            plans.iter().map(|p| p.backoff_seed).collect();
+        assert_eq!(seeds.len(), plans.len(), "per-client seeds must differ");
+        // replaying forks 1..=4 by hand reproduces client 0's first
+        // prompt: stream 5 was appended after them, not spliced between
+        let sc = scenario(0.25);
+        let mut root = Rng::new(sc.seed);
+        let mut content = root.fork(1);
+        let mut c0 = content.fork(0);
+        let plen = sc.prompt_dist.sample(&mut c0);
+        let first: Vec<i32> = (0..plen)
+            .map(|_| (c0.next_below(sc.vocab as u64 - 1) + 1) as i32)
+            .collect();
+        assert_eq!(plans[0].turns[0].fresh_prompt, first);
+    }
+
+    #[test]
+    fn kill_schedule_is_deterministic_capped_and_distinct() {
+        let sc = scenario(0.0);
+        let w = Duration::from_millis(80);
+        let a = sc.kill_schedule(3, 2, w);
+        let b = sc.kill_schedule(3, 2, w);
+        assert_eq!(a, b, "same seed, same schedule");
+        assert_eq!(a.len(), 2);
+        let ids: std::collections::HashSet<usize> = a.iter().map(|k| k.replica).collect();
+        assert_eq!(ids.len(), 2, "kills hit distinct replicas");
+        assert!(a.iter().all(|k| k.replica < 3 && k.after <= w));
+        assert!(a.windows(2).all(|p| p[0].after <= p[1].after), "sorted by time");
+        // never schedule the last survivor: asking for >= replicas kills
+        // still leaves one standing, and a 1-replica fleet loses nobody
+        assert_eq!(sc.kill_schedule(3, 9, w).len(), 2);
+        assert!(sc.kill_schedule(1, 1, w).is_empty());
+        // the schedule does not perturb the plans (its stream is forked
+        // after every plan stream)
+        assert_eq!(
+            scenario(0.0).plan()[0].turns[0].fresh_prompt,
+            sc.plan()[0].turns[0].fresh_prompt
+        );
     }
 
     #[test]

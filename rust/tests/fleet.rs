@@ -1,0 +1,236 @@
+//! Fault-tolerant replica fleet, differentially: kill one of three
+//! replicas mid-decode and every client stream — including the victims
+//! that failed over — must be byte-identical to a no-kill control run;
+//! drain a replica and its teardown must prove zero K/V blocks in use on
+//! either tier; run the full saturation scenario through a fleet with a
+//! seeded kill schedule and lose nothing.
+//!
+//! Every test skips cleanly when the AOT artifacts are absent (the same
+//! condition under which an `Engine` cannot launch at all), so the suite
+//! never *adds* failures on an artifact-less checkout.
+
+use energonai::coordinator::engine::{Engine, GenRef, GenRequest, LaunchConfig};
+use energonai::coordinator::fleet::{Fleet, ReplicaState};
+use energonai::memory::kvcache;
+use energonai::runtime::{find_artifacts, Manifest};
+use energonai::workload::loadgen::{
+    parity_mismatches, run_fleet_saturation, run_saturation, Outcome, SaturationScenario,
+};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Serializes every test in this binary: all of them assert on the
+/// process-wide kvcache gauges, so no other engine may run concurrently.
+static STATS_LOCK: Mutex<()> = Mutex::new(());
+
+fn stats_guard() -> std::sync::MutexGuard<'static, ()> {
+    STATS_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn artifacts_ready() -> bool {
+    let dir = match find_artifacts() {
+        Ok(d) => d,
+        Err(_) => {
+            eprintln!("skipping: no AOT artifacts (run `make artifacts`)");
+            return false;
+        }
+    };
+    let man = match Manifest::cached(dir) {
+        Ok(m) => m,
+        Err(_) => return false,
+    };
+    let ok = !man.decode_widths("tiny", 1).is_empty() && man.has_kv_prefill("tiny", 1);
+    if !ok {
+        eprintln!("skipping: decode artifacts missing for tiny/tp1");
+    }
+    ok
+}
+
+fn prompts(n: usize) -> Vec<Vec<i32>> {
+    (0..n)
+        .map(|i| {
+            let len = 2 + (i * 3) % 7;
+            (0..len).map(|j| ((i * 31 + j * 7) % 100 + 1) as i32).collect()
+        })
+        .collect()
+}
+
+/// Longest compiled prefill bucket for the tiny preset — the context cap
+/// the load generator must respect.
+fn max_context(engine: &Engine) -> usize {
+    engine.manifest.shape_points("tiny").iter().map(|&(_, s)| s).max().unwrap()
+}
+
+/// The acceptance bar: kill 1 of 3 replicas while its sessions are
+/// mid-decode. Victim sessions must fail over and complete with streams
+/// byte-identical to a single-engine control (zero committed tokens
+/// lost, no mid-stream error surfaces), survivors stay untouched, and
+/// the whole fleet tears down without leaking a block on either tier.
+#[test]
+fn kill_one_of_three_mid_decode_keeps_streams_byte_identical() {
+    if !artifacts_ready() {
+        return;
+    }
+    let _guard = stats_guard();
+    let all = prompts(9);
+
+    // control: one plain engine, no fleet, no faults
+    let control = Engine::launch(LaunchConfig::preset("tiny")).unwrap();
+    let expect: Vec<Vec<i32>> =
+        all.iter().map(|p| control.generate(p.clone(), 8).unwrap()).collect();
+    control.shutdown();
+
+    let before = kvcache::global_stats();
+    // replica 0 is the designated victim: a replica-scoped delay on every
+    // batch keeps its sessions mid-decode long enough for the kill to
+    // land while they still owe tokens
+    let base = LaunchConfig::preset("tiny").with_faults("delay5ms@every1+0@r0", 2209);
+    let fleet = Fleet::launch(base, 3).unwrap();
+    // headroom placement round-robins an idle fleet, so replica 0 is
+    // guaranteed a share of the nine sessions
+    let grefs: Vec<GenRef> = all
+        .iter()
+        .map(|p| fleet.generate_stream(GenRequest::new(p.clone(), 8)).unwrap())
+        .collect();
+    // let the fast replicas stream while the victim crawls, then kill it
+    std::thread::sleep(Duration::from_millis(10));
+    fleet.kill(0).unwrap();
+    assert_eq!(fleet.replica_state(0), Some(ReplicaState::Dead));
+
+    let got: Vec<Vec<i32>> = grefs
+        .iter()
+        .map(|g| g.to_here().expect("no client may see a mid-stream error"))
+        .collect();
+    assert_eq!(got, expect, "a failed-over stream diverged from the control");
+
+    let stats = fleet.stats();
+    assert_eq!(stats.kills, 1);
+    assert!(
+        stats.failovers >= 1,
+        "the 5ms/step victim cannot have finished all its sessions in 10ms"
+    );
+    assert_eq!(stats.failover_us.len() as u64, stats.failovers);
+    assert_eq!(stats.healthy(), 2);
+
+    fleet.shutdown();
+    let after = kvcache::global_stats();
+    assert_eq!(after.blocks_in_use, before.blocks_in_use, "failover leaked device blocks");
+    assert_eq!(after.host_bytes, before.host_bytes, "failover leaked host bytes");
+    assert_eq!(after.double_free, before.double_free, "a session was released twice");
+}
+
+/// Drain: no new placements, existing sessions run to completion, and
+/// the teardown proves zero K/V blocks in use on both tiers. The
+/// survivor keeps serving afterwards.
+#[test]
+fn drain_finishes_sessions_and_tears_down_with_zero_blocks() {
+    if !artifacts_ready() {
+        return;
+    }
+    let _guard = stats_guard();
+    let all = prompts(4);
+
+    let control = Engine::launch(LaunchConfig::preset("tiny")).unwrap();
+    let expect: Vec<Vec<i32>> =
+        all.iter().map(|p| control.generate(p.clone(), 6).unwrap()).collect();
+    let late_expect = control.generate(all[0].clone(), 4).unwrap();
+    control.shutdown();
+
+    let before = kvcache::global_stats();
+    let fleet = Fleet::launch(LaunchConfig::preset("tiny"), 2).unwrap();
+    // idle-fleet headroom placement alternates replicas, so replica 0
+    // holds sessions when the drain begins
+    let grefs: Vec<GenRef> = all
+        .iter()
+        .map(|p| fleet.generate_stream(GenRequest::new(p.clone(), 6)).unwrap())
+        .collect();
+    let report = fleet.drain(0).unwrap();
+    assert_eq!(report.replica, 0);
+    assert_eq!(report.device_blocks, 0, "drained replica still held device blocks");
+    assert_eq!(report.host_blocks, 0, "drained replica still held host blocks");
+    assert_eq!(fleet.replica_state(0), Some(ReplicaState::Dead));
+    // a second drain of the same replica is a caller error
+    assert!(fleet.drain(0).is_err());
+
+    // every session that was in flight completed with the control bytes
+    let got: Vec<Vec<i32>> = grefs.iter().map(|g| g.to_here().unwrap()).collect();
+    assert_eq!(got, expect, "a drain changed what a stream said");
+
+    // the survivor still serves — and identically
+    assert_eq!(fleet.generate(all[0].clone(), 4).unwrap(), late_expect);
+    assert_eq!(fleet.stats().drains, 1);
+
+    fleet.shutdown();
+    let after = kvcache::global_stats();
+    assert_eq!(after.blocks_in_use, before.blocks_in_use, "drain leaked device blocks");
+    assert_eq!(after.host_bytes, before.host_bytes, "drain leaked host bytes");
+    assert_eq!(after.double_free, before.double_free, "a session was released twice");
+}
+
+/// The saturation scenario through a 3-replica fleet with a seeded kill
+/// schedule: no turn may error, survivor parity against a single-engine
+/// no-kill control must hold, and nothing may leak fleet-wide.
+#[test]
+fn fleet_saturation_with_a_kill_schedule_loses_nothing() {
+    if !artifacts_ready() {
+        return;
+    }
+    let _guard = stats_guard();
+    let scenario = SaturationScenario::new(2209, 8, 3);
+
+    let control_engine = Engine::launch(LaunchConfig::preset("tiny")).unwrap();
+    let cap = max_context(&control_engine);
+    let control = run_saturation(&control_engine, &scenario, cap);
+    control_engine.shutdown();
+    assert_eq!(control.errors, 0, "control must be clean: {:?}", control.streams);
+    assert_eq!(control.completed, control.turns());
+
+    let before = kvcache::global_stats();
+    let fleet = Fleet::launch(LaunchConfig::preset("tiny"), 3).unwrap();
+    let kills = scenario.kill_schedule(3, 1, Duration::from_millis(60));
+    assert_eq!(kills.len(), 1);
+    let report = run_fleet_saturation(&fleet, &scenario, cap, &kills);
+
+    // the kill fired: exactly one replica is dead, two still serve
+    assert_eq!(fleet.replica_state(kills[0].replica), Some(ReplicaState::Dead));
+    assert_eq!(fleet.stats().healthy(), 2);
+    // no caps, no chaos, transparent failover: every turn completes
+    assert_eq!(
+        report.errors,
+        0,
+        "a kill surfaced as a client error: {:?}",
+        report
+            .streams
+            .iter()
+            .filter(|s| matches!(s.outcome, Outcome::Error(_)))
+            .collect::<Vec<_>>()
+    );
+    assert_eq!(report.shed, 0);
+    assert_eq!(report.completed, report.turns(), "a kill lost a session");
+    let diffs = parity_mismatches(&control, &report);
+    assert!(diffs.is_empty(), "survivor streams diverged:\n{}", diffs.join("\n"));
+
+    fleet.shutdown();
+    let after = kvcache::global_stats();
+    assert_eq!(after.blocks_in_use, before.blocks_in_use, "fleet saturation leaked blocks");
+    assert_eq!(after.host_bytes, before.host_bytes, "fleet saturation leaked host bytes");
+    assert_eq!(after.double_free, before.double_free, "a session was released twice");
+}
+
+/// API contract around the failure verbs.
+#[test]
+fn failure_verbs_reject_nonsense() {
+    if !artifacts_ready() {
+        return;
+    }
+    let _guard = stats_guard();
+    let fleet = Fleet::launch(LaunchConfig::preset("tiny"), 2).unwrap();
+    assert!(fleet.kill(7).is_err(), "out-of-range replica");
+    assert!(fleet.drain(7).is_err());
+    fleet.kill(1).unwrap();
+    assert!(fleet.kill(1).is_err(), "double kill");
+    assert!(fleet.drain(1).is_err(), "draining the dead");
+    // the survivor still serves
+    assert!(fleet.generate(vec![1, 2, 3], 2).is_ok());
+    fleet.shutdown();
+}

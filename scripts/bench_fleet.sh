@@ -1,0 +1,24 @@
+#!/usr/bin/env bash
+# Run the fleet benchmark (session-affine router throughput at 1/2/4
+# replicas, plus a kill-and-failover cell with a seeded mid-run replica
+# kill) and refresh BENCH_fleet.json at the repo root. A survivor-parity
+# divergence through the kill, a lost session, or a leaked K/V block
+# exits non-zero. BENCH_SMOKE=1 runs a smaller client pool (CI).
+#
+# Usage: scripts/bench_fleet.sh [extra cargo args...]
+set -euo pipefail
+
+cd "$(dirname "$0")/../rust"
+
+if ! ls ../artifacts/manifest.json >/dev/null 2>&1 && ! ls artifacts/manifest.json >/dev/null 2>&1; then
+    echo "warning: no AOT artifacts found — the bench will skip (run 'make artifacts')" >&2
+fi
+
+cargo bench --bench fleet "$@"
+
+out="$(cd .. && pwd)/BENCH_fleet.json"
+if [ -f "$out" ]; then
+    echo "refreshed $out"
+else
+    echo "warning: $out was not written (bench skipped?)" >&2
+fi

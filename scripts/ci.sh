@@ -60,3 +60,9 @@ BENCH_SMOKE=1 cargo bench --bench saturation
 # (shared blocks included) exits non-zero, and BENCH_prefix.json is
 # refreshed
 BENCH_SMOKE=1 cargo bench --bench prefix_reuse
+
+# fleet smoke: replica-router throughput at 1/2/4 replicas plus the
+# kill-and-failover cell (one replica killed mid-run on the seeded
+# schedule) — a survivor divergence through the kill, a lost session, or
+# a leaked K/V block exits non-zero, and BENCH_fleet.json is refreshed
+BENCH_SMOKE=1 cargo bench --bench fleet
