@@ -90,7 +90,9 @@ PLANS = {
             "points": [(2, 32), (4, 64)],
             "tps": [1, 2, 4],
             "drce": [(4, 64, 128)],
-            "decode_widths": [2, 4, 8, 16],
+            # 32-wide buckets keep decodes flowing while chunked prefill
+            # waves of long prompts interleave through the same queue
+            "decode_widths": [2, 4, 8, 16, 32],
             "spec_ks": [2, 4],
         },
         # long-context preset for the decode-latency sweep

@@ -79,6 +79,32 @@ class TestPlans:
             )
 
 
+    def test_small_family_compiles_wide_decode_for_chunked_prefill(self):
+        # the 32-wide decode bucket exists on small (no 32-wide prefill
+        # point), with its whole family — decodes stay wide while chunk
+        # waves of long prompts interleave through the same queue
+        jobs = aot.plan_jobs(aot.PLANS["full"])
+        small = [(k, kw) for cfg, k, kw in jobs if cfg.name == "small"]
+        widths = sorted(kw["batch"] for k, kw in small if k == "layer_full_decode")
+        assert widths == aot.PLANS["full"]["small"]["decode_widths"]
+        assert 32 in widths
+        prefill_batches = {kw["batch"] for k, kw in small if k == "layer_full"}
+        assert 32 not in prefill_batches
+        assert any(k == "embed_decode" and kw["batch"] == 32 for k, kw in small)
+        assert any(k == "logits" and kw["batch"] == 32 and kw["seq"] == 1 for k, kw in small)
+        for tp in aot.PLANS["full"]["small"]["tps"]:
+            assert any(
+                k == "attn_shard_decode" and kw["batch"] == 32 and kw["tp"] == tp
+                for k, kw in small
+            )
+        # the verify families (chunked prefill's chunk-window kernels)
+        # extend over the new width too
+        for spec_k in aot.PLANS["full"]["small"]["spec_ks"]:
+            assert any(
+                k == "embed_verify" and kw["batch"] == 32 and kw["seq"] == spec_k
+                for k, kw in small
+            ), spec_k
+
     def test_spec_ks_emit_whole_verify_families(self):
         # every (width, k) pair carries embed_verify, layer_full_verify,
         # a seq=k logits head, per-tp attn_shard_verify and a rows=w*k

@@ -1,0 +1,216 @@
+//! Chunked-prefill benchmark: a mixed long/short-prompt workload (the
+//! heavy-tail `long_prompt_pct` knob) against the same engine with
+//! chunking off (monolithic prefills) vs on (fixed chunk waves
+//! interleaved with decode buckets).
+//!
+//! The claims under test: interleaving bounds the TPOT spikes decodes
+//! suffer behind long prefills (max / p99 inter-token gap improves, the
+//! dispatcher's `decode_stall` attribution drops), completed streams are
+//! byte-identical between the two cells (hard gate — chunking must be
+//! invisible in the bytes), and no K/V block leaks in either cell (hard
+//! gate). A chunked max-TPOT materially above the monolithic cell's is a
+//! regression and also fails the run.
+//!
+//! Results land machine-readably in `BENCH_chunked.json` at the repo
+//! root (regenerate with `scripts/bench_chunked.sh`; `BENCH_SMOKE=1`
+//! runs a smaller client pool for CI).
+
+use energonai::coordinator::engine::{Engine, LaunchConfig};
+use energonai::memory::kvcache;
+use energonai::runtime::find_artifacts;
+use energonai::workload::loadgen::{
+    parity_mismatches, pctl_us, run_saturation, LoadReport, SaturationScenario,
+};
+use energonai::workload::LengthDist;
+
+type Results = Vec<(String, f64)>;
+
+const SEED: u64 = 2209;
+/// Chunk window over the tiny preset's compiled verify ks {2, 4}.
+const CHUNK: usize = 4;
+/// Extra tail tokens a long prompt grows (8 + 20 stays inside the tiny
+/// preset's widest monolithic prefill bucket, seq 32 — the control cell
+/// must be able to serve the same prompts).
+const LONG_TAIL: usize = 20;
+/// Chunked max-TPOT above this multiple of the monolithic cell's is a
+/// regression (tolerance absorbs scheduler noise on loaded CI hosts).
+const TPOT_MAX_TOLERANCE: f64 = 1.25;
+/// Minimum inter-token samples per cell before the max-TPOT gate votes.
+const MIN_TPOT_SAMPLES: usize = 50;
+
+/// Per-cell outcome the cross-cell gates need.
+struct Cell {
+    report: LoadReport,
+    leaked: u64,
+    tpot_max_us: u64,
+}
+
+fn run_cell(
+    label: &str,
+    lc: LaunchConfig,
+    scenario: &SaturationScenario,
+    results: &mut Results,
+) -> Option<Cell> {
+    let before = kvcache::global_stats();
+    let engine = match Engine::launch(lc) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("skip {label}: {e:#}");
+            return None;
+        }
+    };
+    if !engine.kv_cache_on() {
+        eprintln!("skip {label}: decode artifacts missing");
+        engine.shutdown();
+        return None;
+    }
+    let max_context =
+        engine.manifest.shape_points("tiny").iter().map(|&(_, s)| s).max().unwrap();
+    let report = run_saturation(&engine, scenario, max_context);
+    let m = engine.metrics_snapshot();
+    let prefill_toks = m.prefill_tokens();
+    let stall_us = m.decode_stall().as_micros() as u64;
+    engine.shutdown();
+    let after = kvcache::global_stats();
+    let leaked = after.blocks_in_use.saturating_sub(before.blocks_in_use)
+        + after.host_bytes.saturating_sub(before.host_bytes)
+        + after.double_free.saturating_sub(before.double_free);
+    let tpot_max_us = pctl_us(&report.tpot_us, 100.0);
+    println!(
+        "{label:>5}: {} turns in {:.1}ms — {} completed / {} errors; {:.0} tok/s; \
+         TTFT p50 {}µs p99 {}µs max {}µs; TPOT p50 {}µs p99 {}µs max {}µs; \
+         {} prefill toks, decode stall {}µs, {} leaked",
+        report.turns(),
+        report.wall.as_secs_f64() * 1e3,
+        report.completed,
+        report.errors,
+        report.tokens_per_sec(),
+        pctl_us(&report.ttft_us, 50.0),
+        pctl_us(&report.ttft_us, 99.0),
+        pctl_us(&report.ttft_us, 100.0),
+        pctl_us(&report.tpot_us, 50.0),
+        pctl_us(&report.tpot_us, 99.0),
+        tpot_max_us,
+        prefill_toks,
+        stall_us,
+        leaked,
+    );
+    let key = |k: &str| format!("{label}_{k}");
+    results.push((key("turns"), report.turns() as f64));
+    results.push((key("completed"), report.completed as f64));
+    results.push((key("errors"), report.errors as f64));
+    results.push((key("tokens_per_sec"), report.tokens_per_sec()));
+    results.push((key("wall_us"), report.wall.as_secs_f64() * 1e6));
+    results.push((key("ttft_p50_us"), pctl_us(&report.ttft_us, 50.0) as f64));
+    results.push((key("ttft_p99_us"), pctl_us(&report.ttft_us, 99.0) as f64));
+    results.push((key("ttft_max_us"), pctl_us(&report.ttft_us, 100.0) as f64));
+    results.push((key("tpot_p50_us"), pctl_us(&report.tpot_us, 50.0) as f64));
+    results.push((key("tpot_p99_us"), pctl_us(&report.tpot_us, 99.0) as f64));
+    results.push((key("tpot_max_us"), tpot_max_us as f64));
+    results.push((key("tpot_samples"), report.tpot_us.len() as f64));
+    results.push((key("prefill_tokens"), prefill_toks as f64));
+    results.push((key("decode_stall_us"), stall_us as f64));
+    results.push((key("leaked_blocks"), leaked as f64));
+    Some(Cell { report, leaked, tpot_max_us })
+}
+
+fn write_json(results: &Results) {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_chunked.json");
+    let mut body = String::from("{\n  \"schema\": \"bench_chunked/v1\",\n");
+    body.push_str("  \"generated_by\": \"scripts/bench_chunked.sh\",\n");
+    body.push_str("  \"preset\": \"tiny\",\n");
+    body.push_str(&format!("  \"seed\": {SEED},\n"));
+    body.push_str(&format!("  \"chunk\": {CHUNK},\n"));
+    body.push_str("  \"results\": {\n");
+    for (i, (k, v)) in results.iter().enumerate() {
+        let comma = if i + 1 == results.len() { "" } else { "," };
+        body.push_str(&format!("    \"{k}\": {v:.2}{comma}\n"));
+    }
+    body.push_str("  }\n}\n");
+    match std::fs::write(path, body) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}
+
+fn main() {
+    if find_artifacts().is_err() {
+        eprintln!("no AOT artifacts found — run `make artifacts` first; skipping");
+        return;
+    }
+    let smoke = std::env::var("BENCH_SMOKE").is_ok();
+    let (clients, turns) = if smoke { (8, 2) } else { (16, 4) };
+
+    // mixed traffic: ~35% of fresh prompts grow a 20-token tail, the
+    // rest stay short — long monolithic prefills collide with the short
+    // sessions' decode steps, which is exactly the TPOT spike chunking
+    // exists to bound
+    let mut scenario =
+        SaturationScenario::new(SEED, clients, turns).with_long_prompts(0.35, LONG_TAIL);
+    scenario.prompt_dist = LengthDist::HeavyTail(8, 1.1);
+
+    println!(
+        "== chunked prefill: {clients} clients x {turns} turns, 35% long (+{LONG_TAIL} toks), \
+         chunk {CHUNK}, seed {SEED} ==\n"
+    );
+    let mut results = Results::new();
+    results.push(("clients".into(), clients as f64));
+    results.push(("turns_per_client".into(), turns as f64));
+    results.push(("long_prompt_pct".into(), 0.35));
+    results.push(("long_prompt_tokens".into(), LONG_TAIL as f64));
+    results.push(("chunk".into(), CHUNK as f64));
+
+    let mono = run_cell(
+        "mono",
+        LaunchConfig::preset("tiny").with_warmup(true),
+        &scenario,
+        &mut results,
+    );
+    let chunk = run_cell(
+        "chunk",
+        LaunchConfig::preset("tiny").with_warmup(true).with_prefill_chunk(CHUNK, 1),
+        &scenario,
+        &mut results,
+    );
+
+    if let (Some(mono), Some(chunk)) = (mono, chunk) {
+        let diffs = parity_mismatches(&mono.report, &chunk.report);
+        results.push(("parity".into(), if diffs.is_empty() { 1.0 } else { 0.0 }));
+        let ratio = if chunk.tpot_max_us > 0 {
+            mono.tpot_max_us as f64 / chunk.tpot_max_us as f64
+        } else {
+            0.0
+        };
+        results.push(("tpot_max_improvement_x".into(), ratio));
+        println!(
+            "\nparity: {}",
+            if diffs.is_empty() {
+                "completed streams byte-identical across mono/chunk".to_string()
+            } else {
+                format!("DIVERGED:\n{}", diffs.join("\n"))
+            }
+        );
+        println!(
+            "max TPOT: {}µs mono vs {}µs chunked ({ratio:.2}x)",
+            mono.tpot_max_us, chunk.tpot_max_us
+        );
+        // the max-TPOT gate only votes with a meaningful sample in both
+        // cells — a near-empty smoke run must not flake CI on one gap
+        let enough = mono.report.tpot_us.len() >= MIN_TPOT_SAMPLES
+            && chunk.report.tpot_us.len() >= MIN_TPOT_SAMPLES;
+        let regressed = enough
+            && chunk.tpot_max_us as f64 > mono.tpot_max_us as f64 * TPOT_MAX_TOLERANCE;
+        let leaked = mono.leaked + chunk.leaked;
+        write_json(&results);
+        if !diffs.is_empty() || leaked > 0 || regressed {
+            // the counters on disk are the evidence; fail the smoke gate
+            eprintln!(
+                "FAIL: parity_diffs={} leaked={leaked} tpot_max_regressed={regressed}",
+                diffs.len()
+            );
+            std::process::exit(1);
+        }
+        return;
+    }
+    write_json(&results);
+}

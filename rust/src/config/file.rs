@@ -22,6 +22,8 @@
 //! prefix_cache = true    # shared-prefix K/V reuse at admission
 //! speculative = true     # draft-and-verify decode over the cache
 //! spec_k = 4             # largest verify window (1 committed + k-1 drafts)
+//! prefill_chunk = 64     # chunked prefill: split prompts longer than this (0 = off)
+//! chunk_decode_ratio = 1 # decode buckets interleave after this many chunk waves
 //! pool_threads = 4
 //! max_batch = 32
 //! batch_timeout_us = 2000
@@ -74,6 +76,9 @@ pub fn launch_from_doc(doc: &TomlDoc) -> anyhow::Result<LaunchConfig> {
     launch.engine.prefix_cache = doc.bool_or("engine.prefix_cache", false);
     launch.engine.speculative = doc.bool_or("engine.speculative", false);
     launch.engine.spec_k = doc.usize_or("engine.spec_k", launch.engine.spec_k);
+    launch.engine.prefill_chunk = doc.usize_or("engine.prefill_chunk", 0);
+    launch.engine.chunk_decode_ratio =
+        doc.usize_or("engine.chunk_decode_ratio", launch.engine.chunk_decode_ratio);
     launch.engine.max_queue_depth = doc.usize_or("engine.max_queue_depth", 0);
     launch.engine.admission_token_budget = doc.usize_or("engine.admission_token_budget", 0);
     launch.engine.slo_ttft_ms = doc.usize_or("engine.slo_ttft_ms", 0) as u64;
@@ -98,6 +103,14 @@ pub fn launch_from_doc(doc: &TomlDoc) -> anyhow::Result<LaunchConfig> {
     anyhow::ensure!(
         !launch.engine.prefix_cache || launch.engine.kv_cache,
         "engine.prefix_cache requires engine.kv_cache (adoption replays through the paged cache)"
+    );
+    anyhow::ensure!(
+        launch.engine.prefill_chunk == 0 || launch.engine.kv_cache,
+        "engine.prefill_chunk requires engine.kv_cache (chunks seed the paged cache)"
+    );
+    anyhow::ensure!(
+        launch.engine.chunk_decode_ratio >= 1,
+        "engine.chunk_decode_ratio must be >= 1 (a ratio of 0 would never run a chunk)"
     );
     anyhow::ensure!(
         launch.engine.kv_spill_low_water <= launch.engine.kv_spill_high_water
@@ -138,6 +151,7 @@ pub fn launch_from_doc(doc: &TomlDoc) -> anyhow::Result<LaunchConfig> {
             "engine.kv_spill_high_water", "engine.kv_spill_low_water",
             "engine.prefix_cache",
             "engine.speculative", "engine.spec_k",
+            "engine.prefill_chunk", "engine.chunk_decode_ratio",
             "engine.max_queue_depth", "engine.admission_token_budget",
             "engine.slo_ttft_ms", "engine.slo_tpot_ms",
             "engine.pressure_max_new_tokens",
@@ -274,6 +288,27 @@ kv_spill_low_water = 0.5
         let doc = TomlDoc::parse("[engine]\nprefix_cache = true\nkv_cache = false\n").unwrap();
         let err = launch_from_doc(&doc).unwrap_err().to_string();
         assert!(err.contains("kv_cache"), "{err}");
+    }
+
+    #[test]
+    fn chunked_prefill_round_trip_and_validation() {
+        let doc =
+            TomlDoc::parse("[engine]\nprefill_chunk = 64\nchunk_decode_ratio = 2\n").unwrap();
+        let l = launch_from_doc(&doc).unwrap();
+        assert_eq!(l.engine.prefill_chunk, 64);
+        assert_eq!(l.engine.chunk_decode_ratio, 2);
+        // defaults: off, ratio 1 (monolithic path byte-identical)
+        let l = launch_from_doc(&TomlDoc::parse("").unwrap()).unwrap();
+        assert_eq!(l.engine.prefill_chunk, 0);
+        assert_eq!(l.engine.chunk_decode_ratio, 1);
+        // chunks seed the paged cache; without it the feature is meaningless
+        let doc = TomlDoc::parse("[engine]\nprefill_chunk = 32\nkv_cache = false\n").unwrap();
+        let err = launch_from_doc(&doc).unwrap_err().to_string();
+        assert!(err.contains("kv_cache"), "{err}");
+        // a zero interleave ratio would starve chunks entirely
+        let doc = TomlDoc::parse("[engine]\nchunk_decode_ratio = 0\n").unwrap();
+        let err = launch_from_doc(&doc).unwrap_err().to_string();
+        assert!(err.contains("chunk_decode_ratio"), "{err}");
     }
 
     #[test]

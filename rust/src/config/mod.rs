@@ -221,6 +221,19 @@ pub struct EngineConfig {
     /// speculative step may use; the engine picks the largest compiled
     /// k ≤ this that fits the session's remaining budget and context.
     pub spec_k: usize,
+    /// Chunked prefill: prompts longer than this split into fixed-size
+    /// windows that seed the paged KV cache incrementally, interleaving
+    /// with decode buckets so a long prompt can no longer freeze every
+    /// in-flight generation (the engine picks the largest compiled
+    /// verify-family window k ≤ this as the chunk size). Requires the KV
+    /// cache; 0 (the default) keeps the monolithic prefill path
+    /// byte-identical to a build without the feature.
+    pub prefill_chunk: usize,
+    /// Decode-interleave ratio for chunked prefill: after this many
+    /// consecutive chunk waves, waiting decode/verify continuations are
+    /// scheduled ahead of the next chunk (minimum 1 — a long prompt
+    /// yields after every `ratio` windows).
+    pub chunk_decode_ratio: usize,
     /// Load shedding: max queued prefill requests before new submissions
     /// get a structured `busy` rejection (0 = unlimited queueing). Under
     /// SLO pressure the effective cap halves (an unlimited cap degrades
@@ -267,6 +280,8 @@ impl Default for EngineConfig {
             prefix_cache: false,
             speculative: false,
             spec_k: 4,
+            prefill_chunk: 0,
+            chunk_decode_ratio: 1,
             max_queue_depth: 0,
             admission_token_budget: 0,
             slo_ttft_ms: 0,

@@ -85,6 +85,13 @@ pub struct Request {
     /// through every continuation so the token budget meters only the
     /// computed suffix and metrics can attribute TTFT to the hit path.
     pub adopted: usize,
+    /// Chunked-prefill steps only: prompt positions already seeded into
+    /// the session's K/V cache before this step (adopted prefix included).
+    /// This step computes `tokens[chunk_start .. chunk_start + chunk_len]`.
+    pub chunk_start: usize,
+    /// Chunked-prefill steps only: the window size of this step. Zero for
+    /// every other phase.
+    pub chunk_len: usize,
 }
 
 impl Request {
@@ -97,6 +104,8 @@ impl Request {
             adopt: None,
             retain: 0,
             adopted: 0,
+            chunk_start: 0,
+            chunk_len: 0,
         }
     }
 
@@ -112,6 +121,8 @@ impl Request {
             adopt: None,
             retain: 0,
             adopted: 0,
+            chunk_start: 0,
+            chunk_len: 0,
         }
     }
 
@@ -119,7 +130,37 @@ impl Request {
     /// `draft` enter the verify batch as a `draft.len() + 1`-token window.
     pub fn verify(id: u64, tokens: Vec<i32>, draft: Vec<i32>) -> Request {
         debug_assert!(!draft.is_empty(), "a verify step needs at least one drafted token");
-        Request { id, tokens, phase: Phase::Verify, draft, adopt: None, retain: 0, adopted: 0 }
+        Request {
+            id,
+            tokens,
+            phase: Phase::Verify,
+            draft,
+            adopt: None,
+            retain: 0,
+            adopted: 0,
+            chunk_start: 0,
+            chunk_len: 0,
+        }
+    }
+
+    /// One chunked-prefill step: `tokens` is the *full* prompt (so tier
+    /// and ledger accounting charge the final cache length from the first
+    /// chunk), and this step seeds positions `start .. start + len` of it
+    /// into the session's K/V cache.
+    pub fn chunk(id: u64, tokens: Vec<i32>, start: usize, len: usize) -> Request {
+        debug_assert!(len >= 2, "a chunk window needs at least two positions");
+        debug_assert!(start + len <= tokens.len(), "chunk window past the prompt end");
+        Request {
+            id,
+            tokens,
+            phase: Phase::Chunk,
+            draft: Vec::new(),
+            adopt: None,
+            retain: 0,
+            adopted: 0,
+            chunk_start: start,
+            chunk_len: len,
+        }
     }
 
     /// Tag a continuation with the positions its session adopted at
@@ -134,9 +175,22 @@ impl Request {
     }
 
     /// Window size this request's engine step scores: the drafted tokens
-    /// plus the newest committed one (1 for plain decode / prefill).
+    /// plus the newest committed one (1 for plain decode / prefill), or
+    /// the chunk length for a chunked-prefill step.
     pub fn window(&self) -> usize {
-        self.draft.len() + 1
+        if self.phase == Phase::Chunk {
+            self.chunk_len
+        } else {
+            self.draft.len() + 1
+        }
+    }
+
+    /// Chunked-prefill steps: whether this is the session's *first* chunk
+    /// (nothing beyond an adopted prefix is cached yet). First chunks
+    /// admit like prefills — token budget and tier gate both meter them —
+    /// while continuations are exempt, like decode steps.
+    pub fn is_first_chunk(&self) -> bool {
+        self.chunk_start == self.adopted
     }
 
     /// Positions the session's K/V cache will hold right after this step
@@ -208,6 +262,15 @@ impl FormedBatch {
                     // the whole drafted window counts as valid tokens
                     valid.push(r.len() + r.draft.len());
                 }
+                Phase::Chunk => {
+                    debug_assert_eq!(r.window(), s, "chunk bucket k mismatch");
+                    let start = r.chunk_start;
+                    ids[i * s..i * s + s].copy_from_slice(&r.tokens[start..start + s]);
+                    // valid through the end of this window: the chunk
+                    // kernels place its K/V rows at `valid - k ..= valid-1`
+                    // and attend over the already-seeded prefix below them
+                    valid.push(start + s);
+                }
             }
         }
         // bucket rows beyond the real requests are zero-length pads
@@ -217,7 +280,7 @@ impl FormedBatch {
         // the zero token (verify windows need valid >= k so the window
         // base position stays non-negative)
         let pad_min = match self.phase {
-            Phase::Verify => s,
+            Phase::Verify | Phase::Chunk => s,
             _ => 1,
         };
         for v in valid.iter_mut() {
@@ -240,8 +303,23 @@ impl FormedBatch {
         } else {
             Vec::new()
         };
-        let prefix_retain = if self.requests.iter().any(|r| r.retain > 0) {
-            let mut v: Vec<usize> = self.requests.iter().map(|r| r.retain).collect();
+        // A chunked registrant carries its total `retain` on every chunk,
+        // but the workers must only retain on the step whose window
+        // *crosses* the retention boundary — earlier chunks haven't cached
+        // the positions yet, later ones would retain twice.
+        let eff_retain = |r: &Request| -> usize {
+            if r.phase != Phase::Chunk {
+                return r.retain;
+            }
+            let end = r.chunk_start + r.chunk_len;
+            if r.retain > 0 && r.chunk_start < r.retain && end >= r.retain {
+                r.retain
+            } else {
+                0
+            }
+        };
+        let prefix_retain = if self.requests.iter().any(|r| eff_retain(r) > 0) {
+            let mut v: Vec<usize> = self.requests.iter().map(eff_retain).collect();
             v.resize(b, 0);
             v
         } else {
@@ -322,6 +400,18 @@ pub struct Batcher {
     /// The lease is released on the adopter's first completed step (or
     /// its purge), never twice.
     adopt_leases: HashMap<u64, u64>,
+    /// Compiled chunked-prefill points `(width, k)`, sorted. Empty when
+    /// chunking is off — prefills then always run monolithically, the
+    /// byte-identical default. A chunk bucket never mixes windows of
+    /// different k (like verify, the variants are shape-specialized).
+    chunk_points: Vec<(usize, usize)>,
+    /// Decode-interleave ratio: after this many consecutive chunk waves,
+    /// `form` rotates a queued chunk run behind any waiting decode /
+    /// verify continuations so prefill work can never starve in-flight
+    /// token generation (the TPOT-spike fix).
+    chunk_decode_ratio: usize,
+    /// Consecutive chunk waves formed since the last decode/verify bucket.
+    chunk_streak: usize,
 }
 
 impl Batcher {
@@ -345,6 +435,9 @@ impl Batcher {
             prefix_chunk: 0,
             retained_blocks: HashMap::new(),
             adopt_leases: HashMap::new(),
+            chunk_points: Vec::new(),
+            chunk_decode_ratio: 1,
+            chunk_streak: 0,
         }
     }
 
@@ -377,6 +470,41 @@ impl Batcher {
     pub fn with_tier(mut self, tier: TierPolicy) -> Batcher {
         self.tier = Some(tier);
         self
+    }
+
+    /// Enable chunked prefill over the given compiled `(width, k)` window
+    /// points: prompts longer than the largest k split into fixed-size
+    /// chunk steps that seed the K/V cache incrementally, and `form`
+    /// admits at most `decode_ratio` consecutive chunk waves before a
+    /// queued decode/verify bucket goes first. Requires the KV cache
+    /// (chunk steps execute against it).
+    pub fn with_chunked_prefill(
+        mut self,
+        mut points: Vec<(usize, usize)>,
+        decode_ratio: usize,
+    ) -> Batcher {
+        points.sort_unstable();
+        points.dedup();
+        points.retain(|&(_, k)| k >= 2);
+        self.chunk_points = points;
+        self.chunk_decode_ratio = decode_ratio.max(1);
+        self
+    }
+
+    pub fn chunk_points(&self) -> &[(usize, usize)] {
+        &self.chunk_points
+    }
+
+    /// Largest compiled chunk window — the effective chunk size. Prompts
+    /// no longer than this run as one monolithic prefill.
+    fn max_chunk_k(&self) -> usize {
+        self.chunk_points.iter().map(|&(_, k)| k).max().unwrap_or(0)
+    }
+
+    /// Largest compiled chunk window that fits `remaining` prompt
+    /// positions (capped at the effective chunk size), if any.
+    pub fn chunk_window_for(points: &[(usize, usize)], remaining: usize) -> Option<usize> {
+        points.iter().map(|&(_, k)| k).filter(|&k| k <= remaining).max()
     }
 
     /// Enable shared-prefix reuse at admission: a token-id-keyed trie at
@@ -537,7 +665,11 @@ impl Batcher {
         let mut dropped_prefill = false;
         self.queue.retain(|(r, _)| {
             if r.id == id {
-                dropped_prefill |= r.phase == Phase::Prefill;
+                // a queued chunk step whose retention boundary hasn't been
+                // crossed yet is still an unexecuted prefill as far as the
+                // trie is concerned: its entry can never become ready
+                dropped_prefill |= r.phase == Phase::Prefill
+                    || (r.phase == Phase::Chunk && r.chunk_start < r.retain);
                 false
             } else {
                 true
@@ -559,9 +691,16 @@ impl Batcher {
         self.queue.len() != before
     }
 
-    /// Queued prefill requests (the depth the admission cap meters).
+    /// Queued prefill requests (the depth the admission cap meters). A
+    /// first chunk still waiting to form is an unstarted prompt, so it
+    /// counts; chunk continuations are in-flight sessions and don't.
     pub fn queued_prefills(&self) -> usize {
-        self.queue.iter().filter(|(r, _)| r.phase == Phase::Prefill).count()
+        self.queue
+            .iter()
+            .filter(|(r, _)| {
+                r.phase == Phase::Prefill || (r.phase == Phase::Chunk && r.is_first_chunk())
+            })
+            .count()
     }
 
     /// KV positions currently held by admitted-but-unfinished sessions.
@@ -587,7 +726,23 @@ impl Batcher {
         if let Some(t) = self.tier.as_mut() {
             t.on_requeue(r.id);
         }
-        self.prefix_step_done(r.id);
+        if r.phase == Phase::Chunk {
+            // mid-prompt: the session's registered prefix only becomes
+            // matchable once the crossing chunk has retained it into the
+            // worker registries — `chunk_start` counts what's cached, so
+            // `>= retain` means the retention landed. The adoption lease,
+            // if any, released after the first chunk (which adopted).
+            if let Some(p) = self.prefix.as_mut() {
+                if r.retain > 0 && r.chunk_start >= r.retain {
+                    p.mark_ready(r.id);
+                }
+                if let Some(donor) = self.adopt_leases.remove(&r.id) {
+                    p.unlease(donor);
+                }
+            }
+        } else {
+            self.prefix_step_done(r.id);
+        }
         // keep the token ledger tracking the session's grown context;
         // adopted positions were never computed here, so they don't count
         self.active_tokens.insert(r.id, r.cache_len().saturating_sub(r.adopted));
@@ -643,16 +798,24 @@ impl Batcher {
             return None;
         }
         self.apply_prefix_matches();
+        self.apply_chunking();
+        self.interleave_chunks();
         let phase = self.queue[0].0.phase;
-        // verify buckets are shape-specialized per window size k: only a
-        // same-k run can share one (runs are homogeneous anyway — the
-        // collector picks one k per wave of coalescing continuations)
+        // verify / chunk buckets are shape-specialized per window size k:
+        // only a same-k run can share one (runs are homogeneous anyway —
+        // the collector picks one k per wave of coalescing continuations).
+        // A chunk run additionally never mixes first chunks (which admit
+        // like prefills) with continuations (which are admission-exempt).
         let window = self.queue[0].0.window();
+        let first_chunk = self.queue[0].0.is_first_chunk();
         let run = self
             .queue
             .iter()
             .take_while(|(r, _)| {
-                r.phase == phase && (phase != Phase::Verify || r.window() == window)
+                r.phase == phase
+                    && (!matches!(phase, Phase::Verify | Phase::Chunk)
+                        || r.window() == window)
+                    && (phase != Phase::Chunk || r.is_first_chunk() == first_chunk)
             })
             .count();
         let cap = match phase {
@@ -673,6 +836,17 @@ impl Batcher {
                 assert!(max_w > 0, "verify request queued but no k={window} buckets compiled");
                 self.max_batch.min(max_w)
             }
+            Phase::Chunk => {
+                let max_w = self
+                    .chunk_points
+                    .iter()
+                    .filter(|&&(_, k)| k == window)
+                    .map(|&(w, _)| w)
+                    .max()
+                    .unwrap_or(0);
+                assert!(max_w > 0, "chunk request queued but no k={window} buckets compiled");
+                self.max_batch.min(max_w)
+            }
         };
         let oldest_expired = now.duration_since(self.queue[0].1) >= self.timeout;
         if run < cap && !oldest_expired {
@@ -689,7 +863,13 @@ impl Batcher {
         // the budget is waiting on. A lone oversized prompt against an
         // empty ledger still admits: the budget meters concurrency, not
         // single-request size (max_seq already bounds that on push).
-        if phase == Phase::Prefill && self.token_budget > 0 {
+        // First chunks of a chunked prefill meter like prefills (charging
+        // the whole prompt minus any adopted prefix — the full cache
+        // length their session will hold); chunk continuations are exempt
+        // like decodes, for the same no-deadlock reason.
+        let budget_metered =
+            phase == Phase::Prefill || (phase == Phase::Chunk && first_chunk);
+        if budget_metered && self.token_budget > 0 {
             let active = self.active_token_load();
             if active >= self.token_budget {
                 self.budget_deferrals += 1;
@@ -698,7 +878,7 @@ impl Batcher {
             let mut fit = 0;
             let mut cum = 0usize;
             for (r, _) in self.queue.iter().take(take) {
-                cum += r.len();
+                cum += r.cache_len().saturating_sub(r.adopted);
                 if active + cum > self.token_budget && !(fit == 0 && active == 0) {
                     break;
                 }
@@ -720,8 +900,13 @@ impl Batcher {
             let rows: Vec<(u64, usize)> =
                 self.queue.iter().take(take).map(|(r, _)| (r.id, r.cache_len())).collect();
             take = match phase {
+                // first chunks admit like prefills (their rows are new to
+                // the tier model and charge the final cache length)...
                 Phase::Prefill => t.max_prefill_rows(&rows).min(take),
-                Phase::Decode | Phase::Verify => {
+                Phase::Chunk if first_chunk => t.max_prefill_rows(&rows).min(take),
+                // ...continuations gate like decodes: already charged,
+                // just kept / staged resident
+                Phase::Decode | Phase::Verify | Phase::Chunk => {
                     let m = t.max_decode_rows(&rows).min(take);
                     if m == 0 {
                         // everything is pinned by in-flight buckets:
@@ -747,12 +932,21 @@ impl Batcher {
                 Phase::Prefill => smallest_fitting_bucket(&self.buckets, reqs.len(), max_len),
                 // decode row "length" is always the single newest token
                 Phase::Decode => smallest_fitting_bucket(&self.decode_points, reqs.len(), 1),
-                // verify buckets: exact-k points only, widths compared as
-                // width-only (the k column is the fixed window, not a pad
-                // target)
+                // verify / chunk buckets: exact-k points only, widths
+                // compared as width-only (the k column is the fixed
+                // window, not a pad target)
                 Phase::Verify => {
                     let pts: Vec<(usize, usize)> = self
                         .verify_points
+                        .iter()
+                        .filter(|&&(_, k)| k == window)
+                        .map(|&(w, _)| (w, 1))
+                        .collect();
+                    smallest_fitting_bucket(&pts, reqs.len(), 1).map(|(w, _)| (w, window))
+                }
+                Phase::Chunk => {
+                    let pts: Vec<(usize, usize)> = self
+                        .chunk_points
                         .iter()
                         .filter(|&&(_, k)| k == window)
                         .map(|&(w, _)| (w, 1))
@@ -774,6 +968,13 @@ impl Batcher {
                 }
                 if self.prefix.is_some() {
                     self.commit_prefix_rows(&reqs);
+                }
+                // decode-interleave accounting: consecutive chunk waves
+                // count up; any decode/verify bucket resets the streak
+                match phase {
+                    Phase::Chunk => self.chunk_streak += 1,
+                    Phase::Decode | Phase::Verify => self.chunk_streak = 0,
+                    Phase::Prefill => {}
                 }
                 return Some(FormedBatch {
                     requests: reqs.into_iter().map(|(r, _)| r).collect(),
@@ -804,7 +1005,27 @@ impl Batcher {
             None => return true,
         };
         let rows: Vec<(u64, usize)> = reqs.iter().map(|(r, _)| (r.id, r.cache_len())).collect();
+        // first chunks of a chunked prefill admit atomically like
+        // prefills — charging the *final* cache length so spill water
+        // marks stay correct for the whole chunked lifetime — while chunk
+        // continuations gate like decodes (already charged and pinned by
+        // their first chunk; the gate only keeps / stages them resident)
+        let chunk_admits = phase == Phase::Chunk
+            && reqs.first().is_some_and(|(r, _)| r.is_first_chunk());
         match phase {
+            _ if chunk_admits => {
+                let (cmds, admitted) = tier.admit_prefill(&rows);
+                self.tier_cmds.extend(cmds);
+                if !admitted {
+                    for pair in reqs.drain(..).rev() {
+                        self.queue.push_front(pair);
+                    }
+                    return false;
+                }
+            }
+            Phase::Chunk => {
+                self.tier_cmds.extend(tier.gate_decode(&rows));
+            }
             Phase::Prefill => {
                 let (cmds, admitted) = tier.admit_prefill(&rows);
                 self.tier_cmds.extend(cmds);
@@ -884,14 +1105,35 @@ impl Batcher {
                 Some((donor, m)) => {
                     p.lease(donor);
                     self.adopt_leases.insert(r.id, donor);
-                    let step = Request {
-                        id: r.id,
-                        tokens: r.tokens[..m + 1].to_vec(),
-                        phase: Phase::Decode,
-                        draft: Vec::new(),
-                        adopt: Some((donor, m)),
-                        retain: 0,
-                        adopted: m,
+                    // with chunked prefill on, the unmatched suffix walks
+                    // in chunk windows instead of one-token decode steps
+                    // whenever a compiled window fits it — same adopted
+                    // blocks, fewer engine steps
+                    let suffix_window =
+                        Self::chunk_window_for(&self.chunk_points, r.len() - m);
+                    let step = match suffix_window {
+                        Some(k) => Request {
+                            id: r.id,
+                            tokens: r.tokens,
+                            phase: Phase::Chunk,
+                            draft: Vec::new(),
+                            adopt: Some((donor, m)),
+                            retain: 0,
+                            adopted: m,
+                            chunk_start: m,
+                            chunk_len: k,
+                        },
+                        None => Request {
+                            id: r.id,
+                            tokens: r.tokens[..m + 1].to_vec(),
+                            phase: Phase::Decode,
+                            draft: Vec::new(),
+                            adopt: Some((donor, m)),
+                            retain: 0,
+                            adopted: m,
+                            chunk_start: 0,
+                            chunk_len: 0,
+                        },
                     };
                     stepped.push((step, at));
                 }
@@ -908,6 +1150,75 @@ impl Batcher {
         }
         for pair in stepped.into_iter().rev() {
             self.queue.push_front(pair);
+        }
+    }
+
+    /// Chunked-prefill admission pass over the contiguous prefill run at
+    /// the queue front (the run the prefix pass just resolved): prompts
+    /// longer than the effective chunk size convert in place into their
+    /// *first* chunk step. Later chunks are threaded back to the queue
+    /// front by the collector, so conversion happens exactly once per
+    /// prompt. Prompts that fit one window keep the monolithic path — a
+    /// single prefill bucket is strictly cheaper than a lone chunk.
+    fn apply_chunking(&mut self) {
+        if self.chunk_points.is_empty() {
+            return;
+        }
+        let c = self.max_chunk_k();
+        let block = self.prefix_chunk;
+        for (r, _) in self.queue.iter_mut() {
+            if r.phase != Phase::Prefill {
+                break;
+            }
+            if r.len() <= c {
+                continue;
+            }
+            r.phase = Phase::Chunk;
+            r.chunk_start = 0;
+            r.chunk_len = c;
+            // cap a registrant's retention one position short of the
+            // prompt end: the crossing chunk then always lands while the
+            // prompt is still being chunk-walked, which is the invariant
+            // `requeue_front` relies on before marking the entry ready
+            if block > 0 && r.retain >= r.len() {
+                r.retain = ((r.len() - 1) / block) * block;
+            }
+        }
+    }
+
+    /// Decode-interleave rotation: once `chunk_decode_ratio` consecutive
+    /// chunk waves have formed and decode/verify continuations are
+    /// waiting, the chunk run at the queue front moves behind them (but
+    /// stays ahead of fresh prefills). This bounds decode starvation by
+    /// construction — a long prompt can occupy the workers for at most
+    /// `ratio` chunk windows before every in-flight generation gets a
+    /// token step.
+    fn interleave_chunks(&mut self) {
+        if self.chunk_points.is_empty() || self.chunk_streak < self.chunk_decode_ratio {
+            return;
+        }
+        if self.queue.front().map_or(true, |(r, _)| r.phase != Phase::Chunk) {
+            return;
+        }
+        if !self
+            .queue
+            .iter()
+            .any(|(r, _)| matches!(r.phase, Phase::Decode | Phase::Verify))
+        {
+            return;
+        }
+        let mut rotated = Vec::new();
+        while self.queue.front().map_or(false, |(r, _)| r.phase == Phase::Chunk) {
+            rotated.push(self.queue.pop_front().unwrap());
+        }
+        // re-insert after the last waiting decode/verify continuation
+        let at = self
+            .queue
+            .iter()
+            .rposition(|(r, _)| matches!(r.phase, Phase::Decode | Phase::Verify))
+            .map_or(0, |i| i + 1);
+        for pair in rotated.into_iter().rev() {
+            self.queue.insert(at, pair);
         }
     }
 
@@ -1590,5 +1901,224 @@ mod tests {
             b.tier().unwrap().is_resident(2) == Some(true),
             "registrant stays resident (shared sessions are never victims)"
         );
+    }
+
+    fn chunk_batcher() -> Batcher {
+        batcher()
+            .with_decode_widths(vec![1, 2, 4])
+            .with_chunked_prefill(vec![(1, 2), (2, 2), (4, 2), (1, 4), (2, 4), (4, 4)], 1)
+    }
+
+    #[test]
+    fn chunking_off_or_short_prompts_stay_monolithic() {
+        // no chunk points: byte-identical to the pre-chunking batcher
+        let old = Instant::now() - Duration::from_millis(20);
+        let mut b = batcher();
+        b.push_at(req(1, 12), old).unwrap();
+        assert_eq!(b.form(Instant::now()).unwrap().phase, Phase::Prefill);
+        // chunking on, prompt fits one window: still monolithic
+        let mut b = chunk_batcher();
+        b.push_at(req(2, 4), old).unwrap();
+        let fb = b.form(Instant::now()).unwrap();
+        assert_eq!(fb.phase, Phase::Prefill);
+        assert_eq!(fb.requests[0].chunk_len, 0);
+    }
+
+    #[test]
+    fn long_prompt_converts_to_first_chunk_wave() {
+        let mut b = chunk_batcher();
+        let old = Instant::now() - Duration::from_millis(20);
+        b.push_at(req(1, 12), old).unwrap();
+        let fb = b.form(Instant::now()).expect("first chunk wave forms");
+        assert_eq!(fb.phase, Phase::Chunk);
+        assert_eq!(fb.bucket, (1, 4), "largest compiled window is the chunk size");
+        let r = &fb.requests[0];
+        assert_eq!((r.chunk_start, r.chunk_len), (0, 4));
+        assert_eq!(r.len(), 12, "chunk requests carry the full prompt");
+        assert!(r.is_first_chunk());
+        // the ledger charges the final cache length from the first chunk
+        assert_eq!(b.active_token_load(), 12);
+    }
+
+    #[test]
+    fn chunk_input_carries_window_tokens_and_valid() {
+        let fb = FormedBatch {
+            requests: vec![Request::chunk(7, (0..12).collect(), 4, 4)],
+            bucket: (2, 4),
+            phase: Phase::Chunk,
+        };
+        let input = fb.to_input();
+        assert_eq!(input.phase, Phase::Chunk);
+        assert_eq!(input.ids.shape, vec![2, 4]);
+        // the window's own tokens, then a zeroed pad row
+        assert_eq!(input.ids.data, vec![4, 5, 6, 7, 0, 0, 0, 0]);
+        // valid through the window end; pad rows clamp to one window
+        assert_eq!(input.valid_lens, vec![8, 4]);
+        assert_eq!(input.req_ids, vec![7, u64::MAX]);
+    }
+
+    #[test]
+    fn chunk_runs_never_mix_first_and_continuation() {
+        let mut b = chunk_batcher();
+        let old = Instant::now() - Duration::from_millis(20);
+        // a fresh first chunk queued behind a mid-prompt continuation
+        b.requeue_front(Request::chunk(2, vec![3; 12], 0, 4), old);
+        b.requeue_front(Request::chunk(1, vec![2; 12], 4, 4), old);
+        let fb = b.form(Instant::now()).unwrap();
+        assert_eq!(fb.requests.len(), 1, "continuation must not share an admission bucket");
+        assert_eq!(fb.requests[0].id, 1);
+        let fb = b.form(Instant::now()).unwrap();
+        assert_eq!(fb.requests[0].id, 2);
+        assert!(fb.requests[0].is_first_chunk());
+    }
+
+    #[test]
+    fn chunk_streak_rotates_behind_waiting_decodes() {
+        let mut b = chunk_batcher(); // decode-interleave ratio 1
+        let old = Instant::now() - Duration::from_millis(20);
+        b.push_at(req(1, 12), old).unwrap();
+        assert_eq!(b.form(Instant::now()).unwrap().phase, Phase::Chunk); // streak 1
+        // the continuation re-enters the front while a decode waits
+        b.requeue_front(Request::decode(9, vec![5; 6]), old);
+        b.requeue_front(Request::chunk(1, vec![1; 12], 4, 4), old);
+        let fb = b.form(Instant::now()).expect("decode must go first");
+        assert_eq!(fb.phase, Phase::Decode);
+        assert_eq!(fb.requests[0].id, 9);
+        // the streak reset: the chunk wave follows immediately
+        let fb = b.form(Instant::now()).unwrap();
+        assert_eq!(fb.phase, Phase::Chunk);
+        assert_eq!(fb.requests[0].chunk_start, 4);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn chunk_streak_ratio_admits_consecutive_waves() {
+        let mut b = batcher()
+            .with_decode_widths(vec![1, 2, 4])
+            .with_chunked_prefill(vec![(1, 4), (2, 4), (4, 4)], 2);
+        let old = Instant::now() - Duration::from_millis(20);
+        b.push_at(req(1, 12), old).unwrap();
+        assert_eq!(b.form(Instant::now()).unwrap().phase, Phase::Chunk); // streak 1
+        b.requeue_front(Request::decode(9, vec![5; 6]), old);
+        b.requeue_front(Request::chunk(1, vec![1; 12], 4, 4), old);
+        // ratio 2: one wave so far, the chunk still leads the decode
+        let fb = b.form(Instant::now()).unwrap();
+        assert_eq!(fb.phase, Phase::Chunk); // streak 2
+        b.requeue_front(Request::chunk(1, vec![1; 12], 8, 4), old);
+        let fb = b.form(Instant::now()).expect("streak hit the ratio: decode first");
+        assert_eq!(fb.phase, Phase::Decode);
+    }
+
+    #[test]
+    fn first_chunk_meters_token_budget_at_full_prompt() {
+        let mut b = chunk_batcher().with_admission(0, 16);
+        let old = Instant::now() - Duration::from_millis(20);
+        b.push_at(req(1, 12), old).unwrap();
+        assert_eq!(b.form(Instant::now()).unwrap().phase, Phase::Chunk);
+        assert_eq!(b.active_token_load(), 12);
+        // a second long prompt would overflow the budget: its first chunk
+        // defers even though the window itself is only 4 tokens
+        b.push_at(req(2, 12), old).unwrap();
+        assert!(b.form(Instant::now()).is_none(), "first chunk must defer over budget");
+        assert_eq!(b.budget_deferrals(), 1);
+        // continuations of admitted sessions stay exempt
+        b.requeue_front(Request::chunk(1, vec![1; 12], 4, 4), old);
+        assert_eq!(b.form(Instant::now()).unwrap().phase, Phase::Chunk);
+        // session 1 retires -> the deferred prompt's first chunk admits
+        b.tier_free(&[1]);
+        let fb = b.form(Instant::now()).expect("admits after release");
+        assert_eq!(fb.requests[0].id, 2);
+        assert!(fb.requests[0].is_first_chunk());
+    }
+
+    #[test]
+    fn first_chunk_charges_tier_for_final_cache_length() {
+        // bp=8: a len-12 prompt needs 2 blocks; device holds exactly 2
+        let mut b = chunk_batcher().with_tier(TierPolicy::new(TierConfig::new(2, 64), 8));
+        let old = Instant::now() - Duration::from_millis(20);
+        b.push_at(req(1, 12), old).unwrap();
+        let fb = b.form(Instant::now()).expect("first chunk admits");
+        assert_eq!(fb.phase, Phase::Chunk);
+        assert_eq!(
+            b.tier().unwrap().device_used(),
+            2,
+            "admission charges the final cache length, not the window"
+        );
+        // a second long prompt cannot fit while session 1 is pinned
+        b.push_at(req(2, 12), old).unwrap();
+        assert!(b.form(Instant::now()).is_none(), "must defer while 1 is pinned");
+        // continuations pass the decode-style gate without re-charging
+        b.requeue_front(Request::chunk(1, vec![1; 12], 4, 4), old);
+        let fb = b.form(Instant::now()).expect("continuation forms");
+        assert_eq!(fb.phase, Phase::Chunk);
+        assert_eq!(b.tier().unwrap().device_used(), 2);
+        b.tier_free(&[1]);
+        assert!(b.form(Instant::now()).is_some(), "deferred prompt admits after free");
+    }
+
+    #[test]
+    fn chunked_registrant_matchable_only_after_crossing_chunk() {
+        let mut b = prefix_batcher()
+            .with_chunked_prefill(vec![(1, 4), (2, 4), (4, 4)], 1);
+        let old = Instant::now() - Duration::from_millis(20);
+        // 12 tokens, block 4: retention would be 12 but caps one position
+        // short of the prompt end -> 8, crossed by the second chunk
+        b.push_at(Request::new(1, (0..12).collect()), old).unwrap();
+        let fb = b.form(Instant::now()).expect("first chunk forms");
+        assert_eq!(fb.phase, Phase::Chunk);
+        assert_eq!(fb.requests[0].retain, 8);
+        let input = fb.to_input();
+        assert!(
+            input.prefix_retain.is_empty(),
+            "retention must not materialize before the crossing chunk"
+        );
+        // chunk 2 (positions 4..8) crosses the boundary, but at requeue
+        // time it hasn't run: the entry stays unmatchable
+        let mut c2 = Request::chunk(1, (0..12).collect(), 4, 4);
+        c2.retain = 8;
+        b.requeue_front(c2, old);
+        b.push_at(Request::new(2, (0..8).chain([50, 51, 52, 53]).collect()), old).unwrap();
+        let fb = b.form(Instant::now()).expect("continuation forms");
+        assert_eq!(fb.to_input().prefix_retain, vec![8], "crossing chunk retains");
+        let fb = b.form(Instant::now()).expect("prompt 2 forms");
+        assert_eq!(fb.phase, Phase::Chunk);
+        assert!(fb.requests[0].adopt.is_none(), "entry not ready: no match yet");
+        assert_eq!(b.prefix_hit_counts().0, 0);
+        // chunk 3 requeues with the boundary behind it: entry goes ready
+        let mut c3 = Request::chunk(1, (0..12).collect(), 8, 4);
+        c3.retain = 8;
+        b.requeue_front(c3, old);
+        let fb = b.form(Instant::now()).expect("chunk 3 forms");
+        assert_eq!(fb.requests[0].id, 1);
+        // a third templated prompt now adopts and chunk-walks the suffix
+        b.push_at(Request::new(3, (0..8).chain([60, 61, 62, 63]).collect()), old).unwrap();
+        let fb = b.form(Instant::now()).expect("hit forms");
+        assert_eq!(fb.phase, Phase::Chunk);
+        let r = &fb.requests[0];
+        assert_eq!(r.adopt, Some((1, 8)));
+        assert_eq!((r.chunk_start, r.chunk_len, r.adopted), (8, 4, 8));
+        assert!(r.is_first_chunk());
+        assert_eq!(b.prefix_hit_counts().0, 1);
+        // the budget meters only the computed suffix
+        assert_eq!(b.active_tokens[&3], 4);
+    }
+
+    #[test]
+    fn purge_of_mid_chunk_registrant_drops_its_trie_entry() {
+        let mut b = prefix_batcher()
+            .with_chunked_prefill(vec![(1, 4), (2, 4), (4, 4)], 1);
+        let old = Instant::now() - Duration::from_millis(20);
+        b.push_at(Request::new(1, (0..12).collect()), old).unwrap();
+        let fb = b.form(Instant::now()).expect("first chunk forms");
+        assert_eq!(fb.phase, Phase::Chunk);
+        assert_eq!(b.cached_prefix_entries(), 1);
+        // the continuation is queued but the retention boundary (8) is
+        // still ahead: cancelling now must drop the unready entry
+        let mut c2 = Request::chunk(1, (0..12).collect(), 4, 4);
+        c2.retain = 8;
+        b.requeue_front(c2, old);
+        assert!(b.purge(1));
+        assert_eq!(b.cached_prefix_entries(), 0);
+        assert_eq!(b.take_prefix_evictions(), vec![1]);
     }
 }

@@ -58,7 +58,7 @@ use crate::metrics::Recorder;
 use crate::model::{shard_layer, ModelWeights};
 use crate::runtime::{Device, Manifest};
 use std::collections::{HashMap, HashSet};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
@@ -172,6 +172,19 @@ impl LaunchConfig {
     /// Use a custom [`Drafter`] for speculative decode (default: n-gram).
     pub fn with_drafter(mut self, d: impl Drafter + 'static) -> Self {
         self.drafter = Some(DrafterHandle::new(d));
+        self
+    }
+
+    /// Chunked prefill: split prompts longer than `chunk` tokens into
+    /// fixed windows that seed the paged cache incrementally, yielding to
+    /// waiting decode buckets every `decode_ratio` windows. 0 = off (the
+    /// default), which keeps the monolithic prefill path byte-identical.
+    /// Requires the KV cache and the verify artifact family (chunk
+    /// windows run the verify kernels); the engine silently falls back to
+    /// monolithic prefill when either is missing.
+    pub fn with_prefill_chunk(mut self, chunk: usize, decode_ratio: usize) -> Self {
+        self.engine.prefill_chunk = chunk;
+        self.engine.chunk_decode_ratio = decode_ratio;
         self
     }
 
@@ -512,6 +525,17 @@ struct Shared {
     /// verify windows whenever a compiled k fits the session's remaining
     /// budget and context (plain decode otherwise).
     spec: Option<SpecShared>,
+    /// Chunked prefill is live: compiled chunk window sizes (ascending,
+    /// every k >= 2, capped by `engine.prefill_chunk`). Empty = off —
+    /// prompts run the monolithic prefill path.
+    chunk_ks: Vec<usize>,
+    /// Prefill / chunk batches currently occupying workers, maintained by
+    /// the dispatcher pool around each publish-and-wait.
+    prefill_inflight: AtomicUsize,
+    /// Total µs that formed decode/verify buckets spent waiting for a
+    /// dispatcher slot while prompt work occupied the workers — the
+    /// decode-starvation number chunked prefill exists to bound.
+    decode_stall_us: AtomicU64,
     /// Cancellation inbox: ids pushed by [`GenRef::cancel`] (client side
     /// or server disconnect), drained by the former on every tick.
     cancels: Arc<Mutex<Vec<u64>>>,
@@ -667,6 +691,24 @@ impl Engine {
             .filter(|(_, k)| spec_ks.contains(k))
             .collect();
         let spec_on = !spec_ks.is_empty();
+        // chunked prefill: prompt windows run the verify-family kernels
+        // (a chunk window is a verify window whose "draft" is real prompt
+        // tokens), so chunk points are the compiled verify points with k
+        // capped by the knob. Unlike speculation this needs no acceptance
+        // pass, so it is live under any pp. Empty — knob off or family
+        // missing — silently keeps the monolithic prefill path.
+        let chunk_points: Vec<(usize, usize)> = if kv_on && launch.engine.prefill_chunk >= 2 {
+            manifest
+                .verify_points(&launch.preset, par.tp)
+                .into_iter()
+                .filter(|&(_, k)| k >= 2 && k <= launch.engine.prefill_chunk)
+                .collect()
+        } else {
+            Vec::new()
+        };
+        let mut chunk_ks: Vec<usize> = chunk_points.iter().map(|&(_, k)| k).collect();
+        chunk_ks.sort_unstable();
+        chunk_ks.dedup();
         // tiered KV cache: spill cold sessions to pooled host memory.
         // Engine-side policy + per-worker host tiers only exist when the
         // knob is on *and* incremental decode is live; otherwise the
@@ -813,6 +855,9 @@ impl Engine {
                 ks: spec_ks,
                 vocab: cfg.vocab as i32,
             }),
+            chunk_ks,
+            prefill_inflight: AtomicUsize::new(0),
+            decode_stall_us: AtomicU64::new(0),
             cancels: Arc::new(Mutex::new(Vec::new())),
             doomed: Mutex::new(HashSet::new()),
         });
@@ -826,6 +871,9 @@ impl Engine {
         .with_decode_widths(decode_widths)
         .with_verify_points(verify_points)
         .with_admission(launch.engine.max_queue_depth, launch.engine.admission_token_budget);
+        if !chunk_points.is_empty() {
+            b = b.with_chunked_prefill(chunk_points, launch.engine.chunk_decode_ratio);
+        }
         if spill_on {
             // the engine-side residency model: form() becomes the
             // admission gate and spill/prefetch decision point
@@ -875,7 +923,9 @@ impl Engine {
         }
 
         // ---- former + dispatcher pool (Fig. 5) -------------------------------
-        let (fb_tx, fb_rx) = std::sync::mpsc::channel::<FormedBatch>();
+        // each formed batch carries its formation instant so dispatchers
+        // can attribute decode queue-wait to concurrent prompt work
+        let (fb_tx, fb_rx) = std::sync::mpsc::channel::<(FormedBatch, Instant)>();
         let fb_rx = Arc::new(Mutex::new(fb_rx));
 
         // former thread: turns the request queue into the batch list
@@ -915,7 +965,7 @@ impl Engine {
                         shared.publish_prefix_evictions(prefix_evicts);
                         match fb {
                             Some(fb) => {
-                                if fb_tx.send(fb).is_err() {
+                                if fb_tx.send((fb, Instant::now())).is_err() {
                                     return;
                                 }
                             }
@@ -935,9 +985,24 @@ impl Engine {
             service.push(std::thread::spawn(move || loop {
                 let next = fb_rx.lock().unwrap().recv();
                 match next {
-                    Ok(fb) => {
+                    Ok((fb, formed_at)) => {
+                        // decode-stall attribution: a decode/verify bucket
+                        // that waited for this slot while prompt work
+                        // (prefill or chunk waves) occupied the workers
+                        // charges its wait to `decode_stall_us` — the TPOT
+                        // spike source chunked prefill exists to bound
+                        let prompt_work = matches!(fb.phase, Phase::Prefill | Phase::Chunk);
+                        if prompt_work {
+                            shared.prefill_inflight.fetch_add(1, Ordering::SeqCst);
+                        } else if shared.prefill_inflight.load(Ordering::SeqCst) > 0 {
+                            let waited = formed_at.elapsed().as_micros() as u64;
+                            shared.decode_stall_us.fetch_add(waited, Ordering::Relaxed);
+                        }
                         let rref = shared.publish(fb, true);
                         let _ = rref.to_here(); // completion gates this slot
+                        if prompt_work {
+                            shared.prefill_inflight.fetch_sub(1, Ordering::SeqCst);
+                        }
                     }
                     Err(_) => break,
                 }
@@ -1061,6 +1126,7 @@ impl Engine {
                 r.record_prefix_index(hits, misses, b.cached_prefix_entries());
             }
         }
+        r.record_decode_stall(self.shared.decode_stall_us.load(Ordering::Relaxed));
         r
     }
 
@@ -1091,6 +1157,17 @@ impl Engine {
     /// Is shared-prefix K/V reuse live — knob on + incremental decode live?
     pub fn prefix_cache_on(&self) -> bool {
         self.shared.kv_on && self.launch.engine.prefix_cache
+    }
+
+    /// Is chunked prefill live — `engine.prefill_chunk` admits at least
+    /// one compiled window and the KV cache is live?
+    pub fn chunked_prefill_on(&self) -> bool {
+        !self.shared.chunk_ks.is_empty()
+    }
+
+    /// Compiled chunk window sizes (ascending; empty when chunking is off).
+    pub fn chunk_ks(&self) -> Vec<usize> {
+        self.shared.chunk_ks.clone()
     }
 
     pub fn pending_count(&self) -> usize {
@@ -1187,18 +1264,19 @@ fn collector_loop(
                 if from_batcher {
                     let now = Instant::now();
                     // unfinished sessions staged for re-enqueue as
-                    // (id, tokens, remaining budget, original arrival) —
-                    // the continuation requests themselves (and with
+                    // (id, tokens, remaining budget, original arrival,
+                    // adopted positions, continuation kind) — the
+                    // continuation requests themselves (and with
                     // speculation on, the *drafting*, which may one day
                     // be a small-model forward) are built only after the
                     // sessions lock drops, so drafter cost never blocks
                     // submissions or other collector iterations
-                    // the trailing (adopted, stepping) pair carries the
-                    // prefix-reuse state: how many prompt positions the
-                    // session adopted from the cache, and whether it is
-                    // still mid-prompt (stepping) so its continuation must
-                    // stay a plain decode
-                    let mut staged: Vec<(u64, Vec<i32>, usize, Instant, usize, bool)> = Vec::new();
+                    let mut staged: Vec<(u64, Vec<i32>, usize, Instant, usize, ContKind)> =
+                        Vec::new();
+                    // mid-chunk registrants cancelled before their
+                    // retention boundary: their trie entries can never
+                    // become ready and must be dropped, not marked ready
+                    let mut dropped_prefixes: Vec<u64> = Vec::new();
                     // finished sessions whose worker-side K/V blocks can go
                     let mut released: Vec<u64> = Vec::new();
                     // cancelled mid-generation: evicted here, freed by a
@@ -1227,6 +1305,12 @@ fn collector_loop(
                             if doomed.remove(&row.id) {
                                 if sessions.remove(&row.id).is_some() {
                                     cancelled.push(row.id);
+                                    // a chunked registrant killed before
+                                    // its crossing chunk leaves a forever-
+                                    // unready trie entry behind
+                                    if row.phase == Phase::Chunk && row.chunk_start < row.retain {
+                                        dropped_prefixes.push(row.id);
+                                    }
                                 }
                                 continue;
                             }
@@ -1274,10 +1358,38 @@ fn collector_loop(
                             // still at or below the prompt boundary (only
                             // possible for a prefix-cache hit) computes
                             // exactly one
-                            if row.phase == Phase::Prefill {
+                            if row.phase == Phase::Chunk {
+                                prefill_toks += row.chunk_len as u64;
+                            } else if row.phase == Phase::Prefill {
                                 prefill_toks += toks.len() as u64;
                             } else if toks.len() <= sess.prompt_len {
                                 prefill_toks += 1;
+                            }
+                            // mid-prompt chunk of a chunked prefill: the
+                            // window seeded its K/V rows; the argmax is
+                            // only meaningful once the final chunk covers
+                            // the last prompt position, so earlier chunks
+                            // discard it and emit nothing — TTFT keeps
+                            // running until the last chunk's token
+                            if row.phase == Phase::Chunk {
+                                let end = row.chunk_start + row.chunk_len;
+                                if end < sess.prompt_len {
+                                    sess.last_at = now;
+                                    staged.push((
+                                        row.id,
+                                        toks,
+                                        sess.max_new,
+                                        sess.arrived,
+                                        row.adopted,
+                                        ContKind::Chunk {
+                                            start: end,
+                                            retain: row.retain,
+                                        },
+                                    ));
+                                    continue;
+                                }
+                                // final chunk: fall through — its argmax at
+                                // the prompt boundary is the first token
                             }
                             // prompt-stepping row of a prefix-cache hit:
                             // every position before the last prompt token
@@ -1296,7 +1408,7 @@ fn collector_loop(
                                     sess.max_new,
                                     sess.arrived,
                                     row.adopted,
-                                    true,
+                                    ContKind::Stepping,
                                 ));
                                 continue;
                             }
@@ -1351,7 +1463,7 @@ fn collector_loop(
                                     remaining,
                                     sess.arrived,
                                     row.adopted,
-                                    false,
+                                    ContKind::Generate,
                                 ));
                             }
                         }
@@ -1380,21 +1492,27 @@ fn collector_loop(
                     // context) outside every lock
                     let continuations: Vec<(Request, Instant)> = staged
                         .into_iter()
-                        .map(|(id, toks, remaining, arrived, adopted, stepping)| {
-                            let req = if stepping {
+                        .map(|(id, toks, remaining, arrived, adopted, kind)| {
+                            let req = match kind {
                                 // mid-prompt step of a prefix hit: always a
                                 // plain decode — a verify window would treat
                                 // committed prompt tokens as sampled output
-                                Request::decode(id, toks)
-                            } else {
-                                continuation_request(
+                                ContKind::Stepping => Request::decode(id, toks),
+                                ContKind::Generate => continuation_request(
                                     shared.spec.as_ref(),
                                     shared.kv_on,
                                     id,
                                     toks,
                                     remaining,
                                     max_seq,
-                                )
+                                ),
+                                ContKind::Chunk { start, retain } => chunk_continuation_request(
+                                    &shared.chunk_ks,
+                                    id,
+                                    toks,
+                                    start,
+                                    retain,
+                                ),
                             }
                             .with_adopted(adopted);
                             (req, arrived)
@@ -1402,6 +1520,9 @@ fn collector_loop(
                         .collect();
                     if !continuations.is_empty() || !released.is_empty() || !cancelled.is_empty() {
                         let mut b = batcher.lock().unwrap();
+                        // drop unfinished chunked registrations before
+                        // tier_free could mark their partial entries ready
+                        b.prefix_drop(&dropped_prefixes);
                         // tier model: freed sessions credit their blocks
                         // (freed capacity may admit a deferred prefill)
                         b.tier_free(&released);
@@ -1488,6 +1609,52 @@ fn continuation_request(
         }
     }
     Request::decode(id, toks)
+}
+
+/// How an unfinished session re-enters the queue.
+enum ContKind {
+    /// mid-prompt step of a prefix-cache hit — stays a plain decode
+    Stepping,
+    /// normal generation continuation (decode, or a drafted verify
+    /// window when one fits)
+    Generate,
+    /// next window of a chunked prefill, starting at `start` with the
+    /// session's registered retention boundary threaded through
+    Chunk { start: usize, retain: usize },
+}
+
+/// Build the continuation step for a chunked prefill whose next window
+/// starts at `start`. Picks the largest compiled chunk window that fits
+/// the remaining prompt; when none fits (tail shorter than the smallest
+/// compiled k, only possible at `remaining == 1`) the session falls back
+/// to prompt-stepping decode over the seeded prefix — the argmax at the
+/// prompt's last position is the first real token either way.
+fn chunk_continuation_request(
+    chunk_ks: &[usize],
+    id: u64,
+    toks: Vec<i32>,
+    start: usize,
+    retain: usize,
+) -> Request {
+    let remaining = toks.len() - start;
+    match chunk_ks.iter().rev().copied().find(|&k| k <= remaining) {
+        Some(k) => {
+            let mut r = Request::chunk(id, toks, start, k);
+            r.retain = retain;
+            r
+        }
+        None => {
+            let mut r = Request::decode(id, toks[..start + 1].to_vec());
+            // materialize the retention only if this very step crosses
+            // the boundary (provably dead — retain never exceeds the
+            // last full block below the prompt end — but kept so the
+            // invariant is local, not an action at a distance)
+            if retain > 0 && start + 1 == retain {
+                r.retain = retain;
+            }
+            r
+        }
+    }
 }
 
 /// Drain the cancellation inbox (former tick). For every cancelled id:
@@ -1850,6 +2017,9 @@ mod tests {
             ticks: AtomicU64::new(0),
             kv_on: true,
             spec: None,
+            chunk_ks: Vec::new(),
+            prefill_inflight: AtomicUsize::new(0),
+            decode_stall_us: AtomicU64::new(0),
             cancels: Arc::new(Mutex::new(Vec::new())),
             doomed: Mutex::new(HashSet::new()),
         }
@@ -2153,5 +2323,26 @@ mod tests {
         assert_eq!(r.phase, Phase::Decode);
         let r = continuation_request(None, false, 7, vec![1], 10, 32);
         assert_eq!(r.phase, Phase::Prefill);
+    }
+
+    #[test]
+    fn chunk_continuation_picks_windows_and_falls_back_to_stepping() {
+        let ks = vec![2usize, 4];
+        let toks: Vec<i32> = (0..11).collect();
+        // 4 seeded of 11: remaining 7 -> largest window 4, retain rides along
+        let r = chunk_continuation_request(&ks, 9, toks.clone(), 4, 8);
+        assert_eq!(r.phase, Phase::Chunk);
+        assert_eq!((r.chunk_start, r.chunk_len, r.retain), (4, 4, 8));
+        assert_eq!(r.window(), 4);
+        assert_eq!(r.cache_len(), 11);
+        // 8 seeded: remaining 3 -> window 2 fits
+        let r = chunk_continuation_request(&ks, 9, toks.clone(), 8, 8);
+        assert_eq!((r.chunk_start, r.chunk_len), (8, 2));
+        // 10 seeded: remaining 1, no k fits -> prompt-stepping decode over
+        // the seeded prefix; tokens truncate to the next unseeded position
+        let r = chunk_continuation_request(&ks, 9, toks, 10, 8);
+        assert_eq!(r.phase, Phase::Decode);
+        assert_eq!(r.tokens.len(), 11);
+        assert_eq!(r.retain, 0, "boundary already crossed by an earlier chunk");
     }
 }

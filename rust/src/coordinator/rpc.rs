@@ -20,13 +20,19 @@ use std::time::Instant;
 /// prefill runs the whole padded prompt through the layers; a decode runs
 /// a single position against each session's paged K/V cache; a verify
 /// runs a k-token drafted window against the cache in one pass
-/// (speculative decode) and commits the longest accepted prefix.
+/// (speculative decode) and commits the longest accepted prefix; a chunk
+/// runs a k-token *prompt window* against the cache (chunked prefill),
+/// seeding the session's K/V incrementally so long prompts never occupy a
+/// monolithic prefill bucket — each chunk row carries
+/// `(session, chunk_start, chunk_len)` via the request metadata and the
+/// window attends over the already-seeded prefix.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub enum Phase {
     #[default]
     Prefill,
     Decode,
     Verify,
+    Chunk,
 }
 
 /// A batched inference task, as published to workers.

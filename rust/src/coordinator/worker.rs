@@ -288,6 +288,9 @@ impl Worker {
         if input.phase == Phase::Verify {
             return self.execute_verify(uid, input);
         }
+        if input.phase == Phase::Chunk {
+            return self.execute_chunk(uid, input);
+        }
         let (b, s) = (input.batch, input.seq);
         let h = self.ctx.cfg.hidden;
         let valid = valid_len_arg(&input.valid_lens);
@@ -421,6 +424,9 @@ impl Worker {
             self.provider.release(local);
         }
         self.kv_advance(input);
+        // a chunked registrant whose suffix degenerated to stepping decode
+        // retains on the step that crosses its retention boundary
+        self.kv_retain(input);
 
         // ---- hand off or reply --------------------------------------------
         if !self.ctx.is_last_stage() {
@@ -546,6 +552,94 @@ impl Worker {
             return Ok(None);
         }
         Ok(Some(BatchOutput { uid, next_tokens, logits, accepted }))
+    }
+
+    /// One chunked-prefill engine step: embed a k-token window of the
+    /// prompt at positions `chunk_start ..`, run every local layer as a
+    /// windowed attention over the session's already-seeded prefix
+    /// (appending the window's K/V rows), and advance the cache to the
+    /// window end. The kernels are the verify family — a chunk window *is*
+    /// a verify window whose "draft" happens to be real prompt tokens —
+    /// so no new executables exist for this path; only the collector's
+    /// interpretation differs (mid-prompt argmaxes are discarded, the
+    /// final chunk's argmax is the first generated token, byte-identical
+    /// to what a monolithic prefill's prompt-end logits produce).
+    ///
+    /// Unlike verify there is no acceptance pass and no cache truncation,
+    /// so chunked prefill runs under any pp: stages just hand the
+    /// activation down and the last stage replies.
+    fn execute_chunk(
+        &mut self,
+        uid: u64,
+        input: &BatchInput,
+    ) -> anyhow::Result<Option<BatchOutput>> {
+        anyhow::ensure!(self.kv.is_some(), "chunk batch {uid} but the KV cache is disabled");
+        let k = input.seq;
+        anyhow::ensure!(k >= 2, "chunk batch {uid} has window {k}");
+        // a prefix hit's first chunk seeds its session from the registry
+        self.kv_adopt(input);
+        let valid = valid_len_arg(&input.valid_lens);
+
+        // ---- acquire the stage input ------------------------------------
+        let mut x = if self.ctx.is_first_stage() {
+            let v = self.variant("embed_verify", input, 0)?;
+            if self.embed_lits.is_none() {
+                let w = self.embed_weights.as_ref().expect("stage 0 has embed weights");
+                self.embed_lits = Some(crate::runtime::pjrt::prepare(w)?);
+            }
+            // base position of each row's window: valid_len - k, i.e. the
+            // row's chunk_start (pads clamp to 0)
+            let pos: Vec<i32> =
+                input.valid_lens.iter().map(|&l| (l.max(k) - k) as i32).collect();
+            let acts = [Value::I32(input.ids.clone()), Value::I32(IntTensor::from_vec(pos))];
+            self.device
+                .execute_prepared(&self.manifest, &v, &acts, self.embed_lits.as_ref().unwrap())?
+                .remove(0)
+        } else {
+            let prev = self.ctx.par.device_of(self.ctx.stage - 1, self.ctx.tp_rank);
+            let (got_uid, t) = self.act_ep.recv(prev);
+            if self.ctx.consistency {
+                anyhow::ensure!(
+                    got_uid == uid,
+                    "stage {} received activation for batch {got_uid}, expected {uid}",
+                    self.ctx.stage
+                );
+            }
+            t
+        };
+
+        // ---- run my layers ----------------------------------------------
+        let first = self.ctx.layers.start;
+        self.provider.prefetch(0);
+        for layer in self.ctx.layers.clone() {
+            let local = layer - first;
+            for ahead in 1..=self.ctx.lookahead.max(1) {
+                self.provider.prefetch(local + ahead);
+            }
+            x = self.run_layer_cached(local, x, &valid, input, k)?;
+            self.provider.release(local);
+        }
+        self.kv_advance(input);
+        // a registrant's retention lands on the chunk whose window crosses
+        // the boundary (the batcher materializes retain only on that step)
+        self.kv_retain(input);
+
+        // ---- hand off or reply --------------------------------------------
+        if !self.ctx.is_last_stage() {
+            let next = self.ctx.par.device_of(self.ctx.stage + 1, self.ctx.tp_rank);
+            self.act_ep.send(next, (uid, x));
+            return Ok(None);
+        }
+        if !self.ctx.is_replier() {
+            return Ok(None);
+        }
+        // (b, k, v) logits: valid (= chunk end, >= k) clamps to the last
+        // window row — the model's prediction for the position after this
+        // chunk. Mid-prompt the collector discards it; on the final chunk
+        // it is the stream's first token.
+        let logits = self.run_logits(x, input)?;
+        let next_tokens = argmax_next_tokens(&logits, &input.valid_lens);
+        Ok(Some(BatchOutput { uid, next_tokens, logits, accepted: Vec::new() }))
     }
 
     /// Append each real row's new K/V rows (shape (b, window, w)) at

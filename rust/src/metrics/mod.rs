@@ -68,6 +68,11 @@ pub struct Recorder {
     /// Sessions admitted with a clamped token budget (graceful
     /// degradation under SLO pressure instead of a `busy` reply).
     degraded: u64,
+    /// Cumulative µs decode/verify batches spent waiting behind
+    /// in-flight prompt work (prefills or prefill chunks) at dispatch —
+    /// the head-of-line blocking chunked prefill exists to bound.
+    /// Folded from the engine on every `metrics_snapshot`.
+    decode_stall_us: u64,
     /// TTFT SLO target in µs (0 = untracked).
     slo_ttft_us: u64,
     /// Per-token (TPOT) SLO target in µs (0 = untracked).
@@ -114,6 +119,7 @@ impl Recorder {
             shed: 0,
             cancelled: 0,
             degraded: 0,
+            decode_stall_us: 0,
             slo_ttft_us: 0,
             slo_tpot_us: 0,
             slo_window: VecDeque::new(),
@@ -393,6 +399,25 @@ impl Recorder {
         Self::pct_of(&self.tok_lat_us, p)
     }
 
+    /// Worst observed per-token decode latency — the TPOT spike bounded
+    /// by chunked prefill.
+    pub fn token_max(&self) -> Option<Duration> {
+        self.tok_lat_us.iter().max().map(|&us| Duration::from_micros(us))
+    }
+
+    /// Fold the engine's cumulative decode-stall counter in (the engine
+    /// does this on every `metrics_snapshot` from its dispatcher-side
+    /// atomic).
+    pub fn record_decode_stall(&mut self, us: u64) {
+        self.decode_stall_us = us;
+    }
+
+    /// Cumulative time decode/verify batches waited behind in-flight
+    /// prompt work at dispatch.
+    pub fn decode_stall(&self) -> Duration {
+        Duration::from_micros(self.decode_stall_us)
+    }
+
     pub fn p50(&self) -> Option<Duration> {
         self.percentile(0.50)
     }
@@ -450,7 +475,8 @@ impl Recorder {
         );
         if self.tokens_done > 0 {
             s.push_str(&format!(
-                "; gen {} toks {:.1} tok/s occupancy {:.2}; ttft p50 {} p99 {}; tok p50 {} p99 {}",
+                "; gen {} toks {:.1} tok/s occupancy {:.2}; ttft p50 {} p99 {}; \
+                 tok p50 {} p99 {} p99.9 {} max {}",
                 self.tokens_done,
                 self.tokens_per_sec(),
                 self.mean_occupancy(),
@@ -458,6 +484,14 @@ impl Recorder {
                 fmt_opt(self.ttft_percentile(0.99)),
                 fmt_opt(self.token_percentile(0.50)),
                 fmt_opt(self.token_percentile(0.99)),
+                fmt_opt(self.token_percentile(0.999)),
+                fmt_opt(self.token_max()),
+            ));
+        }
+        if self.decode_stall_us > 0 {
+            s.push_str(&format!(
+                "; decode stall {}ms behind prompt work",
+                self.decode_stall_us / 1000,
             ));
         }
         if self.spec_passes > 0 {
@@ -719,9 +753,37 @@ mod tests {
         assert_eq!(r.ttft_percentile(0.5).unwrap(), Duration::from_millis(8));
         assert_eq!(r.token_percentile(0.5).unwrap(), Duration::from_millis(3));
         assert!(r.token_percentile(0.5).unwrap() <= r.token_percentile(0.99).unwrap());
+        assert!(r.token_percentile(0.99).unwrap() <= r.token_percentile(0.999).unwrap());
+        assert_eq!(r.token_max().unwrap(), Duration::from_millis(4));
         let s = r.summary();
         assert!(s.contains("ttft p50"), "{s}");
         assert!(s.contains("tok p50"), "{s}");
+        assert!(s.contains("p99.9"), "{s}");
+        assert!(s.contains("max 4ms"), "{s}");
+    }
+
+    #[test]
+    fn tpot_tail_and_decode_stall_surface() {
+        let mut r = Recorder::new();
+        assert!(r.token_max().is_none());
+        assert_eq!(r.decode_stall(), Duration::ZERO);
+        assert!(!r.summary().contains("decode stall"), "{}", r.summary());
+        // a tail spike dominates max and p99.9 but not the median
+        for _ in 0..99 {
+            r.record_decode_token(Duration::from_millis(2));
+        }
+        r.record_decode_token(Duration::from_millis(80));
+        assert_eq!(r.token_percentile(0.50).unwrap(), Duration::from_millis(2));
+        assert_eq!(r.token_percentile(0.999).unwrap(), Duration::from_millis(80));
+        assert_eq!(r.token_max().unwrap(), Duration::from_millis(80));
+        // the stall fold is set-style: the engine hands over its
+        // cumulative atomic, a re-fold overwrites rather than adds
+        r.record_decode_stall(4_200);
+        r.record_decode_stall(5_000);
+        assert_eq!(r.decode_stall(), Duration::from_micros(5_000));
+        let s = r.summary();
+        assert!(s.contains("max 80ms"), "{s}");
+        assert!(s.contains("decode stall 5ms behind prompt work"), "{s}");
     }
 
     #[test]

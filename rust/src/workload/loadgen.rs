@@ -67,6 +67,12 @@ pub struct SaturationScenario {
     /// Tokens per template. Multiples of the engine's K/V block size make
     /// whole-block prefix reuse likely; any length is legal.
     pub template_tokens: usize,
+    /// Heavy-tail mix: fraction of fresh prompts stretched into long
+    /// prompts (0 = off — plans are then byte-identical to a scenario
+    /// without the knob).
+    pub long_prompt_pct: f64,
+    /// Extra tail tokens appended to a stretched prompt.
+    pub long_prompt_tokens: usize,
 }
 
 impl SaturationScenario {
@@ -87,6 +93,8 @@ impl SaturationScenario {
             templates: 0,
             template_pct: 0.0,
             template_tokens: 0,
+            long_prompt_pct: 0.0,
+            long_prompt_tokens: 0,
         }
     }
 
@@ -109,6 +117,19 @@ impl SaturationScenario {
         self
     }
 
+    /// Mixed traffic: `pct` of fresh prompts grow a `tokens`-long tail —
+    /// the heavy-tail shape whose monolithic prefills starve concurrent
+    /// decodes (the chunked-prefill differential lever). Tail bytes ride
+    /// their own forked RNG stream (7, after every earlier stream) and
+    /// both draws happen unconditionally, so `pct` flips *which* turns
+    /// are long without moving any suffix, gap, budget, chaos flag,
+    /// template choice, backoff seed, or kill offset.
+    pub fn with_long_prompts(mut self, pct: f64, tokens: usize) -> Self {
+        self.long_prompt_pct = pct;
+        self.long_prompt_tokens = tokens;
+        self
+    }
+
     /// Materialize the per-client plans. Deterministic in `seed`; the
     /// chaos stream is forked separately and *always drawn*, so changing
     /// `disconnect_pct` flips disconnect flags without perturbing any
@@ -124,6 +145,10 @@ impl SaturationScenario {
         // busy-retry jitter rides its own stream so backing off never
         // perturbs prompts, gaps, budgets, or chaos flags
         let mut backoff = root.fork(5);
+        // long-prompt tails ride stream 7 (6 is the kill schedule's,
+        // drawn off its own root replay) — forked last, so the knob's
+        // existence perturbs nothing older
+        let mut longp = root.fork(7);
         let templates: Vec<Vec<i32>> = (0..self.templates)
             .map(|_| {
                 (0..self.template_tokens)
@@ -137,6 +162,7 @@ impl SaturationScenario {
                 let mut arrivals = arrivals.fork(client as u64);
                 let mut chaos = chaos.fork(client as u64);
                 let mut tmpl = tmpl.fork(client as u64);
+                let mut longp = longp.fork(client as u64);
                 let turns = (0..self.turns)
                     .map(|_| {
                         let plen = self.prompt_dist.sample(&mut content);
@@ -156,6 +182,22 @@ impl SaturationScenario {
                         if let Some(idx) = template {
                             fresh_prompt.splice(0..0, templates[idx].iter().copied());
                         }
+                        // both long-prompt draws happen unconditionally
+                        // (like chaos and templates) so the pct knob flips
+                        // which turns are long without moving anything
+                        let long = if self.long_prompt_tokens > 0 {
+                            let roll = longp.next_f64();
+                            let tail: Vec<i32> = (0..self.long_prompt_tokens)
+                                .map(|_| (longp.next_below(self.vocab as u64 - 1) + 1) as i32)
+                                .collect();
+                            let long = roll < self.long_prompt_pct;
+                            if long {
+                                fresh_prompt.extend_from_slice(&tail);
+                            }
+                            long
+                        } else {
+                            false
+                        };
                         let followup = (0..self.followup_tokens)
                             .map(|_| (content.next_below(self.vocab as u64 - 1) + 1) as i32)
                             .collect();
@@ -174,6 +216,7 @@ impl SaturationScenario {
                             delay,
                             disconnect_after,
                             template,
+                            long,
                         }
                     })
                     .collect();
@@ -251,6 +294,9 @@ pub struct TurnPlan {
     /// Which shared template (if any) this turn's fresh prompt starts
     /// with — `fresh_prompt` already includes it.
     pub template: Option<usize>,
+    /// Whether the heavy-tail knob stretched this turn's fresh prompt —
+    /// `fresh_prompt` already includes the tail.
+    pub long: bool,
 }
 
 /// How one turn ended.
@@ -695,6 +741,64 @@ mod tests {
             }
         }
         assert!(templated > 0, "50% over 18 turns should template at least one");
+    }
+
+    /// The chunked-prefill differential lever: the heavy-tail knob must
+    /// stretch only the flagged prompts and leave every other draw —
+    /// suffixes, gaps, budgets, chaos flags, template choices — exactly
+    /// where the un-stretched scenario put it.
+    #[test]
+    fn long_prompts_stretch_only_flagged_turns() {
+        let base = scenario(0.25).plan();
+        // pct 0 with the knob configured: the stream exists and draws,
+        // but no prompt moves — byte-identical to the base plan
+        let off = scenario(0.25).with_long_prompts(0.0, 32).plan();
+        for (pb, po) in base.iter().zip(&off) {
+            for (tb, to) in pb.turns.iter().zip(&po.turns) {
+                assert!(!to.long);
+                assert_eq!(tb.fresh_prompt, to.fresh_prompt);
+            }
+        }
+        // pct 1.0: every fresh prompt grows the same-length tail; all
+        // other fields stay put
+        let all = scenario(0.25).with_long_prompts(1.0, 32).plan();
+        for (pb, pa) in base.iter().zip(&all) {
+            for (tb, ta) in pb.turns.iter().zip(&pa.turns) {
+                assert!(ta.long);
+                assert_eq!(ta.fresh_prompt.len(), tb.fresh_prompt.len() + 32);
+                assert_eq!(&ta.fresh_prompt[..tb.fresh_prompt.len()], &tb.fresh_prompt[..]);
+                assert_eq!(tb.followup, ta.followup);
+                assert_eq!(tb.new_tokens, ta.new_tokens);
+                assert_eq!(tb.delay, ta.delay);
+                assert_eq!(tb.disconnect_after, ta.disconnect_after);
+            }
+        }
+        // a partial mix: flagged turns match the pct-1.0 stretch, the
+        // rest match the base — the pct only flips which turns are long
+        let half = scenario(0.25).with_long_prompts(0.5, 32).plan();
+        let mut long_turns = 0;
+        for ((pb, pa), ph) in base.iter().zip(&all).zip(&half) {
+            for ((tb, ta), th) in pb.turns.iter().zip(&pa.turns).zip(&ph.turns) {
+                if th.long {
+                    long_turns += 1;
+                    assert_eq!(th.fresh_prompt, ta.fresh_prompt);
+                } else {
+                    assert_eq!(th.fresh_prompt, tb.fresh_prompt);
+                }
+            }
+        }
+        assert!(long_turns > 0, "50% over 18 turns should stretch at least one");
+        // composes with templates: the shared prefix stays at the front,
+        // the tail goes on the end
+        let both = scenario(0.25).with_templates(2, 1.0, 8).with_long_prompts(1.0, 32).plan();
+        let tmpl_only = scenario(0.25).with_templates(2, 1.0, 8).plan();
+        for (pt, pb) in tmpl_only.iter().zip(&both) {
+            for (tt, tb) in pt.turns.iter().zip(&pb.turns) {
+                assert_eq!(tt.template, tb.template);
+                assert_eq!(&tb.fresh_prompt[..tt.fresh_prompt.len()], &tt.fresh_prompt[..]);
+                assert_eq!(tb.fresh_prompt.len(), tt.fresh_prompt.len() + 32);
+            }
+        }
     }
 
     /// Backoff seeds ride stream 5 — they exist, differ per client, and

@@ -1,0 +1,326 @@
+//! Chunked prefill co-scheduled with decode, differentially.
+//!
+//! Splitting a long prompt's prefill into fixed-size chunk waves that
+//! seed the paged K/V cache incrementally must be invisible in every
+//! token stream: the final chunk's argmax at the prompt boundary is the
+//! same first token the monolithic prefill computes, and everything
+//! after it is plain incremental decode. The suite pins that byte-parity
+//! at tp=1 and tp=2, with the prefix cache on and off, with the spill
+//! tier on, and across the failure paths (cancel mid-chunk, watchdog
+//! poisoning mid-chunk) — with zero block leaks on both tiers.
+//!
+//! Every test skips cleanly when the AOT artifacts are absent (the same
+//! condition under which an `Engine` cannot launch at all), so the suite
+//! never *adds* failures on an artifact-less checkout.
+
+use energonai::coordinator::engine::{Engine, GenRef, GenRequest, LaunchConfig};
+use energonai::memory::kvcache;
+use energonai::runtime::{find_artifacts, Manifest};
+use std::sync::Mutex;
+
+/// Serializes every test in this binary: several assert on the
+/// process-wide kvcache gauges, so no other engine may run concurrently.
+static STATS_LOCK: Mutex<()> = Mutex::new(());
+
+fn stats_guard() -> std::sync::MutexGuard<'static, ()> {
+    STATS_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Chunk windows reuse the verify kernel family, so chunked prefill
+/// needs the decode + kv-prefill + verify artifacts for (tiny, tp).
+fn artifacts_ready(tp: usize) -> bool {
+    let dir = match find_artifacts() {
+        Ok(d) => d,
+        Err(_) => {
+            eprintln!("skipping: no AOT artifacts (run `make artifacts`)");
+            return false;
+        }
+    };
+    let man = match Manifest::cached(dir) {
+        Ok(m) => m,
+        Err(_) => return false,
+    };
+    let ok = !man.decode_widths("tiny", tp).is_empty()
+        && man.has_kv_prefill("tiny", tp)
+        && !man.verify_points("tiny", tp).is_empty();
+    if !ok {
+        eprintln!("skipping: decode/verify artifacts missing for tiny/tp{tp}");
+    }
+    ok
+}
+
+/// Chunk window 4 over the tiny preset's compiled verify ks {2, 4}.
+const CHUNK: usize = 4;
+
+fn launch_chunked(tp: usize) -> Engine {
+    Engine::launch(
+        LaunchConfig::preset("tiny").with_parallel(tp, 1).with_prefill_chunk(CHUNK, 1),
+    )
+    .unwrap()
+}
+
+fn launch_monolithic(tp: usize) -> Engine {
+    Engine::launch(LaunchConfig::preset("tiny").with_parallel(tp, 1)).unwrap()
+}
+
+/// Mixed traffic: prompts long enough that chunking engages (several
+/// chunk waves each, some with a stepping-decode tail) interleaved with
+/// short prompts that stay monolithic even with the knob on.
+fn mixed_prompts(n: usize) -> Vec<Vec<i32>> {
+    (0..n)
+        .map(|i| {
+            let len = if i % 3 == 0 { 2 + (i * 3) % 5 } else { 10 + (i * 7) % 17 };
+            (0..len).map(|j| ((i * 31 + j * 7) % 100 + 1) as i32).collect()
+        })
+        .collect()
+}
+
+/// The acceptance bar: with chunking on, mixed long/short traffic emits
+/// byte-identical token streams to the monolithic engine — sequentially
+/// and concurrently — while actually taking the chunked path.
+fn assert_parity(tp: usize) {
+    if !artifacts_ready(tp) {
+        return;
+    }
+    let _guard = stats_guard();
+    let ps = mixed_prompts(8);
+    let mono = launch_monolithic(tp);
+    assert!(!mono.chunked_prefill_on(), "prefill_chunk defaults to 0 = off");
+    let expect: Vec<Vec<i32>> =
+        ps.iter().map(|p| mono.generate(p.clone(), 8).unwrap()).collect();
+    mono.shutdown();
+
+    let before = kvcache::global_stats();
+    let on = launch_chunked(tp);
+    assert!(on.chunked_prefill_on(), "verify artifacts live but chunking not on");
+    assert_eq!(on.chunk_ks(), vec![2, 4], "tiny compiles verify ks 2 and 4");
+    // sequential: each long prompt runs its chunk waves alone
+    let got: Vec<Vec<i32>> = ps.iter().map(|p| on.generate(p.clone(), 8).unwrap()).collect();
+    assert_eq!(got, expect, "chunked prefill diverged (sequential, tp={tp})");
+    // concurrent: chunk waves, stepping tails, short monolithic prefills
+    // and decode buckets coalesce through one queue
+    let grefs: Vec<GenRef> = ps
+        .iter()
+        .map(|p| on.generate_stream(GenRequest::new(p.clone(), 8)).unwrap())
+        .collect();
+    let got: Vec<Vec<i32>> = grefs.iter().map(|g| g.to_here().unwrap()).collect();
+    assert_eq!(got, expect, "chunked prefill diverged (concurrent, tp={tp})");
+    on.shutdown();
+    let after = kvcache::global_stats();
+    assert_eq!(
+        after.blocks_in_use, before.blocks_in_use,
+        "chunked prefill leaked blocks across shutdown (tp={tp})"
+    );
+    assert_eq!(after.double_free, before.double_free, "a chunked session was freed twice");
+}
+
+#[test]
+fn chunked_matches_monolithic_byte_identically_tp1() {
+    assert_parity(1);
+}
+
+#[test]
+fn chunked_matches_monolithic_byte_identically_tp2() {
+    assert_parity(2);
+}
+
+/// `prefill_chunk = 0` (the default) must leave the monolithic path
+/// byte-identical — the knob's off position is the old engine.
+#[test]
+fn chunk_knob_off_is_the_monolithic_engine() {
+    if !artifacts_ready(1) {
+        return;
+    }
+    let _guard = stats_guard();
+    let ps = mixed_prompts(4);
+    let a = launch_monolithic(1);
+    assert!(!a.chunked_prefill_on());
+    assert!(a.chunk_ks().is_empty());
+    let ea: Vec<Vec<i32>> = ps.iter().map(|p| a.generate(p.clone(), 6).unwrap()).collect();
+    a.shutdown();
+    let b = Engine::launch(LaunchConfig::preset("tiny").with_prefill_chunk(0, 1)).unwrap();
+    assert!(!b.chunked_prefill_on(), "an explicit 0 must also stay off");
+    let eb: Vec<Vec<i32>> = ps.iter().map(|p| b.generate(p.clone(), 6).unwrap()).collect();
+    b.shutdown();
+    assert_eq!(ea, eb);
+}
+
+/// Chunked prefill composes with shared-prefix reuse: a chunked
+/// registrant's trie entry only goes ready once its crossing chunk has
+/// seeded the retained positions, and adopters (whose unmatched suffix
+/// may itself be chunked) still stream byte-identically.
+#[test]
+fn chunking_composes_with_prefix_reuse() {
+    if !artifacts_ready(1) {
+        return;
+    }
+    let _guard = stats_guard();
+    // a 16-token (2-block) shared template + distinct long suffixes, so
+    // the registrant chunks its prefill AND later admissions adopt it
+    let template: Vec<i32> = (0..16).map(|i| ((i * 13) % 100 + 1) as i32).collect();
+    let ps: Vec<Vec<i32>> = (0..6)
+        .map(|i| {
+            let mut p = template.clone();
+            let len = 5 + (i * 3) % 7;
+            p.extend((0..len).map(|j| ((i * 31 + j * 7) % 100 + 1) as i32));
+            p
+        })
+        .collect();
+    let off = launch_monolithic(1);
+    let expect: Vec<Vec<i32>> =
+        ps.iter().map(|p| off.generate(p.clone(), 8).unwrap()).collect();
+    off.shutdown();
+
+    let before = kvcache::global_stats();
+    let on = Engine::launch(
+        LaunchConfig::preset("tiny").with_prefix_cache(true).with_prefill_chunk(CHUNK, 1),
+    )
+    .unwrap();
+    assert!(on.prefix_cache_on() && on.chunked_prefill_on());
+    let got: Vec<Vec<i32>> = ps.iter().map(|p| on.generate(p.clone(), 8).unwrap()).collect();
+    assert_eq!(got, expect, "chunking + prefix reuse diverged (sequential)");
+    let m = on.metrics_snapshot();
+    let (hits, misses) = m.prefix_hit_counts();
+    assert!(hits > 0, "templated traffic never hit the trie under chunking");
+    assert!(misses >= 1, "the donor admission must have missed");
+    let grefs: Vec<GenRef> = ps
+        .iter()
+        .map(|p| on.generate_stream(GenRequest::new(p.clone(), 8)).unwrap())
+        .collect();
+    let got: Vec<Vec<i32>> = grefs.iter().map(|g| g.to_here().unwrap()).collect();
+    assert_eq!(got, expect, "chunking + prefix reuse diverged (concurrent)");
+    on.shutdown();
+    let after = kvcache::global_stats();
+    assert_eq!(after.blocks_in_use, before.blocks_in_use, "shared chunked blocks leaked");
+    assert_eq!(after.double_free, before.double_free);
+}
+
+/// Chunked prefill over the tiered cache: the admission gate charges the
+/// *final* cache length up front, so a chunked session never outgrows
+/// its device reservation mid-wave — streams stay byte-identical and
+/// both tiers drain to zero.
+#[test]
+fn chunking_with_spill_tier_stays_exact_and_leaks_nothing() {
+    if !artifacts_ready(1) {
+        return;
+    }
+    let _guard = stats_guard();
+    let ps = mixed_prompts(12);
+    let resident = launch_monolithic(1);
+    let expect: Vec<Vec<i32>> =
+        ps.iter().map(|p| resident.generate(p.clone(), 6).unwrap()).collect();
+    resident.shutdown();
+
+    let before = kvcache::global_stats();
+    let mut lc = LaunchConfig::preset("tiny").with_kv_spill(10, 0).with_prefill_chunk(CHUNK, 1);
+    lc.engine.pool_threads = 2;
+    let engine = Engine::launch(lc).unwrap();
+    assert!(engine.kv_spill_on() && engine.chunked_prefill_on());
+    let grefs: Vec<GenRef> = ps
+        .iter()
+        .map(|p| engine.generate_stream(GenRequest::new(p.clone(), 6)).unwrap())
+        .collect();
+    let got: Vec<Vec<i32>> = grefs.iter().map(|g| g.to_here().unwrap()).collect();
+    assert_eq!(got, expect, "chunked prefill over the spill tier diverged");
+    let stats = engine.metrics_snapshot().kvcache_stats();
+    assert_eq!(
+        stats.gather_spilled, before.gather_spilled,
+        "a chunk wave dispatched against a spilled session"
+    );
+    engine.shutdown();
+    let after = kvcache::global_stats();
+    assert_eq!(after.blocks_in_use, before.blocks_in_use, "device blocks leaked");
+    assert_eq!(after.host_bytes, before.host_bytes, "host tier leaked");
+    assert_eq!(after.double_free, before.double_free);
+}
+
+/// A cancellation wave over long prompts lands while sessions are
+/// mid-chunk (queued continuations and in-flight waves alike): survivors
+/// must stream byte-identically and every partially-seeded session's
+/// blocks must come back.
+#[test]
+fn cancel_mid_chunk_leaks_nothing_and_spares_survivors() {
+    if !artifacts_ready(1) {
+        return;
+    }
+    let _guard = stats_guard();
+    let ps = mixed_prompts(16);
+
+    let control = launch_monolithic(1);
+    let expect: Vec<Vec<i32>> = ps
+        .iter()
+        .step_by(2)
+        .map(|p| control.generate(p.clone(), 6).unwrap())
+        .collect();
+    control.shutdown();
+
+    let before = kvcache::global_stats();
+    let engine = launch_chunked(1);
+    let grefs: Vec<GenRef> = ps
+        .iter()
+        .map(|p| engine.generate_stream(GenRequest::new(p.clone(), 6)).unwrap())
+        .collect();
+    // hang up every odd client immediately — long prompts are still in
+    // (or queued between) their chunk waves
+    for g in grefs.iter().skip(1).step_by(2) {
+        g.cancel();
+    }
+    let survivors: Vec<Vec<i32>> =
+        grefs.iter().step_by(2).map(|g| g.to_here().unwrap()).collect();
+    assert_eq!(survivors, expect, "a cancelled mid-chunk session changed a survivor");
+    for g in grefs.iter().skip(1).step_by(2) {
+        let _ = g.to_here(); // cancelled or raced-to-done; both fine
+    }
+    engine.shutdown();
+    let after = kvcache::global_stats();
+    assert_eq!(after.blocks_in_use, before.blocks_in_use, "cancel mid-chunk leaked blocks");
+    assert_eq!(after.host_bytes, before.host_bytes);
+    assert_eq!(after.double_free, before.double_free, "a chunked session was freed twice");
+}
+
+/// Drop faults orphan chunk waves in flight: the watchdog must poison
+/// them at its deadline (streams fail rather than hang), survivors keep
+/// their exact bytes, and the drain still returns every block.
+#[test]
+fn watchdog_mid_chunk_poisons_and_drains() {
+    if !artifacts_ready(1) {
+        return;
+    }
+    let _guard = stats_guard();
+    let ps = mixed_prompts(10);
+    let control = launch_monolithic(1);
+    let expect: Vec<Vec<i32>> =
+        ps.iter().map(|p| control.generate(p.clone(), 4).unwrap()).collect();
+    control.shutdown();
+
+    let before = kvcache::global_stats();
+    let mut lc = LaunchConfig::preset("tiny")
+        .with_prefill_chunk(CHUNK, 1)
+        .with_faults("drop@every5+2@w0", 7);
+    lc.engine.batch_deadline_ms = 100;
+    let engine = Engine::launch(lc).unwrap();
+    let grefs: Vec<GenRef> = ps
+        .iter()
+        .map(|p| engine.generate_stream(GenRequest::new(p.clone(), 4)).unwrap())
+        .collect();
+    let mut poisoned = 0;
+    for (g, expected) in grefs.iter().zip(&expect) {
+        match g.to_here() {
+            Ok(stream) => {
+                assert_eq!(&stream, expected, "a survivor of the drop plan diverged");
+            }
+            Err(e) => {
+                assert!(
+                    e.to_string().contains("watchdog deadline"),
+                    "unexpected error under drop plan: {e:#}"
+                );
+                poisoned += 1;
+            }
+        }
+    }
+    assert!(poisoned > 0, "a drop-every-5th-ticket plan never orphaned a chunk wave");
+    engine.shutdown();
+    let after = kvcache::global_stats();
+    assert_eq!(after.blocks_in_use, before.blocks_in_use, "poisoned chunk waves leaked");
+    assert_eq!(after.double_free, before.double_free);
+}

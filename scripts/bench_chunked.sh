@@ -1,0 +1,25 @@
+#!/usr/bin/env bash
+# Run the chunked-prefill benchmark (a mixed long/short-prompt workload
+# against the same engine with chunking off vs on) and refresh
+# BENCH_chunked.json at the repo root. A completed-stream parity
+# divergence between the cells, a leaked K/V block, or a chunked max-TPOT
+# materially above the monolithic cell's exits non-zero. BENCH_SMOKE=1
+# runs a smaller client pool (CI).
+#
+# Usage: scripts/bench_chunked.sh [extra cargo args...]
+set -euo pipefail
+
+cd "$(dirname "$0")/../rust"
+
+if ! ls ../artifacts/manifest.json >/dev/null 2>&1 && ! ls artifacts/manifest.json >/dev/null 2>&1; then
+    echo "warning: no AOT artifacts found — the bench will skip (run 'make artifacts')" >&2
+fi
+
+cargo bench --bench chunked_prefill "$@"
+
+out="$(cd .. && pwd)/BENCH_chunked.json"
+if [ -f "$out" ]; then
+    echo "refreshed $out"
+else
+    echo "warning: $out was not written (bench skipped?)" >&2
+fi

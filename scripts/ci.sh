@@ -66,3 +66,9 @@ BENCH_SMOKE=1 cargo bench --bench prefix_reuse
 # schedule) — a survivor divergence through the kill, a lost session, or
 # a leaked K/V block exits non-zero, and BENCH_fleet.json is refreshed
 BENCH_SMOKE=1 cargo bench --bench fleet
+
+# chunked-prefill smoke: the mixed long/short-prompt workload with
+# chunking off vs on — a completed-stream divergence between the cells, a
+# leaked K/V block, or a chunked max-TPOT materially above the monolithic
+# cell's exits non-zero, and BENCH_chunked.json is refreshed
+BENCH_SMOKE=1 cargo bench --bench chunked_prefill
