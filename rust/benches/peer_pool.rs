@@ -1,0 +1,214 @@
+//! Three-tier KV cache benchmark: the peer (park) tier and the
+//! overlapped copier vs. inline copies and host-only spill (the ISSUE 10
+//! acceptance experiment).
+//!
+//! The claims under test: (1) a workload that overflows the device tier
+//! completes with byte-identical token streams whether the overflow
+//! parks in a ring peer's memory, spills to host, or stays resident;
+//! (2) with the copier thread landing staged images behind the current
+//! forward, `prefetch_stall_us` falls materially below the inline-copy
+//! baseline of the same three-tier config; (3) no tier leaks a block.
+//!
+//! Results land machine-readably in `BENCH_peer.json` at the repo root
+//! (regenerate with `scripts/bench_peer.sh`; `BENCH_SMOKE=1` runs a
+//! smaller session wave for CI).
+
+use energonai::coordinator::engine::{Engine, GenRef, GenRequest, LaunchConfig};
+use energonai::memory::kvcache;
+use energonai::runtime::find_artifacts;
+use std::time::Instant;
+
+type Results = Vec<(String, f64)>;
+
+struct CellOut {
+    tokens: Vec<Vec<i32>>,
+    stall_us: f64,
+    leaked: bool,
+}
+
+#[derive(Clone, Copy)]
+enum Cell {
+    Resident,
+    HostOnly,
+    PeerInline,
+    PeerCopier,
+}
+
+impl Cell {
+    fn label(self) -> &'static str {
+        match self {
+            Cell::Resident => "resident",
+            Cell::HostOnly => "host_only",
+            Cell::PeerInline => "peer_inline",
+            Cell::PeerCopier => "peer_copier",
+        }
+    }
+}
+
+fn prompts(n: usize) -> Vec<Vec<i32>> {
+    (0..n)
+        .map(|i| {
+            let len = 2 + (i * 3) % 7;
+            (0..len).map(|j| ((i * 31 + j * 7) % 100 + 1) as i32).collect()
+        })
+        .collect()
+}
+
+/// Run `sessions` concurrent generations on a fresh engine configured
+/// for one grid cell; `device` blocks per worker when tiering is on.
+fn run_cell(
+    cell: Cell,
+    sessions: usize,
+    new_tokens: usize,
+    device: usize,
+    results: &mut Results,
+) -> Option<CellOut> {
+    let label = cell.label();
+    let mut lc = LaunchConfig::preset("tiny").with_warmup(true);
+    // identical dispatcher pool in every cell: stall deltas must measure
+    // copy placement, not a different in-flight bound
+    lc.engine.pool_threads = 2;
+    match cell {
+        Cell::Resident => {}
+        Cell::HostOnly => lc = lc.with_kv_spill(device, 0),
+        Cell::PeerInline => lc = lc.with_kv_spill(device, 0).with_kv_peer(device),
+        Cell::PeerCopier => {
+            lc = lc.with_kv_spill(device, 0).with_kv_peer(device).with_kv_copier(true)
+        }
+    }
+    let engine = match Engine::launch(lc) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("skip {label}: {e:#}");
+            return None;
+        }
+    };
+    if !engine.kv_cache_on() {
+        eprintln!("skip {label}: decode artifacts missing");
+        engine.shutdown();
+        return None;
+    }
+    let before = kvcache::global_stats();
+    let t0 = Instant::now();
+    let grefs: Vec<GenRef> = prompts(sessions)
+        .into_iter()
+        .map(|p| engine.generate_stream(GenRequest::new(p, new_tokens)).unwrap())
+        .collect();
+    let tokens: Vec<Vec<i32>> = grefs.iter().map(|g| g.to_here().unwrap()).collect();
+    let wall = t0.elapsed();
+    let m = engine.metrics_snapshot();
+    let stats = m.kvcache_stats();
+    let stall_us = (stats.prefetch_stall_us - before.prefetch_stall_us) as f64;
+    println!(
+        "{label:>12}: {sessions} sessions x {new_tokens} toks in {:.1}ms; \
+         {} parks / {} fetches / {} demotes, {} spills / {} prefetches, stall {:.1}ms",
+        wall.as_secs_f64() * 1e3,
+        stats.parks - before.parks,
+        stats.fetches - before.fetches,
+        stats.demotes - before.demotes,
+        stats.spills - before.spills,
+        stats.prefetches - before.prefetches,
+        stall_us / 1e3,
+    );
+    engine.shutdown();
+    let after = kvcache::global_stats();
+    let leaked = after.blocks_in_use != before.blocks_in_use
+        || after.host_bytes != before.host_bytes
+        || after.peer_bytes != before.peer_bytes;
+    if leaked {
+        eprintln!(
+            "{label}: LEAK device {}->{} host {}->{} peer {}->{}",
+            before.blocks_in_use,
+            after.blocks_in_use,
+            before.host_bytes,
+            after.host_bytes,
+            before.peer_bytes,
+            after.peer_bytes,
+        );
+    }
+    let key = |k: &str| format!("{label}_{k}");
+    results.push((key("wall_us"), wall.as_secs_f64() * 1e6));
+    results.push((key("parks"), (stats.parks - before.parks) as f64));
+    results.push((key("fetches"), (stats.fetches - before.fetches) as f64));
+    results.push((key("demotes"), (stats.demotes - before.demotes) as f64));
+    results.push((key("spills"), (stats.spills - before.spills) as f64));
+    results.push((key("prefetches"), (stats.prefetches - before.prefetches) as f64));
+    results.push((key("park_bytes"), (stats.park_bytes - before.park_bytes) as f64));
+    results.push((key("fetch_bytes"), (stats.fetch_bytes - before.fetch_bytes) as f64));
+    results.push((key("prefetch_stall_us"), stall_us));
+    results.push((key("gather_spilled"), (stats.gather_spilled - before.gather_spilled) as f64));
+    results.push((key("leaked"), if leaked { 1.0 } else { 0.0 }));
+    if let Some(d) = m.token_percentile(0.99) {
+        results.push((key("tok_p99_us"), d.as_secs_f64() * 1e6));
+    }
+    Some(CellOut { tokens, stall_us, leaked })
+}
+
+fn write_json(results: &Results) {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_peer.json");
+    let mut body = String::from("{\n  \"schema\": \"bench_peer/v1\",\n");
+    body.push_str("  \"generated_by\": \"scripts/bench_peer.sh\",\n");
+    body.push_str("  \"preset\": \"tiny\",\n");
+    body.push_str("  \"results\": {\n");
+    for (i, (k, v)) in results.iter().enumerate() {
+        let comma = if i + 1 == results.len() { "" } else { "," };
+        body.push_str(&format!("    \"{k}\": {v:.2}{comma}\n"));
+    }
+    body.push_str("  }\n}\n");
+    match std::fs::write(path, body) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}
+
+fn main() {
+    if find_artifacts().is_err() {
+        eprintln!("no AOT artifacts found — run `make artifacts` first; skipping");
+        return;
+    }
+    let smoke = std::env::var("BENCH_SMOKE").is_ok();
+    // tiny sessions run to <= 16 positions => <= 2 blocks each. A device
+    // tier of 8 blocks holds ~K=4 sessions; the wave is >= 3K.
+    let (sessions, new_tokens, device) = if smoke { (12, 4, 8) } else { (24, 8, 8) };
+
+    println!("== three-tier KV cache: {sessions} concurrent sessions, device tier {device} blocks ==\n");
+    let mut results = Results::new();
+    let cells = [Cell::Resident, Cell::HostOnly, Cell::PeerInline, Cell::PeerCopier];
+    let outs: Vec<Option<CellOut>> =
+        cells.iter().map(|&c| run_cell(c, sessions, new_tokens, device, &mut results)).collect();
+
+    let mut failed = false;
+    if let Some(Some(base)) = outs.first() {
+        for (cell, out) in cells.iter().zip(&outs).skip(1) {
+            let Some(out) = out else { continue };
+            let parity = out.tokens == base.tokens;
+            results.push((format!("{}_parity", cell.label()), if parity { 1.0 } else { 0.0 }));
+            if !parity {
+                eprintln!("{}: token streams DIVERGED from resident (tiering bug!)", cell.label());
+                failed = true;
+            }
+            failed |= out.leaked;
+        }
+    }
+    if let (Some(Some(inline)), Some(Some(copier))) = (outs.get(2), outs.get(3)) {
+        // the acceptance claim: staged landings behind the forward beat
+        // inline copies. Tiny-preset stalls are noisy; equality counts
+        // only when both rounds are already sub-millisecond.
+        let ratio = if inline.stall_us > 0.0 { copier.stall_us / inline.stall_us } else { 1.0 };
+        results.push(("copier_stall_ratio".into(), ratio));
+        println!(
+            "\nprefetch stall copier/inline: {:.2}x ({:.1}ms -> {:.1}ms)",
+            ratio,
+            inline.stall_us / 1e3,
+            copier.stall_us / 1e3
+        );
+        if copier.stall_us > inline.stall_us && copier.stall_us > 1_000.0 {
+            eprintln!("copier REGRESSED the prefetch stall");
+            failed = true;
+        }
+    }
+    write_json(&results);
+    if failed {
+        std::process::exit(1);
+    }
+}

@@ -66,6 +66,21 @@ impl CommWorld {
             .map(|(rank, (s, r))| Endpoint { rank, world: n, senders: s, receivers: r })
             .collect()
     }
+
+    /// Like [`CommWorld::new`] but every rank also gets a channel to itself.
+    /// Self-channels are always buffered — a rendezvous self-send would
+    /// deadlock — so loops work even in a [`Mode::Blocking`] world. Used by
+    /// meshes whose topology can map a rank onto itself (the peer-memory
+    /// ring with world size 1).
+    pub fn new_looped<T: Send>(n: usize, mode: Mode) -> Vec<Endpoint<T>> {
+        let mut eps = CommWorld::new::<T>(n, mode);
+        for (rank, ep) in eps.iter_mut().enumerate() {
+            let (tx, rx) = std::sync::mpsc::sync_channel(NONBLOCKING_CAP);
+            ep.senders[rank] = Some(tx);
+            ep.receivers[rank] = Some(rx);
+        }
+        eps
+    }
 }
 
 impl<T: Send> Endpoint<T> {
@@ -181,6 +196,26 @@ mod tests {
         assert!(e1.recv_timeout(0, Duration::from_millis(10)).is_err());
         e0.send(1, 5);
         assert_eq!(e1.try_recv(0), Some(5));
+    }
+
+    #[test]
+    fn looped_world_allows_self_send() {
+        // even in a Blocking world the self-channel is buffered
+        let mut eps = CommWorld::new_looped::<u64>(1, Mode::Blocking);
+        let e0 = eps.pop().unwrap();
+        e0.send(0, 13);
+        e0.send(0, 14);
+        assert_eq!(e0.recv(0), 13);
+        assert_eq!(e0.try_recv(0), Some(14));
+        assert!(e0.try_recv(0).is_none());
+        // cross-rank channels still behave per the mode
+        let mut eps = CommWorld::new_looped::<u64>(2, Mode::NonBlocking);
+        let e1 = eps.pop().unwrap();
+        let e0 = eps.pop().unwrap();
+        e0.send(1, 7);
+        e0.send(0, 8);
+        assert_eq!(e1.recv(0), 7);
+        assert_eq!(e0.recv(0), 8);
     }
 
     #[test]

@@ -19,6 +19,7 @@
 //! kv_spill = true        # tiered cache: spill cold sessions to host
 //! kv_device_blocks = 256 # device-tier cap per worker (blocks)
 //! kv_host_blocks = 1024  # host-tier capacity (0 = unlimited)
+//! kv_peer_blocks = 128   # peer tier: blocks parked in the ring peer (0 = off)
 //! prefix_cache = true    # shared-prefix K/V reuse at admission
 //! speculative = true     # draft-and-verify decode over the cache
 //! spec_k = 4             # largest verify window (1 committed + k-1 drafts)
@@ -69,6 +70,7 @@ pub fn launch_from_doc(doc: &TomlDoc) -> anyhow::Result<LaunchConfig> {
     launch.engine.kv_spill = doc.bool_or("engine.kv_spill", false);
     launch.engine.kv_device_blocks = doc.usize_or("engine.kv_device_blocks", 0);
     launch.engine.kv_host_blocks = doc.usize_or("engine.kv_host_blocks", 0);
+    launch.engine.kv_peer_blocks = doc.usize_or("engine.kv_peer_blocks", 0);
     launch.engine.kv_spill_high_water =
         doc.f64_or("engine.kv_spill_high_water", launch.engine.kv_spill_high_water);
     launch.engine.kv_spill_low_water =
@@ -99,6 +101,10 @@ pub fn launch_from_doc(doc: &TomlDoc) -> anyhow::Result<LaunchConfig> {
     anyhow::ensure!(
         !launch.engine.kv_spill || launch.engine.kv_device_blocks > 0,
         "engine.kv_spill requires engine.kv_device_blocks > 0"
+    );
+    anyhow::ensure!(
+        launch.engine.kv_peer_blocks == 0 || launch.engine.kv_spill,
+        "engine.kv_peer_blocks requires engine.kv_spill (the peer tier sits between device and host)"
     );
     anyhow::ensure!(
         !launch.engine.prefix_cache || launch.engine.kv_cache,
@@ -148,6 +154,7 @@ pub fn launch_from_doc(doc: &TomlDoc) -> anyhow::Result<LaunchConfig> {
             "engine.pool_threads", "engine.max_batch", "engine.batch_timeout_us",
             "engine.batch_deadline_ms", "engine.kv_cache",
             "engine.kv_spill", "engine.kv_device_blocks", "engine.kv_host_blocks",
+            "engine.kv_peer_blocks",
             "engine.kv_spill_high_water", "engine.kv_spill_low_water",
             "engine.prefix_cache",
             "engine.speculative", "engine.spec_k",
@@ -233,6 +240,7 @@ lookahead = 2
 kv_spill = true
 kv_device_blocks = 64
 kv_host_blocks = 256
+kv_peer_blocks = 32
 kv_spill_high_water = 0.8
 kv_spill_low_water = 0.5
 "#,
@@ -242,8 +250,17 @@ kv_spill_low_water = 0.5
         assert!(l.engine.kv_spill);
         assert_eq!(l.engine.kv_device_blocks, 64);
         assert_eq!(l.engine.kv_host_blocks, 256);
+        assert_eq!(l.engine.kv_peer_blocks, 32);
         assert!((l.engine.kv_spill_high_water - 0.8).abs() < 1e-9);
         assert!((l.engine.kv_spill_low_water - 0.5).abs() < 1e-9);
+        // the default leaves the peer tier off (two-tier path untouched)
+        let l = launch_from_doc(&TomlDoc::parse("").unwrap()).unwrap();
+        assert_eq!(l.engine.kv_peer_blocks, 0);
+        assert!(!l.engine.kv_copier);
+        // a peer tier without the spill tier has nowhere to demote to
+        let doc = TomlDoc::parse("[engine]\nkv_peer_blocks = 8\n").unwrap();
+        let err = launch_from_doc(&doc).unwrap_err().to_string();
+        assert!(err.contains("kv_peer_blocks requires engine.kv_spill"), "{err}");
         // spill without a device cap is a config error, not a silent no-op
         let doc = TomlDoc::parse("[engine]\nkv_spill = true\n").unwrap();
         let err = launch_from_doc(&doc).unwrap_err().to_string();

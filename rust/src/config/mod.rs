@@ -195,6 +195,19 @@ pub struct EngineConfig {
     pub kv_spill_high_water: f64,
     /// Spill target: evict cold sessions down to this fraction.
     pub kv_spill_low_water: f64,
+    /// Peer tier (§4.4 PMEP applied to generation state): how many blocks
+    /// each worker may park in its ring peer's spare device memory. Cold
+    /// victims park to the peer before spilling to host, and the coldest
+    /// parked sessions demote peer → host under peer pressure. Requires
+    /// `kv_spill`; 0 (the default) disables the tier and keeps the
+    /// two-tier device/host path byte-identical.
+    pub kv_peer_blocks: usize,
+    /// Overlapped tier copier: give each worker a copier thread that runs
+    /// host/peer staging memcpys behind the current forward, so sync
+    /// prefetch stalls collapse to the residual settle wait. Builder-only
+    /// knob (no TOML key); off by default — staging copies run inline on
+    /// the worker thread exactly as before.
+    pub kv_copier: bool,
     /// Shared-prefix K/V reuse: retain whole-block prompt prefixes in a
     /// refcounted registry and match new prompts against a trie at
     /// admission — a hit adopts the cached blocks copy-on-write and
@@ -277,6 +290,8 @@ impl Default for EngineConfig {
             kv_host_blocks: 0,
             kv_spill_high_water: 0.90,
             kv_spill_low_water: 0.70,
+            kv_peer_blocks: 0,
+            kv_copier: false,
             prefix_cache: false,
             speculative: false,
             spec_k: 4,

@@ -582,12 +582,14 @@ impl Batcher {
         let cmds = std::mem::take(&mut self.tier_cmds);
         if let Some(p) = self.prefix.as_mut() {
             for c in &cmds {
-                if let TierCmd::Spill(ids) = c {
-                    let present: Vec<u64> =
-                        ids.iter().copied().filter(|id| p.contains(*id)).collect();
-                    if !present.is_empty() {
-                        p.remove(&present);
-                    }
+                // parks leave the device tier just like spills, so the
+                // same backstop applies (shared registrants are already
+                // excluded from park victims too)
+                let (TierCmd::Spill(ids) | TierCmd::Park(ids)) = c else { continue };
+                let present: Vec<u64> =
+                    ids.iter().copied().filter(|id| p.contains(*id)).collect();
+                if !present.is_empty() {
+                    p.remove(&present);
                 }
             }
         }

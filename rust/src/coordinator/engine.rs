@@ -201,6 +201,25 @@ impl LaunchConfig {
         self
     }
 
+    /// Enable the peer tier (§4.4 PMEP): let every worker park up to
+    /// `blocks` cold session blocks in its ring peer's spare device
+    /// memory, demoting the coldest parked sessions to host under peer
+    /// pressure. Requires `with_kv_spill`; 0 keeps the two-tier path
+    /// byte-identical.
+    pub fn with_kv_peer(mut self, blocks: usize) -> Self {
+        self.engine.kv_peer_blocks = blocks;
+        self
+    }
+
+    /// Overlapped tier copier: staging memcpys (host prefetch and peer
+    /// fetch landings) run on a per-worker copier thread behind the
+    /// current forward instead of inline, so `prefetch_stall_us` shrinks
+    /// to the residual settle wait. Off by default (inline copies).
+    pub fn with_kv_copier(mut self, on: bool) -> Self {
+        self.engine.kv_copier = on;
+        self
+    }
+
     /// Shared-prefix K/V reuse on/off (off by default — off is
     /// byte-identical to builds that predate the feature). Requires the
     /// decode artifacts (`kv_cache`); with them live, admission matches
@@ -599,6 +618,8 @@ impl Shared {
             match cmd {
                 TierCmd::Spill(ids) => self.bus.publish_spill(uid, ids),
                 TierCmd::Prefetch { ids, hint } => self.bus.publish_prefetch(uid, ids, hint),
+                TierCmd::Park(ids) => self.bus.publish_park(uid, ids),
+                TierCmd::Fetch { ids, hint } => self.bus.publish_fetch(uid, ids, hint),
             }
         }
     }
@@ -727,7 +748,12 @@ impl Engine {
                 "kv spill water marks must satisfy 0 <= low <= high <= 1"
             );
         }
+        anyhow::ensure!(
+            launch.engine.kv_peer_blocks == 0 || launch.engine.kv_spill,
+            "engine.kv_peer_blocks requires engine.kv_spill (the peer tier sits between device and host)"
+        );
         let spill_on = kv_on && launch.engine.kv_spill;
+        let peer_on = spill_on && launch.engine.kv_peer_blocks > 0;
         // chaos fault plan (empty spec parses to the no-fault default):
         // validated here so a bad spec is a launch error, not a worker
         // panic mid-traffic
@@ -738,6 +764,16 @@ impl Engine {
         let act_mode = if launch.engine.blocking_comms { Mode::Blocking } else { Mode::NonBlocking };
         let coll_eps = CommWorld::new::<ChunkMsg>(world, Mode::NonBlocking);
         let act_eps = CommWorld::new::<ActMsg>(world, act_mode);
+        // peer-tier parking ring (§4.4 PMEP): worker i parks into (i+1) %
+        // world and holds images for (i-1) % world. Looped so the world=1
+        // degenerate ring (self-parking over a buffered self-channel)
+        // works; buffered so a park send never blocks the parker.
+        let peer_eps: Vec<Option<crate::comm::channel::Endpoint<crate::memory::kvcache::PeerMsg>>> =
+            if peer_on {
+                CommWorld::new_looped(world, Mode::NonBlocking).into_iter().map(Some).collect()
+            } else {
+                (0..world).map(|_| None).collect()
+            };
         let (reply_tx, reply_rx) = std::sync::mpsc::channel::<Reply>();
 
         // ---- workers -------------------------------------------------------
@@ -745,6 +781,7 @@ impl Engine {
         let (ready_tx, ready_rx) = std::sync::mpsc::channel::<anyhow::Result<usize>>();
         let mut coll_it = coll_eps.into_iter();
         let mut act_it = act_eps.into_iter();
+        let mut peer_it = peer_eps.into_iter();
         let mut cmd_it = cmd_rxs.into_iter();
         for stage in 0..par.pp {
             for tp_rank in 0..par.tp {
@@ -785,7 +822,9 @@ impl Engine {
                         };
                         c = c
                             .with_device_capacity(launch.engine.kv_device_blocks)
-                            .with_host_tier(host);
+                            .with_host_tier(host)
+                            .with_peer_tier(launch.engine.kv_peer_blocks)
+                            .with_copier(launch.engine.kv_copier);
                     }
                     c
                 });
@@ -799,14 +838,15 @@ impl Engine {
                     kv_cfg,
                     coll_it.next().unwrap(),
                     act_it.next().unwrap(),
+                    peer_it.next().unwrap(),
                     cmd_it.next().unwrap(),
                     reply_tx.clone(),
                 );
                 let ready_tx = ready_tx.clone();
                 workers.push(std::thread::spawn(move || {
-                    let (ctx, man, cfg, mem, seed, warm, kv_cfg, coll, act, cmd, reply) = args;
+                    let (ctx, man, cfg, mem, seed, warm, kv_cfg, coll, act, peer, cmd, reply) = args;
                     let id = ctx.device_id();
-                    match build_worker(ctx, man, cfg, mem, seed, warm, kv_cfg, coll, act, cmd, reply) {
+                    match build_worker(ctx, man, cfg, mem, seed, warm, kv_cfg, coll, act, peer, cmd, reply) {
                         Ok(w) => {
                             let _ = ready_tx.send(Ok(id));
                             w.run()
@@ -881,6 +921,11 @@ impl Engine {
                 TierConfig::new(launch.engine.kv_device_blocks, launch.engine.kv_host_blocks);
             tcfg.high_water = launch.engine.kv_spill_high_water;
             tcfg.low_water = launch.engine.kv_spill_low_water;
+            if peer_on {
+                // 0 stays two-tier byte-identical; the gate only ever
+                // emits Park/Fetch when the peer budget is nonzero
+                tcfg = tcfg.with_peer(launch.engine.kv_peer_blocks);
+            }
             b = b.with_tier(TierPolicy::new(tcfg, KV_BLOCK_POSITIONS));
         }
         // shared-prefix reuse: admission-time trie matching only exists
@@ -1202,6 +1247,18 @@ impl Engine {
     /// headroom scoring, and the drain verb's leak gauge.
     pub fn tier_usage(&self) -> Option<(usize, usize)> {
         self.batcher.lock().unwrap().tier().map(|t| (t.device_used(), t.host_used()))
+    }
+
+    /// Is the peer (park) tier live — spill on + a nonzero peer budget?
+    pub fn kv_peer_on(&self) -> bool {
+        self.kv_spill_on() && self.launch.engine.kv_peer_blocks > 0
+    }
+
+    /// K/V blocks parked in peer memory per the engine-side tier model
+    /// (`None` without the spill tier) — the third leg of the drain
+    /// verb's leak gauge.
+    pub fn peer_usage(&self) -> Option<usize> {
+        self.batcher.lock().unwrap().tier().map(|t| t.peer_used())
     }
 
     /// Orderly teardown: drain every live session and in-flight batch,
@@ -1835,6 +1892,7 @@ fn build_worker(
     kv_cfg: Option<KvCacheConfig>,
     coll_ep: crate::comm::channel::Endpoint<ChunkMsg>,
     act_ep: crate::comm::channel::Endpoint<ActMsg>,
+    peer_ep: Option<crate::comm::channel::Endpoint<crate::memory::kvcache::PeerMsg>>,
     cmd_rx: std::sync::mpsc::Receiver<super::rpc::Command>,
     reply_tx: Sender<Reply>,
 ) -> anyhow::Result<Worker> {
@@ -1947,9 +2005,15 @@ fn build_worker(
         }
     }
 
-    // paged (possibly two-tier) per-session K/V storage for this
+    // paged (possibly three-tier) per-session K/V storage for this
     // worker's layer shard; the engine sized the config at launch
-    let kv = kv_cfg.map(KvCache::new);
+    let mut kv = kv_cfg.map(KvCache::new);
+    if let (Some(kv), Some(ep)) = (kv.as_mut(), peer_ep) {
+        // ring topology: park into the next rank, hold images for the
+        // previous one; world == 1 degenerates to a buffered self-loop
+        let (r, w) = (ep.rank, ep.world);
+        kv.attach_peer_mesh(ep, (r + 1) % w, (r + w - 1) % w);
+    }
 
     Ok(Worker {
         ctx,

@@ -121,6 +121,16 @@ pub enum Command {
     /// (whose copy time is the decode stall the lookahead exists to
     /// hide).
     Prefetch { uid: u64, ids: Arc<Vec<u64>>, hint: bool },
+    /// Park the listed sessions' K/V blocks in the ring peer's spare
+    /// device memory (§4.4 PMEP, third tier). Ticketed like `Spill`:
+    /// every worker parks its own shard image at the same point in its
+    /// execution order, so the peer exchange needs no extra handshake.
+    Park { uid: u64, ids: Arc<Vec<u64>> },
+    /// Bring the listed sessions' images home from the peer tier.
+    /// Published before the decode bucket that needs them — ticket order
+    /// alone guarantees residency, exactly like `Prefetch`; `hint` marks
+    /// lookahead fetches vs sync fetches at bucket admission.
+    Fetch { uid: u64, ids: Arc<Vec<u64>>, hint: bool },
     /// Cancellation propagation: free the listed sessions' K/V blocks on
     /// both tiers because their clients disconnected mid-generation.
     /// Worker-side this frees exactly like `Release`, but it is a
@@ -188,6 +198,22 @@ impl CommandBus {
         let ids = Arc::new(ids);
         for s in &self.senders {
             let _ = s.send(Command::Prefetch { uid, ids: ids.clone(), hint });
+        }
+    }
+
+    /// Publish a peer-tier park (device → peer) for the listed sessions.
+    pub fn publish_park(&self, uid: u64, ids: Vec<u64>) {
+        let ids = Arc::new(ids);
+        for s in &self.senders {
+            let _ = s.send(Command::Park { uid, ids: ids.clone() });
+        }
+    }
+
+    /// Publish a peer-tier fetch (peer → device) for the listed sessions.
+    pub fn publish_fetch(&self, uid: u64, ids: Vec<u64>, hint: bool) {
+        let ids = Arc::new(ids);
+        for s in &self.senders {
+            let _ = s.send(Command::Fetch { uid, ids: ids.clone(), hint });
         }
     }
 
@@ -343,6 +369,30 @@ mod tests {
                     assert!(hint);
                 }
                 _ => panic!("expected Prefetch"),
+            }
+        }
+    }
+
+    #[test]
+    fn peer_tier_commands_reach_all_workers() {
+        let (bus, rxs) = CommandBus::new(2);
+        bus.publish_park(6, vec![2]);
+        bus.publish_fetch(7, vec![2], false);
+        for rx in &rxs {
+            match rx.recv().unwrap() {
+                Command::Park { uid, ids } => {
+                    assert_eq!(uid, 6);
+                    assert_eq!(*ids, vec![2]);
+                }
+                _ => panic!("expected Park"),
+            }
+            match rx.recv().unwrap() {
+                Command::Fetch { uid, ids, hint } => {
+                    assert_eq!(uid, 7);
+                    assert_eq!(*ids, vec![2]);
+                    assert!(!hint);
+                }
+                _ => panic!("expected Fetch"),
             }
         }
     }

@@ -128,6 +128,8 @@ enum Work {
     Cancel(Arc<Vec<u64>>),
     Spill(Arc<Vec<u64>>),
     Prefetch { ids: Arc<Vec<u64>>, hint: bool },
+    Park(Arc<Vec<u64>>),
+    Fetch(Arc<Vec<u64>>),
     EvictPrefix(Arc<Vec<u64>>),
 }
 
@@ -144,6 +146,11 @@ impl Worker {
                 // mispairing hazard §4.2 describes.
                 match work {
                     Work::Forward(input) => {
+                        // staged tier copies (overlapped copier) must land
+                        // before any forward reads or writes the cache
+                        if let Some(kv) = &mut self.kv {
+                            kv.settle_all();
+                        }
                         let fault = if self.ctx.faults.is_empty() {
                             None
                         } else {
@@ -165,6 +172,26 @@ impl Worker {
                         if let Some(kv) = &mut self.kv {
                             for &id in ids.iter() {
                                 kv.spill(id);
+                            }
+                        }
+                    }
+                    Work::Park(ids) => {
+                        if let Some(kv) = &mut self.kv {
+                            for &id in ids.iter() {
+                                kv.park(id);
+                            }
+                            // drain any park arriving from the ring client
+                            // while we're at a known-safe point
+                            kv.pump_peer();
+                        }
+                    }
+                    // no stall timing here: `fetch` self-measures its total
+                    // elapsed (peer wait + landing copy) into the prefetch
+                    // stall gauge, hint or not
+                    Work::Fetch(ids) => {
+                        if let Some(kv) = &mut self.kv {
+                            for &id in ids.iter() {
+                                kv.fetch(id);
                             }
                         }
                     }
@@ -204,6 +231,10 @@ impl Worker {
                 Ok(Command::Spill { uid, ids }) => queue.push(uid, (uid, Work::Spill(ids))),
                 Ok(Command::Prefetch { uid, ids, hint }) => {
                     queue.push(uid, (uid, Work::Prefetch { ids, hint }))
+                }
+                Ok(Command::Park { uid, ids }) => queue.push(uid, (uid, Work::Park(ids))),
+                Ok(Command::Fetch { uid, ids, hint: _ }) => {
+                    queue.push(uid, (uid, Work::Fetch(ids)))
                 }
                 Ok(Command::EvictPrefix { uid, ids }) => {
                     queue.push(uid, (uid, Work::EvictPrefix(ids)))

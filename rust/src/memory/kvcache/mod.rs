@@ -1,5 +1,5 @@
 //! Paged per-session K/V cache: the storage half of incremental decode —
-//! now a **two-tier** store.
+//! now a **three-tier** store (device → peer → host).
 //!
 //! Generation sessions keep the K/V rows of every processed position so a
 //! decode step runs *one* position through the linears instead of
@@ -17,9 +17,14 @@
 //! session's whole block set can be written out ([`KvCache::spill`]) and
 //! staged back ([`KvCache::prefetch`]) — §4.4's larger heterogeneous
 //! memory space applied to generation state, so the number of *live*
-//! sessions is no longer capped by the device slab. Which sessions move,
-//! and when, is decided engine-side by [`tier::TierPolicy`] and arrives
-//! here as ticketed commands; this module only executes the copies.
+//! sessions is no longer capped by the device slab. Between the two sits
+//! the **peer tier** ([`peer::PeerTier`]): §4.4's PMEP — cold images park
+//! in a *peer worker's* spare device memory first ([`KvCache::park`] /
+//! [`KvCache::fetch`]), and demote to host only under peer pressure, with
+//! an optional copier thread ([`peer::KvCopier`]) overlapping the landing
+//! copies with the current forward. Which sessions move, and when, is
+//! decided engine-side by [`tier::TierPolicy`] and arrives here as
+//! ticketed commands; this module only executes the copies.
 //!
 //! Block layout (one block, `layers` local layers, K and V planes):
 //!
@@ -35,10 +40,14 @@
 //! process-wide atomics surfaced through `metrics::Recorder` (like the
 //! activation arena's, §Perf).
 
+pub mod peer;
 pub mod prefix;
 pub mod tier;
 
-use crate::memory::arena::ArenaPool;
+use crate::comm::channel::Endpoint;
+use crate::memory::arena::{ArenaBuf, ArenaPool};
+use peer::{KvCopier, PeerTier};
+pub use peer::PeerMsg;
 use std::collections::{HashMap, HashSet, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
 use tier::HostTier;
@@ -122,6 +131,22 @@ pub struct KvStats {
     /// block another resident holder still reads must never leave the
     /// device tier ("no block both shared and spilled").
     pub spill_denied_shared: u64,
+    /// Whole-session parks into a peer worker's spare memory (§4.4 PMEP).
+    pub parks: u64,
+    /// Whole-session retrievals from the peer tier back to the device.
+    pub fetches: u64,
+    /// Bytes shipped device → peer by parks.
+    pub park_bytes: u64,
+    /// Bytes shipped peer → device by fetches.
+    pub fetch_bytes: u64,
+    /// Peer-tier bytes currently parked (all workers, owner side).
+    pub peer_bytes: u64,
+    /// Sessions currently parked in the peer tier.
+    pub sessions_parked: u64,
+    /// Parks refused (no peer tier, or the peer ledger was full).
+    pub park_denied: u64,
+    /// Parked sessions demoted peer → host under peer pressure.
+    pub demotes: u64,
 }
 
 static G_IN_USE: AtomicU64 = AtomicU64::new(0);
@@ -149,6 +174,14 @@ static G_PREFIX_ADOPTS: AtomicU64 = AtomicU64::new(0);
 static G_ADOPTED_BLOCKS: AtomicU64 = AtomicU64::new(0);
 static G_COW_COPIES: AtomicU64 = AtomicU64::new(0);
 static G_SPILL_DENIED_SHARED: AtomicU64 = AtomicU64::new(0);
+static G_PARKS: AtomicU64 = AtomicU64::new(0);
+static G_FETCHES: AtomicU64 = AtomicU64::new(0);
+static G_PARK_BYTES: AtomicU64 = AtomicU64::new(0);
+static G_FETCH_BYTES: AtomicU64 = AtomicU64::new(0);
+static G_PEER_BYTES: AtomicU64 = AtomicU64::new(0);
+static G_SESSIONS_PARKED: AtomicU64 = AtomicU64::new(0);
+static G_PARK_DENIED: AtomicU64 = AtomicU64::new(0);
+static G_DEMOTES: AtomicU64 = AtomicU64::new(0);
 
 /// Process-wide snapshot (what `Engine::metrics_snapshot` folds into the
 /// `Recorder`). Workers update the atomics as they allocate and free.
@@ -179,6 +212,14 @@ pub fn global_stats() -> KvStats {
         adopted_blocks: G_ADOPTED_BLOCKS.load(Ordering::Relaxed),
         cow_copies: G_COW_COPIES.load(Ordering::Relaxed),
         spill_denied_shared: G_SPILL_DENIED_SHARED.load(Ordering::Relaxed),
+        parks: G_PARKS.load(Ordering::Relaxed),
+        fetches: G_FETCHES.load(Ordering::Relaxed),
+        park_bytes: G_PARK_BYTES.load(Ordering::Relaxed),
+        fetch_bytes: G_FETCH_BYTES.load(Ordering::Relaxed),
+        peer_bytes: G_PEER_BYTES.load(Ordering::Relaxed),
+        sessions_parked: G_SESSIONS_PARKED.load(Ordering::Relaxed),
+        park_denied: G_PARK_DENIED.load(Ordering::Relaxed),
+        demotes: G_DEMOTES.load(Ordering::Relaxed),
     }
 }
 
@@ -216,6 +257,13 @@ pub struct KvCacheConfig {
     pub capacity_blocks: usize,
     /// Host (spill) tier capacity in blocks (0 = tier disabled).
     pub host_blocks: usize,
+    /// Peer (park) tier capacity in blocks — how much of a peer worker's
+    /// spare memory this worker may occupy (0 = tier disabled; the
+    /// two-tier path is then byte-identical to before the tier existed).
+    pub peer_blocks: usize,
+    /// Run a copier thread so staged prefetch/fetch landing copies
+    /// overlap the current forward instead of running inline.
+    pub copier: bool,
     /// Ledger device id (observability only).
     pub device: usize,
 }
@@ -230,6 +278,8 @@ impl KvCacheConfig {
             grow_blocks: 64,
             capacity_blocks: 0,
             host_blocks: 0,
+            peer_blocks: 0,
+            copier: false,
             device: 0,
         }
     }
@@ -244,6 +294,21 @@ impl KvCacheConfig {
     /// (0 keeps it disabled).
     pub fn with_host_tier(mut self, blocks: usize) -> KvCacheConfig {
         self.host_blocks = blocks;
+        self
+    }
+
+    /// Enable the peer (park) tier with room for `blocks` blocks in the
+    /// peer worker's memory (0 keeps it disabled). Takes effect once a
+    /// mesh or self-loop is attached ([`KvCache::attach_peer_mesh`] /
+    /// [`KvCache::attach_self_peer`]).
+    pub fn with_peer_tier(mut self, blocks: usize) -> KvCacheConfig {
+        self.peer_blocks = blocks;
+        self
+    }
+
+    /// Toggle the overlapped copier thread.
+    pub fn with_copier(mut self, on: bool) -> KvCacheConfig {
+        self.copier = on;
         self
     }
 
@@ -263,17 +328,30 @@ impl KvCacheConfig {
     }
 }
 
-/// One session's cache state: its block table and filled length. A
-/// spilled session keeps its length but its blocks live in the host tier.
+/// Which tier currently holds a session's block images.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+enum KvLoc {
+    /// Resident in the device slab (the only gatherable state).
+    #[default]
+    Device,
+    /// Parked in the peer worker's spare device memory (§4.4 PMEP).
+    Peer,
+    /// Spilled to the host arena.
+    Host,
+}
+
+/// One session's cache state: its block table and filled length. An
+/// off-device session keeps its length but its blocks live as a single
+/// image in the peer or host tier.
 #[derive(Debug, Default)]
 struct SessionKv {
     /// Logical position-block b lives in physical block `blocks[b]`
-    /// (empty while spilled).
+    /// (empty while off-device).
     blocks: Vec<u32>,
     /// Positions 0..len hold valid K/V rows (all layers).
     len: usize,
-    /// Blocks are parked in the host tier.
-    spilled: bool,
+    /// Which tier holds the blocks.
+    loc: KvLoc,
 }
 
 /// A cached shared prefix: the first blocks of some past session's prompt,
@@ -308,6 +386,13 @@ pub struct KvCache {
     cached: HashMap<u64, CachedPrefix>,
     /// Host spill tier (`None` when `cfg.host_blocks == 0`).
     host: Option<HostTier>,
+    /// Peer park tier (`None` until a mesh/self-loop is attached).
+    peer: Option<PeerTier>,
+    /// Copier thread for overlapped staging (`None` = inline copies).
+    copier: Option<KvCopier>,
+    /// Sessions whose images are staged at the copier but not yet
+    /// installed into device blocks ([`KvCache::settle`] completes them).
+    pending_install: HashSet<u64>,
     /// Bounded FIFO of recently-released session ids (+ membership set),
     /// consulted on unknown frees to call out true double releases.
     freed_ring: VecDeque<u64>,
@@ -329,8 +414,29 @@ impl KvCache {
             refcounts: Vec::new(),
             cached: HashMap::new(),
             host,
+            peer: None,
+            copier: cfg.copier.then(KvCopier::spawn),
+            pending_install: HashSet::new(),
             freed_ring: VecDeque::new(),
             freed_set: HashSet::new(),
+        }
+    }
+
+    /// Join the parking ring: park into worker `peer`, hold images for
+    /// worker `client`. No-op when `cfg.peer_blocks == 0`.
+    pub fn attach_peer_mesh(&mut self, ep: Endpoint<PeerMsg>, peer: usize, client: usize) {
+        if self.cfg.peer_blocks > 0 {
+            let cap = (self.cfg.peer_blocks as u64).saturating_mul(self.cfg.block_bytes());
+            self.peer = Some(PeerTier::new(self.cfg.device, cap, ep, peer, client));
+        }
+    }
+
+    /// Degenerate one-worker ring: the worker is its own peer over a
+    /// buffered self-channel. No-op when `cfg.peer_blocks == 0`.
+    pub fn attach_self_peer(&mut self) {
+        if self.cfg.peer_blocks > 0 {
+            let cap = (self.cfg.peer_blocks as u64).saturating_mul(self.cfg.block_bytes());
+            self.peer = Some(PeerTier::looped(self.cfg.device, cap));
         }
     }
 
@@ -389,9 +495,31 @@ impl KvCache {
         self.host.as_ref().map_or(0, HostTier::bytes_used)
     }
 
-    /// Is this session's cache parked in the host tier?
+    /// Sessions currently parked in the peer tier (this worker, owner
+    /// side).
+    pub fn parked_count(&self) -> usize {
+        self.peer.as_ref().map_or(0, PeerTier::sessions)
+    }
+
+    /// Peer-tier bytes this worker has parked (owner-side ledger).
+    pub fn peer_bytes_used(&self) -> u64 {
+        self.peer.as_ref().map_or(0, PeerTier::bytes_used)
+    }
+
+    /// Bytes this worker holds on behalf of its ring client (holder-side
+    /// ledger).
+    pub fn guest_bytes_used(&self) -> u64 {
+        self.peer.as_ref().map_or(0, PeerTier::guest_bytes)
+    }
+
+    /// Is this session's cache off-device (host *or* peer tier)?
     pub fn is_spilled(&self, session: u64) -> bool {
-        self.sessions.get(&session).map_or(false, |s| s.spilled)
+        self.sessions.get(&session).map_or(false, |s| s.loc != KvLoc::Device)
+    }
+
+    /// Is this session's cache parked in the peer tier specifically?
+    pub fn is_parked(&self, session: u64) -> bool {
+        self.sessions.get(&session).map_or(false, |s| s.loc == KvLoc::Peer)
     }
 
     /// Positions filled for a session (`None` if it has no cache entry).
@@ -512,6 +640,7 @@ impl KvCache {
         assert_eq!(k.len(), w, "k row width mismatch");
         assert_eq!(v.len(), w, "v row width mismatch");
         assert!(layer < self.cfg.layers, "layer {layer} out of range");
+        self.settle(session);
         if self.is_spilled(session) {
             // same loudness contract as gather: counter + debug assert;
             // release builds drop the write instead of allocating fresh
@@ -543,6 +672,7 @@ impl KvCache {
         if len == 0 {
             return;
         }
+        self.settle(session);
         if self.is_spilled(session) {
             // see write_row: loud, and never write beside a spilled image
             G_GATHER_SPILLED.fetch_add(1, Ordering::Relaxed);
@@ -585,11 +715,11 @@ impl KvCache {
             Some(s) => s,
             None => return 0,
         };
-        if s.spilled {
+        if s.loc != KvLoc::Device || self.pending_install.contains(&session) {
             G_GATHER_SPILLED.fetch_add(1, Ordering::Relaxed);
             debug_assert!(
                 false,
-                "gather on spilled session {session}: the admission gate must prefetch before dispatch"
+                "gather on off-device session {session}: the admission gate must stage (and settle) before dispatch"
             );
             return 0;
         }
@@ -613,37 +743,12 @@ impl KvCache {
         done
     }
 
-    /// Write a session's whole block set out to the host tier and return
-    /// its device blocks to the free list. Returns the bytes moved, or 0
-    /// when nothing happened (unknown/already-spilled session — benign:
-    /// a release may have raced the command — or host tier disabled/full,
-    /// which trips `spill_denied`).
-    pub fn spill(&mut self, session: u64) -> u64 {
-        if self.host.is_none() {
-            G_SPILL_DENIED.fetch_add(1, Ordering::Relaxed);
-            return 0;
-        }
+    /// Copy a resident session's whole block set into one arena image and
+    /// return its device blocks to the free list. The caller has already
+    /// reserved room for the image in the destination tier's ledger.
+    fn image_out(&mut self, session: u64) -> ArenaBuf {
         let be = self.cfg.block_elems();
-        let block_bytes = self.cfg.block_bytes();
-        // a block another holder (session or prefix registry) still reads
-        // must never leave the device tier: spilling it would strand the
-        // other holder's reads on a recycled block
-        if let Some(s) = self.sessions.get(&session) {
-            if !s.spilled && s.blocks.iter().any(|&b| self.refcounts[b as usize] > 1) {
-                G_SPILL_DENIED_SHARED.fetch_add(1, Ordering::Relaxed);
-                return 0;
-            }
-        }
-        let s = match self.sessions.get_mut(&session) {
-            Some(s) if !s.spilled && !s.blocks.is_empty() => s,
-            _ => return 0,
-        };
-        let bytes = s.blocks.len() as u64 * block_bytes;
-        let host = self.host.as_mut().unwrap();
-        if host.ledger.alloc(bytes).is_err() {
-            G_SPILL_DENIED.fetch_add(1, Ordering::Relaxed);
-            return 0;
-        }
+        let s = self.sessions.get_mut(&session).unwrap();
         // block images go into one arena buffer; spill/prefetch cycles
         // recycle these through the arena shelves (§Perf)
         let mut buf = ArenaPool::checkout(s.blocks.len() * be);
@@ -651,35 +756,16 @@ impl KvCache {
             let src = b as usize * be;
             buf[i * be..(i + 1) * be].copy_from_slice(&self.slab[src..src + be]);
         }
-        host.bufs.insert(session, buf);
         let blocks: Vec<u32> = s.blocks.drain(..).collect();
-        s.spilled = true;
         for b in blocks {
             self.release_block(b);
         }
-        G_SPILLS.fetch_add(1, Ordering::Relaxed);
-        G_SPILL_BYTES.fetch_add(bytes, Ordering::Relaxed);
-        G_HOST_BYTES.fetch_add(bytes, Ordering::Relaxed);
-        G_SESSIONS_SPILLED.fetch_add(1, Ordering::Relaxed);
-        bytes
+        buf
     }
 
-    /// Stage a spilled session's blocks back into the device tier.
-    /// Returns the bytes moved (0 for unknown or already-resident
-    /// sessions — benign, e.g. a hint that arrived after a sync fetch).
-    pub fn prefetch(&mut self, session: u64) -> u64 {
-        match self.sessions.get(&session) {
-            Some(s) if s.spilled => {}
-            _ => return 0,
-        }
+    /// Install an off-tier image into freshly checked-out device blocks.
+    fn install(&mut self, session: u64, buf: ArenaBuf) {
         let be = self.cfg.block_elems();
-        let buf = self
-            .host
-            .as_mut()
-            .expect("spilled session without a host tier")
-            .bufs
-            .remove(&session)
-            .expect("spilled session has a host buffer");
         let n_blocks = buf.len() / be;
         let mut blocks = Vec::with_capacity(n_blocks);
         for _ in 0..n_blocks {
@@ -689,17 +775,233 @@ impl KvCache {
             let dst = b as usize * be;
             self.slab[dst..dst + be].copy_from_slice(&buf[i * be..(i + 1) * be]);
         }
-        let bytes = (buf.len() * 4) as u64;
         drop(buf); // back to the arena shelf for the next spill
+        self.sessions.get_mut(&session).unwrap().blocks = blocks;
+    }
+
+    /// Does any of the session's blocks have another holder? A shared
+    /// block must never leave the device tier: spilling or parking it
+    /// would strand the other holder's reads on a recycled block.
+    fn refuses_shared(&self, session: u64) -> bool {
+        match self.sessions.get(&session) {
+            Some(s) if s.loc == KvLoc::Device => {
+                if s.blocks.iter().any(|&b| self.refcounts[b as usize] > 1) {
+                    G_SPILL_DENIED_SHARED.fetch_add(1, Ordering::Relaxed);
+                    return true;
+                }
+                false
+            }
+            _ => false,
+        }
+    }
+
+    /// Write a session's whole block set out to the host tier and return
+    /// its device blocks to the free list. Returns the bytes moved, or 0
+    /// when nothing happened (unknown/already-spilled session — benign:
+    /// a release may have raced the command — or host tier disabled/full,
+    /// which trips `spill_denied`). A *peer-parked* session spilled here
+    /// is the three-tier **demotion** path: its image moves peer → host.
+    pub fn spill(&mut self, session: u64) -> u64 {
+        self.settle(session);
+        if self.host.is_none() {
+            G_SPILL_DENIED.fetch_add(1, Ordering::Relaxed);
+            return 0;
+        }
+        if self.sessions.get(&session).map_or(false, |s| s.loc == KvLoc::Peer) {
+            return self.demote(session);
+        }
+        if self.refuses_shared(session) {
+            return 0;
+        }
+        let block_bytes = self.cfg.block_bytes();
+        let bytes = match self.sessions.get(&session) {
+            Some(s) if s.loc == KvLoc::Device && !s.blocks.is_empty() => {
+                s.blocks.len() as u64 * block_bytes
+            }
+            _ => return 0,
+        };
+        if self.host.as_mut().unwrap().ledger.alloc(bytes).is_err() {
+            G_SPILL_DENIED.fetch_add(1, Ordering::Relaxed);
+            return 0;
+        }
+        let buf = self.image_out(session);
+        self.host.as_mut().unwrap().bufs.insert(session, buf);
+        self.sessions.get_mut(&session).unwrap().loc = KvLoc::Host;
+        G_SPILLS.fetch_add(1, Ordering::Relaxed);
+        G_SPILL_BYTES.fetch_add(bytes, Ordering::Relaxed);
+        G_HOST_BYTES.fetch_add(bytes, Ordering::Relaxed);
+        G_SESSIONS_SPILLED.fetch_add(1, Ordering::Relaxed);
+        bytes
+    }
+
+    /// Demote a peer-parked session's image to this worker's host tier
+    /// (peer pressure: the policy wants the peer blocks back). On a full
+    /// host ledger the image stays parked — whole-block arithmetic means
+    /// every worker reaches the same verdict.
+    fn demote(&mut self, session: u64) -> u64 {
+        let be = self.cfg.block_elems();
+        let bytes = self
+            .peer
+            .as_ref()
+            .and_then(|p| p.parked_bytes(session))
+            .expect("parked session has a peer reservation");
+        if self.host.as_mut().unwrap().ledger.alloc(bytes).is_err() {
+            G_SPILL_DENIED.fetch_add(1, Ordering::Relaxed);
+            return 0;
+        }
+        let peer = self.peer.as_mut().unwrap();
+        let img = peer.retrieve(session, be);
+        peer.credit(session);
+        debug_assert_eq!((img.len() * 4) as u64, bytes, "parked image drifted from its ledger");
+        self.host.as_mut().unwrap().bufs.insert(session, img);
+        self.sessions.get_mut(&session).unwrap().loc = KvLoc::Host;
+        G_DEMOTES.fetch_add(1, Ordering::Relaxed);
+        G_PEER_BYTES.fetch_sub(bytes, Ordering::Relaxed);
+        G_HOST_BYTES.fetch_add(bytes, Ordering::Relaxed);
+        G_SESSIONS_PARKED.fetch_sub(1, Ordering::Relaxed);
+        G_SESSIONS_SPILLED.fetch_add(1, Ordering::Relaxed);
+        bytes
+    }
+
+    /// Park a resident session's whole block set in the peer worker's
+    /// spare device memory (§4.4 PMEP) and return its device blocks to
+    /// the free list. Mirrors [`KvCache::spill`]'s contract: returns the
+    /// bytes shipped, or 0 when nothing happened (unknown/off-device
+    /// session — benign release races — or no peer tier / peer ledger
+    /// full, which trips `park_denied`; shared blocks refuse with
+    /// `spill_denied_shared`).
+    pub fn park(&mut self, session: u64) -> u64 {
+        self.settle(session);
+        if self.peer.is_none() {
+            G_PARK_DENIED.fetch_add(1, Ordering::Relaxed);
+            return 0;
+        }
+        if self.refuses_shared(session) {
+            return 0;
+        }
+        let be = self.cfg.block_elems();
+        let block_bytes = self.cfg.block_bytes();
+        let bytes = match self.sessions.get(&session) {
+            Some(s) if s.loc == KvLoc::Device && !s.blocks.is_empty() => {
+                s.blocks.len() as u64 * block_bytes
+            }
+            _ => return 0,
+        };
+        if self.peer.as_mut().unwrap().charge(session, bytes).is_err() {
+            G_PARK_DENIED.fetch_add(1, Ordering::Relaxed);
+            return 0;
+        }
+        let img = self.image_out(session);
+        self.sessions.get_mut(&session).unwrap().loc = KvLoc::Peer;
+        self.peer.as_mut().unwrap().send_park(session, img, be);
+        G_PARKS.fetch_add(1, Ordering::Relaxed);
+        G_PARK_BYTES.fetch_add(bytes, Ordering::Relaxed);
+        G_PEER_BYTES.fetch_add(bytes, Ordering::Relaxed);
+        G_SESSIONS_PARKED.fetch_add(1, Ordering::Relaxed);
+        bytes
+    }
+
+    /// Bring a peer-parked session's image home and stage it back into
+    /// the device tier. Returns the bytes moved (0 for unknown or
+    /// non-parked sessions — benign, e.g. a hint racing a sync fetch).
+    /// The ring wait and — without a copier — the install copy run on the
+    /// worker thread and are counted as prefetch stall; with a copier
+    /// only the residual [`KvCache::settle`] wait is.
+    pub fn fetch(&mut self, session: u64) -> u64 {
+        match self.sessions.get(&session) {
+            Some(s) if s.loc == KvLoc::Peer => {}
+            _ => return 0,
+        }
+        let t0 = std::time::Instant::now();
+        let be = self.cfg.block_elems();
+        let peer = self.peer.as_mut().expect("parked session without a peer tier");
+        let img = peer.retrieve(session, be);
+        let bytes = peer.credit(session);
+        debug_assert_eq!((img.len() * 4) as u64, bytes, "parked image drifted from its ledger");
+        self.sessions.get_mut(&session).unwrap().loc = KvLoc::Device;
+        G_FETCHES.fetch_add(1, Ordering::Relaxed);
+        G_FETCH_BYTES.fetch_add(bytes, Ordering::Relaxed);
+        G_PEER_BYTES.fetch_sub(bytes, Ordering::Relaxed);
+        G_SESSIONS_PARKED.fetch_sub(1, Ordering::Relaxed);
+        if let Some(cp) = &self.copier {
+            cp.stage(session, img);
+            self.pending_install.insert(session);
+        } else {
+            self.install(session, img);
+        }
+        note_prefetch_stall_us(t0.elapsed().as_micros() as u64);
+        bytes
+    }
+
+    /// Stage a spilled session's blocks back into the device tier.
+    /// Returns the bytes moved (0 for unknown or already-resident
+    /// sessions — benign, e.g. a hint that arrived after a sync fetch).
+    /// With a copier the landing copy overlaps the current forward and
+    /// [`KvCache::settle`] installs it when the rows are needed.
+    pub fn prefetch(&mut self, session: u64) -> u64 {
+        match self.sessions.get(&session) {
+            Some(s) if s.loc == KvLoc::Host => {}
+            _ => return 0,
+        }
+        let buf = self
+            .host
+            .as_mut()
+            .expect("spilled session without a host tier")
+            .bufs
+            .remove(&session)
+            .expect("spilled session has a host buffer");
+        let bytes = (buf.len() * 4) as u64;
         self.host.as_mut().unwrap().ledger.dealloc(bytes);
-        let s = self.sessions.get_mut(&session).unwrap();
-        s.blocks = blocks;
-        s.spilled = false;
+        self.sessions.get_mut(&session).unwrap().loc = KvLoc::Device;
         G_PREFETCHES.fetch_add(1, Ordering::Relaxed);
         G_PREFETCH_BYTES.fetch_add(bytes, Ordering::Relaxed);
         G_HOST_BYTES.fetch_sub(bytes, Ordering::Relaxed);
         G_SESSIONS_SPILLED.fetch_sub(1, Ordering::Relaxed);
+        if let Some(cp) = &self.copier {
+            cp.stage(session, buf);
+            self.pending_install.insert(session);
+        } else {
+            self.install(session, buf);
+        }
         bytes
+    }
+
+    /// Complete an in-flight staging for `session`: wait for the copier's
+    /// landing copy and install it into device blocks. The wait is the
+    /// residual stall the copier could not hide — usually zero, because
+    /// the landing memcpy overlapped the previous forward.
+    pub fn settle(&mut self, session: u64) {
+        if !self.pending_install.remove(&session) {
+            return;
+        }
+        let t0 = std::time::Instant::now();
+        let img =
+            self.copier.as_ref().expect("pending install without a copier").wait_landed(session);
+        note_prefetch_stall_us(t0.elapsed().as_micros() as u64);
+        if self.sessions.contains_key(&session) {
+            self.install(session, img);
+        }
+    }
+
+    /// Complete every in-flight staging (the worker calls this right
+    /// before a forward so `gather` only ever sees resident sessions).
+    pub fn settle_all(&mut self) {
+        let mut pending: Vec<u64> = self.pending_install.iter().copied().collect();
+        pending.sort_unstable();
+        for id in pending {
+            self.settle(id);
+        }
+    }
+
+    /// Drain any park images the ring client has already shipped (without
+    /// blocking). Workers call this at ticketed park points so the
+    /// buffered channel never fills even when the client parks long before
+    /// this worker's next fetch-side wait absorbs the message.
+    pub fn pump_peer(&mut self) {
+        let be = self.cfg.block_elems();
+        if let Some(peer) = self.peer.as_mut() {
+            peer.pump(be);
+        }
     }
 
     // ---- shared-prefix registry ---------------------------------------
@@ -721,7 +1023,7 @@ impl KvCache {
         debug_assert!(positions % bp == 0, "retained prefixes are block-aligned");
         let n = (positions + bp - 1) / bp;
         let blocks: Vec<u32> = match self.sessions.get(&session) {
-            Some(s) if !s.spilled && s.len >= positions && s.blocks.len() >= n => {
+            Some(s) if s.loc == KvLoc::Device && s.len >= positions && s.blocks.len() >= n => {
                 s.blocks[..n].to_vec()
             }
             _ => return 0,
@@ -759,7 +1061,7 @@ impl KvCache {
         if self.freed_set.remove(&session) {
             self.freed_ring.retain(|&id| id != session);
         }
-        self.sessions.insert(session, SessionKv { blocks, len: positions, spilled: false });
+        self.sessions.insert(session, SessionKv { blocks, len: positions, loc: KvLoc::Device });
         G_SESSIONS.fetch_add(1, Ordering::Relaxed);
         G_PREFIX_ADOPTS.fetch_add(1, Ordering::Relaxed);
         G_ADOPTED_BLOCKS.fetch_add(n as u64, Ordering::Relaxed);
@@ -813,12 +1115,15 @@ impl KvCache {
     /// length), and unknown sessions are tolerated loudly (`free_unknown`
     /// counter) like [`KvCache::free`].
     ///
-    /// A *spilled* session can be truncated too: the parked host image is
-    /// shortened in place and its ledger bytes credited, so block
-    /// accounting stays exact across any interleaving of
-    /// append/truncate/spill/prefetch/free (pinned by the property test
-    /// below).
+    /// An *off-device* session can be truncated too: a host image is
+    /// shortened in place and its ledger bytes credited; a peer-parked
+    /// image is shrunk on the owner's ledger and a truncation shipped to
+    /// the holder (applied in place, or deferred until the park lands).
+    /// Block accounting stays exact across any interleaving of
+    /// append/truncate/spill/park/fetch/prefetch/free (pinned by the
+    /// property test below).
     pub fn truncate_tail(&mut self, session: u64, new_len: usize) -> bool {
+        self.settle(session);
         let bp = self.cfg.block_positions;
         let be = self.cfg.block_elems();
         if !self.sessions.contains_key(&session) {
@@ -829,25 +1134,45 @@ impl KvCache {
         let shortened = new_len < s.len;
         s.len = s.len.min(new_len);
         let need = if new_len == 0 { 0 } else { (new_len + bp - 1) / bp };
-        if s.spilled {
-            let host = self.host.as_mut().expect("spilled session without a host tier");
-            let buf = host.bufs.get_mut(&session).expect("spilled session has a host buffer");
-            let have = buf.len() / be;
-            if have > need {
-                let freed = have - need;
-                buf.vec_mut().truncate(need * be);
-                let bytes = (freed * be * 4) as u64;
-                host.ledger.dealloc(bytes);
-                G_HOST_BYTES.fetch_sub(bytes, Ordering::Relaxed);
-                G_TRUNCATED_BLOCKS.fetch_add(freed as u64, Ordering::Relaxed);
+        match s.loc {
+            KvLoc::Host => {
+                let host = self.host.as_mut().expect("spilled session without a host tier");
+                let buf = host.bufs.get_mut(&session).expect("spilled session has a host buffer");
+                let have = buf.len() / be;
+                if have > need {
+                    let freed = have - need;
+                    buf.vec_mut().truncate(need * be);
+                    let bytes = (freed * be * 4) as u64;
+                    host.ledger.dealloc(bytes);
+                    G_HOST_BYTES.fetch_sub(bytes, Ordering::Relaxed);
+                    G_TRUNCATED_BLOCKS.fetch_add(freed as u64, Ordering::Relaxed);
+                }
             }
-        } else if s.blocks.len() > need {
-            let drained: Vec<u32> = s.blocks.drain(need..).collect();
-            G_TRUNCATED_BLOCKS.fetch_add(drained.len() as u64, Ordering::Relaxed);
-            for b in drained {
-                // shared tail blocks (the registry or another table still
-                // holds them) are decremented, not recycled
-                self.release_block(b);
+            KvLoc::Peer => {
+                let block_bytes = self.cfg.block_bytes();
+                let peer = self.peer.as_mut().expect("parked session without a peer tier");
+                let have =
+                    (peer.parked_bytes(session).expect("parked session has a peer reservation")
+                        / block_bytes) as usize;
+                if have > need {
+                    let freed = have - need;
+                    peer.shrink_parked(session, need as u64 * block_bytes);
+                    peer.truncate_guest(session, need, be);
+                    let bytes = freed as u64 * block_bytes;
+                    G_PEER_BYTES.fetch_sub(bytes, Ordering::Relaxed);
+                    G_TRUNCATED_BLOCKS.fetch_add(freed as u64, Ordering::Relaxed);
+                }
+            }
+            KvLoc::Device => {
+                if s.blocks.len() > need {
+                    let drained: Vec<u32> = s.blocks.drain(need..).collect();
+                    G_TRUNCATED_BLOCKS.fetch_add(drained.len() as u64, Ordering::Relaxed);
+                    for b in drained {
+                        // shared tail blocks (the registry or another table
+                        // still holds them) are decremented, not recycled
+                        self.release_block(b);
+                    }
+                }
             }
         }
         if shortened {
@@ -856,15 +1181,18 @@ impl KvCache {
         true
     }
 
-    /// Release a session's blocks — device *or* host tier — and forget
-    /// it. Returns `false` (and trips the `free_unknown` counter: loud,
-    /// never silent) when this cache holds nothing for the session, which
-    /// legitimately happens on error-path releases for batches this
+    /// Release a session's blocks — on whichever tier they live — and
+    /// forget it. Returns `false` (and trips the `free_unknown` counter:
+    /// loud, never silent) when this cache holds nothing for the session,
+    /// which legitimately happens on error-path releases for batches this
     /// worker never executed. A session this cache *recently released*
     /// is different: freeing it again is a double release (a
     /// cancellation/watchdog race), counted in `double_free` and fatal
-    /// in debug builds.
+    /// in debug builds — the recently-freed ring covers device, host,
+    /// *and* peer frees alike, so each anomaly is counted exactly once
+    /// regardless of where the session's bytes sat when it died.
     pub fn free(&mut self, session: u64) -> bool {
+        self.settle(session);
         match self.sessions.remove(&session) {
             None => {
                 self.note_unknown_release(session, "free");
@@ -872,19 +1200,32 @@ impl KvCache {
             }
             Some(s) => {
                 self.note_freed(session);
-                if s.spilled {
-                    let host = self.host.as_mut().expect("spilled session without a host tier");
-                    let buf =
-                        host.bufs.remove(&session).expect("spilled session has a host buffer");
-                    let bytes = (buf.len() * 4) as u64;
-                    host.ledger.dealloc(bytes);
-                    G_HOST_BYTES.fetch_sub(bytes, Ordering::Relaxed);
-                    G_SESSIONS_SPILLED.fetch_sub(1, Ordering::Relaxed);
-                } else {
-                    for b in s.blocks {
-                        // a shared block survives its session: the prefix
-                        // registry (or an adopter) still reads it
-                        self.release_block(b);
+                match s.loc {
+                    KvLoc::Host => {
+                        let host =
+                            self.host.as_mut().expect("spilled session without a host tier");
+                        let buf =
+                            host.bufs.remove(&session).expect("spilled session has a host buffer");
+                        let bytes = (buf.len() * 4) as u64;
+                        host.ledger.dealloc(bytes);
+                        G_HOST_BYTES.fetch_sub(bytes, Ordering::Relaxed);
+                        G_SESSIONS_SPILLED.fetch_sub(1, Ordering::Relaxed);
+                    }
+                    KvLoc::Peer => {
+                        let be = self.cfg.block_elems();
+                        let peer =
+                            self.peer.as_mut().expect("parked session without a peer tier");
+                        let bytes = peer.credit(session);
+                        peer.drop_guest(session, be);
+                        G_PEER_BYTES.fetch_sub(bytes, Ordering::Relaxed);
+                        G_SESSIONS_PARKED.fetch_sub(1, Ordering::Relaxed);
+                    }
+                    KvLoc::Device => {
+                        for b in s.blocks {
+                            // a shared block survives its session: the prefix
+                            // registry (or an adopter) still reads it
+                            self.release_block(b);
+                        }
                     }
                 }
                 G_SESSIONS.fetch_sub(1, Ordering::Relaxed);
@@ -927,6 +1268,25 @@ mod tests {
             .with_host_tier(host);
         cfg.grow_blocks = 4;
         KvCache::new(cfg)
+    }
+
+    /// Three-tier cache whose peer ring is a buffered self-loop (world 1).
+    fn peered(
+        bp: usize,
+        layers: usize,
+        width: usize,
+        device: usize,
+        host: usize,
+        peer: usize,
+    ) -> KvCache {
+        let mut cfg = KvCacheConfig::new(bp, layers, width)
+            .with_device_capacity(device)
+            .with_host_tier(host)
+            .with_peer_tier(peer);
+        cfg.grow_blocks = 4;
+        let mut c = KvCache::new(cfg);
+        c.attach_self_peer();
+        c
     }
 
     fn row(tag: f32, w: usize) -> Vec<f32> {
@@ -1345,18 +1705,279 @@ mod tests {
         assert_eq!(c.host_bytes_used(), 0);
     }
 
+    // ---- three-tier (peer) behaviour -----------------------------------
+
+    #[test]
+    fn park_fetch_roundtrip_preserves_rows() {
+        let mut c = peered(3, 2, 4, 8, 64, 8);
+        fill(&mut c, 7, 2, 8, 4); // 3 blocks
+        let before_use = c.blocks_in_use();
+        let bytes = c.park(7);
+        assert_eq!(bytes, 3 * c.config().block_bytes());
+        assert!(c.is_parked(7));
+        assert!(c.is_spilled(7), "parked is off-device");
+        assert_eq!(c.blocks_in_use(), before_use - 3);
+        assert_eq!(c.peer_bytes_used(), bytes);
+        assert_eq!(c.parked_count(), 1);
+        assert_eq!(c.host_bytes_used(), 0, "park must not touch the host tier");
+        // a second session can reuse the freed blocks meanwhile
+        fill(&mut c, 8, 2, 5, 4);
+        assert_eq!(c.fetch(7), bytes);
+        assert!(!c.is_parked(7));
+        assert_eq!(c.peer_bytes_used(), 0);
+        assert_eq!(c.guest_bytes_used(), 0, "holder side must credit on fetch");
+        // both sessions read back exactly what was written
+        check(&c, 7, 2, 8, 4);
+        check(&c, 8, 2, 5, 4);
+        // growth continues cleanly after coming home
+        for layer in 0..2u64 {
+            let tag = (7 * 1000 + layer * 100 + 8) as f32;
+            c.write_row(7, layer as usize, 8, &row(tag, 4), &row(tag + 0.5, 4));
+        }
+        c.advance(7, 9);
+        check(&c, 7, 2, 9, 4);
+    }
+
+    #[test]
+    fn park_noops_are_benign_and_denials_counted() {
+        let mut c = peered(2, 1, 2, 8, 16, 1); // peer tier: one block only
+        fill(&mut c, 1, 1, 2, 2); // 1 block
+        fill(&mut c, 2, 1, 4, 2); // 2 blocks: won't fit the peer tier
+        let denied_before = global_stats().park_denied;
+        assert_eq!(c.park(2), 0, "peer tier must refuse an oversized park");
+        assert!(global_stats().park_denied > denied_before);
+        assert!(!c.is_parked(2));
+        // unknown session / double park / fetch of resident: no-ops
+        assert_eq!(c.park(99), 0);
+        assert!(c.park(1) > 0);
+        assert_eq!(c.park(1), 0);
+        assert_eq!(c.fetch(99), 0);
+        assert_eq!(c.fetch(2), 0);
+        assert!(c.fetch(1) > 0);
+        // a cache without a peer tier refuses loudly too
+        let mut flat = tiered(2, 1, 2, 4, 8);
+        fill(&mut flat, 1, 1, 2, 2);
+        let denied_before = global_stats().park_denied;
+        assert_eq!(flat.park(1), 0);
+        assert!(global_stats().park_denied > denied_before);
+    }
+
+    #[test]
+    fn park_refuses_shared_blocks() {
+        let mut c = peered(2, 1, 2, 8, 16, 8);
+        fill(&mut c, 1, 1, 4, 2); // 2 blocks
+        assert_eq!(c.retain_prefix(1, 4), 2);
+        let denied = global_stats().spill_denied_shared;
+        assert_eq!(c.park(1), 0, "a shared session must never park");
+        assert!(global_stats().spill_denied_shared > denied);
+        assert!(!c.is_parked(1));
+        c.evict_prefix(&[1]);
+        assert!(c.park(1) > 0);
+        assert!(c.fetch(1) > 0);
+        check(&c, 1, 1, 4, 2);
+    }
+
+    #[test]
+    fn spill_of_parked_session_demotes_to_host() {
+        let mut c = peered(2, 1, 2, 8, 16, 8);
+        fill(&mut c, 5, 1, 6, 2); // 3 blocks
+        let bytes = c.park(5);
+        assert!(bytes > 0);
+        let demotes = global_stats().demotes;
+        // peer pressure: the policy spills the parked session, which
+        // moves its image peer -> host with both ledgers settled
+        assert_eq!(c.spill(5), bytes);
+        assert!(global_stats().demotes > demotes);
+        assert!(c.is_spilled(5));
+        assert!(!c.is_parked(5));
+        assert_eq!(c.peer_bytes_used(), 0);
+        assert_eq!(c.guest_bytes_used(), 0);
+        assert_eq!(c.host_bytes_used(), bytes);
+        // and comes back bit-exact from the host tier
+        assert_eq!(c.prefetch(5), bytes);
+        check(&c, 5, 1, 6, 2);
+        // a demotion the host tier cannot absorb leaves the image parked
+        let mut small = peered(2, 1, 2, 8, 1, 8); // host: one block
+        fill(&mut small, 6, 1, 4, 2); // 2 blocks
+        assert!(small.park(6) > 0);
+        let denied = global_stats().spill_denied;
+        assert_eq!(small.spill(6), 0);
+        assert!(global_stats().spill_denied > denied);
+        assert!(small.is_parked(6), "failed demotion must keep the image parked");
+        assert!(small.fetch(6) > 0);
+        check(&small, 6, 1, 4, 2);
+    }
+
+    #[test]
+    fn truncate_tail_shrinks_parked_images() {
+        let mut c = peered(2, 1, 2, 8, 16, 8);
+        fill(&mut c, 5, 1, 8, 2); // 4 blocks
+        let bytes_full = c.park(5);
+        assert_eq!(bytes_full, 4 * c.config().block_bytes());
+        // truncate while parked: the owner ledger shrinks and the holder
+        // image shortens in place
+        assert!(c.truncate_tail(5, 3)); // ceil(3/2) = 2 blocks stay
+        assert_eq!(c.peer_bytes_used(), 2 * c.config().block_bytes());
+        assert_eq!(c.guest_bytes_used(), 2 * c.config().block_bytes());
+        assert!(c.is_parked(5));
+        // fetching back restores exactly the surviving prefix
+        assert_eq!(c.fetch(5), 2 * c.config().block_bytes());
+        assert_eq!(c.len(5), Some(3));
+        assert_eq!(c.blocks_in_use(), 2);
+        check(&c, 5, 1, 3, 2);
+        assert!(c.free(5));
+        assert_eq!(c.blocks_in_use(), 0);
+        assert_eq!(c.peer_bytes_used(), 0);
+        assert_eq!(c.guest_bytes_used(), 0);
+    }
+
+    #[test]
+    fn free_drops_peer_tier_entries() {
+        let mut c = peered(2, 1, 2, 8, 16, 8);
+        fill(&mut c, 1, 1, 4, 2); // 2 blocks
+        assert!(c.park(1) > 0);
+        assert!(c.peer_bytes_used() > 0);
+        assert!(c.free(1));
+        assert_eq!(c.peer_bytes_used(), 0);
+        assert_eq!(c.guest_bytes_used(), 0, "holder must drop the dead guest image");
+        assert_eq!(c.parked_count(), 0);
+        assert_eq!(c.session_count(), 0);
+        assert_eq!(c.blocks_in_use(), 0);
+    }
+
+    /// Satellite regression for the cancel×spill race: the recently-freed
+    /// guard ring must cover frees on *every* tier, so a racing second
+    /// release counts `double_free` exactly once — and stale tier commands
+    /// (spill/prefetch/park/fetch of the dead id) stay silent no-ops, not
+    /// `free_unknown` noise.
+    #[test]
+    fn cancel_race_frees_are_ring_guarded_on_every_tier() {
+        use std::panic::{catch_unwind, AssertUnwindSafe};
+        let mut c = peered(2, 1, 2, 8, 16, 8);
+        for (id, offload) in [(1u64, "host"), (2u64, "peer")] {
+            fill(&mut c, id, 1, 4, 2);
+            match offload {
+                "host" => assert!(c.spill(id) > 0),
+                _ => assert!(c.park(id) > 0),
+            }
+            assert!(c.free(id), "off-device free must succeed");
+            // stale tier commands racing the free are benign no-ops
+            let unk = global_stats().free_unknown;
+            let dbl = global_stats().double_free;
+            assert_eq!(c.spill(id), 0);
+            assert_eq!(c.prefetch(id), 0);
+            assert_eq!(c.park(id), 0);
+            assert_eq!(c.fetch(id), 0);
+            assert_eq!(global_stats().free_unknown, unk, "stale {offload} ops miscounted");
+            assert_eq!(global_stats().double_free, dbl, "stale {offload} ops double-counted");
+            // the racing second free is the anomaly, counted exactly once
+            let got = catch_unwind(AssertUnwindSafe(|| c.free(id)));
+            match got {
+                Ok(ret) => {
+                    assert!(!cfg!(debug_assertions), "debug build must assert");
+                    assert!(!ret);
+                }
+                Err(_) => assert!(cfg!(debug_assertions)),
+            }
+            assert!(global_stats().double_free > dbl, "{offload} double free uncounted");
+        }
+        assert_eq!(c.blocks_in_use(), 0);
+        assert_eq!(c.host_bytes_used(), 0);
+        assert_eq!(c.peer_bytes_used(), 0);
+        assert_eq!(c.guest_bytes_used(), 0);
+    }
+
+    // ---- overlapped copier ---------------------------------------------
+
+    /// Three-tier cache with the staging copier on.
+    fn copiered(device: usize, host: usize, peer: usize) -> KvCache {
+        let mut cfg = KvCacheConfig::new(2, 1, 2)
+            .with_device_capacity(device)
+            .with_host_tier(host)
+            .with_peer_tier(peer)
+            .with_copier(true);
+        cfg.grow_blocks = 4;
+        let mut c = KvCache::new(cfg);
+        c.attach_self_peer();
+        c
+    }
+
+    #[test]
+    fn copier_stages_host_and_peer_images_for_settle() {
+        let mut c = copiered(8, 16, 8);
+        fill(&mut c, 1, 1, 4, 2); // 2 blocks
+        fill(&mut c, 2, 1, 2, 2); // 1 block
+        assert!(c.spill(1) > 0);
+        assert!(c.park(2) > 0);
+        let in_use = c.blocks_in_use();
+        // staging returns immediately; the landing copy runs on the
+        // copier thread and install waits for settle
+        assert!(c.prefetch(1) > 0);
+        assert!(c.fetch(2) > 0);
+        assert!(!c.is_spilled(1) && !c.is_parked(2), "staged sessions read as device");
+        assert_eq!(c.host_bytes_used(), 0, "ledgers settle at stage time");
+        assert_eq!(c.peer_bytes_used(), 0);
+        c.settle_all();
+        assert_eq!(c.blocks_in_use(), in_use + 3);
+        check(&c, 1, 1, 4, 2);
+        check(&c, 2, 1, 2, 2);
+        // a second settle is a no-op
+        c.settle_all();
+        assert_eq!(c.blocks_in_use(), in_use + 3);
+    }
+
+    #[test]
+    fn writes_settle_pending_installs_implicitly() {
+        let mut c = copiered(8, 16, 8);
+        fill(&mut c, 3, 1, 3, 2); // 2 blocks
+        assert!(c.park(3) > 0);
+        assert!(c.fetch(3) > 0);
+        // no explicit settle: the next write must install first, not
+        // scribble into a stale block table
+        let tag = (3 * 1000 + 3) as f32;
+        c.write_row(3, 0, 3, &row(tag, 2), &row(tag + 0.5, 2));
+        c.advance(3, 4);
+        check(&c, 3, 1, 4, 2);
+        assert!(c.free(3));
+        assert_eq!(c.blocks_in_use(), 0);
+    }
+
+    #[test]
+    fn free_of_a_staged_session_does_not_leak_any_tier() {
+        let mut c = copiered(8, 16, 8);
+        fill(&mut c, 4, 1, 4, 2);
+        assert!(c.spill(4) > 0);
+        assert!(c.prefetch(4) > 0);
+        // the cancel lands while the image is still in flight
+        assert!(c.free(4));
+        assert_eq!(c.blocks_in_use(), 0, "staged free leaked device blocks");
+        assert_eq!(c.host_bytes_used(), 0);
+        assert_eq!(c.peer_bytes_used(), 0);
+        assert_eq!(c.guest_bytes_used(), 0);
+        assert_eq!(c.session_count(), 0);
+        // truncate-while-staged settles first too
+        fill(&mut c, 5, 1, 4, 2);
+        assert!(c.park(5) > 0);
+        assert!(c.fetch(5) > 0);
+        assert!(c.truncate_tail(5, 1));
+        assert_eq!(c.blocks_in_use(), 1);
+        check(&c, 5, 1, 1, 2);
+        assert!(c.free(5));
+        assert_eq!(c.blocks_in_use(), 0);
+    }
+
     /// Property-style: random interleavings of append / truncate / spill /
-    /// prefetch / free preserve block accounting and gathered-row contents.
-    /// A deterministic LCG drives the schedule; a shadow model (per-session
-    /// expected length) checks every gather against the rows `fill`-style
-    /// writes produced.
+    /// park / fetch / prefetch / free preserve block accounting and
+    /// gathered-row contents across all three tiers. A deterministic LCG
+    /// drives the schedule; a shadow model (per-session expected length)
+    /// checks every gather against the rows `fill`-style writes produced.
     #[test]
     fn random_interleavings_preserve_accounting_and_contents() {
         const BP: usize = 3;
         const LAYERS: usize = 2;
         const W: usize = 4;
         const N_SESSIONS: u64 = 6;
-        let mut c = tiered(BP, LAYERS, W, 16, 64);
+        let mut c = peered(BP, LAYERS, W, 16, 64, 8);
         let mut rng: u64 = 0x9E37_79B9_7F4A_7C15;
         let mut next = |m: u64| {
             rng = rng.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
@@ -1369,10 +1990,13 @@ mod tests {
         for step in 0..400 {
             let id = next(N_SESSIONS);
             let idx = id as usize;
-            match next(5) {
-                // append 1..=3 positions (prefetch first if parked — the
-                // production write path never touches a spilled session)
+            match next(7) {
+                // append 1..=3 positions (bring it home first if off-device
+                // — the production write path never touches one)
                 0 => {
+                    if c.is_parked(id) {
+                        c.fetch(id);
+                    }
                     if c.is_spilled(id) {
                         c.prefetch(id);
                     }
@@ -1404,6 +2028,12 @@ mod tests {
                 3 => {
                     c.prefetch(id);
                 }
+                4 => {
+                    c.park(id);
+                }
+                5 => {
+                    c.fetch(id);
+                }
                 _ => {
                     if model[idx].is_some() {
                         assert!(c.free(id), "live session refused free (step {step})");
@@ -1429,13 +2059,16 @@ mod tests {
         // contents: every surviving session gathers exactly its prefix
         for id in 0..N_SESSIONS {
             if let Some(len) = model[id as usize] {
+                if c.is_parked(id) {
+                    c.fetch(id);
+                }
                 if c.is_spilled(id) {
                     c.prefetch(id);
                 }
                 check(&c, id, LAYERS, len, W);
             }
         }
-        // teardown: everything comes back
+        // teardown: everything comes back, on every tier
         for id in 0..N_SESSIONS {
             if model[id as usize].is_some() {
                 c.free(id);
@@ -1443,6 +2076,8 @@ mod tests {
         }
         assert_eq!(c.blocks_in_use(), 0, "interleaving leaked device blocks");
         assert_eq!(c.host_bytes_used(), 0, "interleaving leaked host bytes");
+        assert_eq!(c.peer_bytes_used(), 0, "interleaving leaked peer bytes");
+        assert_eq!(c.guest_bytes_used(), 0, "interleaving leaked guest bytes");
         assert_eq!(c.session_count(), 0);
     }
 

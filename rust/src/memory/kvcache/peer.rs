@@ -1,0 +1,395 @@
+//! Peer-memory tier and overlapped copier: §4.4's PMEP, promoted from the
+//! simulator (`sim::pmep`) into the live cache.
+//!
+//! Workers form a **parking ring**: worker `r` parks cold session block
+//! images in the spare device memory of its *peer* `(r+1) % world`, and in
+//! turn holds images for its *client* `(r-1+world) % world`. Everything is
+//! shipped over the ordinary [`crate::comm::channel`] endpoints, and both
+//! ends account bytes in a [`MemoryLedger`]: the owner against a capped
+//! "peer" ledger (this is what decides park eligibility, in whole blocks,
+//! so every worker reaches the same verdict regardless of shard size), the
+//! holder against an uncapped "peer-guest" ledger (pure bookkeeping — a
+//! holder never refuses what its client's capped ledger admitted).
+//!
+//! The exchange protocol is driven purely by consistency-queue ticket
+//! order — there is no extra handshake:
+//!
+//! * **Park** ticket: every worker copies its own shard image out, sends
+//!   it to its peer, and opportunistically drains ([`PeerTier::pump`])
+//!   whatever its client has shipped so far. Sends are buffered, so
+//!   nobody waits for a slow neighbour here.
+//! * **Fetch/demote** ticket: every worker first ships the client's image
+//!   home ([blocking][PeerTier::retrieve] until the client's park from the
+//!   earlier ticket has arrived — the client is strictly behind in the
+//!   same ticket stream, so this always terminates), then receives its own
+//!   image from its peer. Send-before-receive keeps the ring deadlock-free.
+//!
+//! A world of one degenerates to a self-loop over a buffered self-channel
+//! ([`crate::comm::channel::CommWorld::new_looped`]): the worker is its own
+//! peer, and the park/fetch paths are byte-identical to the mesh case.
+//!
+//! [`KvCopier`] is the overlap half (modeled on `memory::pool`'s copier
+//! thread): staging an off-tier image back toward the device hands the
+//! landing memcpy to a dedicated thread so it overlaps the current
+//! forward; the worker only waits — [`KvCopier::wait_landed`], counted as
+//! prefetch stall — if the copy has not finished by the time the rows are
+//! actually needed.
+
+use crate::comm::channel::{CommWorld, Endpoint, Mode};
+use crate::memory::arena::{ArenaBuf, ArenaPool};
+use crate::memory::ledger::MemoryLedger;
+use std::collections::{HashMap, HashSet};
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// Block images on the wire between ring neighbours.
+pub enum PeerMsg {
+    /// Owner → holder: park this session's image in your spare memory.
+    Park { session: u64, image: ArenaBuf },
+    /// Holder → owner: a parked image coming home (fetch or demote).
+    Image { session: u64, image: ArenaBuf },
+}
+
+/// One worker's two-sided view of the parking ring (owner of its parked
+/// sessions, holder of its client's). Lives inside [`super::KvCache`];
+/// single-threaded like the rest of the cache.
+pub(super) struct PeerTier {
+    /// Owner side: capped ledger of bytes parked in the peer's memory.
+    pub(super) ledger: MemoryLedger,
+    /// Holder side: uncapped ledger of bytes held for the client.
+    guest_ledger: MemoryLedger,
+    /// Owner side: bytes parked per session.
+    parked: HashMap<u64, u64>,
+    /// Holder side: the client's images.
+    guests: HashMap<u64, ArenaBuf>,
+    /// Holder side: sessions freed before their park image arrived — the
+    /// late image is dropped on arrival instead of leaking.
+    dead_guests: HashSet<u64>,
+    /// Holder side: truncations that outran the park image (blocks to
+    /// keep), applied on arrival.
+    pending_trunc: HashMap<u64, usize>,
+    /// Images that came home ahead of the call that wants them.
+    homebound: HashMap<u64, ArenaBuf>,
+    ep: Endpoint<PeerMsg>,
+    /// Ring neighbour we park into.
+    peer: usize,
+    /// Ring neighbour whose images we hold.
+    client: usize,
+}
+
+impl PeerTier {
+    pub(super) fn new(
+        device: usize,
+        capacity_bytes: u64,
+        ep: Endpoint<PeerMsg>,
+        peer: usize,
+        client: usize,
+    ) -> PeerTier {
+        PeerTier {
+            ledger: MemoryLedger::new(device, capacity_bytes).with_tier("peer"),
+            guest_ledger: MemoryLedger::new(device, u64::MAX).with_tier("peer-guest"),
+            parked: HashMap::new(),
+            guests: HashMap::new(),
+            dead_guests: HashSet::new(),
+            pending_trunc: HashMap::new(),
+            homebound: HashMap::new(),
+            ep,
+            peer,
+            client,
+        }
+    }
+
+    /// Self-loop tier for a world of one (and unit tests): the worker is
+    /// its own ring neighbour over a buffered self-channel.
+    pub(super) fn looped(device: usize, capacity_bytes: u64) -> PeerTier {
+        let ep = CommWorld::new_looped::<PeerMsg>(1, Mode::NonBlocking).pop().unwrap();
+        PeerTier::new(device, capacity_bytes, ep, 0, 0)
+    }
+
+    pub(super) fn bytes_used(&self) -> u64 {
+        self.ledger.used()
+    }
+
+    pub(super) fn sessions(&self) -> usize {
+        self.parked.len()
+    }
+
+    pub(super) fn guest_bytes(&self) -> u64 {
+        self.guest_ledger.used()
+    }
+
+    pub(super) fn guest_count(&self) -> usize {
+        self.guests.len()
+    }
+
+    pub(super) fn parked_bytes(&self, session: u64) -> Option<u64> {
+        self.parked.get(&session).copied()
+    }
+
+    /// Owner side: reserve room for a park (whole-block bytes, so every
+    /// shard size reaches the same verdict).
+    pub(super) fn charge(&mut self, session: u64, bytes: u64) -> anyhow::Result<()> {
+        self.ledger.alloc(bytes)?;
+        self.parked.insert(session, bytes);
+        Ok(())
+    }
+
+    /// Owner side: return a parked session's bytes to the ledger.
+    pub(super) fn credit(&mut self, session: u64) -> u64 {
+        let bytes = self.parked.remove(&session).unwrap_or(0);
+        self.ledger.dealloc(bytes);
+        bytes
+    }
+
+    /// Owner side: shrink a parked session's reservation to `new_bytes`,
+    /// returning the bytes freed.
+    pub(super) fn shrink_parked(&mut self, session: u64, new_bytes: u64) -> u64 {
+        match self.parked.get_mut(&session) {
+            Some(b) if *b > new_bytes => {
+                let freed = *b - new_bytes;
+                *b = new_bytes;
+                self.ledger.dealloc(freed);
+                freed
+            }
+            _ => 0,
+        }
+    }
+
+    /// Absorb one wire message into the holder-side maps.
+    fn absorb(&mut self, msg: PeerMsg, be: usize) {
+        match msg {
+            PeerMsg::Park { session, image } => self.admit_guest(session, image, be),
+            PeerMsg::Image { session, image } => {
+                self.homebound.insert(session, image);
+            }
+        }
+    }
+
+    fn admit_guest(&mut self, session: u64, mut image: ArenaBuf, be: usize) {
+        if self.dead_guests.remove(&session) {
+            return; // freed before arrival: drop the late image
+        }
+        if let Some(keep) = self.pending_trunc.remove(&session) {
+            if image.len() > keep * be {
+                image.vec_mut().truncate(keep * be);
+            }
+        }
+        self.guest_ledger.alloc((image.len() * 4) as u64).expect("guest ledger is uncapped");
+        self.guests.insert(session, image);
+    }
+
+    /// Holder side: drain whatever the client has shipped so far (never
+    /// blocks).
+    pub(super) fn pump(&mut self, be: usize) {
+        while let Some(msg) = self.ep.try_recv(self.client) {
+            self.absorb(msg, be);
+        }
+    }
+
+    /// Owner side: ship our shard image to the peer (buffered — returns
+    /// immediately), then drain the client's traffic.
+    pub(super) fn send_park(&mut self, session: u64, image: ArenaBuf, be: usize) {
+        self.ep.send(self.peer, PeerMsg::Park { session, image });
+        self.pump(be);
+    }
+
+    /// Holder side: take the client's image of `session`, blocking until
+    /// its park (from an earlier ticket) has arrived if need be.
+    fn guest_take(&mut self, session: u64, be: usize) -> ArenaBuf {
+        self.pump(be);
+        loop {
+            if let Some(img) = self.guests.remove(&session) {
+                self.guest_ledger.dealloc((img.len() * 4) as u64);
+                return img;
+            }
+            // the client is strictly behind in the same ticket stream;
+            // its park for this session is on the wire or still queued
+            let msg = self.ep.recv(self.client);
+            self.absorb(msg, be);
+        }
+    }
+
+    /// The fetch/demote exchange for `session`, symmetric on every worker:
+    /// ship the client's copy home first, then receive our own from the
+    /// peer. Send-before-receive keeps the ring deadlock-free; ticket
+    /// order guarantees both images exist.
+    pub(super) fn retrieve(&mut self, session: u64, be: usize) -> ArenaBuf {
+        let home = self.guest_take(session, be);
+        if self.peer == self.ep.rank {
+            // world of one: the client's copy *is* our own image
+            return home;
+        }
+        self.ep.send(self.client, PeerMsg::Image { session, image: home });
+        loop {
+            if let Some(img) = self.homebound.remove(&session) {
+                return img;
+            }
+            let msg = self.ep.recv(self.peer);
+            self.absorb(msg, be);
+        }
+    }
+
+    /// Holder side of a free: drop the client's image, or mark the session
+    /// dead so a still-in-flight park image is dropped on arrival.
+    pub(super) fn drop_guest(&mut self, session: u64, be: usize) {
+        self.pump(be);
+        self.pending_trunc.remove(&session);
+        if let Some(img) = self.guests.remove(&session) {
+            self.guest_ledger.dealloc((img.len() * 4) as u64);
+        } else {
+            self.dead_guests.insert(session);
+        }
+    }
+
+    /// Holder side of a tail truncation: shorten the client's image in
+    /// place (every worker truncates the same session at the same ticket,
+    /// so owner and holder arithmetic agree), or record it for arrival.
+    pub(super) fn truncate_guest(&mut self, session: u64, keep_blocks: usize, be: usize) {
+        self.pump(be);
+        if let Some(img) = self.guests.get_mut(&session) {
+            let keep = keep_blocks * be;
+            if img.len() > keep {
+                let freed = ((img.len() - keep) * 4) as u64;
+                img.vec_mut().truncate(keep);
+                self.guest_ledger.dealloc(freed);
+            }
+        } else {
+            let e = self.pending_trunc.entry(session).or_insert(keep_blocks);
+            *e = (*e).min(keep_blocks);
+        }
+    }
+}
+
+/// What the copier thread does with its life.
+enum CopyReq {
+    /// Land this off-tier image so it is ready to install.
+    Stage { session: u64, image: ArenaBuf },
+    Stop,
+}
+
+struct CopierShared {
+    landed: Mutex<HashMap<u64, ArenaBuf>>,
+    cv: Condvar,
+}
+
+/// Per-worker copier thread (modeled on `memory::pool`'s): landing
+/// memcpys run here so they overlap the worker's current forward. All
+/// ledger and gauge accounting stays on the worker thread at stage time —
+/// only the data movement is asynchronous, so accounting is deterministic
+/// regardless of copier timing.
+pub(super) struct KvCopier {
+    tx: Sender<CopyReq>,
+    shared: Arc<CopierShared>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl KvCopier {
+    pub(super) fn spawn() -> KvCopier {
+        let (tx, rx) = std::sync::mpsc::channel();
+        let shared =
+            Arc::new(CopierShared { landed: Mutex::new(HashMap::new()), cv: Condvar::new() });
+        let sh = Arc::clone(&shared);
+        let handle = std::thread::Builder::new()
+            .name("kv-copier".into())
+            .spawn(move || copier_loop(rx, sh))
+            .expect("spawn kv copier");
+        KvCopier { tx, shared, handle: Some(handle) }
+    }
+
+    /// Hand an off-tier image to the copier; the landing copy overlaps
+    /// whatever the worker does next.
+    pub(super) fn stage(&self, session: u64, image: ArenaBuf) {
+        self.tx.send(CopyReq::Stage { session, image }).expect("kv copier died");
+    }
+
+    /// Block until the staged image for `session` has landed. The caller
+    /// measures this wait — it is the residual (un-overlapped) stall.
+    pub(super) fn wait_landed(&self, session: u64) -> ArenaBuf {
+        let mut landed = self.shared.landed.lock().unwrap();
+        loop {
+            if let Some(img) = landed.remove(&session) {
+                return img;
+            }
+            landed = self.shared.cv.wait(landed).unwrap();
+        }
+    }
+}
+
+impl Drop for KvCopier {
+    fn drop(&mut self) {
+        let _ = self.tx.send(CopyReq::Stop);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn copier_loop(rx: Receiver<CopyReq>, shared: Arc<CopierShared>) {
+    while let Ok(CopyReq::Stage { session, image }) = rx.recv() {
+        // the "DMA": land the image into a fresh arena buffer off the
+        // worker thread so the memcpy overlaps the current forward
+        let mut dst = ArenaPool::checkout(image.len());
+        dst.as_mut_slice().copy_from_slice(image.as_slice());
+        drop(image);
+        let mut landed = shared.landed.lock().unwrap();
+        landed.insert(session, dst);
+        shared.cv.notify_all();
+    }
+    ArenaPool::drain_thread();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn looped_tier_parks_and_retrieves_through_the_self_channel() {
+        let be = 4;
+        let mut t = PeerTier::looped(0, 1024);
+        t.charge(7, 32).unwrap();
+        assert_eq!(t.bytes_used(), 32);
+        t.send_park(7, ArenaBuf::owned(vec![1.0, 2.0, 3.0, 4.0]), be);
+        // the self-channel delivered our own image into the guest map
+        assert_eq!(t.guest_count(), 1);
+        assert_eq!(t.guest_bytes(), 16);
+        let img = t.retrieve(7, be);
+        assert_eq!(img.as_slice(), &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(t.guest_bytes(), 0);
+        assert_eq!(t.credit(7), 32);
+        assert_eq!(t.bytes_used(), 0);
+    }
+
+    #[test]
+    fn dead_guest_and_pending_truncation_apply_on_arrival() {
+        let be = 2;
+        let mut t = PeerTier::looped(0, 1024);
+        // free outruns the park image: the late arrival is dropped
+        t.drop_guest(5, be);
+        t.send_park(5, ArenaBuf::owned(vec![0.0; 4]), be);
+        t.pump(be);
+        assert_eq!(t.guest_count(), 0, "dead guest image must be dropped");
+        assert_eq!(t.guest_bytes(), 0);
+        // truncation outruns the park image: applied when it lands
+        t.truncate_guest(6, 1, be);
+        t.send_park(6, ArenaBuf::owned(vec![9.0; 6]), be); // 3 blocks of 2
+        t.pump(be);
+        assert_eq!(t.guest_bytes(), (be * 4) as u64, "pending truncation skipped");
+        // in-place truncation of an arrived image
+        t.truncate_guest(6, 0, be);
+        assert_eq!(t.guest_bytes(), 0);
+        t.drop_guest(6, be);
+        assert_eq!(t.guest_count(), 0);
+    }
+
+    #[test]
+    fn copier_lands_images_for_settle() {
+        let c = KvCopier::spawn();
+        c.stage(3, ArenaBuf::owned(vec![1.5; 8]));
+        let img = c.wait_landed(3);
+        assert_eq!(img.as_slice(), &[1.5; 8]);
+        // staging more after a wait still works; Drop joins the thread
+        c.stage(4, ArenaBuf::owned(vec![2.5; 2]));
+        assert_eq!(c.wait_landed(4).as_slice(), &[2.5; 2]);
+    }
+}

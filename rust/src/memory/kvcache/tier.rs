@@ -1,4 +1,5 @@
-//! The spill/prefetch engine behind the two-tier K/V cache.
+//! The placement engine behind the three-tier K/V cache (device → peer →
+//! host).
 //!
 //! Two halves, mirroring the split between the centralized engine and the
 //! SPMD workers (§4.1.2):
@@ -16,15 +17,20 @@
 //!   occupancy. Block counts per session are sharding-independent
 //!   (`ceil(len / block_positions)` on every worker, whatever its tp/pp
 //!   slice), so one model tracks them all. The policy decides *which*
-//!   sessions spill (LRU by last decode step, cold and unpinned only)
-//!   and *when* sessions stage back (sync at decode-bucket admission,
-//!   or one bucket ahead as a prefetch hint, mirroring
+//!   sessions leave the device (LRU by last decode step, cold and
+//!   unpinned only), *where* they go — a peer worker's spare memory
+//!   first (§4.4 PMEP, when `peer_blocks > 0`), demoting the coldest
+//!   parked sessions peer → host under peer pressure, host directly
+//!   otherwise — and *when* sessions stage back (sync at decode-bucket
+//!   admission, or one bucket ahead as a prefetch hint, mirroring
 //!   `PoolConfig.lookahead`), and emits [`TierCmd`]s the engine publishes
 //!   as ticketed commands through the consistency queue. Ticket order is
-//!   the correctness story: a `Prefetch` issued at bucket-formation time
-//!   always carries a smaller ticket than the bucket's `Forward`, so by
-//!   the time any worker pops the decode step, its sessions are resident
-//!   — without any worker-to-engine backchannel.
+//!   the correctness story: a `Prefetch`/`Fetch` issued at
+//!   bucket-formation time always carries a smaller ticket than the
+//!   bucket's `Forward`, so by the time any worker pops the decode step,
+//!   its sessions are resident — without any worker-to-engine
+//!   backchannel. (For the peer ring, ticket order is also what makes
+//!   the park/fetch exchange deadlock-free; see `kvcache::peer`.)
 //!
 //! The policy also implements **admission control**: a prefill batch
 //! whose sessions cannot fit the device tier even after spilling every
@@ -47,7 +53,7 @@ impl HostTier {
     /// `capacity_bytes` of 0 means unlimited.
     pub fn new(device: usize, capacity_bytes: u64) -> HostTier {
         let cap = if capacity_bytes == 0 { u64::MAX } else { capacity_bytes };
-        HostTier { ledger: MemoryLedger::new(device, cap), bufs: HashMap::new() }
+        HostTier { ledger: MemoryLedger::new(device, cap).with_tier("host"), bufs: HashMap::new() }
     }
 
     pub fn bytes_used(&self) -> u64 {
@@ -67,6 +73,10 @@ pub struct TierConfig {
     pub device_blocks: usize,
     /// Host-tier capacity in blocks (0 = unlimited).
     pub host_blocks: usize,
+    /// Peer-tier capacity in blocks — how much of the ring peer's spare
+    /// memory each worker may occupy (0 = tier disabled; placement then
+    /// degenerates to the two-tier device/host policy).
+    pub peer_blocks: usize,
     /// Spill trigger: fraction of `device_blocks` in use.
     pub high_water: f64,
     /// Spill target: evict cold sessions until use falls to this fraction.
@@ -82,10 +92,17 @@ impl TierConfig {
         TierConfig {
             device_blocks,
             host_blocks,
+            peer_blocks: 0,
             high_water: 0.90,
             low_water: 0.70,
             lookahead: 1,
         }
+    }
+
+    /// Enable the peer tier with room for `blocks` parked blocks.
+    pub fn with_peer(mut self, blocks: usize) -> TierConfig {
+        self.peer_blocks = blocks;
+        self
     }
 }
 
@@ -94,12 +111,19 @@ impl TierConfig {
 /// order.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum TierCmd {
-    /// Write these sessions' blocks out to the host tier.
+    /// Write these sessions' blocks out to the host tier. A session
+    /// currently *parked* in the peer tier demotes peer → host instead
+    /// (the worker's `spill` dispatches on the session's location).
     Spill(Vec<u64>),
-    /// Stage these sessions' blocks back into the device tier. `hint`
+    /// Stage these sessions' blocks back from the host tier. `hint`
     /// distinguishes lookahead prefetches (overlappable) from sync
     /// prefetches at bucket admission (decode-stall path).
     Prefetch { ids: Vec<u64>, hint: bool },
+    /// Park these sessions' blocks in the ring peer's spare memory.
+    Park(Vec<u64>),
+    /// Bring these sessions' images home from the peer tier. Same `hint`
+    /// split as `Prefetch`.
+    Fetch { ids: Vec<u64>, hint: bool },
 }
 
 /// Counters the policy accumulates (engine-side intent; the worker-side
@@ -117,6 +141,28 @@ pub struct TierPolicyStats {
     pub prefill_deferrals: u64,
     /// Spill candidates skipped because the host tier was full.
     pub spill_denied: u64,
+    /// Sessions parked in the peer tier.
+    pub parks: u64,
+    /// Sessions staged back from the peer tier (sync and hint alike; the
+    /// stall-class split lives in `prefetch_syncs`/`prefetch_hints`).
+    pub fetches: u64,
+    /// Parked sessions demoted peer → host under peer pressure.
+    pub demotes: u64,
+    /// Park candidates that found no peer room even after demotion (they
+    /// fall through to a plain host spill).
+    pub park_denied: u64,
+    /// Lookahead hints skipped because the same session already has a
+    /// staging command in flight (e.g. the same `form` pass just
+    /// sync-prefetched it) — each one would have been a duplicate copy.
+    pub hint_duplicate: u64,
+}
+
+/// Where the policy believes a session's blocks live.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Loc {
+    Device,
+    Peer,
+    Host,
 }
 
 #[derive(Debug)]
@@ -124,7 +170,7 @@ struct TierSession {
     /// Total positions the session's cache holds (tracked at decode-gate
     /// time, so it matches what the worker writes during that step).
     len: usize,
-    resident: bool,
+    loc: Loc,
     /// In a formed-but-uncompleted batch: never a spill victim.
     pinned: bool,
     /// Holds (or adopted) shared-prefix blocks: never a spill victim —
@@ -147,6 +193,14 @@ pub struct TierPolicy {
     sessions: HashMap<u64, TierSession>,
     device_used: usize,
     host_used: usize,
+    /// Peer-tier blocks the model believes are parked.
+    peer_used: usize,
+    /// Sessions with a staging command (sync or hint `Prefetch`/`Fetch`)
+    /// already in flight — consulted so a lookahead hint never duplicates
+    /// a copy the same (or an earlier) `form` pass already ordered.
+    /// Cleared when the session is next seen resident at its gate, spills
+    /// again, or finishes.
+    staging: std::collections::HashSet<u64>,
     /// Blocks held by pinned (in-flight) sessions — maintained
     /// incrementally so decode admission is O(bucket), not O(sessions).
     pinned_used: usize,
@@ -170,6 +224,8 @@ impl TierPolicy {
             sessions: HashMap::new(),
             device_used: 0,
             host_used: 0,
+            peer_used: 0,
+            staging: std::collections::HashSet::new(),
             pinned_used: 0,
             deferral_streak: false,
             step: 0,
@@ -191,6 +247,11 @@ impl TierPolicy {
         self.host_used
     }
 
+    /// Peer-tier blocks the model believes are parked.
+    pub fn peer_used(&self) -> usize {
+        self.peer_used
+    }
+
     /// Blocks pinned by in-flight batches (subset of `device_used`).
     pub fn pinned_used(&self) -> usize {
         self.pinned_used
@@ -200,9 +261,15 @@ impl TierPolicy {
         self.sessions.len()
     }
 
-    /// `None` if the session is unknown to the policy.
+    /// `None` if the session is unknown to the policy; `Some(false)` for
+    /// any off-device placement (peer *or* host).
     pub fn is_resident(&self, id: u64) -> Option<bool> {
-        self.sessions.get(&id).map(|s| s.resident)
+        self.sessions.get(&id).map(|s| s.loc == Loc::Device)
+    }
+
+    /// Is the session parked in the peer tier specifically?
+    pub fn is_parked(&self, id: u64) -> Option<bool> {
+        self.sessions.get(&id).map(|s| s.loc == Loc::Peer)
     }
 
     fn blocks_of(&self, len: usize) -> usize {
@@ -217,42 +284,114 @@ impl TierPolicy {
         ((self.cfg.device_blocks as f64) * self.cfg.low_water).floor() as usize
     }
 
-    /// Spill cold sessions (LRU by last decode step; never pinned ones)
-    /// until device use falls to `target` blocks or candidates run out.
-    /// Updates the model and returns the victim ids in eviction order.
-    /// `count_denials` suppresses the `spill_denied` stat on retries of
-    /// an already-parked prefill, so the counter reflects distinct
-    /// events rather than the former's ~ms retry cadence.
-    fn spill_to(&mut self, target: usize, count_denials: bool) -> Vec<u64> {
+    fn host_cap(&self) -> usize {
+        if self.cfg.host_blocks == 0 {
+            usize::MAX
+        } else {
+            self.cfg.host_blocks
+        }
+    }
+
+    /// Demote the coldest parked sessions peer → host until `need` more
+    /// blocks fit the peer tier (or the host fills up / candidates run
+    /// out). Demote ids ride in the `Spill` command — the worker's
+    /// `spill` dispatches a parked session to its demotion path — and
+    /// must be published *before* any new `Park`, so the peer ledger is
+    /// credited before the new parks charge it.
+    fn demote_for(&mut self, need: usize, spills: &mut Vec<u64>, count_denials: bool) {
+        if self.peer_used + need <= self.cfg.peer_blocks {
+            return;
+        }
+        let mut parked: Vec<(u64, u64, usize)> = self
+            .sessions
+            .iter()
+            .filter(|(_, s)| s.loc == Loc::Peer)
+            .map(|(&id, s)| (s.last_step, id, self.blocks_of(s.len)))
+            .collect();
+        parked.sort_unstable();
+        for (_, id, blocks) in parked {
+            if self.peer_used + need <= self.cfg.peer_blocks {
+                break;
+            }
+            if self.host_used + blocks > self.host_cap() {
+                if count_denials {
+                    self.stats.spill_denied += 1;
+                }
+                continue;
+            }
+            self.sessions.get_mut(&id).unwrap().loc = Loc::Host;
+            self.peer_used -= blocks;
+            self.host_used += blocks;
+            self.stats.demotes += 1;
+            spills.push(id);
+        }
+    }
+
+    /// Evict cold sessions (LRU by last decode step; never pinned or
+    /// shared ones) until device use falls to `target` blocks or
+    /// candidates run out. Victims go to the peer tier first (when
+    /// enabled), demoting the coldest parked sessions to host under peer
+    /// pressure, and to the host tier otherwise. Updates the model and
+    /// returns the commands to publish (`Spill` — demotions first, then
+    /// direct spills — before `Park`, so peer-ledger credits land before
+    /// new charges). `count_denials` suppresses the denial stats on
+    /// retries of an already-parked prefill, so the counters reflect
+    /// distinct events rather than the former's ~ms retry cadence.
+    fn relieve(&mut self, target: usize, count_denials: bool) -> Vec<TierCmd> {
         if self.device_used <= target {
             return Vec::new();
         }
         let mut candidates: Vec<(u64, u64, usize)> = self
             .sessions
             .iter()
-            .filter(|(_, s)| s.resident && !s.pinned && !s.shared)
+            .filter(|(_, s)| s.loc == Loc::Device && !s.pinned && !s.shared)
             .map(|(&id, s)| (s.last_step, id, self.blocks_of(s.len)))
             .collect();
         candidates.sort_unstable();
-        let host_cap = if self.cfg.host_blocks == 0 { usize::MAX } else { self.cfg.host_blocks };
-        let mut victims = Vec::new();
+        let mut spills = Vec::new();
+        let mut parks = Vec::new();
         for (_, id, blocks) in candidates {
             if self.device_used <= target {
                 break;
             }
-            if self.host_used + blocks > host_cap {
+            if self.cfg.peer_blocks > 0 && blocks <= self.cfg.peer_blocks {
+                self.demote_for(blocks, &mut spills, count_denials);
+                if self.peer_used + blocks <= self.cfg.peer_blocks {
+                    self.sessions.get_mut(&id).unwrap().loc = Loc::Peer;
+                    self.staging.remove(&id);
+                    self.device_used -= blocks;
+                    self.peer_used += blocks;
+                    self.stats.parks += 1;
+                    parks.push(id);
+                    continue;
+                }
+                // demotion couldn't clear room (host full): fall through
+                // to a plain host spill
+                if count_denials {
+                    self.stats.park_denied += 1;
+                }
+            }
+            if self.host_used + blocks > self.host_cap() {
                 if count_denials {
                     self.stats.spill_denied += 1;
                 }
                 continue; // a smaller session may still fit
             }
-            self.sessions.get_mut(&id).unwrap().resident = false;
+            self.sessions.get_mut(&id).unwrap().loc = Loc::Host;
+            self.staging.remove(&id);
             self.device_used -= blocks;
             self.host_used += blocks;
             self.stats.spills += 1;
-            victims.push(id);
+            spills.push(id);
         }
-        victims
+        let mut cmds = Vec::new();
+        if !spills.is_empty() {
+            cmds.push(TierCmd::Spill(spills));
+        }
+        if !parks.is_empty() {
+            cmds.push(TierCmd::Park(parks));
+        }
+        cmds
     }
 
     /// Admission control for a prefill batch: `rows` are `(session id,
@@ -266,11 +405,8 @@ impl TierPolicy {
         if self.device_used + need > self.cfg.device_blocks {
             let target = self.cfg.device_blocks.saturating_sub(need).min(self.low_mark());
             // a parked prefill is retried every former tick: count its
-            // host-full denials once per park, not once per retry
-            let victims = self.spill_to(target, !self.deferral_streak);
-            if !victims.is_empty() {
-                cmds.push(TierCmd::Spill(victims));
-            }
+            // tier-full denials once per park, not once per retry
+            cmds.extend(self.relieve(target, !self.deferral_streak));
         }
         // a batch bigger than the whole device tier can never be admitted
         // by waiting; let it through and rely on the slab's soft cap
@@ -291,7 +427,7 @@ impl TierPolicy {
             self.pinned_used += blocks;
             self.sessions.insert(
                 id,
-                TierSession { len, resident: true, pinned: true, shared: false, last_step: self.step },
+                TierSession { len, loc: Loc::Device, pinned: true, shared: false, last_step: self.step },
             );
         }
         (cmds, true)
@@ -353,15 +489,16 @@ impl TierPolicy {
 
     /// Gate a decode bucket: `rows` are `(session id, total length
     /// including the token being decoded)`. Pins every row, charges block
-    /// growth, stages spilled rows back (sync prefetch — the decode-stall
-    /// path the lookahead hints exist to avoid), and relieves pressure
-    /// past the high-water mark. Returned commands must be published
-    /// before the bucket's `Forward`.
+    /// growth, stages off-device rows back (sync fetch/prefetch — the
+    /// decode-stall path the lookahead hints exist to avoid), and
+    /// relieves pressure past the high-water mark. Returned commands must
+    /// be published before the bucket's `Forward`.
     pub fn gate_decode(&mut self, rows: &[(u64, usize)]) -> Vec<TierCmd> {
         self.step += 1;
         let step = self.step;
         let bp = self.block_positions;
-        let mut sync_ids = Vec::new();
+        let mut prefetch_ids = Vec::new();
+        let mut fetch_ids = Vec::new();
         for &(id, len) in rows {
             if !self.sessions.contains_key(&id) {
                 // unknown to the policy (e.g. policy attached after the
@@ -371,25 +508,37 @@ impl TierPolicy {
                 self.pinned_used += blocks;
                 self.sessions.insert(
                     id,
-                    TierSession { len, resident: true, pinned: true, shared: false, last_step: step },
+                    TierSession { len, loc: Loc::Device, pinned: true, shared: false, last_step: step },
                 );
                 continue;
             }
             let s = self.sessions.get_mut(&id).unwrap();
             let old = blocks_for(bp, s.len);
             let new = blocks_for(bp, len);
-            let was_spilled = !s.resident;
+            let was = s.loc;
             let was_pinned = s.pinned;
-            s.resident = true;
+            s.loc = Loc::Device;
             s.len = len;
             s.pinned = true;
             s.last_step = step;
-            if was_spilled {
+            match was {
+                // an earlier staging (sync or hint) has settled by this
+                // bucket's forward: the id is fair game for hints again
+                Loc::Device => {
+                    self.staging.remove(&id);
+                }
                 // its blocks move host -> device at the old size; growth
                 // (if any) lands on the device side
-                sync_ids.push(id);
-                self.host_used -= old;
-                self.device_used += old;
+                Loc::Host => {
+                    prefetch_ids.push(id);
+                    self.host_used -= old;
+                    self.device_used += old;
+                }
+                Loc::Peer => {
+                    fetch_ids.push(id);
+                    self.peer_used -= old;
+                    self.device_used += old;
+                }
             }
             // the length can shrink as well as grow: a speculative verify
             // step charges its whole drafted window, and the worker
@@ -400,35 +549,51 @@ impl TierPolicy {
         }
         let mut cmds = Vec::new();
         if self.device_used > self.high_mark() {
-            let victims = self.spill_to(self.low_mark(), true);
-            if !victims.is_empty() {
-                cmds.push(TierCmd::Spill(victims));
-            }
+            cmds.extend(self.relieve(self.low_mark(), true));
         }
-        if !sync_ids.is_empty() {
-            self.stats.prefetch_syncs += sync_ids.len() as u64;
-            cmds.push(TierCmd::Prefetch { ids: sync_ids, hint: false });
+        if !fetch_ids.is_empty() {
+            self.stats.prefetch_syncs += fetch_ids.len() as u64;
+            self.stats.fetches += fetch_ids.len() as u64;
+            for &id in &fetch_ids {
+                self.staging.insert(id);
+            }
+            cmds.push(TierCmd::Fetch { ids: fetch_ids, hint: false });
+        }
+        if !prefetch_ids.is_empty() {
+            self.stats.prefetch_syncs += prefetch_ids.len() as u64;
+            for &id in &prefetch_ids {
+                self.staging.insert(id);
+            }
+            cmds.push(TierCmd::Prefetch { ids: prefetch_ids, hint: false });
         }
         cmds
     }
 
     /// Lookahead: `upcoming` are the `(id, len)` pairs expected in the
-    /// *next* decode bucket. Spilled ones are staged back now (hint
-    /// prefetch) so their bucket admits without a sync stall — but only
-    /// while staying under the high-water mark; hints never cause
-    /// eviction (that would thrash).
+    /// *next* decode bucket. Off-device ones are staged back now (hint
+    /// fetch/prefetch) so their bucket admits without a sync stall — but
+    /// only while staying under the high-water mark; hints never cause
+    /// eviction (that would thrash). A session whose staging is already
+    /// in flight (the same `form` pass just sync-prefetched it, or an
+    /// earlier hint did) is skipped and counted in `hint_duplicate`
+    /// instead of ordering a second copy of the same image.
     pub fn prefetch_hint(&mut self, upcoming: &[(u64, usize)]) -> Vec<TierCmd> {
         if self.cfg.lookahead == 0 {
             return Vec::new();
         }
         let bp = self.block_positions;
-        let mut ids = Vec::new();
+        let mut prefetch_ids = Vec::new();
+        let mut fetch_ids = Vec::new();
         for &(id, _len) in upcoming {
+            if self.staging.contains(&id) {
+                self.stats.hint_duplicate += 1;
+                continue;
+            }
             let s = match self.sessions.get(&id) {
                 Some(s) => s,
                 None => continue,
             };
-            if s.resident {
+            if s.loc == Loc::Device {
                 continue;
             }
             let blocks = blocks_for(bp, s.len);
@@ -436,18 +601,35 @@ impl TierPolicy {
                 continue; // no headroom for this one — a smaller session
                           // later in the bucket may still fit
             }
+            let step = self.step;
             let s = self.sessions.get_mut(&id).unwrap();
-            s.resident = true;
-            s.last_step = self.step;
-            self.host_used -= blocks;
+            let from = s.loc;
+            s.loc = Loc::Device;
+            s.last_step = step;
+            match from {
+                Loc::Host => {
+                    self.host_used -= blocks;
+                    prefetch_ids.push(id);
+                }
+                Loc::Peer => {
+                    self.peer_used -= blocks;
+                    self.stats.fetches += 1;
+                    fetch_ids.push(id);
+                }
+                Loc::Device => unreachable!(),
+            }
             self.device_used += blocks;
-            ids.push(id);
+            self.staging.insert(id);
+            self.stats.prefetch_hints += 1;
         }
-        if ids.is_empty() {
-            return Vec::new();
+        let mut cmds = Vec::new();
+        if !fetch_ids.is_empty() {
+            cmds.push(TierCmd::Fetch { ids: fetch_ids, hint: true });
         }
-        self.stats.prefetch_hints += ids.len() as u64;
-        vec![TierCmd::Prefetch { ids, hint: true }]
+        if !prefetch_ids.is_empty() {
+            cmds.push(TierCmd::Prefetch { ids: prefetch_ids, hint: true });
+        }
+        cmds
     }
 
     /// Flag a session as holding shared-prefix blocks (a registrant whose
@@ -492,12 +674,13 @@ impl TierPolicy {
     /// Finished sessions: credit whichever tier held their blocks.
     pub fn on_free(&mut self, ids: &[u64]) {
         for id in ids {
+            self.staging.remove(id);
             if let Some(s) = self.sessions.remove(id) {
                 let blocks = self.blocks_of(s.len);
-                if s.resident {
-                    self.device_used -= blocks;
-                } else {
-                    self.host_used -= blocks;
+                match s.loc {
+                    Loc::Device => self.device_used -= blocks,
+                    Loc::Peer => self.peer_used -= blocks,
+                    Loc::Host => self.host_used -= blocks,
                 }
                 if s.pinned {
                     self.pinned_used -= blocks;
@@ -766,6 +949,160 @@ mod tests {
         assert_eq!(p.device_used(), 0);
         p.note_released(5); // over-credit saturates, never underflows
         assert_eq!(p.device_used(), 0);
+    }
+
+    fn peered_policy(device_blocks: usize, host_blocks: usize, peer_blocks: usize) -> TierPolicy {
+        TierPolicy::new(TierConfig::new(device_blocks, host_blocks).with_peer(peer_blocks), 2)
+    }
+
+    fn parked_ids(cmds: &[TierCmd]) -> Vec<u64> {
+        cmds.iter()
+            .flat_map(|c| match c {
+                TierCmd::Park(ids) => ids.clone(),
+                _ => vec![],
+            })
+            .collect()
+    }
+
+    #[test]
+    fn hint_duplicate_is_counted_not_reemitted() {
+        // sits alongside lookahead_hint_stages_back_without_pinning: the
+        // same form pass that just sync-prefetched a session must not
+        // also emit a lookahead hint for it (two copies of one image)
+        let mut p = policy(6, 64);
+        let (_, ok) = p.admit_prefill(&[(1, 4)]);
+        assert!(ok);
+        p.on_requeue(1);
+        let (_, ok) = p.admit_prefill(&[(2, 8), (3, 4)]); // evicts 1
+        assert!(ok);
+        p.on_free(&[2, 3]);
+        // the gate sync-prefetches 1; its staging is now in flight
+        let cmds = p.gate_decode(&[(1, 5)]);
+        assert!(cmds
+            .iter()
+            .any(|c| matches!(c, TierCmd::Prefetch { ids, hint: false } if ids == &vec![1])));
+        // the same form pass hints the upcoming bucket, which holds 1 too
+        let cmds = p.prefetch_hint(&[(1, 5)]);
+        assert!(cmds.is_empty(), "duplicate staging emitted: {cmds:?}");
+        assert_eq!(p.stats.hint_duplicate, 1);
+        assert_eq!(p.stats.prefetch_hints, 0);
+        // once its bucket gates (the staging settled), 1 is resident and
+        // later hints skip it silently — not as a duplicate
+        p.on_requeue(1);
+        let cmds = p.gate_decode(&[(1, 6)]);
+        assert!(cmds.is_empty(), "{cmds:?}");
+        p.on_requeue(1);
+        assert!(p.prefetch_hint(&[(1, 6)]).is_empty());
+        assert_eq!(p.stats.hint_duplicate, 1, "resident skip misread as duplicate");
+        // a hint's own staging also dedupes a second hint in flight
+        let (_, ok) = p.admit_prefill(&[(4, 8)]); // evicts 1 again
+        assert!(ok);
+        p.on_free(&[4]);
+        assert_eq!(p.prefetch_hint(&[(1, 6)]).len(), 1);
+        assert_eq!(p.stats.prefetch_hints, 1);
+        assert!(p.prefetch_hint(&[(1, 6)]).is_empty());
+        assert_eq!(p.stats.hint_duplicate, 2);
+    }
+
+    #[test]
+    fn victims_park_to_peer_before_host() {
+        let mut p = peered_policy(4, 64, 8);
+        let (_, ok) = p.admit_prefill(&[(1, 4), (2, 4)]); // fills the device
+        assert!(ok);
+        p.on_requeue(1);
+        p.on_requeue(2);
+        // the next wave evicts both — into the peer tier, not the host
+        let (cmds, ok) = p.admit_prefill(&[(3, 4), (4, 4)]);
+        assert!(ok);
+        assert_eq!(parked_ids(&cmds), vec![1, 2]);
+        assert!(spilled_ids(&cmds).is_empty(), "host spill with peer room free");
+        assert_eq!(p.peer_used(), 4);
+        assert_eq!(p.host_used(), 0);
+        assert_eq!(p.is_resident(1), Some(false));
+        assert_eq!(p.is_parked(1), Some(true));
+        assert_eq!(p.stats.parks, 2);
+        // freeing a parked session credits the peer tier
+        p.on_free(&[1]);
+        assert_eq!(p.peer_used(), 2);
+    }
+
+    #[test]
+    fn peer_pressure_demotes_coldest_to_host() {
+        let mut p = peered_policy(2, 64, 2); // peer holds one 2-block session
+        let (_, ok) = p.admit_prefill(&[(1, 4)]);
+        assert!(ok);
+        p.on_requeue(1);
+        let (cmds, ok) = p.admit_prefill(&[(2, 4)]); // parks 1
+        assert!(ok);
+        assert_eq!(parked_ids(&cmds), vec![1]);
+        p.on_requeue(2);
+        // parking 2 exceeds the peer tier: 1 (coldest parked) demotes to
+        // host first, and the Spill command precedes the Park command so
+        // the worker credits the peer ledger before the new park charges
+        let (cmds, ok) = p.admit_prefill(&[(3, 4)]);
+        assert!(ok);
+        assert_eq!(spilled_ids(&cmds), vec![1], "demote must ride the Spill command");
+        assert_eq!(parked_ids(&cmds), vec![2]);
+        let spill_pos = cmds.iter().position(|c| matches!(c, TierCmd::Spill(_))).unwrap();
+        let park_pos = cmds.iter().position(|c| matches!(c, TierCmd::Park(_))).unwrap();
+        assert!(spill_pos < park_pos, "Spill (demote) must precede Park");
+        assert_eq!(p.stats.demotes, 1);
+        assert_eq!(p.is_parked(1), Some(false));
+        assert_eq!(p.is_resident(1), Some(false));
+        assert_eq!(p.is_parked(2), Some(true));
+        assert_eq!((p.peer_used(), p.host_used()), (2, 2));
+    }
+
+    #[test]
+    fn parked_bucket_rows_sync_fetch() {
+        let mut p = peered_policy(8, 64, 8); // high mark = 7 blocks
+        let (_, ok) = p.admit_prefill(&[(1, 12)]); // 6 blocks
+        assert!(ok);
+        p.on_requeue(1);
+        let (_, ok) = p.admit_prefill(&[(2, 12)]); // parks 1
+        assert!(ok);
+        assert_eq!(p.is_parked(1), Some(true));
+        p.on_requeue(2);
+        // 1's next decode step fetches it home before the forward; 2
+        // (cold, LRU) parks to relieve pressure
+        let cmds = p.gate_decode(&[(1, 13)]);
+        assert_eq!(parked_ids(&cmds), vec![2]);
+        assert!(cmds
+            .iter()
+            .any(|c| matches!(c, TierCmd::Fetch { ids, hint: false } if ids == &vec![1])));
+        assert_eq!(p.is_resident(1), Some(true));
+        assert_eq!(p.stats.prefetch_syncs, 1);
+        assert_eq!(p.stats.fetches, 1);
+        // a parked session in the lookahead gets a hint Fetch
+        p.on_free(&[1]);
+        let cmds = p.prefetch_hint(&[(2, 13)]);
+        assert_eq!(cmds, vec![TierCmd::Fetch { ids: vec![2], hint: true }]);
+        assert_eq!(p.stats.prefetch_hints, 1);
+        assert_eq!(p.stats.fetches, 2);
+        assert_eq!(p.peer_used(), 0);
+    }
+
+    #[test]
+    fn full_host_blocks_demotion_and_park_falls_back() {
+        // peer: one 2-block slot; host: full after one demotion
+        let mut p = peered_policy(2, 2, 2);
+        let (_, ok) = p.admit_prefill(&[(1, 4)]);
+        assert!(ok);
+        p.on_requeue(1);
+        let (_, ok) = p.admit_prefill(&[(2, 4)]); // parks 1
+        assert!(ok);
+        p.on_requeue(2);
+        let (_, ok) = p.admit_prefill(&[(3, 4)]); // demotes 1, parks 2
+        assert!(ok);
+        p.on_requeue(3);
+        assert_eq!((p.peer_used(), p.host_used()), (2, 2));
+        // now everything is full: 3 can't park (no demotion room) and
+        // can't spill (host full) -> the next prefill defers
+        let (cmds, ok) = p.admit_prefill(&[(4, 4)]);
+        assert!(!ok);
+        assert!(spilled_ids(&cmds).is_empty() && parked_ids(&cmds).is_empty());
+        assert!(p.stats.park_denied > 0, "failed park went uncounted");
+        assert!(p.stats.spill_denied > 0, "failed fallback spill went uncounted");
     }
 
     #[test]

@@ -531,6 +531,15 @@ impl Recorder {
                 self.kvcache.prefetch_stall_us / 1000,
             ));
         }
+        if self.kvcache.parks + self.kvcache.fetches + self.kvcache.demotes > 0 {
+            s.push_str(&format!(
+                "; kvpeer {} parked / {} fetched ({} held, {} demoted)",
+                self.kvcache.parks,
+                self.kvcache.fetches,
+                crate::util::fmt_bytes(self.kvcache.peer_bytes),
+                self.kvcache.demotes,
+            ));
+        }
         if self.prefix_hits + self.prefix_misses > 0 || self.kvcache.prefix_adopts > 0 {
             s.push_str(&format!(
                 "; prefix {} hits / {} misses ({} cached, {} blocks adopted, {} cow)",
@@ -853,6 +862,25 @@ mod tests {
         // loud-path counters surface as an anomaly marker
         r.record_kvcache(KvStats { gather_spilled: 1, ..Default::default() });
         assert!(r.summary().contains("KVSPILL-ANOMALY 1 spilled gathers"), "{}", r.summary());
+    }
+
+    #[test]
+    fn kvpeer_counters_surface_in_summary() {
+        let mut r = Recorder::new();
+        assert!(!r.summary().contains("kvpeer"), "{}", r.summary());
+        r.record_kvcache(KvStats {
+            parks: 5,
+            fetches: 4,
+            park_bytes: 5 * 16 * 1024,
+            fetch_bytes: 4 * 16 * 1024,
+            peer_bytes: 16 * 1024,
+            sessions_parked: 1,
+            demotes: 2,
+            ..Default::default()
+        });
+        let s = r.summary();
+        assert!(s.contains("kvpeer 5 parked / 4 fetched"), "{s}");
+        assert!(s.contains("2 demoted"), "{s}");
     }
 
     #[test]

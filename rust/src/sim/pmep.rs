@@ -146,6 +146,27 @@ fn find_horizon(off: &[usize], layer: usize, lookahead: usize) -> usize {
     }
 }
 
+/// Differential oracle for the live K/V peer tier: seconds to ship one
+/// parked session image (`bytes` of K/V blocks) over the park link.
+/// Park and fetch are symmetric whole-image transfers, so the same
+/// figure bounds both directions. `tests/peer_pool.rs` and
+/// `benches/peer_pool.rs` compare the live engine's measured
+/// `prefetch_stall_us` per fetch against these bounds: a peer fetch
+/// must beat a host prefetch of the same image, and the overlapped
+/// copier should push the visible stall well under the synchronous
+/// transfer time.
+pub fn kv_image_seconds(bytes: u64, link: Link) -> f64 {
+    link.transfer_time(bytes)
+}
+
+/// The sim's verdict on the three-tier hierarchy: the peer:host stall
+/// ratio for one session image. < 1.0 means parking beats spilling for
+/// images of this size — the admission-time reason the tier policy
+/// prefers the peer tier while its ledger has room.
+pub fn kv_peer_over_host_ratio(bytes: u64) -> f64 {
+    kv_image_seconds(bytes, Link::NVLINK) / kv_image_seconds(bytes, Link::HOST)
+}
+
 /// Throughput of the all-resident model (the "theoretical" bars Fig. 13
 /// extrapolates from the 20-layer run).
 pub fn resident_tflops(cfg: &ModelConfig, dev: &DeviceModel, batch: usize, seq: usize) -> f64 {
@@ -220,6 +241,19 @@ mod tests {
         assert_eq!(r.stall_seconds, 0.0);
         let base = resident_tflops(&gpt3(20), &dev, 32, 64);
         assert!((r.tflops / base - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn kv_peer_link_beats_host_link_for_session_images() {
+        // a typical parked image: 8 blocks × 16 KiB — small enough that
+        // latency matters, large enough that bandwidth does too
+        for bytes in [16u64 * 1024, 128 * 1024, 4 * 1024 * 1024] {
+            let r = kv_peer_over_host_ratio(bytes);
+            assert!(r < 1.0, "peer/host ratio {r} at {bytes} bytes");
+        }
+        // and the absolute figure is sane: a 128 KiB image over NVLink
+        // lands in microseconds, not milliseconds
+        assert!(kv_image_seconds(128 * 1024, Link::NVLINK) < 1e-4);
     }
 
     #[test]

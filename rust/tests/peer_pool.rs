@@ -1,0 +1,284 @@
+//! Three-tier KV cache (device → peer → host), differentially: parking
+//! cold sessions in a ring peer's spare device memory, fetching them
+//! back on re-entry, and demoting the coldest parked images to host
+//! under peer pressure must all be invisible in the token streams
+//! (greedy decoding is deterministic, so any divergence is a tiering
+//! bug) — with or without the overlapped copier thread — while a device
+//! slab sized for K sessions serves many more than K.
+//!
+//! Every test skips cleanly when the AOT artifacts are absent (the same
+//! condition under which an `Engine` cannot launch at all), so the suite
+//! never *adds* failures on an artifact-less checkout.
+
+use energonai::coordinator::engine::{Engine, GenRef, GenRequest, LaunchConfig};
+use energonai::memory::kvcache;
+use energonai::runtime::{find_artifacts, Manifest};
+use std::sync::Mutex;
+
+/// Serializes every test in this binary: several assert on the
+/// process-wide kvcache gauges, so no other engine may run concurrently.
+static STATS_LOCK: Mutex<()> = Mutex::new(());
+
+fn stats_guard() -> std::sync::MutexGuard<'static, ()> {
+    STATS_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Decode artifacts for (tiny, tp) present? When not, the test is a
+/// no-op — matching the seed state instead of adding failures.
+fn artifacts_ready(tp: usize) -> bool {
+    let dir = match find_artifacts() {
+        Ok(d) => d,
+        Err(_) => {
+            eprintln!("skipping: no AOT artifacts (run `make artifacts`)");
+            return false;
+        }
+    };
+    let man = match Manifest::cached(dir) {
+        Ok(m) => m,
+        Err(_) => return false,
+    };
+    let ok = !man.decode_widths("tiny", tp).is_empty() && man.has_kv_prefill("tiny", tp);
+    if !ok {
+        eprintln!("skipping: decode artifacts missing for tiny/tp{tp}");
+    }
+    ok
+}
+
+/// A three-tier engine: `device_blocks` per worker, `peer_blocks` of
+/// ring-peer budget, unlimited host behind both. Two dispatcher threads
+/// bound the number of pinned (in-flight) sessions.
+fn launch_peered(tp: usize, device_blocks: usize, peer_blocks: usize, copier: bool) -> Engine {
+    let mut lc = LaunchConfig::preset("tiny")
+        .with_parallel(tp, 1)
+        .with_kv_spill(device_blocks, 0)
+        .with_kv_peer(peer_blocks)
+        .with_kv_copier(copier);
+    lc.engine.pool_threads = 2;
+    Engine::launch(lc).unwrap()
+}
+
+fn launch_resident(tp: usize) -> Engine {
+    Engine::launch(LaunchConfig::preset("tiny").with_parallel(tp, 1)).unwrap()
+}
+
+fn prompts(n: usize) -> Vec<Vec<i32>> {
+    (0..n)
+        .map(|i| {
+            let len = 2 + (i * 3) % 7;
+            (0..len).map(|j| ((i * 31 + j * 7) % 100 + 1) as i32).collect()
+        })
+        .collect()
+}
+
+/// No blocks or bytes may remain on any tier after a drain, and the
+/// loud-path counters must not have moved.
+fn assert_all_tiers_drained(before: &kvcache::KvStats, what: &str) {
+    let after = kvcache::global_stats();
+    assert_eq!(after.blocks_in_use, before.blocks_in_use, "{what}: device blocks leaked");
+    assert_eq!(after.host_bytes, before.host_bytes, "{what}: host-tier bytes leaked");
+    assert_eq!(after.peer_bytes, before.peer_bytes, "{what}: peer-tier bytes leaked");
+    assert_eq!(after.sessions_parked, before.sessions_parked, "{what}: parked sessions leaked");
+    assert_eq!(after.sessions_spilled, before.sessions_spilled, "{what}: spilled sessions leaked");
+    assert_eq!(after.double_free, before.double_free, "{what}: double free");
+    assert_eq!(
+        after.gather_spilled, before.gather_spilled,
+        "{what}: a decode bucket dispatched against an off-device session"
+    );
+}
+
+/// The tentpole acceptance bar: with a device tier sized for ~K sessions
+/// and a peer tier behind it, 3K+ concurrent sessions all complete, park
+/// and fetch counters move, and every token stream is byte-identical to
+/// the resident-only run.
+fn assert_peer_parity(tp: usize, n_sessions: usize, device_blocks: usize, copier: bool) {
+    if !artifacts_ready(tp) {
+        return;
+    }
+    let _guard = stats_guard();
+
+    let resident = launch_resident(tp);
+    assert!(resident.kv_cache_on(), "decode artifacts present but cache off");
+    assert!(!resident.kv_peer_on());
+    let expect: Vec<Vec<i32>> = prompts(n_sessions)
+        .into_iter()
+        .map(|p| resident.generate(p, 8).unwrap())
+        .collect();
+    resident.shutdown();
+
+    let before = kvcache::global_stats();
+    // a peer budget as large as the device tier: every relieve() victim
+    // parks instead of spilling until the ring peer fills up
+    let peered = launch_peered(tp, device_blocks, device_blocks, copier);
+    assert!(peered.kv_peer_on());
+    let grefs: Vec<GenRef> = prompts(n_sessions)
+        .into_iter()
+        .map(|p| peered.generate_stream(GenRequest::new(p, 8)).unwrap())
+        .collect();
+    let got: Vec<Vec<i32>> = grefs.iter().map(|g| g.to_here().unwrap()).collect();
+    assert_eq!(got, expect, "three-tier decode diverged (tp={tp} copier={copier})");
+
+    let stats = peered.metrics_snapshot().kvcache_stats();
+    assert!(
+        stats.parks > before.parks,
+        "peer tier of {device_blocks} blocks never parked under {n_sessions} sessions"
+    );
+    assert!(stats.fetches > before.fetches, "parked sessions never fetched back");
+    peered.shutdown();
+    assert_all_tiers_drained(&before, "peer parity");
+}
+
+#[test]
+fn peered_decode_matches_resident_tp1() {
+    // tiny prompts run 2..8 tokens -> 9..16 positions -> 1..2 blocks per
+    // session. 8 device blocks ≈ 4 sessions; 16 concurrent = 4x that.
+    assert_peer_parity(1, 16, 8, false);
+}
+
+#[test]
+fn peered_decode_matches_resident_tp2() {
+    assert_peer_parity(2, 16, 8, false);
+}
+
+/// Same bar with the overlapped copier: staged landings must settle
+/// before every forward, so the streams stay byte-identical.
+#[test]
+fn copier_overlap_preserves_parity_tp1() {
+    assert_peer_parity(1, 16, 8, true);
+}
+
+#[test]
+fn copier_overlap_preserves_parity_tp2() {
+    assert_peer_parity(2, 16, 8, true);
+}
+
+/// A deliberately tiny peer budget behind a tiny device tier: the
+/// workload overflows device *and* peer, so the coldest parked images
+/// demote peer → host — and the streams still match the resident run.
+#[test]
+fn peer_pressure_demotes_to_host_with_parity() {
+    if !artifacts_ready(1) {
+        return;
+    }
+    let _guard = stats_guard();
+
+    let resident = launch_resident(1);
+    let expect: Vec<Vec<i32>> = prompts(16)
+        .into_iter()
+        .map(|p| resident.generate(p, 8).unwrap())
+        .collect();
+    resident.shutdown();
+
+    let before = kvcache::global_stats();
+    let peered = launch_peered(1, 6, 2, false);
+    let grefs: Vec<GenRef> = prompts(16)
+        .into_iter()
+        .map(|p| peered.generate_stream(GenRequest::new(p, 8)).unwrap())
+        .collect();
+    let got: Vec<Vec<i32>> = grefs.iter().map(|g| g.to_here().unwrap()).collect();
+    assert_eq!(got, expect, "decode diverged under peer pressure");
+
+    let stats = peered.metrics_snapshot().kvcache_stats();
+    assert!(stats.parks > before.parks, "2-block peer tier never parked");
+    assert!(
+        stats.demotes > before.demotes || stats.spills > before.spills,
+        "overflow past device+peer never reached the host tier"
+    );
+    peered.shutdown();
+    assert_all_tiers_drained(&before, "peer pressure");
+}
+
+/// Cancelling sessions mid-generation while parks and fetches are in
+/// flight: survivors stay byte-identical and every tier fully drains —
+/// the guard ring covers blocks freed off the peer tier too.
+#[test]
+fn cancel_mid_park_leaks_nothing_on_any_tier() {
+    if !artifacts_ready(1) {
+        return;
+    }
+    let _guard = stats_guard();
+    let all = prompts(16);
+
+    let control = launch_resident(1);
+    let expect: Vec<Vec<i32>> = all
+        .iter()
+        .step_by(2)
+        .map(|p| control.generate(p.clone(), 8).unwrap())
+        .collect();
+    control.shutdown();
+
+    let before = kvcache::global_stats();
+    let engine = launch_peered(1, 8, 8, false);
+    let grefs: Vec<GenRef> = all
+        .iter()
+        .map(|p| engine.generate_stream(GenRequest::new(p.clone(), 8)).unwrap())
+        .collect();
+    // hang up every odd-indexed client (its session may be queued, in
+    // flight, parked in the peer, or demoted — all paths must reclaim)
+    for g in grefs.iter().skip(1).step_by(2) {
+        g.cancel();
+    }
+    let survivors: Vec<Vec<i32>> =
+        grefs.iter().step_by(2).map(|g| g.to_here().unwrap()).collect();
+    assert_eq!(survivors, expect, "a cancelled neighbour changed a survivor's stream");
+    engine.shutdown();
+    assert_all_tiers_drained(&before, "cancel mid-park");
+}
+
+/// Chaos delays at the worker reply boundary interleave parks, fetches,
+/// and demotes differently on every run — the streams must not care.
+#[test]
+fn chaos_delays_never_perturb_peered_streams() {
+    if !artifacts_ready(1) {
+        return;
+    }
+    let _guard = stats_guard();
+    let ps = prompts(12);
+
+    let clean = launch_peered(1, 8, 8, true);
+    let expect: Vec<Vec<i32>> =
+        ps.iter().map(|p| clean.generate(p.clone(), 6).unwrap()).collect();
+    clean.shutdown();
+
+    let before = kvcache::global_stats();
+    let mut lc = LaunchConfig::preset("tiny")
+        .with_kv_spill(8, 0)
+        .with_kv_peer(8)
+        .with_kv_copier(true)
+        .with_faults("delay2ms@every3+1", 7);
+    lc.engine.pool_threads = 2;
+    let engine = Engine::launch(lc).unwrap();
+    let got: Vec<Vec<i32>> =
+        ps.iter().map(|p| engine.generate(p.clone(), 6).unwrap()).collect();
+    assert_eq!(got, expect, "a delay fault changed a stream under the peer tier");
+    engine.shutdown();
+    assert_all_tiers_drained(&before, "chaos delays");
+}
+
+/// Sequential waves through the three-tier hierarchy: the device slab
+/// must not grow beyond its cap, and device, peer, and host must all
+/// fully drain between waves' final settle.
+#[test]
+fn waves_respect_the_device_cap_with_peer_tier() {
+    if !artifacts_ready(1) {
+        return;
+    }
+    let _guard = stats_guard();
+    let before = kvcache::global_stats();
+    let engine = launch_peered(1, 8, 4, true);
+    for _ in 0..3 {
+        let grefs: Vec<GenRef> = prompts(12)
+            .into_iter()
+            .map(|p| engine.generate_stream(GenRequest::new(p, 4)).unwrap())
+            .collect();
+        for g in &grefs {
+            g.to_here().unwrap();
+        }
+    }
+    let stats = engine.metrics_snapshot().kvcache_stats();
+    assert_eq!(
+        stats.overflow_blocks, before.overflow_blocks,
+        "admission control let the device tier overflow"
+    );
+    engine.shutdown();
+    assert_all_tiers_drained(&before, "waves");
+}

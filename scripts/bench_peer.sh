@@ -1,0 +1,25 @@
+#!/usr/bin/env bash
+# Run the three-tier KV-cache benchmark (resident / host-only spill /
+# peer+host inline / peer+host with the overlapped copier) and refresh
+# BENCH_peer.json at the repo root. A token-stream divergence between
+# any cell and the resident baseline, a leaked block on any tier, or a
+# copier stall regression exits non-zero. BENCH_SMOKE=1 runs a smaller
+# session wave (CI).
+#
+# Usage: scripts/bench_peer.sh [extra cargo args...]
+set -euo pipefail
+
+cd "$(dirname "$0")/../rust"
+
+if ! ls ../artifacts/manifest.json >/dev/null 2>&1 && ! ls artifacts/manifest.json >/dev/null 2>&1; then
+    echo "warning: no AOT artifacts found — the bench will skip (run 'make artifacts')" >&2
+fi
+
+cargo bench --bench peer_pool "$@"
+
+out="$(cd .. && pwd)/BENCH_peer.json"
+if [ -f "$out" ]; then
+    echo "refreshed $out"
+else
+    echo "warning: $out was not written (bench skipped?)" >&2
+fi

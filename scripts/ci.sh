@@ -72,3 +72,9 @@ BENCH_SMOKE=1 cargo bench --bench fleet
 # leaked K/V block, or a chunked max-TPOT materially above the monolithic
 # cell's exits non-zero, and BENCH_chunked.json is refreshed
 BENCH_SMOKE=1 cargo bench --bench chunked_prefill
+
+# peer-tier smoke: the overflow wave through resident / host-only /
+# peer+host / peer+copier cells — a stream divergence from the resident
+# baseline, a leaked block on any tier, or a copier stall regression
+# exits non-zero, and BENCH_peer.json is refreshed
+BENCH_SMOKE=1 cargo bench --bench peer_pool
